@@ -1,0 +1,46 @@
+//! Figure 2: perplexity of the EBFT-fine-tuned model (Wanda init, 50 %
+//! sparsity) as a function of the number of calibration samples.
+//!
+//! Expected shape: monotone improvement that saturates — and even the
+//! smallest calibration set beats no fine-tuning at all.
+
+use ebft::bench_support::{full_grid, BenchEnv};
+use ebft::config::FtConfig;
+use ebft::coordinator::{Experiment, FtVariant};
+use ebft::pruning::{Method, Pattern};
+use ebft::util::metrics::fmt_ppl;
+use ebft::util::{Json, TableWriter};
+
+fn main() -> anyhow::Result<()> {
+    let env = BenchEnv::open(0)?;
+    let sample_counts: Vec<usize> = if full_grid() {
+        vec![8, 16, 32, 64, 128, 256]
+    } else {
+        vec![8, 16, 32, 64, 128]
+    };
+
+    // reference: pruned, no fine-tuning
+    let exp0 = env.experiment();
+    let base = exp0.run_cell(Method::Wanda, Pattern::Unstructured(0.5),
+                             FtVariant::None)?;
+    println!("wanda@50% before fine-tuning: ppl {}", fmt_ppl(base.ppl));
+
+    let mut table = TableWriter::new(
+        "Figure 2 — ppl vs #calibration samples (Wanda 50%, EBFT)",
+        &["samples", "perplexity"]);
+    let mut series = Json::obj();
+    series.set("no_ft", Json::Num(base.ppl));
+    for &n in &sample_counts {
+        let exp = Experiment {
+            ft: FtConfig { calib_seqs: n, ..FtConfig::default() },
+            ..env.experiment()
+        };
+        let cell = exp.run_cell(Method::Wanda, Pattern::Unstructured(0.5),
+                                FtVariant::Ebft)?;
+        table.row(&[n.to_string(), fmt_ppl(cell.ppl)]);
+        series.set(&n.to_string(), Json::Num(cell.ppl));
+    }
+    table.print();
+    env.write_json("fig2", &series)?;
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Table 1: Wikitext2-style perplexity at unstructured sparsity 50–90 %,
+//! methods {magnitude, wanda, sparsegpt} × {raw, DSnoT, EBFT}.
+//!
+//! Default grid: MiniLlama-A, sparsities {50, 70, 90}. EBFT_FULL=1 adds
+//! MiniLlama-B and sparsities {60, 80} (the paper-complete grid).
+
+use ebft::bench_support::{full_grid, model_indices, BenchEnv};
+use ebft::coordinator::FtVariant;
+use ebft::pruning::{Method, Pattern};
+use ebft::util::metrics::fmt_ppl;
+use ebft::util::{Json, TableWriter};
+
+fn main() -> anyhow::Result<()> {
+    let sparsities: Vec<f32> = if full_grid() {
+        vec![0.5, 0.6, 0.7, 0.8, 0.9]
+    } else {
+        vec![0.5, 0.7, 0.9]
+    };
+    let methods = [Method::Magnitude, Method::Wanda, Method::SparseGpt];
+    let variants = [FtVariant::None, FtVariant::Dsnot, FtVariant::Ebft];
+
+    let mut results = Json::obj();
+    for model_idx in model_indices() {
+        let env = BenchEnv::open(model_idx)?;
+        let exp = env.experiment();
+        let dense_ppl = exp.dense_ppl()?;
+        println!("=== {} (dense ppl {}) ===", env.label, fmt_ppl(dense_ppl));
+
+        let mut headers = vec!["method".to_string()];
+        headers.extend(sparsities.iter().map(|s| format!("{}%",
+                                                         (s * 100.0) as u32)));
+        let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut table = TableWriter::new(
+            &format!("Table 1 — {} unstructured", env.label), &hdr_refs);
+
+        let mut model_json = Json::obj();
+        for method in methods {
+            for variant in variants {
+                let row_label = match variant {
+                    FtVariant::None => method.label().to_string(),
+                    v => format!("  {}", v.label()),
+                };
+                let mut cells = vec![row_label.clone()];
+                for &s in &sparsities {
+                    let cell = exp.run_cell(method, Pattern::Unstructured(s),
+                                            variant)?;
+                    cells.push(fmt_ppl(cell.ppl));
+                    model_json.set(
+                        &format!("{}/{}/{}", method.label(),
+                                 variant.label(), (s * 100.0) as u32),
+                        Json::Num(cell.ppl));
+                }
+                table.row(&cells);
+            }
+        }
+        table.print();
+        model_json.set("dense_ppl", Json::Num(dense_ppl));
+        results.set(&env.label.clone(), model_json);
+        env.write_json("table1", &results)?;
+    }
+    Ok(())
+}

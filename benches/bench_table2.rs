@@ -1,0 +1,47 @@
+//! Table 2: perplexity at N:M semi-structured sparsity (2:4 and 4:8),
+//! methods {magnitude, wanda, sparsegpt} × {raw, DSnoT, EBFT}.
+
+use ebft::bench_support::{model_indices, BenchEnv};
+use ebft::coordinator::FtVariant;
+use ebft::pruning::{Method, Pattern};
+use ebft::util::metrics::fmt_ppl;
+use ebft::util::{Json, TableWriter};
+
+fn main() -> anyhow::Result<()> {
+    let patterns = [Pattern::NM(2, 4), Pattern::NM(4, 8)];
+    let methods = [Method::Magnitude, Method::Wanda, Method::SparseGpt];
+    let variants = [FtVariant::None, FtVariant::Dsnot, FtVariant::Ebft];
+
+    let mut results = Json::obj();
+    for model_idx in model_indices() {
+        let env = BenchEnv::open(model_idx)?;
+        let exp = env.experiment();
+        println!("=== {} ===", env.label);
+        let mut table = TableWriter::new(
+            &format!("Table 2 — {} N:M", env.label),
+            &["method", "2:4", "4:8"]);
+        let mut model_json = Json::obj();
+        for method in methods {
+            for variant in variants {
+                let row_label = match variant {
+                    FtVariant::None => method.label().to_string(),
+                    v => format!("  {}", v.label()),
+                };
+                let mut cells = vec![row_label];
+                for pattern in patterns {
+                    let cell = exp.run_cell(method, pattern, variant)?;
+                    cells.push(fmt_ppl(cell.ppl));
+                    model_json.set(
+                        &format!("{}/{}/{}", method.label(),
+                                 variant.label(), pattern.label()),
+                        Json::Num(cell.ppl));
+                }
+                table.row(&cells);
+            }
+        }
+        table.print();
+        results.set(&env.label.clone(), model_json);
+        env.write_json("table2", &results)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Table 3: zero-shot suite accuracy at 60 % unstructured and 2:4 sparsity,
+//! methods {magnitude, wanda, sparsegpt} × {raw, DSnoT, EBFT}.
+//!
+//! Default grid: 60 % only; EBFT_FULL=1 adds the 2:4 pattern.
+
+use ebft::bench_support::{full_grid, model_indices, BenchEnv};
+use ebft::coordinator::FtVariant;
+use ebft::eval::zeroshot::{mean_accuracy, run_suite};
+use ebft::pruning::{Method, Pattern};
+use ebft::util::{Json, TableWriter};
+
+const ITEMS: usize = 32;
+
+fn main() -> anyhow::Result<()> {
+    let patterns: Vec<Pattern> = if full_grid() {
+        vec![Pattern::Unstructured(0.6), Pattern::NM(2, 4)]
+    } else {
+        vec![Pattern::Unstructured(0.6)]
+    };
+    let methods = [Method::Magnitude, Method::Wanda, Method::SparseGpt];
+    let variants = [FtVariant::None, FtVariant::Dsnot, FtVariant::Ebft];
+
+    let mut results = Json::obj();
+    for model_idx in model_indices() {
+        let env = BenchEnv::open(model_idx)?;
+        let exp = env.experiment();
+        for &pattern in &patterns {
+            println!("=== {} @ {} ===", env.label, pattern.label());
+            let mut headers: Vec<String> =
+                vec!["method".into()];
+            // task names from a probe run on the dense model
+            let dense_masks = ebft::masks::MaskSet::dense(&env.session.manifest);
+            let probe = run_suite(&env.session, &env.dense, &dense_masks,
+                                  &env.corpus, 2, 3)?;
+            headers.extend(probe.iter().map(|r| r.task.to_string()));
+            headers.push("Mean".into());
+            let hdr_refs: Vec<&str> =
+                headers.iter().map(|s| s.as_str()).collect();
+            let mut table = TableWriter::new(
+                &format!("Table 3 — {} @ {}", env.label, pattern.label()),
+                &hdr_refs);
+
+            // dense reference row
+            let dense_res = run_suite(&env.session, &env.dense, &dense_masks,
+                                      &env.corpus, ITEMS, 3)?;
+            let mut cells = vec!["dense".to_string()];
+            cells.extend(dense_res.iter()
+                             .map(|r| format!("{:.2}", r.accuracy())));
+            cells.push(format!("{:.2}", mean_accuracy(&dense_res)));
+            table.row(&cells);
+
+            for method in methods {
+                for variant in variants {
+                    let (params, masks) =
+                        exp.run_cell_model(method, pattern, variant)?;
+                    let res = run_suite(&env.session, &params, &masks,
+                                        &env.corpus, ITEMS, 3)?;
+                    let row_label = match variant {
+                        FtVariant::None => method.label().to_string(),
+                        v => format!("  {}", v.label()),
+                    };
+                    let mut cells = vec![row_label];
+                    cells.extend(res.iter()
+                                     .map(|r| format!("{:.2}", r.accuracy())));
+                    let mean = mean_accuracy(&res);
+                    cells.push(format!("{mean:.2}"));
+                    table.row(&cells);
+                    results.set(
+                        &format!("{}/{}/{}/{}", env.label, pattern.label(),
+                                 method.label(), variant.label()),
+                        Json::Num(mean));
+                }
+            }
+            table.print();
+        }
+        env.write_json("table3", &results)?;
+    }
+    Ok(())
+}

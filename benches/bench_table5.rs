@@ -1,0 +1,50 @@
+//! Table 5: LoRA vs EBFT across structured parameter budgets, with both
+//! perplexity and the zero-shot suite — the paper's 5.5B/5.0B rows map to
+//! removing ~13 % / ~26 % of prunable parameters here.
+//!
+//! Default grid: MiniLlama-A; EBFT_FULL=1 adds MiniLlama-B.
+
+use ebft::bench_support::{model_indices, BenchEnv};
+use ebft::data::Split;
+use ebft::eval;
+use ebft::eval::zeroshot::{mean_accuracy, run_suite};
+use ebft::util::metrics::fmt_ppl;
+use ebft::util::{Json, TableWriter};
+
+const LORA_STEPS: usize = 400;
+const ITEMS: usize = 24;
+
+fn main() -> anyhow::Result<()> {
+    let budgets = [0.13f32, 0.26];
+    let mut results = Json::obj();
+    for model_idx in model_indices() {
+        let env = BenchEnv::open(model_idx)?;
+        let exp = env.experiment();
+        println!("=== {} ===", env.label);
+        let mut table = TableWriter::new(
+            &format!("Table 5 — {} LoRA vs EBFT (structured budgets)",
+                     env.label),
+            &["budget", "method", "zero-shot mean", "wiki ppl"]);
+        for &budget in &budgets {
+            for (use_lora, name) in [(true, "LoRA"), (false, "Ours")] {
+                let (params, masks, _secs) =
+                    exp.run_structured(budget, use_lora, LORA_STEPS)?;
+                let ppl = eval::perplexity(&env.session, &params, &masks,
+                                           &env.corpus, Split::WikiSim, 64)?;
+                let zs = run_suite(&env.session, &params, &masks, &env.corpus,
+                                   ITEMS, 3)?;
+                let mean = mean_accuracy(&zs);
+                table.row(&[format!("-{}%", (budget * 100.0) as u32),
+                            name.into(), format!("{mean:.2}"),
+                            fmt_ppl(ppl)]);
+                results.set(&format!("{}/{}/{}", env.label,
+                                     (budget * 100.0) as u32, name),
+                            Json::parse(&format!(
+                                r#"{{"ppl": {ppl}, "zs_mean": {mean}}}"#))?);
+            }
+        }
+        table.print();
+        env.write_json("table5", &results)?;
+    }
+    Ok(())
+}

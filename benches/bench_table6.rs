@@ -1,0 +1,49 @@
+//! Table 6: weight tuning (EBFT) vs mask tuning on the same block-wise
+//! objective, Wanda initialization, sparsity 50–90 %.
+//!
+//! Expected shape (paper §4.5): mask tuning beats DSnoT but loses to
+//! weight tuning at every sparsity.
+
+use ebft::bench_support::{full_grid, model_indices, BenchEnv};
+use ebft::coordinator::FtVariant;
+use ebft::pruning::{Method, Pattern};
+use ebft::util::metrics::fmt_ppl;
+use ebft::util::{Json, TableWriter};
+
+fn main() -> anyhow::Result<()> {
+    let sparsities: Vec<f32> = if full_grid() {
+        vec![0.5, 0.6, 0.7, 0.8, 0.9]
+    } else {
+        vec![0.5, 0.7, 0.9]
+    };
+    let mut results = Json::obj();
+    for model_idx in model_indices() {
+        let env = BenchEnv::open(model_idx)?;
+        let exp = env.experiment();
+        println!("=== {} ===", env.label);
+        let mut headers = vec!["method".to_string()];
+        headers.extend(sparsities.iter()
+                           .map(|s| format!("{}%", (s * 100.0) as u32)));
+        let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut table = TableWriter::new(
+            &format!("Table 6 — {} mask vs weight tuning (Wanda init)",
+                     env.label),
+            &hdr_refs);
+        for (variant, label) in [(FtVariant::MaskTune, "w.Mask"),
+                                 (FtVariant::Ebft, "w.Weight")] {
+            let mut cells = vec![label.to_string()];
+            for &s in &sparsities {
+                let cell = exp.run_cell(Method::Wanda,
+                                        Pattern::Unstructured(s), variant)?;
+                cells.push(fmt_ppl(cell.ppl));
+                results.set(&format!("{}/{}/{}", env.label, label,
+                                     (s * 100.0) as u32),
+                            Json::Num(cell.ppl));
+            }
+            table.row(&cells);
+        }
+        table.print();
+        env.write_json("table6", &results)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,36 @@
+//! LoRA vs EBFT (§4.4 in miniature): structured FLAP pruning at 20 %,
+//! then recover with either LoRA (full-model adapters, big instruct-sim
+//! split) or EBFT (block-wise, 64 calibration sequences). Reports wall
+//! clock and perplexity — the paper's Table 4 claim is ~10× cheaper
+//! fine-tuning at equal-or-better quality.
+//!
+//!   cargo run --release --example lora_vs_ebft -- [--lora-steps 800]
+
+use ebft::bench_support::BenchEnv;
+use ebft::data::Split;
+use ebft::eval;
+use ebft::util::metrics::fmt_ppl;
+use ebft::util::{Args, TableWriter};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env()?;
+    let lora_steps = args.get_usize("lora-steps", 800)?;
+    let env = BenchEnv::open(0)?;
+    let exp = env.experiment();
+    println!("dense ppl {}", fmt_ppl(exp.dense_ppl()?));
+
+    let mut table = TableWriter::new("LoRA vs EBFT at 20% structured",
+                                     &["method", "time(s)", "ppl"]);
+    let (lp, lm, lsecs) = exp.run_structured(0.20, true, lora_steps)?;
+    let lppl = eval::perplexity(&env.session, &lp, &lm, &env.corpus,
+                                Split::WikiSim, 64)?;
+    table.row(&["LoRA".into(), format!("{lsecs:.1}"), fmt_ppl(lppl)]);
+
+    let (ep, em, esecs) = exp.run_structured(0.20, false, 0)?;
+    let eppl = eval::perplexity(&env.session, &ep, &em, &env.corpus,
+                                Split::WikiSim, 64)?;
+    table.row(&["EBFT".into(), format!("{esecs:.1}"), fmt_ppl(eppl)]);
+    table.print();
+    println!("speedup: {:.1}×", lsecs / esecs.max(1e-9));
+    Ok(())
+}

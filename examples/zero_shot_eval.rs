@@ -1,0 +1,43 @@
+//! Zero-shot generality (Table 3 in miniature): how much of the dense
+//! model's task accuracy survives 60 % pruning, and how much EBFT restores.
+//!
+//!   cargo run --release --example zero_shot_eval -- [--items 32]
+
+use ebft::bench_support::BenchEnv;
+use ebft::coordinator::FtVariant;
+use ebft::eval::zeroshot::{mean_accuracy, run_suite};
+use ebft::masks::MaskSet;
+use ebft::pruning::{Method, Pattern};
+use ebft::util::{Args, TableWriter};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env()?;
+    let items = args.get_usize("items", 32)?;
+    let env = BenchEnv::open(0)?;
+    let exp = env.experiment();
+    let pattern = Pattern::Unstructured(0.6);
+
+    let dense_masks = MaskSet::dense(&env.session.manifest);
+    let dense = run_suite(&env.session, &env.dense, &dense_masks, &env.corpus,
+                          items, 3)?;
+    let (pp, pm) = exp.run_cell_model(Method::Wanda, pattern,
+                                      FtVariant::None)?;
+    let pruned = run_suite(&env.session, &pp, &pm, &env.corpus, items, 3)?;
+    let (ep, em) = exp.run_cell_model(Method::Wanda, pattern,
+                                      FtVariant::Ebft)?;
+    let tuned = run_suite(&env.session, &ep, &em, &env.corpus, items, 3)?;
+
+    let mut table = TableWriter::new(
+        "zero-shot accuracy @ wanda 60%",
+        &["task", "dense", "pruned", "EBFT"]);
+    for ((d, p), t) in dense.iter().zip(&pruned).zip(&tuned) {
+        table.row(&[d.task.to_string(), format!("{:.1}", d.accuracy()),
+                    format!("{:.1}", p.accuracy()),
+                    format!("{:.1}", t.accuracy())]);
+    }
+    table.row(&["MEAN".into(), format!("{:.1}", mean_accuracy(&dense)),
+                format!("{:.1}", mean_accuracy(&pruned)),
+                format!("{:.1}", mean_accuracy(&tuned))]);
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,300 @@
+"""AOT pipeline: lower every L2 graph to HLO *text* + manifest for Rust.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --config small --out ../artifacts
+Emits  artifacts/<cfg>/<name>.hlo.txt, manifest.json, init_params.bin.
+
+Python runs only here (build time); the Rust binary is self-contained after.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import CONFIGS, ModelConfig
+
+F32 = "f32"
+I32 = "i32"
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape),
+                                jnp.float32 if dtype == F32 else jnp.int32)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+class ArtifactBuilder:
+    """Collects (name, fn, input signature, output names) and lowers each."""
+
+    def __init__(self, cfg: ModelConfig, out_dir: str):
+        self.cfg = cfg
+        self.out_dir = out_dir
+        self.manifest_arts = {}
+
+    def emit(self, name: str, fn, inputs, outputs):
+        """inputs: list of (name, shape, dtype); outputs: list of (name, shape, dtype)."""
+        t0 = time.time()
+        arg_specs = [spec(s, d) for (_, s, d) in inputs]
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.manifest_arts[name] = {
+            "file": fname,
+            "inputs": [{"name": n, "shape": list(s), "dtype": d}
+                       for (n, s, d) in inputs],
+            "outputs": [{"name": n, "shape": list(s), "dtype": d}
+                        for (n, s, d) in outputs],
+        }
+        print(f"  [{self.cfg.name}] {name}: {len(text)/1024:.0f} KiB "
+              f"({time.time()-t0:.1f}s)")
+
+
+def block_sig(cfg: ModelConfig, prefix_p="bp", prefix_m="mask"):
+    bp_shapes = cfg.block_param_shapes()
+    ins = [(f"{prefix_p}.{i}", s, F32) for i, s in enumerate(bp_shapes)]
+    masks = [(f"{prefix_m}.{i}", s, F32)
+             for i, s in enumerate(cfg.block_mask_shapes())]
+    return ins, masks
+
+
+def build_config(cfg: ModelConfig, root: str, impls=("xla",),
+                 skip_heavy=False):
+    out_dir = os.path.join(root, cfg.name)
+    os.makedirs(out_dir, exist_ok=True)
+    ab = ArtifactBuilder(cfg, out_dir)
+
+    B, S, D, V, F, L = (cfg.batch, cfg.seq, cfg.d_model, cfg.vocab,
+                        cfg.d_ff, cfg.n_layers)
+    x_sig = ("x", (B, S, D), F32)
+    tok_sig = ("tokens", (B, S), I32)
+    bp_ins, mask_ins = block_sig(cfg)
+    n_bp, n_mask = len(bp_ins), len(mask_ins)
+    bp_shapes = cfg.block_param_shapes()
+
+    # ---- embed_fwd ----
+    ab.emit("embed_fwd",
+            lambda e, t: (M.embed_fwd(e, t),),
+            [("embed", (V, D), F32), tok_sig],
+            [("x0", (B, S, D), F32)])
+
+    # ---- head_loss / head_seq_nll ----
+    ab.emit("head_loss",
+            lambda g, h, x, t: M.head_loss(cfg, g, h, x, t),
+            [("g_norm", (D,), F32), ("head", (D, V), F32), x_sig, tok_sig],
+            [("nll_sum", (), F32), ("count", (), F32)])
+
+    ab.emit("head_seq_nll",
+            lambda g, h, x, t, w: M.head_seq_nll(cfg, g, h, x, t, w),
+            [("g_norm", (D,), F32), ("head", (D, V), F32), x_sig, tok_sig,
+             ("weights", (B, S), F32)],
+            [("nll", (B,), F32), ("wsum", (B,), F32)])
+
+    # ---- per-impl block graphs ----
+    for impl in impls:
+        sfx = "" if impl == "xla" else f"_{impl}"
+
+        def mk_block_fwd(impl=impl):
+            def f(*args):
+                bp = args[:n_bp]
+                masks = args[n_bp:n_bp + n_mask]
+                x = args[-1]
+                return (M.block_fwd(cfg, bp, masks, x, impl),)
+            return f
+
+        ab.emit(f"block_fwd{sfx}", mk_block_fwd(),
+                bp_ins + mask_ins + [x_sig],
+                [("y", (B, S, D), F32)])
+
+        def mk_ft_step(impl=impl):
+            def f(*args):
+                i = 0
+                bp = args[i:i + n_bp]; i += n_bp
+                masks = args[i:i + n_mask]; i += n_mask
+                m_st = args[i:i + n_bp]; i += n_bp
+                v_st = args[i:i + n_bp]; i += n_bp
+                t, lr, x, target = args[i], args[i + 1], args[i + 2], args[i + 3]
+                nbp, nm, nv, loss = M.block_ft_step(
+                    cfg, bp, masks, m_st, v_st, t, lr, x, target, impl)
+                return (*nbp, *nm, *nv, loss)
+            return f
+
+        ft_ins = (bp_ins + mask_ins
+                  + [(f"m.{i}", s, F32) for i, s in enumerate(bp_shapes)]
+                  + [(f"v.{i}", s, F32) for i, s in enumerate(bp_shapes)]
+                  + [("t", (), F32), ("lr", (), F32), x_sig,
+                     ("target", (B, S, D), F32)])
+        ft_outs = ([(f"bp.{i}", s, F32) for i, s in enumerate(bp_shapes)]
+                   + [(f"m.{i}", s, F32) for i, s in enumerate(bp_shapes)]
+                   + [(f"v.{i}", s, F32) for i, s in enumerate(bp_shapes)]
+                   + [("loss", (), F32)])
+        ab.emit(f"block_ft_step{sfx}", mk_ft_step(), ft_ins, ft_outs)
+
+    # ---- block_grad (mask tuning) ----
+    def f_block_grad(*args):
+        bp = args[:n_bp]
+        masks = args[n_bp:n_bp + n_mask]
+        x, target = args[-2], args[-1]
+        return M.block_grad(cfg, bp, masks, x, target)
+
+    ab.emit("block_grad", f_block_grad,
+            bp_ins + mask_ins + [x_sig, ("target", (B, S, D), F32)],
+            [("loss", (), F32)] + [(f"grad.{i}", s, F32)
+                                   for i, s in enumerate(bp_shapes[:7])])
+
+    # ---- block_stats ----
+    def f_block_stats(*args):
+        bp = args[:n_bp]
+        masks = args[n_bp:n_bp + n_mask]
+        x = args[-1]
+        return M.block_stats(cfg, bp, masks, x)
+
+    stat_groups = [("ln1", D), ("ctx", D), ("ln2", D), ("hmid", F)]
+    stat_outs = [("y", (B, S, D), F32)]
+    for gname, dim in stat_groups:
+        stat_outs += [(f"{gname}.colsumsq", (dim,), F32),
+                      (f"{gname}.colsum", (dim,), F32),
+                      (f"{gname}.gram", (dim, dim), F32)]
+    ab.emit("block_stats", f_block_stats,
+            bp_ins + mask_ins + [x_sig], stat_outs)
+
+    # ---- full-model graphs ----
+    p_shapes = cfg.param_shapes()
+    n_p = len(p_shapes)
+    param_ins = [(f"param.{i}", s, F32) for i, s in enumerate(p_shapes)]
+    all_mask_shapes = cfg.block_mask_shapes() * L
+    all_mask_ins = [(f"mask.{i}", s, F32)
+                    for i, s in enumerate(all_mask_shapes)]
+    n_am = len(all_mask_ins)
+
+    def f_lm_loss(*args):
+        params = args[:n_p]
+        masks = args[n_p:n_p + n_am]
+        tokens = args[-1]
+        return (M.lm_nll(cfg, params, masks, tokens),)
+
+    ab.emit("lm_loss", f_lm_loss, param_ins + all_mask_ins + [tok_sig],
+            [("nll", (), F32)])
+
+    def f_lm_train(*args):
+        i = 0
+        params = args[i:i + n_p]; i += n_p
+        m_st = args[i:i + n_p]; i += n_p
+        v_st = args[i:i + n_p]; i += n_p
+        t, lr, tokens = args[i], args[i + 1], args[i + 2]
+        np_, nm, nv, loss = M.lm_train_step(cfg, params, m_st, v_st, t, lr,
+                                            tokens)
+        return (*np_, *nm, *nv, loss)
+
+    tr_ins = (param_ins
+              + [(f"m.{i}", s, F32) for i, s in enumerate(p_shapes)]
+              + [(f"v.{i}", s, F32) for i, s in enumerate(p_shapes)]
+              + [("t", (), F32), ("lr", (), F32), tok_sig])
+    tr_outs = ([(f"param.{i}", s, F32) for i, s in enumerate(p_shapes)]
+               + [(f"m.{i}", s, F32) for i, s in enumerate(p_shapes)]
+               + [(f"v.{i}", s, F32) for i, s in enumerate(p_shapes)]
+               + [("loss", (), F32)])
+    ab.emit("lm_train_step", f_lm_train, tr_ins, tr_outs)
+
+    # ---- LoRA train step ----
+    if not skip_heavy:
+        lora_shapes = []
+        for _ in range(L):
+            for (a_s, b_s) in cfg.lora_shapes():
+                lora_shapes += [a_s, b_s]
+        n_lora = len(lora_shapes)
+        lora_ins = [(f"lora.{i}", s, F32) for i, s in enumerate(lora_shapes)]
+
+        def f_lora(*args):
+            i = 0
+            params = args[i:i + n_p]; i += n_p
+            masks = args[i:i + n_am]; i += n_am
+            adapters = args[i:i + n_lora]; i += n_lora
+            m_st = args[i:i + n_lora]; i += n_lora
+            v_st = args[i:i + n_lora]; i += n_lora
+            t, lr, tokens = args[i], args[i + 1], args[i + 2]
+            na, nm, nv, loss = M.lora_train_step(
+                cfg, params, masks, adapters, m_st, v_st, t, lr, tokens)
+            return (*na, *nm, *nv, loss)
+
+        lora_all_ins = (param_ins + all_mask_ins + lora_ins
+                        + [(f"m.{i}", s, F32) for i, s in enumerate(lora_shapes)]
+                        + [(f"v.{i}", s, F32) for i, s in enumerate(lora_shapes)]
+                        + [("t", (), F32), ("lr", (), F32), tok_sig])
+        lora_outs = ([(f"lora.{i}", s, F32) for i, s in enumerate(lora_shapes)]
+                     + [(f"m.{i}", s, F32) for i, s in enumerate(lora_shapes)]
+                     + [(f"v.{i}", s, F32) for i, s in enumerate(lora_shapes)]
+                     + [("loss", (), F32)])
+        ab.emit("lora_train_step", f_lora, lora_all_ins, lora_outs)
+
+    # ---- init params ----
+    params = M.init_params(cfg, seed=0)
+    with open(os.path.join(out_dir, "init_params.bin"), "wb") as f:
+        for p in params:
+            f.write(np.asarray(p, dtype="<f4").tobytes())
+
+    # ---- manifest ----
+    manifest = {
+        "config": {
+            "name": cfg.name, "vocab": V, "d_model": D,
+            "n_heads": cfg.n_heads, "head_dim": cfg.head_dim, "d_ff": F,
+            "n_layers": L, "seq": S, "batch": B,
+            "lora_rank": cfg.lora_rank, "lora_scale": M.LORA_SCALE,
+            "beta1": cfg.beta1, "beta2": cfg.beta2, "eps": cfg.eps,
+        },
+        "param_names": cfg.param_names(),
+        "param_shapes": [list(s) for s in cfg.param_shapes()],
+        "block_linears": list(ModelConfig.BLOCK_LINEARS),
+        "block_norms": list(ModelConfig.BLOCK_NORMS),
+        "artifacts": ab.manifest_arts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  [{cfg.name}] manifest + init_params written to {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="all",
+                    help="config name or 'all'")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--impls", default="xla,pallas",
+                    help="comma-separated impls for block graphs")
+    args = ap.parse_args()
+
+    names = list(CONFIGS) if args.config == "all" else [args.config]
+    impls = tuple(args.impls.split(","))
+    for name in names:
+        cfg = CONFIGS[name]
+        # pallas block variants only for tiny+small (ablation); lora only
+        # where used (all configs need it for table4/5 benches).
+        cfg_impls = impls if name in ("tiny", "small") else ("xla",)
+        print(f"building artifacts for config '{name}' "
+              f"(impls={cfg_impls}) ...")
+        build_config(cfg, args.out, impls=cfg_impls)
+
+
+if __name__ == "__main__":
+    main()

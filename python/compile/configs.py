@@ -1,0 +1,98 @@
+"""Model configurations for MiniLlama.
+
+A config fixes every shape the AOT artifacts are lowered with; the Rust
+runtime is manifest-driven and never hard-codes dims. Keep dims multiples of
+the N:M group sizes (4 and 8) and of the pallas tile sizes.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    n_layers: int
+    seq: int
+    batch: int  # batch used by every batched artifact
+    lora_rank: int = 4
+    # adam hyperparams baked into the train-step artifacts (lr is an input)
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    # ---- parameter inventory (canonical order) ----
+    # Per-block tensors, in canonical order. The 7 "linear" tensors are the
+    # prunable ones; masks exist only for these.
+    BLOCK_LINEARS = ("attn.wq", "attn.wk", "attn.wv", "attn.wo",
+                     "mlp.w_gate", "mlp.w_up", "mlp.w_down")
+    BLOCK_NORMS = ("ln1.g", "ln2.g")
+
+    def block_param_names(self, layer: int):
+        pre = f"blocks.{layer}."
+        return [pre + n for n in self.BLOCK_LINEARS + self.BLOCK_NORMS]
+
+    def block_param_shapes(self):
+        """Shapes of one block's params, canonical order (linears then norms)."""
+        d, f = self.d_model, self.d_ff
+        return [
+            (d, d), (d, d), (d, d), (d, d),        # wq wk wv wo
+            (d, f), (d, f), (f, d),                # w_gate w_up w_down
+            (d,), (d,),                            # ln1.g ln2.g
+        ]
+
+    def block_mask_shapes(self):
+        return self.block_param_shapes()[:7]
+
+    def lora_shapes(self):
+        """(A, B) shapes for each of the 7 linears of one block."""
+        r = self.lora_rank
+        out = []
+        for (din, dout) in self.block_mask_shapes():
+            out.append(((din, r), (r, dout)))
+        return out
+
+    def param_names(self):
+        """All model params, canonical (flatten) order."""
+        names = ["embed"]
+        for l in range(self.n_layers):
+            names.extend(self.block_param_names(l))
+        names.extend(["final.norm.g", "final.head"])
+        return names
+
+    def param_shapes(self):
+        shapes = [(self.vocab, self.d_model)]
+        for _ in range(self.n_layers):
+            shapes.extend(self.block_param_shapes())
+        shapes.extend([(self.d_model,), (self.d_model, self.vocab)])
+        return shapes
+
+    def n_params(self) -> int:
+        total = 0
+        for s in self.param_shapes():
+            n = 1
+            for d in s:
+                n *= d
+            total += n
+        return total
+
+
+# `tiny` is for tests and the quickstart (seconds); `small` is the default
+# experiment model (the "LlamaV1-7B stand-in"); `base` is the larger variant
+# used as the "LlamaV2-7B stand-in" (different capacity + seed).
+TINY = ModelConfig(name="tiny", vocab=64, d_model=32, n_heads=2, d_ff=64,
+                   n_layers=2, seq=32, batch=4)
+SMALL = ModelConfig(name="small", vocab=256, d_model=128, n_heads=4, d_ff=384,
+                    n_layers=4, seq=64, batch=8)
+BASE = ModelConfig(name="base", vocab=256, d_model=160, n_heads=4, d_ff=480,
+                   n_layers=4, seq=64, batch=8)
+
+CONFIGS = {c.name: c for c in (TINY, SMALL, BASE)}

@@ -1,0 +1,12 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+- masked_matmul: sparse-linear fwd/bwd (EBFT's inner-loop hot path)
+- attention:     flash-style causal attention
+- rmsnorm:       row-block RMSNorm
+- ref:           pure-jnp oracles for all of the above
+"""
+
+from . import ref  # noqa: F401
+from .masked_matmul import masked_matmul, matmul, pick_tile  # noqa: F401
+from .attention import flash_attention  # noqa: F401
+from .rmsnorm import rmsnorm  # noqa: F401

@@ -1,0 +1,160 @@
+"""Pallas masked-matmul — the EBFT hot-spot kernel (L1).
+
+EBFT's inner loop back-propagates through sparse linear layers
+``y = x @ (W ⊙ M)``. On TPU this kernel tiles x/W/M into VMEM blocks,
+applies the mask elementwise in-register, and feeds the MXU with the masked
+tile — the BlockSpec grid expresses the HBM↔VMEM schedule that a CUDA
+implementation would write with threadblocks + shared memory (DESIGN.md
+§Hardware-Adaptation).
+
+Differentiation: ``pallas_call`` has no automatic VJP, so we define one —
+both the forward and the two backward matmuls (dx = dy @ (W⊙M)ᵀ and
+dW = (xᵀ @ dy) ⊙ M) run as Pallas kernels, keeping the entire fine-tuning
+hot path inside L1.
+
+Everything is lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls; interpret mode lowers the same schedule to plain HLO.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Candidate tile edges, best (largest) first. Dims in this repo are multiples
+# of 8; 128 matches the MXU systolic array edge.
+_TILE_CANDIDATES = (128, 96, 80, 64, 48, 40, 32, 16, 8, 4, 2, 1)
+
+
+def pick_tile(dim: int, cap: int = 128) -> int:
+    """Largest candidate tile ≤ cap that divides `dim`."""
+    for t in _TILE_CANDIDATES:
+        if t <= cap and dim % t == 0:
+            return t
+    return 1
+
+
+def _mm_kernel(x_ref, w_ref, m_ref, o_ref):
+    # Accumulate over the k grid axis; zero the output tile on the first step.
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...] @ (w_ref[...] * m_ref[...])
+
+
+def _mm_nt_kernel(dy_ref, w_ref, m_ref, o_ref):
+    # o[T,K] += dy[T,N] @ (w*m)[K,N]^T  (reduction over the n grid axis)
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += dy_ref[...] @ (w_ref[...] * m_ref[...]).T
+
+
+def _mm_tn_kernel(x_ref, dy_ref, o_ref):
+    # o[K,N] += x[T,K]^T @ dy[T,N]  (reduction over the t grid axis)
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...].T @ dy_ref[...]
+
+
+def _fwd_call(x, w, m):
+    t, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and w.shape == m.shape
+    bt, bk, bn = pick_tile(t), pick_tile(k), pick_tile(n)
+    grid = (t // bt, n // bn, k // bk)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, n), x.dtype),
+        interpret=True,
+    )(x, w, m)
+
+
+def _dx_call(dy, w, m):
+    t, n = dy.shape
+    k, n2 = w.shape
+    assert n == n2
+    bt, bk, bn = pick_tile(t), pick_tile(k), pick_tile(n)
+    grid = (t // bt, k // bk, n // bn)
+    return pl.pallas_call(
+        _mm_nt_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bn), lambda i, j, nn: (i, nn)),
+            pl.BlockSpec((bk, bn), lambda i, j, nn: (j, nn)),
+            pl.BlockSpec((bk, bn), lambda i, j, nn: (j, nn)),
+        ],
+        out_specs=pl.BlockSpec((bt, bk), lambda i, j, nn: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, k), dy.dtype),
+        interpret=True,
+    )(dy, w, m)
+
+
+def _dw_call(x, dy):
+    t, k = x.shape
+    t2, n = dy.shape
+    assert t == t2
+    bt, bk, bn = pick_tile(t), pick_tile(k), pick_tile(n)
+    grid = (k // bk, n // bn, t // bt)
+    return pl.pallas_call(
+        _mm_tn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bk), lambda i, j, tt: (tt, i)),
+            pl.BlockSpec((bt, bn), lambda i, j, tt: (tt, j)),
+        ],
+        out_specs=pl.BlockSpec((bk, bn), lambda i, j, tt: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k, n), x.dtype),
+        interpret=True,
+    )(x, dy)
+
+
+@jax.custom_vjp
+def masked_matmul(x, w, m):
+    """y = x @ (w ⊙ m) with Pallas fwd and bwd. x:[T,K] w,m:[K,N] → [T,N]."""
+    return _fwd_call(x, w, m)
+
+
+def _masked_matmul_fwd(x, w, m):
+    return _fwd_call(x, w, m), (x, w, m)
+
+
+def _masked_matmul_bwd(res, dy):
+    x, w, m = res
+    dx = _dx_call(dy, w, m)
+    dw = _dw_call(x, dy) * m  # sparse weights only receive masked grads
+    return dx, dw, None  # mask is non-differentiable
+
+
+masked_matmul.defvjp(_masked_matmul_fwd, _masked_matmul_bwd)
+
+
+@functools.partial(jax.custom_vjp)
+def matmul(x, w):
+    """Dense Pallas matmul (mask of ones), same tiling. x:[T,K] w:[K,N]."""
+    return _fwd_call(x, w, jnp.ones_like(w))
+
+
+def _matmul_fwd(x, w):
+    return matmul(x, w), (x, w)
+
+
+def _matmul_bwd(res, dy):
+    x, w = res
+    ones = jnp.ones_like(w)
+    return _dx_call(dy, w, ones), _dw_call(x, dy)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness reference: pytest sweeps shapes/dtypes with
+hypothesis and asserts allclose(kernel, ref). They are also the `impl=xla`
+fast path on CPU (interpret-mode pallas lowers to while-loops that the CPU
+backend executes slowly; see DESIGN.md §Hardware-Adaptation).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_matmul(x, w, m):
+    """y = x @ (w * m).   x:[T,K] w:[K,N] m:[K,N] -> [T,N]"""
+    return x @ (w * m)
+
+
+def matmul(x, w):
+    return x @ w
+
+
+def rmsnorm(x, g, eps=1e-5):
+    """RMSNorm over the last axis. x:[...,D] g:[D]"""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+def causal_attention(q, k, v):
+    """Naive causal attention.  q,k,v: [B,H,S,hd] -> [B,H,S,hd]"""
+    s = q.shape[-2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask, scores, jnp.asarray(-1e30, scores.dtype))
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def rope(x, positions):
+    """Rotary position embedding. x:[B,H,S,hd] positions:[S]"""
+    hd = x.shape[-1]
+    assert hd % 2 == 0
+    half = hd // 2
+    freq = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[:, None].astype(jnp.float32) * freq[None, :]  # [S,half]
+    cos = jnp.cos(angles)[None, None, :, :]
+    sin = jnp.sin(angles)[None, None, :, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)

@@ -1,0 +1,37 @@
+"""RMSNorm as a Pallas kernel (L1).
+
+Row-block tiling: each grid step normalizes a [bt, D] tile fully resident in
+VMEM (one pass: mean-of-squares, rsqrt, scale by the gain vector).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .masked_matmul import pick_tile
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = x * jax.lax.rsqrt(ms + eps) * g_ref[...]
+
+
+def rmsnorm(x, g, eps: float = 1e-5):
+    """RMSNorm over the last axis. x:[T,D] g:[D] → [T,D]."""
+    t, d = x.shape
+    bt = pick_tile(t)
+    grid = (t // bt,)
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        interpret=True,
+    )(x, g)

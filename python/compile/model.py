@@ -1,0 +1,350 @@
+"""L2: MiniLlama in pure JAX — every compute graph the Rust coordinator runs.
+
+The model mirrors the Llama block structure the paper prunes
+(Eq. 1/3: RMSNorm → RoPE multi-head attention → residual, RMSNorm →
+SwiGLU MLP → residual). Masks are always explicit f32 0/1 inputs on the 7
+linear weights per block, so the same graphs serve dense (mask=1) and sparse
+paths.
+
+Implementation selection (`impl`):
+  - "xla":    all ops pure jnp (kernels/ref.py) — CPU-fast default.
+  - "pallas": masked linears run the L1 Pallas masked_matmul (custom-VJP, so
+    it is usable under jax.grad); attention/rmsnorm additionally use their
+    Pallas kernels in forward-only graphs (interpret-mode pallas_call is not
+    differentiable without a custom VJP).
+
+All public functions are shape-polymorphic over the config and are lowered by
+aot.py with concrete shapes to HLO text.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import ref
+from .kernels.masked_matmul import masked_matmul as pallas_masked_matmul
+from .kernels.attention import flash_attention as pallas_attention
+from .kernels.rmsnorm import rmsnorm as pallas_rmsnorm
+
+N_BLOCK_PARAMS = 9   # 7 linears + 2 norm gains
+N_BLOCK_LINEARS = 7
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def linear(x2d, w, m, impl: str):
+    """x2d:[T,K] @ (w ⊙ m):[K,N] with the selected implementation."""
+    if impl == "pallas":
+        return pallas_masked_matmul(x2d, w, m)
+    return ref.masked_matmul(x2d, w, m)
+
+
+def _rmsnorm(x2d, g, impl: str, needs_grad: bool):
+    if impl == "pallas" and not needs_grad:
+        return pallas_rmsnorm(x2d, g)
+    return ref.rmsnorm(x2d, g)
+
+
+def _attention(q, k, v, impl: str, needs_grad: bool):
+    if impl == "pallas" and not needs_grad:
+        return pallas_attention(q, k, v)
+    return ref.causal_attention(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# block forward
+# ---------------------------------------------------------------------------
+
+def block_fwd(cfg: ModelConfig, bp: Sequence[jnp.ndarray],
+              masks: Sequence[jnp.ndarray], x: jnp.ndarray,
+              impl: str = "xla", needs_grad: bool = False) -> jnp.ndarray:
+    """One transformer block. bp = 9 tensors (canonical order), masks = 7.
+
+    x: [B,S,D] → [B,S,D].
+    """
+    return block_intermediates(cfg, bp, masks, x, impl, needs_grad)[0]
+
+
+def block_intermediates(cfg: ModelConfig, bp, masks, x, impl: str = "xla",
+                        needs_grad: bool = False):
+    """Forward returning the inputs of each linear layer group.
+
+    Returns (y, ln1_out[T,D], ctx[T,D], ln2_out[T,D], hmid[T,F]) — the
+    activations whose statistics Wanda/SparseGPT/DSnoT/FLAP need.
+    """
+    wq, wk, wv, wo, w_gate, w_up, w_down, g1, g2 = bp
+    mq, mk, mv, mo, m_gate, m_up, m_down = masks
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    t = b * s
+
+    # --- attention sub-block ---
+    xn = _rmsnorm(x.reshape(t, d), g1, impl, needs_grad)
+    q = linear(xn, wq, mq, impl).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = linear(xn, wk, mk, impl).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = linear(xn, wv, mv, impl).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    pos = jnp.arange(s)
+    q = ref.rope(q, pos)
+    k = ref.rope(k, pos)
+    ctx = _attention(q, k, v, impl, needs_grad)             # [B,H,S,hd]
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(t, d)
+    attn_out = linear(ctx, wo, mo, impl)
+    xa = x + attn_out.reshape(b, s, d)
+
+    # --- MLP sub-block (SwiGLU) ---
+    xa2 = xa.reshape(t, d)
+    hn = _rmsnorm(xa2, g2, impl, needs_grad)
+    gate = linear(hn, w_gate, m_gate, impl)
+    up = linear(hn, w_up, m_up, impl)
+    hmid = ref.silu(gate) * up                              # [T,F]
+    down = linear(hmid, w_down, m_down, impl)
+    y = xa + down.reshape(b, s, d)
+    return y, xn, ctx, hn, hmid
+
+
+# ---------------------------------------------------------------------------
+# model head / embedding / full forward
+# ---------------------------------------------------------------------------
+
+def embed_fwd(embed: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens:[B,S] int32 → x0:[B,S,D]."""
+    return jnp.take(embed, tokens, axis=0)
+
+
+def head_nll(cfg: ModelConfig, g_norm, head, x_last, tokens, weights=None):
+    """Per-position next-token NLL after final norm + head.
+
+    x_last: [B,S,D]; tokens: [B,S]; weights: optional [B,S] f32 applied to
+    *target* positions 1..S-1 (weights[:, 1:]).
+    Returns per-position nll [B,S-1] (already weighted).
+    """
+    b, s, d = x_last.shape
+    xn = ref.rmsnorm(x_last.reshape(b * s, d), g_norm).reshape(b, s, d)
+    logits = xn @ head                                       # [B,S,V]
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)    # predict t+1
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    if weights is not None:
+        nll = nll * weights[:, 1:]
+    return nll
+
+
+def head_loss(cfg, g_norm, head, x_last, tokens):
+    """→ (nll_sum, count) for perplexity accumulation."""
+    nll = head_nll(cfg, g_norm, head, x_last, tokens)
+    return jnp.sum(nll), jnp.asarray(nll.size, jnp.float32)
+
+
+def head_seq_nll(cfg, g_norm, head, x_last, tokens, weights):
+    """→ (per-sequence weighted NLL sum [B], per-sequence weight sum [B])."""
+    nll = head_nll(cfg, g_norm, head, x_last, tokens, weights)
+    return jnp.sum(nll, axis=-1), jnp.sum(weights[:, 1:], axis=-1)
+
+
+def split_params(cfg: ModelConfig, params: Sequence[jnp.ndarray]):
+    """Canonical flat list → (embed, [block params×L], g_norm, head)."""
+    embed = params[0]
+    blocks = []
+    i = 1
+    for _ in range(cfg.n_layers):
+        blocks.append(list(params[i:i + N_BLOCK_PARAMS]))
+        i += N_BLOCK_PARAMS
+    g_norm, head = params[i], params[i + 1]
+    return embed, blocks, g_norm, head
+
+
+def lm_nll(cfg: ModelConfig, params: Sequence[jnp.ndarray],
+           masks_all, tokens: jnp.ndarray,
+           impl: str = "xla", needs_grad: bool = False):
+    """Full-model mean next-token NLL. masks_all: 7×L tensors or None."""
+    embed, blocks, g_norm, head = split_params(cfg, params)
+    x = embed_fwd(embed, tokens)
+    for l, bp in enumerate(blocks):
+        if masks_all is None:
+            masks = [jnp.ones_like(w) for w in bp[:N_BLOCK_LINEARS]]
+        else:
+            masks = masks_all[l * N_BLOCK_LINEARS:(l + 1) * N_BLOCK_LINEARS]
+        x = block_fwd(cfg, bp, masks, x, impl, needs_grad)
+    s, c = head_loss(cfg, g_norm, head, x, tokens)
+    return s / c
+
+
+# ---------------------------------------------------------------------------
+# Adam (reference implementation shared by all train-step artifacts)
+# ---------------------------------------------------------------------------
+
+def adam_update(cfg: ModelConfig, p, g, m, v, t, lr):
+    """Single-tensor Adam with bias correction. t: scalar f32 step (1-based)."""
+    b1, b2, eps = cfg.beta1, cfg.beta2, cfg.eps
+    m_new = b1 * m + (1.0 - b1) * g
+    v_new = b2 * v + (1.0 - b2) * jnp.square(g)
+    m_hat = m_new / (1.0 - jnp.power(b1, t))
+    v_hat = v_new / (1.0 - jnp.power(b2, t))
+    p_new = p - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    return p_new, m_new, v_new
+
+
+# ---------------------------------------------------------------------------
+# EBFT: block-wise reconstruction fine-tuning (Eq. 4 + Alg. 1 inner step)
+# ---------------------------------------------------------------------------
+
+def recon_loss(cfg: ModelConfig, bp, masks, x, target, impl: str = "xla"):
+    """Block-wise reconstruction error ‖zˡ − z̄ˡ‖² (mean-square, Eq. 4)."""
+    y = block_fwd(cfg, bp, masks, x, impl, needs_grad=True)
+    return jnp.mean(jnp.square(y - target))
+
+
+def block_ft_step(cfg: ModelConfig, bp, masks, m_state, v_state, t, lr,
+                  x, target, impl: str = "xla"):
+    """One EBFT backprop step on a block.
+
+    Gradients of the 7 linear weights are masked (only surviving weights
+    move, Alg. 1); the 2 norm gains get dense gradients.
+    Returns (new_bp[9], new_m[9], new_v[9], loss).
+    """
+    loss, grads = jax.value_and_grad(
+        lambda bp_: recon_loss(cfg, bp_, masks, x, target, impl))(list(bp))
+    new_bp, new_m, new_v = [], [], []
+    for i in range(N_BLOCK_PARAMS):
+        g = grads[i]
+        if i < N_BLOCK_LINEARS:
+            g = g * masks[i]
+        p_, m_, v_ = adam_update(cfg, bp[i], g, m_state[i], v_state[i], t, lr)
+        new_bp.append(p_)
+        new_m.append(m_)
+        new_v.append(v_)
+    return new_bp, new_m, new_v, loss
+
+
+def block_grad(cfg: ModelConfig, bp, masks, x, target, impl: str = "xla"):
+    """Loss + *dense* gradient w.r.t. the effective weights W̄ = W ⊙ M.
+
+    Used by the mask-tuning variant (§4.5): candidate scoring needs the
+    gradient at pruned positions too, so the graph treats W̄ as the free
+    variable (no mask inside) evaluated at W ⊙ M.
+    """
+    ones = [jnp.ones_like(mk) for mk in masks]
+    eff_lin = [w * mk for w, mk in zip(bp[:N_BLOCK_LINEARS], masks)]
+
+    def loss_fn(lin):
+        full = list(lin) + list(bp[N_BLOCK_LINEARS:])
+        return recon_loss(cfg, full, ones, x, target, impl)
+
+    loss, grads = jax.value_and_grad(loss_fn)(eff_lin)
+    return (loss, *grads)
+
+
+# ---------------------------------------------------------------------------
+# statistics for pruners (Wanda / SparseGPT / DSnoT / FLAP)
+# ---------------------------------------------------------------------------
+
+def block_stats(cfg: ModelConfig, bp, masks, x, impl: str = "xla"):
+    """Activation statistics of the 4 linear-input groups of a block.
+
+    Returns the block output y first (keeping every parameter live in the
+    lowered HLO — XLA DCEs unused entry parameters otherwise — and letting
+    callers advance the activation stream for free), then per group
+    g ∈ {ln1_out, ctx, ln2_out, hmid}:
+    (colsumsq[Dg], colsum[Dg], gram[Dg,Dg]) accumulated over T=B·S tokens:
+      colsumsq_j = Σ_t X_tj²   (Wanda ‖X_j‖², FLAP fluctuation)
+      colsum_j   = Σ_t X_tj    (DSnoT expectation terms, FLAP baseline)
+      gram       = XᵀX         (SparseGPT Hessian)
+    1 + 12 outputs, group-major.
+    """
+    y, ln1, ctx, ln2, hmid = block_intermediates(cfg, bp, masks, x, impl)
+    outs = [y]
+    for a in (ln1, ctx, ln2, hmid):
+        outs.append(jnp.sum(jnp.square(a), axis=0))
+        outs.append(jnp.sum(a, axis=0))
+        outs.append(a.T @ a)
+    return tuple(outs)
+
+
+# ---------------------------------------------------------------------------
+# pretraining step (dense)
+# ---------------------------------------------------------------------------
+
+def lm_train_step(cfg: ModelConfig, params, m_state, v_state, t, lr, tokens,
+                  impl: str = "xla"):
+    """Dense full-model Adam step (MiniLlama pretraining)."""
+    loss, grads = jax.value_and_grad(
+        lambda ps: lm_nll(cfg, ps, None, tokens, impl, needs_grad=True))(
+            list(params))
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(params, grads, m_state, v_state):
+        p_, m_, v_ = adam_update(cfg, p, g, m, v, t, lr)
+        new_p.append(p_)
+        new_m.append(m_)
+        new_v.append(v_)
+    return new_p, new_m, new_v, loss
+
+
+# ---------------------------------------------------------------------------
+# LoRA baseline (§4.4)
+# ---------------------------------------------------------------------------
+
+LORA_SCALE = 2.0  # alpha / rank, baked
+
+
+def lora_block_fwd(cfg: ModelConfig, bp, masks, adapters, x, impl="xla"):
+    """Block forward with W̄ = W ⊙ M + scale·(A @ B) on each linear."""
+    eff = []
+    for i in range(N_BLOCK_LINEARS):
+        a, b_ = adapters[2 * i], adapters[2 * i + 1]
+        eff.append(bp[i] * masks[i] + LORA_SCALE * (a @ b_))
+    full = eff + list(bp[N_BLOCK_LINEARS:])
+    ones = [jnp.ones_like(mk) for mk in masks]
+    return block_fwd(cfg, full, ones, x, impl, needs_grad=True)
+
+
+def lora_lm_nll(cfg: ModelConfig, params, masks_all, adapters_all, tokens,
+                impl="xla"):
+    embed, blocks, g_norm, head = split_params(cfg, params)
+    x = embed_fwd(embed, tokens)
+    per_block = 2 * N_BLOCK_LINEARS
+    for l, bp in enumerate(blocks):
+        masks = masks_all[l * N_BLOCK_LINEARS:(l + 1) * N_BLOCK_LINEARS]
+        adapters = adapters_all[l * per_block:(l + 1) * per_block]
+        x = lora_block_fwd(cfg, bp, masks, adapters, x, impl)
+    s, c = head_loss(cfg, g_norm, head, x, tokens)
+    return s / c
+
+
+def lora_train_step(cfg: ModelConfig, params, masks_all, adapters_all,
+                    m_state, v_state, t, lr, tokens, impl="xla"):
+    """Adam step on the LoRA adapters only (frozen sparse base)."""
+    loss, grads = jax.value_and_grad(
+        lambda ad: lora_lm_nll(cfg, params, masks_all, ad, tokens, impl))(
+            list(adapters_all))
+    new_a, new_m, new_v = [], [], []
+    for a, g, m, v in zip(adapters_all, grads, m_state, v_state):
+        a_, m_, v_ = adam_update(cfg, a, g, m, v, t, lr)
+        new_a.append(a_)
+        new_m.append(m_)
+        new_v.append(v_)
+    return new_a, new_m, new_v, loss
+
+
+# ---------------------------------------------------------------------------
+# initialization (exported to artifacts/<cfg>/init_params.bin for Rust)
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Scaled-normal init, canonical order. Returns list of f32 arrays."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for shape in cfg.param_shapes():
+        key, sub = jax.random.split(key)
+        if len(shape) == 1:
+            out.append(jnp.ones(shape, jnp.float32))  # norm gains
+        else:
+            fan_in = shape[0]
+            std = 1.0 / float(fan_in) ** 0.5
+            out.append(jax.random.normal(sub, shape, jnp.float32) * std)
+    return out

@@ -1,0 +1,90 @@
+"""AOT pipeline: manifests consistent with configs, artifacts well-formed."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile.configs import CONFIGS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.isdir(os.path.join(ART, "tiny")),
+    reason="artifacts not built (run `make artifacts`)")
+
+
+def load_manifest(name):
+    with open(os.path.join(ART, name, "manifest.json")) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("name", list(CONFIGS))
+def test_manifest_matches_config(name):
+    cfg = CONFIGS[name]
+    man = load_manifest(name)
+    c = man["config"]
+    assert c["vocab"] == cfg.vocab
+    assert c["d_model"] == cfg.d_model
+    assert c["n_layers"] == cfg.n_layers
+    assert c["seq"] == cfg.seq
+    assert c["batch"] == cfg.batch
+    assert man["param_names"] == cfg.param_names()
+    assert [tuple(s) for s in man["param_shapes"]] == cfg.param_shapes()
+
+
+@pytest.mark.parametrize("name", list(CONFIGS))
+def test_init_params_bin_size(name):
+    cfg = CONFIGS[name]
+    path = os.path.join(ART, name, "init_params.bin")
+    assert os.path.getsize(path) == 4 * cfg.n_params()
+
+
+@pytest.mark.parametrize("name", list(CONFIGS))
+def test_all_artifacts_exist_and_have_entry(name):
+    man = load_manifest(name)
+    required = {"embed_fwd", "block_fwd", "block_ft_step", "block_grad",
+                "block_stats", "head_loss", "head_seq_nll", "lm_loss",
+                "lm_train_step", "lora_train_step"}
+    assert required <= set(man["artifacts"])
+    for art, meta in man["artifacts"].items():
+        path = os.path.join(ART, name, meta["file"])
+        assert os.path.exists(path), f"{name}/{art} missing"
+        head = open(path).read(4096)
+        assert "ENTRY" in open(path).read(), f"{name}/{art} no ENTRY"
+        assert meta["inputs"] and meta["outputs"]
+
+
+@pytest.mark.parametrize("name", ["tiny", "small"])
+def test_pallas_variants_built(name):
+    man = load_manifest(name)
+    assert "block_fwd_pallas" in man["artifacts"]
+    assert "block_ft_step_pallas" in man["artifacts"]
+    # pallas and xla variants share the exact same signature
+    for base in ("block_fwd", "block_ft_step"):
+        a = man["artifacts"][base]
+        b = man["artifacts"][base + "_pallas"]
+        assert a["inputs"] == b["inputs"]
+        assert a["outputs"] == b["outputs"]
+
+
+@pytest.mark.parametrize("name", list(CONFIGS))
+def test_ft_step_signature_roundtrip(name):
+    """ft-step outputs mirror its first 9+9+9 inputs plus loss."""
+    man = load_manifest(name)
+    meta = man["artifacts"]["block_ft_step"]
+    ins = meta["inputs"]
+    outs = meta["outputs"]
+    assert len(outs) == 9 * 3 + 1
+    assert outs[-1]["name"] == "loss" and outs[-1]["shape"] == []
+    # bp shapes in == bp shapes out
+    for i in range(9):
+        assert ins[i]["shape"] == outs[i]["shape"]
+
+
+def test_init_params_finite():
+    path = os.path.join(ART, "tiny", "init_params.bin")
+    data = np.fromfile(path, dtype="<f4")
+    assert np.isfinite(data).all()
+    assert data.std() > 0

@@ -1,0 +1,184 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (hypothesis sweeps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (flash_attention, masked_matmul, matmul, ref,
+                             rmsnorm)
+from compile.kernels.masked_matmul import pick_tile
+
+DIMS = st.sampled_from([2, 4, 8, 16, 24, 32, 40, 48, 64, 96, 128, 160])
+SMALL_DIMS = st.sampled_from([2, 4, 8, 16, 32])
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# pick_tile
+# ---------------------------------------------------------------------------
+
+@given(dim=st.integers(1, 4096), cap=st.sampled_from([8, 32, 64, 128]))
+def test_pick_tile_divides(dim, cap):
+    t = pick_tile(dim, cap)
+    assert 1 <= t <= cap
+    assert dim % t == 0
+
+
+@pytest.mark.parametrize("dim,expect", [(128, 128), (384, 128), (160, 80),
+                                        (480, 96), (512, 128), (64, 64)])
+def test_pick_tile_known(dim, expect):
+    assert pick_tile(dim) == expect
+
+
+# ---------------------------------------------------------------------------
+# masked matmul fwd
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(t=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1),
+       density=st.floats(0.0, 1.0))
+def test_masked_matmul_fwd(t, k, n, seed, density):
+    rng = np.random.default_rng(seed)
+    x, w = rand(rng, t, k), rand(rng, k, n)
+    m = jnp.asarray(rng.random((k, n)) < density, jnp.float32)
+    got = masked_matmul(x, w, m)
+    want = ref.masked_matmul(x, w, m)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(t=SMALL_DIMS, k=SMALL_DIMS, n=SMALL_DIMS, seed=st.integers(0, 2**31 - 1))
+def test_masked_matmul_vjp(t, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = rand(rng, t, k), rand(rng, k, n)
+    m = jnp.asarray(rng.random((k, n)) < 0.5, jnp.float32)
+
+    def f(x, w):
+        return jnp.sum(jnp.tanh(masked_matmul(x, w, m)))
+
+    def fr(x, w):
+        return jnp.sum(jnp.tanh(ref.masked_matmul(x, w, m)))
+
+    gx, gw = jax.grad(f, (0, 1))(x, w)
+    gxr, gwr = jax.grad(fr, (0, 1))(x, w)
+    np.testing.assert_allclose(gx, gxr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gw, gwr, rtol=1e-4, atol=1e-4)
+
+
+def test_masked_matmul_grad_respects_mask():
+    """Gradient at pruned positions must be exactly zero (Alg. 1 invariant)."""
+    rng = np.random.default_rng(0)
+    x, w = rand(rng, 16, 32), rand(rng, 32, 24)
+    m = jnp.asarray(rng.random((32, 24)) < 0.5, jnp.float32)
+    gw = jax.grad(lambda w: jnp.sum(masked_matmul(x, w, m) ** 2))(w)
+    assert np.all(np.asarray(gw)[np.asarray(m) == 0.0] == 0.0)
+
+
+def test_mask_of_ones_is_dense():
+    rng = np.random.default_rng(1)
+    x, w = rand(rng, 8, 16), rand(rng, 16, 8)
+    np.testing.assert_allclose(masked_matmul(x, w, jnp.ones_like(w)),
+                               x @ w, rtol=1e-5, atol=1e-5)
+
+
+def test_mask_of_zeros_is_zero():
+    rng = np.random.default_rng(2)
+    x, w = rand(rng, 8, 16), rand(rng, 16, 8)
+    np.testing.assert_allclose(masked_matmul(x, w, jnp.zeros_like(w)),
+                               jnp.zeros((8, 8)), atol=0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(t=SMALL_DIMS, k=SMALL_DIMS, n=SMALL_DIMS, seed=st.integers(0, 2**31 - 1))
+def test_dense_matmul(t, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = rand(rng, t, k), rand(rng, k, n)
+    np.testing.assert_allclose(matmul(x, w), x @ w, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(b=st.sampled_from([1, 2]), h=st.sampled_from([1, 2, 4]),
+       s=st.sampled_from([8, 16, 32, 64]), hd=st.sampled_from([8, 16, 40]),
+       seed=st.integers(0, 2**31 - 1))
+def test_flash_attention(b, h, s, hd, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = (rand(rng, b, h, s, hd) for _ in range(3))
+    got = flash_attention(q, k, v)
+    want = ref.causal_attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_attention_is_causal():
+    """Changing future keys/values must not change earlier outputs."""
+    rng = np.random.default_rng(3)
+    q, k, v = (rand(rng, 1, 2, 16, 8) for _ in range(3))
+    out1 = flash_attention(q, k, v)
+    k2 = k.at[:, :, 12:, :].set(99.0)
+    v2 = v.at[:, :, 12:, :].set(-99.0)
+    out2 = flash_attention(q, k2, v2)
+    np.testing.assert_allclose(out1[:, :, :12], out2[:, :, :12],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_attention_first_position_is_v0():
+    rng = np.random.default_rng(4)
+    q, k, v = (rand(rng, 1, 1, 8, 4) for _ in range(3))
+    out = flash_attention(q, k, v)
+    np.testing.assert_allclose(out[0, 0, 0], v[0, 0, 0], rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(t=DIMS, d=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_rmsnorm(t, d, seed):
+    rng = np.random.default_rng(seed)
+    x, g = rand(rng, t, d), rand(rng, d)
+    np.testing.assert_allclose(rmsnorm(x, g), ref.rmsnorm(x, g),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rmsnorm_unit_rows():
+    """Unit gain + RMS-1 rows pass through unchanged."""
+    x = jnp.ones((4, 16))
+    out = rmsnorm(x, jnp.ones((16,)))
+    np.testing.assert_allclose(out, x, rtol=1e-4)
+
+
+def test_rmsnorm_scale_invariance():
+    """rmsnorm(c·x) == rmsnorm(x) for c > 0 (up to eps)."""
+    rng = np.random.default_rng(5)
+    x, g = rand(rng, 8, 32), rand(rng, 32)
+    np.testing.assert_allclose(rmsnorm(100.0 * x, g), rmsnorm(x, g),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# rope oracle properties (used inside blocks)
+# ---------------------------------------------------------------------------
+
+def test_rope_preserves_norm():
+    rng = np.random.default_rng(6)
+    x = rand(rng, 1, 2, 16, 8)
+    y = ref.rope(x, jnp.arange(16))
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rope_position_zero_identity():
+    rng = np.random.default_rng(7)
+    x = rand(rng, 1, 1, 4, 8)
+    y = ref.rope(x, jnp.zeros((4,), jnp.int32))
+    np.testing.assert_allclose(y, x, rtol=1e-6, atol=1e-6)

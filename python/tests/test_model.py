@@ -1,0 +1,327 @@
+"""L2 correctness: MiniLlama graphs, EBFT step semantics, Adam, LoRA."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import CONFIGS, TINY
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+def make_block(cfg, rng, density=0.5):
+    bp = [rand(rng, *s) * 0.2 for s in cfg.block_param_shapes()]
+    bp[7] = jnp.ones_like(bp[7])
+    bp[8] = jnp.ones_like(bp[8])
+    masks = [jnp.asarray(rng.random(s) < density, jnp.float32)
+             for s in cfg.block_mask_shapes()]
+    return bp, masks
+
+
+def make_params(cfg, seed=0):
+    return M.init_params(cfg, seed)
+
+
+def dense_masks(cfg):
+    return [jnp.ones(s, jnp.float32)
+            for s in cfg.block_mask_shapes() * cfg.n_layers]
+
+
+def tokens_for(cfg, rng):
+    return jnp.asarray(
+        rng.integers(0, cfg.vocab, size=(cfg.batch, cfg.seq)), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# decomposed vs monolithic forward
+# ---------------------------------------------------------------------------
+
+def test_decomposed_equals_monolithic():
+    cfg = TINY
+    rng = np.random.default_rng(0)
+    params = make_params(cfg)
+    masks = dense_masks(cfg)
+    toks = tokens_for(cfg, rng)
+
+    mono = M.lm_nll(cfg, params, masks, toks)
+
+    embed, blocks, g_norm, head = M.split_params(cfg, params)
+    x = M.embed_fwd(embed, toks)
+    for l, bp in enumerate(blocks):
+        bmasks = masks[l * 7:(l + 1) * 7]
+        x = M.block_fwd(cfg, bp, bmasks, x)
+    s, c = M.head_loss(cfg, g_norm, head, x, toks)
+    np.testing.assert_allclose(mono, s / c, rtol=1e-5, atol=1e-6)
+
+
+def test_sparse_masks_change_loss():
+    cfg = TINY
+    rng = np.random.default_rng(1)
+    params = make_params(cfg)
+    toks = tokens_for(cfg, rng)
+    dense = M.lm_nll(cfg, params, dense_masks(cfg), toks)
+    sparse_masks = [jnp.asarray(rng.random(m.shape) < 0.5, jnp.float32)
+                    for m in dense_masks(cfg)]
+    sparse = M.lm_nll(cfg, params, sparse_masks, toks)
+    assert not np.isclose(float(dense), float(sparse))
+
+
+def test_impl_pallas_matches_xla():
+    cfg = TINY
+    rng = np.random.default_rng(2)
+    bp, masks = make_block(cfg, rng)
+    x = rand(rng, cfg.batch, cfg.seq, cfg.d_model)
+    y_x = M.block_fwd(cfg, bp, masks, x, impl="xla")
+    y_p = M.block_fwd(cfg, bp, masks, x, impl="pallas")
+    np.testing.assert_allclose(y_x, y_p, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# reconstruction objective / EBFT step
+# ---------------------------------------------------------------------------
+
+def test_recon_loss_zero_for_identical():
+    cfg = TINY
+    rng = np.random.default_rng(3)
+    bp, masks = make_block(cfg, rng)
+    x = rand(rng, cfg.batch, cfg.seq, cfg.d_model)
+    target = M.block_fwd(cfg, bp, masks, x)
+    loss = M.recon_loss(cfg, bp, masks, x, target)
+    assert float(loss) < 1e-10
+
+
+def test_recon_grad_matches_forward_mode():
+    """Reverse-mode grad vs forward-mode JVP: ⟨∇L, u⟩ == JVP(L)[u].
+
+    (Float32 finite differences are below the loss's resolution here, so we
+    check against forward-mode AD — an independent differentiation path.)
+    """
+    cfg = TINY
+    rng = np.random.default_rng(4)
+    bp, masks = make_block(cfg, rng)
+    x = rand(rng, cfg.batch, cfg.seq, cfg.d_model)
+    dense_bp, dense_m = make_block(cfg, rng, density=1.0)
+    target = M.block_fwd(cfg, dense_bp, dense_m, x)
+
+    loss_fn = lambda w0: M.recon_loss(cfg, [w0] + bp[1:], masks, x, target)
+    g = jax.grad(loss_fn)(bp[0])
+    u = rand(rng, *bp[0].shape)
+    _, jvp_val = jax.jvp(loss_fn, (bp[0],), (u,))
+    np.testing.assert_allclose(float(jnp.vdot(g, u)), float(jvp_val),
+                               rtol=1e-3, atol=1e-6)
+
+
+def test_block_ft_step_reduces_loss():
+    cfg = TINY
+    rng = np.random.default_rng(5)
+    bp, masks = make_block(cfg, rng)
+    dense_bp = [w for w in bp]
+    x = rand(rng, cfg.batch, cfg.seq, cfg.d_model)
+    target = M.block_fwd(cfg, dense_bp, [jnp.ones_like(m) for m in masks], x)
+
+    m_st = [jnp.zeros_like(p) for p in bp]
+    v_st = [jnp.zeros_like(p) for p in bp]
+    losses = []
+    cur = list(bp)
+    for t in range(1, 31):
+        cur, m_st, v_st, loss = M.block_ft_step(
+            cfg, cur, masks, m_st, v_st, jnp.asarray(float(t)),
+            jnp.asarray(5e-3), x, target)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9
+
+
+def test_block_ft_step_preserves_mask():
+    """Pruned weights must remain exactly zero... or rather unchanged."""
+    cfg = TINY
+    rng = np.random.default_rng(6)
+    bp, masks = make_block(cfg, rng)
+    x = rand(rng, cfg.batch, cfg.seq, cfg.d_model)
+    target = rand(rng, cfg.batch, cfg.seq, cfg.d_model)
+    m_st = [jnp.zeros_like(p) for p in bp]
+    v_st = [jnp.zeros_like(p) for p in bp]
+    new_bp, _, _, _ = M.block_ft_step(
+        cfg, bp, masks, m_st, v_st, jnp.asarray(1.0), jnp.asarray(1e-2),
+        x, target)
+    for i in range(7):
+        pruned = np.asarray(masks[i]) == 0.0
+        np.testing.assert_array_equal(np.asarray(new_bp[i])[pruned],
+                                      np.asarray(bp[i])[pruned])
+
+
+def test_block_grad_dense_positions_nonzero():
+    cfg = TINY
+    rng = np.random.default_rng(7)
+    bp, masks = make_block(cfg, rng)
+    x = rand(rng, cfg.batch, cfg.seq, cfg.d_model)
+    target = rand(rng, cfg.batch, cfg.seq, cfg.d_model)
+    out = M.block_grad(cfg, bp, masks, x, target)
+    loss, grads = out[0], out[1:]
+    assert float(loss) > 0
+    g0 = np.asarray(grads[0])
+    pruned = np.asarray(masks[0]) == 0.0
+    # dense grad exists at pruned positions (that's the point of block_grad)
+    assert np.abs(g0[pruned]).max() > 0
+
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+def np_adam(p, g, m, v, t, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mh = m / (1 - b1 ** t)
+    vh = v / (1 - b2 ** t)
+    return p - lr * mh / (np.sqrt(vh) + eps), m, v
+
+
+def test_adam_matches_numpy_reference():
+    cfg = TINY
+    rng = np.random.default_rng(8)
+    p = rng.normal(size=(5, 7)).astype(np.float32)
+    g = rng.normal(size=(5, 7)).astype(np.float32)
+    m = rng.normal(size=(5, 7)).astype(np.float32) * 0.1
+    v = np.abs(rng.normal(size=(5, 7)).astype(np.float32)) * 0.1
+    for t in (1.0, 2.0, 10.0):
+        got = M.adam_update(cfg, jnp.asarray(p), jnp.asarray(g),
+                            jnp.asarray(m), jnp.asarray(v),
+                            jnp.asarray(t), jnp.asarray(1e-3))
+        want = np_adam(p, g, m, v, t, 1e-3)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# stats
+# ---------------------------------------------------------------------------
+
+def test_block_stats_match_intermediates():
+    cfg = TINY
+    rng = np.random.default_rng(9)
+    bp, masks = make_block(cfg, rng)
+    x = rand(rng, cfg.batch, cfg.seq, cfg.d_model)
+    stats = M.block_stats(cfg, bp, masks, x)
+    y, ln1, ctx, ln2, hmid = M.block_intermediates(cfg, bp, masks, x)
+    np.testing.assert_allclose(stats[0], y, rtol=1e-5, atol=1e-5)
+    stats = stats[1:]
+    acts = [ln1, ctx, ln2, hmid]
+    for gi, a in enumerate(acts):
+        colsumsq, colsum, gram = stats[3 * gi:3 * gi + 3]
+        np.testing.assert_allclose(colsumsq, jnp.sum(a * a, axis=0),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(colsum, jnp.sum(a, axis=0),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(gram, a.T @ a, rtol=1e-4, atol=1e-3)
+
+
+def test_gram_is_symmetric_psd():
+    cfg = TINY
+    rng = np.random.default_rng(10)
+    bp, masks = make_block(cfg, rng)
+    x = rand(rng, cfg.batch, cfg.seq, cfg.d_model)
+    stats = M.block_stats(cfg, bp, masks, x)[1:]
+    for gi in range(4):
+        gram = np.asarray(stats[3 * gi + 2])
+        np.testing.assert_allclose(gram, gram.T, rtol=1e-4, atol=1e-4)
+        eig = np.linalg.eigvalsh(gram)
+        assert eig.min() > -1e-2
+
+
+# ---------------------------------------------------------------------------
+# training steps
+# ---------------------------------------------------------------------------
+
+def test_lm_train_step_reduces_loss():
+    cfg = TINY
+    rng = np.random.default_rng(11)
+    params = make_params(cfg)
+    toks = tokens_for(cfg, rng)
+    m_st = [jnp.zeros_like(p) for p in params]
+    v_st = [jnp.zeros_like(p) for p in params]
+    cur = list(params)
+    losses = []
+    for t in range(1, 16):
+        cur, m_st, v_st, loss = M.lm_train_step(
+            cfg, cur, m_st, v_st, jnp.asarray(float(t)), jnp.asarray(1e-2),
+            toks)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+
+
+def test_lora_train_step_reduces_loss_with_frozen_base():
+    cfg = TINY
+    rng = np.random.default_rng(12)
+    params = make_params(cfg)
+    masks = [jnp.asarray(rng.random(m.shape) < 0.5, jnp.float32)
+             for m in dense_masks(cfg)]
+    toks = tokens_for(cfg, rng)
+    adapters = []
+    for _ in range(cfg.n_layers):
+        for (a_s, b_s) in cfg.lora_shapes():
+            adapters.append(rand(rng, *a_s) * 0.05)
+            adapters.append(jnp.zeros(b_s, jnp.float32))
+    m_st = [jnp.zeros_like(a) for a in adapters]
+    v_st = [jnp.zeros_like(a) for a in adapters]
+    base_loss = float(M.lora_lm_nll(cfg, params, masks, adapters, toks))
+    cur = list(adapters)
+    for t in range(1, 11):
+        cur, m_st, v_st, loss = M.lora_train_step(
+            cfg, params, masks, cur, m_st, v_st, jnp.asarray(float(t)),
+            jnp.asarray(1e-2), toks)
+    assert float(loss) < base_loss
+
+
+def test_lora_zero_b_is_identity():
+    """With B=0 adapters, LoRA forward equals the masked base forward."""
+    cfg = TINY
+    rng = np.random.default_rng(13)
+    params = make_params(cfg)
+    masks = [jnp.asarray(rng.random(m.shape) < 0.5, jnp.float32)
+             for m in dense_masks(cfg)]
+    toks = tokens_for(cfg, rng)
+    adapters = []
+    for _ in range(cfg.n_layers):
+        for (a_s, b_s) in cfg.lora_shapes():
+            adapters.append(rand(rng, *a_s))
+            adapters.append(jnp.zeros(b_s, jnp.float32))
+    np.testing.assert_allclose(
+        M.lora_lm_nll(cfg, params, masks, adapters, toks),
+        M.lm_nll(cfg, params, masks, toks), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# head scoring
+# ---------------------------------------------------------------------------
+
+def test_head_seq_nll_weights():
+    cfg = TINY
+    rng = np.random.default_rng(14)
+    params = make_params(cfg)
+    _, _, g_norm, head = M.split_params(cfg, params)
+    x = rand(rng, cfg.batch, cfg.seq, cfg.d_model)
+    toks = tokens_for(cfg, rng)
+    w_all = jnp.ones((cfg.batch, cfg.seq), jnp.float32)
+    nll_all, wsum_all = M.head_seq_nll(cfg, g_norm, head, x, toks, w_all)
+    s, c = M.head_loss(cfg, g_norm, head, x, toks)
+    np.testing.assert_allclose(jnp.sum(nll_all), s, rtol=1e-5)
+    np.testing.assert_allclose(jnp.sum(wsum_all), c, rtol=1e-6)
+    # zero weights → zero nll
+    w0 = jnp.zeros_like(w_all)
+    nll0, wsum0 = M.head_seq_nll(cfg, g_norm, head, x, toks, w0)
+    assert float(jnp.sum(nll0)) == 0.0 and float(jnp.sum(wsum0)) == 0.0
+
+
+def test_init_params_deterministic_and_counts():
+    for name, cfg in CONFIGS.items():
+        p1 = M.init_params(cfg, 0)
+        p2 = M.init_params(cfg, 0)
+        assert len(p1) == len(cfg.param_names())
+        total = sum(int(np.prod(x.shape)) for x in p1)
+        assert total == cfg.n_params()
+        for a, b in zip(p1, p2):
+            np.testing.assert_array_equal(a, b)

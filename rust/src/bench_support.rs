@@ -1,0 +1,106 @@
+//! Shared scaffolding for the bench harness (benches/bench_table*.rs) and
+//! the examples: base-model setup, grid helpers, result persistence.
+//!
+//! Every bench regenerates one of the paper's tables/figures. By default
+//! the grids are reduced so `cargo bench` completes in minutes; set
+//! `EBFT_FULL=1` for the paper-complete grids (all sparsities, both base
+//! models). Numbers land in runs/*.json and EXPERIMENTS.md quotes them.
+
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+use crate::config::FtConfig;
+use crate::coordinator::{base_model, Experiment};
+use crate::data::MarkovCorpus;
+use crate::model::ParamStore;
+use crate::runtime::Session;
+use crate::util::Json;
+
+/// Default pretraining length for base models (cached under runs/).
+pub const BASE_STEPS: usize = 400;
+/// Default eval sequences for perplexity.
+pub const EVAL_SEQS: usize = 64;
+
+pub fn full_grid() -> bool {
+    std::env::var("EBFT_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+pub struct BenchEnv {
+    pub session: Session,
+    pub corpus: MarkovCorpus,
+    pub dense: ParamStore,
+    pub runs: PathBuf,
+    /// Display label ("Lla.1"-style stand-in name).
+    pub label: String,
+}
+
+impl BenchEnv {
+    /// `model_idx` 0 → config `small` seed 0 (the "LlamaV1-7B" stand-in),
+    /// 1 → config `base` seed 1 (the "LlamaV2-7B" stand-in).
+    pub fn open(model_idx: usize) -> Result<BenchEnv> {
+        let (config, seed, label) = match model_idx {
+            0 => ("small", 0u64, "MiniLlama-A"),
+            _ => ("base", 1u64, "MiniLlama-B"),
+        };
+        let root = repo_root();
+        let dir = root.join("artifacts").join(config);
+        let session = Session::open_dir(&dir).with_context(|| {
+            format!("opening {} (run `make artifacts` first)", dir.display())
+        })?;
+        let corpus = MarkovCorpus::new(session.manifest.dims.vocab, 7);
+        let runs = root.join("runs");
+        let dense = base_model(&session, &corpus, &runs, BASE_STEPS, seed)?;
+        Ok(BenchEnv { session, corpus, dense, runs,
+                      label: label.to_string() })
+    }
+
+    pub fn experiment(&self) -> Experiment<'_> {
+        Experiment {
+            session: &self.session,
+            corpus: &self.corpus,
+            dense: &self.dense,
+            ft: FtConfig::default(),
+            eval_seqs: EVAL_SEQS,
+            impl_name: "xla".to_string(),
+        }
+    }
+
+    pub fn write_json(&self, name: &str, j: &Json) -> Result<()> {
+        let path = self.runs.join(format!("{name}.json"));
+        j.write_file(&path)?;
+        println!("[results written to {}]", path.display());
+        Ok(())
+    }
+}
+
+/// Locate the repo root (benches run from the package root already, but
+/// examples may be invoked elsewhere).
+pub fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Model list for the current grid size.
+pub fn model_indices() -> Vec<usize> {
+    if full_grid() {
+        vec![0, 1]
+    } else {
+        vec![0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repo_root_has_cargo_toml() {
+        assert!(repo_root().join("Cargo.toml").exists());
+    }
+
+    #[test]
+    fn grid_defaults_reduced() {
+        if std::env::var("EBFT_FULL").is_err() {
+            assert_eq!(model_indices(), vec![0]);
+        }
+    }
+}

@@ -1,0 +1,267 @@
+//! Topic-mixture Markov corpus — the synthetic stand-in for C4/Wikitext2.
+//!
+//! Structure (all deterministic from a seed):
+//! - `n_topics` topics; each topic owns a sparse bigram model: every token
+//!   has `SUCC` preferred successors with geometric weights.
+//! - A document picks a topic, emits tokens from the topic bigram, switches
+//!   topic with small probability, and injects uniform noise tokens.
+//! - Splits differ in *seed stream* and *mixture skew*:
+//!     Train / WikiSim : uniform topic mixture, low noise  (pretraining dist)
+//!     Calib (C4-sim)  : skewed mixture, slightly more noise (≠ eval dist,
+//!                       mirroring C4-calibration vs Wikitext2-eval)
+//!     Instruct-sim    : strongly skewed (the "Alpaca" LoRA split)
+//!
+//! An LM trained on Train reaches ppl far below uniform (≈vocab) but well
+//! above 1 — so pruning damage and EBFT recovery are both measurable.
+
+use crate::util::Pcg64;
+
+pub const SUCC: usize = 8;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Split {
+    Train,
+    WikiSim,
+    Calib,
+    InstructSim,
+}
+
+impl Split {
+    fn stream(self) -> u64 {
+        match self {
+            Split::Train => 1,
+            Split::WikiSim => 2,
+            Split::Calib => 3,
+            Split::InstructSim => 4,
+        }
+    }
+
+    fn noise(self) -> f32 {
+        match self {
+            Split::Train | Split::WikiSim => 0.02,
+            Split::Calib => 0.05,
+            Split::InstructSim => 0.04,
+        }
+    }
+
+    /// Unnormalized topic weights (skew per split).
+    fn topic_weight(self, topic: usize, n_topics: usize) -> f32 {
+        match self {
+            Split::Train | Split::WikiSim => 1.0,
+            Split::Calib => 1.0 + topic as f32 / n_topics as f32,
+            Split::InstructSim => {
+                if topic < n_topics / 2 { 2.0 } else { 0.5 }
+            }
+        }
+    }
+}
+
+pub struct MarkovCorpus {
+    pub vocab: usize,
+    pub n_topics: usize,
+    pub seed: u64,
+    /// succ[topic][token][k] → successor token id.
+    succ: Vec<Vec<[u16; SUCC]>>,
+    /// Geometric successor weights, shared across tokens.
+    succ_weights: [f32; SUCC],
+    /// Topic-switch probability per token.
+    switch_prob: f32,
+}
+
+impl MarkovCorpus {
+    pub fn new(vocab: usize, seed: u64) -> Self {
+        assert!(vocab >= 16, "vocab too small for a topic structure");
+        let n_topics = 4;
+        let mut rng = Pcg64::new(seed, 0x7031);
+        let mut succ = Vec::with_capacity(n_topics);
+        for _ in 0..n_topics {
+            let mut table = Vec::with_capacity(vocab);
+            for _ in 0..vocab {
+                let mut row = [0u16; SUCC];
+                for slot in row.iter_mut() {
+                    *slot = rng.below(vocab as u64) as u16;
+                }
+                table.push(row);
+            }
+            succ.push(table);
+        }
+        let mut succ_weights = [0.0f32; SUCC];
+        let mut w = 1.0f32;
+        for slot in succ_weights.iter_mut() {
+            *slot = w;
+            w *= 0.55;
+        }
+        Self { vocab, n_topics, seed, succ, succ_weights, switch_prob: 0.01 }
+    }
+
+    /// Deterministic sequence `index` of length `len` from `split`.
+    pub fn sequence(&self, split: Split, index: u64, len: usize) -> Vec<i32> {
+        let mut rng = Pcg64::new(self.seed ^ index.wrapping_mul(0x9e37_79b9),
+                                 split.stream());
+        let weights: Vec<f32> = (0..self.n_topics)
+            .map(|t| split.topic_weight(t, self.n_topics))
+            .collect();
+        let mut topic = rng.sample_weighted(&weights);
+        let noise = split.noise();
+        let mut out = Vec::with_capacity(len);
+        let mut cur = rng.below(self.vocab as u64) as usize;
+        out.push(cur as i32);
+        while out.len() < len {
+            if rng.next_f32() < self.switch_prob {
+                topic = rng.sample_weighted(&weights);
+            }
+            cur = if rng.next_f32() < noise {
+                rng.below(self.vocab as u64) as usize
+            } else {
+                let k = rng.sample_weighted(&self.succ_weights);
+                self.succ[topic][cur][k] as usize
+            };
+            out.push(cur as i32);
+        }
+        out
+    }
+
+    /// A batch of sequences [n, len], flattened row-major, deterministic in
+    /// (split, start_index).
+    pub fn batch(&self, split: Split, start_index: u64, n: usize,
+                 len: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(n * len);
+        for i in 0..n {
+            out.extend(self.sequence(split, start_index + i as u64, len));
+        }
+        out
+    }
+
+    /// Continue a sequence from `last` token under `topic` for `len` tokens
+    /// (no noise, no switching) — used by the zero-shot generators.
+    pub fn continuation(&self, topic: usize, last: i32, len: usize,
+                        rng: &mut Pcg64) -> Vec<i32> {
+        let mut cur = last as usize;
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            let k = rng.sample_weighted(&self.succ_weights);
+            cur = self.succ[topic][cur][k] as usize;
+            out.push(cur as i32);
+        }
+        out
+    }
+
+    /// The most likely successor of `token` under `topic`.
+    pub fn best_successor(&self, topic: usize, token: i32) -> i32 {
+        self.succ[topic][token as usize][0] as i32
+    }
+
+    pub fn n_topics(&self) -> usize {
+        self.n_topics
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_sequences() {
+        let c = MarkovCorpus::new(256, 7);
+        let a = c.sequence(Split::Train, 3, 64);
+        let b = c.sequence(Split::Train, 3, 64);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn indices_and_splits_differ() {
+        let c = MarkovCorpus::new(256, 7);
+        let a = c.sequence(Split::Train, 0, 64);
+        let b = c.sequence(Split::Train, 1, 64);
+        let d = c.sequence(Split::Calib, 0, 64);
+        assert_ne!(a, b);
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn tokens_in_range() {
+        let c = MarkovCorpus::new(128, 9);
+        for split in [Split::Train, Split::WikiSim, Split::Calib,
+                      Split::InstructSim] {
+            let s = c.sequence(split, 11, 256);
+            assert_eq!(s.len(), 256);
+            assert!(s.iter().all(|&t| (0..128).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn batch_matches_sequences() {
+        let c = MarkovCorpus::new(64, 1);
+        let b = c.batch(Split::WikiSim, 5, 3, 16);
+        assert_eq!(b.len(), 48);
+        assert_eq!(&b[16..32], c.sequence(Split::WikiSim, 6, 16).as_slice());
+    }
+
+    #[test]
+    fn corpus_is_predictable_not_uniform() {
+        // Empirical bigram entropy must sit far below uniform log2(V):
+        // the LM has something to learn, but above 0: not degenerate.
+        let c = MarkovCorpus::new(64, 3);
+        let mut counts = std::collections::HashMap::new();
+        let mut prev = None;
+        for idx in 0..200u64 {
+            for &t in &c.sequence(Split::Train, idx, 128) {
+                if let Some(p) = prev {
+                    *counts.entry((p, t)).or_insert(0usize) += 1;
+                }
+                prev = Some(t);
+            }
+            prev = None;
+        }
+        let mut ctx_totals = std::collections::HashMap::new();
+        for (&(p, _), &n) in &counts {
+            *ctx_totals.entry(p).or_insert(0usize) += n;
+        }
+        let mut h = 0.0f64;
+        let total: usize = counts.values().sum();
+        for (&(p, _), &n) in &counts {
+            let p_joint = n as f64 / total as f64;
+            let p_cond = n as f64 / ctx_totals[&p] as f64;
+            h -= p_joint * p_cond.log2();
+        }
+        assert!(h < 4.5, "conditional entropy too high: {h}");
+        assert!(h > 1.0, "conditional entropy degenerate: {h}");
+    }
+
+    #[test]
+    fn continuation_follows_topic_chain() {
+        let c = MarkovCorpus::new(64, 5);
+        let mut rng = Pcg64::seeded(1);
+        let cont = c.continuation(0, 10, 8, &mut rng);
+        assert_eq!(cont.len(), 8);
+        // each step must be one of the topic-0 successors of the previous
+        let mut prev = 10i32;
+        for &t in &cont {
+            let succ_set = &c.succ[0][prev as usize];
+            assert!(succ_set.contains(&(t as u16)));
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn calib_distribution_differs_from_train() {
+        // topic skew: top-half topics should be rarer in InstructSim
+        let c = MarkovCorpus::new(64, 2);
+        let hist = |split: Split| {
+            let mut h = vec![0usize; 64];
+            for idx in 0..100 {
+                for &t in &c.sequence(split, idx, 64) {
+                    h[t as usize] += 1;
+                }
+            }
+            h
+        };
+        let a = hist(Split::Train);
+        let b = hist(Split::InstructSim);
+        let dist: f64 = a.iter().zip(&b).map(|(&x, &y)| {
+            let (x, y) = (x as f64, y as f64);
+            (x - y).abs() / (x + y + 1.0)
+        }).sum::<f64>() / 64.0;
+        assert!(dist > 0.05, "splits indistinguishable: {dist}");
+    }
+}

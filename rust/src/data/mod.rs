@@ -1,0 +1,12 @@
+//! Synthetic data substrate (the C4 / Wikitext2 / zero-shot stand-ins).
+//!
+//! See DESIGN.md §Reproduction-bands: the paper's datasets are unavailable
+//! offline, so we synthesize a learnable topic-mixture Markov corpus and
+//! derive every split + the zero-shot probes from it.
+pub mod corpus;
+pub mod batcher;
+pub mod zeroshot;
+
+pub use batcher::Batcher;
+pub use corpus::{MarkovCorpus, Split};
+pub use zeroshot::{ZeroShotItem, ZeroShotTask, all_tasks};

@@ -1,0 +1,285 @@
+//! Synthetic zero-shot probes — the stand-ins for PIQA/ARC/HellaSwag/etc.
+//!
+//! Each task generates multiple-choice items over the Markov corpus grammar.
+//! Scoring follows the lm-eval-harness convention the paper uses: pick the
+//! choice with the lowest length-normalized NLL when appended to the prompt.
+//! Tasks span a difficulty ladder, so dense-vs-sparse accuracy gaps have
+//! room to show (Table 3's role).
+
+use crate::data::corpus::MarkovCorpus;
+use crate::util::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct ZeroShotItem {
+    pub prompt: Vec<i32>,
+    /// Choice continuations; all the same length within an item.
+    pub choices: Vec<Vec<i32>>,
+    pub correct: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ZeroShotTask {
+    /// Next-token cloze: which single token best continues the chain?
+    Cloze1,
+    /// 4-token chain continuation vs random-walk distractors.
+    Chain4,
+    /// Which 8-token continuation stays in the prompt's topic?
+    TopicMatch,
+    /// Which choice exactly repeats a 4-gram seen earlier in the prompt?
+    CopyRecall,
+    /// Corpus-ordered token pair vs the swapped pair.
+    OrderPair,
+    /// Clean topic continuation vs the same tokens shuffled.
+    NoiseDetect,
+    /// Topic from the prompt's *first half*, after a distractor middle.
+    LongRange,
+}
+
+pub const ALL_TASKS: [ZeroShotTask; 7] = [
+    ZeroShotTask::Cloze1,
+    ZeroShotTask::Chain4,
+    ZeroShotTask::TopicMatch,
+    ZeroShotTask::CopyRecall,
+    ZeroShotTask::OrderPair,
+    ZeroShotTask::NoiseDetect,
+    ZeroShotTask::LongRange,
+];
+
+pub fn all_tasks() -> &'static [ZeroShotTask] {
+    &ALL_TASKS
+}
+
+impl ZeroShotTask {
+    pub fn name(self) -> &'static str {
+        match self {
+            ZeroShotTask::Cloze1 => "cloze1",
+            ZeroShotTask::Chain4 => "chain4",
+            ZeroShotTask::TopicMatch => "topic",
+            ZeroShotTask::CopyRecall => "copy",
+            ZeroShotTask::OrderPair => "order",
+            ZeroShotTask::NoiseDetect => "noise",
+            ZeroShotTask::LongRange => "longrange",
+        }
+    }
+
+    /// Deterministic item set. Prompt+choice always fits in `seq_len`.
+    pub fn items(self, corpus: &MarkovCorpus, n: usize, seq_len: usize,
+                 seed: u64) -> Vec<ZeroShotItem> {
+        let mut rng = Pcg64::new(seed ^ (self as u64 + 1) << 8, 0x25);
+        (0..n).map(|_| self.item(corpus, seq_len, &mut rng)).collect()
+    }
+
+    fn item(self, corpus: &MarkovCorpus, seq_len: usize,
+            rng: &mut Pcg64) -> ZeroShotItem {
+        let vocab = corpus.vocab as u64;
+        let n_topics = corpus.n_topics();
+        let topic = rng.below(n_topics as u64) as usize;
+        match self {
+            ZeroShotTask::Cloze1 => {
+                let plen = (seq_len - 2).min(24);
+                let start = rng.below(vocab) as i32;
+                let mut prompt = vec![start];
+                prompt.extend(corpus.continuation(topic, start, plen - 1, rng));
+                let last = *prompt.last().unwrap();
+                let correct_tok = corpus.best_successor(topic, last);
+                let mut choices = vec![vec![correct_tok]];
+                while choices.len() < 4 {
+                    let d = rng.below(vocab) as i32;
+                    if d != correct_tok {
+                        choices.push(vec![d]);
+                    }
+                }
+                shuffle_choices(rng, prompt, choices)
+            }
+            ZeroShotTask::Chain4 => {
+                let plen = (seq_len - 5).min(20);
+                let start = rng.below(vocab) as i32;
+                let mut prompt = vec![start];
+                prompt.extend(corpus.continuation(topic, start, plen - 1, rng));
+                let last = *prompt.last().unwrap();
+                let correct = corpus.continuation(topic, last, 4, rng);
+                let mut choices = vec![correct];
+                while choices.len() < 4 {
+                    let walk: Vec<i32> =
+                        (0..4).map(|_| rng.below(vocab) as i32).collect();
+                    choices.push(walk);
+                }
+                shuffle_choices(rng, prompt, choices)
+            }
+            ZeroShotTask::TopicMatch => {
+                let plen = (seq_len - 9).min(20);
+                let start = rng.below(vocab) as i32;
+                let mut prompt = vec![start];
+                prompt.extend(corpus.continuation(topic, start, plen - 1, rng));
+                let last = *prompt.last().unwrap();
+                let correct = corpus.continuation(topic, last, 8, rng);
+                let other = (topic + 1 + rng.below(n_topics as u64 - 1) as usize)
+                    % n_topics;
+                let mut choices = vec![correct];
+                while choices.len() < 4 {
+                    choices.push(corpus.continuation(other, last, 8, rng));
+                }
+                shuffle_choices(rng, prompt, choices)
+            }
+            ZeroShotTask::CopyRecall => {
+                // prompt: A gram, filler, A-prefix → correct completes A
+                let start = rng.below(vocab) as i32;
+                let mut gram = vec![start];
+                gram.extend(corpus.continuation(topic, start, 5, rng));
+                let filler_start = rng.below(vocab) as i32;
+                let filler =
+                    corpus.continuation(topic, filler_start, 6, rng);
+                let mut prompt = gram.clone();
+                prompt.extend(&filler);
+                prompt.extend(&gram[..3]);
+                let correct = gram[3..].to_vec();
+                let mut choices = vec![correct];
+                while choices.len() < 4 {
+                    let d: Vec<i32> =
+                        (0..3).map(|_| rng.below(vocab) as i32).collect();
+                    choices.push(d);
+                }
+                shuffle_choices(rng, prompt, choices)
+            }
+            ZeroShotTask::OrderPair => {
+                let plen = (seq_len - 3).min(16);
+                let start = rng.below(vocab) as i32;
+                let mut prompt = vec![start];
+                prompt.extend(corpus.continuation(topic, start, plen - 1, rng));
+                let last = *prompt.last().unwrap();
+                let a = corpus.best_successor(topic, last);
+                let b = corpus.best_successor(topic, a);
+                shuffle_choices(rng, prompt, vec![vec![a, b], vec![b, a]])
+            }
+            ZeroShotTask::NoiseDetect => {
+                let plen = (seq_len - 9).min(16);
+                let start = rng.below(vocab) as i32;
+                let mut prompt = vec![start];
+                prompt.extend(corpus.continuation(topic, start, plen - 1, rng));
+                let last = *prompt.last().unwrap();
+                let clean = corpus.continuation(topic, last, 8, rng);
+                let mut shuffled = clean.clone();
+                // derangement-ish shuffle
+                rng.shuffle(&mut shuffled);
+                if shuffled == clean {
+                    shuffled.rotate_left(1);
+                }
+                shuffle_choices(rng, prompt, vec![clean, shuffled])
+            }
+            ZeroShotTask::LongRange => {
+                let start = rng.below(vocab) as i32;
+                let first = {
+                    let mut v = vec![start];
+                    v.extend(corpus.continuation(topic, start, 11, rng));
+                    v
+                };
+                // middle: uniform noise (topic-free)
+                let middle: Vec<i32> =
+                    (0..8).map(|_| rng.below(vocab) as i32).collect();
+                let mut prompt = first;
+                prompt.extend(&middle);
+                let last = *prompt.last().unwrap();
+                let correct = corpus.continuation(topic, last, 6, rng);
+                let other = (topic + 1) % n_topics;
+                let mut choices = vec![correct];
+                while choices.len() < 3 {
+                    choices.push(corpus.continuation(other, last, 6, rng));
+                }
+                shuffle_choices(rng, prompt, choices)
+            }
+        }
+    }
+}
+
+fn shuffle_choices(rng: &mut Pcg64, prompt: Vec<i32>,
+                   mut choices: Vec<Vec<i32>>) -> ZeroShotItem {
+    // choices[0] is correct; shuffle and track it
+    let n = choices.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let correct = order.iter().position(|&o| o == 0).unwrap();
+    let mut shuffled = Vec::with_capacity(n);
+    for &o in &order {
+        shuffled.push(std::mem::take(&mut choices[o]));
+    }
+    ZeroShotItem { prompt, choices: shuffled, correct }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> MarkovCorpus {
+        MarkovCorpus::new(64, 9)
+    }
+
+    #[test]
+    fn items_deterministic() {
+        let c = corpus();
+        for task in ALL_TASKS {
+            let a = task.items(&c, 5, 64, 1);
+            let b = task.items(&c, 5, 64, 1);
+            assert_eq!(a.len(), 5);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.prompt, y.prompt);
+                assert_eq!(x.choices, y.choices);
+                assert_eq!(x.correct, y.correct);
+            }
+        }
+    }
+
+    #[test]
+    fn items_fit_sequence_length() {
+        let c = corpus();
+        for task in ALL_TASKS {
+            for item in task.items(&c, 20, 64, 2) {
+                for choice in &item.choices {
+                    assert!(item.prompt.len() + choice.len() <= 64,
+                            "{:?} overflows", task);
+                    assert!(!choice.is_empty());
+                }
+                assert!(item.correct < item.choices.len());
+            }
+        }
+    }
+
+    #[test]
+    fn choices_equal_length_within_item() {
+        let c = corpus();
+        for task in ALL_TASKS {
+            for item in task.items(&c, 10, 64, 3) {
+                let len0 = item.choices[0].len();
+                assert!(item.choices.iter().all(|ch| ch.len() == len0));
+            }
+        }
+    }
+
+    #[test]
+    fn correct_position_varies() {
+        let c = corpus();
+        let items = ZeroShotTask::Cloze1.items(&c, 40, 64, 4);
+        let positions: std::collections::HashSet<usize> =
+            items.iter().map(|i| i.correct).collect();
+        assert!(positions.len() > 1, "correct answer never shuffled");
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let c = corpus();
+        for task in ALL_TASKS {
+            for item in task.items(&c, 10, 64, 5) {
+                assert!(item.prompt.iter().all(|&t| (0..64).contains(&t)));
+                for ch in &item.choices {
+                    assert!(ch.iter().all(|&t| (0..64).contains(&t)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn task_names_unique() {
+        let names: std::collections::HashSet<_> =
+            ALL_TASKS.iter().map(|t| t.name()).collect();
+        assert_eq!(names.len(), ALL_TASKS.len());
+    }
+}

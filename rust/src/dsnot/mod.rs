@@ -1,0 +1,209 @@
+//! DSnoT (Zhang et al. 2023d): "Dynamic Sparse no Training" — training-free
+//! fine-tuning by mask reselection.
+//!
+//! Per output column, DSnoT alternates grow/prune swaps that reduce a
+//! reconstruction-error proxy while keeping the sparsity count constant:
+//!   err_o = Σ_i (m_io − 1) · w_io · E[X_i]     (sparse − dense output on
+//!                                               the mean input)
+//!   grow  : revive the pruned weight whose restoration shrinks |err_o| most
+//!   prune : drop the kept weight with the smallest Wanda saliency whose
+//!           sign pushes err_o back toward zero (falls back to global min)
+//! The loop stops when no growing candidate improves the error or after
+//! `max_cycles` swaps — the heuristic nature of this criterion is exactly
+//! what the paper's §4.1 probes (it degrades at high sparsity).
+//!
+//! Weights are never updated — masks only (the paper's Table 6 "mask
+//! tuning" family).
+
+use anyhow::Result;
+
+use crate::masks::MaskSet;
+use crate::model::ParamStore;
+use crate::pruning::stats::collect_block_stats;
+use crate::pruning::{advance_stream, embed_stream};
+use crate::runtime::Session;
+use crate::tensor::Tensor;
+
+pub const MAX_CYCLES: usize = 30;
+
+/// Reselect the mask of one linear. Returns the new mask and #swaps.
+pub fn reselect(w: &Tensor, mask: &Tensor, means: &Tensor, norms: &Tensor,
+                max_cycles: usize) -> Result<(Tensor, usize)> {
+    let (rows, cols) = w.dims2()?;
+    let mut m = mask.clone();
+    let mut swaps = 0usize;
+
+    for c in 0..cols {
+        // err for this output on the mean input
+        let mut err = 0.0f64;
+        for r in 0..rows {
+            if m.at2(r, c) == 0.0 {
+                err -= (w.at2(r, c) * means.data[r]) as f64;
+            }
+        }
+        for _ in 0..max_cycles {
+            // --- grow: pruned weight whose revival most reduces |err| ---
+            let mut best_grow: Option<(usize, f64)> = None;
+            for r in 0..rows {
+                if m.at2(r, c) != 0.0 {
+                    continue;
+                }
+                let delta = (w.at2(r, c) * means.data[r]) as f64;
+                let gain = err.abs() - (err + delta).abs();
+                if gain > 1e-12
+                    && best_grow.map(|(_, g)| gain > g).unwrap_or(true)
+                {
+                    best_grow = Some((r, gain));
+                }
+            }
+            let Some((grow_r, _)) = best_grow else { break };
+            let err_after_grow =
+                err + (w.at2(grow_r, c) * means.data[grow_r]) as f64;
+
+            // --- prune: kept weight, smallest Wanda score, sign-aligned ---
+            let mut best_prune: Option<(usize, f32)> = None;
+            let mut fallback: Option<(usize, f32)> = None;
+            for r in 0..rows {
+                if m.at2(r, c) == 0.0 || r == grow_r {
+                    continue;
+                }
+                let saliency = w.at2(r, c).abs() * norms.data[r];
+                let delta = (w.at2(r, c) * means.data[r]) as f64;
+                // pruning r changes err by −delta; prefer moves that keep
+                // |err| from growing
+                let aligned = (err_after_grow - delta).abs()
+                    <= err_after_grow.abs() + 1e-12;
+                if aligned
+                    && best_prune.map(|(_, s)| saliency < s).unwrap_or(true)
+                {
+                    best_prune = Some((r, saliency));
+                }
+                if fallback.map(|(_, s)| saliency < s).unwrap_or(true) {
+                    fallback = Some((r, saliency));
+                }
+            }
+            let Some((prune_r, _)) = best_prune.or(fallback) else { break };
+
+            // commit only if the full swap does not grow |err| (the DSnoT
+            // stopping criterion: reconstruction error must not regress)
+            let err_after_both = err_after_grow
+                - (w.at2(prune_r, c) * means.data[prune_r]) as f64;
+            if err_after_both.abs() > err.abs() + 1e-12 {
+                break;
+            }
+            *m.at2_mut(grow_r, c) = 1.0;
+            *m.at2_mut(prune_r, c) = 0.0;
+            err = err_after_both;
+            swaps += 1;
+        }
+    }
+    Ok((m, swaps))
+}
+
+/// DSnoT over the whole model: block-by-block, statistics from the sparse
+/// activation stream, masks reselected in place.
+pub fn run(session: &Session, params: &ParamStore, masks: &mut MaskSet,
+           calib_batches: &[Vec<i32>]) -> Result<usize> {
+    let n_layers = session.manifest.dims.n_layers;
+    let mut xs = embed_stream(session, params, calib_batches)?;
+    let mut total_swaps = 0usize;
+
+    for l in 0..n_layers {
+        let stats = collect_block_stats(session, params, masks, l, &xs)?;
+        for j in 0..masks.block(l).len() {
+            let g = stats.group_for_linear(j);
+            let idx = session.manifest.block_linear_indices(l)[j];
+            let w = &params.tensors[idx];
+            let (new_mask, swaps) = reselect(w, &masks.masks[l][j],
+                                             &g.col_means(), &g.col_norms(),
+                                             MAX_CYCLES)?;
+            masks.masks[l][j] = new_mask;
+            total_swaps += swaps;
+        }
+        advance_stream(session, params, masks, l, &mut xs)?;
+    }
+    Ok(total_swaps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::masks::mask_from_topk;
+    use crate::util::Pcg64;
+
+    fn setup(rows: usize, cols: usize,
+             seed: u64) -> (Tensor, Tensor, Tensor, Tensor) {
+        let mut rng = Pcg64::seeded(seed);
+        let w = Tensor::randn(&[rows, cols], 1.0, &mut rng);
+        let means = Tensor::randn(&[rows], 1.0, &mut rng);
+        let norms = means.map(f32::abs);
+        let scores = w.map(f32::abs);
+        let mask = mask_from_topk(&scores, rows * cols / 2);
+        (w, mask, means, norms)
+    }
+
+    fn recon_err(w: &Tensor, m: &Tensor, means: &Tensor) -> f64 {
+        let (rows, cols) = w.dims2().unwrap();
+        let mut total = 0.0f64;
+        for c in 0..cols {
+            let mut err = 0.0f64;
+            for r in 0..rows {
+                if m.at2(r, c) == 0.0 {
+                    err -= (w.at2(r, c) * means.data[r]) as f64;
+                }
+            }
+            total += err.abs();
+        }
+        total
+    }
+
+    #[test]
+    fn preserves_sparsity_count() {
+        let (w, mask, means, norms) = setup(32, 8, 1);
+        let before = mask.count_nonzero();
+        let (new_mask, swaps) =
+            reselect(&w, &mask, &means, &norms, MAX_CYCLES).unwrap();
+        assert_eq!(new_mask.count_nonzero(), before);
+        assert!(swaps > 0, "no swaps on a random problem is suspicious");
+        // binary
+        assert!(new_mask.data.iter().all(|&x| x == 0.0 || x == 1.0));
+    }
+
+    #[test]
+    fn reduces_mean_reconstruction_error() {
+        let (w, mask, means, norms) = setup(64, 16, 2);
+        let before = recon_err(&w, &mask, &means);
+        let (new_mask, _) =
+            reselect(&w, &mask, &means, &norms, MAX_CYCLES).unwrap();
+        let after = recon_err(&w, &new_mask, &means);
+        assert!(after <= before, "err grew: {before} → {after}");
+    }
+
+    #[test]
+    fn dense_mask_is_noop() {
+        let (w, _, means, norms) = setup(16, 4, 3);
+        let dense = Tensor::ones(&[16, 4]);
+        let (new_mask, swaps) =
+            reselect(&w, &dense, &means, &norms, MAX_CYCLES).unwrap();
+        assert_eq!(swaps, 0);
+        assert_eq!(new_mask.count_nonzero(), 64);
+    }
+
+    #[test]
+    fn fully_pruned_column_cannot_swap() {
+        // with everything pruned there is nothing to prune back — grow then
+        // stalls on the prune side and must terminate cleanly
+        let (w, _, means, norms) = setup(8, 2, 4);
+        let empty = Tensor::zeros(&[8, 2]);
+        let (new_mask, _) =
+            reselect(&w, &empty, &means, &norms, MAX_CYCLES).unwrap();
+        assert_eq!(new_mask.count_nonzero(), 0);
+    }
+
+    #[test]
+    fn respects_max_cycles() {
+        let (w, mask, means, norms) = setup(64, 4, 5);
+        let (_, swaps) = reselect(&w, &mask, &means, &norms, 2).unwrap();
+        assert!(swaps <= 2 * 4, "swaps {swaps} exceed cap");
+    }
+}

@@ -1,0 +1,250 @@
+//! Activation cache with a memory budget and disk spill.
+//!
+//! The paper's systems claim is that EBFT "avoids the simultaneous loading
+//! of all LLM blocks onto the GPU": only one block's weights plus two
+//! activation streams (the sparse student inputs and the dense teacher
+//! targets) are resident while a block fine-tunes. This cache holds one
+//! such stream; when the configured budget is exceeded, the least-recently
+//! used batches spill to a temp file and reload on demand — at Llama-7B
+//! scale (256 × 1024 × 4096 × 4 B ≈ 4 GiB per stream) that spill path is
+//! what keeps the 16 GB-GPU claim honest.
+
+use anyhow::{bail, Context, Result};
+use std::collections::VecDeque;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+
+use crate::tensor::Tensor;
+
+enum Slot {
+    Mem(Tensor),
+    /// Spilled: byte offset in the spill file (shape is uniform).
+    Disk(u64),
+}
+
+pub struct ActivationCache {
+    shape: Vec<usize>,
+    slots: Vec<Option<Slot>>,
+    /// In-memory batch indices, LRU order (front = oldest).
+    resident: VecDeque<usize>,
+    budget_bytes: usize,
+    bytes_per_batch: usize,
+    spill_file: Option<std::fs::File>,
+    spill_path: PathBuf,
+    next_spill_off: u64,
+    pub spill_count: usize,
+    pub reload_count: usize,
+}
+
+impl ActivationCache {
+    pub fn new(n_batches: usize, shape: &[usize], budget_bytes: usize,
+               tag: &str) -> Self {
+        let bytes_per_batch = shape.iter().product::<usize>() * 4;
+        let spill_path = std::env::temp_dir().join(format!(
+            "ebft-spill-{tag}-{}.bin", std::process::id()));
+        Self {
+            shape: shape.to_vec(),
+            slots: (0..n_batches).map(|_| None).collect(),
+            resident: VecDeque::new(),
+            budget_bytes,
+            bytes_per_batch,
+            spill_file: None,
+            spill_path,
+            next_spill_off: 0,
+            spill_count: 0,
+            reload_count: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.resident.len() * self.bytes_per_batch
+    }
+
+    pub fn put(&mut self, idx: usize, t: Tensor) -> Result<()> {
+        if t.shape != self.shape {
+            bail!("cache shape mismatch: {:?} vs {:?}", t.shape, self.shape);
+        }
+        if idx >= self.slots.len() {
+            bail!("cache index {idx} out of range");
+        }
+        self.evict_if_full()?;
+        self.resident.retain(|&i| i != idx);
+        self.slots[idx] = Some(Slot::Mem(t));
+        self.resident.push_back(idx);
+        Ok(())
+    }
+
+    pub fn get(&mut self, idx: usize) -> Result<Tensor> {
+        match self.slots.get(idx) {
+            None => bail!("cache index {idx} out of range"),
+            Some(None) => bail!("cache slot {idx} never written"),
+            Some(Some(Slot::Mem(_))) => {
+                // refresh LRU position
+                self.resident.retain(|&i| i != idx);
+                self.resident.push_back(idx);
+                if let Some(Slot::Mem(t)) = &self.slots[idx] {
+                    Ok(t.clone())
+                } else {
+                    unreachable!()
+                }
+            }
+            Some(Some(Slot::Disk(off))) => {
+                let off = *off;
+                let t = self.read_spill(off)?;
+                self.reload_count += 1;
+                self.evict_if_full()?;
+                self.slots[idx] = Some(Slot::Mem(t.clone()));
+                self.resident.push_back(idx);
+                Ok(t)
+            }
+        }
+    }
+
+    fn evict_if_full(&mut self) -> Result<()> {
+        while (self.resident.len() + 1) * self.bytes_per_batch
+            > self.budget_bytes.max(self.bytes_per_batch)
+        {
+            let Some(victim) = self.resident.pop_front() else { break };
+            let slot = self.slots[victim].take();
+            if let Some(Slot::Mem(t)) = slot {
+                let off = self.write_spill(&t)?;
+                self.slots[victim] = Some(Slot::Disk(off));
+                self.spill_count += 1;
+            } else {
+                self.slots[victim] = slot;
+            }
+        }
+        Ok(())
+    }
+
+    fn ensure_file(&mut self) -> Result<&mut std::fs::File> {
+        if self.spill_file.is_none() {
+            let f = std::fs::OpenOptions::new()
+                .create(true)
+                .read(true)
+                .write(true)
+                .truncate(true)
+                .open(&self.spill_path)
+                .with_context(|| format!("opening spill file {}",
+                                         self.spill_path.display()))?;
+            self.spill_file = Some(f);
+        }
+        Ok(self.spill_file.as_mut().unwrap())
+    }
+
+    fn write_spill(&mut self, t: &Tensor) -> Result<u64> {
+        let off = self.next_spill_off;
+        self.next_spill_off += self.bytes_per_batch as u64;
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(t.data.as_ptr() as *const u8,
+                                       t.data.len() * 4)
+        };
+        let f = self.ensure_file()?;
+        f.seek(SeekFrom::Start(off))?;
+        f.write_all(bytes)?;
+        Ok(off)
+    }
+
+    fn read_spill(&mut self, off: u64) -> Result<Tensor> {
+        let numel = self.bytes_per_batch / 4;
+        let mut data = vec![0f32; numel];
+        let bytes: &mut [u8] = unsafe {
+            std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8,
+                                           numel * 4)
+        };
+        let f = self
+            .spill_file
+            .as_mut()
+            .context("spill file missing while slot says Disk")?;
+        f.seek(SeekFrom::Start(off))?;
+        f.read_exact(bytes)?;
+        Ok(Tensor::from_vec(&self.shape, data))
+    }
+}
+
+impl Drop for ActivationCache {
+    fn drop(&mut self) {
+        if self.spill_file.is_some() {
+            std::fs::remove_file(&self.spill_path).ok();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn batch(seed: u64) -> Tensor {
+        let mut rng = Pcg64::seeded(seed);
+        Tensor::randn(&[2, 4, 8], 1.0, &mut rng)
+    }
+
+    #[test]
+    fn in_memory_roundtrip() {
+        let mut c = ActivationCache::new(4, &[2, 4, 8], 1 << 20, "mem");
+        for i in 0..4 {
+            c.put(i, batch(i as u64)).unwrap();
+        }
+        for i in 0..4 {
+            assert_eq!(c.get(i).unwrap(), batch(i as u64));
+        }
+        assert_eq!(c.spill_count, 0);
+    }
+
+    #[test]
+    fn spills_under_budget_and_reloads_identically() {
+        let bytes = 2 * 4 * 8 * 4;
+        // budget for only 2 resident batches
+        let mut c = ActivationCache::new(6, &[2, 4, 8], 2 * bytes, "spill");
+        for i in 0..6 {
+            c.put(i, batch(100 + i as u64)).unwrap();
+        }
+        assert!(c.spill_count >= 4, "expected spills, got {}", c.spill_count);
+        assert!(c.resident_bytes() <= 2 * bytes);
+        // all batches still readable and bit-identical
+        for i in 0..6 {
+            assert_eq!(c.get(i).unwrap(), batch(100 + i as u64),
+                       "batch {i} corrupted by spill");
+        }
+        assert!(c.reload_count >= 4);
+    }
+
+    #[test]
+    fn overwrite_slot() {
+        let mut c = ActivationCache::new(2, &[2, 4, 8], 1 << 20, "ow");
+        c.put(0, batch(1)).unwrap();
+        c.put(0, batch(2)).unwrap();
+        assert_eq!(c.get(0).unwrap(), batch(2));
+    }
+
+    #[test]
+    fn rejects_bad_shape_and_index() {
+        let mut c = ActivationCache::new(2, &[2, 4, 8], 1 << 20, "bad");
+        assert!(c.put(0, Tensor::ones(&[1])).is_err());
+        assert!(c.put(5, batch(0)).is_err());
+        assert!(c.get(1).is_err()); // never written
+        assert!(c.get(9).is_err());
+    }
+
+    #[test]
+    fn tight_budget_still_works() {
+        // budget below one batch: always spill immediately after access
+        let bytes = 2 * 4 * 8 * 4;
+        let mut c = ActivationCache::new(3, &[2, 4, 8], bytes / 2, "tight");
+        for i in 0..3 {
+            c.put(i, batch(i as u64)).unwrap();
+        }
+        for i in 0..3 {
+            assert_eq!(c.get(i).unwrap(), batch(i as u64));
+        }
+    }
+}

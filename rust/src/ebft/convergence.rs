@@ -1,0 +1,100 @@
+//! Early-stop detector (Alg. 1's "If E is convergent: break").
+//!
+//! The paper stops a block's fine-tuning when the loss "remains unchanged or
+//! changes within a small range". We implement that as: over the last
+//! `window` epochs, the best relative improvement stayed below `tol`.
+
+#[derive(Clone, Debug)]
+pub struct ConvergenceDetector {
+    tol: f32,
+    window: usize,
+    history: Vec<f32>,
+}
+
+impl ConvergenceDetector {
+    pub fn new(tol: f32, window: usize) -> Self {
+        assert!(window >= 1);
+        Self { tol, window, history: Vec::new() }
+    }
+
+    /// Record an epoch loss; returns true once converged.
+    pub fn push(&mut self, loss: f32) -> bool {
+        self.history.push(loss);
+        self.converged()
+    }
+
+    pub fn converged(&self) -> bool {
+        if self.history.len() < self.window + 1 {
+            return false;
+        }
+        let n = self.history.len();
+        let baseline = self.history[n - self.window - 1];
+        if !baseline.is_finite() {
+            return false;
+        }
+        let best_recent = self.history[n - self.window..]
+            .iter()
+            .cloned()
+            .fold(f32::INFINITY, f32::min);
+        let improvement = (baseline - best_recent) / baseline.abs().max(1e-12);
+        improvement < self.tol
+    }
+
+    pub fn epochs(&self) -> usize {
+        self.history.len()
+    }
+
+    pub fn best(&self) -> Option<f32> {
+        self.history.iter().cloned().reduce(f32::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_improvement_keeps_going() {
+        let mut d = ConvergenceDetector::new(1e-3, 2);
+        for loss in [1.0, 0.5, 0.25, 0.12, 0.06] {
+            assert!(!d.push(loss), "converged too early at {loss}");
+        }
+    }
+
+    #[test]
+    fn plateau_converges() {
+        let mut d = ConvergenceDetector::new(1e-3, 2);
+        d.push(1.0);
+        d.push(0.5);
+        assert!(!d.push(0.4999));
+        assert!(d.push(0.4999) || d.push(0.49989));
+    }
+
+    #[test]
+    fn needs_window_plus_one() {
+        let mut d = ConvergenceDetector::new(0.5, 3);
+        assert!(!d.push(1.0));
+        assert!(!d.push(1.0));
+        assert!(!d.push(1.0));
+        // 4th sample: window satisfied, plateau detected
+        assert!(d.push(1.0));
+    }
+
+    #[test]
+    fn increasing_loss_counts_as_converged() {
+        // divergence is also a stop signal (no improvement)
+        let mut d = ConvergenceDetector::new(1e-3, 1);
+        d.push(1.0);
+        assert!(d.push(2.0));
+    }
+
+    #[test]
+    fn best_tracks_minimum() {
+        let mut d = ConvergenceDetector::new(1e-3, 1);
+        d.push(3.0);
+        d.push(1.0);
+        d.push(2.0);
+        assert_eq!(d.best(), Some(1.0));
+        assert_eq!(d.epochs(), 3);
+    }
+}

@@ -1,0 +1,271 @@
+//! The EBFT driver (Alg. 1): stream activations block-by-block, fine-tune
+//! each block's surviving weights against the dense teacher's outputs.
+//!
+//! Memory shape mirrors the paper: at any moment only one block's weights +
+//! optimizer state live on the "device", plus two activation streams
+//! (student inputs x̄ˡ⁻¹, teacher targets zˡ) held in spillable caches.
+
+use anyhow::Result;
+
+use super::cache::ActivationCache;
+use super::convergence::ConvergenceDetector;
+use crate::config::FtConfig;
+use crate::masks::MaskSet;
+use crate::model::ParamStore;
+use crate::runtime::{Session, Value};
+use crate::tensor::Tensor;
+use crate::util::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct BlockReport {
+    pub block: usize,
+    pub epochs_run: usize,
+    pub steps: usize,
+    pub first_loss: f32,
+    pub last_loss: f32,
+    pub best_loss: f32,
+    pub converged_early: bool,
+    pub secs: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct EbftReport {
+    pub per_block: Vec<BlockReport>,
+    pub total_secs: f64,
+}
+
+impl EbftReport {
+    pub fn total_steps(&self) -> usize {
+        self.per_block.iter().map(|b| b.steps).sum()
+    }
+
+    pub fn mean_block_secs(&self) -> f64 {
+        if self.per_block.is_empty() {
+            return 0.0;
+        }
+        self.per_block.iter().map(|b| b.secs).sum::<f64>()
+            / self.per_block.len() as f64
+    }
+}
+
+/// Which ft-step artifact to run: "xla" (default) or "pallas".
+pub fn ft_artifact_name(impl_name: &str) -> String {
+    match impl_name {
+        "xla" => "block_ft_step".to_string(),
+        other => format!("block_ft_step_{other}"),
+    }
+}
+
+/// Fine-tune `sparse` (with `masks`) toward `dense` on the calibration
+/// batches. Mutates `sparse` in place; returns the per-block report.
+pub fn finetune(session: &Session, dense: &ParamStore,
+                sparse: &mut ParamStore, masks: &MaskSet, cfg: &FtConfig,
+                calib_batches: &[Vec<i32>], impl_name: &str)
+                -> Result<EbftReport> {
+    let d = session.manifest.dims.clone();
+    let n_batches = calib_batches.len();
+    let act_shape = [d.batch, d.seq, d.d_model];
+    let ft_name = ft_artifact_name(impl_name);
+
+    // two activation streams in spillable caches
+    let mut teacher = ActivationCache::new(n_batches, &act_shape,
+                                           cfg.cache_budget_bytes / 2,
+                                           "teacher");
+    let mut student = ActivationCache::new(n_batches, &act_shape,
+                                           cfg.cache_budget_bytes / 2,
+                                           "student");
+    let tok_shape = [d.batch, d.seq];
+    for (i, b) in calib_batches.iter().enumerate() {
+        let x0 = session
+            .run("embed_fwd", &[
+                Value::F32(dense.get("embed")?),
+                Value::I32(&tok_shape, b),
+            ])?
+            .remove(0);
+        teacher.put(i, x0.clone())?;
+        student.put(i, x0)?;
+    }
+
+    let ones: Vec<Vec<Tensor>> = (0..d.n_layers)
+        .map(|l| {
+            session
+                .manifest
+                .block_linear_shapes(l)
+                .iter()
+                .map(|s| Tensor::ones(s))
+                .collect()
+        })
+        .collect();
+
+    let mut report = EbftReport::default();
+    let sw_total = std::time::Instant::now();
+
+    for l in 0..d.n_layers {
+        let t0 = std::time::Instant::now();
+
+        // ---- teacher targets zˡ for every batch ----
+        let mut targets = ActivationCache::new(n_batches, &act_shape,
+                                               cfg.cache_budget_bytes / 2,
+                                               &format!("targets{l}"));
+        let dense_bp = dense.block_params(&session.manifest, l);
+        for i in 0..n_batches {
+            let x = teacher.get(i)?;
+            let mut ins: Vec<Value> =
+                dense_bp.iter().map(|t| Value::F32(t)).collect();
+            for m in &ones[l] {
+                ins.push(Value::F32(m));
+            }
+            ins.push(Value::F32(&x));
+            let z = session.run("block_fwd", &ins)?.remove(0);
+            targets.put(i, z)?;
+        }
+
+        // ---- fine-tune block l ----
+        // Hot loop runs entirely on pre-built literals: block params and
+        // optimizer state circulate as the artifact's own outputs, masks
+        // and per-batch (x, target) activations are uploaded once per
+        // block. Only the two scalar inputs are rebuilt per step.
+        // (See EXPERIMENTS.md §Perf for the before/after.)
+        let mut bp_lits: Vec<xla::Literal> = sparse
+            .block_params(&session.manifest, l)
+            .into_iter()
+            .map(crate::runtime::lit_f32)
+            .collect::<Result<_>>()?;
+        let zero_lits = |shapes: &[Vec<usize>]| -> Result<Vec<xla::Literal>> {
+            shapes
+                .iter()
+                .map(|s| crate::runtime::lit_f32(&Tensor::zeros(s)))
+                .collect()
+        };
+        let bp_shapes: Vec<Vec<usize>> = session
+            .manifest
+            .block_param_indices(l)
+            .iter()
+            .map(|&i| session.manifest.param_shapes[i].clone())
+            .collect();
+        let mut m_lits = zero_lits(&bp_shapes)?;
+        let mut v_lits = zero_lits(&bp_shapes)?;
+        let mask_lits: Vec<xla::Literal> = masks
+            .block(l)
+            .iter()
+            .map(crate::runtime::lit_f32)
+            .collect::<Result<_>>()?;
+        let mut x_lits = Vec::with_capacity(n_batches);
+        let mut t_lits = Vec::with_capacity(n_batches);
+        for i in 0..n_batches {
+            x_lits.push(crate::runtime::lit_f32(&student.get(i)?)?);
+            t_lits.push(crate::runtime::lit_f32(&targets.get(i)?)?);
+        }
+
+        let mut detector =
+            ConvergenceDetector::new(cfg.converge_tol, cfg.converge_window);
+        let mut step = 0usize;
+        let mut first_loss = f32::NAN;
+        let mut last_loss = f32::NAN;
+        let mut epochs_run = 0usize;
+        let mut converged_early = false;
+        let mut order: Vec<usize> = (0..n_batches).collect();
+        let mut rng = Pcg64::new(l as u64 + 1, 0xebf7);
+
+        'epochs: for _epoch in 0..cfg.epochs {
+            rng.shuffle(&mut order);
+            let mut epoch_loss = 0.0f32;
+            for &i in &order {
+                step += 1;
+                let mut ins: Vec<Value> =
+                    bp_lits.iter().map(Value::Lit).collect();
+                ins.extend(mask_lits.iter().map(Value::Lit));
+                ins.extend(m_lits.iter().map(Value::Lit));
+                ins.extend(v_lits.iter().map(Value::Lit));
+                ins.push(Value::Scalar(step as f32));
+                ins.push(Value::Scalar(cfg.lr));
+                ins.push(Value::Lit(&x_lits[i]));
+                ins.push(Value::Lit(&t_lits[i]));
+                let mut outs = session.run_raw(&ft_name, &ins)?;
+                let loss =
+                    crate::runtime::scalar_from_lit(&outs.pop().unwrap())?;
+                v_lits = outs.split_off(18);
+                m_lits = outs.split_off(9);
+                bp_lits = outs;
+                epoch_loss += loss;
+                if first_loss.is_nan() {
+                    first_loss = loss;
+                }
+                last_loss = loss;
+            }
+            epochs_run += 1;
+            epoch_loss /= n_batches as f32;
+            if detector.push(epoch_loss) {
+                converged_early = epochs_run < cfg.epochs;
+                break 'epochs;
+            }
+        }
+
+        let bp: Vec<Tensor> = bp_lits
+            .iter()
+            .zip(&bp_shapes)
+            .map(|(lit, s)| crate::runtime::tensor_from_lit(lit, s))
+            .collect::<Result<_>>()?;
+        sparse.set_block_params(&session.manifest, l, bp)?;
+
+        // ---- advance streams ----
+        // teacher stream becomes the targets (dense outputs)
+        for i in 0..n_batches {
+            teacher.put(i, targets.get(i)?)?;
+        }
+        // student advances through the fine-tuned sparse block
+        let sp_bp = sparse.block_params(&session.manifest, l);
+        for i in 0..n_batches {
+            let x = student.get(i)?;
+            let mut ins: Vec<Value> =
+                sp_bp.iter().map(|t| Value::F32(t)).collect();
+            for m in masks.block(l) {
+                ins.push(Value::F32(m));
+            }
+            ins.push(Value::F32(&x));
+            let y = session.run("block_fwd", &ins)?.remove(0);
+            student.put(i, y)?;
+        }
+
+        report.per_block.push(BlockReport {
+            block: l,
+            epochs_run,
+            steps: step,
+            first_loss,
+            last_loss,
+            best_loss: detector.best().unwrap_or(last_loss),
+            converged_early,
+            secs: t0.elapsed().as_secs_f64(),
+        });
+    }
+
+    report.total_secs = sw_total.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_name_selection() {
+        assert_eq!(ft_artifact_name("xla"), "block_ft_step");
+        assert_eq!(ft_artifact_name("pallas"), "block_ft_step_pallas");
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let mut r = EbftReport::default();
+        assert_eq!(r.mean_block_secs(), 0.0);
+        r.per_block.push(BlockReport {
+            block: 0, epochs_run: 2, steps: 10, first_loss: 1.0,
+            last_loss: 0.1, best_loss: 0.1, converged_early: true, secs: 2.0,
+        });
+        r.per_block.push(BlockReport {
+            block: 1, epochs_run: 3, steps: 14, first_loss: 1.0,
+            last_loss: 0.2, best_loss: 0.2, converged_early: false, secs: 4.0,
+        });
+        assert_eq!(r.total_steps(), 24);
+        assert_eq!(r.mean_block_secs(), 3.0);
+    }
+}

@@ -1,0 +1,133 @@
+//! LoRA baseline (§4.4): full-model adapter fine-tuning on a large
+//! instruction-style split — the costly comparator EBFT beats ~10×.
+//!
+//! A rank-r pair (A, B) rides on every prunable linear: W̄ = W⊙M + s·A·B.
+//! Only the adapters train (the sparse base is frozen), via the
+//! `lora_train_step` artifact on full-model LM loss over the instruct-sim
+//! corpus. `merge` folds the adapters into the weights for evaluation —
+//! note the merged model is no longer sparse (LoRA's deployment downside
+//! the paper calls out).
+
+use anyhow::Result;
+
+use crate::masks::MaskSet;
+use crate::model::ParamStore;
+use crate::runtime::{Session, Value};
+use crate::tensor::Tensor;
+use crate::util::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct LoraReport {
+    pub steps: usize,
+    pub first_loss: f32,
+    pub last_loss: f32,
+    pub secs: f64,
+}
+
+/// Initialize adapters: A ~ N(0, 0.02), B = 0 (standard LoRA init — the
+/// product starts at zero so step 0 is the frozen sparse model).
+pub fn init_adapters(session: &Session, seed: u64) -> Vec<Tensor> {
+    let mut rng = Pcg64::seeded(seed ^ 0x10ca);
+    session
+        .manifest
+        .lora_shapes()
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            if i % 2 == 0 {
+                Tensor::randn(s, 0.02, &mut rng)
+            } else {
+                Tensor::zeros(s)
+            }
+        })
+        .collect()
+}
+
+/// Train adapters for `steps` optimizer steps over `batches` (cycled).
+/// Returns (trained adapters, report).
+pub fn train(session: &Session, params: &ParamStore, masks: &MaskSet,
+             batches: &[Vec<i32>], steps: usize, lr: f32, seed: u64)
+             -> Result<(Vec<Tensor>, LoraReport)> {
+    let d = session.manifest.dims.clone();
+    let tok_shape = [d.batch, d.seq];
+    let mut adapters = init_adapters(session, seed);
+    let mut m_st: Vec<Tensor> =
+        adapters.iter().map(|t| Tensor::zeros(&t.shape)).collect();
+    let mut v_st = m_st.clone();
+    let n_ad = adapters.len();
+
+    let t0 = std::time::Instant::now();
+    let mut first_loss = f32::NAN;
+    let mut last_loss = f32::NAN;
+    for step in 1..=steps {
+        let batch = &batches[(step - 1) % batches.len()];
+        let mut ins: Vec<Value> =
+            params.tensors.iter().map(Value::F32).collect();
+        for l in 0..d.n_layers {
+            for m in masks.block(l) {
+                ins.push(Value::F32(m));
+            }
+        }
+        for t in &adapters {
+            ins.push(Value::F32(t));
+        }
+        for t in &m_st {
+            ins.push(Value::F32(t));
+        }
+        for t in &v_st {
+            ins.push(Value::F32(t));
+        }
+        ins.push(Value::Scalar(step as f32));
+        ins.push(Value::Scalar(lr));
+        ins.push(Value::I32(&tok_shape, batch));
+        let mut outs = session.run("lora_train_step", &ins)?;
+        let loss = outs.pop().unwrap().item();
+        v_st = outs.split_off(2 * n_ad);
+        m_st = outs.split_off(n_ad);
+        adapters = outs;
+        if first_loss.is_nan() {
+            first_loss = loss;
+        }
+        last_loss = loss;
+    }
+    Ok((adapters, LoraReport {
+        steps,
+        first_loss,
+        last_loss,
+        secs: t0.elapsed().as_secs_f64(),
+    }))
+}
+
+/// Fold adapters into a copy of the params: W ← W⊙M + s·A·B. The returned
+/// store evaluates with *dense* masks (the merge destroys sparsity).
+pub fn merge(session: &Session, params: &ParamStore, masks: &MaskSet,
+             adapters: &[Tensor]) -> Result<ParamStore> {
+    let d = session.manifest.dims.clone();
+    let scale = d.lora_scale;
+    let mut merged = params.clone();
+    let mut ai = 0usize;
+    for l in 0..d.n_layers {
+        let idx = session.manifest.block_linear_indices(l);
+        for (j, &pi) in idx.iter().enumerate() {
+            let a = &adapters[ai];
+            let b = &adapters[ai + 1];
+            ai += 2;
+            let delta = a.matmul(b)?.scale(scale);
+            let masked = merged.tensors[pi].mul(&masks.masks[l][j]);
+            merged.tensors[pi] = masked.add(&delta);
+        }
+    }
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_fields() {
+        let r = LoraReport { steps: 10, first_loss: 5.0, last_loss: 4.0,
+                             secs: 1.0 };
+        assert!(r.last_loss < r.first_loss);
+    }
+}

@@ -1,0 +1,214 @@
+//! Mask tuning (§4.5): optimize the *positions* of the masks against the
+//! block-wise reconstruction error, keeping weights unchanged.
+//!
+//! Uses the `block_grad` artifact: the dense gradient ∂L/∂W̄ at the current
+//! masked point gives, per weight, how much revival would help (pruned
+//! positions) and how little removal would hurt (kept positions).
+//! RigL-style swaps with a decaying swap fraction, sparsity preserved per
+//! tensor throughout. The paper finds this beats DSnoT but loses to weight
+//! tuning — our Table 6 bench reproduces that ordering.
+
+use anyhow::Result;
+
+use super::cache::ActivationCache;
+use crate::config::FtConfig;
+use crate::masks::MaskSet;
+use crate::model::ParamStore;
+use crate::runtime::{Session, Value};
+use crate::tensor::Tensor;
+
+pub const INITIAL_SWAP_FRAC: f32 = 0.05;
+
+/// One mask-update step on one linear: swap `k` pruned↔kept positions.
+///
+/// Grow the pruned positions with the largest |grad| (strongest pull back),
+/// drop the kept positions with the smallest |w·grad| + |w| saliency.
+pub fn swap_step(mask: &mut Tensor, w: &Tensor, grad: &Tensor, k: usize) {
+    if k == 0 {
+        return;
+    }
+    let n = mask.numel();
+    // grow scores: |grad| at pruned, -inf at kept
+    let mut grow = vec![f32::NEG_INFINITY; n];
+    // prune scores: -saliency at kept, -inf at pruned (top-k of negated)
+    let mut prune = vec![f32::NEG_INFINITY; n];
+    for i in 0..n {
+        if mask.data[i] == 0.0 {
+            grow[i] = grad.data[i].abs();
+        } else {
+            let saliency =
+                w.data[i].abs() + (w.data[i] * grad.data[i]).abs();
+            prune[i] = -saliency;
+        }
+    }
+    let n_pruned = n - mask.count_nonzero();
+    let k = k.min(n_pruned).min(mask.count_nonzero());
+    if k == 0 {
+        return;
+    }
+    let grow_idx = Tensor::top_k_indices(&grow, k);
+    let prune_idx = Tensor::top_k_indices(&prune, k);
+    for &i in &grow_idx {
+        mask.data[i] = 1.0;
+    }
+    for &i in &prune_idx {
+        mask.data[i] = 0.0;
+    }
+}
+
+/// Mask-tune the whole model block by block. Weights never change.
+pub fn masktune(session: &Session, dense: &ParamStore, params: &ParamStore,
+                masks: &mut MaskSet, cfg: &FtConfig,
+                calib_batches: &[Vec<i32>]) -> Result<()> {
+    let d = session.manifest.dims.clone();
+    let n_batches = calib_batches.len();
+    let act_shape = [d.batch, d.seq, d.d_model];
+    let tok_shape = [d.batch, d.seq];
+
+    let mut teacher = ActivationCache::new(n_batches, &act_shape,
+                                           cfg.cache_budget_bytes / 2,
+                                           "mt-teacher");
+    let mut student = ActivationCache::new(n_batches, &act_shape,
+                                           cfg.cache_budget_bytes / 2,
+                                           "mt-student");
+    for (i, b) in calib_batches.iter().enumerate() {
+        let x0 = session
+            .run("embed_fwd", &[
+                Value::F32(dense.get("embed")?),
+                Value::I32(&tok_shape, b),
+            ])?
+            .remove(0);
+        teacher.put(i, x0.clone())?;
+        student.put(i, x0)?;
+    }
+
+    for l in 0..d.n_layers {
+        // dense targets
+        let mut targets = ActivationCache::new(n_batches, &act_shape,
+                                               cfg.cache_budget_bytes / 2,
+                                               &format!("mt-targets{l}"));
+        let ones: Vec<Tensor> = session
+            .manifest
+            .block_linear_shapes(l)
+            .iter()
+            .map(|s| Tensor::ones(s))
+            .collect();
+        let dense_bp = dense.block_params(&session.manifest, l);
+        for i in 0..n_batches {
+            let x = teacher.get(i)?;
+            let mut ins: Vec<Value> =
+                dense_bp.iter().map(|t| Value::F32(t)).collect();
+            for m in &ones {
+                ins.push(Value::F32(m));
+            }
+            ins.push(Value::F32(&x));
+            targets.put(i, session.run("block_fwd", &ins)?.remove(0))?;
+        }
+
+        let bp = params.block_params(&session.manifest, l);
+        for epoch in 0..cfg.epochs {
+            // decaying swap budget (cosine-free simple decay)
+            let frac = INITIAL_SWAP_FRAC
+                * (1.0 - epoch as f32 / cfg.epochs as f32);
+            for i in 0..n_batches {
+                let x = student.get(i)?;
+                let target = targets.get(i)?;
+                let mut ins: Vec<Value> =
+                    bp.iter().map(|t| Value::F32(t)).collect();
+                for m in masks.block(l) {
+                    ins.push(Value::F32(m));
+                }
+                ins.push(Value::F32(&x));
+                ins.push(Value::F32(&target));
+                let outs = session.run("block_grad", &ins)?;
+                // outs[0] = loss, outs[1..8] = dense grads per linear
+                for j in 0..7 {
+                    let grad = &outs[1 + j];
+                    let kept = masks.masks[l][j].count_nonzero();
+                    let k = ((kept as f32) * frac).round() as usize;
+                    let w_idx = session.manifest.block_linear_indices(l)[j];
+                    let w = &params.tensors[w_idx];
+                    swap_step(&mut masks.masks[l][j], w, grad, k);
+                }
+            }
+        }
+
+        // advance both streams
+        for i in 0..n_batches {
+            teacher.put(i, targets.get(i)?)?;
+        }
+        let bp = params.block_params(&session.manifest, l);
+        for i in 0..n_batches {
+            let x = student.get(i)?;
+            let mut ins: Vec<Value> =
+                bp.iter().map(|t| Value::F32(t)).collect();
+            for m in masks.block(l) {
+                ins.push(Value::F32(m));
+            }
+            ins.push(Value::F32(&x));
+            student.put(i, session.run("block_fwd", &ins)?.remove(0))?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::masks::mask_from_topk;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn swap_preserves_count_and_binary() {
+        let mut rng = Pcg64::seeded(1);
+        let w = Tensor::randn(&[16, 8], 1.0, &mut rng);
+        let grad = Tensor::randn(&[16, 8], 1.0, &mut rng);
+        let mut mask = mask_from_topk(&w.map(f32::abs), 64);
+        let before = mask.count_nonzero();
+        swap_step(&mut mask, &w, &grad, 10);
+        assert_eq!(mask.count_nonzero(), before);
+        assert!(mask.data.iter().all(|&x| x == 0.0 || x == 1.0));
+    }
+
+    #[test]
+    fn grows_highest_gradient_position() {
+        let w = Tensor::from_vec(&[1, 4], vec![1.0, 1.0, 1.0, 1.0]);
+        let mut mask = Tensor::from_vec(&[1, 4], vec![1.0, 1.0, 0.0, 0.0]);
+        // pruned positions 2, 3; grad largest at 3
+        let grad = Tensor::from_vec(&[1, 4], vec![0.0, 10.0, 0.1, 5.0]);
+        swap_step(&mut mask, &w, &grad, 1);
+        assert_eq!(mask.data[3], 1.0, "should revive position 3");
+        assert_eq!(mask.count_nonzero(), 2);
+    }
+
+    #[test]
+    fn prunes_lowest_saliency_position() {
+        // kept: 0 (tiny weight+grad) and 1 (big); pruned: 2, 3
+        let w = Tensor::from_vec(&[1, 4], vec![0.01, 5.0, 1.0, 1.0]);
+        let mut mask = Tensor::from_vec(&[1, 4], vec![1.0, 1.0, 0.0, 0.0]);
+        let grad = Tensor::from_vec(&[1, 4], vec![0.01, 0.0, 3.0, 0.1]);
+        swap_step(&mut mask, &w, &grad, 1);
+        assert_eq!(mask.data[0], 0.0, "tiny-saliency weight should go");
+        assert_eq!(mask.data[1], 1.0);
+        assert_eq!(mask.data[2], 1.0, "high-grad pruned should revive");
+    }
+
+    #[test]
+    fn zero_k_is_noop() {
+        let w = Tensor::ones(&[2, 2]);
+        let grad = Tensor::ones(&[2, 2]);
+        let mut mask = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 1.0, 0.0]);
+        let before = mask.clone();
+        swap_step(&mut mask, &w, &grad, 0);
+        assert_eq!(mask, before);
+    }
+
+    #[test]
+    fn dense_mask_cannot_swap() {
+        let w = Tensor::ones(&[2, 2]);
+        let grad = Tensor::ones(&[2, 2]);
+        let mut mask = Tensor::ones(&[2, 2]);
+        swap_step(&mut mask, &w, &grad, 2);
+        assert_eq!(mask.count_nonzero(), 4);
+    }
+}

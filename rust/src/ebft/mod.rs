@@ -1,0 +1,13 @@
+//! EBFT — the paper's contribution (§3.2, Alg. 1): block-by-block
+//! fine-tuning of sparse LLMs by direct backpropagation on the block-wise
+//! reconstruction error, plus the mask-tuning ablation (§4.5) and the LoRA
+//! baseline (§4.4).
+pub mod cache;
+pub mod convergence;
+pub mod finetune;
+pub mod lora;
+pub mod masktune;
+
+pub use cache::ActivationCache;
+pub use convergence::ConvergenceDetector;
+pub use finetune::{finetune, BlockReport, EbftReport};

@@ -1,0 +1,6 @@
+//! Evaluation harness: Wikitext2-style perplexity and the zero-shot suite.
+pub mod perplexity;
+pub mod zeroshot;
+
+pub use perplexity::perplexity;
+pub use zeroshot::{run_suite, TaskResult};

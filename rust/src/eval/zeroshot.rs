@@ -1,0 +1,199 @@
+//! Zero-shot suite scoring (Table 3's role): for each multiple-choice item,
+//! pick the choice with the lowest length-normalized NLL over the choice
+//! region — the lm-eval-harness convention the paper uses.
+
+use anyhow::Result;
+
+use crate::data::zeroshot::{ZeroShotItem, ZeroShotTask, ALL_TASKS};
+use crate::data::MarkovCorpus;
+use crate::masks::MaskSet;
+use crate::model::ParamStore;
+use crate::runtime::{Session, Value};
+
+#[derive(Clone, Debug)]
+pub struct TaskResult {
+    pub task: &'static str,
+    pub n_items: usize,
+    pub correct: usize,
+}
+
+impl TaskResult {
+    pub fn accuracy(&self) -> f64 {
+        100.0 * self.correct as f64 / self.n_items.max(1) as f64
+    }
+}
+
+/// A scoring row: tokens padded to S, weights marking the choice region.
+struct Row {
+    tokens: Vec<i32>,
+    weights: Vec<f32>,
+    item: usize,
+    choice: usize,
+}
+
+fn build_rows(items: &[ZeroShotItem], seq: usize) -> Vec<Row> {
+    let mut rows = Vec::new();
+    for (ii, item) in items.iter().enumerate() {
+        for (ci, choice) in item.choices.iter().enumerate() {
+            let mut tokens = item.prompt.clone();
+            let choice_start = tokens.len();
+            tokens.extend(choice);
+            assert!(tokens.len() <= seq, "item overflows sequence");
+            let used = tokens.len();
+            tokens.resize(seq, 0);
+            let mut weights = vec![0.0f32; seq];
+            for w in weights.iter_mut().take(used).skip(choice_start) {
+                *w = 1.0;
+            }
+            rows.push(Row { tokens, weights, item: ii, choice: ci });
+        }
+    }
+    rows
+}
+
+/// Score all rows: per row, weighted NLL / weight count (length-normalized).
+fn score_rows(session: &Session, params: &ParamStore, masks: &MaskSet,
+              rows: &[Row]) -> Result<Vec<f64>> {
+    let d = session.manifest.dims.clone();
+    let b = d.batch;
+    let tok_shape = [b, d.seq];
+    let mut scores = vec![0.0f64; rows.len()];
+
+    let mut start = 0usize;
+    while start < rows.len() {
+        let end = (start + b).min(rows.len());
+        // pack a [B, S] batch; pad by repeating the first row
+        let mut tokens = Vec::with_capacity(b * d.seq);
+        let mut weights = Vec::with_capacity(b * d.seq);
+        for k in 0..b {
+            let r = &rows[(start + k).min(end - 1)];
+            tokens.extend(&r.tokens);
+            weights.extend(&r.weights);
+        }
+
+        // run the decomposed path: embed → blocks → head_seq_nll
+        let x0 = session
+            .run("embed_fwd", &[
+                Value::F32(params.get("embed")?),
+                Value::I32(&tok_shape, &tokens),
+            ])?
+            .remove(0);
+        let mut x = x0;
+        for l in 0..d.n_layers {
+            let mut ins: Vec<Value> = params
+                .block_params(&session.manifest, l)
+                .into_iter()
+                .map(Value::F32)
+                .collect();
+            for m in masks.block(l) {
+                ins.push(Value::F32(m));
+            }
+            ins.push(Value::F32(&x));
+            x = session.run("block_fwd", &ins)?.remove(0);
+        }
+        let wt = crate::tensor::Tensor::from_vec(&[b, d.seq], weights);
+        let outs = session.run("head_seq_nll", &[
+            Value::F32(params.get("final.norm.g")?),
+            Value::F32(params.get("final.head")?),
+            Value::F32(&x),
+            Value::I32(&tok_shape, &tokens),
+            Value::F32(&wt),
+        ])?;
+        let nll = &outs[0];
+        let wsum = &outs[1];
+        for k in 0..(end - start) {
+            let denom = wsum.data[k].max(1e-9) as f64;
+            scores[start + k] = nll.data[k] as f64 / denom;
+        }
+        start = end;
+    }
+    Ok(scores)
+}
+
+/// Run one task: accuracy = fraction of items whose correct choice scores
+/// the lowest normalized NLL.
+pub fn run_task(session: &Session, params: &ParamStore, masks: &MaskSet,
+                corpus: &MarkovCorpus, task: ZeroShotTask, n_items: usize,
+                seed: u64) -> Result<TaskResult> {
+    let d = session.manifest.dims.clone();
+    let items = task.items(corpus, n_items, d.seq, seed);
+    let rows = build_rows(&items, d.seq);
+    let scores = score_rows(session, params, masks, &rows)?;
+
+    let mut best: Vec<(f64, usize)> =
+        vec![(f64::INFINITY, usize::MAX); items.len()];
+    for (r, &s) in rows.iter().zip(&scores) {
+        if s < best[r.item].0 {
+            best[r.item] = (s, r.choice);
+        }
+    }
+    let correct = best
+        .iter()
+        .zip(&items)
+        .filter(|((_, ch), item)| *ch == item.correct)
+        .count();
+    Ok(TaskResult { task: task.name(), n_items: items.len(), correct })
+}
+
+/// The full 7-task suite (Table 3).
+pub fn run_suite(session: &Session, params: &ParamStore, masks: &MaskSet,
+                 corpus: &MarkovCorpus, n_items: usize,
+                 seed: u64) -> Result<Vec<TaskResult>> {
+    ALL_TASKS
+        .iter()
+        .map(|&t| run_task(session, params, masks, corpus, t, n_items, seed))
+        .collect()
+}
+
+/// Mean accuracy across tasks (the paper's "Mean" column).
+pub fn mean_accuracy(results: &[TaskResult]) -> f64 {
+    if results.is_empty() {
+        return 0.0;
+    }
+    results.iter().map(|r| r.accuracy()).sum::<f64>() / results.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::zeroshot::ZeroShotItem;
+
+    #[test]
+    fn rows_mark_choice_region_only() {
+        let items = vec![ZeroShotItem {
+            prompt: vec![1, 2, 3],
+            choices: vec![vec![4, 5], vec![6, 7]],
+            correct: 1,
+        }];
+        let rows = build_rows(&items, 8);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].tokens, vec![1, 2, 3, 4, 5, 0, 0, 0]);
+        assert_eq!(rows[0].weights, vec![0., 0., 0., 1., 1., 0., 0., 0.]);
+        assert_eq!(rows[1].tokens[3..5], [6, 7]);
+        assert_eq!(rows[0].item, 0);
+        assert_eq!(rows[1].choice, 1);
+    }
+
+    #[test]
+    fn accuracy_math() {
+        let r = TaskResult { task: "x", n_items: 8, correct: 6 };
+        assert_eq!(r.accuracy(), 75.0);
+        let rs = vec![
+            TaskResult { task: "a", n_items: 4, correct: 4 },
+            TaskResult { task: "b", n_items: 4, correct: 2 },
+        ];
+        assert_eq!(mean_accuracy(&rs), 75.0);
+        assert_eq!(mean_accuracy(&[]), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn overflow_items_rejected() {
+        let items = vec![ZeroShotItem {
+            prompt: vec![0; 10],
+            choices: vec![vec![1, 2]],
+            correct: 0,
+        }];
+        build_rows(&items, 8);
+    }
+}

@@ -1,0 +1,29 @@
+//! EBFT: Effective and Block-Wise Fine-Tuning for Sparse LLMs.
+//!
+//! Full-system reproduction; see DESIGN.md for the architecture and
+//! EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! Layer map:
+//! - [`runtime`] — PJRT client; loads AOT HLO-text artifacts (L2/L1 compute)
+//! - [`model`]   — manifests, parameter store, checkpoints
+//! - [`masks`]   — sparsity mask representation + N:M helpers
+//! - [`pruning`] — magnitude / Wanda / SparseGPT / FLAP (+ N:M variants)
+//! - [`dsnot`]   — DSnoT training-free fine-tuning baseline
+//! - [`ebft`]    — the paper's contribution: block-wise fine-tuning
+//! - [`eval`]    — perplexity + zero-shot harness
+//! - [`data`]    — synthetic corpus + batcher + zero-shot probes
+//! - [`coordinator`] — experiment pipelines (prune→ft→eval) and reporting
+pub mod bench_support;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod ebft;
+pub mod eval;
+pub mod dsnot;
+pub mod masks;
+pub mod model;
+pub mod pretrain;
+pub mod pruning;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,324 @@
+//! `ebft` — CLI for the EBFT reproduction.
+//!
+//! Subcommands:
+//!   pretrain   train a dense MiniLlama base model (cached under runs/)
+//!   prune      prune a base model, save masks + weights
+//!   finetune   EBFT fine-tune a pruned model (the paper's Alg. 1)
+//!   pipeline   prune → {none|dsnot|ebft|masktune} → perplexity, one cell
+//!   eval       perplexity of a checkpoint (+ masks) on wiki-sim
+//!   zeroshot   the 7-task zero-shot suite
+//!   info       manifest / artifact summary
+//!
+//! Examples:
+//!   ebft pretrain --config small --steps 300
+//!   ebft pipeline --config small --method wanda --sparsity 0.5 --ft ebft
+//!   ebft pipeline --config small --method sparsegpt --nm 2:4 --ft dsnot
+
+use anyhow::{bail, Context, Result};
+
+use ebft::config::{FtConfig, Paths};
+use ebft::coordinator::{base_model, Experiment, FtVariant};
+use ebft::data::MarkovCorpus;
+use ebft::masks::MaskSet;
+use ebft::model::{Manifest, ParamStore};
+use ebft::pruning::{Method, Pattern};
+use ebft::runtime::Session;
+use ebft::util::metrics::fmt_ppl;
+use ebft::util::{Args, TableWriter};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_pattern(args: &Args) -> Result<Pattern> {
+    if let Some(nm) = args.get("nm") {
+        let (n, m) = nm
+            .split_once(':')
+            .context("--nm expects N:M, e.g. 2:4")?;
+        Ok(Pattern::NM(n.trim().parse()?, m.trim().parse()?))
+    } else {
+        Ok(Pattern::Unstructured(args.get_f32("sparsity", 0.5)?))
+    }
+}
+
+fn open(args: &Args) -> Result<(Session, Paths, MarkovCorpus)> {
+    let paths = Paths::from_args(args);
+    let config = args.get_or("config", "small");
+    let session = Session::open_dir(&paths.artifact_dir(config))
+        .with_context(|| format!(
+            "opening artifacts for config '{config}' (run `make artifacts`?)"))?;
+    let seed = args.get_u64("corpus-seed", 7)?;
+    let corpus = MarkovCorpus::new(session.manifest.dims.vocab, seed);
+    Ok((session, paths, corpus))
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse_env()?;
+    match args.subcommand.as_str() {
+        "pretrain" => cmd_pretrain(&args),
+        "prune" => cmd_prune(&args),
+        "finetune" => cmd_finetune(&args),
+        "pipeline" => cmd_pipeline(&args),
+        "flap" => cmd_flap(&args),
+        "eval" => cmd_eval(&args),
+        "zeroshot" => cmd_zeroshot(&args),
+        "info" => cmd_info(&args),
+        "" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try `ebft` for usage)"),
+    }
+}
+
+fn print_usage() {
+    println!("ebft — block-wise fine-tuning for sparse LLMs (reproduction)");
+    println!();
+    println!("usage: ebft <pretrain|prune|finetune|pipeline|eval|zeroshot|info> [--options]");
+    println!("common options: --config tiny|small|base  --artifacts DIR  --runs DIR");
+    println!("see README.md for full examples");
+}
+
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    let (session, paths, corpus) = open(args)?;
+    let steps = args.get_usize("steps", 300)?;
+    let lr = args.get_f32("lr", 3e-3)?;
+    let seed = args.get_u64("seed", 0)?;
+    let (params, report) = ebft::pretrain::pretrain(
+        &session, &corpus, steps, lr, seed,
+        args.get_usize("log-every", 25)?)?;
+    if let Some(last) = report.loss_curve.last() {
+        println!("loss curve:");
+        for (s, l) in &report.loss_curve {
+            println!("  step {s:>5}  loss {l:.4}");
+        }
+        println!("final loss {:.4} after {} steps ({:.1}s)", last.1,
+                 report.steps, report.secs);
+    }
+    let out = paths.runs.join(format!(
+        "{}-seed{}-steps{}.ebft", session.manifest.dims.name, seed, steps));
+    std::fs::create_dir_all(&paths.runs)?;
+    params.save(&out)?;
+    println!("saved {}", out.display());
+    Ok(())
+}
+
+fn load_base(args: &Args, session: &Session, paths: &Paths,
+             corpus: &MarkovCorpus) -> Result<ParamStore> {
+    if let Some(ckpt) = args.get("ckpt") {
+        return ParamStore::load(std::path::Path::new(ckpt),
+                                &session.manifest);
+    }
+    let steps = args.get_usize("steps", 300)?;
+    let seed = args.get_u64("seed", 0)?;
+    base_model(session, corpus, &paths.runs, steps, seed)
+}
+
+fn cmd_prune(args: &Args) -> Result<()> {
+    let (session, paths, corpus) = open(args)?;
+    let dense = load_base(args, &session, &paths, &corpus)?;
+    let method = Method::parse(args.get_or("method", "wanda"))?;
+    let pattern = parse_pattern(args)?;
+    let ft = FtConfig::from_args(args)?;
+
+    let exp = Experiment {
+        session: &session,
+        corpus: &corpus,
+        dense: &dense,
+        ft,
+        eval_seqs: args.get_usize("eval-seqs", 64)?,
+        impl_name: args.get_or("impl", "xla").to_string(),
+    };
+    let calib = exp.calib_batches();
+    let mut params = dense.clone();
+    let masks = ebft::pruning::prune_model(&session, &mut params, method,
+                                           pattern, &calib)?;
+    println!("pruned with {} at {} → realized sparsity {:.2}%",
+             method.label(), pattern.label(), 100.0 * masks.sparsity());
+    let tag = format!("{}-{}-{}", session.manifest.dims.name, method.label(),
+                      pattern.label().replace([':', '%'], "_"));
+    std::fs::create_dir_all(&paths.runs)?;
+    params.save(&paths.runs.join(format!("{tag}.ebft")))?;
+    masks.save(&paths.runs.join(format!("{tag}.masks.ebft")))?;
+    println!("saved {tag}.ebft + {tag}.masks.ebft under {}",
+             paths.runs.display());
+    Ok(())
+}
+
+fn cmd_finetune(args: &Args) -> Result<()> {
+    let (session, paths, corpus) = open(args)?;
+    let dense = load_base(args, &session, &paths, &corpus)?;
+    let sparse_path = args.get("sparse").context("--sparse CKPT required")?;
+    let masks_path = args.get("masks").context("--masks FILE required")?;
+    let mut sparse = ParamStore::load(std::path::Path::new(sparse_path),
+                                      &session.manifest)?;
+    let masks = MaskSet::load(std::path::Path::new(masks_path),
+                              &session.manifest)?;
+    let ft = FtConfig::from_args(args)?;
+    let exp = Experiment {
+        session: &session,
+        corpus: &corpus,
+        dense: &dense,
+        ft: ft.clone(),
+        eval_seqs: args.get_usize("eval-seqs", 64)?,
+        impl_name: args.get_or("impl", "xla").to_string(),
+    };
+    let calib = exp.calib_batches();
+    let report = ebft::ebft::finetune(&session, &dense, &mut sparse, &masks, &ft,
+                                &calib, &exp.impl_name)?;
+    for b in &report.per_block {
+        println!("block {:>2}: {:>3} epochs {:>4} steps  loss {:.5} → {:.5}\
+                  {}  ({:.1}s)",
+                 b.block, b.epochs_run, b.steps, b.first_loss, b.last_loss,
+                 if b.converged_early { "  [early-stop]" } else { "" },
+                 b.secs);
+    }
+    println!("total {:.1}s, mean {:.1}s/block", report.total_secs,
+             report.mean_block_secs());
+    let out = args.get_or("out", "runs/finetuned.ebft");
+    sparse.save(std::path::Path::new(out))?;
+    println!("saved {out}");
+    Ok(())
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    let (session, paths, corpus) = open(args)?;
+    let dense = load_base(args, &session, &paths, &corpus)?;
+    let method = Method::parse(args.get_or("method", "wanda"))?;
+    let pattern = parse_pattern(args)?;
+    let variant = FtVariant::parse(args.get_or("ft", "ebft"))?;
+    let exp = Experiment {
+        session: &session,
+        corpus: &corpus,
+        dense: &dense,
+        ft: FtConfig::from_args(args)?,
+        eval_seqs: args.get_usize("eval-seqs", 64)?,
+        impl_name: args.get_or("impl", "xla").to_string(),
+    };
+
+    let dense_ppl = exp.dense_ppl()?;
+    println!("dense ppl: {}", fmt_ppl(dense_ppl));
+    let base = exp.run_cell(method, pattern, FtVariant::None)?;
+    println!("{} @ {}: ppl {} (sparsity {:.1}%)", method.label(),
+             pattern.label(), fmt_ppl(base.ppl), 100.0 * base.sparsity);
+    if variant != FtVariant::None {
+        let cell = exp.run_cell(method, pattern, variant)?;
+        println!("{} {} @ {}: ppl {}  (ft {:.1}s)", method.label(),
+                 cell.variant.label(), pattern.label(), fmt_ppl(cell.ppl),
+                 cell.ft_secs);
+        if let Some(r) = &cell.ebft_report {
+            for b in &r.per_block {
+                println!("  block {}: loss {:.5} → {:.5} in {} epochs{}",
+                         b.block, b.first_loss, b.last_loss, b.epochs_run,
+                         if b.converged_early { " [early]" } else { "" });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Structured pruning (FLAP) + recovery (§4.4): `ebft flap --fraction 0.2
+/// --recover ebft|lora|none`.
+fn cmd_flap(args: &Args) -> Result<()> {
+    let (session, paths, corpus) = open(args)?;
+    let dense = load_base(args, &session, &paths, &corpus)?;
+    let fraction = args.get_f32("fraction", 0.2)?;
+    let recover = args.get_or("recover", "ebft");
+    let exp = Experiment {
+        session: &session,
+        corpus: &corpus,
+        dense: &dense,
+        ft: FtConfig::from_args(args)?,
+        eval_seqs: args.get_usize("eval-seqs", 64)?,
+        impl_name: args.get_or("impl", "xla").to_string(),
+    };
+    let dense_ppl = exp.dense_ppl()?;
+    println!("dense ppl: {}", fmt_ppl(dense_ppl));
+
+    // raw structured pruning first
+    let calib = exp.calib_batches();
+    let masks = ebft::pruning::flap::prune_model(&session, &dense, fraction,
+                                                 &calib)?;
+    println!("FLAP removed {:.1}% of prunable weights (structured)",
+             100.0 * masks.sparsity());
+    let raw_ppl = ebft::eval::perplexity(&session, &dense, &masks, &corpus,
+                                         ebft::data::Split::WikiSim,
+                                         exp.eval_seqs)?;
+    println!("pruned ppl (no recovery): {}", fmt_ppl(raw_ppl));
+
+    match recover {
+        "none" => {}
+        "ebft" | "lora" => {
+            let lora_steps = args.get_usize("lora-steps", 800)?;
+            let (params, eval_masks, secs) =
+                exp.run_structured(fraction, recover == "lora", lora_steps)?;
+            let ppl = ebft::eval::perplexity(&session, &params, &eval_masks,
+                                             &corpus,
+                                             ebft::data::Split::WikiSim,
+                                             exp.eval_seqs)?;
+            println!("{recover} recovery: ppl {} in {:.1}s", fmt_ppl(ppl),
+                     secs);
+        }
+        other => bail!("--recover must be ebft|lora|none, got '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let (session, paths, corpus) = open(args)?;
+    let params = load_base(args, &session, &paths, &corpus)?;
+    let masks = match args.get("masks") {
+        Some(p) => MaskSet::load(std::path::Path::new(p), &session.manifest)?,
+        None => MaskSet::dense(&session.manifest),
+    };
+    let n = args.get_usize("eval-seqs", 64)?;
+    let ppl = ebft::eval::perplexity(&session, &params, &masks, &corpus,
+                                     ebft::data::Split::WikiSim, n)?;
+    println!("wiki-sim perplexity over {n} seqs: {}", fmt_ppl(ppl));
+    Ok(())
+}
+
+fn cmd_zeroshot(args: &Args) -> Result<()> {
+    let (session, paths, corpus) = open(args)?;
+    let params = load_base(args, &session, &paths, &corpus)?;
+    let masks = match args.get("masks") {
+        Some(p) => MaskSet::load(std::path::Path::new(p), &session.manifest)?,
+        None => MaskSet::dense(&session.manifest),
+    };
+    let n = args.get_usize("items", 40)?;
+    let results = ebft::eval::run_suite(&session, &params, &masks, &corpus,
+                                        n, args.get_u64("task-seed", 3)?)?;
+    let mut table = TableWriter::new("zero-shot suite",
+                                     &["task", "items", "accuracy"]);
+    for r in &results {
+        table.row(&[r.task.to_string(), r.n_items.to_string(),
+                    format!("{:.2}", r.accuracy())]);
+    }
+    table.row(&["MEAN".into(), "".into(),
+                format!("{:.2}",
+                        ebft::eval::zeroshot::mean_accuracy(&results))]);
+    table.print();
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let paths = Paths::from_args(args);
+    let config = args.get_or("config", "small");
+    let manifest = Manifest::load(&paths.artifact_dir(config))?;
+    let d = &manifest.dims;
+    println!("config '{}': vocab={} d_model={} heads={} d_ff={} layers={} \
+              seq={} batch={}",
+             d.name, d.vocab, d.d_model, d.n_heads, d.d_ff, d.n_layers,
+             d.seq, d.batch);
+    println!("params: {} tensors, {} prunable weights",
+             manifest.param_names.len(), manifest.n_prunable());
+    println!("artifacts:");
+    for (name, a) in &manifest.artifacts {
+        println!("  {name:<24} {} inputs, {} outputs  ({})", a.inputs.len(),
+                 a.outputs.len(), a.file);
+    }
+    Ok(())
+}

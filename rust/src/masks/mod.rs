@@ -1,0 +1,326 @@
+//! Sparsity masks: one f32 0/1 tensor per prunable linear, per block.
+//!
+//! Layout mirrors the artifact signatures: `masks[l][j]` is the mask for
+//! block `l`'s j-th canonical linear (wq, wk, wv, wo, w_gate, w_up, w_down).
+//! N:M group semantics: along the *input* dimension (rows of our [in, out]
+//! weight layout, i.e. per output column j the input entries are grouped in
+//! runs of M).
+
+use anyhow::{bail, Result};
+use std::path::Path;
+
+use crate::model::checkpoint;
+use crate::model::manifest::{Manifest, N_BLOCK_LINEARS};
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct MaskSet {
+    /// masks[layer][linear]
+    pub masks: Vec<Vec<Tensor>>,
+}
+
+impl MaskSet {
+    /// All-ones (dense) masks.
+    pub fn dense(manifest: &Manifest) -> MaskSet {
+        let masks = (0..manifest.dims.n_layers)
+            .map(|l| {
+                manifest
+                    .block_linear_shapes(l)
+                    .iter()
+                    .map(|s| Tensor::ones(s))
+                    .collect()
+            })
+            .collect();
+        MaskSet { masks }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.masks.len()
+    }
+
+    pub fn block(&self, l: usize) -> &[Tensor] {
+        &self.masks[l]
+    }
+
+    pub fn block_mut(&mut self, l: usize) -> &mut [Tensor] {
+        &mut self.masks[l]
+    }
+
+    /// Overall sparsity: fraction of pruned weights across all linears.
+    pub fn sparsity(&self) -> f64 {
+        let mut kept = 0usize;
+        let mut total = 0usize;
+        for block in &self.masks {
+            for m in block {
+                kept += m.count_nonzero();
+                total += m.numel();
+            }
+        }
+        1.0 - kept as f64 / total as f64
+    }
+
+    /// Sparsity of one mask tensor.
+    pub fn tensor_sparsity(m: &Tensor) -> f64 {
+        1.0 - m.count_nonzero() as f64 / m.numel() as f64
+    }
+
+    /// Validate every entry is exactly 0.0 or 1.0.
+    pub fn validate_binary(&self) -> Result<()> {
+        for (l, block) in self.masks.iter().enumerate() {
+            for (j, m) in block.iter().enumerate() {
+                if m.data.iter().any(|&x| x != 0.0 && x != 1.0) {
+                    bail!("mask[{l}][{j}] has non-binary entries");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate an N:M layout: every group of `m` consecutive entries along
+    /// the input dim (per output column) keeps exactly `n`.
+    pub fn validate_nm(&self, n: usize, m: usize) -> Result<()> {
+        for (l, block) in self.masks.iter().enumerate() {
+            for (j, mask) in block.iter().enumerate() {
+                let (rows, cols) = mask.dims2()?;
+                if rows % m != 0 {
+                    bail!("mask[{l}][{j}]: {rows} rows not divisible by {m}");
+                }
+                for c in 0..cols {
+                    for g in (0..rows).step_by(m) {
+                        let kept: usize = (g..g + m)
+                            .filter(|&r| mask.at2(r, c) != 0.0)
+                            .count();
+                        if kept != n {
+                            bail!("mask[{l}][{j}] col {c} group {g}: \
+                                   kept {kept} of {m}, want {n}");
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply the masks onto a parameter store in-place (zero pruned weights).
+    pub fn apply(&self, manifest: &Manifest,
+                 params: &mut crate::model::ParamStore) -> Result<()> {
+        for l in 0..self.n_layers() {
+            let idx = manifest.block_linear_indices(l);
+            for (j, &pi) in idx.iter().enumerate() {
+                let w = &params.tensors[pi];
+                if w.shape != self.masks[l][j].shape {
+                    bail!("mask/weight shape mismatch at block {l} linear {j}");
+                }
+                params.tensors[pi] = w.mul(&self.masks[l][j]);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut entries = Vec::new();
+        for (l, block) in self.masks.iter().enumerate() {
+            for (j, m) in block.iter().enumerate() {
+                entries.push((format!("mask.{l}.{j}"), m));
+            }
+        }
+        let refs: Vec<(String, &Tensor)> =
+            entries.iter().map(|(n, t)| (n.clone(), *t)).collect();
+        checkpoint::save(path, &refs)
+    }
+
+    pub fn load(path: &Path, manifest: &Manifest) -> Result<MaskSet> {
+        let entries = checkpoint::load(path)?;
+        let expected = manifest.dims.n_layers * N_BLOCK_LINEARS;
+        if entries.len() != expected {
+            bail!("mask file has {} tensors, expected {expected}",
+                  entries.len());
+        }
+        let mut it = entries.into_iter();
+        let mut masks = Vec::with_capacity(manifest.dims.n_layers);
+        for l in 0..manifest.dims.n_layers {
+            let mut block = Vec::with_capacity(N_BLOCK_LINEARS);
+            for j in 0..N_BLOCK_LINEARS {
+                let (name, t) = it.next().unwrap();
+                if name != format!("mask.{l}.{j}") {
+                    bail!("unexpected mask entry '{name}'");
+                }
+                block.push(t);
+            }
+            masks.push(block);
+        }
+        let ms = MaskSet { masks };
+        ms.validate_binary()?;
+        Ok(ms)
+    }
+}
+
+/// Build a binary mask keeping the `k` highest-scoring entries of `scores`.
+pub fn mask_from_topk(scores: &Tensor, k: usize) -> Tensor {
+    let idx = Tensor::top_k_indices(&scores.data, k);
+    let mut m = Tensor::zeros(&scores.shape);
+    for i in idx {
+        m.data[i] = 1.0;
+    }
+    m
+}
+
+/// Per-output-column top-k (Wanda's comparison group): for each column j,
+/// keep the `k` highest-scoring input rows.
+pub fn mask_from_topk_per_col(scores: &Tensor, k: usize) -> Result<Tensor> {
+    let (rows, cols) = scores.dims2()?;
+    let mut m = Tensor::zeros(&scores.shape);
+    let mut col_scores = vec![0.0f32; rows];
+    for c in 0..cols {
+        for r in 0..rows {
+            col_scores[r] = scores.at2(r, c);
+        }
+        for r in Tensor::top_k_indices(&col_scores, k) {
+            *m.at2_mut(r, c) = 1.0;
+        }
+    }
+    Ok(m)
+}
+
+/// N:M mask: within each group of `m_group` consecutive input rows (per
+/// output column), keep the `n_keep` highest-scoring.
+pub fn mask_from_nm(scores: &Tensor, n_keep: usize,
+                    m_group: usize) -> Result<Tensor> {
+    let (rows, cols) = scores.dims2()?;
+    if rows % m_group != 0 {
+        bail!("{rows} rows not divisible by N:M group {m_group}");
+    }
+    let mut m = Tensor::zeros(&scores.shape);
+    let mut group = vec![0.0f32; m_group];
+    for c in 0..cols {
+        for g in (0..rows).step_by(m_group) {
+            for (i, slot) in group.iter_mut().enumerate() {
+                *slot = scores.at2(g + i, c);
+            }
+            for i in Tensor::top_k_indices(&group, n_keep) {
+                *m.at2_mut(g + i, c) = 1.0;
+            }
+        }
+    }
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::tests::fake_manifest;
+    use crate::util::Pcg64;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("ebft-masks-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn dense_has_zero_sparsity() {
+        let m = fake_manifest(&tmpdir("dense"));
+        let ms = MaskSet::dense(&m);
+        assert_eq!(ms.sparsity(), 0.0);
+        ms.validate_binary().unwrap();
+        assert_eq!(ms.n_layers(), 2);
+        assert_eq!(ms.block(0).len(), 7);
+    }
+
+    #[test]
+    fn topk_mask_exact_k() {
+        let mut rng = Pcg64::seeded(1);
+        let scores = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        for k in [0, 1, 13, 64] {
+            let m = mask_from_topk(&scores, k);
+            assert_eq!(m.count_nonzero(), k.min(64));
+        }
+    }
+
+    #[test]
+    fn topk_keeps_largest() {
+        let scores = Tensor::from_vec(&[1, 4], vec![0.1, 5.0, -3.0, 2.0]);
+        let m = mask_from_topk(&scores, 2);
+        assert_eq!(m.data, vec![0.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn per_col_topk() {
+        let mut rng = Pcg64::seeded(2);
+        let scores = Tensor::randn(&[16, 5], 1.0, &mut rng);
+        let m = mask_from_topk_per_col(&scores, 4).unwrap();
+        for c in 0..5 {
+            let kept: usize =
+                (0..16).filter(|&r| m.at2(r, c) != 0.0).count();
+            assert_eq!(kept, 4);
+        }
+    }
+
+    #[test]
+    fn nm_mask_valid() {
+        let mut rng = Pcg64::seeded(3);
+        let m_manifest = fake_manifest(&tmpdir("nm"));
+        let mut ms = MaskSet::dense(&m_manifest);
+        for l in 0..ms.n_layers() {
+            for j in 0..7 {
+                let shape = ms.masks[l][j].shape.clone();
+                let scores = Tensor::randn(&shape, 1.0, &mut rng);
+                ms.masks[l][j] = mask_from_nm(&scores, 2, 4).unwrap();
+            }
+        }
+        ms.validate_nm(2, 4).unwrap();
+        assert!((ms.sparsity() - 0.5).abs() < 1e-9);
+        // 1:4 should fail 2:4 validation
+        let scores = Tensor::randn(&[4, 4], 1.0, &mut rng);
+        ms.masks[0][0] = mask_from_nm(&scores, 1, 4).unwrap();
+        assert!(ms.validate_nm(2, 4).is_err());
+    }
+
+    #[test]
+    fn apply_zeroes_pruned_weights() {
+        let manifest = fake_manifest(&tmpdir("apply"));
+        let mut rng = Pcg64::seeded(4);
+        // random params
+        let tensors: Vec<Tensor> = manifest.param_shapes.iter()
+            .map(|s| Tensor::randn(s, 1.0, &mut rng)).collect();
+        let mut ps = crate::model::ParamStore::new(
+            manifest.param_names.clone(), tensors).unwrap();
+        let mut ms = MaskSet::dense(&manifest);
+        ms.masks[0][0] = Tensor::zeros(&[4, 4]);
+        ms.apply(&manifest, &mut ps).unwrap();
+        assert_eq!(ps.get("blocks.0.attn.wq").unwrap().count_nonzero(), 0);
+        assert!(ps.get("blocks.0.attn.wk").unwrap().count_nonzero() > 0);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let manifest = fake_manifest(&tmpdir("saveload"));
+        let mut rng = Pcg64::seeded(5);
+        let mut ms = MaskSet::dense(&manifest);
+        for l in 0..ms.n_layers() {
+            for j in 0..7 {
+                let shape = ms.masks[l][j].shape.clone();
+                let scores = Tensor::randn(&shape, 1.0, &mut rng);
+                let k = scores.numel() / 2;
+                ms.masks[l][j] = mask_from_topk(&scores, k);
+            }
+        }
+        let path = manifest.dir.join("masks.ebft");
+        ms.save(&path).unwrap();
+        let ms2 = MaskSet::load(&path, &manifest).unwrap();
+        for l in 0..2 {
+            for j in 0..7 {
+                assert_eq!(ms.masks[l][j], ms2.masks[l][j]);
+            }
+        }
+    }
+
+    #[test]
+    fn validate_binary_rejects() {
+        let manifest = fake_manifest(&tmpdir("binary"));
+        let mut ms = MaskSet::dense(&manifest);
+        ms.masks[1][3].data[0] = 0.5;
+        assert!(ms.validate_binary().is_err());
+    }
+}

@@ -1,0 +1,170 @@
+//! `.ebft` checkpoint format — named-tensor container (params, masks, …).
+//!
+//! Layout (little-endian):
+//!   magic   8 bytes  "EBFTCKPT"
+//!   version u32      (1)
+//!   count   u32
+//!   per entry:
+//!     name_len u32, name bytes (utf-8)
+//!     rank u32, dims u32 × rank
+//!     data f32 × numel
+//!
+//! The format is order-preserving: tensors round-trip in the exact order
+//! they were written (the canonical parameter order matters downstream).
+
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 8] = b"EBFTCKPT";
+const VERSION: u32 = 1;
+
+pub fn save(path: &Path, entries: &[(String, &Tensor)]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(entries.len() as u32).to_le_bytes())?;
+    for (name, t) in entries {
+        let nb = name.as_bytes();
+        w.write_all(&(nb.len() as u32).to_le_bytes())?;
+        w.write_all(nb)?;
+        w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        for &d in &t.shape {
+            w.write_all(&(d as u32).to_le_bytes())?;
+        }
+        // bulk write the f32 payload
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(t.data.as_ptr() as *const u8,
+                                       t.data.len() * 4)
+        };
+        w.write_all(bytes)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<Vec<(String, Tensor)>> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not an EBFT checkpoint", path.display());
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let count = read_u32(&mut r)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u32(&mut r)? as usize;
+        if name_len > 4096 {
+            bail!("corrupt checkpoint: name length {name_len}");
+        }
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let rank = read_u32(&mut r)? as usize;
+        if rank > 8 {
+            bail!("corrupt checkpoint: rank {rank}");
+        }
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(read_u32(&mut r)? as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let mut data = vec![0f32; numel];
+        let bytes: &mut [u8] = unsafe {
+            std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8,
+                                           numel * 4)
+        };
+        r.read_exact(bytes)?;
+        out.push((String::from_utf8(name)?, Tensor::from_vec(&shape, data)));
+    }
+    Ok(out)
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut buf = [0u8; 4];
+    r.read_exact(&mut buf)?;
+    Ok(u32::from_le_bytes(buf))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn tmpfile(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("ebft-ckpt-{tag}-{}.ebft",
+                                          std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Pcg64::seeded(1);
+        let a = Tensor::randn(&[3, 4], 1.0, &mut rng);
+        let b = Tensor::randn(&[5], 1.0, &mut rng);
+        let s = Tensor::scalar(7.0);
+        let path = tmpfile("rt");
+        save(&path, &[("w".into(), &a), ("g".into(), &b),
+                      ("step".into(), &s)]).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.len(), 3);
+        assert_eq!(loaded[0].0, "w");
+        assert_eq!(loaded[0].1, a);
+        assert_eq!(loaded[1].1, b);
+        assert_eq!(loaded[2].1.item(), 7.0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn order_preserved() {
+        let t = Tensor::ones(&[2]);
+        let names = ["z", "a", "m"];
+        let path = tmpfile("order");
+        let entries: Vec<(String, &Tensor)> =
+            names.iter().map(|n| (n.to_string(), &t)).collect();
+        save(&path, &entries).unwrap();
+        let loaded = load(&path).unwrap();
+        let got: Vec<&str> = loaded.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(got, names);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmpfile("bad");
+        std::fs::write(&path, b"NOTACKPTxxxxxxx").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let mut rng = Pcg64::seeded(2);
+        let a = Tensor::randn(&[64, 64], 1.0, &mut rng);
+        let path = tmpfile("trunc");
+        save(&path, &[("w".into(), &a)]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_checkpoint() {
+        let path = tmpfile("empty");
+        save(&path, &[]).unwrap();
+        assert!(load(&path).unwrap().is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,335 @@
+//! Artifact manifest — the contract between aot.py (L2) and the coordinator.
+//!
+//! `artifacts/<cfg>/manifest.json` records the model dims, the canonical
+//! parameter order, and for every artifact the exact input/output tensor
+//! names, shapes and dtypes. The Rust side is fully manifest-driven: no
+//! model dimension is hard-coded anywhere in this crate.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::Json;
+
+pub const N_BLOCK_PARAMS: usize = 9;
+pub const N_BLOCK_LINEARS: usize = 7;
+
+#[derive(Clone, Debug)]
+pub struct ModelDims {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub lora_rank: usize,
+    pub lora_scale: f32,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub dims: ModelDims,
+    pub param_names: Vec<String>,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub block_linears: Vec<String>,
+    pub block_norms: Vec<String>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    j.as_arr()?
+        .iter()
+        .map(|e| {
+            Ok(TensorSpec {
+                name: e.get("name")?.as_str()?.to_string(),
+                shape: e.get("shape")?.as_shape()?,
+                dtype: e.get("dtype")?.as_str()?.to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))?;
+        let c = j.get("config")?;
+        let dims = ModelDims {
+            name: c.get("name")?.as_str()?.to_string(),
+            vocab: c.get("vocab")?.as_usize()?,
+            d_model: c.get("d_model")?.as_usize()?,
+            n_heads: c.get("n_heads")?.as_usize()?,
+            head_dim: c.get("head_dim")?.as_usize()?,
+            d_ff: c.get("d_ff")?.as_usize()?,
+            n_layers: c.get("n_layers")?.as_usize()?,
+            seq: c.get("seq")?.as_usize()?,
+            batch: c.get("batch")?.as_usize()?,
+            lora_rank: c.get("lora_rank")?.as_usize()?,
+            lora_scale: c.get("lora_scale")?.as_f64()? as f32,
+        };
+        let param_names = j
+            .get("param_names")?
+            .as_arr()?
+            .iter()
+            .map(|x| Ok(x.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+        let param_shapes = j
+            .get("param_shapes")?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_shape())
+            .collect::<Result<Vec<_>>>()?;
+        if param_names.len() != param_shapes.len() {
+            bail!("param names/shapes length mismatch");
+        }
+        let strings = |key: &str| -> Result<Vec<String>> {
+            j.get(key)?
+                .as_arr()?
+                .iter()
+                .map(|x| Ok(x.as_str()?.to_string()))
+                .collect()
+        };
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.get("artifacts")?.as_obj()? {
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: a.get("file")?.as_str()?.to_string(),
+                    inputs: specs(a.get("inputs")?)
+                        .with_context(|| format!("artifact {name} inputs"))?,
+                    outputs: specs(a.get("outputs")?)
+                        .with_context(|| format!("artifact {name} outputs"))?,
+                },
+            );
+        }
+        let m = Manifest {
+            dir: dir.to_path_buf(),
+            dims,
+            param_names,
+            param_shapes,
+            block_linears: strings("block_linears")?,
+            block_norms: strings("block_norms")?,
+            artifacts,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        let expected = 1 + self.dims.n_layers * N_BLOCK_PARAMS + 2;
+        if self.param_names.len() != expected {
+            bail!("expected {expected} params, manifest has {}",
+                  self.param_names.len());
+        }
+        if self.block_linears.len() != N_BLOCK_LINEARS {
+            bail!("expected {N_BLOCK_LINEARS} block linears");
+        }
+        for required in ["embed_fwd", "block_fwd", "block_ft_step",
+                         "block_grad", "block_stats", "head_loss",
+                         "head_seq_nll", "lm_loss", "lm_train_step"] {
+            if !self.artifacts.contains_key(required) {
+                bail!("manifest missing required artifact '{required}'");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("no artifact '{name}' in manifest"))
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    /// Flat parameter index of `blocks.{layer}.{linear}`.
+    pub fn param_index(&self, name: &str) -> Result<usize> {
+        self.param_names
+            .iter()
+            .position(|n| n == name)
+            .with_context(|| format!("no param '{name}'"))
+    }
+
+    /// Indices of the 9 canonical params of block `l`.
+    pub fn block_param_indices(&self, l: usize) -> Vec<usize> {
+        let start = 1 + l * N_BLOCK_PARAMS;
+        (start..start + N_BLOCK_PARAMS).collect()
+    }
+
+    /// Indices of the 7 prunable linears of block `l`.
+    pub fn block_linear_indices(&self, l: usize) -> Vec<usize> {
+        self.block_param_indices(l)[..N_BLOCK_LINEARS].to_vec()
+    }
+
+    /// Shapes of the 7 prunable linears of block `l`.
+    pub fn block_linear_shapes(&self, l: usize) -> Vec<Vec<usize>> {
+        self.block_linear_indices(l)
+            .iter()
+            .map(|&i| self.param_shapes[i].clone())
+            .collect()
+    }
+
+    /// Total number of prunable weights (the `N` of Eq. 2, across blocks).
+    pub fn n_prunable(&self) -> usize {
+        (0..self.dims.n_layers)
+            .flat_map(|l| self.block_linear_shapes(l))
+            .map(|s| s.iter().product::<usize>())
+            .sum()
+    }
+
+    /// LoRA adapter shapes, flat order matching the lora artifacts.
+    pub fn lora_shapes(&self) -> Vec<Vec<usize>> {
+        let r = self.dims.lora_rank;
+        let mut out = Vec::new();
+        for l in 0..self.dims.n_layers {
+            for s in self.block_linear_shapes(l) {
+                out.push(vec![s[0], r]);
+                out.push(vec![r, s[1]]);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+
+    /// Build a synthetic manifest JSON for tests (2 layers, tiny dims).
+    pub fn fake_manifest_json() -> String {
+        let mut arts = String::new();
+        for name in ["embed_fwd", "block_fwd", "block_ft_step", "block_grad",
+                     "block_stats", "head_loss", "head_seq_nll", "lm_loss",
+                     "lm_train_step"] {
+            arts.push_str(&format!(
+                r#""{name}": {{"file": "{name}.hlo.txt",
+                   "inputs": [{{"name": "x", "shape": [2, 4], "dtype": "f32"}}],
+                   "outputs": [{{"name": "y", "shape": [2, 4], "dtype": "f32"}}]}},"#
+            ));
+        }
+        arts.pop(); // trailing comma
+        let mut names = vec!["\"embed\"".to_string()];
+        let mut shapes = vec!["[8, 4]".to_string()];
+        for l in 0..2 {
+            for lin in ["attn.wq", "attn.wk", "attn.wv", "attn.wo",
+                        "mlp.w_gate", "mlp.w_up", "mlp.w_down"] {
+                names.push(format!("\"blocks.{l}.{lin}\""));
+                shapes.push(if lin.starts_with("mlp") {
+                    "[4, 6]".to_string()
+                } else {
+                    "[4, 4]".to_string()
+                });
+            }
+            for n in ["ln1.g", "ln2.g"] {
+                names.push(format!("\"blocks.{l}.{n}\""));
+                shapes.push("[4]".to_string());
+            }
+        }
+        names.push("\"final.norm.g\"".to_string());
+        shapes.push("[4]".to_string());
+        names.push("\"final.head\"".to_string());
+        shapes.push("[4, 8]".to_string());
+        format!(
+            r#"{{"config": {{"name": "fake", "vocab": 8, "d_model": 4,
+                "n_heads": 2, "head_dim": 2, "d_ff": 6, "n_layers": 2,
+                "seq": 4, "batch": 2, "lora_rank": 2, "lora_scale": 2.0,
+                "beta1": 0.9, "beta2": 0.999, "eps": 1e-8}},
+               "param_names": [{}],
+               "param_shapes": [{}],
+               "block_linears": ["attn.wq", "attn.wk", "attn.wv", "attn.wo",
+                                 "mlp.w_gate", "mlp.w_up", "mlp.w_down"],
+               "block_norms": ["ln1.g", "ln2.g"],
+               "artifacts": {{{arts}}}}}"#,
+            names.join(","),
+            shapes.join(","),
+        )
+    }
+
+    pub fn fake_manifest(dir: &Path) -> Manifest {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), fake_manifest_json())
+            .unwrap();
+        Manifest::load(dir).unwrap()
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ebft-test-{tag}-{}",
+                                                  std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn loads_and_validates() {
+        let m = fake_manifest(&tmpdir("manifest"));
+        assert_eq!(m.dims.n_layers, 2);
+        assert_eq!(m.param_names.len(), 1 + 2 * 9 + 2);
+        assert_eq!(m.param_index("embed").unwrap(), 0);
+        assert_eq!(m.param_index("blocks.1.attn.wq").unwrap(), 10);
+        assert!(m.param_index("nope").is_err());
+    }
+
+    #[test]
+    fn block_indices() {
+        let m = fake_manifest(&tmpdir("manifest2"));
+        assert_eq!(m.block_param_indices(0), (1..10).collect::<Vec<_>>());
+        assert_eq!(m.block_linear_indices(1), (10..17).collect::<Vec<_>>());
+        let shapes = m.block_linear_shapes(0);
+        assert_eq!(shapes[0], vec![4, 4]);
+        assert_eq!(shapes[4], vec![4, 6]);
+    }
+
+    #[test]
+    fn prunable_count() {
+        let m = fake_manifest(&tmpdir("manifest3"));
+        // per block: 4·(4·4) + 2·(4·6) + 1·(6·4) = 64 + 48 + 24 = 136
+        assert_eq!(m.n_prunable(), 2 * 136);
+    }
+
+    #[test]
+    fn lora_shapes_pair_up() {
+        let m = fake_manifest(&tmpdir("manifest4"));
+        let ls = m.lora_shapes();
+        assert_eq!(ls.len(), 2 * 7 * 2);
+        assert_eq!(ls[0], vec![4, 2]); // A for wq
+        assert_eq!(ls[1], vec![2, 4]); // B for wq
+        assert_eq!(ls[8], vec![4, 2]); // A for w_gate
+        assert_eq!(ls[9], vec![2, 6]); // B for w_gate
+    }
+
+    #[test]
+    fn artifact_lookup() {
+        let m = fake_manifest(&tmpdir("manifest5"));
+        let a = m.artifact("block_fwd").unwrap();
+        assert_eq!(a.inputs[0].numel(), 8);
+        assert!(m.artifact("missing").is_err());
+        assert!(m.artifact_path("lm_loss").unwrap().ends_with("lm_loss.hlo.txt"));
+    }
+}

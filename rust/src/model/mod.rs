@@ -1,0 +1,7 @@
+//! Model-side plumbing: artifact manifests, parameter store, checkpoints.
+pub mod checkpoint;
+pub mod manifest;
+pub mod params;
+
+pub use manifest::{ArtifactSpec, Manifest, ModelDims, TensorSpec};
+pub use params::ParamStore;

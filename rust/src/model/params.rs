@@ -1,0 +1,236 @@
+//! Parameter store: the model's named tensors in canonical (manifest) order.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::checkpoint;
+use super::manifest::{Manifest, N_BLOCK_PARAMS};
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    pub names: Vec<String>,
+    pub tensors: Vec<Tensor>,
+    index: HashMap<String, usize>,
+}
+
+impl ParamStore {
+    pub fn new(names: Vec<String>, tensors: Vec<Tensor>) -> Result<Self> {
+        if names.len() != tensors.len() {
+            bail!("names/tensors length mismatch");
+        }
+        let index = names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.clone(), i))
+            .collect::<HashMap<_, _>>();
+        if index.len() != names.len() {
+            bail!("duplicate parameter names");
+        }
+        Ok(Self { names, tensors, index })
+    }
+
+    /// Load the AOT-exported init weights (`init_params.bin`: raw f32 LE in
+    /// canonical order, shapes from the manifest).
+    pub fn from_init_bin(manifest: &Manifest) -> Result<Self> {
+        let path = manifest.dir.join("init_params.bin");
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let total: usize =
+            manifest.param_shapes.iter().map(|s| s.iter().product::<usize>())
+                .sum();
+        if bytes.len() != total * 4 {
+            bail!("init_params.bin has {} bytes, expected {}", bytes.len(),
+                  total * 4);
+        }
+        let mut tensors = Vec::with_capacity(manifest.param_shapes.len());
+        let mut off = 0usize;
+        for shape in &manifest.param_shapes {
+            let n: usize = shape.iter().product();
+            let mut data = vec![0f32; n];
+            for (i, chunk) in bytes[off..off + 4 * n].chunks_exact(4)
+                .enumerate() {
+                data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+            }
+            off += 4 * n;
+            tensors.push(Tensor::from_vec(shape, data));
+        }
+        Self::new(manifest.param_names.clone(), tensors)
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        let i = *self
+            .index
+            .get(name)
+            .with_context(|| format!("no param '{name}'"))?;
+        Ok(&self.tensors[i])
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) -> Result<()> {
+        let i = *self
+            .index
+            .get(name)
+            .with_context(|| format!("no param '{name}'"))?;
+        if self.tensors[i].shape != t.shape {
+            bail!("shape mismatch for '{name}': {:?} vs {:?}",
+                  self.tensors[i].shape, t.shape);
+        }
+        self.tensors[i] = t;
+        Ok(())
+    }
+
+    /// The 9 canonical tensors of block `l` (cloned views are cheap enough
+    /// at MiniLlama scale; the hot path uploads literals anyway).
+    pub fn block_params(&self, manifest: &Manifest, l: usize) -> Vec<&Tensor> {
+        manifest
+            .block_param_indices(l)
+            .iter()
+            .map(|&i| &self.tensors[i])
+            .collect()
+    }
+
+    pub fn set_block_params(&mut self, manifest: &Manifest, l: usize,
+                            new: Vec<Tensor>) -> Result<()> {
+        let idx = manifest.block_param_indices(l);
+        if new.len() != N_BLOCK_PARAMS {
+            bail!("expected {N_BLOCK_PARAMS} block tensors, got {}",
+                  new.len());
+        }
+        for (slot, t) in idx.into_iter().zip(new) {
+            if self.tensors[slot].shape != t.shape {
+                bail!("block param {slot} shape mismatch");
+            }
+            self.tensors[slot] = t;
+        }
+        Ok(())
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let entries: Vec<(String, &Tensor)> = self
+            .names
+            .iter()
+            .cloned()
+            .zip(self.tensors.iter())
+            .collect();
+        checkpoint::save(path, &entries)
+    }
+
+    pub fn load(path: &Path, manifest: &Manifest) -> Result<Self> {
+        let entries = checkpoint::load(path)?;
+        let names: Vec<String> = entries.iter().map(|(n, _)| n.clone())
+            .collect();
+        if names != manifest.param_names {
+            bail!("checkpoint params don't match manifest (got {} tensors, \
+                   expected {}; first diff: {:?})",
+                  names.len(), manifest.param_names.len(),
+                  names.iter().zip(&manifest.param_names)
+                      .find(|(a, b)| a != b));
+        }
+        let tensors: Vec<Tensor> =
+            entries.into_iter().map(|(_, t)| t).collect();
+        for (t, s) in tensors.iter().zip(&manifest.param_shapes) {
+            if &t.shape != s {
+                bail!("checkpoint tensor shape mismatch: {:?} vs {:?}",
+                      t.shape, s);
+            }
+        }
+        Self::new(names, tensors)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::tests::fake_manifest;
+    use crate::util::Pcg64;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("ebft-params-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn write_init_bin(m: &Manifest, seed: u64) {
+        let mut rng = Pcg64::seeded(seed);
+        let total: usize = m.param_shapes.iter()
+            .map(|s| s.iter().product::<usize>()).sum();
+        let mut bytes = Vec::with_capacity(total * 4);
+        for _ in 0..total {
+            bytes.extend(rng.next_normal().to_le_bytes());
+        }
+        std::fs::write(m.dir.join("init_params.bin"), bytes).unwrap();
+    }
+
+    #[test]
+    fn init_bin_roundtrip() {
+        let m = fake_manifest(&tmpdir("init"));
+        write_init_bin(&m, 3);
+        let ps = ParamStore::from_init_bin(&m).unwrap();
+        assert_eq!(ps.len(), m.param_names.len());
+        assert_eq!(ps.get("embed").unwrap().shape, vec![8, 4]);
+        assert_eq!(ps.n_params(),
+                   m.param_shapes.iter()
+                       .map(|s| s.iter().product::<usize>()).sum::<usize>());
+    }
+
+    #[test]
+    fn init_bin_size_checked() {
+        let m = fake_manifest(&tmpdir("initbad"));
+        std::fs::write(m.dir.join("init_params.bin"), [0u8; 12]).unwrap();
+        assert!(ParamStore::from_init_bin(&m).is_err());
+    }
+
+    #[test]
+    fn get_set() {
+        let m = fake_manifest(&tmpdir("getset"));
+        write_init_bin(&m, 4);
+        let mut ps = ParamStore::from_init_bin(&m).unwrap();
+        let t = Tensor::ones(&[4, 4]);
+        ps.set("blocks.0.attn.wq", t.clone()).unwrap();
+        assert_eq!(ps.get("blocks.0.attn.wq").unwrap(), &t);
+        assert!(ps.set("blocks.0.attn.wq", Tensor::ones(&[2, 2])).is_err());
+        assert!(ps.get("nope").is_err());
+    }
+
+    #[test]
+    fn block_param_roundtrip() {
+        let m = fake_manifest(&tmpdir("blockp"));
+        write_init_bin(&m, 5);
+        let mut ps = ParamStore::from_init_bin(&m).unwrap();
+        let bp: Vec<Tensor> =
+            ps.block_params(&m, 1).into_iter().cloned().collect();
+        assert_eq!(bp.len(), 9);
+        let newbp: Vec<Tensor> = bp.iter().map(|t| t.scale(2.0)).collect();
+        ps.set_block_params(&m, 1, newbp.clone()).unwrap();
+        let got: Vec<Tensor> =
+            ps.block_params(&m, 1).into_iter().cloned().collect();
+        assert_eq!(got, newbp);
+        // block 0 untouched
+        assert_eq!(ps.block_params(&m, 0).len(), 9);
+    }
+
+    #[test]
+    fn save_load_matches_manifest() {
+        let m = fake_manifest(&tmpdir("saveload"));
+        write_init_bin(&m, 6);
+        let ps = ParamStore::from_init_bin(&m).unwrap();
+        let path = m.dir.join("ckpt.ebft");
+        ps.save(&path).unwrap();
+        let ps2 = ParamStore::load(&path, &m).unwrap();
+        assert_eq!(ps.tensors, ps2.tensors);
+    }
+}

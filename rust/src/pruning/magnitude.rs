@@ -1,0 +1,87 @@
+//! Magnitude pruning (Han et al. 2015): keep the largest-|w| weights.
+//!
+//! Unstructured: per-tensor top-k (the classic global-within-layer rule).
+//! N:M: per input group of M (per output column), keep the N largest |w|.
+
+use anyhow::Result;
+
+use crate::masks::{mask_from_nm, mask_from_topk};
+use crate::tensor::Tensor;
+
+use super::Pattern;
+
+pub fn prune(w: &Tensor, pattern: Pattern) -> Result<Tensor> {
+    let scores = w.map(f32::abs);
+    match pattern {
+        Pattern::Unstructured(s) => {
+            let keep =
+                ((1.0 - s as f64) * w.numel() as f64).round() as usize;
+            Ok(mask_from_topk(&scores, keep))
+        }
+        Pattern::NM(n, m) => mask_from_nm(&scores, n, m),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::masks::MaskSet;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn unstructured_keeps_largest() {
+        let w = Tensor::from_vec(&[2, 2], vec![0.1, -5.0, 3.0, -0.2]);
+        let m = prune(&w, Pattern::Unstructured(0.5)).unwrap();
+        assert_eq!(m.data, vec![0.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn sparsity_exact() {
+        let mut rng = Pcg64::seeded(1);
+        let w = Tensor::randn(&[40, 50], 1.0, &mut rng);
+        for s in [0.1f32, 0.5, 0.7, 0.9] {
+            let m = prune(&w, Pattern::Unstructured(s)).unwrap();
+            let got = MaskSet::tensor_sparsity(&m);
+            assert!((got - s as f64).abs() < 1e-3, "s={s} got={got}");
+        }
+    }
+
+    #[test]
+    fn nm_structure_valid() {
+        let mut rng = Pcg64::seeded(2);
+        let w = Tensor::randn(&[16, 8], 1.0, &mut rng);
+        let m = prune(&w, Pattern::NM(2, 4)).unwrap();
+        for c in 0..8 {
+            for g in (0..16).step_by(4) {
+                let kept: usize =
+                    (g..g + 4).filter(|&r| m.at2(r, c) != 0.0).count();
+                assert_eq!(kept, 2);
+            }
+        }
+        // and within each group, the kept ones have the largest |w|
+        for c in 0..8 {
+            for g in (0..16).step_by(4) {
+                let mut kept_min = f32::MAX;
+                let mut pruned_max = f32::MIN;
+                for r in g..g + 4 {
+                    let a = w.at2(r, c).abs();
+                    if m.at2(r, c) != 0.0 {
+                        kept_min = kept_min.min(a);
+                    } else {
+                        pruned_max = pruned_max.max(a);
+                    }
+                }
+                assert!(kept_min >= pruned_max);
+            }
+        }
+    }
+
+    #[test]
+    fn extreme_sparsities() {
+        let w = Tensor::ones(&[4, 4]);
+        assert_eq!(prune(&w, Pattern::Unstructured(0.0)).unwrap()
+                       .count_nonzero(), 16);
+        assert_eq!(prune(&w, Pattern::Unstructured(1.0)).unwrap()
+                       .count_nonzero(), 0);
+    }
+}

@@ -1,0 +1,177 @@
+//! Pruning methods: magnitude, Wanda, SparseGPT (unstructured + N:M) and
+//! FLAP (structured). All operate block-by-block with sequential error
+//! propagation, exactly like the original implementations: block `l` is
+//! pruned using activations produced by the *already-pruned* blocks < l.
+
+pub mod flap;
+pub mod magnitude;
+pub mod sparsegpt;
+pub mod stats;
+pub mod wanda;
+
+use anyhow::Result;
+
+use crate::masks::MaskSet;
+use crate::model::ParamStore;
+use crate::runtime::{Session, Value};
+use crate::tensor::Tensor;
+
+pub use stats::{collect_block_stats, BlockStats};
+
+/// Sparsity pattern (Eq. 2's constraint).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Pattern {
+    /// Fraction of weights removed, e.g. 0.5.
+    Unstructured(f32),
+    /// N:M — keep `n` of every `m` consecutive inputs per output.
+    NM(usize, usize),
+}
+
+impl Pattern {
+    pub fn sparsity(&self) -> f32 {
+        match *self {
+            Pattern::Unstructured(s) => s,
+            Pattern::NM(n, m) => 1.0 - n as f32 / m as f32,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            Pattern::Unstructured(s) => format!("{}%", (s * 100.0) as u32),
+            Pattern::NM(n, m) => format!("{n}:{m}"),
+        }
+    }
+}
+
+/// Pruning criterion.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Magnitude,
+    Wanda,
+    SparseGpt,
+}
+
+impl Method {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Magnitude => "magnitude",
+            Method::Wanda => "wanda",
+            Method::SparseGpt => "sparsegpt",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "magnitude" | "mag" => Method::Magnitude,
+            "wanda" => Method::Wanda,
+            "sparsegpt" => Method::SparseGpt,
+            other => anyhow::bail!("unknown pruning method '{other}'"),
+        })
+    }
+}
+
+/// Advance an activation stream through block `l` (masked weights).
+pub fn advance_stream(session: &Session, params: &ParamStore,
+                      masks: &MaskSet, l: usize,
+                      xs: &mut [Tensor]) -> Result<()> {
+    for x in xs.iter_mut() {
+        let mut inputs: Vec<Value> = params
+            .block_params(&session.manifest, l)
+            .into_iter()
+            .map(Value::F32)
+            .collect();
+        for m in masks.block(l) {
+            inputs.push(Value::F32(m));
+        }
+        inputs.push(Value::F32(x));
+        *x = session.run("block_fwd", &inputs)?.remove(0);
+    }
+    Ok(())
+}
+
+/// Embed every token batch into the initial activation stream.
+pub fn embed_stream(session: &Session, params: &ParamStore,
+                    batches: &[Vec<i32>]) -> Result<Vec<Tensor>> {
+    let d = &session.manifest.dims;
+    let tok_shape = [d.batch, d.seq];
+    batches
+        .iter()
+        .map(|b| {
+            Ok(session
+                .run("embed_fwd", &[
+                    Value::F32(params.get("embed")?),
+                    Value::I32(&tok_shape, b),
+                ])?
+                .remove(0))
+        })
+        .collect()
+}
+
+/// Prune the whole model block-by-block with sequential propagation.
+///
+/// For SparseGPT this also updates the surviving weights in `params`
+/// (regression reconstruction); magnitude/Wanda leave weights unchanged.
+pub fn prune_model(session: &Session, params: &mut ParamStore,
+                   method: Method, pattern: Pattern,
+                   calib_batches: &[Vec<i32>]) -> Result<MaskSet> {
+    let n_layers = session.manifest.dims.n_layers;
+    let mut masks = MaskSet::dense(&session.manifest);
+    let mut xs = embed_stream(session, params, calib_batches)?;
+
+    for l in 0..n_layers {
+        // stats computed with block `l` still dense, inputs already sparse
+        let stats = if method == Method::Magnitude {
+            None
+        } else {
+            Some(collect_block_stats(session, params, &masks, l, &xs)?)
+        };
+
+        let shapes = session.manifest.block_linear_shapes(l);
+        for (j, shape) in shapes.iter().enumerate() {
+            let idx = session.manifest.block_linear_indices(l)[j];
+            let w = params.tensors[idx].clone();
+            debug_assert_eq!(&w.shape, shape);
+            let mask = match method {
+                Method::Magnitude => magnitude::prune(&w, pattern)?,
+                Method::Wanda => {
+                    let g = stats.as_ref().unwrap().group_for_linear(j);
+                    wanda::prune(&w, &g.col_norms(), pattern)?
+                }
+                Method::SparseGpt => {
+                    let g = stats.as_ref().unwrap().group_for_linear(j);
+                    let (mask, new_w) = sparsegpt::prune(&w, &g.gram, pattern)?;
+                    params.tensors[idx] = new_w;
+                    mask
+                }
+            };
+            masks.masks[l][j] = mask;
+        }
+
+        // propagate the *pruned* block's activations to the next block
+        advance_stream(session, params, &masks, l, &mut xs)?;
+    }
+    Ok(masks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pattern_sparsity() {
+        assert_eq!(Pattern::Unstructured(0.5).sparsity(), 0.5);
+        assert_eq!(Pattern::NM(2, 4).sparsity(), 0.5);
+        assert_eq!(Pattern::NM(4, 8).sparsity(), 0.5);
+        assert_eq!(Pattern::NM(1, 4).sparsity(), 0.75);
+        assert_eq!(Pattern::Unstructured(0.7).label(), "70%");
+        assert_eq!(Pattern::NM(2, 4).label(), "2:4");
+    }
+
+    #[test]
+    fn method_parse() {
+        assert_eq!(Method::parse("wanda").unwrap(), Method::Wanda);
+        assert_eq!(Method::parse("mag").unwrap(), Method::Magnitude);
+        assert_eq!(Method::parse("sparsegpt").unwrap(), Method::SparseGpt);
+        assert!(Method::parse("foo").is_err());
+    }
+}

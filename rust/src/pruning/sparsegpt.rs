@@ -1,0 +1,263 @@
+//! SparseGPT (Frantar & Alistarh 2023): OBS-based pruning with regression
+//! reconstruction of the surviving weights.
+//!
+//! Per linear layer with weight W [in, out] and Hessian H = XᵀX [in, in]:
+//!   1. Damp: H += λI with λ = percdamp · mean(diag H).
+//!   2. Hinv = chol(H⁻¹) (upper-triangular factor U, so H⁻¹ = UᵀU).
+//!   3. Sweep input rows i left→right in blocks of `blocksize`:
+//!      saliency of w[i,o] is w²/U[i,i]²; within each block (or each N:M
+//!      group) choose the lowest-saliency weights to prune per output o,
+//!      then propagate the OBS update
+//!         w[i..,o] -= (w[i,o]/U[i,i]) · U[i, i..]
+//!      so later inputs compensate the removal.
+//!
+//! (The original operates on W[out, in] rows; our layout is transposed, so
+//! "columns of W" here play the role of its rows. The math is identical.)
+
+use anyhow::{bail, Result};
+
+use crate::tensor::linalg;
+use crate::tensor::Tensor;
+
+use super::Pattern;
+
+pub const PERCDAMP: f32 = 0.01;
+pub const BLOCKSIZE: usize = 32;
+
+/// Returns (mask, updated weights).
+pub fn prune(w: &Tensor, gram: &Tensor, pattern: Pattern)
+             -> Result<(Tensor, Tensor)> {
+    let (rows, cols) = w.dims2()?;
+    let (gr, gc) = gram.dims2()?;
+    if gr != rows || gc != rows {
+        bail!("gram is {gr}x{gc}, expected {rows}x{rows}");
+    }
+
+    // --- damped inverse-Hessian Cholesky factor ---
+    let mut h = gram.clone();
+    // dead inputs (never activated) get a unit diagonal so H is invertible
+    for i in 0..rows {
+        if h.at2(i, i) == 0.0 {
+            *h.at2_mut(i, i) = 1.0;
+        }
+    }
+    let lambda = PERCDAMP * linalg::diag_mean(&h);
+    linalg::add_damping(&mut h, lambda.max(1e-8));
+    let hinv = linalg::spd_inverse(&h)?;
+    let u = linalg::cholesky_upper(&hinv)?; // H⁻¹ = UᵀU
+
+    let mut w = w.clone();
+    let mut mask = Tensor::ones(&[rows, cols]);
+
+    match pattern {
+        Pattern::Unstructured(sparsity) => {
+            // per block of input rows, per output: prune the lowest-saliency
+            // `round(block_len · s)` weights
+            let mut i0 = 0;
+            while i0 < rows {
+                let i1 = (i0 + BLOCKSIZE).min(rows);
+                let blen = i1 - i0;
+                let n_prune =
+                    ((sparsity as f64) * blen as f64).round() as usize;
+                if n_prune > 0 {
+                    prune_block(&mut w, &mut mask, &u, i0, i1, cols,
+                                BlockRule::Count(n_prune))?;
+                }
+                // propagate this block's accumulated error is already done
+                // inside prune_block (full-row updates)
+                i0 = i1;
+            }
+        }
+        Pattern::NM(n, m) => {
+            if rows % m != 0 {
+                bail!("{rows} input rows not divisible by N:M group {m}");
+            }
+            let mut g = 0;
+            while g < rows {
+                prune_block(&mut w, &mut mask, &u, g, g + m, cols,
+                            BlockRule::Count(m - n))?;
+                g += m;
+            }
+        }
+    }
+
+    // zero the pruned positions explicitly (updates touched only later cols)
+    let masked = w.mul(&mask);
+    Ok((mask, masked))
+}
+
+enum BlockRule {
+    /// Prune exactly this many inputs per output within the block.
+    Count(usize),
+}
+
+/// Prune within input rows [i0, i1) for every output column, applying OBS
+/// updates to all later rows (both inside and beyond the block).
+fn prune_block(w: &mut Tensor, mask: &mut Tensor, u: &Tensor, i0: usize,
+               i1: usize, cols: usize, rule: BlockRule) -> Result<()> {
+    let rows = w.shape[0];
+    let blen = i1 - i0;
+    let BlockRule::Count(n_prune) = rule;
+    let n_prune = n_prune.min(blen);
+    if n_prune == 0 {
+        return Ok(());
+    }
+
+    // saliency uses the weight values *at block entry* (standard SparseGPT:
+    // mask chosen per block before the in-block sweep applies updates)
+    let mut saliency = vec![0.0f32; blen];
+    for c in 0..cols {
+        for (bi, i) in (i0..i1).enumerate() {
+            let d = u.at2(i, i);
+            let wv = w.at2(i, c);
+            saliency[bi] = wv * wv / (d * d).max(1e-20);
+        }
+        // lowest-saliency n_prune inputs of this column
+        let neg: Vec<f32> = saliency.iter().map(|&s| -s).collect();
+        let prune_idx = Tensor::top_k_indices(&neg, n_prune);
+        for bi in prune_idx {
+            let i = i0 + bi;
+            *mask.at2_mut(i, c) = 0.0;
+        }
+    }
+
+    // left-to-right OBS sweep: zero pruned entries, push error to the right
+    for i in i0..i1 {
+        let d = u.at2(i, i);
+        for c in 0..cols {
+            if mask.at2(i, c) == 0.0 {
+                let err = w.at2(i, c) / d;
+                if err != 0.0 {
+                    for k in i..rows {
+                        let upd = err * u.at2(i, k);
+                        *w.at2_mut(k, c) -= upd;
+                    }
+                }
+                // (w[i,c] becomes exactly 0 via the k=i update: u[i,i]=d)
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Reconstruction error ‖X(Ŵ − W)‖² expressed through the Gram matrix:
+/// tr((Ŵ−W)ᵀ G (Ŵ−W)). Used by tests and the ablation bench.
+pub fn recon_error(w_orig: &Tensor, w_new: &Tensor, gram: &Tensor)
+                   -> Result<f64> {
+    let delta = w_new.sub(w_orig);
+    let gd = gram.matmul(&delta)?;
+    let (rows, cols) = delta.dims2()?;
+    let mut tr = 0.0f64;
+    for r in 0..rows {
+        for c in 0..cols {
+            tr += delta.at2(r, c) as f64 * gd.at2(r, c) as f64;
+        }
+    }
+    Ok(tr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::masks::MaskSet;
+    use crate::util::Pcg64;
+
+    fn random_problem(rows: usize, cols: usize, n_samples: usize,
+                      seed: u64) -> (Tensor, Tensor, Tensor) {
+        let mut rng = Pcg64::seeded(seed);
+        let w = Tensor::randn(&[rows, cols], 1.0, &mut rng);
+        let x = Tensor::randn(&[n_samples, rows], 1.0, &mut rng);
+        let gram = x.transpose2().unwrap().matmul(&x).unwrap();
+        (w, x, gram)
+    }
+
+    #[test]
+    fn mask_sparsity_unstructured() {
+        let (w, _, gram) = random_problem(64, 16, 128, 1);
+        for s in [0.25f32, 0.5, 0.75] {
+            let (mask, new_w) =
+                prune(&w, &gram, Pattern::Unstructured(s)).unwrap();
+            let got = MaskSet::tensor_sparsity(&mask);
+            assert!((got - s as f64).abs() < 0.02, "s={s} got={got}");
+            // pruned weights are exactly zero in the updated tensor
+            for (wv, mv) in new_w.data.iter().zip(&mask.data) {
+                if *mv == 0.0 {
+                    assert_eq!(*wv, 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nm_structure_valid() {
+        let (w, _, gram) = random_problem(32, 8, 64, 2);
+        let (mask, _) = prune(&w, &gram, Pattern::NM(2, 4)).unwrap();
+        for c in 0..8 {
+            for g in (0..32).step_by(4) {
+                let kept: usize =
+                    (g..g + 4).filter(|&r| mask.at2(r, c) != 0.0).count();
+                assert_eq!(kept, 2);
+            }
+        }
+    }
+
+    /// Correlated activations (X = Z·C with a random mixing matrix): the
+    /// regime where OBS compensation actually has structure to exploit.
+    /// With iid inputs H ≈ n·I and the update is a no-op by construction.
+    fn correlated_problem(rows: usize, cols: usize, n_samples: usize,
+                          seed: u64) -> (Tensor, Tensor) {
+        let mut rng = Pcg64::seeded(seed);
+        let w = Tensor::randn(&[rows, cols], 1.0, &mut rng);
+        let z = Tensor::randn(&[n_samples, rows / 4], 1.0, &mut rng);
+        let c = Tensor::randn(&[rows / 4, rows], 1.0, &mut rng);
+        let noise = Tensor::randn(&[n_samples, rows], 0.1, &mut rng);
+        let x = z.matmul(&c).unwrap().add(&noise);
+        let gram = x.transpose2().unwrap().matmul(&x).unwrap();
+        (w, gram)
+    }
+
+    #[test]
+    fn obs_update_beats_plain_masking() {
+        // With the SAME mask, the OBS-updated weights must reconstruct the
+        // calibration outputs strictly better than plain zeroing.
+        let (w, gram) = correlated_problem(48, 12, 256, 3);
+        let (mask, new_w) =
+            prune(&w, &gram, Pattern::Unstructured(0.5)).unwrap();
+        let updated_err = recon_error(&w, &new_w, &gram).unwrap();
+        let plain_err = recon_error(&w, &w.mul(&mask), &gram).unwrap();
+        assert!(updated_err < 0.8 * plain_err,
+                "OBS update {updated_err:.3} vs plain mask {plain_err:.3}");
+    }
+
+    #[test]
+    fn obs_beats_magnitude_on_correlated_inputs() {
+        let (w, gram) = correlated_problem(64, 16, 512, 6);
+        let (_, new_w) = prune(&w, &gram, Pattern::Unstructured(0.5)).unwrap();
+        let sgpt_err = recon_error(&w, &new_w, &gram).unwrap();
+        let mag_mask =
+            super::super::magnitude::prune(&w, Pattern::Unstructured(0.5))
+                .unwrap();
+        let mag_err = recon_error(&w, &w.mul(&mag_mask), &gram).unwrap();
+        assert!(sgpt_err < mag_err,
+                "OBS {sgpt_err:.3} should beat magnitude {mag_err:.3}");
+    }
+
+    #[test]
+    fn handles_degenerate_gram() {
+        // rank-deficient gram (few samples) must not crash thanks to damping
+        let (w, _, gram) = random_problem(32, 4, 2, 4);
+        let (mask, new_w) =
+            prune(&w, &gram, Pattern::Unstructured(0.5)).unwrap();
+        assert!(new_w.data.iter().all(|x| x.is_finite()));
+        assert!((MaskSet::tensor_sparsity(&mask) - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn zero_sparsity_is_identity() {
+        let (w, _, gram) = random_problem(16, 4, 32, 5);
+        let (mask, new_w) =
+            prune(&w, &gram, Pattern::Unstructured(0.0)).unwrap();
+        assert_eq!(mask.count_nonzero(), mask.numel());
+        assert!(w.sub(&new_w).max_abs() < 1e-6);
+    }
+}

@@ -1,0 +1,175 @@
+//! Calibration statistics for the pruning criteria.
+//!
+//! The `block_stats` artifact returns, per linear-input group, the column
+//! sum-of-squares, column sum, and Gram matrix XᵀX over one [B,S] batch;
+//! this module accumulates those over the calibration stream. Group→linear
+//! mapping (canonical linear order):
+//!   ln1  (group 0) → wq, wk, wv
+//!   ctx  (group 1) → wo
+//!   ln2  (group 2) → w_gate, w_up
+//!   hmid (group 3) → w_down
+
+use anyhow::Result;
+
+use crate::masks::MaskSet;
+use crate::model::ParamStore;
+use crate::runtime::{Session, Value};
+use crate::tensor::Tensor;
+
+pub const N_GROUPS: usize = 4;
+
+/// Which stats group feeds canonical linear `j`.
+pub fn group_of_linear(j: usize) -> usize {
+    match j {
+        0..=2 => 0, // wq wk wv ← ln1 out
+        3 => 1,     // wo ← attention context
+        4 | 5 => 2, // w_gate w_up ← ln2 out
+        6 => 3,     // w_down ← mlp hidden
+        _ => panic!("linear index {j} out of range"),
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GroupStats {
+    pub colsumsq: Tensor,
+    pub colsum: Tensor,
+    pub gram: Tensor,
+    pub n_tokens: usize,
+}
+
+impl GroupStats {
+    fn zeros(dim: usize) -> Self {
+        Self {
+            colsumsq: Tensor::zeros(&[dim]),
+            colsum: Tensor::zeros(&[dim]),
+            gram: Tensor::zeros(&[dim, dim]),
+            n_tokens: 0,
+        }
+    }
+
+    fn accumulate(&mut self, colsumsq: &Tensor, colsum: &Tensor,
+                  gram: &Tensor, n_tokens: usize) {
+        self.colsumsq = self.colsumsq.add(colsumsq);
+        self.colsum = self.colsum.add(colsum);
+        self.gram = self.gram.add(gram);
+        self.n_tokens += n_tokens;
+    }
+
+    /// ‖X_j‖₂ per column (Wanda's activation norm).
+    pub fn col_norms(&self) -> Tensor {
+        self.colsumsq.map(|x| x.max(0.0).sqrt())
+    }
+
+    /// E[X_j] per column (DSnoT's first moment).
+    pub fn col_means(&self) -> Tensor {
+        let n = self.n_tokens.max(1) as f32;
+        self.colsum.scale(1.0 / n)
+    }
+
+    /// Var[X_j] per column (FLAP's fluctuation).
+    pub fn col_vars(&self) -> Tensor {
+        let n = self.n_tokens.max(1) as f32;
+        self.colsumsq
+            .zip(&self.colsum, move |sq, s| (sq / n - (s / n) * (s / n)).max(0.0))
+    }
+}
+
+/// Accumulated stats for one block.
+#[derive(Clone, Debug)]
+pub struct BlockStats {
+    pub groups: Vec<GroupStats>,
+}
+
+impl BlockStats {
+    pub fn group_for_linear(&self, j: usize) -> &GroupStats {
+        &self.groups[group_of_linear(j)]
+    }
+}
+
+/// Run `block_stats` over every activation batch of block `l` and accumulate.
+///
+/// `xs` are the block's input activations, one [B,S,D] tensor per batch
+/// (produced by the caller's activation stream).
+pub fn collect_block_stats(session: &Session, params: &ParamStore,
+                           masks: &MaskSet, l: usize,
+                           xs: &[Tensor]) -> Result<BlockStats> {
+    let dims = &session.manifest.dims;
+    let group_dims = [dims.d_model, dims.d_model, dims.d_model, dims.d_ff];
+    let mut groups: Vec<GroupStats> =
+        group_dims.iter().map(|&d| GroupStats::zeros(d)).collect();
+    let tokens_per_batch = dims.batch * dims.seq;
+
+    for x in xs {
+        let mut inputs: Vec<Value> = params
+            .block_params(&session.manifest, l)
+            .into_iter()
+            .map(Value::F32)
+            .collect();
+        for m in masks.block(l) {
+            inputs.push(Value::F32(m));
+        }
+        inputs.push(Value::F32(x));
+        let outs = session.run("block_stats", &inputs)?;
+        // outs[0] is the block output y (kept live for XLA; unused here)
+        debug_assert_eq!(outs.len(), 1 + 3 * N_GROUPS);
+        for (g, chunk) in outs[1..].chunks_exact(3).enumerate() {
+            groups[g].accumulate(&chunk[0], &chunk[1], &chunk[2],
+                                 tokens_per_batch);
+        }
+    }
+    Ok(BlockStats { groups })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_mapping_covers_all_linears() {
+        let mapped: Vec<usize> = (0..7).map(group_of_linear).collect();
+        assert_eq!(mapped, vec![0, 0, 0, 1, 2, 2, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn group_mapping_rejects_out_of_range() {
+        group_of_linear(7);
+    }
+
+    #[test]
+    fn group_stats_math() {
+        // two "batches" of a 2-col activation: [[1,2],[3,4]] and [[5,6]]
+        let mut g = GroupStats::zeros(2);
+        g.accumulate(
+            &Tensor::from_vec(&[2], vec![1.0 + 9.0, 4.0 + 16.0]),
+            &Tensor::from_vec(&[2], vec![4.0, 6.0]),
+            &Tensor::zeros(&[2, 2]),
+            2,
+        );
+        g.accumulate(
+            &Tensor::from_vec(&[2], vec![25.0, 36.0]),
+            &Tensor::from_vec(&[2], vec![5.0, 6.0]),
+            &Tensor::zeros(&[2, 2]),
+            1,
+        );
+        assert_eq!(g.n_tokens, 3);
+        let norms = g.col_norms();
+        assert!((norms.data[0] - 35f32.sqrt()).abs() < 1e-5);
+        let means = g.col_means();
+        assert!((means.data[0] - 3.0).abs() < 1e-5);
+        assert!((means.data[1] - 4.0).abs() < 1e-5);
+        // var col0: E[x²]=35/3, mean 3 → 35/3-9 ≈ 2.6667
+        let vars = g.col_vars();
+        assert!((vars.data[0] - (35.0 / 3.0 - 9.0)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn variance_clamped_nonnegative() {
+        let mut g = GroupStats::zeros(1);
+        // rounding could give tiny negative variance; must clamp
+        g.accumulate(&Tensor::from_vec(&[1], vec![0.9999]),
+                     &Tensor::from_vec(&[1], vec![1.0]),
+                     &Tensor::zeros(&[1, 1]), 1);
+        assert!(g.col_vars().data[0] >= 0.0);
+    }
+}

@@ -1,0 +1,102 @@
+//! Wanda (Sun et al. 2023): score = |W_ij| · ‖X_i‖₂, compared per output.
+//!
+//! In our [in, out] weight layout, outputs are columns; Wanda's per-output
+//! comparison group is therefore a per-column top-k over input rows.
+//! ‖X_i‖₂ is the calibration activation norm of input feature i (the stats
+//! collector's `col_norms` of the linear's input group).
+
+use anyhow::{bail, Result};
+
+use crate::masks::{mask_from_nm, mask_from_topk_per_col};
+use crate::tensor::Tensor;
+
+use super::Pattern;
+
+/// Score matrix |W| ⊙ (col-norms broadcast over outputs).
+pub fn scores(w: &Tensor, x_norms: &Tensor) -> Result<Tensor> {
+    let (rows, cols) = w.dims2()?;
+    if x_norms.numel() != rows {
+        bail!("x_norms has {} entries, weight has {rows} input rows",
+              x_norms.numel());
+    }
+    let mut s = Tensor::zeros(&[rows, cols]);
+    for r in 0..rows {
+        let n = x_norms.data[r];
+        for c in 0..cols {
+            *s.at2_mut(r, c) = w.at2(r, c).abs() * n;
+        }
+    }
+    Ok(s)
+}
+
+pub fn prune(w: &Tensor, x_norms: &Tensor, pattern: Pattern) -> Result<Tensor> {
+    let s = scores(w, x_norms)?;
+    match pattern {
+        Pattern::Unstructured(sp) => {
+            let rows = w.dims2()?.0;
+            let keep = ((1.0 - sp as f64) * rows as f64).round() as usize;
+            mask_from_topk_per_col(&s, keep)
+        }
+        Pattern::NM(n, m) => mask_from_nm(&s, n, m),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::masks::MaskSet;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn activation_norms_change_decision() {
+        // |w| smaller but x-norm much larger → kept over bigger weight
+        let w = Tensor::from_vec(&[2, 1], vec![0.5, 1.0]);
+        let norms_eq = Tensor::from_vec(&[2], vec![1.0, 1.0]);
+        let m1 = prune(&w, &norms_eq, Pattern::Unstructured(0.5)).unwrap();
+        assert_eq!(m1.data, vec![0.0, 1.0]);
+        let norms_skew = Tensor::from_vec(&[2], vec![10.0, 1.0]);
+        let m2 = prune(&w, &norms_skew, Pattern::Unstructured(0.5)).unwrap();
+        assert_eq!(m2.data, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn per_column_sparsity_exact() {
+        let mut rng = Pcg64::seeded(3);
+        let w = Tensor::randn(&[32, 16], 1.0, &mut rng);
+        let norms = Tensor::randn(&[32], 1.0, &mut rng).map(f32::abs);
+        let m = prune(&w, &norms, Pattern::Unstructured(0.75)).unwrap();
+        for c in 0..16 {
+            let kept: usize =
+                (0..32).filter(|&r| m.at2(r, c) != 0.0).count();
+            assert_eq!(kept, 8, "column {c}");
+        }
+        assert!((MaskSet::tensor_sparsity(&m) - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nm_valid() {
+        let mut rng = Pcg64::seeded(4);
+        let w = Tensor::randn(&[8, 4], 1.0, &mut rng);
+        let norms = Tensor::ones(&[8]);
+        let m = prune(&w, &norms, Pattern::NM(4, 8)).unwrap();
+        for c in 0..4 {
+            let kept: usize = (0..8).filter(|&r| m.at2(r, c) != 0.0).count();
+            assert_eq!(kept, 4);
+        }
+    }
+
+    #[test]
+    fn rejects_mismatched_norms() {
+        let w = Tensor::ones(&[4, 4]);
+        let norms = Tensor::ones(&[3]);
+        assert!(prune(&w, &norms, Pattern::Unstructured(0.5)).is_err());
+    }
+
+    #[test]
+    fn zero_norm_input_pruned_first() {
+        let w = Tensor::from_vec(&[2, 1], vec![100.0, 0.01]);
+        let norms = Tensor::from_vec(&[2], vec![0.0, 1.0]);
+        let m = prune(&w, &norms, Pattern::Unstructured(0.5)).unwrap();
+        assert_eq!(m.data, vec![0.0, 1.0]);
+    }
+}

@@ -1,0 +1,58 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO *text* is the interchange
+//! format (jax >= 0.5 emits protos with 64-bit instruction ids which
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids).
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A compiled executable plus bookkeeping.
+pub struct Executable {
+    pub exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// PJRT CPU runtime with an executable cache keyed by artifact name.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    cache: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, cache: HashMap::new() })
+    }
+
+    /// Load an HLO-text artifact from `path` and compile it, caching under `name`.
+    pub fn load(&mut self, name: &str, path: &Path) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        self.cache.insert(name.to_string(), Executable { exe, name: name.to_string() });
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Executable> {
+        self.cache.get(name).with_context(|| format!("artifact {name} not loaded"))
+    }
+
+    /// Execute a loaded artifact on literal inputs; returns the elements of the
+    /// result tuple (artifacts are lowered with return_tuple=True).
+    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.get(name)?;
+        let result = exe.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+}

@@ -1,0 +1,88 @@
+//! Literal ⇄ Tensor conversion.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// f32 tensor → device literal with the tensor's shape.
+pub fn lit_f32(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<usize> = t.shape.clone();
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(t.data.as_ptr() as *const u8,
+                                   t.data.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32, &dims, bytes)?)
+}
+
+/// i32 token array → device literal.
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    if shape.iter().product::<usize>() != data.len() {
+        bail!("lit_i32 shape/data mismatch");
+    }
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32, shape, bytes)?)
+}
+
+/// Scalar f32 literal.
+pub fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Literal → f32 tensor with the given shape (validated by element count).
+pub fn tensor_from_lit(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+    let data = lit.to_vec::<f32>()?;
+    if data.len() != shape.iter().product::<usize>() {
+        bail!("literal has {} elements, shape {:?} wants {}", data.len(),
+              shape, shape.iter().product::<usize>());
+    }
+    Ok(Tensor::from_vec(shape, data))
+}
+
+/// Literal → scalar f32.
+pub fn scalar_from_lit(lit: &xla::Literal) -> Result<f32> {
+    let v = lit.to_vec::<f32>()?;
+    if v.len() != 1 {
+        bail!("expected scalar, got {} elements", v.len());
+    }
+    Ok(v[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = lit_f32(&t).unwrap();
+        let back = tensor_from_lit(&lit, &[2, 3]).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = lit_scalar(3.25);
+        assert_eq!(scalar_from_lit(&lit).unwrap(), 3.25);
+        let t = Tensor::scalar(-1.5);
+        let lit2 = lit_f32(&t).unwrap();
+        assert_eq!(scalar_from_lit(&lit2).unwrap(), -1.5);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let lit = lit_i32(&[2, 2], &[1, 2, 3, 4]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4]);
+        assert!(lit_i32(&[3], &[1, 2]).is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let t = Tensor::ones(&[4]);
+        let lit = lit_f32(&t).unwrap();
+        assert!(tensor_from_lit(&lit, &[5]).is_err());
+    }
+}

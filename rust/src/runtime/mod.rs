@@ -1,0 +1,9 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+pub mod client;
+pub mod convert;
+pub mod session;
+
+pub use client::Runtime;
+pub use convert::{lit_f32, lit_i32, lit_scalar, scalar_from_lit,
+                  tensor_from_lit};
+pub use session::{Session, Value};

@@ -1,0 +1,221 @@
+//! Dense linear algebra for SparseGPT's OBS solves.
+//!
+//! SparseGPT needs, per layer, the inverse Hessian H⁻¹ where H = XᵀX + λI,
+//! and specifically the *Cholesky factor of H⁻¹* (its rows drive the
+//! column-blocked weight updates). Sizes here are d_model/d_ff (≤ ~512), so
+//! straightforward O(n³) with f64 accumulation is plenty.
+
+use anyhow::{bail, Result};
+
+use super::Tensor;
+
+/// Cholesky decomposition A = L·Lᵀ (lower-triangular L). A must be
+/// symmetric positive definite.
+pub fn cholesky(a: &Tensor) -> Result<Tensor> {
+    let (n, n2) = a.dims2()?;
+    if n != n2 {
+        bail!("cholesky on non-square {n}x{n2}");
+    }
+    let mut l = Tensor::zeros(&[n, n]);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.at2(i, j) as f64;
+            for k in 0..j {
+                s -= l.at2(i, k) as f64 * l.at2(j, k) as f64;
+            }
+            if i == j {
+                if s <= 0.0 {
+                    bail!("matrix not positive definite at pivot {i} (s={s})");
+                }
+                *l.at2_mut(i, j) = s.sqrt() as f32;
+            } else {
+                *l.at2_mut(i, j) = (s / l.at2(j, j) as f64) as f32;
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L·y = b for lower-triangular L.
+pub fn solve_lower(l: &Tensor, b: &[f32]) -> Result<Vec<f32>> {
+    let (n, _) = l.dims2()?;
+    if b.len() != n {
+        bail!("solve_lower size mismatch");
+    }
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let mut s = b[i] as f64;
+        for k in 0..i {
+            s -= l.at2(i, k) as f64 * y[k] as f64;
+        }
+        y[i] = (s / l.at2(i, i) as f64) as f32;
+    }
+    Ok(y)
+}
+
+/// Solve Lᵀ·x = y for lower-triangular L (i.e. upper-triangular solve).
+pub fn solve_lower_t(l: &Tensor, y: &[f32]) -> Result<Vec<f32>> {
+    let (n, _) = l.dims2()?;
+    if y.len() != n {
+        bail!("solve_lower_t size mismatch");
+    }
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut s = y[i] as f64;
+        for k in i + 1..n {
+            s -= l.at2(k, i) as f64 * x[k] as f64;
+        }
+        x[i] = (s / l.at2(i, i) as f64) as f32;
+    }
+    Ok(x)
+}
+
+/// Inverse of an SPD matrix via Cholesky: A⁻¹ = L⁻ᵀ·L⁻¹.
+pub fn spd_inverse(a: &Tensor) -> Result<Tensor> {
+    let (n, _) = a.dims2()?;
+    let l = cholesky(a)?;
+    let mut inv = Tensor::zeros(&[n, n]);
+    let mut e = vec![0.0f32; n];
+    for j in 0..n {
+        e.iter_mut().for_each(|x| *x = 0.0);
+        e[j] = 1.0;
+        let y = solve_lower(&l, &e)?;
+        let x = solve_lower_t(&l, &y)?;
+        for i in 0..n {
+            *inv.at2_mut(i, j) = x[i];
+        }
+    }
+    // symmetrize (f32 round-off)
+    for i in 0..n {
+        for j in 0..i {
+            let avg = 0.5 * (inv.at2(i, j) + inv.at2(j, i));
+            *inv.at2_mut(i, j) = avg;
+            *inv.at2_mut(j, i) = avg;
+        }
+    }
+    Ok(inv)
+}
+
+/// Upper-triangular Cholesky factor U of A (A = Uᵀ·U), i.e. Lᵀ.
+/// SparseGPT uses chol(H⁻¹) in upper form; its diagonal entries give the
+/// per-column error normalization.
+pub fn cholesky_upper(a: &Tensor) -> Result<Tensor> {
+    Ok(cholesky(a)?.transpose2()?)
+}
+
+/// Add λ to the diagonal (damping). λ is `percdamp · mean(diag)` in
+/// SparseGPT; the caller computes it.
+pub fn add_damping(a: &mut Tensor, lambda: f32) {
+    let (n, _) = a.dims2().expect("square");
+    for i in 0..n {
+        *a.at2_mut(i, i) += lambda;
+    }
+}
+
+/// Mean of the diagonal.
+pub fn diag_mean(a: &Tensor) -> f32 {
+    let (n, _) = a.dims2().expect("square");
+    (0..n).map(|i| a.at2(i, i)).sum::<f32>() / n as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn random_spd(n: usize, rng: &mut Pcg64) -> Tensor {
+        let b = Tensor::randn(&[n, n], 1.0, rng);
+        let mut a = b.transpose2().unwrap().matmul(&b).unwrap();
+        add_damping(&mut a, 0.5 * n as f32);
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Pcg64::seeded(1);
+        for n in [1, 2, 5, 16, 40] {
+            let a = random_spd(n, &mut rng);
+            let l = cholesky(&a).unwrap();
+            let rec = l.matmul(&l.transpose2().unwrap()).unwrap();
+            let err = a.sub(&rec).max_abs() / a.max_abs();
+            assert!(err < 1e-4, "n={n} err={err}");
+            // lower-triangular
+            for i in 0..n {
+                for j in i + 1..n {
+                    assert_eq!(l.at2(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 2.0, 1.0]);
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn solves_roundtrip() {
+        let mut rng = Pcg64::seeded(2);
+        let n = 24;
+        let a = random_spd(n, &mut rng);
+        let l = cholesky(&a).unwrap();
+        let x_true: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+        // b = L x
+        let mut b = vec![0.0f32; n];
+        for i in 0..n {
+            for k in 0..=i {
+                b[i] += l.at2(i, k) * x_true[k];
+            }
+        }
+        let x = solve_lower(&l, &b).unwrap();
+        for (g, w) in x.iter().zip(&x_true) {
+            assert!((g - w).abs() < 1e-3);
+        }
+        // and the transpose solve
+        let mut bt = vec![0.0f32; n];
+        for i in 0..n {
+            for k in i..n {
+                bt[i] += l.at2(k, i) * x_true[k];
+            }
+        }
+        let xt = solve_lower_t(&l, &bt).unwrap();
+        for (g, w) in xt.iter().zip(&x_true) {
+            assert!((g - w).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn spd_inverse_is_inverse() {
+        let mut rng = Pcg64::seeded(3);
+        for n in [1, 3, 10, 32] {
+            let a = random_spd(n, &mut rng);
+            let inv = spd_inverse(&a).unwrap();
+            let prod = a.matmul(&inv).unwrap();
+            for i in 0..n {
+                for j in 0..n {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((prod.at2(i, j) - want).abs() < 1e-3,
+                            "n={n} ({i},{j})={}", prod.at2(i, j));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn upper_factor_reconstructs() {
+        let mut rng = Pcg64::seeded(4);
+        let a = random_spd(12, &mut rng);
+        let u = cholesky_upper(&a).unwrap();
+        let rec = u.transpose2().unwrap().matmul(&u).unwrap();
+        assert!(a.sub(&rec).max_abs() / a.max_abs() < 1e-4);
+    }
+
+    #[test]
+    fn damping_and_diag_mean() {
+        let mut a = Tensor::zeros(&[3, 3]);
+        add_damping(&mut a, 2.0);
+        assert_eq!(diag_mean(&a), 2.0);
+        assert_eq!(a.at2(0, 1), 0.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Dense f32 tensor substrate + linear algebra for the pruners.
+//!
+//! The heavy math runs in AOT-compiled XLA; this module covers the
+//! coordinator-side work: mask construction, pruning criteria, SparseGPT's
+//! OBS solves, and statistics plumbing. Keep it simple and correct — the
+//! hot path never allocates tensors per-token.
+pub mod linalg;
+pub mod tensor;
+
+pub use tensor::Tensor;

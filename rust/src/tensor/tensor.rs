@@ -1,0 +1,304 @@
+//! Row-major dense f32 tensor.
+
+use anyhow::{bail, Result};
+
+use crate::util::Pcg64;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; numel(shape)] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![1.0; numel(shape)] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![v; numel(shape)] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(numel(shape), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Pcg64) -> Tensor {
+        let data = (0..numel(shape)).map(|_| rng.next_normal() * std).collect();
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Rows/cols of a rank-2 tensor.
+    pub fn dims2(&self) -> Result<(usize, usize)> {
+        if self.shape.len() != 2 {
+            bail!("expected rank-2, got shape {:?}", self.shape);
+        }
+        Ok((self.shape[0], self.shape[1]))
+    }
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn at2_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.shape[1] + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.shape[1];
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.shape[1];
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.data.len(), 1, "item() on non-scalar");
+        self.data[0]
+    }
+
+    // ---- elementwise ----
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape, "zip shape mismatch");
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    pub fn mul(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a * b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    // ---- reductions ----
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    pub fn abs_sum(&self) -> f32 {
+        self.data.iter().map(|x| x.abs()).sum()
+    }
+
+    pub fn sq_sum(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn count_nonzero(&self) -> usize {
+        self.data.iter().filter(|&&x| x != 0.0).count()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &b| a.max(b.abs()))
+    }
+
+    // ---- linear algebra (small matrices only; the hot path is in XLA) ----
+    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        let (m, k) = self.dims2()?;
+        let (k2, n) = other.dims2()?;
+        if k != k2 {
+            bail!("matmul dims {m}x{k} @ {k2}x{n}");
+        }
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.at2(i, p);
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                let brow = &other.data[p * n..(p + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn transpose2(&self) -> Result<Tensor> {
+        let (m, n) = self.dims2()?;
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..m {
+            for j in 0..n {
+                *out.at2_mut(j, i) = self.at2(i, j);
+            }
+        }
+        Ok(out)
+    }
+
+    // ---- selection ----
+    /// Indices of the `k` largest values (ties broken by lower index first).
+    pub fn top_k_indices(values: &[f32], k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..values.len()).collect();
+        let k = k.min(values.len());
+        if k == 0 {
+            return Vec::new();
+        }
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            values[b]
+                .partial_cmp(&values[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut out = idx[..k].to_vec();
+        out.sort_unstable();
+        out
+    }
+}
+
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_numel() {
+        let t = Tensor::zeros(&[3, 4]);
+        assert_eq!(t.numel(), 12);
+        assert_eq!(Tensor::scalar(2.0).item(), 2.0);
+        assert_eq!(Tensor::ones(&[2]).sum(), 2.0);
+    }
+
+    #[test]
+    fn indexing() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.at2(0, 2), 3.0);
+        assert_eq!(t.at2(1, 0), 4.0);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_vec(&[2, 2], vec![5., 6., 7., 8.]);
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matmul_rectangular() {
+        let a = Tensor::from_vec(&[1, 3], vec![1., 2., 3.]);
+        let b = Tensor::from_vec(&[3, 2], vec![1., 0., 0., 1., 1., 1.]);
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.shape, vec![1, 2]);
+        assert_eq!(c.data, vec![4., 5.]);
+    }
+
+    #[test]
+    fn matmul_dim_mismatch_errors() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 3]);
+        assert!(a.matmul(&b).is_err());
+    }
+
+    #[test]
+    fn transpose() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let t = a.transpose2().unwrap();
+        assert_eq!(t.shape, vec![3, 2]);
+        assert_eq!(t.data, vec![1., 4., 2., 5., 3., 6.]);
+        assert_eq!(t.transpose2().unwrap(), a);
+    }
+
+    #[test]
+    fn elementwise() {
+        let a = Tensor::from_vec(&[2], vec![1., -2.]);
+        let b = Tensor::from_vec(&[2], vec![3., 4.]);
+        assert_eq!(a.mul(&b).data, vec![3., -8.]);
+        assert_eq!(a.add(&b).data, vec![4., 2.]);
+        assert_eq!(b.sub(&a).data, vec![2., 6.]);
+        assert_eq!(a.scale(2.0).data, vec![2., -4.]);
+        assert_eq!(a.abs_sum(), 3.0);
+        assert_eq!(a.max_abs(), 2.0);
+    }
+
+    #[test]
+    fn top_k_matches_sort() {
+        let mut rng = Pcg64::seeded(11);
+        for _ in 0..50 {
+            let n = 1 + rng.below(200) as usize;
+            let k = rng.below(n as u64 + 1) as usize;
+            let vals: Vec<f32> = (0..n).map(|_| rng.next_normal()).collect();
+            let got = Tensor::top_k_indices(&vals, k);
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| vals[b].partial_cmp(&vals[a]).unwrap()
+                .then(a.cmp(&b)));
+            let mut want = idx[..k].to_vec();
+            want.sort_unstable();
+            // compare selected VALUES (ties can reorder indices)
+            let gv: Vec<f32> = got.iter().map(|&i| vals[i]).collect();
+            let wv: Vec<f32> = want.iter().map(|&i| vals[i]).collect();
+            let mut gs = gv.clone();
+            let mut ws = wv.clone();
+            gs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            ws.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            assert_eq!(gs, ws);
+            assert_eq!(got.len(), k);
+        }
+    }
+
+    #[test]
+    fn top_k_edge_cases() {
+        assert!(Tensor::top_k_indices(&[], 3).is_empty());
+        assert!(Tensor::top_k_indices(&[1.0, 2.0], 0).is_empty());
+        assert_eq!(Tensor::top_k_indices(&[1.0, 2.0], 5), vec![0, 1]);
+    }
+
+    #[test]
+    fn randn_moments() {
+        let mut rng = Pcg64::seeded(12);
+        let t = Tensor::randn(&[100, 100], 0.5, &mut rng);
+        let mean = t.sum() / t.numel() as f32;
+        let var = (t.sq_sum() / t.numel() as f64) as f32 - mean * mean;
+        assert!(mean.abs() < 0.02);
+        assert!((var - 0.25).abs() < 0.02);
+    }
+}

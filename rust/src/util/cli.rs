@@ -1,0 +1,161 @@
+//! Minimal CLI argument parser (no clap offline).
+//!
+//! Grammar: `ebft <subcommand> [positional]... [--key value]... [--flag]...`
+//! Values may also be attached as `--key=value`. A bare `--name` followed by
+//! a non-`--` token is parsed as an option with that value, so place
+//! positionals *before* flags (or use `--key=value`).
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next().unwrap();
+            }
+        }
+        while let Some(item) = it.next() {
+            if let Some(stripped) = item.strip_prefix("--") {
+                if stripped.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false)
+                {
+                    out.options
+                        .insert(stripped.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(item);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => Ok(s.parse()?),
+        }
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> Result<f32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => Ok(s.parse()?),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => Ok(s.parse()?),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Parse a comma-separated list of f32 (e.g. `--sparsities 0.5,0.6`).
+    pub fn get_f32_list(&self, key: &str, default: &[f32]) -> Result<Vec<f32>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|x| x.trim().parse::<f32>().map_err(Into::into))
+                .collect(),
+        }
+    }
+
+    /// Parse a comma-separated list of usize.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|x| x.trim().parse::<usize>().map_err(Into::into))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(items: &[&str]) -> Args {
+        Args::parse(items.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["prune", "--method", "wanda", "--sparsity", "0.5"]);
+        assert_eq!(a.subcommand, "prune");
+        assert_eq!(a.get("method"), Some("wanda"));
+        assert_eq!(a.get_f32("sparsity", 0.0).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn eq_form_and_flags() {
+        let a = parse(&["eval", "ckpt.ebft", "--config=small", "--verbose"]);
+        assert_eq!(a.get("config"), Some("small"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["ckpt.ebft"]);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["x", "--quick"]);
+        assert!(a.has_flag("quick"));
+        assert_eq!(a.get("quick"), None);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["x", "--sparsities", "0.5,0.6,0.7"]);
+        assert_eq!(a.get_f32_list("sparsities", &[]).unwrap(),
+                   vec![0.5, 0.6, 0.7]);
+        let b = parse(&["x"]);
+        assert_eq!(b.get_usize_list("ns", &[1, 2]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["x"]);
+        assert_eq!(a.get_or("impl", "xla"), "xla");
+        assert_eq!(a.get_usize("epochs", 10).unwrap(), 10);
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = parse(&["x", "--lr=-0.1"]);
+        assert_eq!(a.get_f32("lr", 0.0).unwrap(), -0.1);
+    }
+}

@@ -1,0 +1,199 @@
+//! Timing + table formatting for the bench harness (no criterion offline).
+
+use std::time::Instant;
+
+/// Wall-clock stopwatch with named laps.
+pub struct Stopwatch {
+    start: Instant,
+    last: Instant,
+    pub laps: Vec<(String, f64)>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Self { start: now, last: now, laps: Vec::new() }
+    }
+
+    /// Record a lap since the previous lap (or start). Returns seconds.
+    pub fn lap(&mut self, name: &str) -> f64 {
+        let now = Instant::now();
+        let secs = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.laps.push((name.to_string(), secs));
+        secs
+    }
+
+    pub fn total(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Measure the best-of-n and mean wall time of a closure (micro-bench).
+pub fn time_it<F: FnMut()>(mut f: F, warmup: usize, iters: usize) -> BenchStat {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    BenchStat::from_samples(samples)
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchStat {
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub stddev: f64,
+    pub n: usize,
+}
+
+impl BenchStat {
+    pub fn from_samples(mut samples: Vec<f64>) -> Self {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        Self { mean, min: samples[0], max: samples[n - 1],
+               stddev: var.sqrt(), n }
+    }
+}
+
+/// Fixed-width ASCII table writer mirroring the paper's table layout.
+pub struct TableWriter {
+    pub title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TableWriter {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("## {}\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format a perplexity the way the paper does (2 decimals, big values bare).
+pub fn fmt_ppl(p: f64) -> String {
+    if !p.is_finite() {
+        "inf".to_string()
+    } else if p >= 10_000.0 {
+        format!("{:.0}", p)
+    } else {
+        format!("{:.2}", p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_laps_accumulate() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let lap = sw.lap("a");
+        assert!(lap >= 0.004);
+        assert!(sw.total() >= lap);
+        assert_eq!(sw.laps.len(), 1);
+    }
+
+    #[test]
+    fn bench_stat_basic() {
+        let s = BenchStat::from_samples(vec![1.0, 2.0, 3.0]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.n, 3);
+    }
+
+    #[test]
+    fn time_it_runs() {
+        let mut count = 0;
+        let s = time_it(|| count += 1, 2, 5);
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = TableWriter::new("Demo", &["method", "ppl"]);
+        t.row(&["wanda".into(), "7.26".into()]);
+        t.row(&["w. ours".into(), "6.81".into()]);
+        let r = t.render();
+        assert!(r.contains("## Demo"));
+        assert!(r.lines().count() == 5);
+        let lens: Vec<usize> =
+            r.lines().skip(1).map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "{r}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        let mut t = TableWriter::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn ppl_formatting() {
+        assert_eq!(fmt_ppl(7.259), "7.26");
+        assert_eq!(fmt_ppl(48415.2), "48415");
+        assert_eq!(fmt_ppl(f64::INFINITY), "inf");
+    }
+}

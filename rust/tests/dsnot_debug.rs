@@ -1,0 +1,29 @@
+use ebft::data::{Batcher, MarkovCorpus, Split};
+use ebft::model::{Manifest, ParamStore};
+use ebft::runtime::Session;
+use std::path::Path;
+
+/// Diagnostic (run with `--ignored`): how many grow/prune swaps DSnoT makes
+/// on a Wanda-70% model, for tuning the heuristic's criteria.
+#[test]
+#[ignore]
+fn dsnot_swap_count() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let dir = root.join("artifacts/small");
+    let ckpt = root.join("runs/small-seed0-steps400.ebft");
+    if !dir.join("manifest.json").exists() || !ckpt.exists() {
+        eprintln!("skipping: artifacts or base checkpoint missing");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let session = Session::open(manifest).unwrap();
+    let corpus = MarkovCorpus::new(session.manifest.dims.vocab, 7);
+    let dense = ParamStore::load(&ckpt, &session.manifest).unwrap();
+    let d = session.manifest.dims.clone();
+    let calib = Batcher::new(&corpus, Split::Calib, 64, d.batch, d.seq).ordered_batches();
+    let mut params = dense.clone();
+    let mut masks = ebft::pruning::prune_model(&session, &mut params,
+        ebft::pruning::Method::Wanda, ebft::pruning::Pattern::Unstructured(0.7), &calib).unwrap();
+    let swaps = ebft::dsnot::run(&session, &params, &mut masks, &calib).unwrap();
+    eprintln!("total swaps: {swaps} over {} prunable", session.manifest.n_prunable());
+}

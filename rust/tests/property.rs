@@ -1,0 +1,297 @@
+//! Property-based tests on coordinator invariants (generative, seeded by
+//! our own PCG64 — no external proptest crate in this offline environment,
+//! so each property runs against a few hundred random cases and prints the
+//! failing seed on assertion).
+
+use ebft::data::{Batcher, MarkovCorpus, Split};
+use ebft::ebft::cache::ActivationCache;
+use ebft::masks::{mask_from_nm, mask_from_topk, mask_from_topk_per_col};
+use ebft::model::checkpoint;
+use ebft::tensor::{linalg, Tensor};
+use ebft::util::{Json, Pcg64};
+use std::collections::HashMap;
+
+const CASES: usize = 120;
+
+fn random_json(rng: &mut Pcg64, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.next_f32() < 0.5),
+        2 => {
+            // round-trippable doubles: small rationals
+            let v = (rng.next_f64() * 2e6).round() / 64.0 - 1e4;
+            Json::Num(v)
+        }
+        3 => {
+            let len = rng.below(12) as usize;
+            let s: String = (0..len)
+                .map(|_| {
+                    let c = rng.below(128) as u8;
+                    if c.is_ascii_graphic() || c == b' ' {
+                        c as char
+                    } else {
+                        match c % 4 {
+                            0 => '\n',
+                            1 => '"',
+                            2 => '\\',
+                            _ => '\u{e9}',
+                        }
+                    }
+                })
+                .collect();
+            Json::Str(s)
+        }
+        4 => {
+            let len = rng.below(5) as usize;
+            Json::Arr((0..len).map(|_| random_json(rng, depth - 1)).collect())
+        }
+        _ => {
+            let len = rng.below(5) as usize;
+            let mut obj = Json::obj();
+            for i in 0..len {
+                let key = format!("k{}_{}", i, rng.below(1000));
+                obj.set(&key, random_json(rng, depth - 1));
+            }
+            obj
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Pcg64::seeded(seed);
+        let j = random_json(&mut rng, 3);
+        let text = j.dump();
+        let back = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("seed {seed}: parse failed: {e}\n{text}"));
+        assert_eq!(j, back, "seed {seed}: roundtrip mismatch\n{text}");
+    }
+}
+
+#[test]
+fn prop_checkpoint_roundtrip() {
+    let dir = std::env::temp_dir();
+    for seed in 0..40u64 {
+        let mut rng = Pcg64::seeded(1000 + seed);
+        let n = 1 + rng.below(6) as usize;
+        let tensors: Vec<(String, Tensor)> = (0..n)
+            .map(|i| {
+                let rank = rng.below(3) as usize + 1;
+                let shape: Vec<usize> =
+                    (0..rank).map(|_| 1 + rng.below(8) as usize).collect();
+                (format!("t{i}"), Tensor::randn(&shape, 1.0, &mut rng))
+            })
+            .collect();
+        let path = dir.join(format!("ebft-prop-{}-{seed}.ebft",
+                                    std::process::id()));
+        let refs: Vec<(String, &Tensor)> =
+            tensors.iter().map(|(n, t)| (n.clone(), t)).collect();
+        checkpoint::save(&path, &refs).unwrap();
+        let loaded = checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.len(), tensors.len());
+        for ((n1, t1), (n2, t2)) in tensors.iter().zip(&loaded) {
+            assert_eq!(n1, n2);
+            assert_eq!(t1, t2, "seed {seed}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn prop_cache_matches_reference_model() {
+    // random put/get traffic under random budgets must behave exactly like
+    // a plain HashMap (spilling is transparent)
+    for seed in 0..30u64 {
+        let mut rng = Pcg64::seeded(2000 + seed);
+        let n = 2 + rng.below(6) as usize;
+        let shape = [1 + rng.below(3) as usize, 4];
+        let numel: usize = shape.iter().product();
+        let budget = (numel * 4) * (1 + rng.below(n as u64) as usize);
+        let mut cache = ActivationCache::new(n, &shape, budget,
+                                             &format!("prop{seed}"));
+        let mut reference: HashMap<usize, Tensor> = HashMap::new();
+        for _op in 0..60 {
+            let idx = rng.below(n as u64) as usize;
+            if rng.next_f32() < 0.5 {
+                let t = Tensor::randn(&shape, 1.0, &mut rng);
+                cache.put(idx, t.clone()).unwrap();
+                reference.insert(idx, t);
+            } else if let Some(want) = reference.get(&idx) {
+                let got = cache.get(idx).unwrap();
+                assert_eq!(&got, want, "seed {seed} idx {idx}");
+            }
+        }
+        // final sweep
+        for (idx, want) in &reference {
+            assert_eq!(&cache.get(*idx).unwrap(), want, "seed {seed} final");
+        }
+    }
+}
+
+#[test]
+fn prop_topk_masks_exact_counts() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Pcg64::seeded(3000 + seed);
+        let rows = 1 + rng.below(40) as usize;
+        let cols = 1 + rng.below(20) as usize;
+        let scores = Tensor::randn(&[rows, cols], 1.0, &mut rng);
+        let k_total = rng.below((rows * cols) as u64 + 1) as usize;
+        let m = mask_from_topk(&scores, k_total);
+        assert_eq!(m.count_nonzero(), k_total, "seed {seed}");
+
+        let k_col = rng.below(rows as u64 + 1) as usize;
+        let mc = mask_from_topk_per_col(&scores, k_col).unwrap();
+        for c in 0..cols {
+            let kept = (0..rows).filter(|&r| mc.at2(r, c) != 0.0).count();
+            assert_eq!(kept, k_col, "seed {seed} col {c}");
+        }
+    }
+}
+
+#[test]
+fn prop_nm_masks_valid_for_random_group_sizes() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Pcg64::seeded(4000 + seed);
+        let m_group = [2usize, 4, 8][rng.below(3) as usize];
+        let n_keep = 1 + rng.below(m_group as u64) as usize;
+        let rows = m_group * (1 + rng.below(8) as usize);
+        let cols = 1 + rng.below(12) as usize;
+        let scores = Tensor::randn(&[rows, cols], 1.0, &mut rng);
+        let mask = mask_from_nm(&scores, n_keep, m_group).unwrap();
+        for c in 0..cols {
+            for g in (0..rows).step_by(m_group) {
+                let kept = (g..g + m_group)
+                    .filter(|&r| mask.at2(r, c) != 0.0)
+                    .count();
+                assert_eq!(kept, n_keep, "seed {seed}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_cholesky_reconstructs_random_spd() {
+    for seed in 0..40u64 {
+        let mut rng = Pcg64::seeded(5000 + seed);
+        let n = 1 + rng.below(24) as usize;
+        let b = Tensor::randn(&[n, n], 1.0, &mut rng);
+        let mut a = b.transpose2().unwrap().matmul(&b).unwrap();
+        linalg::add_damping(&mut a, 0.1 + n as f32);
+        let l = linalg::cholesky(&a).unwrap();
+        let rec = l.matmul(&l.transpose2().unwrap()).unwrap();
+        let rel = a.sub(&rec).max_abs() / a.max_abs();
+        assert!(rel < 1e-4, "seed {seed} rel {rel}");
+        // inverse property
+        let inv = linalg::spd_inverse(&a).unwrap();
+        let prod = a.matmul(&inv).unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod.at2(i, j) - want).abs() < 5e-3,
+                        "seed {seed} ({i},{j})");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_batcher_epochs_are_permutations() {
+    let corpus = MarkovCorpus::new(64, 11);
+    for seed in 0..20u64 {
+        let mut rng = Pcg64::seeded(6000 + seed);
+        let batch = 1 + rng.below(4) as usize;
+        let n_batches = 1 + rng.below(5) as usize;
+        let n_seqs = batch * n_batches;
+        let b = Batcher::new(&corpus, Split::Calib, n_seqs, batch, 8);
+        for epoch in 0..3u64 {
+            let rows: Vec<Vec<i32>> = b
+                .epoch(epoch)
+                .into_iter()
+                .flat_map(|bt| bt.chunks_exact(8)
+                    .map(|c| c.to_vec()).collect::<Vec<_>>())
+                .collect();
+            assert_eq!(rows.len(), n_seqs);
+            // each expected sequence appears exactly once
+            let mut expected: Vec<Vec<i32>> = (0..n_seqs as u64)
+                .map(|i| corpus.sequence(Split::Calib, i, 8))
+                .collect();
+            let mut got = rows.clone();
+            expected.sort();
+            got.sort();
+            assert_eq!(expected, got, "seed {seed} epoch {epoch}");
+        }
+    }
+}
+
+#[test]
+fn prop_dsnot_reselect_invariants() {
+    for seed in 0..60u64 {
+        let mut rng = Pcg64::seeded(7000 + seed);
+        let rows = 4 + rng.below(28) as usize;
+        let cols = 1 + rng.below(8) as usize;
+        let w = Tensor::randn(&[rows, cols], 1.0, &mut rng);
+        let means = Tensor::randn(&[rows], 1.0, &mut rng);
+        let norms = means.map(f32::abs);
+        let density = 0.2 + 0.6 * rng.next_f32();
+        let k = ((rows * cols) as f32 * density) as usize;
+        let mask = mask_from_topk(&w.map(f32::abs), k);
+        let before_count = mask.count_nonzero();
+        let (new_mask, _swaps) =
+            ebft::dsnot::reselect(&w, &mask, &means, &norms, 20).unwrap();
+        assert_eq!(new_mask.count_nonzero(), before_count, "seed {seed}");
+        assert!(new_mask.data.iter().all(|&x| x == 0.0 || x == 1.0));
+        // per-column |err| must not increase
+        for c in 0..cols {
+            let err = |m: &Tensor| -> f64 {
+                (0..rows)
+                    .filter(|&r| m.at2(r, c) == 0.0)
+                    .map(|r| -(w.at2(r, c) * means.data[r]) as f64)
+                    .sum()
+            };
+            assert!(err(&new_mask).abs() <= err(&mask).abs() + 1e-6,
+                    "seed {seed} col {c}");
+        }
+    }
+}
+
+#[test]
+fn prop_sparsegpt_sparsity_and_finiteness() {
+    for seed in 0..25u64 {
+        let mut rng = Pcg64::seeded(8000 + seed);
+        let rows = 8 * (1 + rng.below(6) as usize);
+        let cols = 1 + rng.below(12) as usize;
+        let w = Tensor::randn(&[rows, cols], 1.0, &mut rng);
+        let x = Tensor::randn(&[rows * 2, rows], 1.0, &mut rng);
+        let gram = x.transpose2().unwrap().matmul(&x).unwrap();
+        let s = [0.25f32, 0.5, 0.75][rng.below(3) as usize];
+        let (mask, new_w) = ebft::pruning::sparsegpt::prune(
+            &w, &gram, ebft::pruning::Pattern::Unstructured(s)).unwrap();
+        let got = 1.0 - mask.count_nonzero() as f64 / mask.numel() as f64;
+        assert!((got - s as f64).abs() < 0.06, "seed {seed} s={s} got={got}");
+        assert!(new_w.data.iter().all(|v| v.is_finite()), "seed {seed}");
+        for (wv, mv) in new_w.data.iter().zip(&mask.data) {
+            if *mv == 0.0 {
+                assert_eq!(*wv, 0.0, "seed {seed}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_zero_shot_items_always_well_formed() {
+    let corpus = MarkovCorpus::new(128, 13);
+    for seed in 0..20u64 {
+        for task in ebft::data::zeroshot::ALL_TASKS {
+            for item in task.items(&corpus, 6, 48, seed) {
+                assert!(item.correct < item.choices.len());
+                let len0 = item.choices[0].len();
+                for ch in &item.choices {
+                    assert_eq!(ch.len(), len0);
+                    assert!(item.prompt.len() + ch.len() <= 48);
+                    assert!(ch.iter().all(|&t| (0..128).contains(&t)));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! Integration: the AOT bridge end-to-end — manifest → PJRT → numerics.
+//!
+//! Requires `make artifacts` (skips otherwise). Uses the `tiny` config.
+
+use ebft::masks::MaskSet;
+use ebft::model::{Manifest, ParamStore};
+use ebft::runtime::{Session, Value};
+use ebft::tensor::Tensor;
+use ebft::util::Pcg64;
+use std::path::Path;
+
+fn open_tiny() -> Option<(Session, ParamStore)> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/tiny not built");
+        return None;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let params = ParamStore::from_init_bin(&manifest).unwrap();
+    Some((Session::open(manifest).unwrap(), params))
+}
+
+fn dense_block_inputs<'a>(params: &'a ParamStore, session: &Session,
+                          masks: &'a MaskSet, l: usize) -> Vec<Value<'a>> {
+    let mut inputs: Vec<Value> = params
+        .block_params(&session.manifest, l)
+        .into_iter()
+        .map(Value::F32)
+        .collect();
+    for m in masks.block(l) {
+        inputs.push(Value::F32(m));
+    }
+    inputs
+}
+
+fn random_tokens(session: &Session, seed: u64) -> Vec<i32> {
+    let d = &session.manifest.dims;
+    let mut rng = Pcg64::seeded(seed);
+    (0..d.batch * d.seq)
+        .map(|_| rng.below(d.vocab as u64) as i32)
+        .collect()
+}
+
+#[test]
+fn decomposed_chain_matches_monolithic_lm_loss() {
+    let Some((session, params)) = open_tiny() else { return };
+    let d = session.manifest.dims.clone();
+    let masks = MaskSet::dense(&session.manifest);
+    let tokens = random_tokens(&session, 1);
+    let tok_shape = [d.batch, d.seq];
+
+    // decomposed: embed → blocks → head
+    let x0 = session
+        .run("embed_fwd", &[
+            Value::F32(params.get("embed").unwrap()),
+            Value::I32(&tok_shape, &tokens),
+        ])
+        .unwrap()
+        .remove(0);
+    let mut x = x0;
+    for l in 0..d.n_layers {
+        let mut inputs = dense_block_inputs(&params, &session, &masks, l);
+        inputs.push(Value::F32(&x));
+        x = session.run("block_fwd", &inputs).unwrap().remove(0);
+    }
+    let out = session
+        .run("head_loss", &[
+            Value::F32(params.get("final.norm.g").unwrap()),
+            Value::F32(params.get("final.head").unwrap()),
+            Value::F32(&x),
+            Value::I32(&tok_shape, &tokens),
+        ])
+        .unwrap();
+    let decomposed = out[0].item() / out[1].item();
+
+    // monolithic lm_loss
+    let mut inputs: Vec<Value> =
+        params.tensors.iter().map(Value::F32).collect();
+    for l in 0..d.n_layers {
+        for m in masks.block(l) {
+            inputs.push(Value::F32(m));
+        }
+    }
+    inputs.push(Value::I32(&tok_shape, &tokens));
+    let mono = session.run("lm_loss", &inputs).unwrap()[0].item();
+
+    assert!((decomposed - mono).abs() < 1e-4,
+            "decomposed {decomposed} vs monolithic {mono}");
+    // sanity: near ln(vocab) for random init
+    assert!((mono - (d.vocab as f32).ln()).abs() < 1.0);
+}
+
+#[test]
+fn block_ft_step_converges_on_recoverable_target() {
+    let Some((session, params)) = open_tiny() else { return };
+    let d = session.manifest.dims.clone();
+    let masks = MaskSet::dense(&session.manifest);
+    let mut rng = Pcg64::seeded(7);
+    let x = Tensor::randn(&[d.batch, d.seq, d.d_model], 1.0, &mut rng);
+
+    // target: the same block's dense output (recoverable exactly)
+    let mut inputs = dense_block_inputs(&params, &session, &masks, 0);
+    inputs.push(Value::F32(&x));
+    let target = session.run("block_fwd", &inputs).unwrap().remove(0);
+
+    // perturb the weights, then fine-tune back
+    let mut bp: Vec<Tensor> = params
+        .block_params(&session.manifest, 0)
+        .into_iter()
+        .cloned()
+        .collect();
+    for t in bp.iter_mut().take(7) {
+        let noise = Tensor::randn(&t.shape, 0.05, &mut rng);
+        *t = t.add(&noise);
+    }
+    let mut m_st: Vec<Tensor> =
+        bp.iter().map(|t| Tensor::zeros(&t.shape)).collect();
+    let mut v_st = m_st.clone();
+
+    let mut first_loss = f32::NAN;
+    let mut last_loss = f32::NAN;
+    for step in 1..=40 {
+        let mut ins: Vec<Value> = bp.iter().map(Value::F32).collect();
+        for m in masks.block(0) {
+            ins.push(Value::F32(m));
+        }
+        for t in &m_st {
+            ins.push(Value::F32(t));
+        }
+        for t in &v_st {
+            ins.push(Value::F32(t));
+        }
+        ins.push(Value::Scalar(step as f32));
+        ins.push(Value::Scalar(5e-3));
+        ins.push(Value::F32(&x));
+        ins.push(Value::F32(&target));
+        let mut outs = session.run("block_ft_step", &ins).unwrap();
+        let loss = outs.pop().unwrap().item();
+        if step == 1 {
+            first_loss = loss;
+        }
+        last_loss = loss;
+        v_st = outs.split_off(18);
+        m_st = outs.split_off(9);
+        bp = outs;
+    }
+    assert!(last_loss < first_loss * 0.2,
+            "no convergence: first {first_loss} last {last_loss}");
+}
+
+#[test]
+fn pallas_and_xla_block_fwd_agree() {
+    let Some((session, params)) = open_tiny() else { return };
+    let d = session.manifest.dims.clone();
+    let masks = MaskSet::dense(&session.manifest);
+    let mut rng = Pcg64::seeded(9);
+    let x = Tensor::randn(&[d.batch, d.seq, d.d_model], 1.0, &mut rng);
+
+    let mut inputs = dense_block_inputs(&params, &session, &masks, 1);
+    inputs.push(Value::F32(&x));
+    let y_xla = session.run("block_fwd", &inputs).unwrap().remove(0);
+
+    let mut inputs = dense_block_inputs(&params, &session, &masks, 1);
+    inputs.push(Value::F32(&x));
+    let y_pallas = session.run("block_fwd_pallas", &inputs).unwrap().remove(0);
+
+    let diff = y_xla.sub(&y_pallas).max_abs();
+    assert!(diff < 1e-3, "pallas vs xla block_fwd diff {diff}");
+}
+
+#[test]
+fn masked_weights_do_not_affect_output() {
+    // zeroing a pruned weight's value must not change block output
+    let Some((session, params)) = open_tiny() else { return };
+    let d = session.manifest.dims.clone();
+    let mut rng = Pcg64::seeded(11);
+    let x = Tensor::randn(&[d.batch, d.seq, d.d_model], 1.0, &mut rng);
+
+    let mut masks = MaskSet::dense(&session.manifest);
+    // prune half of wq
+    let shape = masks.masks[0][0].shape.clone();
+    let scores = Tensor::randn(&shape, 1.0, &mut rng);
+    masks.masks[0][0] =
+        ebft::masks::mask_from_topk(&scores, shape.iter().product::<usize>() / 2);
+
+    let mut inputs = dense_block_inputs(&params, &session, &masks, 0);
+    inputs.push(Value::F32(&x));
+    let y1 = session.run("block_fwd", &inputs).unwrap().remove(0);
+
+    // scramble pruned positions of wq; output must be identical
+    let mut bp: Vec<Tensor> = params
+        .block_params(&session.manifest, 0)
+        .into_iter()
+        .cloned()
+        .collect();
+    let m = &masks.masks[0][0];
+    for (w, &mk) in bp[0].data.iter_mut().zip(&m.data) {
+        if mk == 0.0 {
+            *w = 999.0;
+        }
+    }
+    let mut inputs: Vec<Value> = bp.iter().map(Value::F32).collect();
+    for m in masks.block(0) {
+        inputs.push(Value::F32(m));
+    }
+    inputs.push(Value::F32(&x));
+    let y2 = session.run("block_fwd", &inputs).unwrap().remove(0);
+
+    assert_eq!(y1.data, y2.data);
+}
+
+#[test]
+fn input_validation_rejects_bad_shapes() {
+    let Some((session, params)) = open_tiny() else { return };
+    let bad = Tensor::ones(&[1, 2, 3]);
+    let err = session.run("embed_fwd", &[
+        Value::F32(params.get("embed").unwrap()),
+        Value::F32(&bad),
+    ]);
+    assert!(err.is_err());
+    let err2 = session.run("embed_fwd", &[Value::F32(&bad)]);
+    assert!(err2.is_err());
+}

@@ -1,0 +1,94 @@
+//! Error-path coverage for the manifest-driven runtime: every malformed
+//! call must fail *before* reaching PJRT, with an actionable message.
+
+use ebft::model::Manifest;
+use ebft::runtime::{Session, Value};
+use ebft::tensor::Tensor;
+use std::path::Path;
+
+fn open_tiny() -> Option<Session> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/tiny not built");
+        return None;
+    }
+    Some(Session::open(Manifest::load(&dir).unwrap()).unwrap())
+}
+
+#[test]
+fn session_error_paths() {
+    let Some(session) = open_tiny() else { return };
+    let d = session.manifest.dims.clone();
+
+    // unknown artifact
+    let err = session.run("not_an_artifact", &[]).unwrap_err();
+    assert!(format!("{err:#}").contains("not_an_artifact"));
+
+    // wrong arity
+    let embed = Tensor::zeros(&[d.vocab, d.d_model]);
+    let err = session.run("embed_fwd", &[Value::F32(&embed)]).unwrap_err();
+    assert!(format!("{err:#}").contains("inputs"));
+
+    // wrong shape (named in the message)
+    let toks = vec![0i32; d.batch * d.seq];
+    let bad_embed = Tensor::zeros(&[d.vocab, d.d_model + 1]);
+    let err = session
+        .run("embed_fwd", &[
+            Value::F32(&bad_embed),
+            Value::I32(&[d.batch, d.seq], &toks),
+        ])
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("embed"), "message should name the input: {msg}");
+
+    // wrong dtype: f32 where tokens expected
+    let f32_toks = Tensor::zeros(&[d.batch, d.seq]);
+    let err = session
+        .run("embed_fwd", &[Value::F32(&embed), Value::F32(&f32_toks)])
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("dtype"));
+
+    // scalar where tensor expected
+    let err = session
+        .run("embed_fwd", &[Value::Scalar(1.0),
+                            Value::I32(&[d.batch, d.seq], &toks)])
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("embed_fwd"));
+
+    // Lit with wrong element count
+    let small = ebft::runtime::lit_f32(&Tensor::zeros(&[2, 2])).unwrap();
+    let err = session
+        .run("embed_fwd", &[Value::Lit(&small),
+                            Value::I32(&[d.batch, d.seq], &toks)])
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("elements"));
+
+    // valid call still works after all the failures (no poisoned state)
+    let ok = session.run("embed_fwd", &[
+        Value::F32(&embed),
+        Value::I32(&[d.batch, d.seq], &toks),
+    ]);
+    assert!(ok.is_ok());
+    assert_eq!(session.total_executions(), 1);
+}
+
+#[test]
+fn manifest_rejects_corruption() {
+    let Some(session) = open_tiny() else { return };
+    let dir = session.manifest.dir.clone();
+    // copy manifest, corrupt a field, expect load failure
+    let tmp = std::env::temp_dir().join(format!("ebft-corrupt-{}",
+                                                std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    // drop a required artifact
+    let corrupted = text.replace("\"block_ft_step\"", "\"renamed_step\"");
+    std::fs::write(tmp.join("manifest.json"), corrupted).unwrap();
+    let err = Manifest::load(&tmp).unwrap_err();
+    assert!(format!("{err:#}").contains("block_ft_step"));
+    // truncated JSON
+    std::fs::write(tmp.join("manifest.json"), &text[..text.len() / 2])
+        .unwrap();
+    assert!(Manifest::load(&tmp).is_err());
+    std::fs::remove_dir_all(&tmp).ok();
+}
