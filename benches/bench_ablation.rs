@@ -9,10 +9,9 @@
 
 use ebft::bench_support::BenchEnv;
 use ebft::config::FtConfig;
-use ebft::coordinator::{Experiment, FtVariant};
 use ebft::data::Split;
 use ebft::masks::MaskSet;
-use ebft::pruning::{Method, Pattern};
+use ebft::pruning::Pattern;
 use ebft::runtime::Value;
 use ebft::tensor::Tensor;
 use ebft::util::metrics::{fmt_ppl, time_it};
@@ -83,12 +82,10 @@ fn main() -> anyhow::Result<()> {
         "Ablation (b) — convergence early-stop",
         &["early-stop", "ft secs", "ppl"]);
     for (tol, label) in [(1e-3f32, "on"), (0.0, "off")] {
-        let exp = Experiment {
-            ft: FtConfig { converge_tol: tol, ..FtConfig::default() },
-            ..env.experiment()
-        };
-        let cell = exp.run_cell(Method::Wanda, Pattern::Unstructured(0.7),
-                                FtVariant::Ebft)?;
+        let pipe = env.pipeline_with(FtConfig { converge_tol: tol,
+                                                ..FtConfig::default() })?;
+        let cell = pipe.run_named("wanda", Pattern::Unstructured(0.7),
+                                  "ebft")?;
         table.row(&[label.into(), format!("{:.1}", cell.ft_secs),
                     fmt_ppl(cell.ppl)]);
         results.set(&format!("earlystop_{label}_ppl"), Json::Num(cell.ppl));
@@ -104,20 +101,20 @@ fn main() -> anyhow::Result<()> {
     let mut table = TableWriter::new(
         "Ablation (c) — calibration split (Wanda 70% + EBFT)",
         &["calibration", "ppl"]);
+    let ft = FtConfig::default();
     for (split, label) in [(Split::Calib, "C4-sim (paper)"),
                            (Split::WikiSim, "eval-dist (oracle)")] {
-        let exp = env.experiment();
         let d = &env.session.manifest.dims;
         let calib = ebft::data::Batcher::with_offset(
-            &env.corpus, split, 10_000, exp.ft.calib_seqs, d.batch, d.seq)
+            &env.corpus, split, 10_000, ft.calib_seqs, d.batch, d.seq)
             .ordered_batches();
         let mut params = env.dense.clone();
         let masks = ebft::pruning::prune_model(
-            &env.session, &mut params, Method::Wanda,
+            &env.session, &mut params, &ebft::pruning::wanda::Wanda,
             Pattern::Unstructured(0.7), &calib)?;
         let mut ft_params = params.clone();
         ebft::ebft::finetune(&env.session, &env.dense, &mut ft_params, &masks,
-                             &exp.ft, &calib, "xla")?;
+                             &ft, &calib, "xla")?;
         let ppl = ebft::eval::perplexity(&env.session, &ft_params, &masks,
                                          &env.corpus, Split::WikiSim, 64)?;
         table.row(&[label.into(), fmt_ppl(ppl)]);

@@ -6,8 +6,7 @@
 
 use ebft::bench_support::{full_grid, BenchEnv};
 use ebft::config::FtConfig;
-use ebft::coordinator::{Experiment, FtVariant};
-use ebft::pruning::{Method, Pattern};
+use ebft::pruning::Pattern;
 use ebft::util::metrics::fmt_ppl;
 use ebft::util::{Json, TableWriter};
 
@@ -20,9 +19,9 @@ fn main() -> anyhow::Result<()> {
     };
 
     // reference: pruned, no fine-tuning
-    let exp0 = env.experiment();
-    let base = exp0.run_cell(Method::Wanda, Pattern::Unstructured(0.5),
-                             FtVariant::None)?;
+    let base = env
+        .pipeline()?
+        .run_named("wanda", Pattern::Unstructured(0.5), "none")?;
     println!("wanda@50% before fine-tuning: ppl {}", fmt_ppl(base.ppl));
 
     let mut table = TableWriter::new(
@@ -31,12 +30,10 @@ fn main() -> anyhow::Result<()> {
     let mut series = Json::obj();
     series.set("no_ft", Json::Num(base.ppl));
     for &n in &sample_counts {
-        let exp = Experiment {
-            ft: FtConfig { calib_seqs: n, ..FtConfig::default() },
-            ..env.experiment()
-        };
-        let cell = exp.run_cell(Method::Wanda, Pattern::Unstructured(0.5),
-                                FtVariant::Ebft)?;
+        let pipe = env.pipeline_with(FtConfig { calib_seqs: n,
+                                                ..FtConfig::default() })?;
+        let cell = pipe.run_named("wanda", Pattern::Unstructured(0.5),
+                                  "ebft")?;
         table.row(&[n.to_string(), fmt_ppl(cell.ppl)]);
         series.set(&n.to_string(), Json::Num(cell.ppl));
     }

@@ -5,8 +5,8 @@
 //! MiniLlama-B and sparsities {60, 80} (the paper-complete grid).
 
 use ebft::bench_support::{full_grid, model_indices, BenchEnv};
-use ebft::coordinator::FtVariant;
-use ebft::pruning::{Method, Pattern};
+use ebft::coordinator::{recovery, Grid};
+use ebft::pruning::Pattern;
 use ebft::util::metrics::fmt_ppl;
 use ebft::util::{Json, TableWriter};
 
@@ -16,15 +16,21 @@ fn main() -> anyhow::Result<()> {
     } else {
         vec![0.5, 0.7, 0.9]
     };
-    let methods = [Method::Magnitude, Method::Wanda, Method::SparseGpt];
-    let variants = [FtVariant::None, FtVariant::Dsnot, FtVariant::Ebft];
+    let methods = ["magnitude", "wanda", "sparsegpt"];
+    let recoveries = ["none", "dsnot", "ebft"];
+    let patterns: Vec<Pattern> =
+        sparsities.iter().map(|&s| Pattern::Unstructured(s)).collect();
 
     let mut results = Json::obj();
     for model_idx in model_indices() {
         let env = BenchEnv::open(model_idx)?;
-        let exp = env.experiment();
-        let dense_ppl = exp.dense_ppl()?;
+        let pipe = env.pipeline()?;
+        let dense_ppl = pipe.dense_ppl()?;
         println!("=== {} (dense ppl {}) ===", env.label, fmt_ppl(dense_ppl));
+
+        // one sweep; each pruned checkpoint is shared across recoveries
+        let grid = Grid::new(&methods, &patterns, &recoveries)?;
+        let swept = grid.run(&pipe)?;
 
         let mut headers = vec!["method".to_string()];
         headers.extend(sparsities.iter().map(|s| format!("{}%",
@@ -35,19 +41,22 @@ fn main() -> anyhow::Result<()> {
 
         let mut model_json = Json::obj();
         for method in methods {
-            for variant in variants {
-                let row_label = match variant {
-                    FtVariant::None => method.label().to_string(),
-                    v => format!("  {}", v.label()),
+            for rec in recoveries {
+                let rec_label = recovery(rec)?.label();
+                let row_label = if rec == "none" {
+                    method.to_string()
+                } else {
+                    format!("  {rec_label}")
                 };
-                let mut cells = vec![row_label.clone()];
+                let mut cells = vec![row_label];
                 for &s in &sparsities {
-                    let cell = exp.run_cell(method, Pattern::Unstructured(s),
-                                            variant)?;
+                    let cell = swept
+                        .find(method, Pattern::Unstructured(s), rec)
+                        .expect("grid cell missing");
                     cells.push(fmt_ppl(cell.ppl));
                     model_json.set(
-                        &format!("{}/{}/{}", method.label(),
-                                 variant.label(), (s * 100.0) as u32),
+                        &format!("{method}/{rec_label}/{}",
+                                 (s * 100.0) as u32),
                         Json::Num(cell.ppl));
                 }
                 table.row(&cells);

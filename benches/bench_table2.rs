@@ -2,38 +2,46 @@
 //! methods {magnitude, wanda, sparsegpt} × {raw, DSnoT, EBFT}.
 
 use ebft::bench_support::{model_indices, BenchEnv};
-use ebft::coordinator::FtVariant;
-use ebft::pruning::{Method, Pattern};
+use ebft::coordinator::{recovery, Grid};
+use ebft::pruning::Pattern;
 use ebft::util::metrics::fmt_ppl;
 use ebft::util::{Json, TableWriter};
 
 fn main() -> anyhow::Result<()> {
     let patterns = [Pattern::NM(2, 4), Pattern::NM(4, 8)];
-    let methods = [Method::Magnitude, Method::Wanda, Method::SparseGpt];
-    let variants = [FtVariant::None, FtVariant::Dsnot, FtVariant::Ebft];
+    let methods = ["magnitude", "wanda", "sparsegpt"];
+    let recoveries = ["none", "dsnot", "ebft"];
 
     let mut results = Json::obj();
     for model_idx in model_indices() {
         let env = BenchEnv::open(model_idx)?;
-        let exp = env.experiment();
+        let pipe = env.pipeline()?;
         println!("=== {} ===", env.label);
+
+        let grid = Grid::new(&methods, &patterns, &recoveries)?;
+        let swept = grid.run(&pipe)?;
+
         let mut table = TableWriter::new(
             &format!("Table 2 — {} N:M", env.label),
             &["method", "2:4", "4:8"]);
         let mut model_json = Json::obj();
         for method in methods {
-            for variant in variants {
-                let row_label = match variant {
-                    FtVariant::None => method.label().to_string(),
-                    v => format!("  {}", v.label()),
+            for rec in recoveries {
+                let rec_label = recovery(rec)?.label();
+                let row_label = if rec == "none" {
+                    method.to_string()
+                } else {
+                    format!("  {rec_label}")
                 };
                 let mut cells = vec![row_label];
                 for pattern in patterns {
-                    let cell = exp.run_cell(method, pattern, variant)?;
+                    let cell = swept
+                        .find(method, pattern, rec)
+                        .expect("grid cell missing");
                     cells.push(fmt_ppl(cell.ppl));
                     model_json.set(
-                        &format!("{}/{}/{}", method.label(),
-                                 variant.label(), pattern.label()),
+                        &format!("{method}/{rec_label}/{}",
+                                 pattern.label()),
                         Json::Num(cell.ppl));
                 }
                 table.row(&cells);

@@ -4,9 +4,9 @@
 //! Default grid: 60 % only; EBFT_FULL=1 adds the 2:4 pattern.
 
 use ebft::bench_support::{full_grid, model_indices, BenchEnv};
-use ebft::coordinator::FtVariant;
+use ebft::coordinator::{pruner, recovery};
 use ebft::eval::zeroshot::{mean_accuracy, run_suite};
-use ebft::pruning::{Method, Pattern};
+use ebft::pruning::Pattern;
 use ebft::util::{Json, TableWriter};
 
 const ITEMS: usize = 32;
@@ -17,13 +17,13 @@ fn main() -> anyhow::Result<()> {
     } else {
         vec![Pattern::Unstructured(0.6)]
     };
-    let methods = [Method::Magnitude, Method::Wanda, Method::SparseGpt];
-    let variants = [FtVariant::None, FtVariant::Dsnot, FtVariant::Ebft];
+    let methods = ["magnitude", "wanda", "sparsegpt"];
+    let recoveries = ["none", "dsnot", "ebft"];
 
     let mut results = Json::obj();
     for model_idx in model_indices() {
         let env = BenchEnv::open(model_idx)?;
-        let exp = env.experiment();
+        let pipe = env.pipeline()?;
         for &pattern in &patterns {
             println!("=== {} @ {} ===", env.label, pattern.label());
             let mut headers: Vec<String> =
@@ -50,14 +50,20 @@ fn main() -> anyhow::Result<()> {
             table.row(&cells);
 
             for method in methods {
-                for variant in variants {
-                    let (params, masks) =
-                        exp.run_cell_model(method, pattern, variant)?;
-                    let res = run_suite(&env.session, &params, &masks,
-                                        &env.corpus, ITEMS, 3)?;
-                    let row_label = match variant {
-                        FtVariant::None => method.label().to_string(),
-                        v => format!("  {}", v.label()),
+                // prune once; recoveries share the pruned checkpoint, and
+                // skip the perplexity stage (zero-shot is the metric here)
+                let pruned = pipe.prune(pruner(method)?, pattern)?;
+                for rec in recoveries {
+                    let rec_label = recovery(rec)?.label();
+                    let recovered =
+                        pipe.recover_model(&pruned, recovery(rec)?)?;
+                    let res = run_suite(&env.session, &recovered.params,
+                                        &recovered.masks, &env.corpus,
+                                        ITEMS, 3)?;
+                    let row_label = if rec == "none" {
+                        method.to_string()
+                    } else {
+                        format!("  {rec_label}")
                     };
                     let mut cells = vec![row_label];
                     cells.extend(res.iter()
@@ -67,7 +73,7 @@ fn main() -> anyhow::Result<()> {
                     table.row(&cells);
                     results.set(
                         &format!("{}/{}/{}/{}", env.label, pattern.label(),
-                                 method.label(), variant.label()),
+                                 method, rec_label),
                         Json::Num(mean));
                 }
             }

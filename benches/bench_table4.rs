@@ -6,8 +6,8 @@
 
 use ebft::bench_support::BenchEnv;
 use ebft::config::FtConfig;
-use ebft::data::Split;
-use ebft::eval;
+use ebft::coordinator::{pruner, recovery};
+use ebft::pruning::Pattern;
 use ebft::util::metrics::fmt_ppl;
 use ebft::util::{Json, TableWriter};
 
@@ -17,8 +17,9 @@ const LORA_STEPS: usize = 800;
 
 fn main() -> anyhow::Result<()> {
     let env = BenchEnv::open(0)?;
-    let exp = env.experiment();
-    let dense_ppl = exp.dense_ppl()?;
+    let pipe = env.pipeline_with(FtConfig { lora_steps: LORA_STEPS,
+                                            ..FtConfig::default() })?;
+    let dense_ppl = pipe.dense_ppl()?;
     println!("dense ppl {}", fmt_ppl(dense_ppl));
 
     let mut table = TableWriter::new(
@@ -26,31 +27,22 @@ fn main() -> anyhow::Result<()> {
         &["method", "sparsity", "time(s)", "perplexity"]);
     let mut results = Json::obj();
 
+    // FLAP once; both recoveries share the pruned checkpoint
+    let pruned = pipe.prune(pruner("flap")?, Pattern::Structured(0.20))?;
+
     // --- LoRA ---
-    let (lora_params, lora_masks, lora_secs) =
-        exp.run_structured(0.20, true, LORA_STEPS)?;
-    let lora_ppl = eval::perplexity(&env.session, &lora_params, &lora_masks,
-                                    &env.corpus, Split::WikiSim, 64)?;
-    table.row(&["LoRA".into(), "20%".into(), format!("{lora_secs:.1}"),
-                fmt_ppl(lora_ppl)]);
+    let (_, _, lora) = pipe.recover(&pruned, recovery("lora")?)?;
+    table.row(&["LoRA".into(), "20%".into(), format!("{:.1}", lora.ft_secs),
+                fmt_ppl(lora.ppl)]);
 
     // --- EBFT (with per-block timing, the §4 cost table) ---
-    let (ebft_params, ebft_masks, ebft_secs) =
-        exp.run_structured(0.20, false, 0)?;
-    let ebft_ppl = eval::perplexity(&env.session, &ebft_params, &ebft_masks,
-                                    &env.corpus, Split::WikiSim, 64)?;
-    table.row(&["Ours".into(), "20%".into(), format!("{ebft_secs:.1}"),
-                fmt_ppl(ebft_ppl)]);
+    let (_, _, ours) = pipe.recover(&pruned, recovery("ebft")?)?;
+    table.row(&["Ours".into(), "20%".into(), format!("{:.1}", ours.ft_secs),
+                fmt_ppl(ours.ppl)]);
     table.print();
 
-    // per-block timing detail (run finetune directly for the report)
-    let calib = exp.calib_batches();
-    let masks = ebft::pruning::flap::prune_model(&env.session, &env.dense,
-                                                 0.20, &calib)?;
-    let mut params = env.dense.clone();
-    let report = ebft::ebft::finetune(&env.session, &env.dense, &mut params,
-                                      &masks, &FtConfig::default(), &calib,
-                                      "xla")?;
+    // per-block timing detail from the EBFT recovery's own report
+    let report = ours.ebft_report.as_ref().expect("ebft recovery report");
     println!("per-block fine-tuning cost (the paper's 50–60 s/block story):");
     for b in &report.per_block {
         println!("  block {}: {:.2}s  ({} steps, loss {:.4} → {:.4}{})",
@@ -60,15 +52,15 @@ fn main() -> anyhow::Result<()> {
     println!("  total {:.1}s, mean {:.2}s/block", report.total_secs,
              report.mean_block_secs());
 
-    let speedup = lora_secs / ebft_secs.max(1e-9);
+    let speedup = lora.ft_secs / ours.ft_secs.max(1e-9);
     println!("EBFT speedup over LoRA: {speedup:.1}×  \
               (paper reports ~10× at Llama-7B scale)");
 
     results.set("dense_ppl", Json::Num(dense_ppl));
-    results.set("lora_ppl", Json::Num(lora_ppl));
-    results.set("lora_secs", Json::Num(lora_secs));
-    results.set("ebft_ppl", Json::Num(ebft_ppl));
-    results.set("ebft_secs", Json::Num(ebft_secs));
+    results.set("lora_ppl", Json::Num(lora.ppl));
+    results.set("lora_secs", Json::Num(lora.ft_secs));
+    results.set("ebft_ppl", Json::Num(ours.ppl));
+    results.set("ebft_secs", Json::Num(ours.ft_secs));
     results.set("speedup", Json::Num(speedup));
     results.set("mean_block_secs", Json::Num(report.mean_block_secs()));
     env.write_json("table4", &results)?;

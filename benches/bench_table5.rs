@@ -5,9 +5,10 @@
 //! Default grid: MiniLlama-A; EBFT_FULL=1 adds MiniLlama-B.
 
 use ebft::bench_support::{model_indices, BenchEnv};
-use ebft::data::Split;
-use ebft::eval;
+use ebft::config::FtConfig;
+use ebft::coordinator::{pruner, recovery};
 use ebft::eval::zeroshot::{mean_accuracy, run_suite};
+use ebft::pruning::Pattern;
 use ebft::util::metrics::fmt_ppl;
 use ebft::util::{Json, TableWriter};
 
@@ -19,18 +20,20 @@ fn main() -> anyhow::Result<()> {
     let mut results = Json::obj();
     for model_idx in model_indices() {
         let env = BenchEnv::open(model_idx)?;
-        let exp = env.experiment();
+        let pipe = env.pipeline_with(FtConfig { lora_steps: LORA_STEPS,
+                                                ..FtConfig::default() })?;
         println!("=== {} ===", env.label);
         let mut table = TableWriter::new(
             &format!("Table 5 — {} LoRA vs EBFT (structured budgets)",
                      env.label),
             &["budget", "method", "zero-shot mean", "wiki ppl"]);
         for &budget in &budgets {
-            for (use_lora, name) in [(true, "LoRA"), (false, "Ours")] {
-                let (params, masks, _secs) =
-                    exp.run_structured(budget, use_lora, LORA_STEPS)?;
-                let ppl = eval::perplexity(&env.session, &params, &masks,
-                                           &env.corpus, Split::WikiSim, 64)?;
+            let pruned =
+                pipe.prune(pruner("flap")?, Pattern::Structured(budget))?;
+            for (rec, name) in [("lora", "LoRA"), ("ebft", "Ours")] {
+                let (params, masks, record) =
+                    pipe.recover(&pruned, recovery(rec)?)?;
+                let ppl = record.ppl;
                 let zs = run_suite(&env.session, &params, &masks, &env.corpus,
                                    ITEMS, 3)?;
                 let mean = mean_accuracy(&zs);

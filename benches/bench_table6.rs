@@ -5,8 +5,8 @@
 //! weight tuning at every sparsity.
 
 use ebft::bench_support::{full_grid, model_indices, BenchEnv};
-use ebft::coordinator::FtVariant;
-use ebft::pruning::{Method, Pattern};
+use ebft::coordinator::Grid;
+use ebft::pruning::Pattern;
 use ebft::util::metrics::fmt_ppl;
 use ebft::util::{Json, TableWriter};
 
@@ -16,11 +16,17 @@ fn main() -> anyhow::Result<()> {
     } else {
         vec![0.5, 0.7, 0.9]
     };
+    let patterns: Vec<Pattern> =
+        sparsities.iter().map(|&s| Pattern::Unstructured(s)).collect();
     let mut results = Json::obj();
     for model_idx in model_indices() {
         let env = BenchEnv::open(model_idx)?;
-        let exp = env.experiment();
+        let pipe = env.pipeline()?;
         println!("=== {} ===", env.label);
+
+        let grid = Grid::new(&["wanda"], &patterns, &["masktune", "ebft"])?;
+        let swept = grid.run(&pipe)?;
+
         let mut headers = vec!["method".to_string()];
         headers.extend(sparsities.iter()
                            .map(|s| format!("{}%", (s * 100.0) as u32)));
@@ -29,12 +35,12 @@ fn main() -> anyhow::Result<()> {
             &format!("Table 6 — {} mask vs weight tuning (Wanda init)",
                      env.label),
             &hdr_refs);
-        for (variant, label) in [(FtVariant::MaskTune, "w.Mask"),
-                                 (FtVariant::Ebft, "w.Weight")] {
+        for (rec, label) in [("masktune", "w.Mask"), ("ebft", "w.Weight")] {
             let mut cells = vec![label.to_string()];
             for &s in &sparsities {
-                let cell = exp.run_cell(Method::Wanda,
-                                        Pattern::Unstructured(s), variant)?;
+                let cell = swept
+                    .find("wanda", Pattern::Unstructured(s), rec)
+                    .expect("grid cell missing");
                 cells.push(fmt_ppl(cell.ppl));
                 results.set(&format!("{}/{}/{}", env.label, label,
                                      (s * 100.0) as u32),

@@ -2,15 +2,15 @@
 //! pretrain the `small` MiniLlama for a few hundred steps on the synthetic
 //! corpus with the loss curve logged, prune at 50 % and 70 % with Wanda,
 //! recover with EBFT, and report the full perplexity table plus per-block
-//! timing. Results are recorded in EXPERIMENTS.md.
+//! timing.
 //!
 //!   cargo run --release --example e2e_train_prune_finetune
 
 use ebft::bench_support::{BenchEnv, BASE_STEPS};
-use ebft::coordinator::FtVariant;
+use ebft::coordinator::{pruner, recovery};
 use ebft::data::{MarkovCorpus, Split};
 use ebft::pretrain;
-use ebft::pruning::{Method, Pattern};
+use ebft::pruning::Pattern;
 use ebft::runtime::Session;
 use ebft::util::metrics::fmt_ppl;
 use ebft::util::{Json, TableWriter};
@@ -42,8 +42,8 @@ fn main() -> anyhow::Result<()> {
         runs: root.join("runs"),
         label: "MiniLlama-A".into(),
     };
-    let exp = env.experiment();
-    let dense_ppl = exp.dense_ppl()?;
+    let pipe = env.pipeline()?;
+    let dense_ppl = pipe.dense_ppl()?;
 
     let mut table = TableWriter::new(
         "end-to-end: Wanda pruning + EBFT recovery (wiki-sim ppl)",
@@ -51,10 +51,9 @@ fn main() -> anyhow::Result<()> {
     let mut results = Json::obj();
     results.set("dense_ppl", Json::Num(dense_ppl));
     for s in [0.5f32, 0.7] {
-        let pruned = exp.run_cell(Method::Wanda, Pattern::Unstructured(s),
-                                  FtVariant::None)?;
-        let tuned = exp.run_cell(Method::Wanda, Pattern::Unstructured(s),
-                                 FtVariant::Ebft)?;
+        let ckpt = pipe.prune(pruner("wanda")?, Pattern::Unstructured(s))?;
+        let (_, _, pruned) = pipe.recover(&ckpt, recovery("none")?)?;
+        let (_, _, tuned) = pipe.recover(&ckpt, recovery("ebft")?)?;
         table.row(&[format!("{}%", (s * 100.0) as u32), fmt_ppl(dense_ppl),
                     fmt_ppl(pruned.ppl), fmt_ppl(tuned.ppl),
                     format!("{:.1}", tuned.ft_secs)]);

@@ -7,8 +7,9 @@
 //!   cargo run --release --example lora_vs_ebft -- [--lora-steps 800]
 
 use ebft::bench_support::BenchEnv;
-use ebft::data::Split;
-use ebft::eval;
+use ebft::config::FtConfig;
+use ebft::coordinator::{pruner, recovery};
+use ebft::pruning::Pattern;
 use ebft::util::metrics::fmt_ppl;
 use ebft::util::{Args, TableWriter};
 
@@ -16,21 +17,22 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse_env()?;
     let lora_steps = args.get_usize("lora-steps", 800)?;
     let env = BenchEnv::open(0)?;
-    let exp = env.experiment();
-    println!("dense ppl {}", fmt_ppl(exp.dense_ppl()?));
+    let pipe = env.pipeline_with(FtConfig { lora_steps,
+                                            ..FtConfig::default() })?;
+    println!("dense ppl {}", fmt_ppl(pipe.dense_ppl()?));
 
     let mut table = TableWriter::new("LoRA vs EBFT at 20% structured",
                                      &["method", "time(s)", "ppl"]);
-    let (lp, lm, lsecs) = exp.run_structured(0.20, true, lora_steps)?;
-    let lppl = eval::perplexity(&env.session, &lp, &lm, &env.corpus,
-                                Split::WikiSim, 64)?;
-    table.row(&["LoRA".into(), format!("{lsecs:.1}"), fmt_ppl(lppl)]);
+    // FLAP once; both recoveries share the pruned checkpoint
+    let ckpt = pipe.prune(pruner("flap")?, Pattern::Structured(0.20))?;
+    let (_, _, lora) = pipe.recover(&ckpt, recovery("lora")?)?;
+    table.row(&["LoRA".into(), format!("{:.1}", lora.ft_secs),
+                fmt_ppl(lora.ppl)]);
 
-    let (ep, em, esecs) = exp.run_structured(0.20, false, 0)?;
-    let eppl = eval::perplexity(&env.session, &ep, &em, &env.corpus,
-                                Split::WikiSim, 64)?;
-    table.row(&["EBFT".into(), format!("{esecs:.1}"), fmt_ppl(eppl)]);
+    let (_, _, ours) = pipe.recover(&ckpt, recovery("ebft")?)?;
+    table.row(&["EBFT".into(), format!("{:.1}", ours.ft_secs),
+                fmt_ppl(ours.ppl)]);
     table.print();
-    println!("speedup: {:.1}×", lsecs / esecs.max(1e-9));
+    println!("speedup: {:.1}×", lora.ft_secs / ours.ft_secs.max(1e-9));
     Ok(())
 }

@@ -10,11 +10,10 @@
 //!
 //!   cargo run --release --example memory_footprint
 
-use ebft::config::FtConfig;
-use ebft::coordinator::{Experiment, FtVariant};
-use ebft::pruning::{Method, Pattern};
-use ebft::util::metrics::fmt_ppl;
 use ebft::bench_support::BenchEnv;
+use ebft::config::FtConfig;
+use ebft::pruning::Pattern;
+use ebft::util::metrics::fmt_ppl;
 
 fn main() -> anyhow::Result<()> {
     let env = BenchEnv::open(0)?;
@@ -29,14 +28,11 @@ fn main() -> anyhow::Result<()> {
         ("4 batches resident", 4 * 2 * batch_bytes),
         ("1 batch resident (max spill)", 2 * batch_bytes),
     ] {
-        let exp = Experiment {
-            ft: FtConfig { cache_budget_bytes: budget,
-                           ..FtConfig::default() },
-            ..env.experiment()
-        };
+        let pipe = env.pipeline_with(FtConfig { cache_budget_bytes: budget,
+                                                ..FtConfig::default() })?;
         let t0 = std::time::Instant::now();
-        let cell = exp.run_cell(Method::Wanda, Pattern::Unstructured(0.7),
-                                FtVariant::Ebft)?;
+        let cell = pipe.run_named("wanda", Pattern::Unstructured(0.7),
+                                  "ebft")?;
         println!("{label:<30} ppl {}  ({:.1}s)", fmt_ppl(cell.ppl),
                  t0.elapsed().as_secs_f64());
         results.push(cell.ppl);

@@ -6,12 +6,15 @@
 //! 2. prune it to 50 % with Wanda
 //! 3. fine-tune block-by-block with EBFT (Alg. 1)
 //! 4. compare perplexity: dense vs pruned vs fine-tuned
+//!
+//! This is also the pipeline-API quickstart: build once with
+//! `PipelineBuilder`, prune once, recover twice from the shared checkpoint.
 
 use ebft::config::FtConfig;
-use ebft::coordinator::{Experiment, FtVariant};
+use ebft::coordinator::{pruner, recovery, PipelineBuilder};
 use ebft::data::MarkovCorpus;
 use ebft::pretrain;
-use ebft::pruning::{Method, Pattern};
+use ebft::pruning::Pattern;
 use ebft::runtime::Session;
 use ebft::util::metrics::fmt_ppl;
 use std::path::Path;
@@ -27,25 +30,24 @@ fn main() -> anyhow::Result<()> {
     println!("      final train loss {:.3} in {:.1}s", report.final_loss,
              report.secs);
 
-    let exp = Experiment {
-        session: &session,
-        corpus: &corpus,
-        dense: &dense,
-        ft: FtConfig { calib_seqs: 32, ..FtConfig::default() },
-        eval_seqs: 32,
-        impl_name: "xla".into(),
-    };
+    let pipe = PipelineBuilder::new()
+        .session(&session)
+        .corpus(&corpus)
+        .dense(&dense)
+        .ft(FtConfig { calib_seqs: 32, ..FtConfig::default() })
+        .eval_seqs(32)
+        .build()?;
 
     println!("[2/4] dense perplexity...");
-    let dense_ppl = exp.dense_ppl()?;
+    let dense_ppl = pipe.dense_ppl()?;
 
     println!("[3/4] pruning 50% with Wanda...");
-    let pruned = exp.run_cell(Method::Wanda, Pattern::Unstructured(0.5),
-                              FtVariant::None)?;
+    let pruned_ckpt = pipe.prune(pruner("wanda")?,
+                                 Pattern::Unstructured(0.5))?;
+    let (_, _, pruned) = pipe.recover(&pruned_ckpt, recovery("none")?)?;
 
     println!("[4/4] EBFT block-wise fine-tuning...");
-    let tuned = exp.run_cell(Method::Wanda, Pattern::Unstructured(0.5),
-                             FtVariant::Ebft)?;
+    let (_, _, tuned) = pipe.recover(&pruned_ckpt, recovery("ebft")?)?;
 
     println!();
     println!("  dense       ppl {}", fmt_ppl(dense_ppl));

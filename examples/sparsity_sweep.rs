@@ -1,33 +1,42 @@
 //! Sparsity sweep (Table 1 in miniature): how EBFT's advantage over the
-//! raw pruner and DSnoT widens as sparsity grows.
+//! raw pruner and DSnoT widens as sparsity grows. Driven by one `Grid`
+//! sweep: each sparsity is pruned once and shared across the three
+//! recovery variants.
 //!
 //!   cargo run --release --example sparsity_sweep -- [--method wanda]
 
 use ebft::bench_support::BenchEnv;
-use ebft::coordinator::FtVariant;
-use ebft::pruning::{Method, Pattern};
+use ebft::coordinator::{pruner, Grid};
+use ebft::pruning::Pattern;
 use ebft::util::metrics::fmt_ppl;
 use ebft::util::{Args, TableWriter};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse_env()?;
-    let method = Method::parse(args.get_or("method", "wanda"))?;
+    let method = pruner(args.get_or("method", "wanda"))?;
     let env = BenchEnv::open(0)?;
-    let exp = env.experiment();
-    let dense_ppl = exp.dense_ppl()?;
+    let pipe = env.pipeline()?;
+    let dense_ppl = pipe.dense_ppl()?;
     println!("{} dense ppl {}", env.label, fmt_ppl(dense_ppl));
+
+    let patterns: Vec<Pattern> = [0.5f32, 0.6, 0.7, 0.8]
+        .iter()
+        .map(|&s| Pattern::Unstructured(s))
+        .collect();
+    let grid = Grid::new(&[method.name()], &patterns,
+                         &["none", "dsnot", "ebft"])?;
+    let swept = grid.run(&pipe)?;
 
     let mut table = TableWriter::new(
         &format!("sparsity sweep — {} + fine-tuning variants",
                  method.label()),
         &["sparsity", "pruned", "w.DSnoT", "w.Ours(EBFT)"]);
-    for s in [0.5f32, 0.6, 0.7, 0.8] {
-        let p = Pattern::Unstructured(s);
-        let raw = exp.run_cell(method, p, FtVariant::None)?;
-        let dsnot = exp.run_cell(method, p, FtVariant::Dsnot)?;
-        let ours = exp.run_cell(method, p, FtVariant::Ebft)?;
-        table.row(&[p.label(), fmt_ppl(raw.ppl), fmt_ppl(dsnot.ppl),
-                    fmt_ppl(ours.ppl)]);
+    for &p in &patterns {
+        let cell = |rec: &str| {
+            swept.find(method.name(), p, rec).expect("grid cell missing")
+        };
+        table.row(&[p.label(), fmt_ppl(cell("none").ppl),
+                    fmt_ppl(cell("dsnot").ppl), fmt_ppl(cell("ebft").ppl)]);
     }
     table.print();
     println!("expected shape: EBFT column ≤ both others, gap widening \

@@ -4,28 +4,31 @@
 //!   cargo run --release --example zero_shot_eval -- [--items 32]
 
 use ebft::bench_support::BenchEnv;
-use ebft::coordinator::FtVariant;
+use ebft::coordinator::{pruner, recovery};
 use ebft::eval::zeroshot::{mean_accuracy, run_suite};
 use ebft::masks::MaskSet;
-use ebft::pruning::{Method, Pattern};
+use ebft::pruning::Pattern;
 use ebft::util::{Args, TableWriter};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse_env()?;
     let items = args.get_usize("items", 32)?;
     let env = BenchEnv::open(0)?;
-    let exp = env.experiment();
+    let pipe = env.pipeline()?;
     let pattern = Pattern::Unstructured(0.6);
 
     let dense_masks = MaskSet::dense(&env.session.manifest);
     let dense = run_suite(&env.session, &env.dense, &dense_masks, &env.corpus,
                           items, 3)?;
-    let (pp, pm) = exp.run_cell_model(Method::Wanda, pattern,
-                                      FtVariant::None)?;
-    let pruned = run_suite(&env.session, &pp, &pm, &env.corpus, items, 3)?;
-    let (ep, em) = exp.run_cell_model(Method::Wanda, pattern,
-                                      FtVariant::Ebft)?;
-    let tuned = run_suite(&env.session, &ep, &em, &env.corpus, items, 3)?;
+    // prune once; both variants share the pruned checkpoint (and skip the
+    // perplexity stage — accuracy is the metric here)
+    let ckpt = pipe.prune(pruner("wanda")?, pattern)?;
+    let raw = pipe.recover_model(&ckpt, recovery("none")?)?;
+    let pruned = run_suite(&env.session, &raw.params, &raw.masks,
+                           &env.corpus, items, 3)?;
+    let ebft = pipe.recover_model(&ckpt, recovery("ebft")?)?;
+    let tuned = run_suite(&env.session, &ebft.params, &ebft.masks,
+                          &env.corpus, items, 3)?;
 
     let mut table = TableWriter::new(
         "zero-shot accuracy @ wanda 60%",

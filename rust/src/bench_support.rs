@@ -4,13 +4,13 @@
 //! Every bench regenerates one of the paper's tables/figures. By default
 //! the grids are reduced so `cargo bench` completes in minutes; set
 //! `EBFT_FULL=1` for the paper-complete grids (all sparsities, both base
-//! models). Numbers land in runs/*.json and EXPERIMENTS.md quotes them.
+//! models). Numbers land in runs/*.json.
 
 use anyhow::{Context, Result};
 use std::path::PathBuf;
 
 use crate::config::FtConfig;
-use crate::coordinator::{base_model, Experiment};
+use crate::coordinator::{base_model, Pipeline, PipelineBuilder};
 use crate::data::MarkovCorpus;
 use crate::model::ParamStore;
 use crate::runtime::Session;
@@ -54,15 +54,20 @@ impl BenchEnv {
                       label: label.to_string() })
     }
 
-    pub fn experiment(&self) -> Experiment<'_> {
-        Experiment {
-            session: &self.session,
-            corpus: &self.corpus,
-            dense: &self.dense,
-            ft: FtConfig::default(),
-            eval_seqs: EVAL_SEQS,
-            impl_name: "xla".to_string(),
-        }
+    /// Pipeline over this env with the default fine-tuning config.
+    pub fn pipeline(&self) -> Result<Pipeline<'_>> {
+        self.pipeline_with(FtConfig::default())
+    }
+
+    /// Pipeline over this env with an overridden fine-tuning config.
+    pub fn pipeline_with(&self, ft: FtConfig) -> Result<Pipeline<'_>> {
+        PipelineBuilder::new()
+            .session(&self.session)
+            .corpus(&self.corpus)
+            .dense(&self.dense)
+            .ft(ft)
+            .eval_seqs(EVAL_SEQS)
+            .build()
     }
 
     pub fn write_json(&self, name: &str, j: &Json) -> Result<()> {

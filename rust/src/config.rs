@@ -26,6 +26,10 @@ pub struct FtConfig {
     pub calib_seqs: usize,
     /// Max resident activation bytes before the cache spills to disk.
     pub cache_budget_bytes: usize,
+    /// Optimizer steps for the LoRA baseline recovery (§4.4's costly
+    /// comparator; sized to mimic "2 epochs over 50k rows" at testbed
+    /// scale).
+    pub lora_steps: usize,
 }
 
 impl Default for FtConfig {
@@ -37,6 +41,7 @@ impl Default for FtConfig {
             converge_window: 2,
             calib_seqs: 64,
             cache_budget_bytes: 256 << 20,
+            lora_steps: 800,
         }
     }
 }
@@ -53,6 +58,7 @@ impl FtConfig {
             calib_seqs: args.get_usize("calib", d.calib_seqs)?,
             cache_budget_bytes: args
                 .get_usize("cache-budget", d.cache_budget_bytes)?,
+            lora_steps: args.get_usize("lora-steps", d.lora_steps)?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -70,6 +76,9 @@ impl FtConfig {
         }
         if self.converge_window == 0 {
             bail!("converge_window must be ≥ 1");
+        }
+        if self.lora_steps == 0 {
+            bail!("lora_steps must be ≥ 1");
         }
         Ok(())
     }
@@ -124,6 +133,8 @@ mod tests {
         assert!(FtConfig::from_args(&args(&["x", "--epochs", "0"])).is_err());
         assert!(FtConfig::from_args(&args(&["x", "--lr", "-1"])).is_err());
         assert!(FtConfig::from_args(&args(&["x", "--calib", "0"])).is_err());
+        assert!(FtConfig::from_args(&args(&["x", "--lora-steps", "0"]))
+                    .is_err());
     }
 
     #[test]

@@ -1,0 +1,74 @@
+//! Shared run state for every pipeline stage.
+//!
+//! A `RunContext` bundles the session, corpus, dense (teacher) model and
+//! fine-tuning configuration that every stage of every cell needs, and owns
+//! the calibration-batch cache: batches are generated from the corpus once
+//! per context and reused across all (pruner × pattern × recovery) cells
+//! driven from it — previously every cell regenerated them.
+
+use std::cell::OnceCell;
+
+use anyhow::Result;
+
+use crate::config::FtConfig;
+use crate::data::{Batcher, MarkovCorpus, Split};
+use crate::eval;
+use crate::masks::MaskSet;
+use crate::model::ParamStore;
+use crate::runtime::Session;
+
+pub struct RunContext<'a> {
+    pub session: &'a Session,
+    pub corpus: &'a MarkovCorpus,
+    /// The dense (teacher) model.
+    pub dense: &'a ParamStore,
+    pub ft: FtConfig,
+    /// Sequences used for perplexity eval.
+    pub eval_seqs: usize,
+    /// Which ft-step implementation EBFT drives ("xla" or "pallas").
+    pub impl_name: String,
+    /// Split perplexity is measured on.
+    pub eval_split: Split,
+    calib: OnceCell<Vec<Vec<i32>>>,
+}
+
+impl<'a> RunContext<'a> {
+    pub fn new(session: &'a Session, corpus: &'a MarkovCorpus,
+               dense: &'a ParamStore, ft: FtConfig, eval_seqs: usize,
+               impl_name: String) -> Self {
+        Self {
+            session,
+            corpus,
+            dense,
+            ft,
+            eval_seqs,
+            impl_name,
+            eval_split: Split::WikiSim,
+            calib: OnceCell::new(),
+        }
+    }
+
+    /// Calibration batches, generated once per context and shared by every
+    /// stage (pruning stats, DSnoT, EBFT, mask tuning) of every cell.
+    pub fn calib_batches(&self) -> &[Vec<i32>] {
+        self.calib.get_or_init(|| {
+            let d = &self.session.manifest.dims;
+            let n = self.ft.calib_seqs.max(d.batch);
+            Batcher::new(self.corpus, Split::Calib, n, d.batch, d.seq)
+                .ordered_batches()
+        })
+    }
+
+    /// Perplexity of the dense teacher (reference row).
+    pub fn dense_ppl(&self) -> Result<f64> {
+        let masks = MaskSet::dense(&self.session.manifest);
+        self.eval_ppl(self.dense, &masks)
+    }
+
+    /// Perplexity of `params` under `masks` on the eval split.
+    pub fn eval_ppl(&self, params: &ParamStore, masks: &MaskSet)
+                    -> Result<f64> {
+        eval::perplexity(self.session, params, masks, self.corpus,
+                         self.eval_split, self.eval_seqs)
+    }
+}

@@ -1,0 +1,89 @@
+//! Grid driver: sweep (pruner × pattern × recovery) cells over one
+//! pipeline, pruning each (pruner, pattern) once and reusing the pruned
+//! checkpoint across recovery variants — the loop the bench harnesses and
+//! table drivers used to hand-write (and re-prune per variant).
+
+use anyhow::Result;
+
+use crate::pruning::Pattern;
+use crate::util::Json;
+
+use super::pipeline::{Pipeline, RunRecord};
+use super::registry::{self, Pruner, Recovery};
+
+pub struct Grid {
+    pruners: Vec<&'static dyn Pruner>,
+    patterns: Vec<Pattern>,
+    recoveries: Vec<&'static dyn Recovery>,
+}
+
+impl Grid {
+    /// Build a grid from registry names; unknown names error up front.
+    pub fn new(pruners: &[&str], patterns: &[Pattern], recoveries: &[&str])
+               -> Result<Grid> {
+        Ok(Grid {
+            pruners: pruners
+                .iter()
+                .map(|n| registry::pruner(n))
+                .collect::<Result<_>>()?,
+            patterns: patterns.to_vec(),
+            recoveries: recoveries
+                .iter()
+                .map(|n| registry::recovery(n))
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.pruners.len() * self.patterns.len() * self.recoveries.len()
+    }
+
+    /// Sweep every cell; prune once per (pruner, pattern).
+    pub fn run(&self, pipe: &Pipeline<'_>) -> Result<GridResult> {
+        self.run_with(pipe, |_| {})
+    }
+
+    /// Like [`Grid::run`], invoking `on_record` after each cell (progress
+    /// reporting, incremental persistence).
+    pub fn run_with(&self, pipe: &Pipeline<'_>,
+                    mut on_record: impl FnMut(&RunRecord))
+                    -> Result<GridResult> {
+        let mut records = Vec::with_capacity(self.n_cells());
+        for pruner in &self.pruners {
+            for &pattern in &self.patterns {
+                let pruned = pipe.prune(*pruner, pattern)?;
+                for recovery in &self.recoveries {
+                    let (_params, _masks, record) =
+                        pipe.recover(&pruned, *recovery)?;
+                    on_record(&record);
+                    records.push(record);
+                }
+            }
+        }
+        Ok(GridResult { records })
+    }
+}
+
+pub struct GridResult {
+    pub records: Vec<RunRecord>,
+}
+
+impl GridResult {
+    /// Look up one cell by canonical pruner/recovery name and pattern.
+    pub fn find(&self, pruner: &str, pattern: Pattern, recovery: &str)
+                -> Option<&RunRecord> {
+        self.records.iter().find(|r| {
+            r.pruner == pruner && r.pattern == pattern
+                && r.recovery == recovery
+        })
+    }
+
+    /// All records as one JSON object keyed by [`RunRecord::key`].
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        for r in &self.records {
+            j.set(&r.key(), r.to_json());
+        }
+        j
+    }
+}

@@ -1,198 +1,38 @@
-//! Experiment coordinator: the prune → fine-tune → evaluate pipelines that
-//! the CLI, the examples, and every bench harness drive.
+//! Experiment coordinator: the stage-based pipeline (prune → recover →
+//! eval) that the CLI, the examples and every bench harness drive.
+//!
+//! - [`registry`] — `Pruner`/`Recovery` trait objects, resolved by name;
+//!   the single place method dispatch lives.
+//! - [`context`] — `RunContext`: session + corpus + dense model + config +
+//!   the calibration-batch cache shared by every stage.
+//! - [`pipeline`] — `PipelineBuilder` → `Pipeline`; cells yield
+//!   `RunRecord`s serializable to `runs/*.json`.
+//! - [`grid`] — `Grid` sweeps (pruner × pattern × recovery) cells with
+//!   pruned-checkpoint reuse across recovery variants.
+//!
+//! See DESIGN.md for the architecture rationale.
 
 use anyhow::Result;
 use std::path::Path;
 
-use crate::config::FtConfig;
-use crate::data::{Batcher, MarkovCorpus, Split};
-use crate::dsnot;
-use crate::ebft;
-use crate::ebft::finetune::EbftReport;
-use crate::eval;
-use crate::masks::MaskSet;
+use crate::data::MarkovCorpus;
 use crate::model::ParamStore;
 use crate::pretrain;
-use crate::pruning::{self, Method, Pattern};
 use crate::runtime::Session;
 use crate::util::Json;
 
-/// Fine-tuning variant applied after pruning (the paper's comparison axes).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum FtVariant {
-    /// No fine-tuning (the raw pruner).
-    None,
-    /// DSnoT mask reselection (training-free).
-    Dsnot,
-    /// EBFT weight tuning (ours).
-    Ebft,
-    /// Mask tuning ablation (§4.5).
-    MaskTune,
-}
+pub mod context;
+pub mod grid;
+pub mod pipeline;
+pub mod registry;
 
-impl FtVariant {
-    pub fn label(&self) -> &'static str {
-        match self {
-            FtVariant::None => "none",
-            FtVariant::Dsnot => "w.DSnoT",
-            FtVariant::Ebft => "w.Ours",
-            FtVariant::MaskTune => "w.Mask",
-        }
-    }
+pub use context::RunContext;
+pub use grid::{Grid, GridResult};
+pub use pipeline::{Pipeline, PipelineBuilder, PrunedModel, RecoveredModel,
+                   RunRecord};
+pub use registry::{pruner, pruners, recoveries, recovery, Pruner, Recovery};
 
-    pub fn parse(s: &str) -> Result<FtVariant> {
-        Ok(match s {
-            "none" => FtVariant::None,
-            "dsnot" => FtVariant::Dsnot,
-            "ebft" | "ours" => FtVariant::Ebft,
-            "masktune" | "mask" => FtVariant::MaskTune,
-            other => anyhow::bail!("unknown ft variant '{other}'"),
-        })
-    }
-}
-
-/// Everything a pipeline needs, bundled.
-pub struct Experiment<'a> {
-    pub session: &'a Session,
-    pub corpus: &'a MarkovCorpus,
-    /// The dense (teacher) model.
-    pub dense: &'a ParamStore,
-    pub ft: FtConfig,
-    /// Sequences used for perplexity eval.
-    pub eval_seqs: usize,
-    pub impl_name: String,
-}
-
-#[derive(Clone, Debug)]
-pub struct CellResult {
-    pub method: Method,
-    pub pattern: Pattern,
-    pub variant: FtVariant,
-    pub ppl: f64,
-    /// Realized overall sparsity of the masks.
-    pub sparsity: f64,
-    pub ft_secs: f64,
-    pub ebft_report: Option<EbftReport>,
-}
-
-impl<'a> Experiment<'a> {
-    pub fn calib_batches(&self) -> Vec<Vec<i32>> {
-        let d = &self.session.manifest.dims;
-        let n = self.ft.calib_seqs.max(d.batch);
-        Batcher::new(self.corpus, Split::Calib, n, d.batch, d.seq)
-            .ordered_batches()
-    }
-
-    /// Perplexity of the dense teacher (reference row).
-    pub fn dense_ppl(&self) -> Result<f64> {
-        let masks = MaskSet::dense(&self.session.manifest);
-        eval::perplexity(self.session, self.dense, &masks, self.corpus,
-                         Split::WikiSim, self.eval_seqs)
-    }
-
-    /// One (method × pattern × variant) cell of Tables 1/2/6.
-    pub fn run_cell(&self, method: Method, pattern: Pattern,
-                    variant: FtVariant) -> Result<CellResult> {
-        let calib = self.calib_batches();
-        let mut params = self.dense.clone();
-        let mut masks = pruning::prune_model(self.session, &mut params,
-                                             method, pattern, &calib)?;
-
-        let t0 = std::time::Instant::now();
-        let mut ebft_report = None;
-        match variant {
-            FtVariant::None => {}
-            FtVariant::Dsnot => {
-                dsnot::run(self.session, &params, &mut masks, &calib)?;
-            }
-            FtVariant::Ebft => {
-                let report = ebft::finetune(self.session, self.dense,
-                                            &mut params, &masks, &self.ft,
-                                            &calib, &self.impl_name)?;
-                ebft_report = Some(report);
-            }
-            FtVariant::MaskTune => {
-                ebft::masktune::masktune(self.session, self.dense, &params,
-                                         &mut masks, &self.ft, &calib)?;
-            }
-        }
-        let ft_secs = t0.elapsed().as_secs_f64();
-
-        let ppl = eval::perplexity(self.session, &params, &masks, self.corpus,
-                                   Split::WikiSim, self.eval_seqs)?;
-        Ok(CellResult {
-            method,
-            pattern,
-            variant,
-            ppl,
-            sparsity: masks.sparsity(),
-            ft_secs,
-            ebft_report,
-        })
-    }
-
-    /// Prune + variant, returning the model for further evaluation
-    /// (zero-shot suite etc.).
-    pub fn run_cell_model(&self, method: Method, pattern: Pattern,
-                          variant: FtVariant)
-                          -> Result<(ParamStore, MaskSet)> {
-        let calib = self.calib_batches();
-        let mut params = self.dense.clone();
-        let mut masks = pruning::prune_model(self.session, &mut params,
-                                             method, pattern, &calib)?;
-        match variant {
-            FtVariant::None => {}
-            FtVariant::Dsnot => {
-                dsnot::run(self.session, &params, &mut masks, &calib)?;
-            }
-            FtVariant::Ebft => {
-                ebft::finetune(self.session, self.dense, &mut params, &masks,
-                               &self.ft, &calib, &self.impl_name)?;
-            }
-            FtVariant::MaskTune => {
-                ebft::masktune::masktune(self.session, self.dense, &params,
-                                         &mut masks, &self.ft, &calib)?;
-            }
-        }
-        Ok((params, masks))
-    }
-
-    /// FLAP structured pruning + chosen recovery (Ebft or LoRA), for
-    /// Tables 4/5. Returns (params-for-eval, masks-for-eval, ft-secs).
-    pub fn run_structured(&self, param_fraction: f32, use_lora: bool,
-                          lora_steps: usize)
-                          -> Result<(ParamStore, MaskSet, f64)> {
-        let calib = self.calib_batches();
-        let masks = pruning::flap::prune_model(self.session, self.dense,
-                                               param_fraction, &calib)?;
-        let t0 = std::time::Instant::now();
-        if use_lora {
-            // the costly path: full-model adapters on the big instruct split
-            let d = &self.session.manifest.dims;
-            let n = (lora_steps * d.batch).max(d.batch);
-            let batches =
-                Batcher::new(self.corpus, Split::InstructSim, n, d.batch,
-                             d.seq)
-                    .ordered_batches();
-            let (adapters, _report) =
-                ebft::lora::train(self.session, self.dense, &masks, &batches,
-                                  lora_steps, 1e-3, 0)?;
-            let merged = ebft::lora::merge(self.session, self.dense, &masks,
-                                           &adapters)?;
-            let secs = t0.elapsed().as_secs_f64();
-            // merged weights are dense; evaluate with dense masks
-            Ok((merged, MaskSet::dense(&self.session.manifest), secs))
-        } else {
-            let mut params = self.dense.clone();
-            ebft::finetune(self.session, self.dense, &mut params, &masks,
-                           &self.ft, &calib, &self.impl_name)?;
-            let secs = t0.elapsed().as_secs_f64();
-            Ok((params, masks, secs))
-        }
-    }
-}
-
-/// Persist a result object under runs/ as JSON (EXPERIMENTS.md source data).
+/// Persist a result object under runs/ as JSON.
 pub fn write_result(runs_dir: &Path, name: &str, result: &Json) -> Result<()> {
     let path = runs_dir.join(format!("{name}.json"));
     result.write_file(&path)
@@ -204,18 +44,4 @@ pub fn base_model(session: &Session, corpus: &MarkovCorpus, runs_dir: &Path,
     let (params, _) = pretrain::ensure_pretrained(session, corpus, runs_dir,
                                                   steps, 3e-3, seed)?;
     Ok(params)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn variant_labels_and_parse() {
-        assert_eq!(FtVariant::Ebft.label(), "w.Ours");
-        assert_eq!(FtVariant::parse("ours").unwrap(), FtVariant::Ebft);
-        assert_eq!(FtVariant::parse("dsnot").unwrap(), FtVariant::Dsnot);
-        assert_eq!(FtVariant::parse("mask").unwrap(), FtVariant::MaskTune);
-        assert!(FtVariant::parse("x").is_err());
-    }
 }

@@ -1,0 +1,297 @@
+//! The stage-based experiment pipeline: prune → recover → eval.
+//!
+//! `PipelineBuilder` assembles a [`RunContext`] (validating that every
+//! required stage input is present), and the resulting [`Pipeline`] runs
+//! cells either whole (`run`/`run_model`) or stage by stage (`prune` +
+//! `recover`) so a pruned checkpoint can be shared across recovery
+//! variants. Every cell yields a [`RunRecord`] serializable to
+//! `runs/*.json`.
+
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+use crate::config::FtConfig;
+use crate::data::{MarkovCorpus, Split};
+use crate::ebft::finetune::EbftReport;
+use crate::masks::MaskSet;
+use crate::model::ParamStore;
+use crate::pruning::Pattern;
+use crate::runtime::Session;
+use crate::util::Json;
+
+use super::context::RunContext;
+use super::registry::{self, Pruner, Recovery};
+
+/// Builder for [`Pipeline`]. Session, corpus and dense model are required;
+/// everything else has defaults matching the paper's testbed settings.
+pub struct PipelineBuilder<'a> {
+    session: Option<&'a Session>,
+    corpus: Option<&'a MarkovCorpus>,
+    dense: Option<&'a ParamStore>,
+    ft: FtConfig,
+    eval_seqs: usize,
+    impl_name: String,
+    eval_split: Split,
+}
+
+impl<'a> PipelineBuilder<'a> {
+    pub fn new() -> Self {
+        Self {
+            session: None,
+            corpus: None,
+            dense: None,
+            ft: FtConfig::default(),
+            eval_seqs: 64,
+            impl_name: "xla".to_string(),
+            eval_split: Split::WikiSim,
+        }
+    }
+
+    pub fn session(mut self, session: &'a Session) -> Self {
+        self.session = Some(session);
+        self
+    }
+
+    pub fn corpus(mut self, corpus: &'a MarkovCorpus) -> Self {
+        self.corpus = Some(corpus);
+        self
+    }
+
+    /// The dense (teacher) model cells start from.
+    pub fn dense(mut self, dense: &'a ParamStore) -> Self {
+        self.dense = Some(dense);
+        self
+    }
+
+    pub fn ft(mut self, ft: FtConfig) -> Self {
+        self.ft = ft;
+        self
+    }
+
+    pub fn eval_seqs(mut self, n: usize) -> Self {
+        self.eval_seqs = n;
+        self
+    }
+
+    /// ft-step implementation EBFT drives ("xla" or "pallas").
+    pub fn impl_name(mut self, name: &str) -> Self {
+        self.impl_name = name.to_string();
+        self
+    }
+
+    pub fn eval_split(mut self, split: Split) -> Self {
+        self.eval_split = split;
+        self
+    }
+
+    /// Validate and assemble the pipeline. Missing required stages error
+    /// here (not panic mid-run).
+    pub fn build(self) -> Result<Pipeline<'a>> {
+        let session = self
+            .session
+            .context("PipelineBuilder: no session set (call .session(...))")?;
+        let corpus = self
+            .corpus
+            .context("PipelineBuilder: no corpus set (call .corpus(...))")?;
+        let dense = self
+            .dense
+            .context("PipelineBuilder: no dense model set (call .dense(...))")?;
+        self.ft.validate()?;
+        let mut ctx = RunContext::new(session, corpus, dense, self.ft,
+                                      self.eval_seqs, self.impl_name);
+        ctx.eval_split = self.eval_split;
+        Ok(Pipeline { ctx })
+    }
+}
+
+impl Default for PipelineBuilder<'_> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Output of the prune stage: a pruned checkpoint that one or more
+/// recovery stages can start from.
+pub struct PrunedModel {
+    pub pruner: String,
+    pub pruner_label: String,
+    pub pattern: Pattern,
+    pub params: ParamStore,
+    pub masks: MaskSet,
+    pub prune_secs: f64,
+}
+
+/// Output of the recover stage, before evaluation.
+pub struct RecoveredModel {
+    pub params: ParamStore,
+    pub masks: MaskSet,
+    pub ft_secs: f64,
+    pub ebft_report: Option<EbftReport>,
+}
+
+/// One fully-evaluated (pruner × pattern × recovery) cell.
+#[derive(Clone, Debug)]
+pub struct RunRecord {
+    /// Canonical pruner name ("wanda").
+    pub pruner: String,
+    /// Pruner display label.
+    pub pruner_label: String,
+    pub pattern: Pattern,
+    /// Pattern display label ("50%", "2:4", "struct20%").
+    pub pattern_label: String,
+    /// Canonical recovery name ("ebft").
+    pub recovery: String,
+    /// Recovery display label ("w.Ours").
+    pub recovery_label: String,
+    pub ppl: f64,
+    /// Realized overall sparsity of the masks after recovery.
+    pub sparsity: f64,
+    pub prune_secs: f64,
+    pub ft_secs: f64,
+    pub eval_secs: f64,
+    pub ebft_report: Option<EbftReport>,
+}
+
+impl RunRecord {
+    /// Stable key for `runs/*.json` objects: pruner/recovery-label/pattern.
+    pub fn key(&self) -> String {
+        format!("{}/{}/{}", self.pruner, self.recovery_label,
+                self.pattern_label)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("pruner", Json::Str(self.pruner.clone()));
+        j.set("pruner_label", Json::Str(self.pruner_label.clone()));
+        j.set("pattern", Json::Str(self.pattern_label.clone()));
+        j.set("recovery", Json::Str(self.recovery.clone()));
+        j.set("recovery_label", Json::Str(self.recovery_label.clone()));
+        j.set("ppl", Json::Num(self.ppl));
+        j.set("sparsity", Json::Num(self.sparsity));
+        j.set("prune_secs", Json::Num(self.prune_secs));
+        j.set("ft_secs", Json::Num(self.ft_secs));
+        j.set("eval_secs", Json::Num(self.eval_secs));
+        if let Some(r) = &self.ebft_report {
+            let mut er = Json::obj();
+            er.set("total_secs", Json::Num(r.total_secs));
+            let blocks: Vec<Json> = r
+                .per_block
+                .iter()
+                .map(|b| {
+                    let mut bj = Json::obj();
+                    bj.set("block", Json::Num(b.block as f64));
+                    bj.set("epochs", Json::Num(b.epochs_run as f64));
+                    bj.set("steps", Json::Num(b.steps as f64));
+                    bj.set("first_loss", Json::Num(b.first_loss as f64));
+                    bj.set("last_loss", Json::Num(b.last_loss as f64));
+                    bj.set("best_loss", Json::Num(b.best_loss as f64));
+                    bj.set("converged_early", Json::Bool(b.converged_early));
+                    bj.set("secs", Json::Num(b.secs));
+                    bj
+                })
+                .collect();
+            er.set("per_block", Json::Arr(blocks));
+            j.set("ebft", er);
+        }
+        j
+    }
+}
+
+/// The prune → recover → eval pipeline over one [`RunContext`].
+pub struct Pipeline<'a> {
+    ctx: RunContext<'a>,
+}
+
+impl<'a> Pipeline<'a> {
+    pub fn ctx(&self) -> &RunContext<'a> {
+        &self.ctx
+    }
+
+    /// Perplexity of the dense teacher (reference row).
+    pub fn dense_ppl(&self) -> Result<f64> {
+        self.ctx.dense_ppl()
+    }
+
+    /// Stage 1: prune the dense model. The result can feed several
+    /// `recover` calls (checkpoint reuse across recovery variants).
+    pub fn prune(&self, pruner: &dyn Pruner, pattern: Pattern)
+                 -> Result<PrunedModel> {
+        let t0 = Instant::now();
+        let mut params = self.ctx.dense.clone();
+        let masks = pruner.prune(&self.ctx, &mut params, pattern)?;
+        Ok(PrunedModel {
+            pruner: pruner.name().to_string(),
+            pruner_label: pruner.label().to_string(),
+            pattern,
+            params,
+            masks,
+            prune_secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Stage 2 only: recover from a pruned checkpoint *without* the eval
+    /// stage — for callers that evaluate differently (zero-shot suite).
+    pub fn recover_model(&self, pruned: &PrunedModel,
+                         recovery: &dyn Recovery) -> Result<RecoveredModel> {
+        let mut params = pruned.params.clone();
+        let mut masks = pruned.masks.clone();
+        let t0 = Instant::now();
+        let ebft_report = recovery.recover(&self.ctx, &mut params,
+                                           &mut masks)?;
+        Ok(RecoveredModel {
+            params,
+            masks,
+            ft_secs: t0.elapsed().as_secs_f64(),
+            ebft_report,
+        })
+    }
+
+    /// Stages 2+3: recover from a pruned checkpoint, then evaluate.
+    /// Returns the recovered model alongside its record.
+    pub fn recover(&self, pruned: &PrunedModel, recovery: &dyn Recovery)
+                   -> Result<(ParamStore, MaskSet, RunRecord)> {
+        let recovered = self.recover_model(pruned, recovery)?;
+
+        let t1 = Instant::now();
+        let ppl = self.ctx.eval_ppl(&recovered.params, &recovered.masks)?;
+        let eval_secs = t1.elapsed().as_secs_f64();
+
+        let record = RunRecord {
+            pruner: pruned.pruner.clone(),
+            pruner_label: pruned.pruner_label.clone(),
+            pattern: pruned.pattern,
+            pattern_label: pruned.pattern.label(),
+            recovery: recovery.name().to_string(),
+            recovery_label: recovery.label().to_string(),
+            ppl,
+            sparsity: recovered.masks.sparsity(),
+            prune_secs: pruned.prune_secs,
+            ft_secs: recovered.ft_secs,
+            eval_secs,
+            ebft_report: recovered.ebft_report,
+        };
+        Ok((recovered.params, recovered.masks, record))
+    }
+
+    /// One full cell, returning the recovered model for further evaluation
+    /// (zero-shot suite etc.).
+    pub fn run_model(&self, pruner: &dyn Pruner, pattern: Pattern,
+                     recovery: &dyn Recovery)
+                     -> Result<(ParamStore, MaskSet, RunRecord)> {
+        let pruned = self.prune(pruner, pattern)?;
+        self.recover(&pruned, recovery)
+    }
+
+    /// One full cell, record only.
+    pub fn run(&self, pruner: &dyn Pruner, pattern: Pattern,
+               recovery: &dyn Recovery) -> Result<RunRecord> {
+        Ok(self.run_model(pruner, pattern, recovery)?.2)
+    }
+
+    /// One full cell with methods resolved from the registries by name.
+    pub fn run_named(&self, pruner: &str, pattern: Pattern, recovery: &str)
+                     -> Result<RunRecord> {
+        self.run(registry::pruner(pruner)?, pattern,
+                 registry::recovery(recovery)?)
+    }
+}

@@ -1,0 +1,328 @@
+//! Pluggable method registries: `Pruner` and `Recovery` trait objects keyed
+//! by name. This is the one place pruning and recovery methods are
+//! dispatched — the CLI, the benches and the examples all resolve methods
+//! through [`pruner`]/[`recovery`] instead of matching on enums.
+//!
+//! Adding a method is one `impl` + one entry in the `PRUNERS`/`RECOVERIES`
+//! slice; every driver picks it up by name automatically.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::data::{Batcher, Split};
+use crate::dsnot;
+use crate::ebft;
+use crate::ebft::finetune::EbftReport;
+use crate::masks::MaskSet;
+use crate::model::ParamStore;
+use crate::pruning::{self, Pattern};
+
+use super::context::RunContext;
+
+/// A pruning method: turns the dense model into (masked params, masks).
+///
+/// `prune` may rewrite surviving weights (SparseGPT's reconstruction); the
+/// returned masks define the sparsity pattern the recovery stage must
+/// preserve.
+pub trait Pruner: Sync {
+    /// Canonical registry key ("wanda", "flap", ...).
+    fn name(&self) -> &'static str;
+    /// Alternate names accepted by [`pruner`].
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
+    }
+    /// Display label for tables and run tags.
+    fn label(&self) -> &'static str {
+        self.name()
+    }
+    fn prune(&self, ctx: &RunContext<'_>, params: &mut ParamStore,
+             pattern: Pattern) -> Result<MaskSet>;
+}
+
+/// A recovery (fine-tuning) method applied after pruning.
+///
+/// `recover` mutates `params`/`masks` in place; methods that re-densify the
+/// model (LoRA merge) replace both. Returns the per-block EBFT report when
+/// the method produces one.
+pub trait Recovery: Sync {
+    /// Canonical registry key ("ebft", "dsnot", ...).
+    fn name(&self) -> &'static str;
+    /// Alternate names accepted by [`recovery`].
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
+    }
+    /// Display label (the paper's row names: "w.Ours", "w.DSnoT", ...).
+    fn label(&self) -> &'static str;
+    fn recover(&self, ctx: &RunContext<'_>, params: &mut ParamStore,
+               masks: &mut MaskSet) -> Result<Option<EbftReport>>;
+}
+
+// ---------------------------------------------------------------- pruners
+
+pub struct MagnitudePruner;
+
+impl Pruner for MagnitudePruner {
+    fn name(&self) -> &'static str {
+        "magnitude"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["mag"]
+    }
+
+    fn prune(&self, ctx: &RunContext<'_>, params: &mut ParamStore,
+             pattern: Pattern) -> Result<MaskSet> {
+        pruning::prune_model(ctx.session, params,
+                             &pruning::magnitude::Magnitude, pattern,
+                             ctx.calib_batches())
+    }
+}
+
+pub struct WandaPruner;
+
+impl Pruner for WandaPruner {
+    fn name(&self) -> &'static str {
+        "wanda"
+    }
+
+    fn prune(&self, ctx: &RunContext<'_>, params: &mut ParamStore,
+             pattern: Pattern) -> Result<MaskSet> {
+        pruning::prune_model(ctx.session, params, &pruning::wanda::Wanda,
+                             pattern, ctx.calib_batches())
+    }
+}
+
+pub struct SparseGptPruner;
+
+impl Pruner for SparseGptPruner {
+    fn name(&self) -> &'static str {
+        "sparsegpt"
+    }
+
+    fn prune(&self, ctx: &RunContext<'_>, params: &mut ParamStore,
+             pattern: Pattern) -> Result<MaskSet> {
+        pruning::prune_model(ctx.session, params,
+                             &pruning::sparsegpt::SparseGpt, pattern,
+                             ctx.calib_batches())
+    }
+}
+
+pub struct FlapPruner;
+
+impl Pruner for FlapPruner {
+    fn name(&self) -> &'static str {
+        "flap"
+    }
+
+    fn prune(&self, ctx: &RunContext<'_>, params: &mut ParamStore,
+             pattern: Pattern) -> Result<MaskSet> {
+        let Pattern::Structured(fraction) = pattern else {
+            bail!("flap is a structured pruner; use \
+                   Pattern::Structured(fraction), got {}", pattern.label())
+        };
+        pruning::flap::prune_model(ctx.session, params, fraction,
+                                   ctx.calib_batches())
+    }
+}
+
+// ------------------------------------------------------------- recoveries
+
+pub struct NoRecovery;
+
+impl Recovery for NoRecovery {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn label(&self) -> &'static str {
+        "none"
+    }
+
+    fn recover(&self, _ctx: &RunContext<'_>, _params: &mut ParamStore,
+               _masks: &mut MaskSet) -> Result<Option<EbftReport>> {
+        Ok(None)
+    }
+}
+
+pub struct DsnotRecovery;
+
+impl Recovery for DsnotRecovery {
+    fn name(&self) -> &'static str {
+        "dsnot"
+    }
+
+    fn label(&self) -> &'static str {
+        "w.DSnoT"
+    }
+
+    fn recover(&self, ctx: &RunContext<'_>, params: &mut ParamStore,
+               masks: &mut MaskSet) -> Result<Option<EbftReport>> {
+        dsnot::run(ctx.session, params, masks, ctx.calib_batches())?;
+        Ok(None)
+    }
+}
+
+pub struct EbftRecovery;
+
+impl Recovery for EbftRecovery {
+    fn name(&self) -> &'static str {
+        "ebft"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["ours"]
+    }
+
+    fn label(&self) -> &'static str {
+        "w.Ours"
+    }
+
+    fn recover(&self, ctx: &RunContext<'_>, params: &mut ParamStore,
+               masks: &mut MaskSet) -> Result<Option<EbftReport>> {
+        let report = ebft::finetune(ctx.session, ctx.dense, params, masks,
+                                    &ctx.ft, ctx.calib_batches(),
+                                    &ctx.impl_name)?;
+        Ok(Some(report))
+    }
+}
+
+pub struct MaskTuneRecovery;
+
+impl Recovery for MaskTuneRecovery {
+    fn name(&self) -> &'static str {
+        "masktune"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["mask"]
+    }
+
+    fn label(&self) -> &'static str {
+        "w.Mask"
+    }
+
+    fn recover(&self, ctx: &RunContext<'_>, params: &mut ParamStore,
+               masks: &mut MaskSet) -> Result<Option<EbftReport>> {
+        ebft::masktune::masktune(ctx.session, ctx.dense, params, masks,
+                                 &ctx.ft, ctx.calib_batches())?;
+        Ok(None)
+    }
+}
+
+pub struct LoraRecovery;
+
+/// LoRA trains on the big instruct-sim split — the costly comparator
+/// (§4.4); the step count comes from `FtConfig::lora_steps`.
+pub const LORA_LR: f32 = 1e-3;
+
+impl Recovery for LoraRecovery {
+    fn name(&self) -> &'static str {
+        "lora"
+    }
+
+    fn label(&self) -> &'static str {
+        "w.LoRA"
+    }
+
+    fn recover(&self, ctx: &RunContext<'_>, params: &mut ParamStore,
+               masks: &mut MaskSet) -> Result<Option<EbftReport>> {
+        let d = &ctx.session.manifest.dims;
+        let steps = ctx.ft.lora_steps;
+        let n = (steps * d.batch).max(d.batch);
+        let batches =
+            Batcher::new(ctx.corpus, Split::InstructSim, n, d.batch, d.seq)
+                .ordered_batches();
+        let (adapters, _report) = ebft::lora::train(ctx.session, params,
+                                                    masks, &batches, steps,
+                                                    LORA_LR, 0)?;
+        let merged = ebft::lora::merge(ctx.session, params, masks,
+                                       &adapters)?;
+        // merged weights are dense; downstream eval uses dense masks
+        *params = merged;
+        *masks = MaskSet::dense(&ctx.session.manifest);
+        Ok(None)
+    }
+}
+
+// -------------------------------------------------------------- registry
+
+static PRUNERS: &[&dyn Pruner] =
+    &[&MagnitudePruner, &WandaPruner, &SparseGptPruner, &FlapPruner];
+
+static RECOVERIES: &[&dyn Recovery] = &[&NoRecovery, &DsnotRecovery,
+                                        &EbftRecovery, &MaskTuneRecovery,
+                                        &LoraRecovery];
+
+/// All registered pruners, in registration order.
+pub fn pruners() -> &'static [&'static dyn Pruner] {
+    PRUNERS
+}
+
+/// All registered recoveries, in registration order.
+pub fn recoveries() -> &'static [&'static dyn Recovery] {
+    RECOVERIES
+}
+
+/// Resolve a pruner by name or alias.
+pub fn pruner(name: &str) -> Result<&'static dyn Pruner> {
+    PRUNERS
+        .iter()
+        .copied()
+        .find(|p| p.name() == name || p.aliases().iter().any(|a| *a == name))
+        .ok_or_else(|| {
+            anyhow!("unknown pruning method '{name}' (available: {})",
+                    names(PRUNERS.iter().map(|p| p.name())))
+        })
+}
+
+/// Resolve a recovery by name or alias.
+pub fn recovery(name: &str) -> Result<&'static dyn Recovery> {
+    RECOVERIES
+        .iter()
+        .copied()
+        .find(|r| r.name() == name || r.aliases().iter().any(|a| *a == name))
+        .ok_or_else(|| {
+            anyhow!("unknown recovery '{name}' (available: {})",
+                    names(RECOVERIES.iter().map(|r| r.name())))
+        })
+}
+
+fn names<'a>(it: impl Iterator<Item = &'a str>) -> String {
+    it.collect::<Vec<_>>().join(", ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pruner_names_round_trip() {
+        for p in pruners() {
+            assert_eq!(pruner(p.name()).unwrap().name(), p.name());
+            for a in p.aliases() {
+                assert_eq!(pruner(a).unwrap().name(), p.name());
+            }
+        }
+        assert!(pruner("nope").is_err());
+    }
+
+    #[test]
+    fn recovery_names_round_trip() {
+        for r in recoveries() {
+            assert_eq!(recovery(r.name()).unwrap().name(), r.name());
+            for a in r.aliases() {
+                assert_eq!(recovery(a).unwrap().name(), r.name());
+            }
+        }
+        assert!(recovery("nope").is_err());
+    }
+
+    #[test]
+    fn labels_match_paper_rows() {
+        assert_eq!(recovery("ebft").unwrap().label(), "w.Ours");
+        assert_eq!(recovery("ours").unwrap().label(), "w.Ours");
+        assert_eq!(recovery("dsnot").unwrap().label(), "w.DSnoT");
+        assert_eq!(recovery("mask").unwrap().label(), "w.Mask");
+        assert_eq!(recovery("none").unwrap().label(), "none");
+        assert_eq!(pruner("mag").unwrap().label(), "magnitude");
+    }
+}

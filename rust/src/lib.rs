@@ -1,7 +1,7 @@
 //! EBFT: Effective and Block-Wise Fine-Tuning for Sparse LLMs.
 //!
-//! Full-system reproduction; see DESIGN.md for the architecture and
-//! EXPERIMENTS.md for paper-vs-measured results.
+//! Full-system reproduction; see README.md for CLI usage and the pipeline
+//! API quickstart, and DESIGN.md for the stage/registry architecture.
 //!
 //! Layer map:
 //! - [`runtime`] — PJRT client; loads AOT HLO-text artifacts (L2/L1 compute)
@@ -12,7 +12,8 @@
 //! - [`ebft`]    — the paper's contribution: block-wise fine-tuning
 //! - [`eval`]    — perplexity + zero-shot harness
 //! - [`data`]    — synthetic corpus + batcher + zero-shot probes
-//! - [`coordinator`] — experiment pipelines (prune→ft→eval) and reporting
+//! - [`coordinator`] — stage-based pipeline (prune→recover→eval), the
+//!   pruner/recovery registries, and the grid sweep driver
 pub mod bench_support;
 pub mod config;
 pub mod coordinator;

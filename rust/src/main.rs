@@ -5,9 +5,13 @@
 //!   prune      prune a base model, save masks + weights
 //!   finetune   EBFT fine-tune a pruned model (the paper's Alg. 1)
 //!   pipeline   prune → {none|dsnot|ebft|masktune} → perplexity, one cell
+//!   flap       structured pruning + {none|ebft|lora} recovery (§4.4)
 //!   eval       perplexity of a checkpoint (+ masks) on wiki-sim
 //!   zeroshot   the 7-task zero-shot suite
 //!   info       manifest / artifact summary
+//!
+//! Methods resolve through the coordinator registries, so `--method` and
+//! `--ft` accept any registered pruner/recovery name.
 //!
 //! Examples:
 //!   ebft pretrain --config small --steps 300
@@ -17,11 +21,11 @@
 use anyhow::{bail, Context, Result};
 
 use ebft::config::{FtConfig, Paths};
-use ebft::coordinator::{base_model, Experiment, FtVariant};
+use ebft::coordinator::{self, base_model, Pipeline, PipelineBuilder};
 use ebft::data::MarkovCorpus;
 use ebft::masks::MaskSet;
 use ebft::model::{Manifest, ParamStore};
-use ebft::pruning::{Method, Pattern};
+use ebft::pruning::Pattern;
 use ebft::runtime::Session;
 use ebft::util::metrics::fmt_ppl;
 use ebft::util::{Args, TableWriter};
@@ -39,6 +43,8 @@ fn parse_pattern(args: &Args) -> Result<Pattern> {
             .split_once(':')
             .context("--nm expects N:M, e.g. 2:4")?;
         Ok(Pattern::NM(n.trim().parse()?, m.trim().parse()?))
+    } else if let Some(f) = args.get("structured") {
+        Ok(Pattern::Structured(f.parse()?))
     } else {
         Ok(Pattern::Unstructured(args.get_f32("sparsity", 0.5)?))
     }
@@ -53,6 +59,20 @@ fn open(args: &Args) -> Result<(Session, Paths, MarkovCorpus)> {
     let seed = args.get_u64("corpus-seed", 7)?;
     let corpus = MarkovCorpus::new(session.manifest.dims.vocab, seed);
     Ok((session, paths, corpus))
+}
+
+/// Assemble the pipeline every experiment subcommand drives.
+fn build_pipeline<'a>(args: &Args, session: &'a Session,
+                      corpus: &'a MarkovCorpus, dense: &'a ParamStore)
+                      -> Result<Pipeline<'a>> {
+    PipelineBuilder::new()
+        .session(session)
+        .corpus(corpus)
+        .dense(dense)
+        .ft(FtConfig::from_args(args)?)
+        .eval_seqs(args.get_usize("eval-seqs", 64)?)
+        .impl_name(args.get_or("impl", "xla"))
+        .build()
 }
 
 fn run() -> Result<()> {
@@ -77,7 +97,7 @@ fn run() -> Result<()> {
 fn print_usage() {
     println!("ebft — block-wise fine-tuning for sparse LLMs (reproduction)");
     println!();
-    println!("usage: ebft <pretrain|prune|finetune|pipeline|eval|zeroshot|info> [--options]");
+    println!("usage: ebft <pretrain|prune|finetune|pipeline|flap|eval|zeroshot|info> [--options]");
     println!("common options: --config tiny|small|base  --artifacts DIR  --runs DIR");
     println!("see README.md for full examples");
 }
@@ -120,29 +140,19 @@ fn load_base(args: &Args, session: &Session, paths: &Paths,
 fn cmd_prune(args: &Args) -> Result<()> {
     let (session, paths, corpus) = open(args)?;
     let dense = load_base(args, &session, &paths, &corpus)?;
-    let method = Method::parse(args.get_or("method", "wanda"))?;
+    let pruner = coordinator::pruner(args.get_or("method", "wanda"))?;
     let pattern = parse_pattern(args)?;
-    let ft = FtConfig::from_args(args)?;
 
-    let exp = Experiment {
-        session: &session,
-        corpus: &corpus,
-        dense: &dense,
-        ft,
-        eval_seqs: args.get_usize("eval-seqs", 64)?,
-        impl_name: args.get_or("impl", "xla").to_string(),
-    };
-    let calib = exp.calib_batches();
-    let mut params = dense.clone();
-    let masks = ebft::pruning::prune_model(&session, &mut params, method,
-                                           pattern, &calib)?;
+    let pipe = build_pipeline(args, &session, &corpus, &dense)?;
+    let pruned = pipe.prune(pruner, pattern)?;
     println!("pruned with {} at {} → realized sparsity {:.2}%",
-             method.label(), pattern.label(), 100.0 * masks.sparsity());
-    let tag = format!("{}-{}-{}", session.manifest.dims.name, method.label(),
+             pruner.label(), pattern.label(),
+             100.0 * pruned.masks.sparsity());
+    let tag = format!("{}-{}-{}", session.manifest.dims.name, pruner.label(),
                       pattern.label().replace([':', '%'], "_"));
     std::fs::create_dir_all(&paths.runs)?;
-    params.save(&paths.runs.join(format!("{tag}.ebft")))?;
-    masks.save(&paths.runs.join(format!("{tag}.masks.ebft")))?;
+    pruned.params.save(&paths.runs.join(format!("{tag}.ebft")))?;
+    pruned.masks.save(&paths.runs.join(format!("{tag}.masks.ebft")))?;
     println!("saved {tag}.ebft + {tag}.masks.ebft under {}",
              paths.runs.display());
     Ok(())
@@ -157,18 +167,11 @@ fn cmd_finetune(args: &Args) -> Result<()> {
                                       &session.manifest)?;
     let masks = MaskSet::load(std::path::Path::new(masks_path),
                               &session.manifest)?;
-    let ft = FtConfig::from_args(args)?;
-    let exp = Experiment {
-        session: &session,
-        corpus: &corpus,
-        dense: &dense,
-        ft: ft.clone(),
-        eval_seqs: args.get_usize("eval-seqs", 64)?,
-        impl_name: args.get_or("impl", "xla").to_string(),
-    };
-    let calib = exp.calib_batches();
-    let report = ebft::ebft::finetune(&session, &dense, &mut sparse, &masks, &ft,
-                                &calib, &exp.impl_name)?;
+    let pipe = build_pipeline(args, &session, &corpus, &dense)?;
+    let ctx = pipe.ctx();
+    let report = ebft::ebft::finetune(&session, &dense, &mut sparse, &masks,
+                                      &ctx.ft, ctx.calib_batches(),
+                                      &ctx.impl_name)?;
     for b in &report.per_block {
         println!("block {:>2}: {:>3} epochs {:>4} steps  loss {:.5} → {:.5}\
                   {}  ({:.1}s)",
@@ -187,27 +190,21 @@ fn cmd_finetune(args: &Args) -> Result<()> {
 fn cmd_pipeline(args: &Args) -> Result<()> {
     let (session, paths, corpus) = open(args)?;
     let dense = load_base(args, &session, &paths, &corpus)?;
-    let method = Method::parse(args.get_or("method", "wanda"))?;
+    let pruner = coordinator::pruner(args.get_or("method", "wanda"))?;
     let pattern = parse_pattern(args)?;
-    let variant = FtVariant::parse(args.get_or("ft", "ebft"))?;
-    let exp = Experiment {
-        session: &session,
-        corpus: &corpus,
-        dense: &dense,
-        ft: FtConfig::from_args(args)?,
-        eval_seqs: args.get_usize("eval-seqs", 64)?,
-        impl_name: args.get_or("impl", "xla").to_string(),
-    };
+    let recovery = coordinator::recovery(args.get_or("ft", "ebft"))?;
+    let pipe = build_pipeline(args, &session, &corpus, &dense)?;
 
-    let dense_ppl = exp.dense_ppl()?;
+    let dense_ppl = pipe.dense_ppl()?;
     println!("dense ppl: {}", fmt_ppl(dense_ppl));
-    let base = exp.run_cell(method, pattern, FtVariant::None)?;
-    println!("{} @ {}: ppl {} (sparsity {:.1}%)", method.label(),
+    let pruned = pipe.prune(pruner, pattern)?;
+    let (_, _, base) = pipe.recover(&pruned, coordinator::recovery("none")?)?;
+    println!("{} @ {}: ppl {} (sparsity {:.1}%)", pruner.label(),
              pattern.label(), fmt_ppl(base.ppl), 100.0 * base.sparsity);
-    if variant != FtVariant::None {
-        let cell = exp.run_cell(method, pattern, variant)?;
-        println!("{} {} @ {}: ppl {}  (ft {:.1}s)", method.label(),
-                 cell.variant.label(), pattern.label(), fmt_ppl(cell.ppl),
+    if recovery.name() != "none" {
+        let (_, _, cell) = pipe.recover(&pruned, recovery)?;
+        println!("{} {} @ {}: ppl {}  (ft {:.1}s)", pruner.label(),
+                 cell.recovery_label, pattern.label(), fmt_ppl(cell.ppl),
                  cell.ft_secs);
         if let Some(r) = &cell.ebft_report {
             for b in &r.per_block {
@@ -227,42 +224,26 @@ fn cmd_flap(args: &Args) -> Result<()> {
     let dense = load_base(args, &session, &paths, &corpus)?;
     let fraction = args.get_f32("fraction", 0.2)?;
     let recover = args.get_or("recover", "ebft");
-    let exp = Experiment {
-        session: &session,
-        corpus: &corpus,
-        dense: &dense,
-        ft: FtConfig::from_args(args)?,
-        eval_seqs: args.get_usize("eval-seqs", 64)?,
-        impl_name: args.get_or("impl", "xla").to_string(),
-    };
-    let dense_ppl = exp.dense_ppl()?;
+    if !matches!(recover, "none" | "ebft" | "lora") {
+        bail!("--recover must be ebft|lora|none, got '{recover}'");
+    }
+    let pipe = build_pipeline(args, &session, &corpus, &dense)?;
+    let dense_ppl = pipe.dense_ppl()?;
     println!("dense ppl: {}", fmt_ppl(dense_ppl));
 
     // raw structured pruning first
-    let calib = exp.calib_batches();
-    let masks = ebft::pruning::flap::prune_model(&session, &dense, fraction,
-                                                 &calib)?;
+    let pruned = pipe.prune(coordinator::pruner("flap")?,
+                            Pattern::Structured(fraction))?;
     println!("FLAP removed {:.1}% of prunable weights (structured)",
-             100.0 * masks.sparsity());
-    let raw_ppl = ebft::eval::perplexity(&session, &dense, &masks, &corpus,
-                                         ebft::data::Split::WikiSim,
-                                         exp.eval_seqs)?;
-    println!("pruned ppl (no recovery): {}", fmt_ppl(raw_ppl));
+             100.0 * pruned.masks.sparsity());
+    let (_, _, raw) = pipe.recover(&pruned, coordinator::recovery("none")?)?;
+    println!("pruned ppl (no recovery): {}", fmt_ppl(raw.ppl));
 
-    match recover {
-        "none" => {}
-        "ebft" | "lora" => {
-            let lora_steps = args.get_usize("lora-steps", 800)?;
-            let (params, eval_masks, secs) =
-                exp.run_structured(fraction, recover == "lora", lora_steps)?;
-            let ppl = ebft::eval::perplexity(&session, &params, &eval_masks,
-                                             &corpus,
-                                             ebft::data::Split::WikiSim,
-                                             exp.eval_seqs)?;
-            println!("{recover} recovery: ppl {} in {:.1}s", fmt_ppl(ppl),
-                     secs);
-        }
-        other => bail!("--recover must be ebft|lora|none, got '{other}'"),
+    if recover != "none" {
+        let (_, _, cell) =
+            pipe.recover(&pruned, coordinator::recovery(recover)?)?;
+        println!("{recover} recovery: ppl {} in {:.1}s", fmt_ppl(cell.ppl),
+                 cell.ft_secs);
     }
     Ok(())
 }

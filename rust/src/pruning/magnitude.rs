@@ -3,12 +3,12 @@
 //! Unstructured: per-tensor top-k (the classic global-within-layer rule).
 //! N:M: per input group of M (per output column), keep the N largest |w|.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::masks::{mask_from_nm, mask_from_topk};
 use crate::tensor::Tensor;
 
-use super::Pattern;
+use super::{Criterion, GroupStats, Pattern};
 
 pub fn prune(w: &Tensor, pattern: Pattern) -> Result<Tensor> {
     let scores = w.map(f32::abs);
@@ -19,6 +19,28 @@ pub fn prune(w: &Tensor, pattern: Pattern) -> Result<Tensor> {
             Ok(mask_from_topk(&scores, keep))
         }
         Pattern::NM(n, m) => mask_from_nm(&scores, n, m),
+        Pattern::Structured(_) => {
+            bail!("magnitude is a block-local pruner; structured patterns \
+                   need flap")
+        }
+    }
+}
+
+/// Registry-facing criterion object.
+pub struct Magnitude;
+
+impl Criterion for Magnitude {
+    fn name(&self) -> &'static str {
+        "magnitude"
+    }
+
+    fn needs_stats(&self) -> bool {
+        false
+    }
+
+    fn prune_linear(&self, w: &Tensor, _stats: Option<&GroupStats>,
+                    pattern: Pattern) -> Result<(Tensor, Option<Tensor>)> {
+        Ok((prune(w, pattern)?, None))
     }
 }
 

@@ -2,6 +2,11 @@
 //! FLAP (structured). All operate block-by-block with sequential error
 //! propagation, exactly like the original implementations: block `l` is
 //! pruned using activations produced by the *already-pruned* blocks < l.
+//!
+//! Block-local criteria implement [`Criterion`] and run through
+//! [`prune_model`]; whole-model structured pruning (FLAP) has its own
+//! driver in [`flap`]. Method selection by name happens in
+//! `coordinator::registry`, not here.
 
 pub mod flap;
 pub mod magnitude;
@@ -16,7 +21,7 @@ use crate::model::ParamStore;
 use crate::runtime::{Session, Value};
 use crate::tensor::Tensor;
 
-pub use stats::{collect_block_stats, BlockStats};
+pub use stats::{collect_block_stats, BlockStats, GroupStats};
 
 /// Sparsity pattern (Eq. 2's constraint).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -25,6 +30,9 @@ pub enum Pattern {
     Unstructured(f32),
     /// N:M — keep `n` of every `m` consecutive inputs per output.
     NM(usize, usize),
+    /// Structured removal (whole heads / FFN channels) of this fraction of
+    /// prunable parameters — FLAP's granularity.
+    Structured(f32),
 }
 
 impl Pattern {
@@ -32,6 +40,7 @@ impl Pattern {
         match *self {
             Pattern::Unstructured(s) => s,
             Pattern::NM(n, m) => 1.0 - n as f32 / m as f32,
+            Pattern::Structured(s) => s,
         }
     }
 
@@ -39,35 +48,29 @@ impl Pattern {
         match *self {
             Pattern::Unstructured(s) => format!("{}%", (s * 100.0) as u32),
             Pattern::NM(n, m) => format!("{n}:{m}"),
+            Pattern::Structured(s) => {
+                format!("struct{}%", (s * 100.0) as u32)
+            }
         }
     }
 }
 
-/// Pruning criterion.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Method {
-    Magnitude,
-    Wanda,
-    SparseGpt,
-}
+/// A block-local pruning criterion: masks one linear at a time, optionally
+/// consuming calibration statistics and optionally rewriting the surviving
+/// weights (SparseGPT's reconstruction).
+pub trait Criterion: Sync {
+    fn name(&self) -> &'static str;
 
-impl Method {
-    pub fn label(&self) -> &'static str {
-        match self {
-            Method::Magnitude => "magnitude",
-            Method::Wanda => "wanda",
-            Method::SparseGpt => "sparsegpt",
-        }
+    /// Whether [`prune_model`] must collect calibration statistics for
+    /// this criterion.
+    fn needs_stats(&self) -> bool {
+        true
     }
 
-    pub fn parse(s: &str) -> Result<Method> {
-        Ok(match s {
-            "magnitude" | "mag" => Method::Magnitude,
-            "wanda" => Method::Wanda,
-            "sparsegpt" => Method::SparseGpt,
-            other => anyhow::bail!("unknown pruning method '{other}'"),
-        })
-    }
+    /// Mask one linear. Returns the mask and, for reconstruction methods,
+    /// replacement weights.
+    fn prune_linear(&self, w: &Tensor, stats: Option<&GroupStats>,
+                    pattern: Pattern) -> Result<(Tensor, Option<Tensor>)>;
 }
 
 /// Advance an activation stream through block `l` (masked weights).
@@ -109,10 +112,10 @@ pub fn embed_stream(session: &Session, params: &ParamStore,
 
 /// Prune the whole model block-by-block with sequential propagation.
 ///
-/// For SparseGPT this also updates the surviving weights in `params`
-/// (regression reconstruction); magnitude/Wanda leave weights unchanged.
+/// Criteria that reconstruct (SparseGPT) update the surviving weights in
+/// `params`; magnitude/Wanda leave weights unchanged.
 pub fn prune_model(session: &Session, params: &mut ParamStore,
-                   method: Method, pattern: Pattern,
+                   criterion: &dyn Criterion, pattern: Pattern,
                    calib_batches: &[Vec<i32>]) -> Result<MaskSet> {
     let n_layers = session.manifest.dims.n_layers;
     let mut masks = MaskSet::dense(&session.manifest);
@@ -120,10 +123,10 @@ pub fn prune_model(session: &Session, params: &mut ParamStore,
 
     for l in 0..n_layers {
         // stats computed with block `l` still dense, inputs already sparse
-        let stats = if method == Method::Magnitude {
-            None
-        } else {
+        let stats = if criterion.needs_stats() {
             Some(collect_block_stats(session, params, &masks, l, &xs)?)
+        } else {
+            None
         };
 
         let shapes = session.manifest.block_linear_shapes(l);
@@ -131,19 +134,11 @@ pub fn prune_model(session: &Session, params: &mut ParamStore,
             let idx = session.manifest.block_linear_indices(l)[j];
             let w = params.tensors[idx].clone();
             debug_assert_eq!(&w.shape, shape);
-            let mask = match method {
-                Method::Magnitude => magnitude::prune(&w, pattern)?,
-                Method::Wanda => {
-                    let g = stats.as_ref().unwrap().group_for_linear(j);
-                    wanda::prune(&w, &g.col_norms(), pattern)?
-                }
-                Method::SparseGpt => {
-                    let g = stats.as_ref().unwrap().group_for_linear(j);
-                    let (mask, new_w) = sparsegpt::prune(&w, &g.gram, pattern)?;
-                    params.tensors[idx] = new_w;
-                    mask
-                }
-            };
+            let group = stats.as_ref().map(|s| s.group_for_linear(j));
+            let (mask, new_w) = criterion.prune_linear(&w, group, pattern)?;
+            if let Some(new_w) = new_w {
+                params.tensors[idx] = new_w;
+            }
             masks.masks[l][j] = mask;
         }
 
@@ -163,15 +158,25 @@ mod tests {
         assert_eq!(Pattern::NM(2, 4).sparsity(), 0.5);
         assert_eq!(Pattern::NM(4, 8).sparsity(), 0.5);
         assert_eq!(Pattern::NM(1, 4).sparsity(), 0.75);
+        assert_eq!(Pattern::Structured(0.2).sparsity(), 0.2);
         assert_eq!(Pattern::Unstructured(0.7).label(), "70%");
         assert_eq!(Pattern::NM(2, 4).label(), "2:4");
+        assert_eq!(Pattern::Structured(0.2).label(), "struct20%");
     }
 
     #[test]
-    fn method_parse() {
-        assert_eq!(Method::parse("wanda").unwrap(), Method::Wanda);
-        assert_eq!(Method::parse("mag").unwrap(), Method::Magnitude);
-        assert_eq!(Method::parse("sparsegpt").unwrap(), Method::SparseGpt);
-        assert!(Method::parse("foo").is_err());
+    fn criteria_reject_structured_patterns() {
+        let w = Tensor::ones(&[4, 4]);
+        let c: &dyn Criterion = &magnitude::Magnitude;
+        assert!(c.prune_linear(&w, None, Pattern::Structured(0.2)).is_err());
+    }
+
+    #[test]
+    fn criterion_names() {
+        assert_eq!(magnitude::Magnitude.name(), "magnitude");
+        assert_eq!(wanda::Wanda.name(), "wanda");
+        assert_eq!(sparsegpt::SparseGpt.name(), "sparsegpt");
+        assert!(!magnitude::Magnitude.needs_stats());
+        assert!(wanda::Wanda.needs_stats());
     }
 }

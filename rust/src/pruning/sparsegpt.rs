@@ -19,7 +19,7 @@ use anyhow::{bail, Result};
 use crate::tensor::linalg;
 use crate::tensor::Tensor;
 
-use super::Pattern;
+use super::{Criterion, GroupStats, Pattern};
 
 pub const PERCDAMP: f32 = 0.01;
 pub const BLOCKSIZE: usize = 32;
@@ -79,11 +79,33 @@ pub fn prune(w: &Tensor, gram: &Tensor, pattern: Pattern)
                 g += m;
             }
         }
+        Pattern::Structured(_) => {
+            bail!("sparsegpt is a block-local pruner; structured patterns \
+                   need flap")
+        }
     }
 
     // zero the pruned positions explicitly (updates touched only later cols)
     let masked = w.mul(&mask);
     Ok((mask, masked))
+}
+
+/// Registry-facing criterion object.
+pub struct SparseGpt;
+
+impl Criterion for SparseGpt {
+    fn name(&self) -> &'static str {
+        "sparsegpt"
+    }
+
+    fn prune_linear(&self, w: &Tensor, stats: Option<&GroupStats>,
+                    pattern: Pattern) -> Result<(Tensor, Option<Tensor>)> {
+        let g = stats
+            .ok_or_else(|| anyhow::anyhow!("sparsegpt needs calibration \
+                                            statistics"))?;
+        let (mask, new_w) = prune(w, &g.gram, pattern)?;
+        Ok((mask, Some(new_w)))
+    }
 }
 
 enum BlockRule {

@@ -5,12 +5,12 @@
 //! ‖X_i‖₂ is the calibration activation norm of input feature i (the stats
 //! collector's `col_norms` of the linear's input group).
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::masks::{mask_from_nm, mask_from_topk_per_col};
 use crate::tensor::Tensor;
 
-use super::Pattern;
+use super::{Criterion, GroupStats, Pattern};
 
 /// Score matrix |W| ⊙ (col-norms broadcast over outputs).
 pub fn scores(w: &Tensor, x_norms: &Tensor) -> Result<Tensor> {
@@ -38,6 +38,25 @@ pub fn prune(w: &Tensor, x_norms: &Tensor, pattern: Pattern) -> Result<Tensor> {
             mask_from_topk_per_col(&s, keep)
         }
         Pattern::NM(n, m) => mask_from_nm(&s, n, m),
+        Pattern::Structured(_) => {
+            bail!("wanda is a block-local pruner; structured patterns need \
+                   flap")
+        }
+    }
+}
+
+/// Registry-facing criterion object.
+pub struct Wanda;
+
+impl Criterion for Wanda {
+    fn name(&self) -> &'static str {
+        "wanda"
+    }
+
+    fn prune_linear(&self, w: &Tensor, stats: Option<&GroupStats>,
+                    pattern: Pattern) -> Result<(Tensor, Option<Tensor>)> {
+        let g = stats.context("wanda needs calibration statistics")?;
+        Ok((prune(w, &g.col_norms(), pattern)?, None))
     }
 }
 

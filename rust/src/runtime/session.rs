@@ -157,8 +157,15 @@ impl Session {
         }
         let map = self.executables.borrow();
         let exe = map.get(name).unwrap();
-        let result = exe.execute::<&xla::Literal>(&refs)?[0][0]
-            .to_literal_sync()?;
+        let devices = exe.execute::<&xla::Literal>(&refs)?;
+        let buffer = devices
+            .first()
+            .and_then(|outputs| outputs.first())
+            .with_context(|| {
+                format!("artifact {name}: execution returned no output \
+                         buffers (corrupt or mis-specified executable?)")
+            })?;
+        let result = buffer.to_literal_sync()?;
         *self.exec_counts.borrow_mut().entry(name.to_string()).or_insert(0)
             += 1;
         Ok(result.to_tuple()?)

@@ -1,0 +1,117 @@
+//! Coordinator API contracts that need no artifacts: registry round-trips,
+//! `PipelineBuilder` misuse, and `RunRecord` golden-JSON serialization.
+
+use ebft::coordinator::{pruner, pruners, recoveries, recovery,
+                        PipelineBuilder, RunRecord};
+use ebft::ebft::finetune::{BlockReport, EbftReport};
+use ebft::pruning::Pattern;
+use ebft::util::Json;
+
+#[test]
+fn registry_round_trips() {
+    // every registered name (and alias) resolves back to the same method
+    for p in pruners() {
+        assert_eq!(pruner(p.name()).unwrap().name(), p.name());
+        assert_eq!(pruner(p.name()).unwrap().label(), p.label());
+        for a in p.aliases() {
+            assert_eq!(pruner(a).unwrap().name(), p.name());
+        }
+    }
+    for r in recoveries() {
+        assert_eq!(recovery(r.name()).unwrap().name(), r.name());
+        assert_eq!(recovery(r.name()).unwrap().label(), r.label());
+        for a in r.aliases() {
+            assert_eq!(recovery(a).unwrap().name(), r.name());
+        }
+    }
+    // names are unique
+    let mut names: Vec<&str> = pruners().iter().map(|p| p.name()).collect();
+    names.sort_unstable();
+    names.dedup();
+    assert_eq!(names.len(), pruners().len());
+}
+
+#[test]
+fn registry_rejects_unknown_names() {
+    let err = pruner("not-a-method").unwrap_err();
+    assert!(format!("{err:#}").contains("not-a-method"));
+    assert!(format!("{err:#}").contains("wanda"),
+            "error should list available methods: {err:#}");
+    let err = recovery("not-a-recovery").unwrap_err();
+    assert!(format!("{err:#}").contains("not-a-recovery"));
+    assert!(format!("{err:#}").contains("ebft"),
+            "error should list available recoveries: {err:#}");
+}
+
+#[test]
+fn registry_covers_paper_methods() {
+    for name in ["magnitude", "wanda", "sparsegpt", "flap"] {
+        assert!(pruner(name).is_ok(), "missing pruner {name}");
+    }
+    for name in ["none", "dsnot", "ebft", "masktune", "lora"] {
+        assert!(recovery(name).is_ok(), "missing recovery {name}");
+    }
+}
+
+#[test]
+fn builder_misuse_errors_not_panics() {
+    // no stages at all → contextual error naming the missing stage
+    let err = PipelineBuilder::new().build().unwrap_err();
+    assert!(format!("{err:#}").contains("session"),
+            "error should name the missing stage: {err:#}");
+}
+
+fn golden_record() -> RunRecord {
+    RunRecord {
+        pruner: "wanda".into(),
+        pruner_label: "wanda".into(),
+        pattern: Pattern::Unstructured(0.5),
+        pattern_label: "50%".into(),
+        recovery: "ebft".into(),
+        recovery_label: "w.Ours".into(),
+        ppl: 12.5,
+        sparsity: 0.5,
+        prune_secs: 1.5,
+        ft_secs: 2.25,
+        eval_secs: 0.25,
+        ebft_report: Some(EbftReport {
+            per_block: vec![BlockReport {
+                block: 0,
+                epochs_run: 2,
+                steps: 4,
+                first_loss: 0.5,
+                last_loss: 0.25,
+                best_loss: 0.25,
+                converged_early: true,
+                secs: 1.5,
+            }],
+            total_secs: 1.5,
+        }),
+    }
+}
+
+#[test]
+fn run_record_golden_json() {
+    let record = golden_record();
+    assert_eq!(record.key(), "wanda/w.Ours/50%");
+    let golden = concat!(
+        r#"{"ebft":{"per_block":[{"best_loss":0.25,"block":0,"#,
+        r#""converged_early":true,"epochs":2,"first_loss":0.5,"#,
+        r#""last_loss":0.25,"secs":1.5,"steps":4}],"total_secs":1.5},"#,
+        r#""eval_secs":0.25,"ft_secs":2.25,"pattern":"50%","ppl":12.5,"#,
+        r#""prune_secs":1.5,"pruner":"wanda","pruner_label":"wanda","#,
+        r#""recovery":"ebft","recovery_label":"w.Ours","sparsity":0.5}"#,
+    );
+    assert_eq!(record.to_json().dump(), golden);
+}
+
+#[test]
+fn run_record_json_round_trips() {
+    let j = golden_record().to_json();
+    let parsed = Json::parse(&j.dump()).unwrap();
+    assert_eq!(parsed, j);
+    // and a record without a report omits the ebft key entirely
+    let mut bare = golden_record();
+    bare.ebft_report = None;
+    assert!(bare.to_json().opt("ebft").is_none());
+}

@@ -23,7 +23,7 @@ fn dsnot_swap_count() {
     let calib = Batcher::new(&corpus, Split::Calib, 64, d.batch, d.seq).ordered_batches();
     let mut params = dense.clone();
     let mut masks = ebft::pruning::prune_model(&session, &mut params,
-        ebft::pruning::Method::Wanda, ebft::pruning::Pattern::Unstructured(0.7), &calib).unwrap();
+        &ebft::pruning::wanda::Wanda, ebft::pruning::Pattern::Unstructured(0.7), &calib).unwrap();
     let swaps = ebft::dsnot::run(&session, &params, &mut masks, &calib).unwrap();
     eprintln!("total swaps: {swaps} over {} prunable", session.manifest.n_prunable());
 }

@@ -1,13 +1,14 @@
-//! Integration: full coordinator pipelines on the `tiny` config.
+//! Integration: full coordinator pipelines on the `tiny` config, driven
+//! through the stage-based `Pipeline` API and the method registries.
 //! Requires `make artifacts` (each test skips otherwise).
 
 use ebft::config::FtConfig;
-use ebft::coordinator::{Experiment, FtVariant};
+use ebft::coordinator::{pruner, recovery, Grid, Pipeline, PipelineBuilder};
 use ebft::data::{Batcher, MarkovCorpus, Split};
 use ebft::masks::MaskSet;
 use ebft::model::ParamStore;
 use ebft::pretrain;
-use ebft::pruning::{self, Method, Pattern};
+use ebft::pruning::Pattern;
 use ebft::runtime::Session;
 use std::path::Path;
 
@@ -44,6 +45,8 @@ fn pipeline_suite() {
         ("ebft_report_is_consistent", ebft_report_is_consistent),
         ("masktune_and_dsnot_preserve_sparsity",
          masktune_and_dsnot_preserve_sparsity),
+        ("grid_sweeps_with_checkpoint_reuse",
+         grid_sweeps_with_checkpoint_reuse),
         ("flap_structured_and_recovery", flap_structured_and_recovery),
         ("lora_trains_and_merges", lora_trains_and_merges),
         ("zeroshot_suite_runs_on_sparse_model",
@@ -59,54 +62,61 @@ fn pipeline_suite() {
     }
 }
 
-fn experiment(e: &Env) -> Experiment<'_> {
-    Experiment {
-        session: &e.session,
-        corpus: &e.corpus,
-        dense: &e.dense,
-        ft: FtConfig { calib_seqs: 16, epochs: 6, ..FtConfig::default() },
-        eval_seqs: 32,
-        impl_name: "xla".into(),
-    }
+fn test_ft() -> FtConfig {
+    FtConfig { calib_seqs: 16, epochs: 6, ..FtConfig::default() }
+}
+
+fn pipeline(e: &Env) -> Pipeline<'_> {
+    pipeline_with(e, test_ft())
+}
+
+fn pipeline_with(e: &Env, ft: FtConfig) -> Pipeline<'_> {
+    PipelineBuilder::new()
+        .session(&e.session)
+        .corpus(&e.corpus)
+        .dense(&e.dense)
+        .ft(ft)
+        .eval_seqs(32)
+        .build()
+        .unwrap()
 }
 
 fn every_pruner_hits_target_sparsity(e: &Env) {
-    let exp = experiment(e);
-    let calib = exp.calib_batches();
-    for method in [Method::Magnitude, Method::Wanda, Method::SparseGpt] {
-        let mut params = e.dense.clone();
-        let masks = pruning::prune_model(&e.session, &mut params, method,
-                                         Pattern::Unstructured(0.6), &calib)
+    let pipe = pipeline(e);
+    for name in ["magnitude", "wanda", "sparsegpt"] {
+        let pruned = pipe
+            .prune(pruner(name).unwrap(), Pattern::Unstructured(0.6))
             .unwrap();
-        let s = masks.sparsity();
-        assert!((s - 0.6).abs() < 0.02, "{}: sparsity {s}", method.label());
-        masks.validate_binary().unwrap();
+        let s = pruned.masks.sparsity();
+        assert!((s - 0.6).abs() < 0.02, "{name}: sparsity {s}");
+        pruned.masks.validate_binary().unwrap();
         // weights at pruned positions must be irrelevant: eval works
-        let ppl = ebft::eval::perplexity(&e.session, &params, &masks,
-                                         &e.corpus, Split::WikiSim, 16)
+        let ppl = ebft::eval::perplexity(&e.session, &pruned.params,
+                                         &pruned.masks, &e.corpus,
+                                         Split::WikiSim, 16)
             .unwrap();
         assert!(ppl.is_finite() && ppl > 1.0);
     }
 }
 
 fn nm_masks_validate(e: &Env) {
-    let exp = experiment(e);
-    let calib = exp.calib_batches();
+    let pipe = pipeline(e);
     for (n, m) in [(2usize, 4usize), (4, 8)] {
-        let mut params = e.dense.clone();
-        let masks = pruning::prune_model(&e.session, &mut params,
-                                         Method::Wanda, Pattern::NM(n, m),
-                                         &calib).unwrap();
-        masks.validate_nm(n, m).unwrap();
+        let pruned = pipe
+            .prune(pruner("wanda").unwrap(), Pattern::NM(n, m))
+            .unwrap();
+        pruned.masks.validate_nm(n, m).unwrap();
     }
 }
 
 fn ebft_improves_pruned_ppl(e: &Env) {
-    let exp = experiment(e);
-    let raw = exp.run_cell(Method::Wanda, Pattern::Unstructured(0.7),
-                           FtVariant::None).unwrap();
-    let tuned = exp.run_cell(Method::Wanda, Pattern::Unstructured(0.7),
-                             FtVariant::Ebft).unwrap();
+    let pipe = pipeline(e);
+    let ckpt = pipe
+        .prune(pruner("wanda").unwrap(), Pattern::Unstructured(0.7))
+        .unwrap();
+    let (_, _, raw) = pipe.recover(&ckpt, recovery("none").unwrap()).unwrap();
+    let (_, _, tuned) =
+        pipe.recover(&ckpt, recovery("ebft").unwrap()).unwrap();
     assert!(tuned.ppl < raw.ppl,
             "EBFT did not improve: {} → {}", raw.ppl, tuned.ppl);
     // sparsity must be preserved by fine-tuning
@@ -114,9 +124,10 @@ fn ebft_improves_pruned_ppl(e: &Env) {
 }
 
 fn ebft_report_is_consistent(e: &Env) {
-    let exp = experiment(e);
-    let cell = exp.run_cell(Method::Wanda, Pattern::Unstructured(0.5),
-                            FtVariant::Ebft).unwrap();
+    let pipe = pipeline(e);
+    let cell = pipe
+        .run_named("wanda", Pattern::Unstructured(0.5), "ebft")
+        .unwrap();
     let report = cell.ebft_report.expect("ebft report");
     assert_eq!(report.per_block.len(), e.session.manifest.dims.n_layers);
     for b in &report.per_block {
@@ -124,35 +135,60 @@ fn ebft_report_is_consistent(e: &Env) {
         assert!(b.last_loss.is_finite());
         assert!(b.secs > 0.0);
     }
+    // the record carries labels resolved from the registries
+    assert_eq!(cell.recovery_label, "w.Ours");
+    assert_eq!(cell.pattern_label, "50%");
 }
 
 fn masktune_and_dsnot_preserve_sparsity(e: &Env) {
-    let exp = experiment(e);
-    for variant in [FtVariant::Dsnot, FtVariant::MaskTune] {
-        let raw = exp.run_cell(Method::Wanda, Pattern::Unstructured(0.6),
-                               FtVariant::None).unwrap();
-        let cell = exp.run_cell(Method::Wanda, Pattern::Unstructured(0.6),
-                                variant).unwrap();
+    let pipe = pipeline(e);
+    let ckpt = pipe
+        .prune(pruner("wanda").unwrap(), Pattern::Unstructured(0.6))
+        .unwrap();
+    let (_, _, raw) = pipe.recover(&ckpt, recovery("none").unwrap()).unwrap();
+    for rec in ["dsnot", "masktune"] {
+        let (_, _, cell) =
+            pipe.recover(&ckpt, recovery(rec).unwrap()).unwrap();
         assert!((cell.sparsity - raw.sparsity).abs() < 1e-3,
-                "{:?} changed sparsity {} → {}", variant, raw.sparsity,
+                "{rec} changed sparsity {} → {}", raw.sparsity,
                 cell.sparsity);
         assert!(cell.ppl.is_finite());
     }
 }
 
-fn flap_structured_and_recovery(e: &Env) {
-    let exp = experiment(e);
-    let calib = exp.calib_batches();
-    let masks = pruning::flap::prune_model(&e.session, &e.dense, 0.2, &calib)
+fn grid_sweeps_with_checkpoint_reuse(e: &Env) {
+    let pipe = pipeline(e);
+    let grid = Grid::new(&["wanda"], &[Pattern::Unstructured(0.6)],
+                         &["none", "dsnot"])
         .unwrap();
-    let s = masks.sparsity();
+    assert_eq!(grid.n_cells(), 2);
+    let swept = grid.run(&pipe).unwrap();
+    assert_eq!(swept.records.len(), 2);
+    let raw = swept.find("wanda", Pattern::Unstructured(0.6), "none")
+        .expect("none cell");
+    let ds = swept.find("wanda", Pattern::Unstructured(0.6), "dsnot")
+        .expect("dsnot cell");
+    assert!(raw.ppl.is_finite() && ds.ppl.is_finite());
+    // both cells were recovered from the same pruned checkpoint
+    assert!((raw.prune_secs - ds.prune_secs).abs() < 1e-12);
+    // JSON export covers every cell
+    assert_eq!(swept.to_json().as_obj().unwrap().len(), 2);
+}
+
+fn flap_structured_and_recovery(e: &Env) {
+    let pipe = pipeline(e);
+    let ckpt = pipe
+        .prune(pruner("flap").unwrap(), Pattern::Structured(0.2))
+        .unwrap();
+    let s = ckpt.masks.sparsity();
     assert!(s > 0.08 && s < 0.4, "structured sparsity off target: {s}");
     // structured property: each pruned FFN channel zeroes full col+row
     // (validated indirectly by mask binary check + eval being finite)
-    masks.validate_binary().unwrap();
-    let (params, masks2, secs) = exp.run_structured(0.2, false, 0).unwrap();
-    assert!(secs > 0.0);
-    let ppl = ebft::eval::perplexity(&e.session, &params, &masks2, &e.corpus,
+    ckpt.masks.validate_binary().unwrap();
+    let (params, masks, cell) =
+        pipe.recover(&ckpt, recovery("ebft").unwrap()).unwrap();
+    assert!(cell.ft_secs > 0.0);
+    let ppl = ebft::eval::perplexity(&e.session, &params, &masks, &e.corpus,
                                      Split::WikiSim, 16).unwrap();
     assert!(ppl.is_finite());
 }
@@ -162,11 +198,10 @@ fn lora_trains_and_merges(e: &Env) {
     let calib = Batcher::new(&e.corpus, Split::InstructSim, 16, d.batch,
                              d.seq).ordered_batches();
     let masks = {
-        let exp = experiment(e);
-        let c = exp.calib_batches();
-        let mut p = e.dense.clone();
-        pruning::prune_model(&e.session, &mut p, Method::Wanda,
-                             Pattern::Unstructured(0.5), &c).unwrap()
+        let pipe = pipeline(e);
+        pipe.prune(pruner("wanda").unwrap(), Pattern::Unstructured(0.5))
+            .unwrap()
+            .masks
     };
     let (adapters, report) = ebft::ebft::lora::train(
         &e.session, &e.dense, &masks, &calib, 30, 1e-2, 0).unwrap();
@@ -182,11 +217,12 @@ fn lora_trains_and_merges(e: &Env) {
 }
 
 fn zeroshot_suite_runs_on_sparse_model(e: &Env) {
-    let exp = experiment(e);
-    let (params, masks) = exp.run_cell_model(Method::Wanda,
-                                             Pattern::Unstructured(0.5),
-                                             FtVariant::Ebft).unwrap();
-    let results = ebft::eval::run_suite(&e.session, &params, &masks,
+    let pipe = pipeline(e);
+    let ckpt = pipe
+        .prune(pruner("wanda").unwrap(), Pattern::Unstructured(0.5))
+        .unwrap();
+    let rec = pipe.recover_model(&ckpt, recovery("ebft").unwrap()).unwrap();
+    let results = ebft::eval::run_suite(&e.session, &rec.params, &rec.masks,
                                         &e.corpus, 8, 3).unwrap();
     assert_eq!(results.len(), 7);
     for r in &results {
@@ -196,13 +232,22 @@ fn zeroshot_suite_runs_on_sparse_model(e: &Env) {
 }
 
 fn pallas_impl_pipeline_matches_xla(e: &Env) {
-    let exp_x = experiment(e);
-    let mut exp_p = experiment(e);
-    exp_p.impl_name = "pallas".into();
-    let a = exp_x.run_cell(Method::Wanda, Pattern::Unstructured(0.5),
-                           FtVariant::Ebft).unwrap();
-    let b = exp_p.run_cell(Method::Wanda, Pattern::Unstructured(0.5),
-                           FtVariant::Ebft).unwrap();
+    let pipe_x = pipeline(e);
+    let pipe_p = PipelineBuilder::new()
+        .session(&e.session)
+        .corpus(&e.corpus)
+        .dense(&e.dense)
+        .ft(test_ft())
+        .eval_seqs(32)
+        .impl_name("pallas")
+        .build()
+        .unwrap();
+    let a = pipe_x
+        .run_named("wanda", Pattern::Unstructured(0.5), "ebft")
+        .unwrap();
+    let b = pipe_p
+        .run_named("wanda", Pattern::Unstructured(0.5), "ebft")
+        .unwrap();
     let rel = ((a.ppl - b.ppl) / a.ppl).abs();
     assert!(rel < 0.02, "pallas vs xla pipeline ppl diverged: {} vs {}",
             a.ppl, b.ppl);
@@ -212,10 +257,10 @@ fn fig2_monotone_tendency(e: &Env) {
     // more calibration data should not make things (much) worse
     let mut ppls = Vec::new();
     for n in [8usize, 32] {
-        let mut exp = experiment(e);
-        exp.ft.calib_seqs = n;
-        let cell = exp.run_cell(Method::Wanda, Pattern::Unstructured(0.7),
-                                FtVariant::Ebft).unwrap();
+        let pipe = pipeline_with(e, FtConfig { calib_seqs: n, ..test_ft() });
+        let cell = pipe
+            .run_named("wanda", Pattern::Unstructured(0.7), "ebft")
+            .unwrap();
         ppls.push(cell.ppl);
     }
     assert!(ppls[1] <= ppls[0] * 1.10,
