@@ -12,7 +12,7 @@ use ebft::config::FtConfig;
 use ebft::data::Split;
 use ebft::masks::MaskSet;
 use ebft::pruning::Pattern;
-use ebft::runtime::Value;
+use ebft::runtime::DeviceBuffer;
 use ebft::tensor::Tensor;
 use ebft::util::metrics::{fmt_ppl, time_it};
 use ebft::util::{Json, Pcg64, TableWriter};
@@ -36,35 +36,38 @@ fn main() -> anyhow::Result<()> {
     let zeros: Vec<Tensor> =
         bp.iter().map(|t| Tensor::zeros(&t.shape)).collect();
 
-    let run_step = |name: &str| -> anyhow::Result<f32> {
-        let mut ins: Vec<Value> = bp.iter().map(Value::F32).collect();
-        for m in masks.block(0) {
-            ins.push(Value::F32(m));
+    // one bound plan per implementation: state uploaded once, so the
+    // timed loop measures the step itself, not re-uploads
+    let mut plans = Vec::new();
+    for name in ["block_ft_step", "block_ft_step_pallas"] {
+        let mut plan = env.session.plan(name)?;
+        plan.bind_indexed("bp", bp.iter())?;
+        plan.bind_indexed("mask", masks.block(0).iter())?;
+        for (j, t) in zeros.iter().enumerate() {
+            let z = DeviceBuffer::from_tensor(t)?;
+            plan.bind(&format!("m.{j}"), &z)?;
+            plan.bind(&format!("v.{j}"), &z)?;
         }
-        for t in &zeros {
-            ins.push(Value::F32(t));
-        }
-        for t in &zeros {
-            ins.push(Value::F32(t));
-        }
-        ins.push(Value::Scalar(1.0));
-        ins.push(Value::Scalar(1e-2));
-        ins.push(Value::F32(&x));
-        ins.push(Value::F32(&target));
-        let outs = env.session.run(name, &ins)?;
-        Ok(outs.last().unwrap().item())
-    };
+        plan.bind_scalar("t", 1.0)?;
+        plan.bind_scalar("lr", 1e-2)?;
+        plan.bind_tensor("x", &x)?;
+        plan.bind_tensor("target", &target)?;
+        plans.push(plan);
+    }
+    fn run_step(plan: &mut ebft::runtime::Plan<'_>) -> anyhow::Result<f32> {
+        let outs = plan.run_to_device()?;
+        outs.last().unwrap().fetch_scalar()
+    }
 
-    let loss_xla = run_step("block_ft_step")?;
-    let loss_pallas = run_step("block_ft_step_pallas")?;
+    let loss_xla = run_step(&mut plans[0])?;
+    let loss_pallas = run_step(&mut plans[1])?;
     let rel = ((loss_xla - loss_pallas) / loss_xla.abs().max(1e-9)).abs();
     println!("(a) ft-step loss  xla {loss_xla:.6}  pallas {loss_pallas:.6}  \
               rel-diff {rel:.2e}");
     assert!(rel < 1e-3, "pallas and xla ft-steps disagree");
 
-    let stat_x = time_it(|| { run_step("block_ft_step").unwrap(); }, 2, 8);
-    let stat_p =
-        time_it(|| { run_step("block_ft_step_pallas").unwrap(); }, 2, 8);
+    let stat_x = time_it(|| { run_step(&mut plans[0]).unwrap(); }, 2, 8);
+    let stat_p = time_it(|| { run_step(&mut plans[1]).unwrap(); }, 2, 8);
     let mut table = TableWriter::new(
         "Ablation (a) — L1 implementation of the ft-step hot path",
         &["impl", "mean ms", "min ms"]);

@@ -12,7 +12,13 @@ use ebft::util::{Json, TableWriter};
 
 fn main() -> anyhow::Result<()> {
     let env = BenchEnv::open(0)?;
-    let sample_counts: Vec<usize> = if full_grid() {
+    // EBFT_SMOKE=1: a single cell — CI's hot-loop regression canary for
+    // the runtime Plan/DeviceBuffer API (see .github/workflows/ci.yml)
+    let smoke = std::env::var("EBFT_SMOKE").map(|v| v == "1")
+        .unwrap_or(false);
+    let sample_counts: Vec<usize> = if smoke {
+        vec![8]
+    } else if full_grid() {
         vec![8, 16, 32, 64, 128, 256]
     } else {
         vec![8, 16, 32, 64, 128]

@@ -13,9 +13,9 @@ pub struct FtConfig {
     pub epochs: usize,
     /// Adam learning rate. The paper uses 2e-4 for Llama-7B with ~2560
     /// optimizer steps per block; our scaled testbed takes ~80 steps per
-    /// block, so the default is rescaled to 1e-2 (swept in
-    /// EXPERIMENTS.md §Calibration — the ordering of methods is insensitive
-    /// to this choice, only the recovery magnitude moves).
+    /// block, so the default is rescaled to 1e-2 (the ordering of methods
+    /// is insensitive to this choice — only the recovery magnitude moves;
+    /// sweep via `bench_ablation`).
     pub lr: f32,
     /// Early-stop: relative loss improvement below this over a window
     /// counts as converged (paper: "loss unchanged or within a small range").

@@ -2,11 +2,18 @@
 //!
 //! A `RunContext` bundles the session, corpus, dense (teacher) model and
 //! fine-tuning configuration that every stage of every cell needs, and owns
-//! the calibration-batch cache: batches are generated from the corpus once
-//! per context and reused across all (pruner × pattern × recovery) cells
-//! driven from it — previously every cell regenerated them.
+//! two caches that outlive individual cells:
+//!
+//! - the calibration-batch cache: batches are generated from the corpus
+//!   once per context and reused across all (pruner × pattern × recovery)
+//!   cells driven from it — previously every cell regenerated them;
+//! - the long-lived [`Plan`] cache: typed plans (today the `lm_loss` eval
+//!   plan) are created once per context and rebound per use, so a grid
+//!   sweep compiles and resolves each artifact once instead of rebuilding
+//!   the full param/mask literal vector for every eval.
 
-use std::cell::OnceCell;
+use std::cell::{OnceCell, RefCell};
+use std::collections::{hash_map::Entry, HashMap};
 
 use anyhow::Result;
 
@@ -15,7 +22,7 @@ use crate::data::{Batcher, MarkovCorpus, Split};
 use crate::eval;
 use crate::masks::MaskSet;
 use crate::model::ParamStore;
-use crate::runtime::Session;
+use crate::runtime::{Plan, Session};
 
 pub struct RunContext<'a> {
     pub session: &'a Session,
@@ -30,6 +37,7 @@ pub struct RunContext<'a> {
     /// Split perplexity is measured on.
     pub eval_split: Split,
     calib: OnceCell<Vec<Vec<i32>>>,
+    plans: RefCell<HashMap<String, Plan<'a>>>,
 }
 
 impl<'a> RunContext<'a> {
@@ -45,6 +53,7 @@ impl<'a> RunContext<'a> {
             impl_name,
             eval_split: Split::WikiSim,
             calib: OnceCell::new(),
+            plans: RefCell::new(HashMap::new()),
         }
     }
 
@@ -59,16 +68,47 @@ impl<'a> RunContext<'a> {
         })
     }
 
+    /// Run `f` with the context's long-lived plan for `name`, creating it
+    /// on first use. The plan keeps its bindings between calls; callers
+    /// rebind what changed. `f` must not re-enter `with_plan` (the plan
+    /// cache is a `RefCell`).
+    pub fn with_plan<R>(&self, name: &str,
+                        f: impl FnOnce(&mut Plan<'a>) -> Result<R>)
+                        -> Result<R> {
+        let mut plans = self.plans.borrow_mut();
+        let plan = match plans.entry(name.to_string()) {
+            Entry::Occupied(e) => e.into_mut(),
+            Entry::Vacant(v) => v.insert(self.session.plan(name)?),
+        };
+        f(plan)
+    }
+
     /// Perplexity of the dense teacher (reference row).
     pub fn dense_ppl(&self) -> Result<f64> {
         let masks = MaskSet::dense(&self.session.manifest);
         self.eval_ppl(self.dense, &masks)
     }
 
-    /// Perplexity of `params` under `masks` on the eval split.
+    /// Perplexity of `params` under `masks` on the eval split, through the
+    /// context's long-lived `lm_loss` plan (params + masks bound once per
+    /// eval, token batches streamed).
     pub fn eval_ppl(&self, params: &ParamStore, masks: &MaskSet)
                     -> Result<f64> {
-        eval::perplexity(self.session, params, masks, self.corpus,
-                         self.eval_split, self.eval_seqs)
+        let nll = self.with_plan("lm_loss", |plan| {
+            let nll = match eval::bind_lm_inputs(plan, params, masks) {
+                Ok(()) => eval::mean_nll_bound(plan, self.corpus,
+                                               self.eval_split,
+                                               self.eval_seqs),
+                Err(e) => Err(e),
+            };
+            // release the model's device residency on success *and* on a
+            // partial bind — the plan (and its compiled executable)
+            // outlives the eval, but the bound params/masks must not
+            // outlive it into the prune / fine-tune stages, whose memory
+            // budget assumes one resident block
+            plan.unbind_all();
+            nll
+        })?;
+        Ok(nll.exp())
     }
 }

@@ -187,6 +187,7 @@ impl RunRecord {
                     bj.set("best_loss", Json::Num(b.best_loss as f64));
                     bj.set("converged_early", Json::Bool(b.converged_early));
                     bj.set("secs", Json::Num(b.secs));
+                    bj.set("bind_secs", Json::Num(b.bind_secs));
                     bj
                 })
                 .collect();

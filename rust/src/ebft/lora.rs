@@ -4,15 +4,18 @@
 //! A rank-r pair (A, B) rides on every prunable linear: W̄ = W⊙M + s·A·B.
 //! Only the adapters train (the sparse base is frozen), via the
 //! `lora_train_step` artifact on full-model LM loss over the instruct-sim
-//! corpus. `merge` folds the adapters into the weights for evaluation —
-//! note the merged model is no longer sparse (LoRA's deployment downside
-//! the paper calls out).
+//! corpus. The frozen base params and masks are bound to the plan once for
+//! the whole run; adapters and their Adam state are donated (device-
+//! resident across steps), so each step uploads only the token batch and
+//! the step counter. `merge` folds the adapters into the weights for
+//! evaluation — note the merged model is no longer sparse (LoRA's
+//! deployment downside the paper calls out).
 
 use anyhow::Result;
 
 use crate::masks::MaskSet;
 use crate::model::ParamStore;
-use crate::runtime::{Session, Value};
+use crate::runtime::Session;
 use crate::tensor::Tensor;
 use crate::util::Pcg64;
 
@@ -49,48 +52,44 @@ pub fn train(session: &Session, params: &ParamStore, masks: &MaskSet,
              batches: &[Vec<i32>], steps: usize, lr: f32, seed: u64)
              -> Result<(Vec<Tensor>, LoraReport)> {
     let d = session.manifest.dims.clone();
-    let tok_shape = [d.batch, d.seq];
-    let mut adapters = init_adapters(session, seed);
-    let mut m_st: Vec<Tensor> =
-        adapters.iter().map(|t| Tensor::zeros(&t.shape)).collect();
-    let mut v_st = m_st.clone();
+    let adapters = init_adapters(session, seed);
     let n_ad = adapters.len();
+
+    let mut plan = session.plan("lora_train_step")?;
+    // frozen base: params + all masks, uploaded once for the whole run
+    plan.bind_indexed("param", params.tensors.iter())?;
+    let flat_masks = (0..d.n_layers).flat_map(|l| masks.block(l).iter());
+    plan.bind_indexed("mask", flat_masks)?;
+    // trainable state: adapters + Adam moments, donated across steps
+    plan.bind_indexed("lora", adapters.iter())?;
+    for (j, t) in adapters.iter().enumerate() {
+        let z = crate::runtime::DeviceBuffer::zeros(&t.shape)?;
+        plan.bind(&format!("m.{j}"), &z)?;
+        plan.bind(&format!("v.{j}"), &z)?;
+    }
+    plan.donate_matching()?;
+    plan.bind_scalar("lr", lr)?;
+    let loss_out = plan.output_index("loss")?;
 
     let t0 = std::time::Instant::now();
     let mut first_loss = f32::NAN;
     let mut last_loss = f32::NAN;
     for step in 1..=steps {
         let batch = &batches[(step - 1) % batches.len()];
-        let mut ins: Vec<Value> =
-            params.tensors.iter().map(Value::F32).collect();
-        for l in 0..d.n_layers {
-            for m in masks.block(l) {
-                ins.push(Value::F32(m));
-            }
-        }
-        for t in &adapters {
-            ins.push(Value::F32(t));
-        }
-        for t in &m_st {
-            ins.push(Value::F32(t));
-        }
-        for t in &v_st {
-            ins.push(Value::F32(t));
-        }
-        ins.push(Value::Scalar(step as f32));
-        ins.push(Value::Scalar(lr));
-        ins.push(Value::I32(&tok_shape, batch));
-        let mut outs = session.run("lora_train_step", &ins)?;
-        let loss = outs.pop().unwrap().item();
-        v_st = outs.split_off(2 * n_ad);
-        m_st = outs.split_off(n_ad);
-        adapters = outs;
+        plan.bind_scalar("t", step as f32)?;
+        plan.bind_tokens("tokens", batch)?;
+        let outs = plan.run_to_device()?;
+        let loss = outs[loss_out].fetch_scalar()?;
         if first_loss.is_nan() {
             first_loss = loss;
         }
         last_loss = loss;
     }
-    Ok((adapters, LoraReport {
+    // donation kept the freshest adapters bound — fetch them once
+    let trained: Vec<Tensor> = (0..n_ad)
+        .map(|j| plan.bound(&format!("lora.{j}"))?.fetch())
+        .collect::<Result<_>>()?;
+    Ok((trained, LoraReport {
         steps,
         first_loss,
         last_loss,

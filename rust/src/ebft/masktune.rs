@@ -7,6 +7,10 @@
 //! RigL-style swaps with a decaying swap fraction, sparsity preserved per
 //! tensor throughout. The paper finds this beats DSnoT but loses to weight
 //! tuning — our Table 6 bench reproduces that ordering.
+//!
+//! Runtime shape: one `block_grad` plan per block with the weights bound
+//! persistently; only the masks (which the tuner mutates) are rebound per
+//! batch, alongside the streamed (x, target) activations.
 
 use anyhow::Result;
 
@@ -14,7 +18,7 @@ use super::cache::ActivationCache;
 use crate::config::FtConfig;
 use crate::masks::MaskSet;
 use crate::model::ParamStore;
-use crate::runtime::{Session, Value};
+use crate::runtime::Session;
 use crate::tensor::Tensor;
 
 pub const INITIAL_SWAP_FRAC: f32 = 0.05;
@@ -63,7 +67,6 @@ pub fn masktune(session: &Session, dense: &ParamStore, params: &ParamStore,
     let d = session.manifest.dims.clone();
     let n_batches = calib_batches.len();
     let act_shape = [d.batch, d.seq, d.d_model];
-    let tok_shape = [d.batch, d.seq];
 
     let mut teacher = ActivationCache::new(n_batches, &act_shape,
                                            cfg.cache_budget_bytes / 2,
@@ -71,19 +74,11 @@ pub fn masktune(session: &Session, dense: &ParamStore, params: &ParamStore,
     let mut student = ActivationCache::new(n_batches, &act_shape,
                                            cfg.cache_budget_bytes / 2,
                                            "mt-student");
-    for (i, b) in calib_batches.iter().enumerate() {
-        let x0 = session
-            .run("embed_fwd", &[
-                Value::F32(dense.get("embed")?),
-                Value::I32(&tok_shape, b),
-            ])?
-            .remove(0);
-        teacher.put(i, x0.clone())?;
-        student.put(i, x0)?;
-    }
+    super::streams::embed_into(session, dense.get("embed")?, calib_batches,
+                               &mut teacher, &mut student)?;
 
     for l in 0..d.n_layers {
-        // dense targets
+        // dense targets (dense weights + all-ones masks, bound once)
         let mut targets = ActivationCache::new(n_batches, &act_shape,
                                                cfg.cache_budget_bytes / 2,
                                                &format!("mt-targets{l}"));
@@ -93,34 +88,23 @@ pub fn masktune(session: &Session, dense: &ParamStore, params: &ParamStore,
             .iter()
             .map(|s| Tensor::ones(s))
             .collect();
-        let dense_bp = dense.block_params(&session.manifest, l);
-        for i in 0..n_batches {
-            let x = teacher.get(i)?;
-            let mut ins: Vec<Value> =
-                dense_bp.iter().map(|t| Value::F32(t)).collect();
-            for m in &ones {
-                ins.push(Value::F32(m));
-            }
-            ins.push(Value::F32(&x));
-            targets.put(i, session.run("block_fwd", &ins)?.remove(0))?;
-        }
+        super::streams::block_fwd_sweep(
+            session, &dense.block_params(&session.manifest, l), &ones,
+            &mut teacher, Some(&mut targets))?;
 
-        let bp = params.block_params(&session.manifest, l);
+        let mut grad_plan = session.plan("block_grad")?;
+        grad_plan
+            .bind_indexed("bp", params.block_params(&session.manifest, l))?;
         for epoch in 0..cfg.epochs {
             // decaying swap budget (cosine-free simple decay)
             let frac = INITIAL_SWAP_FRAC
                 * (1.0 - epoch as f32 / cfg.epochs as f32);
             for i in 0..n_batches {
-                let x = student.get(i)?;
-                let target = targets.get(i)?;
-                let mut ins: Vec<Value> =
-                    bp.iter().map(|t| Value::F32(t)).collect();
-                for m in masks.block(l) {
-                    ins.push(Value::F32(m));
-                }
-                ins.push(Value::F32(&x));
-                ins.push(Value::F32(&target));
-                let outs = session.run("block_grad", &ins)?;
+                // masks mutate between batches — rebind them each call
+                grad_plan.bind_indexed("mask", masks.block(l).iter())?;
+                grad_plan.bind_tensor("x", &student.get(i)?)?;
+                grad_plan.bind_tensor("target", &targets.get(i)?)?;
+                let outs = grad_plan.run()?;
                 // outs[0] = loss, outs[1..8] = dense grads per linear
                 for j in 0..7 {
                     let grad = &outs[1 + j];
@@ -132,22 +116,15 @@ pub fn masktune(session: &Session, dense: &ParamStore, params: &ParamStore,
                 }
             }
         }
+        drop(grad_plan);
 
         // advance both streams
         for i in 0..n_batches {
             teacher.put(i, targets.get(i)?)?;
         }
-        let bp = params.block_params(&session.manifest, l);
-        for i in 0..n_batches {
-            let x = student.get(i)?;
-            let mut ins: Vec<Value> =
-                bp.iter().map(|t| Value::F32(t)).collect();
-            for m in masks.block(l) {
-                ins.push(Value::F32(m));
-            }
-            ins.push(Value::F32(&x));
-            student.put(i, session.run("block_fwd", &ins)?.remove(0))?;
-        }
+        super::streams::block_fwd_sweep(
+            session, &params.block_params(&session.manifest, l),
+            masks.block(l), &mut student, None)?;
     }
     Ok(())
 }

@@ -7,6 +7,7 @@ pub mod convergence;
 pub mod finetune;
 pub mod lora;
 pub mod masktune;
+pub(crate) mod streams;
 
 pub use cache::ActivationCache;
 pub use convergence::ConvergenceDetector;

@@ -1,0 +1,50 @@
+//! Shared activation-stream sweeps for the block-wise tuners.
+//!
+//! `finetune` and `masktune` both (a) embed the calibration batches into
+//! a pair of teacher/student caches, (b) produce dense per-block targets,
+//! and (c) advance a stream through a finished block. Each sweep binds
+//! its plan's params and masks once and streams the batches; outputs are
+//! fetched exactly once, at the spillable-cache boundary.
+
+use anyhow::Result;
+
+use super::cache::ActivationCache;
+use crate::runtime::Session;
+use crate::tensor::Tensor;
+
+/// Embed every token batch and seed both caches with x⁰.
+pub(crate) fn embed_into(session: &Session, embed: &Tensor,
+                         batches: &[Vec<i32>], a: &mut ActivationCache,
+                         b: &mut ActivationCache) -> Result<()> {
+    let mut plan = session.plan("embed_fwd")?;
+    plan.bind_tensor("embed", embed)?;
+    for (i, toks) in batches.iter().enumerate() {
+        plan.bind_tokens("tokens", toks)?;
+        let x0 = plan.run_to_device()?.remove(0).fetch()?;
+        a.put(i, x0.clone())?;
+        b.put(i, x0)?;
+    }
+    Ok(())
+}
+
+/// Map every batch of `src` through `block_fwd` (params + masks bound
+/// once), writing the outputs into `dst` — or back into `src` when `dst`
+/// is `None` (stream advancement).
+pub(crate) fn block_fwd_sweep(session: &Session, bp: &[&Tensor],
+                              masks: &[Tensor], src: &mut ActivationCache,
+                              mut dst: Option<&mut ActivationCache>)
+                              -> Result<()> {
+    let mut plan = session.plan("block_fwd")?;
+    plan.bind_indexed("bp", bp.iter().copied())?;
+    plan.bind_indexed("mask", masks.iter())?;
+    for i in 0..src.len() {
+        plan.bind_tensor("x", &src.get(i)?)?;
+        let y = plan.run_to_device()?.remove(0).fetch()?;
+        if let Some(d) = dst.as_mut() {
+            d.put(i, y)?;
+        } else {
+            src.put(i, y)?;
+        }
+    }
+    Ok(())
+}

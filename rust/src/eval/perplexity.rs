@@ -1,41 +1,56 @@
 //! Perplexity on the wiki-sim split: exp of the mean next-token NLL,
 //! computed exactly the way the paper evaluates Wikitext2.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::data::{Batcher, MarkovCorpus, Split};
 use crate::masks::MaskSet;
 use crate::model::ParamStore;
-use crate::runtime::{Session, Value};
+use crate::runtime::{Plan, Session};
+
+/// Bind a model (all params + all masks, flat manifest order) to an
+/// `lm_loss` plan. Callers holding a long-lived plan (the coordinator's
+/// `RunContext`) rebind per eval; everything stays device-resident across
+/// the batch loop.
+pub fn bind_lm_inputs(plan: &mut Plan<'_>, params: &ParamStore,
+                      masks: &MaskSet) -> Result<()> {
+    plan.bind_indexed("param", params.tensors.iter())?;
+    let n_layers = plan.session().manifest.dims.n_layers;
+    let flat_masks = (0..n_layers).flat_map(|l| masks.block(l).iter());
+    plan.bind_indexed("mask", flat_masks)?;
+    Ok(())
+}
+
+/// Mean NLL over the batches of an already-bound `lm_loss` plan. Only the
+/// token batch is uploaded per call and only the scalar NLL fetched.
+pub fn mean_nll_bound(plan: &mut Plan<'_>, corpus: &MarkovCorpus,
+                      split: Split, n_seqs: usize) -> Result<f64> {
+    let d = plan.session().manifest.dims.clone();
+    let batcher = Batcher::new(corpus, split, n_seqs, d.batch, d.seq);
+    let mut total = 0.0f64;
+    let mut n = 0usize;
+    for batch in batcher.ordered_batches() {
+        plan.bind_tokens("tokens", &batch)?;
+        let outs = plan.run_to_device()?;
+        total += outs[0].fetch_scalar()? as f64;
+        n += 1;
+    }
+    if n == 0 {
+        bail!("mean_nll: no eval batches on split {split:?} (requested \
+               {n_seqs} seqs at batch size {}; need at least one full \
+               batch)", d.batch);
+    }
+    Ok(total / n as f64)
+}
 
 /// Mean NLL over `n_seqs` sequences of `split` (monolithic lm_loss path).
 /// Parameters and masks are uploaded once and reused across batches.
 pub fn mean_nll(session: &Session, params: &ParamStore, masks: &MaskSet,
                 corpus: &MarkovCorpus, split: Split,
                 n_seqs: usize) -> Result<f64> {
-    let d = session.manifest.dims.clone();
-    let batcher = Batcher::new(corpus, split, n_seqs, d.batch, d.seq);
-    let tok_shape = [d.batch, d.seq];
-    let mut fixed: Vec<xla::Literal> = params
-        .tensors
-        .iter()
-        .map(crate::runtime::lit_f32)
-        .collect::<Result<_>>()?;
-    for l in 0..d.n_layers {
-        for m in masks.block(l) {
-            fixed.push(crate::runtime::lit_f32(m)?);
-        }
-    }
-    let mut total = 0.0f64;
-    let mut n = 0usize;
-    for batch in batcher.ordered_batches() {
-        let mut ins: Vec<Value> = fixed.iter().map(Value::Lit).collect();
-        ins.push(Value::I32(&tok_shape, &batch));
-        let out = session.run_raw("lm_loss", &ins)?;
-        total += crate::runtime::scalar_from_lit(&out[0])? as f64;
-        n += 1;
-    }
-    Ok(total / n.max(1) as f64)
+    let mut plan = session.plan("lm_loss")?;
+    bind_lm_inputs(&mut plan, params, masks)?;
+    mean_nll_bound(&mut plan, corpus, split, n_seqs)
 }
 
 /// Perplexity = exp(mean NLL). The headline metric of Tables 1/2/4/5/6.

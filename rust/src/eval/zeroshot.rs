@@ -8,7 +8,7 @@ use crate::data::zeroshot::{ZeroShotItem, ZeroShotTask, ALL_TASKS};
 use crate::data::MarkovCorpus;
 use crate::masks::MaskSet;
 use crate::model::ParamStore;
-use crate::runtime::{Session, Value};
+use crate::runtime::{Plan, Session};
 
 #[derive(Clone, Debug)]
 pub struct TaskResult {
@@ -51,12 +51,42 @@ fn build_rows(items: &[ZeroShotItem], seq: usize) -> Vec<Row> {
     rows
 }
 
+/// The model bound once for scoring: one `block_fwd` plan per layer plus
+/// the embed and head plans. Built once per eval (the whole suite shares
+/// it) so params and masks upload once, not per task or per batch.
+struct ScorePlans<'s> {
+    embed: Plan<'s>,
+    blocks: Vec<Plan<'s>>,
+    head: Plan<'s>,
+}
+
+impl<'s> ScorePlans<'s> {
+    fn bind(session: &'s Session, params: &ParamStore,
+            masks: &MaskSet) -> Result<ScorePlans<'s>> {
+        let d = &session.manifest.dims;
+        let mut embed = session.plan("embed_fwd")?;
+        embed.bind_tensor("embed", params.get("embed")?)?;
+        let mut blocks = Vec::with_capacity(d.n_layers);
+        for l in 0..d.n_layers {
+            let mut p = session.plan("block_fwd")?;
+            p.bind_indexed("bp", params.block_params(&session.manifest, l))?;
+            p.bind_indexed("mask", masks.block(l).iter())?;
+            blocks.push(p);
+        }
+        let mut head = session.plan("head_seq_nll")?;
+        head.bind_tensor("g_norm", params.get("final.norm.g")?)?;
+        head.bind_tensor("head", params.get("final.head")?)?;
+        Ok(ScorePlans { embed, blocks, head })
+    }
+}
+
 /// Score all rows: per row, weighted NLL / weight count (length-normalized).
-fn score_rows(session: &Session, params: &ParamStore, masks: &MaskSet,
-              rows: &[Row]) -> Result<Vec<f64>> {
-    let d = session.manifest.dims.clone();
+///
+/// Activations chain block to block as device buffers; only the per-row
+/// NLL/weight reductions are fetched.
+fn score_rows(plans: &mut ScorePlans<'_>, rows: &[Row]) -> Result<Vec<f64>> {
+    let d = plans.embed.session().manifest.dims.clone();
     let b = d.batch;
-    let tok_shape = [b, d.seq];
     let mut scores = vec![0.0f64; rows.len()];
 
     let mut start = 0usize;
@@ -72,33 +102,17 @@ fn score_rows(session: &Session, params: &ParamStore, masks: &MaskSet,
         }
 
         // run the decomposed path: embed → blocks → head_seq_nll
-        let x0 = session
-            .run("embed_fwd", &[
-                Value::F32(params.get("embed")?),
-                Value::I32(&tok_shape, &tokens),
-            ])?
-            .remove(0);
-        let mut x = x0;
-        for l in 0..d.n_layers {
-            let mut ins: Vec<Value> = params
-                .block_params(&session.manifest, l)
-                .into_iter()
-                .map(Value::F32)
-                .collect();
-            for m in masks.block(l) {
-                ins.push(Value::F32(m));
-            }
-            ins.push(Value::F32(&x));
-            x = session.run("block_fwd", &ins)?.remove(0);
+        plans.embed.bind_tokens("tokens", &tokens)?;
+        let mut x = plans.embed.run_to_device()?.remove(0);
+        for p in plans.blocks.iter_mut() {
+            p.bind("x", &x)?;
+            x = p.run_to_device()?.remove(0);
         }
         let wt = crate::tensor::Tensor::from_vec(&[b, d.seq], weights);
-        let outs = session.run("head_seq_nll", &[
-            Value::F32(params.get("final.norm.g")?),
-            Value::F32(params.get("final.head")?),
-            Value::F32(&x),
-            Value::I32(&tok_shape, &tokens),
-            Value::F32(&wt),
-        ])?;
+        plans.head.bind("x", &x)?;
+        plans.head.bind_tokens("tokens", &tokens)?;
+        plans.head.bind_tensor("weights", &wt)?;
+        let outs = plans.head.run()?;
         let nll = &outs[0];
         let wsum = &outs[1];
         for k in 0..(end - start) {
@@ -110,15 +124,14 @@ fn score_rows(session: &Session, params: &ParamStore, masks: &MaskSet,
     Ok(scores)
 }
 
-/// Run one task: accuracy = fraction of items whose correct choice scores
-/// the lowest normalized NLL.
-pub fn run_task(session: &Session, params: &ParamStore, masks: &MaskSet,
-                corpus: &MarkovCorpus, task: ZeroShotTask, n_items: usize,
-                seed: u64) -> Result<TaskResult> {
-    let d = session.manifest.dims.clone();
-    let items = task.items(corpus, n_items, d.seq, seed);
-    let rows = build_rows(&items, d.seq);
-    let scores = score_rows(session, params, masks, &rows)?;
+/// Run one task against an already-bound model.
+fn run_task_bound(plans: &mut ScorePlans<'_>, corpus: &MarkovCorpus,
+                  task: ZeroShotTask, n_items: usize,
+                  seed: u64) -> Result<TaskResult> {
+    let seq = plans.embed.session().manifest.dims.seq;
+    let items = task.items(corpus, n_items, seq, seed);
+    let rows = build_rows(&items, seq);
+    let scores = score_rows(plans, &rows)?;
 
     let mut best: Vec<(f64, usize)> =
         vec![(f64::INFINITY, usize::MAX); items.len()];
@@ -135,13 +148,24 @@ pub fn run_task(session: &Session, params: &ParamStore, masks: &MaskSet,
     Ok(TaskResult { task: task.name(), n_items: items.len(), correct })
 }
 
-/// The full 7-task suite (Table 3).
+/// Run one task: accuracy = fraction of items whose correct choice scores
+/// the lowest normalized NLL.
+pub fn run_task(session: &Session, params: &ParamStore, masks: &MaskSet,
+                corpus: &MarkovCorpus, task: ZeroShotTask, n_items: usize,
+                seed: u64) -> Result<TaskResult> {
+    let mut plans = ScorePlans::bind(session, params, masks)?;
+    run_task_bound(&mut plans, corpus, task, n_items, seed)
+}
+
+/// The full 7-task suite (Table 3). The model is bound once and shared by
+/// every task — params and masks upload once per suite, not per task.
 pub fn run_suite(session: &Session, params: &ParamStore, masks: &MaskSet,
                  corpus: &MarkovCorpus, n_items: usize,
                  seed: u64) -> Result<Vec<TaskResult>> {
+    let mut plans = ScorePlans::bind(session, params, masks)?;
     ALL_TASKS
         .iter()
-        .map(|&t| run_task(session, params, masks, corpus, t, n_items, seed))
+        .map(|&t| run_task_bound(&mut plans, corpus, t, n_items, seed))
         .collect()
 }
 

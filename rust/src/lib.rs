@@ -4,7 +4,8 @@
 //! API quickstart, and DESIGN.md for the stage/registry architecture.
 //!
 //! Layer map:
-//! - [`runtime`] — PJRT client; loads AOT HLO-text artifacts (L2/L1 compute)
+//! - [`runtime`] — PJRT client; typed Plan/DeviceBuffer execution over
+//!   AOT HLO-text artifacts, device-resident by default (L2/L1 compute)
 //! - [`model`]   — manifests, parameter store, checkpoints
 //! - [`masks`]   — sparsity mask representation + N:M helpers
 //! - [`pruning`] — magnitude / Wanda / SparseGPT / FLAP (+ N:M variants)

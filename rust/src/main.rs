@@ -174,10 +174,10 @@ fn cmd_finetune(args: &Args) -> Result<()> {
                                       &ctx.impl_name)?;
     for b in &report.per_block {
         println!("block {:>2}: {:>3} epochs {:>4} steps  loss {:.5} → {:.5}\
-                  {}  ({:.1}s)",
+                  {}  ({:.1}s, bind {:.2}s)",
                  b.block, b.epochs_run, b.steps, b.first_loss, b.last_loss,
                  if b.converged_early { "  [early-stop]" } else { "" },
-                 b.secs);
+                 b.secs, b.bind_secs);
     }
     println!("total {:.1}s, mean {:.1}s/block", report.total_secs,
              report.mean_block_secs());

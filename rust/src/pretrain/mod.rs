@@ -7,7 +7,7 @@ use std::path::Path;
 
 use crate::data::{MarkovCorpus, Split};
 use crate::model::ParamStore;
-use crate::runtime::{Session, Value};
+use crate::runtime::{DeviceBuffer, Session};
 use crate::tensor::Tensor;
 use crate::util::Pcg64;
 
@@ -38,27 +38,20 @@ pub fn pretrain(session: &Session, corpus: &MarkovCorpus, steps: usize,
             }
         }
     }
-    // Hot loop on literals: params and Adam state circulate as the train
-    // step's own outputs — only the token batch and the two scalars are
-    // uploaded per step (EXPERIMENTS.md §Perf).
-    let mut p_lits: Vec<xla::Literal> = params
-        .tensors
-        .iter()
-        .map(crate::runtime::lit_f32)
-        .collect::<Result<_>>()?;
-    let zeros: Result<Vec<xla::Literal>> = params
-        .tensors
-        .iter()
-        .map(|t| crate::runtime::lit_f32(&Tensor::zeros(&t.shape)))
-        .collect();
-    let mut m_lits = zeros?;
-    let mut v_lits: Vec<xla::Literal> = params
-        .tensors
-        .iter()
-        .map(|t| crate::runtime::lit_f32(&Tensor::zeros(&t.shape)))
-        .collect::<Result<_>>()?;
-    let n_p = params.len();
-    let tok_shape = [d.batch, d.seq];
+    // Device-resident hot loop: params and Adam state are bound once and
+    // donated (each step's outputs circulate as the next step's inputs);
+    // only the token batch and the step counter are uploaded per step, and
+    // only the scalar loss is fetched. See DESIGN.md §Runtime.
+    let mut plan = session.plan("lm_train_step")?;
+    plan.bind_indexed("param", params.tensors.iter())?;
+    for (j, t) in params.tensors.iter().enumerate() {
+        let z = DeviceBuffer::zeros(&t.shape)?;
+        plan.bind(&format!("m.{j}"), &z)?;
+        plan.bind(&format!("v.{j}"), &z)?;
+    }
+    plan.donate_matching()?;
+    plan.bind_scalar("lr", lr)?;
+    let loss_out = plan.output_index("loss")?;
 
     let t0 = std::time::Instant::now();
     let mut curve = Vec::new();
@@ -70,26 +63,19 @@ pub fn pretrain(session: &Session, corpus: &MarkovCorpus, steps: usize,
             .wrapping_add((step as u64 - 1) * d.batch as u64);
         let batch = corpus.batch(Split::Train, start, d.batch, d.seq);
 
-        let mut ins: Vec<Value> = p_lits.iter().map(Value::Lit).collect();
-        ins.extend(m_lits.iter().map(Value::Lit));
-        ins.extend(v_lits.iter().map(Value::Lit));
-        ins.push(Value::Scalar(step as f32));
-        ins.push(Value::Scalar(lr));
-        ins.push(Value::I32(&tok_shape, &batch));
-        let mut outs = session.run_raw("lm_train_step", &ins)?;
-        let loss = crate::runtime::scalar_from_lit(&outs.pop().unwrap())?;
-        v_lits = outs.split_off(2 * n_p);
-        m_lits = outs.split_off(n_p);
-        p_lits = outs;
+        plan.bind_scalar("t", step as f32)?;
+        plan.bind_tokens("tokens", &batch)?;
+        let outs = plan.run_to_device()?;
+        let loss = outs[loss_out].fetch_scalar()?;
         last_loss = loss;
         if step % log_every == 0 || step == 1 || step == steps {
             curve.push((step, loss));
         }
     }
-    // write the trained parameters back to the store
-    for (slot, lit) in params.tensors.iter_mut().zip(&p_lits) {
-        let shape = slot.shape.clone();
-        *slot = crate::runtime::tensor_from_lit(lit, &shape)?;
+    // write the trained parameters back to the store (donation kept the
+    // freshest weights bound)
+    for (j, slot) in params.tensors.iter_mut().enumerate() {
+        *slot = plan.bound(&format!("param.{j}"))?.fetch()?;
     }
     Ok((params, PretrainReport {
         steps,

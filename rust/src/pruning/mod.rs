@@ -18,7 +18,7 @@ use anyhow::Result;
 
 use crate::masks::MaskSet;
 use crate::model::ParamStore;
-use crate::runtime::{Session, Value};
+use crate::runtime::{DeviceBuffer, Session};
 use crate::tensor::Tensor;
 
 pub use stats::{collect_block_stats, BlockStats, GroupStats};
@@ -73,39 +73,33 @@ pub trait Criterion: Sync {
                     pattern: Pattern) -> Result<(Tensor, Option<Tensor>)>;
 }
 
-/// Advance an activation stream through block `l` (masked weights).
+/// Advance a device-resident activation stream through block `l` (masked
+/// weights). Block params and masks are uploaded once per block, not per
+/// batch, and the activations never round-trip through host memory.
 pub fn advance_stream(session: &Session, params: &ParamStore,
                       masks: &MaskSet, l: usize,
-                      xs: &mut [Tensor]) -> Result<()> {
+                      xs: &mut [DeviceBuffer]) -> Result<()> {
+    let mut plan = session.plan("block_fwd")?;
+    plan.bind_indexed("bp", params.block_params(&session.manifest, l))?;
+    plan.bind_indexed("mask", masks.block(l).iter())?;
     for x in xs.iter_mut() {
-        let mut inputs: Vec<Value> = params
-            .block_params(&session.manifest, l)
-            .into_iter()
-            .map(Value::F32)
-            .collect();
-        for m in masks.block(l) {
-            inputs.push(Value::F32(m));
-        }
-        inputs.push(Value::F32(x));
-        *x = session.run("block_fwd", &inputs)?.remove(0);
+        plan.bind("x", x)?;
+        *x = plan.run_to_device()?.remove(0);
     }
     Ok(())
 }
 
-/// Embed every token batch into the initial activation stream.
+/// Embed every token batch into the initial device-resident activation
+/// stream. The embedding table is uploaded once for the whole stream.
 pub fn embed_stream(session: &Session, params: &ParamStore,
-                    batches: &[Vec<i32>]) -> Result<Vec<Tensor>> {
-    let d = &session.manifest.dims;
-    let tok_shape = [d.batch, d.seq];
+                    batches: &[Vec<i32>]) -> Result<Vec<DeviceBuffer>> {
+    let mut plan = session.plan("embed_fwd")?;
+    plan.bind_tensor("embed", params.get("embed")?)?;
     batches
         .iter()
         .map(|b| {
-            Ok(session
-                .run("embed_fwd", &[
-                    Value::F32(params.get("embed")?),
-                    Value::I32(&tok_shape, b),
-                ])?
-                .remove(0))
+            plan.bind_tokens("tokens", b)?;
+            Ok(plan.run_to_device()?.remove(0))
         })
         .collect()
 }

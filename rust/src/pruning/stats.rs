@@ -13,7 +13,7 @@ use anyhow::Result;
 
 use crate::masks::MaskSet;
 use crate::model::ParamStore;
-use crate::runtime::{Session, Value};
+use crate::runtime::{DeviceBuffer, Session};
 use crate::tensor::Tensor;
 
 pub const N_GROUPS: usize = 4;
@@ -88,33 +88,30 @@ impl BlockStats {
 
 /// Run `block_stats` over every activation batch of block `l` and accumulate.
 ///
-/// `xs` are the block's input activations, one [B,S,D] tensor per batch
-/// (produced by the caller's activation stream).
+/// `xs` are the block's input activations, one device-resident [B,S,D]
+/// buffer per batch (the caller's activation stream). Block params and
+/// masks are bound once per block; only the stat outputs are fetched.
 pub fn collect_block_stats(session: &Session, params: &ParamStore,
                            masks: &MaskSet, l: usize,
-                           xs: &[Tensor]) -> Result<BlockStats> {
+                           xs: &[DeviceBuffer]) -> Result<BlockStats> {
     let dims = &session.manifest.dims;
     let group_dims = [dims.d_model, dims.d_model, dims.d_model, dims.d_ff];
     let mut groups: Vec<GroupStats> =
         group_dims.iter().map(|&d| GroupStats::zeros(d)).collect();
     let tokens_per_batch = dims.batch * dims.seq;
 
+    let mut plan = session.plan("block_stats")?;
+    plan.bind_indexed("bp", params.block_params(&session.manifest, l))?;
+    plan.bind_indexed("mask", masks.block(l).iter())?;
     for x in xs {
-        let mut inputs: Vec<Value> = params
-            .block_params(&session.manifest, l)
-            .into_iter()
-            .map(Value::F32)
-            .collect();
-        for m in masks.block(l) {
-            inputs.push(Value::F32(m));
-        }
-        inputs.push(Value::F32(x));
-        let outs = session.run("block_stats", &inputs)?;
-        // outs[0] is the block output y (kept live for XLA; unused here)
+        plan.bind("x", x)?;
+        let outs = plan.run_to_device()?;
+        // outs[0] is the block output y (kept live for XLA; unused here —
+        // and never fetched to host)
         debug_assert_eq!(outs.len(), 1 + 3 * N_GROUPS);
         for (g, chunk) in outs[1..].chunks_exact(3).enumerate() {
-            groups[g].accumulate(&chunk[0], &chunk[1], &chunk[2],
-                                 tokens_per_batch);
+            groups[g].accumulate(&chunk[0].fetch()?, &chunk[1].fetch()?,
+                                 &chunk[2].fetch()?, tokens_per_batch);
         }
     }
     Ok(BlockStats { groups })

@@ -1,0 +1,238 @@
+//! Device-resident buffer handles.
+//!
+//! A [`DeviceBuffer`] is the runtime's unit of residency: a shape- and
+//! dtype-tagged handle over a runtime-owned buffer that stays in the
+//! runtime's representation until a caller explicitly `fetch()`es it back
+//! to a host [`Tensor`]. Handles are cheap to clone (the storage is
+//! shared), so rebinding one step's output as the next step's input —
+//! the donation pattern in the EBFT / pretrain / LoRA hot loops — moves a
+//! reference, not data.
+//!
+//! On the PJRT CPU backend the owned representation is an `xla::Literal`
+//! in client memory; on an accelerator backend the same handle would wrap
+//! a `PjRtBuffer`. Callers never see the representation — the tag is the
+//! API, which is what lets the backend change underneath.
+
+use anyhow::{bail, Result};
+use std::fmt;
+use std::rc::Rc;
+
+use super::convert;
+use crate::model::manifest::TensorSpec;
+use crate::tensor::Tensor;
+
+/// Element type of a buffer. Mirrors the manifest's `dtype` strings.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A typed handle to a runtime-owned buffer. See the module docs.
+#[derive(Clone)]
+pub struct DeviceBuffer {
+    lit: Rc<xla::Literal>,
+    shape: Vec<usize>,
+    dtype: DType,
+}
+
+impl fmt::Debug for DeviceBuffer {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "DeviceBuffer({:?} {})", self.shape, self.dtype)
+    }
+}
+
+impl DeviceBuffer {
+    /// Upload an f32 tensor.
+    pub fn from_tensor(t: &Tensor) -> Result<DeviceBuffer> {
+        Ok(DeviceBuffer {
+            lit: Rc::new(convert::lit_f32(t)?),
+            shape: t.shape.clone(),
+            dtype: DType::F32,
+        })
+    }
+
+    /// Upload an i32 token array with the given shape.
+    pub fn from_tokens(shape: &[usize], data: &[i32]) -> Result<DeviceBuffer> {
+        Ok(DeviceBuffer {
+            lit: Rc::new(convert::lit_i32(shape, data)?),
+            shape: shape.to_vec(),
+            dtype: DType::I32,
+        })
+    }
+
+    /// Upload an f32 scalar (shape `[]`).
+    pub fn scalar(v: f32) -> DeviceBuffer {
+        DeviceBuffer {
+            lit: Rc::new(convert::lit_scalar(v)),
+            shape: Vec::new(),
+            dtype: DType::F32,
+        }
+    }
+
+    /// Upload an all-zeros f32 buffer (optimizer-state init).
+    pub fn zeros(shape: &[usize]) -> Result<DeviceBuffer> {
+        DeviceBuffer::from_tensor(&Tensor::zeros(shape))
+    }
+
+    /// Wrap an execution output, tagged with its manifest output spec.
+    ///
+    /// The executable's output layout is fixed at compile time, so only the
+    /// element count is re-checked here (a mismatch means the artifact file
+    /// and the manifest disagree — a build problem, not a caller bug).
+    pub(crate) fn from_output(lit: xla::Literal,
+                              spec: &TensorSpec) -> Result<DeviceBuffer> {
+        if lit.element_count() != spec.numel() {
+            bail!("output '{}': executable produced {} elements, manifest \
+                   says {:?} ({})",
+                  spec.name, lit.element_count(), spec.shape, spec.numel());
+        }
+        Ok(DeviceBuffer {
+            lit: Rc::new(lit),
+            shape: spec.shape.clone(),
+            dtype: DType::parse(&spec.dtype)?,
+        })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// The runtime-owned representation (crate-internal: execution only).
+    pub(crate) fn literal(&self) -> &xla::Literal {
+        &self.lit
+    }
+
+    /// Check this buffer against a manifest slot spec: both shape and
+    /// dtype must match exactly. (The old `Value::Lit` path compared only
+    /// element counts, so a transposed or mistyped buffer slid through to
+    /// PJRT — this tag check is the regression-tested replacement.)
+    pub fn matches(&self, spec: &TensorSpec) -> Result<()> {
+        if self.shape != spec.shape {
+            bail!("shape {:?} vs expected {:?}", self.shape, spec.shape);
+        }
+        if self.dtype.as_str() != spec.dtype {
+            bail!("dtype {} vs expected {}", self.dtype, spec.dtype);
+        }
+        Ok(())
+    }
+
+    /// Explicitly download to a host f32 tensor. This is the *only* way
+    /// data leaves the runtime — every call site is a deliberate sync.
+    pub fn fetch(&self) -> Result<Tensor> {
+        if self.dtype != DType::F32 {
+            bail!("fetch: buffer is {}, expected f32", self.dtype);
+        }
+        convert::tensor_from_lit(&self.lit, &self.shape)
+    }
+
+    /// Download a scalar f32 (shape `[]` or single-element) output.
+    pub fn fetch_scalar(&self) -> Result<f32> {
+        if self.dtype != DType::F32 {
+            bail!("fetch_scalar: buffer is {}, expected f32", self.dtype);
+        }
+        convert::scalar_from_lit(&self.lit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, shape: &[usize], dtype: &str) -> TensorSpec {
+        TensorSpec {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            dtype: dtype.to_string(),
+        }
+    }
+
+    #[test]
+    fn roundtrip_and_tags() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = DeviceBuffer::from_tensor(&t).unwrap();
+        assert_eq!(b.shape(), &[2, 3]);
+        assert_eq!(b.dtype(), DType::F32);
+        assert_eq!(b.numel(), 6);
+        assert_eq!(b.fetch().unwrap(), t);
+
+        let s = DeviceBuffer::scalar(2.5);
+        assert_eq!(s.shape(), &[] as &[usize]);
+        assert_eq!(s.fetch_scalar().unwrap(), 2.5);
+
+        let z = DeviceBuffer::zeros(&[4]).unwrap();
+        assert_eq!(z.fetch().unwrap(), Tensor::zeros(&[4]));
+    }
+
+    #[test]
+    fn clone_shares_storage() {
+        let b = DeviceBuffer::from_tensor(&Tensor::ones(&[8])).unwrap();
+        let c = b.clone();
+        assert!(Rc::ptr_eq(&b.lit, &c.lit), "clone must not copy data");
+    }
+
+    #[test]
+    fn matches_checks_shape_not_just_element_count() {
+        // regression: same element count, transposed shape — the old
+        // Value::Lit check accepted this
+        let b = DeviceBuffer::from_tensor(&Tensor::ones(&[2, 3])).unwrap();
+        assert!(b.matches(&spec("w", &[2, 3], "f32")).is_ok());
+        let err = b.matches(&spec("w", &[3, 2], "f32")).unwrap_err();
+        assert!(format!("{err:#}").contains("shape"));
+    }
+
+    #[test]
+    fn matches_checks_dtype() {
+        // regression: same shape and element count, wrong dtype
+        let toks = DeviceBuffer::from_tokens(&[2, 2], &[1, 2, 3, 4]).unwrap();
+        assert!(toks.matches(&spec("tokens", &[2, 2], "i32")).is_ok());
+        let err = toks.matches(&spec("x", &[2, 2], "f32")).unwrap_err();
+        assert!(format!("{err:#}").contains("dtype"));
+
+        let f = DeviceBuffer::from_tensor(&Tensor::ones(&[2, 2])).unwrap();
+        assert!(f.matches(&spec("tokens", &[2, 2], "i32")).is_err());
+    }
+
+    #[test]
+    fn fetch_rejects_i32() {
+        let toks = DeviceBuffer::from_tokens(&[2], &[7, 8]).unwrap();
+        assert!(toks.fetch().is_err());
+        assert!(toks.fetch_scalar().is_err());
+    }
+
+    #[test]
+    fn token_shape_mismatch_rejected() {
+        assert!(DeviceBuffer::from_tokens(&[3], &[1, 2]).is_err());
+    }
+}

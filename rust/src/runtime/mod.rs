@@ -1,9 +1,21 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them.
-pub mod client;
+//! PJRT runtime: load AOT HLO-text artifacts and execute them through
+//! typed, device-resident plans.
+//!
+//! - [`Session`] owns the client, manifest, and executable cache;
+//! - [`Plan`] (from [`Session::plan`]) binds inputs by manifest slot name,
+//!   validates at bind time, and supports persistent bindings and
+//!   output→input donation for the hot loops;
+//! - [`DeviceBuffer`] is the shape/dtype-tagged residency handle — data
+//!   only returns to host through an explicit `fetch`.
+//!
+//! The raw `Literal` conversion helpers live in [`convert`] and are an
+//! implementation detail of `DeviceBuffer`; compute callers never touch
+//! literals directly. See DESIGN.md §Runtime.
+pub mod buffer;
 pub mod convert;
+pub mod plan;
 pub mod session;
 
-pub use client::Runtime;
-pub use convert::{lit_f32, lit_i32, lit_scalar, scalar_from_lit,
-                  tensor_from_lit};
-pub use session::{Session, Value};
+pub use buffer::{DType, DeviceBuffer};
+pub use plan::Plan;
+pub use session::Session;

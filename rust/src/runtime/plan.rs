@@ -1,0 +1,253 @@
+//! Typed execution plans.
+//!
+//! A [`Plan`] is a per-artifact handle obtained from
+//! [`Session::plan`](super::Session::plan). It compiles the artifact once,
+//! resolves and validates input bindings *by manifest slot name* at bind
+//! time (not per call), and keeps every binding device-resident until it
+//! is rebound. Three binding patterns cover every caller in this crate:
+//!
+//! - **persistent** — bind once, run many times (block params and masks in
+//!   the EBFT block loop, the full param/mask set in a perplexity eval);
+//! - **streamed** — rebound each call (token batches, the step counter);
+//! - **donated** — an output slot linked to an input slot via
+//!   [`Plan::donate`]: after every run the output handle is moved into the
+//!   input binding without a copy, so optimizer state and weights
+//!   circulate on device across the whole fine-tuning loop.
+//!
+//! `run_to_device` returns [`DeviceBuffer`] handles (nothing is synced to
+//! host); `run` is the host convenience that fetches every output as an
+//! f32 [`Tensor`].
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+use super::buffer::DeviceBuffer;
+use super::session::Session;
+use crate::model::manifest::ArtifactSpec;
+use crate::tensor::Tensor;
+
+pub struct Plan<'s> {
+    session: &'s Session,
+    spec: ArtifactSpec,
+    /// Slot-name → input index, built once at plan time.
+    input_index: HashMap<String, usize>,
+    /// Current binding of each input slot.
+    slots: Vec<Option<DeviceBuffer>>,
+    /// (output index, input slot) donation links.
+    donations: Vec<(usize, usize)>,
+}
+
+impl<'s> Plan<'s> {
+    /// Created via [`Session::plan`] — compiles (and caches) the
+    /// executable so the first `run` is not a hidden compile.
+    pub(crate) fn new(session: &'s Session, name: &str) -> Result<Plan<'s>> {
+        let spec = session.manifest.artifact(name)?.clone();
+        session.ensure_loaded(name)?;
+        let input_index = spec
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.name.clone(), i))
+            .collect();
+        let n = spec.inputs.len();
+        Ok(Plan {
+            session,
+            spec,
+            input_index,
+            slots: (0..n).map(|_| None).collect(),
+            donations: Vec::new(),
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.spec.name
+    }
+
+    pub fn session(&self) -> &'s Session {
+        self.session
+    }
+
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    fn slot_index(&self, slot: &str) -> Result<usize> {
+        self.input_index.get(slot).copied().with_context(|| {
+            format!("artifact {}: no input slot '{slot}' (manifest slots: \
+                     {})", self.spec.name, self.slot_names())
+        })
+    }
+
+    fn slot_names(&self) -> String {
+        let names: Vec<&str> =
+            self.spec.inputs.iter().map(|s| s.name.as_str()).collect();
+        if names.len() > 12 {
+            format!("{}, … {} total", names[..12].join(", "), names.len())
+        } else {
+            names.join(", ")
+        }
+    }
+
+    /// Output index of `name` in the artifact's output tuple.
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.spec
+            .outputs
+            .iter()
+            .position(|s| s.name == name)
+            .with_context(|| format!("artifact {}: no output '{name}'",
+                                     self.spec.name))
+    }
+
+    /// Bind `slot` to a device buffer. Shape *and* dtype are validated
+    /// here, once — `run_to_device` does no per-call re-validation.
+    pub fn bind(&mut self, slot: &str, buf: &DeviceBuffer) -> Result<()> {
+        self.bind_owned(slot, buf.clone())
+    }
+
+    fn bind_owned(&mut self, slot: &str, buf: DeviceBuffer) -> Result<()> {
+        let i = self.slot_index(slot)?;
+        buf.matches(&self.spec.inputs[i]).with_context(|| {
+            format!("artifact {} slot '{slot}'", self.spec.name)
+        })?;
+        self.slots[i] = Some(buf);
+        Ok(())
+    }
+
+    /// Upload and bind a host f32 tensor.
+    pub fn bind_tensor(&mut self, slot: &str, t: &Tensor) -> Result<()> {
+        self.bind_owned(slot, DeviceBuffer::from_tensor(t)?)
+    }
+
+    /// Upload and bind a token batch; the shape comes from the manifest
+    /// slot spec, so callers pass bare `&[i32]` data.
+    pub fn bind_tokens(&mut self, slot: &str, data: &[i32]) -> Result<()> {
+        let i = self.slot_index(slot)?;
+        let shape = self.spec.inputs[i].shape.clone();
+        self.bind_owned(slot, DeviceBuffer::from_tokens(&shape, data)?)
+    }
+
+    /// Upload and bind an f32 scalar.
+    pub fn bind_scalar(&mut self, slot: &str, v: f32) -> Result<()> {
+        self.bind_owned(slot, DeviceBuffer::scalar(v))
+    }
+
+    /// Bind a run of indexed slots `{prefix}.0 ..` from a tensor sequence
+    /// (the manifest's convention for parameter / mask / optimizer-state
+    /// groups). Returns how many slots were bound.
+    pub fn bind_indexed<'t, I>(&mut self, prefix: &str,
+                               tensors: I) -> Result<usize>
+    where
+        I: IntoIterator<Item = &'t Tensor>,
+    {
+        let mut n = 0usize;
+        for (i, t) in tensors.into_iter().enumerate() {
+            self.bind_tensor(&format!("{prefix}.{i}"), t)?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// The buffer currently bound to `slot` (after a run with donations,
+    /// the freshest donated value — this is how final weights leave the
+    /// fine-tuning loops).
+    pub fn bound(&self, slot: &str) -> Result<&DeviceBuffer> {
+        let i = self.slot_index(slot)?;
+        self.slots[i].as_ref().with_context(|| {
+            format!("artifact {} slot '{slot}' is not bound",
+                    self.spec.name)
+        })
+    }
+
+    /// Drop every current binding, releasing the device memory they hold.
+    /// The compiled executable, slot table and donation links survive —
+    /// long-lived cached plans (the coordinator's `lm_loss` eval plan)
+    /// call this after a use so a full model's params and masks don't
+    /// stay resident through unrelated pipeline stages.
+    pub fn unbind_all(&mut self) {
+        for s in self.slots.iter_mut() {
+            *s = None;
+        }
+    }
+
+    /// Link output `output` to input slot `input`: after every run the
+    /// output buffer is re-bound to the slot without a copy. Specs must
+    /// match exactly (validated here, once).
+    pub fn donate(&mut self, output: &str, input: &str) -> Result<()> {
+        let oi = self.output_index(output)?;
+        let ii = self.slot_index(input)?;
+        let (os, is) = (&self.spec.outputs[oi], &self.spec.inputs[ii]);
+        if os.shape != is.shape || os.dtype != is.dtype {
+            bail!("artifact {}: cannot donate output '{output}' \
+                   ({:?} {}) to input '{input}' ({:?} {})",
+                  self.spec.name, os.shape, os.dtype, is.shape, is.dtype);
+        }
+        if self.donations.iter().any(|&(_, i)| i == ii) {
+            bail!("artifact {}: input slot '{input}' already has a donor",
+                  self.spec.name);
+        }
+        self.donations.push((oi, ii));
+        Ok(())
+    }
+
+    /// Donate every output whose name matches an input slot — the step
+    /// artifacts (`block_ft_step`, `lm_train_step`, `lora_train_step`)
+    /// name their circulating state identically on both sides, so this
+    /// wires a whole optimizer loop in one call. Returns the link count.
+    pub fn donate_matching(&mut self) -> Result<usize> {
+        let matching: Vec<String> = self
+            .spec
+            .outputs
+            .iter()
+            .filter(|o| self.input_index.contains_key(&o.name))
+            .map(|o| o.name.clone())
+            .collect();
+        for name in &matching {
+            self.donate(name, name)?;
+        }
+        Ok(matching.len())
+    }
+
+    /// Execute with the current bindings; outputs stay on device. Donated
+    /// outputs are re-bound to their input slots before returning (the
+    /// returned handles share storage with the new bindings).
+    pub fn run_to_device(&mut self) -> Result<Vec<DeviceBuffer>> {
+        let unbound: Vec<&str> = self
+            .slots
+            .iter()
+            .zip(&self.spec.inputs)
+            .filter(|(b, _)| b.is_none())
+            .map(|(_, s)| s.name.as_str())
+            .collect();
+        if !unbound.is_empty() {
+            bail!("artifact {}: {} input slot(s) not bound: {}",
+                  self.spec.name, unbound.len(), unbound.join(", "));
+        }
+        let refs: Vec<&xla::Literal> = self
+            .slots
+            .iter()
+            .map(|b| b.as_ref().unwrap().literal())
+            .collect();
+        let lits = self.session.execute_refs(&self.spec.name, &refs)?;
+        drop(refs);
+        if lits.len() != self.spec.outputs.len() {
+            bail!("artifact {}: runtime returned {} outputs, manifest says \
+                   {}", self.spec.name, lits.len(), self.spec.outputs.len());
+        }
+        let outs: Vec<DeviceBuffer> = lits
+            .into_iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, s)| DeviceBuffer::from_output(lit, s))
+            .collect::<Result<_>>()?;
+        for &(oi, ii) in &self.donations {
+            self.slots[ii] = Some(outs[oi].clone());
+        }
+        Ok(outs)
+    }
+
+    /// Execute and fetch every output to a host f32 tensor, shaped per the
+    /// manifest (the host-convenience path; prefer `run_to_device` in
+    /// loops).
+    pub fn run(&mut self) -> Result<Vec<Tensor>> {
+        self.run_to_device()?.iter().map(DeviceBuffer::fetch).collect()
+    }
+}

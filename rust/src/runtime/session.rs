@@ -1,71 +1,19 @@
 //! Manifest-driven execution session.
 //!
 //! A `Session` owns the PJRT client, the artifact manifest, and a lazy
-//! executable cache; callers invoke artifacts by name with `Value` inputs
-//! and get `Tensor` outputs shaped per the manifest. Input arity, shape and
-//! dtype are validated before upload — shape bugs surface here, not as
-//! PJRT aborts.
+//! executable cache. Callers do not invoke artifacts directly: they obtain
+//! a typed [`Plan`] per artifact via [`Session::plan`], bind inputs by
+//! manifest slot name (validated at bind time — shape bugs surface there,
+//! not as PJRT aborts), and execute with outputs staying device-resident
+//! until explicitly fetched. See DESIGN.md §Runtime for the residency
+//! model and the before/after perf note.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
 
-use super::convert;
+use super::plan::Plan;
 use crate::model::manifest::{ArtifactSpec, Manifest};
-use crate::tensor::Tensor;
-
-/// An artifact input: f32 tensor, i32 tokens, f32 scalar, or a pre-built
-/// literal (`Lit` skips the host→literal conversion — the hot-loop path;
-/// see EXPERIMENTS.md §Perf).
-pub enum Value<'a> {
-    F32(&'a Tensor),
-    I32(&'a [usize], &'a [i32]),
-    Scalar(f32),
-    Lit(&'a xla::Literal),
-}
-
-impl Value<'_> {
-    fn check(&self, spec: &crate::model::manifest::TensorSpec) -> Result<()> {
-        match self {
-            Value::F32(t) => {
-                if t.shape != spec.shape || spec.dtype != "f32" {
-                    bail!("shape {:?} / dtype f32 vs expected {:?} {}",
-                          t.shape, spec.shape, spec.dtype);
-                }
-            }
-            Value::I32(s, _) => {
-                if *s != spec.shape.as_slice() || spec.dtype != "i32" {
-                    bail!("shape {s:?} / dtype i32 vs expected {:?} {}",
-                          spec.shape, spec.dtype);
-                }
-            }
-            Value::Scalar(_) => {
-                if !spec.shape.is_empty() || spec.dtype != "f32" {
-                    bail!("scalar vs expected {:?} {}", spec.shape,
-                          spec.dtype);
-                }
-            }
-            Value::Lit(l) => {
-                // cheap check: element count (shape was validated when the
-                // literal was first produced by this session)
-                if l.element_count() != spec.numel() {
-                    bail!("literal has {} elements, expected {}",
-                          l.element_count(), spec.numel());
-                }
-            }
-        }
-        Ok(())
-    }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        match self {
-            Value::F32(t) => convert::lit_f32(t),
-            Value::I32(s, d) => convert::lit_i32(s, d),
-            Value::Scalar(v) => Ok(convert::lit_scalar(*v)),
-            Value::Lit(_) => unreachable!("Lit handled without conversion"),
-        }
-    }
-}
 
 pub struct Session {
     pub client: xla::PjRtClient,
@@ -90,7 +38,20 @@ impl Session {
         Self::open(Manifest::load(dir)?)
     }
 
+    /// Obtain a typed plan for `name`: compiles the artifact now (cached
+    /// across plans) and resolves the slot table once. One plan per
+    /// logical binding set — two plans over the same artifact share the
+    /// executable but hold independent bindings.
+    pub fn plan(&self, name: &str) -> Result<Plan<'_>> {
+        Plan::new(self, name)
+    }
+
     /// Compile (and cache) an artifact's executable.
+    ///
+    /// HLO *text* (not a serialized proto) is the interchange format on
+    /// purpose: jax ≥ 0.5 emits `HloModuleProto`s with 64-bit instruction
+    /// ids which xla_extension 0.5.1 rejects, while the text parser
+    /// reassigns ids and round-trips cleanly (see python/compile/aot.py).
     pub fn ensure_loaded(&self, name: &str) -> Result<()> {
         if self.executables.borrow().contains_key(name) {
             return Ok(());
@@ -112,52 +73,15 @@ impl Session {
         self.manifest.artifact(name)
     }
 
-    fn validate_inputs(&self, spec: &ArtifactSpec,
-                       inputs: &[Value<'_>]) -> Result<()> {
-        if inputs.len() != spec.inputs.len() {
-            bail!("artifact {}: got {} inputs, expected {}", spec.name,
-                  inputs.len(), spec.inputs.len());
-        }
-        for (i, (v, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
-            v.check(s).with_context(|| {
-                format!("artifact {} input {i} ('{}')", spec.name, s.name)
-            })?;
-        }
-        Ok(())
-    }
-
-    /// Execute `name`, returning raw output literals (tuple-decomposed).
-    ///
-    /// `Value::Lit` inputs are passed through without conversion, so the
-    /// hot loops (EBFT ft-step, pretraining) can feed one step's outputs
-    /// straight back into the next step.
-    pub fn run_raw(&self, name: &str,
-                   inputs: &[Value<'_>]) -> Result<Vec<xla::Literal>> {
-        let spec = self.manifest.artifact(name)?;
-        self.validate_inputs(spec, inputs)?;
+    /// Execute a loaded artifact on pre-validated literal references and
+    /// return the tuple-decomposed output literals. Plan-internal: all
+    /// validation (arity, shape, dtype) happened at bind time.
+    pub(crate) fn execute_refs(&self, name: &str, refs: &[&xla::Literal])
+                               -> Result<Vec<xla::Literal>> {
         self.ensure_loaded(name)?;
-        // convert only the non-Lit inputs (pass 1), then assemble the
-        // reference list (pass 2 — after `converted` stops reallocating)
-        let mut converted: Vec<xla::Literal> = Vec::new();
-        for v in inputs {
-            if !matches!(v, Value::Lit(_)) {
-                converted.push(v.to_literal()?);
-            }
-        }
-        let mut refs: Vec<&xla::Literal> = Vec::with_capacity(inputs.len());
-        let mut ci = 0usize;
-        for v in inputs {
-            match v {
-                Value::Lit(l) => refs.push(l),
-                _ => {
-                    refs.push(&converted[ci]);
-                    ci += 1;
-                }
-            }
-        }
         let map = self.executables.borrow();
         let exe = map.get(name).unwrap();
-        let devices = exe.execute::<&xla::Literal>(&refs)?;
+        let devices = exe.execute::<&xla::Literal>(refs)?;
         let buffer = devices
             .first()
             .and_then(|outputs| outputs.first())
@@ -169,21 +93,6 @@ impl Session {
         *self.exec_counts.borrow_mut().entry(name.to_string()).or_insert(0)
             += 1;
         Ok(result.to_tuple()?)
-    }
-
-    /// Execute `name`, converting all outputs to f32 tensors shaped per the
-    /// manifest.
-    pub fn run(&self, name: &str, inputs: &[Value<'_>]) -> Result<Vec<Tensor>> {
-        let outs = self.run_raw(name, inputs)?;
-        let spec = self.manifest.artifact(name)?;
-        if outs.len() != spec.outputs.len() {
-            bail!("artifact {name}: runtime returned {} outputs, manifest \
-                   says {}", outs.len(), spec.outputs.len());
-        }
-        outs.iter()
-            .zip(&spec.outputs)
-            .map(|(lit, s)| convert::tensor_from_lit(lit, &s.shape))
-            .collect()
     }
 
     pub fn total_executions(&self) -> u64 {

@@ -84,6 +84,7 @@ fn golden_record() -> RunRecord {
                 best_loss: 0.25,
                 converged_early: true,
                 secs: 1.5,
+                bind_secs: 0.5,
             }],
             total_secs: 1.5,
         }),
@@ -95,8 +96,8 @@ fn run_record_golden_json() {
     let record = golden_record();
     assert_eq!(record.key(), "wanda/w.Ours/50%");
     let golden = concat!(
-        r#"{"ebft":{"per_block":[{"best_loss":0.25,"block":0,"#,
-        r#""converged_early":true,"epochs":2,"first_loss":0.5,"#,
+        r#"{"ebft":{"per_block":[{"best_loss":0.25,"bind_secs":0.5,"#,
+        r#""block":0,"converged_early":true,"epochs":2,"first_loss":0.5,"#,
         r#""last_loss":0.25,"secs":1.5,"steps":4}],"total_secs":1.5},"#,
         r#""eval_secs":0.25,"ft_secs":2.25,"pattern":"50%","ppl":12.5,"#,
         r#""prune_secs":1.5,"pruner":"wanda","pruner_label":"wanda","#,

@@ -134,6 +134,10 @@ fn ebft_report_is_consistent(e: &Env) {
         assert!(b.steps >= 1 && b.epochs_run >= 1);
         assert!(b.last_loss.is_finite());
         assert!(b.secs > 0.0);
+        // residency uploads happen once per block, before the step loop,
+        // and are a fraction of the block wall-clock
+        assert!(b.bind_secs >= 0.0 && b.bind_secs <= b.secs,
+                "bind_secs {} outside block secs {}", b.bind_secs, b.secs);
     }
     // the record carries labels resolved from the registries
     assert_eq!(cell.recovery_label, "w.Ours");

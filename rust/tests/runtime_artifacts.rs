@@ -1,10 +1,11 @@
-//! Integration: the AOT bridge end-to-end — manifest → PJRT → numerics.
+//! Integration: the AOT bridge end-to-end — manifest → PJRT → numerics,
+//! through the typed Plan / DeviceBuffer API.
 //!
 //! Requires `make artifacts` (skips otherwise). Uses the `tiny` config.
 
 use ebft::masks::MaskSet;
 use ebft::model::{Manifest, ParamStore};
-use ebft::runtime::{Session, Value};
+use ebft::runtime::{DeviceBuffer, Plan, Session};
 use ebft::tensor::Tensor;
 use ebft::util::Pcg64;
 use std::path::Path;
@@ -20,17 +21,12 @@ fn open_tiny() -> Option<(Session, ParamStore)> {
     Some((Session::open(manifest).unwrap(), params))
 }
 
-fn dense_block_inputs<'a>(params: &'a ParamStore, session: &Session,
-                          masks: &'a MaskSet, l: usize) -> Vec<Value<'a>> {
-    let mut inputs: Vec<Value> = params
-        .block_params(&session.manifest, l)
-        .into_iter()
-        .map(Value::F32)
-        .collect();
-    for m in masks.block(l) {
-        inputs.push(Value::F32(m));
-    }
-    inputs
+/// Bind block `l`'s params and masks to a block-artifact plan.
+fn bind_block(plan: &mut Plan<'_>, params: &ParamStore, session: &Session,
+              masks: &MaskSet, l: usize) {
+    plan.bind_indexed("bp", params.block_params(&session.manifest, l))
+        .unwrap();
+    plan.bind_indexed("mask", masks.block(l).iter()).unwrap();
 }
 
 fn random_tokens(session: &Session, seed: u64) -> Vec<i32> {
@@ -47,42 +43,33 @@ fn decomposed_chain_matches_monolithic_lm_loss() {
     let d = session.manifest.dims.clone();
     let masks = MaskSet::dense(&session.manifest);
     let tokens = random_tokens(&session, 1);
-    let tok_shape = [d.batch, d.seq];
 
-    // decomposed: embed → blocks → head
-    let x0 = session
-        .run("embed_fwd", &[
-            Value::F32(params.get("embed").unwrap()),
-            Value::I32(&tok_shape, &tokens),
-        ])
-        .unwrap()
-        .remove(0);
-    let mut x = x0;
+    // decomposed: embed → blocks → head, activations device-resident
+    let mut embed = session.plan("embed_fwd").unwrap();
+    embed.bind_tensor("embed", params.get("embed").unwrap()).unwrap();
+    embed.bind_tokens("tokens", &tokens).unwrap();
+    let mut x = embed.run_to_device().unwrap().remove(0);
     for l in 0..d.n_layers {
-        let mut inputs = dense_block_inputs(&params, &session, &masks, l);
-        inputs.push(Value::F32(&x));
-        x = session.run("block_fwd", &inputs).unwrap().remove(0);
+        let mut fwd = session.plan("block_fwd").unwrap();
+        bind_block(&mut fwd, &params, &session, &masks, l);
+        fwd.bind("x", &x).unwrap();
+        x = fwd.run_to_device().unwrap().remove(0);
     }
-    let out = session
-        .run("head_loss", &[
-            Value::F32(params.get("final.norm.g").unwrap()),
-            Value::F32(params.get("final.head").unwrap()),
-            Value::F32(&x),
-            Value::I32(&tok_shape, &tokens),
-        ])
-        .unwrap();
+    let mut head = session.plan("head_loss").unwrap();
+    head.bind_tensor("g_norm", params.get("final.norm.g").unwrap()).unwrap();
+    head.bind_tensor("head", params.get("final.head").unwrap()).unwrap();
+    head.bind("x", &x).unwrap();
+    head.bind_tokens("tokens", &tokens).unwrap();
+    let out = head.run().unwrap();
     let decomposed = out[0].item() / out[1].item();
 
-    // monolithic lm_loss
-    let mut inputs: Vec<Value> =
-        params.tensors.iter().map(Value::F32).collect();
-    for l in 0..d.n_layers {
-        for m in masks.block(l) {
-            inputs.push(Value::F32(m));
-        }
-    }
-    inputs.push(Value::I32(&tok_shape, &tokens));
-    let mono = session.run("lm_loss", &inputs).unwrap()[0].item();
+    // monolithic lm_loss, params + masks bound once
+    let mut mono_plan = session.plan("lm_loss").unwrap();
+    mono_plan.bind_indexed("param", params.tensors.iter()).unwrap();
+    let flat = (0..d.n_layers).flat_map(|l| masks.block(l).iter());
+    mono_plan.bind_indexed("mask", flat).unwrap();
+    mono_plan.bind_tokens("tokens", &tokens).unwrap();
+    let mono = mono_plan.run().unwrap()[0].item();
 
     assert!((decomposed - mono).abs() < 1e-4,
             "decomposed {decomposed} vs monolithic {mono}");
@@ -91,7 +78,7 @@ fn decomposed_chain_matches_monolithic_lm_loss() {
 }
 
 #[test]
-fn block_ft_step_converges_on_recoverable_target() {
+fn block_ft_step_converges_with_donated_state() {
     let Some((session, params)) = open_tiny() else { return };
     let d = session.manifest.dims.clone();
     let masks = MaskSet::dense(&session.manifest);
@@ -99,9 +86,10 @@ fn block_ft_step_converges_on_recoverable_target() {
     let x = Tensor::randn(&[d.batch, d.seq, d.d_model], 1.0, &mut rng);
 
     // target: the same block's dense output (recoverable exactly)
-    let mut inputs = dense_block_inputs(&params, &session, &masks, 0);
-    inputs.push(Value::F32(&x));
-    let target = session.run("block_fwd", &inputs).unwrap().remove(0);
+    let mut fwd = session.plan("block_fwd").unwrap();
+    bind_block(&mut fwd, &params, &session, &masks, 0);
+    fwd.bind_tensor("x", &x).unwrap();
+    let target = fwd.run_to_device().unwrap().remove(0);
 
     // perturb the weights, then fine-tune back
     let mut bp: Vec<Tensor> = params
@@ -113,39 +101,41 @@ fn block_ft_step_converges_on_recoverable_target() {
         let noise = Tensor::randn(&t.shape, 0.05, &mut rng);
         *t = t.add(&noise);
     }
-    let mut m_st: Vec<Tensor> =
-        bp.iter().map(|t| Tensor::zeros(&t.shape)).collect();
-    let mut v_st = m_st.clone();
+
+    let mut ft = session.plan("block_ft_step").unwrap();
+    ft.bind_indexed("bp", bp.iter()).unwrap();
+    ft.bind_indexed("mask", masks.block(0).iter()).unwrap();
+    for (j, t) in bp.iter().enumerate() {
+        let z = DeviceBuffer::zeros(&t.shape).unwrap();
+        ft.bind(&format!("m.{j}"), &z).unwrap();
+        ft.bind(&format!("v.{j}"), &z).unwrap();
+    }
+    // weights + Adam state circulate on device
+    assert_eq!(ft.donate_matching().unwrap(), 27);
+    ft.bind_scalar("lr", 5e-3).unwrap();
+    ft.bind("x", &x).unwrap();
+    ft.bind("target", &target).unwrap();
+    let loss_out = ft.output_index("loss").unwrap();
 
     let mut first_loss = f32::NAN;
     let mut last_loss = f32::NAN;
     for step in 1..=40 {
-        let mut ins: Vec<Value> = bp.iter().map(Value::F32).collect();
-        for m in masks.block(0) {
-            ins.push(Value::F32(m));
-        }
-        for t in &m_st {
-            ins.push(Value::F32(t));
-        }
-        for t in &v_st {
-            ins.push(Value::F32(t));
-        }
-        ins.push(Value::Scalar(step as f32));
-        ins.push(Value::Scalar(5e-3));
-        ins.push(Value::F32(&x));
-        ins.push(Value::F32(&target));
-        let mut outs = session.run("block_ft_step", &ins).unwrap();
-        let loss = outs.pop().unwrap().item();
+        ft.bind_scalar("t", step as f32).unwrap();
+        let outs = ft.run_to_device().unwrap();
+        let loss = outs[loss_out].fetch_scalar().unwrap();
         if step == 1 {
             first_loss = loss;
         }
         last_loss = loss;
-        v_st = outs.split_off(18);
-        m_st = outs.split_off(9);
-        bp = outs;
     }
     assert!(last_loss < first_loss * 0.2,
             "no convergence: first {first_loss} last {last_loss}");
+
+    // the donated weights stayed bound: fetching them gives tensors that
+    // differ from the perturbed start (training actually moved them)
+    let w0 = ft.bound("bp.0").unwrap().fetch().unwrap();
+    assert!(w0.sub(&bp[0]).max_abs() > 0.0,
+            "donated weights never updated");
 }
 
 #[test]
@@ -156,13 +146,14 @@ fn pallas_and_xla_block_fwd_agree() {
     let mut rng = Pcg64::seeded(9);
     let x = Tensor::randn(&[d.batch, d.seq, d.d_model], 1.0, &mut rng);
 
-    let mut inputs = dense_block_inputs(&params, &session, &masks, 1);
-    inputs.push(Value::F32(&x));
-    let y_xla = session.run("block_fwd", &inputs).unwrap().remove(0);
-
-    let mut inputs = dense_block_inputs(&params, &session, &masks, 1);
-    inputs.push(Value::F32(&x));
-    let y_pallas = session.run("block_fwd_pallas", &inputs).unwrap().remove(0);
+    let run_fwd = |name: &str| -> Tensor {
+        let mut plan = session.plan(name).unwrap();
+        bind_block(&mut plan, &params, &session, &masks, 1);
+        plan.bind_tensor("x", &x).unwrap();
+        plan.run().unwrap().remove(0)
+    };
+    let y_xla = run_fwd("block_fwd");
+    let y_pallas = run_fwd("block_fwd_pallas");
 
     let diff = y_xla.sub(&y_pallas).max_abs();
     assert!(diff < 1e-3, "pallas vs xla block_fwd diff {diff}");
@@ -183,9 +174,10 @@ fn masked_weights_do_not_affect_output() {
     masks.masks[0][0] =
         ebft::masks::mask_from_topk(&scores, shape.iter().product::<usize>() / 2);
 
-    let mut inputs = dense_block_inputs(&params, &session, &masks, 0);
-    inputs.push(Value::F32(&x));
-    let y1 = session.run("block_fwd", &inputs).unwrap().remove(0);
+    let mut plan = session.plan("block_fwd").unwrap();
+    bind_block(&mut plan, &params, &session, &masks, 0);
+    plan.bind_tensor("x", &x).unwrap();
+    let y1 = plan.run().unwrap().remove(0);
 
     // scramble pruned positions of wq; output must be identical
     let mut bp: Vec<Tensor> = params
@@ -199,25 +191,32 @@ fn masked_weights_do_not_affect_output() {
             *w = 999.0;
         }
     }
-    let mut inputs: Vec<Value> = bp.iter().map(Value::F32).collect();
-    for m in masks.block(0) {
-        inputs.push(Value::F32(m));
-    }
-    inputs.push(Value::F32(&x));
-    let y2 = session.run("block_fwd", &inputs).unwrap().remove(0);
+    plan.bind_indexed("bp", bp.iter()).unwrap();
+    let y2 = plan.run().unwrap().remove(0);
 
     assert_eq!(y1.data, y2.data);
 }
 
 #[test]
-fn input_validation_rejects_bad_shapes() {
+fn persistent_bindings_survive_across_runs() {
+    // the same plan executes repeatedly with only the stream slot rebound;
+    // results match fresh single-shot plans
     let Some((session, params)) = open_tiny() else { return };
-    let bad = Tensor::ones(&[1, 2, 3]);
-    let err = session.run("embed_fwd", &[
-        Value::F32(params.get("embed").unwrap()),
-        Value::F32(&bad),
-    ]);
-    assert!(err.is_err());
-    let err2 = session.run("embed_fwd", &[Value::F32(&bad)]);
-    assert!(err2.is_err());
+    let masks = MaskSet::dense(&session.manifest);
+
+    let mut plan = session.plan("block_fwd").unwrap();
+    bind_block(&mut plan, &params, &session, &masks, 0);
+    let d = session.manifest.dims.clone();
+    let mut rng = Pcg64::seeded(13);
+    for _ in 0..3 {
+        let x = Tensor::randn(&[d.batch, d.seq, d.d_model], 1.0, &mut rng);
+        plan.bind_tensor("x", &x).unwrap();
+        let y_reused = plan.run().unwrap().remove(0);
+
+        let mut fresh = session.plan("block_fwd").unwrap();
+        bind_block(&mut fresh, &params, &session, &masks, 0);
+        fresh.bind_tensor("x", &x).unwrap();
+        let y_fresh = fresh.run().unwrap().remove(0);
+        assert_eq!(y_reused.data, y_fresh.data);
+    }
 }

@@ -1,8 +1,9 @@
 //! Error-path coverage for the manifest-driven runtime: every malformed
-//! call must fail *before* reaching PJRT, with an actionable message.
+//! binding must fail at bind time — *before* reaching PJRT — with an
+//! actionable message naming the artifact and slot.
 
 use ebft::model::Manifest;
-use ebft::runtime::{Session, Value};
+use ebft::runtime::{DeviceBuffer, Session};
 use ebft::tensor::Tensor;
 use std::path::Path;
 
@@ -16,60 +17,113 @@ fn open_tiny() -> Option<Session> {
 }
 
 #[test]
-fn session_error_paths() {
+fn plan_error_paths() {
     let Some(session) = open_tiny() else { return };
     let d = session.manifest.dims.clone();
 
-    // unknown artifact
-    let err = session.run("not_an_artifact", &[]).unwrap_err();
+    // unknown artifact fails at plan time
+    let err = session.plan("not_an_artifact").unwrap_err();
     assert!(format!("{err:#}").contains("not_an_artifact"));
 
-    // wrong arity
+    let mut plan = session.plan("embed_fwd").unwrap();
+
+    // unknown slot, with the real slots listed
     let embed = Tensor::zeros(&[d.vocab, d.d_model]);
-    let err = session.run("embed_fwd", &[Value::F32(&embed)]).unwrap_err();
-    assert!(format!("{err:#}").contains("inputs"));
-
-    // wrong shape (named in the message)
-    let toks = vec![0i32; d.batch * d.seq];
-    let bad_embed = Tensor::zeros(&[d.vocab, d.d_model + 1]);
-    let err = session
-        .run("embed_fwd", &[
-            Value::F32(&bad_embed),
-            Value::I32(&[d.batch, d.seq], &toks),
-        ])
-        .unwrap_err();
+    let err = plan.bind_tensor("not_a_slot", &embed).unwrap_err();
     let msg = format!("{err:#}");
-    assert!(msg.contains("embed"), "message should name the input: {msg}");
+    assert!(msg.contains("not_a_slot") && msg.contains("embed"),
+            "message should name the bad and the real slots: {msg}");
 
-    // wrong dtype: f32 where tokens expected
+    // wrong shape, named slot in the message
+    let bad_embed = Tensor::zeros(&[d.vocab, d.d_model + 1]);
+    let err = plan.bind_tensor("embed", &bad_embed).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("embed") && msg.contains("shape"),
+            "message should name the slot and the mismatch: {msg}");
+
+    // wrong dtype: f32 tensor where tokens expected
     let f32_toks = Tensor::zeros(&[d.batch, d.seq]);
-    let err = session
-        .run("embed_fwd", &[Value::F32(&embed), Value::F32(&f32_toks)])
-        .unwrap_err();
+    let err = plan.bind_tensor("tokens", &f32_toks).unwrap_err();
     assert!(format!("{err:#}").contains("dtype"));
 
-    // scalar where tensor expected
-    let err = session
-        .run("embed_fwd", &[Value::Scalar(1.0),
-                            Value::I32(&[d.batch, d.seq], &toks)])
-        .unwrap_err();
-    assert!(format!("{err:#}").contains("embed_fwd"));
+    // scalar where a tensor is expected
+    let err = plan.bind_scalar("embed", 1.0).unwrap_err();
+    assert!(format!("{err:#}").contains("embed"));
 
-    // Lit with wrong element count
-    let small = ebft::runtime::lit_f32(&Tensor::zeros(&[2, 2])).unwrap();
-    let err = session
-        .run("embed_fwd", &[Value::Lit(&small),
-                            Value::I32(&[d.batch, d.seq], &toks)])
-        .unwrap_err();
-    assert!(format!("{err:#}").contains("elements"));
+    // running with an unbound slot names what is missing
+    let toks = vec![0i32; d.batch * d.seq];
+    plan.bind_tokens("tokens", &toks).unwrap();
+    let err = plan.run_to_device().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("not bound") && msg.contains("embed"),
+            "missing-slot error should name the slot: {msg}");
 
     // valid call still works after all the failures (no poisoned state)
-    let ok = session.run("embed_fwd", &[
-        Value::F32(&embed),
-        Value::I32(&[d.batch, d.seq], &toks),
-    ]);
-    assert!(ok.is_ok());
+    plan.bind_tensor("embed", &embed).unwrap();
+    assert!(plan.run_to_device().is_ok());
     assert_eq!(session.total_executions(), 1);
+}
+
+#[test]
+fn device_buffer_tag_checked_on_bind() {
+    // Regression for the old `Value::Lit` escape hatch, which compared
+    // only element counts: a device buffer with the right element count
+    // but wrong shape or dtype must be rejected at bind time.
+    let Some(session) = open_tiny() else { return };
+    let d = session.manifest.dims.clone();
+    let mut plan = session.plan("embed_fwd").unwrap();
+
+    // right element count, transposed shape
+    let transposed =
+        DeviceBuffer::from_tensor(&Tensor::zeros(&[d.d_model, d.vocab]))
+            .unwrap();
+    let err = plan.bind("embed", &transposed).unwrap_err();
+    assert!(format!("{err:#}").contains("shape"));
+
+    // right shape and element count, wrong dtype (i32 where f32 expected)
+    let toks_data = vec![0i32; d.vocab * d.d_model];
+    let mistyped =
+        DeviceBuffer::from_tokens(&[d.vocab, d.d_model], &toks_data).unwrap();
+    let err = plan.bind("embed", &mistyped).unwrap_err();
+    assert!(format!("{err:#}").contains("dtype"));
+
+    // wrong element count entirely
+    let small = DeviceBuffer::from_tensor(&Tensor::zeros(&[2, 2])).unwrap();
+    assert!(plan.bind("embed", &small).is_err());
+
+    // and a correctly-tagged buffer binds + runs
+    let embed =
+        DeviceBuffer::from_tensor(&Tensor::zeros(&[d.vocab, d.d_model]))
+            .unwrap();
+    plan.bind("embed", &embed).unwrap();
+    let toks = vec![0i32; d.batch * d.seq];
+    plan.bind_tokens("tokens", &toks).unwrap();
+    let outs = plan.run_to_device().unwrap();
+    assert_eq!(outs[0].shape(), &[d.batch, d.seq, d.d_model]);
+}
+
+#[test]
+fn donation_rules() {
+    let Some(session) = open_tiny() else { return };
+
+    // block_ft_step: every circulating slot (bp/m/v) has a same-named,
+    // same-spec output
+    let mut ft = session.plan("block_ft_step").unwrap();
+    let linked = ft.donate_matching().unwrap();
+    assert_eq!(linked, 27, "9 params + 9 m + 9 v should self-donate");
+
+    // a second donor for the same slot is rejected
+    let err = ft.donate("bp.0", "bp.0").unwrap_err();
+    assert!(format!("{err:#}").contains("donor"));
+
+    // shape-incompatible donation is rejected up front
+    let mut ft2 = session.plan("block_ft_step").unwrap();
+    let err = ft2.donate("loss", "bp.0").unwrap_err();
+    assert!(format!("{err:#}").contains("donate"));
+
+    // embed_fwd has no matching output names → zero links
+    let mut embed = session.plan("embed_fwd").unwrap();
+    assert_eq!(embed.donate_matching().unwrap(), 0);
 }
 
 #[test]
