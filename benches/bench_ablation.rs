@@ -81,14 +81,15 @@ fn main() -> anyhow::Result<()> {
     results.set("ft_step_ms_pallas", Json::Num(stat_p.mean * 1e3));
 
     // ---------- (b) early-stop on/off ----------
+    // cells run through the scheduler + run store, so EBFT_RESUME=1
+    // skips whichever variants a killed run already measured
     let mut table = TableWriter::new(
         "Ablation (b) — convergence early-stop",
         &["early-stop", "ft secs", "ppl"]);
     for (tol, label) in [(1e-3f32, "on"), (0.0, "off")] {
-        let pipe = env.pipeline_with(FtConfig { converge_tol: tol,
-                                                ..FtConfig::default() })?;
-        let cell = pipe.run_named("wanda", Pattern::Unstructured(0.7),
-                                  "ebft")?;
+        let ft = FtConfig { converge_tol: tol, ..FtConfig::default() };
+        let cell = env.run_cell(ft, "wanda", Pattern::Unstructured(0.7),
+                                "ebft")?;
         table.row(&[label.into(), format!("{:.1}", cell.ft_secs),
                     fmt_ppl(cell.ppl)]);
         results.set(&format!("earlystop_{label}_ppl"), Json::Num(cell.ppl));

@@ -3,12 +3,20 @@
 //!
 //! Expected shape: monotone improvement that saturates — and even the
 //! smallest calibration set beats no fine-tuning at all.
+//!
+//! Every cell runs through the scheduler + run store (EBFT_RESUME=1
+//! skips cells a killed run already completed). In EBFT_SMOKE=1 mode the
+//! single cell additionally writes the CI bench-regression payload
+//! (BENCH_pr.json at the repo root, or $EBFT_BENCH_OUT) that
+//! python/ci/compare_bench.py gates against BENCH_baseline.json.
 
-use ebft::bench_support::{full_grid, BenchEnv};
+use ebft::bench_support::{full_grid, repo_root, BenchEnv};
 use ebft::config::FtConfig;
+use ebft::coordinator::RunRecord;
 use ebft::pruning::Pattern;
 use ebft::util::metrics::fmt_ppl;
 use ebft::util::{Json, TableWriter};
+use std::path::PathBuf;
 
 fn main() -> anyhow::Result<()> {
     let env = BenchEnv::open(0)?;
@@ -25,9 +33,8 @@ fn main() -> anyhow::Result<()> {
     };
 
     // reference: pruned, no fine-tuning
-    let base = env
-        .pipeline()?
-        .run_named("wanda", Pattern::Unstructured(0.5), "none")?;
+    let base = env.run_cell(FtConfig::default(), "wanda",
+                            Pattern::Unstructured(0.5), "none")?;
     println!("wanda@50% before fine-tuning: ppl {}", fmt_ppl(base.ppl));
 
     let mut table = TableWriter::new(
@@ -36,14 +43,45 @@ fn main() -> anyhow::Result<()> {
     let mut series = Json::obj();
     series.set("no_ft", Json::Num(base.ppl));
     for &n in &sample_counts {
-        let pipe = env.pipeline_with(FtConfig { calib_seqs: n,
-                                                ..FtConfig::default() })?;
-        let cell = pipe.run_named("wanda", Pattern::Unstructured(0.5),
-                                  "ebft")?;
+        let ft = FtConfig { calib_seqs: n, ..FtConfig::default() };
+        let cell = env.run_cell(ft, "wanda", Pattern::Unstructured(0.5),
+                                "ebft")?;
         table.row(&[n.to_string(), fmt_ppl(cell.ppl)]);
         series.set(&n.to_string(), Json::Num(cell.ppl));
+        if smoke {
+            write_bench_payload(&cell, n)?;
+        }
     }
     table.print();
     env.write_json("fig2", &series)?;
+    Ok(())
+}
+
+/// The CI bench-regression payload: the smoke cell's quality (ppl) and
+/// cost (per-stage wall-clock, incl. the residency model's one-off
+/// per-block bind time) in the shape python/ci/compare_bench.py reads.
+fn write_bench_payload(cell: &RunRecord, calib: usize)
+                       -> anyhow::Result<()> {
+    let bind_secs: f64 = cell
+        .ebft_report
+        .as_ref()
+        .map(|r| r.per_block.iter().map(|b| b.bind_secs).sum())
+        .unwrap_or(0.0);
+    let mut j = Json::obj();
+    j.set("cell", Json::Str(cell.key()));
+    j.set("calib_seqs", Json::Num(calib as f64));
+    j.set("ppl", Json::Num(cell.ppl));
+    j.set("prune_secs", Json::Num(cell.prune_secs));
+    j.set("ft_secs", Json::Num(cell.ft_secs));
+    j.set("eval_secs", Json::Num(cell.eval_secs));
+    j.set("bind_secs", Json::Num(bind_secs));
+    j.set("wall_secs",
+          Json::Num(cell.prune_secs + cell.ft_secs + cell.eval_secs));
+    let path = match std::env::var("EBFT_BENCH_OUT") {
+        Ok(p) => PathBuf::from(p),
+        Err(_) => repo_root().join("BENCH_pr.json"),
+    };
+    j.write_file(&path)?;
+    println!("[bench-regression payload written to {}]", path.display());
     Ok(())
 }

@@ -3,6 +3,9 @@
 //!
 //! Default grid: MiniLlama-A, sparsities {50, 70, 90}. EBFT_FULL=1 adds
 //! MiniLlama-B and sparsities {60, 80} (the paper-complete grid).
+//! EBFT_JOBS=N sweeps cells concurrently (records are byte-identical to
+//! the serial run, modulo timings); EBFT_RESUME=1 re-launches an
+//! interrupted sweep from runs/store/ without re-running finished cells.
 
 use ebft::bench_support::{full_grid, model_indices, BenchEnv};
 use ebft::coordinator::{recovery, Grid};
@@ -28,9 +31,10 @@ fn main() -> anyhow::Result<()> {
         let dense_ppl = pipe.dense_ppl()?;
         println!("=== {} (dense ppl {}) ===", env.label, fmt_ppl(dense_ppl));
 
-        // one sweep; each pruned checkpoint is shared across recoveries
+        // one scheduled sweep; each pruned checkpoint is shared across
+        // recoveries (and across workers under EBFT_JOBS>1)
         let grid = Grid::new(&methods, &patterns, &recoveries)?;
-        let swept = grid.run(&pipe)?;
+        let swept = env.run_grid(&grid)?;
 
         let mut headers = vec!["method".to_string()];
         headers.extend(sparsities.iter().map(|s| format!("{}%",

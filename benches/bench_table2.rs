@@ -1,5 +1,7 @@
 //! Table 2: perplexity at N:M semi-structured sparsity (2:4 and 4:8),
 //! methods {magnitude, wanda, sparsegpt} × {raw, DSnoT, EBFT}.
+//! EBFT_JOBS=N for concurrent cells, EBFT_RESUME=1 to resume (see
+//! bench_support).
 
 use ebft::bench_support::{model_indices, BenchEnv};
 use ebft::coordinator::{recovery, Grid};
@@ -15,11 +17,10 @@ fn main() -> anyhow::Result<()> {
     let mut results = Json::obj();
     for model_idx in model_indices() {
         let env = BenchEnv::open(model_idx)?;
-        let pipe = env.pipeline()?;
         println!("=== {} ===", env.label);
 
         let grid = Grid::new(&methods, &patterns, &recoveries)?;
-        let swept = grid.run(&pipe)?;
+        let swept = env.run_grid(&grid)?;
 
         let mut table = TableWriter::new(
             &format!("Table 2 — {} N:M", env.label),

@@ -2,8 +2,15 @@
 //! methods {magnitude, wanda, sparsegpt} × {raw, DSnoT, EBFT}.
 //!
 //! Default grid: 60 % only; EBFT_FULL=1 adds the 2:4 pattern.
+//!
+//! Zero-shot cells fall outside RunRecord sweeps, so this bench uses the
+//! run store at checkpoint granularity: pruned checkpoints persist under
+//! runs/store/ while their recoveries run, so an interrupted sweep
+//! re-launches without re-pruning (the checkpoint is dropped once every
+//! recovery of the group has been measured).
 
 use ebft::bench_support::{full_grid, model_indices, BenchEnv};
+use ebft::config::FtConfig;
 use ebft::coordinator::{pruner, recovery};
 use ebft::eval::zeroshot::{mean_accuracy, run_suite};
 use ebft::pruning::Pattern;
@@ -24,6 +31,8 @@ fn main() -> anyhow::Result<()> {
     for model_idx in model_indices() {
         let env = BenchEnv::open(model_idx)?;
         let pipe = env.pipeline()?;
+        let store = env.store()?;
+        let fingerprint = env.fingerprint(&FtConfig::default());
         for &pattern in &patterns {
             println!("=== {} @ {} ===", env.label, pattern.label());
             let mut headers: Vec<String> =
@@ -51,8 +60,11 @@ fn main() -> anyhow::Result<()> {
 
             for method in methods {
                 // prune once; recoveries share the pruned checkpoint, and
-                // skip the perplexity stage (zero-shot is the metric here)
-                let pruned = pipe.prune(pruner(method)?, pattern)?;
+                // skip the perplexity stage (zero-shot is the metric here).
+                // The checkpoint persists in the run store until every
+                // recovery has been measured (crash → no re-prune).
+                let pruned = pipe.prune_cached(&store, &fingerprint,
+                                               pruner(method)?, pattern)?;
                 for rec in recoveries {
                     let rec_label = recovery(rec)?.label();
                     let recovered =
@@ -76,6 +88,9 @@ fn main() -> anyhow::Result<()> {
                                  method, rec_label),
                         Json::Num(mean));
                 }
+                // every recovery of the group measured: checkpoint is
+                // dead weight now
+                store.remove_checkpoint(&fingerprint, method, pattern)?;
             }
             table.print();
         }

@@ -3,10 +3,11 @@
 //! sequences. The paper's headline cost claim — EBFT ≈ 10× cheaper wall
 //! clock at equal-or-better perplexity — plus the per-block timing report
 //! (§4: "50–60 s per block, ~30 min total" at Llama-7B scale).
+//! EBFT_JOBS=2 runs the two recoveries concurrently off one FLAP prune.
 
 use ebft::bench_support::BenchEnv;
 use ebft::config::FtConfig;
-use ebft::coordinator::{pruner, recovery};
+use ebft::coordinator::Grid;
 use ebft::pruning::Pattern;
 use ebft::util::metrics::fmt_ppl;
 use ebft::util::{Json, TableWriter};
@@ -17,8 +18,8 @@ const LORA_STEPS: usize = 800;
 
 fn main() -> anyhow::Result<()> {
     let env = BenchEnv::open(0)?;
-    let pipe = env.pipeline_with(FtConfig { lora_steps: LORA_STEPS,
-                                            ..FtConfig::default() })?;
+    let ft = FtConfig { lora_steps: LORA_STEPS, ..FtConfig::default() };
+    let pipe = env.pipeline_with(ft.clone())?;
     let dense_ppl = pipe.dense_ppl()?;
     println!("dense ppl {}", fmt_ppl(dense_ppl));
 
@@ -27,16 +28,17 @@ fn main() -> anyhow::Result<()> {
         &["method", "sparsity", "time(s)", "perplexity"]);
     let mut results = Json::obj();
 
-    // FLAP once; both recoveries share the pruned checkpoint
-    let pruned = pipe.prune(pruner("flap")?, Pattern::Structured(0.20))?;
+    // FLAP once; both recoveries share the pruned checkpoint, and run
+    // concurrently under EBFT_JOBS=2 (the scheduler's DAG: one prune job
+    // feeding two recovery jobs)
+    let pattern = Pattern::Structured(0.20);
+    let grid = Grid::new(&["flap"], &[pattern], &["lora", "ebft"])?;
+    let swept = env.run_grid_with(&grid, ft)?;
+    let lora = swept.find("flap", pattern, "lora").expect("lora cell");
+    let ours = swept.find("flap", pattern, "ebft").expect("ebft cell");
 
-    // --- LoRA ---
-    let (_, _, lora) = pipe.recover(&pruned, recovery("lora")?)?;
     table.row(&["LoRA".into(), "20%".into(), format!("{:.1}", lora.ft_secs),
                 fmt_ppl(lora.ppl)]);
-
-    // --- EBFT (with per-block timing, the §4 cost table) ---
-    let (_, _, ours) = pipe.recover(&pruned, recovery("ebft")?)?;
     table.row(&["Ours".into(), "20%".into(), format!("{:.1}", ours.ft_secs),
                 fmt_ppl(ours.ppl)]);
     table.print();

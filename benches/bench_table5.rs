@@ -3,6 +3,10 @@
 //! removing ~13 % / ~26 % of prunable parameters here.
 //!
 //! Default grid: MiniLlama-A; EBFT_FULL=1 adds MiniLlama-B.
+//!
+//! Like bench_table3, the zero-shot metric keeps this bench outside the
+//! RunRecord sweep path, so it uses the run store at checkpoint
+//! granularity: a killed run re-launches without re-pruning FLAP.
 
 use ebft::bench_support::{model_indices, BenchEnv};
 use ebft::config::FtConfig;
@@ -20,16 +24,19 @@ fn main() -> anyhow::Result<()> {
     let mut results = Json::obj();
     for model_idx in model_indices() {
         let env = BenchEnv::open(model_idx)?;
-        let pipe = env.pipeline_with(FtConfig { lora_steps: LORA_STEPS,
-                                                ..FtConfig::default() })?;
+        let ft = FtConfig { lora_steps: LORA_STEPS, ..FtConfig::default() };
+        let pipe = env.pipeline_with(ft.clone())?;
+        let store = env.store()?;
+        let fingerprint = env.fingerprint(&ft);
         println!("=== {} ===", env.label);
         let mut table = TableWriter::new(
             &format!("Table 5 — {} LoRA vs EBFT (structured budgets)",
                      env.label),
             &["budget", "method", "zero-shot mean", "wiki ppl"]);
         for &budget in &budgets {
-            let pruned =
-                pipe.prune(pruner("flap")?, Pattern::Structured(budget))?;
+            let pattern = Pattern::Structured(budget);
+            let pruned = pipe.prune_cached(&store, &fingerprint,
+                                           pruner("flap")?, pattern)?;
             for (rec, name) in [("lora", "LoRA"), ("ebft", "Ours")] {
                 let (params, masks, record) =
                     pipe.recover(&pruned, recovery(rec)?)?;
@@ -45,6 +52,7 @@ fn main() -> anyhow::Result<()> {
                             Json::parse(&format!(
                                 r#"{{"ppl": {ppl}, "zs_mean": {mean}}}"#))?);
             }
+            store.remove_checkpoint(&fingerprint, "flap", pattern)?;
         }
         table.print();
         env.write_json("table5", &results)?;

@@ -3,6 +3,8 @@
 //!
 //! Expected shape (paper §4.5): mask tuning beats DSnoT but loses to
 //! weight tuning at every sparsity.
+//! EBFT_JOBS=N for concurrent cells, EBFT_RESUME=1 to resume (see
+//! bench_support).
 
 use ebft::bench_support::{full_grid, model_indices, BenchEnv};
 use ebft::coordinator::Grid;
@@ -21,11 +23,10 @@ fn main() -> anyhow::Result<()> {
     let mut results = Json::obj();
     for model_idx in model_indices() {
         let env = BenchEnv::open(model_idx)?;
-        let pipe = env.pipeline()?;
         println!("=== {} ===", env.label);
 
         let grid = Grid::new(&["wanda"], &patterns, &["masktune", "ebft"])?;
-        let swept = grid.run(&pipe)?;
+        let swept = env.run_grid(&grid)?;
 
         let mut headers = vec!["method".to_string()];
         headers.extend(sparsities.iter()

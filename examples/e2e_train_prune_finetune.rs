@@ -5,9 +5,13 @@
 //! timing.
 //!
 //!   cargo run --release --example e2e_train_prune_finetune
+//!
+//! The prune/recover stage runs as one scheduled grid: EBFT_JOBS=2 works
+//! the two sparsities concurrently, EBFT_RESUME=1 resumes a killed run
+//! from runs/store/.
 
 use ebft::bench_support::{BenchEnv, BASE_STEPS};
-use ebft::coordinator::{pruner, recovery};
+use ebft::coordinator::Grid;
 use ebft::data::{MarkovCorpus, Split};
 use ebft::pretrain;
 use ebft::pruning::Pattern;
@@ -34,16 +38,26 @@ fn main() -> anyhow::Result<()> {
     }
     println!("pretraining took {:.1}s", report.secs);
 
-    // --- stage 2/3: prune + EBFT at two sparsities ---
+    // --- stage 2/3: prune + EBFT at two sparsities, one scheduled grid ---
     let env = BenchEnv {
         session,
         corpus,
         dense,
         runs: root.join("runs"),
         label: "MiniLlama-A".into(),
+        artifact_dir: root.join("artifacts/small"),
+        // pretrain() above is deterministic in (seed, steps); this is the
+        // same teacher the cached benches use
+        dense_tag: format!("small-seed0-steps{BASE_STEPS}"),
     };
     let pipe = env.pipeline()?;
     let dense_ppl = pipe.dense_ppl()?;
+
+    let grid = Grid::new(
+        &["wanda"],
+        &[Pattern::Unstructured(0.5), Pattern::Unstructured(0.7)],
+        &["none", "ebft"])?;
+    let swept = env.run_grid(&grid)?;
 
     let mut table = TableWriter::new(
         "end-to-end: Wanda pruning + EBFT recovery (wiki-sim ppl)",
@@ -51,9 +65,11 @@ fn main() -> anyhow::Result<()> {
     let mut results = Json::obj();
     results.set("dense_ppl", Json::Num(dense_ppl));
     for s in [0.5f32, 0.7] {
-        let ckpt = pipe.prune(pruner("wanda")?, Pattern::Unstructured(s))?;
-        let (_, _, pruned) = pipe.recover(&ckpt, recovery("none")?)?;
-        let (_, _, tuned) = pipe.recover(&ckpt, recovery("ebft")?)?;
+        let pattern = Pattern::Unstructured(s);
+        let pruned = swept.find("wanda", pattern, "none")
+            .expect("missing pruned cell");
+        let tuned = swept.find("wanda", pattern, "ebft")
+            .expect("missing ebft cell");
         table.row(&[format!("{}%", (s * 100.0) as u32), fmt_ppl(dense_ppl),
                     fmt_ppl(pruned.ppl), fmt_ppl(tuned.ppl),
                     format!("{:.1}", tuned.ft_secs)]);

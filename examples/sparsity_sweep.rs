@@ -1,11 +1,16 @@
 //! Sparsity sweep (Table 1 in miniature): how EBFT's advantage over the
-//! raw pruner and DSnoT widens as sparsity grows. Driven by one `Grid`
-//! sweep: each sparsity is pruned once and shared across the three
-//! recovery variants.
+//! raw pruner and DSnoT widens as sparsity grows. Driven by one scheduled
+//! `Grid` sweep: each sparsity is pruned once and shared across the three
+//! recovery variants, and independent cells run concurrently under
+//! `--jobs N` (each worker with its own session).
 //!
-//!   cargo run --release --example sparsity_sweep -- [--method wanda]
+//!   cargo run --release --example sparsity_sweep -- \
+//!       [--method wanda] [--jobs 4] [--resume]
+//!
+//! `--jobs`/`--resume` default to the EBFT_JOBS / EBFT_RESUME=1 env vars.
 
-use ebft::bench_support::BenchEnv;
+use ebft::bench_support::{self, BenchEnv};
+use ebft::config::FtConfig;
 use ebft::coordinator::{pruner, Grid};
 use ebft::pruning::Pattern;
 use ebft::util::metrics::fmt_ppl;
@@ -14,6 +19,8 @@ use ebft::util::{Args, TableWriter};
 fn main() -> anyhow::Result<()> {
     let args = Args::parse_env()?;
     let method = pruner(args.get_or("method", "wanda"))?;
+    let jobs = args.get_usize("jobs", bench_support::jobs())?;
+    let resume = args.has_flag("resume") || bench_support::resume();
     let env = BenchEnv::open(0)?;
     let pipe = env.pipeline()?;
     let dense_ppl = pipe.dense_ppl()?;
@@ -25,7 +32,7 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let grid = Grid::new(&[method.name()], &patterns,
                          &["none", "dsnot", "ebft"])?;
-    let swept = grid.run(&pipe)?;
+    let swept = env.sweep(&grid, FtConfig::default(), jobs, resume)?;
 
     let mut table = TableWriter::new(
         &format!("sparsity sweep — {} + fine-tuning variants",

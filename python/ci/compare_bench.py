@@ -1,0 +1,90 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: compare a PR's BENCH_pr.json (written by
+`EBFT_SMOKE=1 cargo bench --bench bench_fig2`) against the committed
+BENCH_baseline.json.
+
+Fails when quality regresses (perplexity up by more than --ppl-tol) or
+the cell got slower (wall-clock up by more than --time-tol). Baseline
+metrics set to null are skipped with a notice — that is how the baseline
+is seeded before real CI numbers exist. To refresh the baseline, download
+the `bench-regression` workflow artifact from a trusted run and commit it
+as BENCH_baseline.json.
+
+Usage:
+    python3 python/ci/compare_bench.py BENCH_baseline.json BENCH_pr.json \
+        [--ppl-tol 0.02] [--time-tol 0.25]
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except OSError as e:
+        sys.exit(f"FAIL: cannot read {path}: {e}")
+    except json.JSONDecodeError as e:
+        sys.exit(f"FAIL: {path} is not valid JSON: {e}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("candidate")
+    ap.add_argument("--ppl-tol", type=float, default=0.02,
+                    help="max relative perplexity regression (default 2%%)")
+    ap.add_argument("--time-tol", type=float, default=0.25,
+                    help="max relative wall-clock regression (default 25%%)")
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    cand = load(args.candidate)
+
+    base_cell = base.get("cell")
+    cand_cell = cand.get("cell")
+    if base_cell is not None and base_cell != cand_cell:
+        sys.exit(f"FAIL: baseline gates cell {base_cell!r} but the PR "
+                 f"measured {cand_cell!r}; refresh BENCH_baseline.json")
+
+    failures = []
+
+    def gate(metric, tol, unit):
+        b, c = base.get(metric), cand.get(metric)
+        if b is None:
+            print(f"SKIP  {metric}: baseline has no value yet (seeded "
+                  f"baseline) — candidate measured {c}")
+            return
+        if c is None:
+            failures.append(f"{metric}: missing from candidate payload")
+            return
+        limit = b * (1.0 + tol)
+        delta = (c - b) / b if b else float("inf")
+        verdict = "FAIL" if c > limit else "ok"
+        print(f"{verdict:>4}  {metric}: baseline {b:.4f}{unit} → "
+              f"candidate {c:.4f}{unit} ({delta:+.1%}, tolerance "
+              f"+{tol:.0%})")
+        if c > limit:
+            failures.append(
+                f"{metric} regressed {delta:+.1%} (limit +{tol:.0%}): "
+                f"{b:.4f}{unit} → {c:.4f}{unit}")
+
+    gate("ppl", args.ppl_tol, "")
+    gate("wall_secs", args.time_tol, "s")
+    # informational context (not gated): where the time went
+    for metric in ("prune_secs", "ft_secs", "eval_secs", "bind_secs"):
+        if metric in cand:
+            print(f"info  {metric}: {cand[metric]:.4f}s")
+
+    if failures:
+        print()
+        for f in failures:
+            print(f"FAIL: {f}")
+        sys.exit(1)
+    print("bench-regression gate passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,18 +1,28 @@
 //! Shared scaffolding for the bench harness (benches/bench_table*.rs) and
-//! the examples: base-model setup, grid helpers, result persistence.
+//! the examples: base-model setup, grid helpers, result persistence, and
+//! the scheduler/run-store wiring every driver shares.
 //!
 //! Every bench regenerates one of the paper's tables/figures. By default
 //! the grids are reduced so `cargo bench` completes in minutes; set
 //! `EBFT_FULL=1` for the paper-complete grids (all sparsities, both base
 //! models). Numbers land in runs/*.json.
+//!
+//! Sweeps run through the concurrent scheduler: `EBFT_JOBS=N` runs
+//! independent grid cells over N workers (one session per worker), and
+//! `EBFT_RESUME=1` re-launches an interrupted sweep from the run store
+//! under `runs/store/` without re-running completed cells or re-pruning
+//! in-flight checkpoints.
 
 use anyhow::{Context, Result};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use crate::config::FtConfig;
-use crate::coordinator::{base_model, Pipeline, PipelineBuilder};
-use crate::data::MarkovCorpus;
+use crate::coordinator::{base_model, Grid, GridResult, Pipeline,
+                         PipelineBuilder, RunRecord, RunStore, Scheduler,
+                         SweepEnv};
+use crate::data::{MarkovCorpus, Split};
 use crate::model::ParamStore;
+use crate::pruning::Pattern;
 use crate::runtime::Session;
 use crate::util::Json;
 
@@ -25,6 +35,26 @@ pub fn full_grid() -> bool {
     std::env::var("EBFT_FULL").map(|v| v == "1").unwrap_or(false)
 }
 
+/// Scheduler worker count from `EBFT_JOBS` (default 1 = serial).
+pub fn jobs() -> usize {
+    match std::env::var("EBFT_JOBS") {
+        Err(_) => 1,
+        Ok(v) => match v.parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                eprintln!("[bench] ignoring invalid EBFT_JOBS='{v}' \
+                           (want an integer ≥ 1)");
+                1
+            }
+        },
+    }
+}
+
+/// Resume from the run store when `EBFT_RESUME=1`.
+pub fn resume() -> bool {
+    std::env::var("EBFT_RESUME").map(|v| v == "1").unwrap_or(false)
+}
+
 pub struct BenchEnv {
     pub session: Session,
     pub corpus: MarkovCorpus,
@@ -32,6 +62,11 @@ pub struct BenchEnv {
     pub runs: PathBuf,
     /// Display label ("Lla.1"-style stand-in name).
     pub label: String,
+    /// Artifact directory scheduler workers open their sessions from.
+    pub artifact_dir: PathBuf,
+    /// Teacher identity (config + pretrain seed/steps) — part of the run
+    /// store fingerprint.
+    pub dense_tag: String,
 }
 
 impl BenchEnv {
@@ -45,13 +80,20 @@ impl BenchEnv {
         let root = repo_root();
         let dir = root.join("artifacts").join(config);
         let session = Session::open_dir(&dir).with_context(|| {
-            format!("opening {} (run `make artifacts` first)", dir.display())
+            artifact_help(config, &dir, &root)
         })?;
         let corpus = MarkovCorpus::new(session.manifest.dims.vocab, 7);
         let runs = root.join("runs");
         let dense = base_model(&session, &corpus, &runs, BASE_STEPS, seed)?;
-        Ok(BenchEnv { session, corpus, dense, runs,
-                      label: label.to_string() })
+        Ok(BenchEnv {
+            session,
+            corpus,
+            dense,
+            runs,
+            label: label.to_string(),
+            artifact_dir: dir,
+            dense_tag: format!("{config}-seed{seed}-steps{BASE_STEPS}"),
+        })
     }
 
     /// Pipeline over this env with the default fine-tuning config.
@@ -70,6 +112,68 @@ impl BenchEnv {
             .build()
     }
 
+    /// The persistent run store every sweep of this env records into.
+    pub fn store(&self) -> Result<RunStore> {
+        RunStore::open(&self.runs.join("store"))
+    }
+
+    /// The scheduler environment for sweeps over this env.
+    pub fn sweep_env(&self, ft: FtConfig) -> SweepEnv<'_> {
+        SweepEnv {
+            artifact_dir: self.artifact_dir.clone(),
+            corpus: &self.corpus,
+            dense: &self.dense,
+            ft,
+            eval_seqs: EVAL_SEQS,
+            impl_name: "xla".to_string(),
+            eval_split: Split::WikiSim,
+            dense_tag: self.dense_tag.clone(),
+        }
+    }
+
+    /// Run-store fingerprint of this env under `ft` (for drivers that
+    /// cache pruned checkpoints outside a grid sweep).
+    pub fn fingerprint(&self, ft: &FtConfig) -> String {
+        self.sweep_env(ft.clone()).fingerprint()
+    }
+
+    /// Run a grid through the scheduler + run store with the default
+    /// fine-tuning config; workers from `EBFT_JOBS`, resume from
+    /// `EBFT_RESUME=1`.
+    pub fn run_grid(&self, grid: &Grid) -> Result<GridResult> {
+        self.run_grid_with(grid, FtConfig::default())
+    }
+
+    /// [`BenchEnv::run_grid`] with an overridden fine-tuning config.
+    pub fn run_grid_with(&self, grid: &Grid, ft: FtConfig)
+                         -> Result<GridResult> {
+        self.sweep(grid, ft, jobs(), resume())
+    }
+
+    /// Fully-explicit sweep: grid × config × worker count × resume.
+    pub fn sweep(&self, grid: &Grid, ft: FtConfig, jobs: usize,
+                 resume: bool) -> Result<GridResult> {
+        let store = self.store()?;
+        Scheduler::new(self.sweep_env(ft))
+            .jobs(jobs)
+            .resume(resume)
+            .store(&store)
+            .local_session(&self.session)
+            .run(grid)
+    }
+
+    /// One (pruner, pattern, recovery) cell through the scheduler + run
+    /// store (resume-aware) — the non-grid benches' path.
+    pub fn run_cell(&self, ft: FtConfig, pruner: &str, pattern: Pattern,
+                    recovery: &str) -> Result<RunRecord> {
+        let grid = Grid::new(&[pruner], &[pattern], &[recovery])?;
+        let mut swept = self.sweep(&grid, ft, 1, resume())?;
+        swept
+            .records
+            .pop()
+            .context("scheduler returned no record for the cell")
+    }
+
     pub fn write_json(&self, name: &str, j: &Json) -> Result<()> {
         let path = self.runs.join(format!("{name}.json"));
         j.write_file(&path)?;
@@ -78,10 +182,45 @@ impl BenchEnv {
     }
 }
 
-/// Locate the repo root (benches run from the package root already, but
-/// examples may be invoked elsewhere).
+/// The exact rebuild command for a missing artifact dir — named per
+/// config so the error is actionable as-is.
+fn artifact_help(config: &str, dir: &Path, root: &Path) -> String {
+    format!("opening artifacts for config '{config}' at {}: build them \
+             with `make artifacts`, or directly:\n  cd {} && python3 -m \
+             compile.aot --config {config} --out ../artifacts",
+            dir.display(), root.join("python").display())
+}
+
+/// Locate the repo root. The compile-time manifest dir is authoritative
+/// when it still exists (benches run from the package root already); when
+/// it is stale — the binary moved machines, or a CI cache restored the
+/// tree elsewhere — walk up from the invocation directory instead, so
+/// benches and examples also work when launched from a workspace
+/// subdirectory.
 pub fn repo_root() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+    let compiled = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    if is_repo_root(&compiled) {
+        return compiled;
+    }
+    if let Ok(cwd) = std::env::current_dir() {
+        let mut dir = cwd.as_path();
+        loop {
+            if is_repo_root(dir) {
+                return dir.to_path_buf();
+            }
+            match dir.parent() {
+                Some(parent) => dir = parent,
+                None => break,
+            }
+        }
+    }
+    compiled
+}
+
+/// This crate's root specifically — `Cargo.toml` alone would also match
+/// an enclosing workspace root.
+fn is_repo_root(dir: &Path) -> bool {
+    dir.join("rust").join("src").join("lib.rs").exists()
 }
 
 /// Model list for the current grid size.
@@ -103,9 +242,36 @@ mod tests {
     }
 
     #[test]
+    fn repo_root_is_the_crate_root() {
+        // the marker the stale-path fallback walks for
+        assert!(repo_root().join("rust/src/lib.rs").exists());
+    }
+
+    #[test]
+    fn artifact_error_names_the_exact_command() {
+        let help = artifact_help("small", Path::new("/x/artifacts/small"),
+                                 Path::new("/x"));
+        assert!(help.contains("--config small"));
+        assert!(help.contains("compile.aot"));
+        assert!(help.contains("make artifacts"));
+    }
+
+    #[test]
     fn grid_defaults_reduced() {
         if std::env::var("EBFT_FULL").is_err() {
             assert_eq!(model_indices(), vec![0]);
+        }
+    }
+
+    #[test]
+    fn jobs_env_parsing_is_defensive() {
+        // can't mutate the process env safely under parallel tests; the
+        // default path must at least hold
+        if std::env::var("EBFT_JOBS").is_err() {
+            assert_eq!(jobs(), 1);
+        }
+        if std::env::var("EBFT_RESUME").is_err() {
+            assert!(!resume());
         }
     }
 }

@@ -38,6 +38,20 @@ impl Grid {
         self.pruners.len() * self.patterns.len() * self.recoveries.len()
     }
 
+    /// Canonical pruner names, in sweep order (scheduler decomposition).
+    pub fn pruner_names(&self) -> Vec<&'static str> {
+        self.pruners.iter().map(|p| p.name()).collect()
+    }
+
+    pub fn patterns(&self) -> &[Pattern] {
+        &self.patterns
+    }
+
+    /// Canonical recovery names, in sweep order (scheduler decomposition).
+    pub fn recovery_names(&self) -> Vec<&'static str> {
+        self.recoveries.iter().map(|r| r.name()).collect()
+    }
+
     /// Sweep every cell; prune once per (pruner, pattern).
     pub fn run(&self, pipe: &Pipeline<'_>) -> Result<GridResult> {
         self.run_with(pipe, |_| {})
@@ -49,9 +63,12 @@ impl Grid {
                     mut on_record: impl FnMut(&RunRecord))
                     -> Result<GridResult> {
         let mut records = Vec::with_capacity(self.n_cells());
+        let mut prunes = Vec::new();
         for pruner in &self.pruners {
             for &pattern in &self.patterns {
                 let pruned = pipe.prune(*pruner, pattern)?;
+                prunes.push(format!("{}/{}", pruner.name(),
+                                    pattern.label()));
                 for recovery in &self.recoveries {
                     let (_params, _masks, record) =
                         pipe.recover(&pruned, *recovery)?;
@@ -60,12 +77,15 @@ impl Grid {
                 }
             }
         }
-        Ok(GridResult { records })
+        Ok(GridResult { records, prunes })
     }
 }
 
 pub struct GridResult {
     pub records: Vec<RunRecord>,
+    /// Tags ("wanda/50%") of the (pruner, pattern) groups actually pruned
+    /// this run — resumed groups restored from the run store are absent.
+    pub prunes: Vec<String>,
 }
 
 impl GridResult {

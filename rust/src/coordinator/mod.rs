@@ -9,6 +9,11 @@
 //!   `RunRecord`s serializable to `runs/*.json`.
 //! - [`grid`] — `Grid` sweeps (pruner × pattern × recovery) cells with
 //!   pruned-checkpoint reuse across recovery variants.
+//! - [`scheduler`] — concurrent sweep executor: the grid decomposed into
+//!   a prune → recoveries DAG over a pool of one-session-per-worker
+//!   workers, resumable through the run store.
+//! - [`store`] — persistent run store: content-addressed cell records
+//!   and in-flight pruned checkpoints, atomically written.
 //!
 //! See DESIGN.md for the architecture rationale.
 
@@ -25,12 +30,16 @@ pub mod context;
 pub mod grid;
 pub mod pipeline;
 pub mod registry;
+pub mod scheduler;
+pub mod store;
 
 pub use context::RunContext;
 pub use grid::{Grid, GridResult};
 pub use pipeline::{Pipeline, PipelineBuilder, PrunedModel, RecoveredModel,
                    RunRecord};
 pub use registry::{pruner, pruners, recoveries, recovery, Pruner, Recovery};
+pub use scheduler::{plan_sweep, Scheduler, SweepEnv, SweepPlan};
+pub use store::{config_fingerprint, RunStore};
 
 /// Persist a result object under runs/ as JSON.
 pub fn write_result(runs_dir: &Path, name: &str, result: &Json) -> Result<()> {

@@ -12,7 +12,7 @@ use std::time::Instant;
 
 use crate::config::FtConfig;
 use crate::data::{MarkovCorpus, Split};
-use crate::ebft::finetune::EbftReport;
+use crate::ebft::finetune::{BlockReport, EbftReport};
 use crate::masks::MaskSet;
 use crate::model::ParamStore;
 use crate::pruning::Pattern;
@@ -21,6 +21,7 @@ use crate::util::Json;
 
 use super::context::RunContext;
 use super::registry::{self, Pruner, Recovery};
+use super::store::RunStore;
 
 /// Builder for [`Pipeline`]. Session, corpus and dense model are required;
 /// everything else has defaults matching the paper's testbed settings.
@@ -196,6 +197,52 @@ impl RunRecord {
         }
         j
     }
+
+    /// Parse the [`RunRecord::to_json`] encoding back — the run store's
+    /// read path. Exact inverse: `from_json(to_json(r)).to_json()` dumps
+    /// byte-identically, so resumed sweeps emit the same JSON as the run
+    /// that produced the record.
+    pub fn from_json(j: &Json) -> Result<RunRecord> {
+        let pattern_label = j.get("pattern")?.as_str()?.to_string();
+        let ebft_report = match j.opt("ebft") {
+            None => None,
+            Some(er) => {
+                let mut per_block = Vec::new();
+                for bj in er.get("per_block")?.as_arr()? {
+                    per_block.push(BlockReport {
+                        block: bj.get("block")?.as_usize()?,
+                        epochs_run: bj.get("epochs")?.as_usize()?,
+                        steps: bj.get("steps")?.as_usize()?,
+                        first_loss: bj.get("first_loss")?.as_f64()? as f32,
+                        last_loss: bj.get("last_loss")?.as_f64()? as f32,
+                        best_loss: bj.get("best_loss")?.as_f64()? as f32,
+                        converged_early:
+                            bj.get("converged_early")?.as_bool()?,
+                        secs: bj.get("secs")?.as_f64()?,
+                        bind_secs: bj.get("bind_secs")?.as_f64()?,
+                    });
+                }
+                Some(EbftReport {
+                    per_block,
+                    total_secs: er.get("total_secs")?.as_f64()?,
+                })
+            }
+        };
+        Ok(RunRecord {
+            pruner: j.get("pruner")?.as_str()?.to_string(),
+            pruner_label: j.get("pruner_label")?.as_str()?.to_string(),
+            pattern: Pattern::parse_label(&pattern_label)?,
+            pattern_label,
+            recovery: j.get("recovery")?.as_str()?.to_string(),
+            recovery_label: j.get("recovery_label")?.as_str()?.to_string(),
+            ppl: j.get("ppl")?.as_f64()?,
+            sparsity: j.get("sparsity")?.as_f64()?,
+            prune_secs: j.get("prune_secs")?.as_f64()?,
+            ft_secs: j.get("ft_secs")?.as_f64()?,
+            eval_secs: j.get("eval_secs")?.as_f64()?,
+            ebft_report,
+        })
+    }
 }
 
 /// The prune → recover → eval pipeline over one [`RunContext`].
@@ -228,6 +275,25 @@ impl<'a> Pipeline<'a> {
             masks,
             prune_secs: t0.elapsed().as_secs_f64(),
         })
+    }
+
+    /// Stage 1 through the run store: restore the persisted pruned
+    /// checkpoint for `(fingerprint, pruner, pattern)` when one exists,
+    /// else prune and persist it — so a multi-recovery driver interrupted
+    /// between recoveries re-launches without re-pruning. Callers should
+    /// `store.remove_checkpoint(..)` once every recovery that shares the
+    /// checkpoint has completed.
+    pub fn prune_cached(&self, store: &RunStore, fingerprint: &str,
+                        pruner: &dyn Pruner, pattern: Pattern)
+                        -> Result<PrunedModel> {
+        if let Some(ck) = store.get_checkpoint(
+            fingerprint, pruner.name(), pattern,
+            &self.ctx.session.manifest)? {
+            return Ok(ck);
+        }
+        let pruned = self.prune(pruner, pattern)?;
+        store.put_checkpoint(fingerprint, &pruned)?;
+        Ok(pruned)
     }
 
     /// Stage 2 only: recover from a pruned checkpoint *without* the eval

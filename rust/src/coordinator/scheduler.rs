@@ -1,0 +1,537 @@
+//! Concurrent grid scheduler: a `Grid` sweep decomposed into a DAG of
+//! prune → recovery jobs, executed by a small pool of workers that steal
+//! ready jobs from a shared queue.
+//!
+//! Design (see DESIGN.md §Scheduler):
+//!
+//! - **One session per worker.** `Session` is deliberately not `Send`
+//!   (PJRT raw pointers), so each spawned worker opens its own session
+//!   over the sweep's artifact directory and keeps every `Plan` /
+//!   `DeviceBuffer` worker-local — the PR 2 residency model is untouched.
+//!   The worker running on the calling thread can reuse an already-open
+//!   session (`Scheduler::local_session`), which keeps `jobs = 1` runs on
+//!   the exact footing of the old serial `Grid::run`.
+//! - **DAG shape.** One prune job per (pruner, pattern) group feeds one
+//!   recovery job per recovery variant; recoveries share the pruned
+//!   checkpoint through an `Arc`, so each group is pruned exactly once —
+//!   the reuse `Grid::run` hand-writes, now across workers.
+//! - **Depth-first ready queue.** Finished prunes push their recoveries
+//!   to the *front* of the queue, bounding resident checkpoints to about
+//!   the worker count instead of the whole grid.
+//! - **Determinism.** Cell numerics do not depend on worker count or
+//!   schedule (calibration batches derive deterministically from the
+//!   corpus per worker context); results return in canonical grid order,
+//!   so a `--jobs 4` sweep emits byte-identical record JSON to the serial
+//!   one, modulo wall-clock timing fields.
+//! - **Resume.** With a [`RunStore`] attached and resume on, completed
+//!   cells load from the store instead of re-running, and an interrupted
+//!   group's persisted pruned checkpoint is restored instead of
+//!   re-pruned. Groups whose cells all resumed schedule nothing.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::config::FtConfig;
+use crate::data::{MarkovCorpus, Split};
+use crate::model::ParamStore;
+use crate::pruning::Pattern;
+use crate::runtime::Session;
+
+use super::grid::{Grid, GridResult};
+use super::pipeline::{Pipeline, PipelineBuilder, PrunedModel, RunRecord};
+use super::registry;
+use super::store::{config_fingerprint, RunStore};
+
+/// Everything a worker needs to rebuild its own pipeline. Shared by
+/// reference across worker threads — sessions are deliberately absent
+/// (one is opened per worker).
+pub struct SweepEnv<'a> {
+    /// Artifact directory every worker session opens.
+    pub artifact_dir: PathBuf,
+    pub corpus: &'a MarkovCorpus,
+    /// The dense (teacher) model, shared read-only by all workers.
+    pub dense: &'a ParamStore,
+    pub ft: FtConfig,
+    pub eval_seqs: usize,
+    pub impl_name: String,
+    pub eval_split: Split,
+    /// Identity of the dense teacher (e.g. "small-seed0-steps400") —
+    /// part of the store fingerprint.
+    pub dense_tag: String,
+}
+
+impl SweepEnv<'_> {
+    /// The run-store fingerprint of this environment: every field that
+    /// moves a cell's numbers, hashed — including the corpus seed (it
+    /// moves every calibration/eval batch). The artifact config is
+    /// identified by the directory's base name ("tiny"/"small"/"base").
+    pub fn fingerprint(&self) -> String {
+        let dims = self
+            .artifact_dir
+            .file_name()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| self.artifact_dir.display().to_string());
+        config_fingerprint(&dims, &self.dense_tag, self.corpus.seed,
+                           &self.ft, self.eval_seqs, &self.impl_name,
+                           self.eval_split)
+    }
+}
+
+/// One recovery cell of a sweep plan.
+pub struct PlannedCell {
+    pub recovery: &'static str,
+    /// `RunRecord::key`-style cell key ("wanda/w.Ours/50%").
+    pub key: String,
+    /// Index into the canonical (pruner-major) result order.
+    pub slot: usize,
+    /// Restored from the store — the cell will not be re-run.
+    pub done: bool,
+}
+
+/// One (pruner, pattern) group: a prune job plus its recovery cells.
+pub struct PlannedGroup {
+    pub pruner: &'static str,
+    pub pattern: Pattern,
+    /// Display tag ("wanda/50%"), also used in `GridResult::prunes`.
+    pub tag: String,
+    pub cells: Vec<PlannedCell>,
+    /// False when every cell resumed — the group schedules nothing.
+    pub need_prune: bool,
+}
+
+pub struct SweepPlan {
+    pub groups: Vec<PlannedGroup>,
+    pub n_cells: usize,
+    /// Records restored from the store, indexed by cell slot.
+    pub restored: Vec<Option<RunRecord>>,
+}
+
+/// Decompose `grid` into (prune → recoveries) groups, consulting
+/// `lookup` for already-completed cells (the resume path hands it the
+/// store; a fresh sweep hands it `|_| None`). Pure — no I/O here, which
+/// is what makes resume planning unit-testable without artifacts.
+pub fn plan_sweep(grid: &Grid,
+                  mut lookup: impl FnMut(&str) -> Option<RunRecord>)
+                  -> Result<SweepPlan> {
+    let recoveries = grid.recovery_names();
+    let mut groups = Vec::new();
+    let mut restored = Vec::new();
+    let mut slot = 0usize;
+    for pruner in grid.pruner_names() {
+        for &pattern in grid.patterns() {
+            let mut cells = Vec::with_capacity(recoveries.len());
+            let mut need_prune = false;
+            for &recovery in &recoveries {
+                let label = registry::recovery(recovery)?.label();
+                let key = format!("{pruner}/{label}/{}", pattern.label());
+                let done = lookup(&key);
+                if done.is_none() {
+                    need_prune = true;
+                }
+                cells.push(PlannedCell {
+                    recovery,
+                    key,
+                    slot,
+                    done: done.is_some(),
+                });
+                restored.push(done);
+                slot += 1;
+            }
+            groups.push(PlannedGroup {
+                pruner,
+                pattern,
+                tag: format!("{pruner}/{}", pattern.label()),
+                cells,
+                need_prune,
+            });
+        }
+    }
+    Ok(SweepPlan { groups, n_cells: slot, restored })
+}
+
+#[derive(Clone, Copy)]
+enum Job {
+    Prune { group: usize },
+    Recover { group: usize, cell: usize },
+}
+
+struct State {
+    ready: VecDeque<Job>,
+    /// Per group: recovery jobs awaiting the prune.
+    waiting: Vec<Vec<Job>>,
+    /// Per group: the pruned checkpoint, shared across recovery workers.
+    checkpoints: Vec<Option<Arc<PrunedModel>>>,
+    /// Per group: recoveries still to run (checkpoint freed at zero).
+    uses_left: Vec<usize>,
+    results: Vec<Option<RunRecord>>,
+    /// Group tags actually pruned this run (restored groups absent).
+    prunes_run: Vec<String>,
+    done_cells: usize,
+    /// Jobs enqueued or running; workers exit when it reaches zero.
+    outstanding: usize,
+    /// First failure; set once, drains every worker.
+    failed: Option<anyhow::Error>,
+}
+
+struct Shared {
+    m: Mutex<State>,
+    cv: Condvar,
+}
+
+impl Shared {
+    /// Poison-tolerant lock: a panicked worker must not cascade poison
+    /// panics through its peers — the panic guard marks the sweep failed
+    /// and everyone drains instead.
+    fn lock(&self) -> std::sync::MutexGuard<'_, State> {
+        self.m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+}
+
+/// Marks the sweep failed when a worker unwinds (panics) instead of
+/// returning. Without it, peers would wait on the condvar forever for
+/// jobs the panicked worker still "owns" — and `std::thread::scope`
+/// joins every worker before propagating the panic, so a `--jobs N`
+/// sweep would hang instead of failing.
+struct PanicGuard<'a> {
+    shared: &'a Shared,
+    wid: usize,
+    armed: bool,
+}
+
+impl Drop for PanicGuard<'_> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let mut st = self.shared.lock();
+        if st.failed.is_none() {
+            st.failed =
+                Some(anyhow!("scheduler worker {} panicked", self.wid));
+        }
+        drop(st);
+        self.shared.cv.notify_all();
+    }
+}
+
+/// Read-only worker context, shared across threads.
+struct WorkerCtx<'s, 'e> {
+    env: &'s SweepEnv<'e>,
+    store: Option<&'s RunStore>,
+    fingerprint: &'s str,
+    plan: &'s SweepPlan,
+    shared: &'s Shared,
+    resume: bool,
+}
+
+/// Runs a [`Grid`] over a [`SweepEnv`] with `jobs` workers, optionally
+/// persisting/resuming through a [`RunStore`]. `jobs = 1` without a
+/// store degenerates to the serial sweep (same records, same order).
+pub struct Scheduler<'a> {
+    env: SweepEnv<'a>,
+    jobs: usize,
+    resume: bool,
+    store: Option<&'a RunStore>,
+    local_session: Option<&'a Session>,
+}
+
+impl<'a> Scheduler<'a> {
+    pub fn new(env: SweepEnv<'a>) -> Scheduler<'a> {
+        Scheduler {
+            env,
+            jobs: 1,
+            resume: false,
+            store: None,
+            local_session: None,
+        }
+    }
+
+    /// Worker count (≥ 1). Workers beyond the runnable job count are not
+    /// spawned.
+    pub fn jobs(mut self, n: usize) -> Self {
+        self.jobs = n.max(1);
+        self
+    }
+
+    /// Skip cells already completed in the store and restore interrupted
+    /// pruned checkpoints. Requires [`Scheduler::store`] to have effect.
+    pub fn resume(mut self, on: bool) -> Self {
+        self.resume = on;
+        self
+    }
+
+    /// Persist completed cells (and in-flight pruned checkpoints) here.
+    pub fn store(mut self, store: &'a RunStore) -> Self {
+        self.store = Some(store);
+        self
+    }
+
+    /// Reuse an already-open session for the worker on the calling
+    /// thread. Sessions are not `Send`, so only the calling thread can
+    /// reuse one; spawned workers always open their own.
+    pub fn local_session(mut self, session: &'a Session) -> Self {
+        self.local_session = Some(session);
+        self
+    }
+
+    pub fn run(&self, grid: &Grid) -> Result<GridResult> {
+        let fingerprint = self.env.fingerprint();
+        let plan = plan_sweep(grid, |key| {
+            match (self.resume, self.store) {
+                (true, Some(store)) => {
+                    store.get_record(&fingerprint, key).unwrap_or(None)
+                }
+                _ => None,
+            }
+        })?;
+
+        let n_restored =
+            plan.restored.iter().filter(|r| r.is_some()).count();
+        if n_restored > 0 {
+            eprintln!("[scheduler] resume: {n_restored}/{} cells already \
+                       complete in the run store", plan.n_cells);
+        }
+        if let Some(store) = self.store {
+            // a group whose cells all resumed schedules nothing, so the
+            // usual last-recovery cleanup never runs for it — drop any
+            // checkpoint orphaned by a kill between the final cell's
+            // record write and its cleanup (best effort)
+            for group in plan.groups.iter().filter(|g| !g.need_prune) {
+                if let Err(e) = store.remove_checkpoint(
+                    &fingerprint, group.pruner, group.pattern) {
+                    eprintln!("[scheduler] orphaned-checkpoint cleanup \
+                               failed for {}: {e:#}", group.tag);
+                }
+            }
+        }
+
+        let mut ready = VecDeque::new();
+        let mut waiting = Vec::with_capacity(plan.groups.len());
+        let mut uses_left = Vec::with_capacity(plan.groups.len());
+        let mut outstanding = 0usize;
+        for (g, group) in plan.groups.iter().enumerate() {
+            let pending: Vec<Job> = group
+                .cells
+                .iter()
+                .enumerate()
+                .filter(|(_, c)| !c.done)
+                .map(|(ci, _)| Job::Recover { group: g, cell: ci })
+                .collect();
+            uses_left.push(pending.len());
+            outstanding += pending.len();
+            if group.need_prune {
+                ready.push_back(Job::Prune { group: g });
+                outstanding += 1;
+            }
+            waiting.push(pending);
+        }
+
+        let shared = Shared {
+            m: Mutex::new(State {
+                ready,
+                waiting,
+                checkpoints: vec![None; plan.groups.len()],
+                uses_left,
+                results: plan.restored.clone(),
+                prunes_run: Vec::new(),
+                done_cells: n_restored,
+                outstanding,
+                failed: None,
+            }),
+            cv: Condvar::new(),
+        };
+
+        if outstanding > 0 {
+            let ctx = WorkerCtx {
+                env: &self.env,
+                store: self.store,
+                fingerprint: &fingerprint,
+                plan: &plan,
+                shared: &shared,
+                resume: self.resume,
+            };
+            let n_workers = self.jobs.min(outstanding);
+            std::thread::scope(|scope| {
+                let ctx_ref = &ctx;
+                for wid in 1..n_workers {
+                    scope.spawn(move || worker(ctx_ref, None, wid));
+                }
+                worker(ctx_ref, self.local_session, 0);
+            });
+        }
+
+        let state = shared
+            .m
+            .into_inner()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        if let Some(e) = state.failed {
+            return Err(e);
+        }
+        let mut records = Vec::with_capacity(plan.n_cells);
+        for slot in state.results {
+            records.push(slot.ok_or_else(|| {
+                anyhow!("scheduler finished with missing cells \
+                         (scheduler bug)")
+            })?);
+        }
+        Ok(GridResult { records, prunes: state.prunes_run })
+    }
+}
+
+fn worker(ctx: &WorkerCtx<'_, '_>, local: Option<&Session>, wid: usize) {
+    let mut guard = PanicGuard { shared: ctx.shared, wid, armed: true };
+    let result = match local {
+        Some(session) => worker_loop(ctx, session, wid),
+        None => Session::open_dir(&ctx.env.artifact_dir)
+            .with_context(|| {
+                format!("scheduler worker {wid}: opening a session over {}",
+                        ctx.env.artifact_dir.display())
+            })
+            .and_then(|session| worker_loop(ctx, &session, wid)),
+    };
+    guard.armed = false;
+    if let Err(e) = result {
+        let mut st = ctx.shared.lock();
+        if st.failed.is_none() {
+            st.failed = Some(e);
+        } else {
+            eprintln!("[scheduler w{wid}] additional failure \
+                       (first one wins): {e:#}");
+        }
+        drop(st);
+        ctx.shared.cv.notify_all();
+    }
+}
+
+fn worker_loop(ctx: &WorkerCtx<'_, '_>, session: &Session, wid: usize)
+               -> Result<()> {
+    let pipe = PipelineBuilder::new()
+        .session(session)
+        .corpus(ctx.env.corpus)
+        .dense(ctx.env.dense)
+        .ft(ctx.env.ft.clone())
+        .eval_seqs(ctx.env.eval_seqs)
+        .impl_name(&ctx.env.impl_name)
+        .eval_split(ctx.env.eval_split)
+        .build()?;
+    loop {
+        let job = {
+            let mut st = ctx.shared.lock();
+            loop {
+                if st.failed.is_some() {
+                    return Ok(());
+                }
+                if let Some(job) = st.ready.pop_front() {
+                    break job;
+                }
+                if st.outstanding == 0 {
+                    return Ok(());
+                }
+                // poison-tolerant like Shared::lock: a peer's panic must
+                // surface as st.failed, not a poison-panic cascade
+                st = ctx
+                    .shared
+                    .cv
+                    .wait(st)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+            }
+        };
+        match job {
+            Job::Prune { group } => run_prune(ctx, &pipe, group, wid)?,
+            Job::Recover { group, cell } => {
+                run_recover(ctx, &pipe, group, cell, wid)?
+            }
+        }
+    }
+}
+
+fn run_prune(ctx: &WorkerCtx<'_, '_>, pipe: &Pipeline<'_>, group: usize,
+             wid: usize) -> Result<()> {
+    let g = &ctx.plan.groups[group];
+    // an interrupted sweep's in-flight checkpoint short-circuits the
+    // prune — but only when resuming, so a fresh sweep recomputes
+    let mut restored = None;
+    if ctx.resume {
+        if let Some(store) = ctx.store {
+            restored = store.get_checkpoint(
+                ctx.fingerprint, g.pruner, g.pattern,
+                &pipe.ctx().session.manifest)?;
+        }
+    }
+    let mut did_prune = false;
+    let pruned = match restored {
+        Some(ck) => {
+            eprintln!("[scheduler w{wid}] restored pruned checkpoint \
+                       {}", g.tag);
+            ck
+        }
+        None => {
+            let pruned = pipe.prune(registry::pruner(g.pruner)?,
+                                    g.pattern)?;
+            if let Some(store) = ctx.store {
+                store.put_checkpoint(ctx.fingerprint, &pruned)?;
+            }
+            did_prune = true;
+            pruned
+        }
+    };
+    let mut st = ctx.shared.lock();
+    if did_prune {
+        st.prunes_run.push(g.tag.clone());
+    }
+    st.checkpoints[group] = Some(Arc::new(pruned));
+    // depth-first: this group's recoveries run before further prunes, so
+    // resident checkpoints stay bounded by the worker count
+    let pending = std::mem::take(&mut st.waiting[group]);
+    for job in pending.into_iter().rev() {
+        st.ready.push_front(job);
+    }
+    st.outstanding -= 1;
+    drop(st);
+    ctx.shared.cv.notify_all();
+    Ok(())
+}
+
+fn run_recover(ctx: &WorkerCtx<'_, '_>, pipe: &Pipeline<'_>, group: usize,
+               cell: usize, wid: usize) -> Result<()> {
+    let checkpoint = {
+        let st = ctx.shared.lock();
+        st.checkpoints[group]
+            .clone()
+            .expect("recovery scheduled before its prune completed")
+    };
+    let g = &ctx.plan.groups[group];
+    let c = &g.cells[cell];
+    let recovery = registry::recovery(c.recovery)?;
+    let (_params, _masks, record) =
+        pipe.recover(checkpoint.as_ref(), recovery)?;
+    drop(checkpoint);
+    if let Some(store) = ctx.store {
+        store.put_record(ctx.fingerprint, &record)?;
+    }
+    let mut st = ctx.shared.lock();
+    st.done_cells += 1;
+    eprintln!("[scheduler w{wid}] cell {}/{}: {} ppl {:.3} \
+               (ft {:.1}s, eval {:.1}s)",
+              st.done_cells, ctx.plan.n_cells, c.key, record.ppl,
+              record.ft_secs, record.eval_secs);
+    st.results[c.slot] = Some(record);
+    st.uses_left[group] -= 1;
+    if st.uses_left[group] == 0 {
+        st.checkpoints[group] = None;
+        if let Some(store) = ctx.store {
+            // the group's cells are durable; the in-flight checkpoint is
+            // dead weight now (best-effort removal)
+            if let Err(e) = store.remove_checkpoint(ctx.fingerprint,
+                                                    g.pruner, g.pattern) {
+                eprintln!("[scheduler w{wid}] checkpoint cleanup failed \
+                           for {}: {e:#}", g.tag);
+            }
+        }
+    }
+    st.outstanding -= 1;
+    drop(st);
+    ctx.shared.cv.notify_all();
+    Ok(())
+}

@@ -1,0 +1,252 @@
+//! Persistent, resumable run store.
+//!
+//! Replaces the ad-hoc `runs/*.json` scatter for sweep state: every
+//! completed (pruner × pattern × recovery) cell is one content-addressed
+//! record file, and in-flight pruned checkpoints are persisted so a
+//! killed sweep re-launches without re-pruning. Layout under the store
+//! root (conventionally `runs/store/`):
+//!
+//! ```text
+//! <root>/<fingerprint>/cells/<key>-<hash>.json      one RunRecord each
+//! <root>/<fingerprint>/ckpt/<tag>-<hash>.params.ebft   in-flight pruned
+//! <root>/<fingerprint>/ckpt/<tag>-<hash>.masks.ebft    checkpoint
+//! <root>/<fingerprint>/ckpt/<tag>-<hash>.meta.json     (commit marker)
+//! ```
+//!
+//! The **fingerprint** hashes everything that moves a cell's numbers —
+//! the artifact config, the dense-teacher identity, the corpus seed, the
+//! full `FtConfig`, eval settings and the ft-step implementation — so
+//! records from
+//! different experimental setups can never shadow each other. Cell file
+//! names are the sanitized `RunRecord::key` plus a short hash of the
+//! exact key, so sanitization cannot collide distinct cells.
+//!
+//! Every write is atomic (temp file + rename, `util::atomic_write`);
+//! checkpoints additionally write their `meta.json` commit marker last,
+//! so a torn multi-file checkpoint is never visible to a resumed run.
+//! Unreadable store entries are treated as absent (the cell re-runs),
+//! never as fatal.
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::config::FtConfig;
+use crate::data::Split;
+use crate::masks::MaskSet;
+use crate::model::{Manifest, ParamStore};
+use crate::pruning::Pattern;
+use crate::util::{atomic_write, Json};
+
+use super::pipeline::{PrunedModel, RunRecord};
+
+/// FNV-1a 64-bit: tiny, stable across platforms, good enough to
+/// content-address store keys (collisions are additionally guarded by
+/// verifying the record key on read).
+pub fn fnv1a64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The store fingerprint of one experimental setup. Canonical string over
+/// every input that changes a cell's numbers, FNV-1a hashed to 16 hex
+/// chars. `dense_tag` names the teacher (e.g. "small-seed0-steps400" or
+/// "ckpt:runs/foo.ebft"); `corpus_seed` is the Markov-corpus seed, which
+/// moves every calibration and eval batch.
+pub fn config_fingerprint(dims_name: &str, dense_tag: &str,
+                          corpus_seed: u64, ft: &FtConfig,
+                          eval_seqs: usize, impl_name: &str,
+                          eval_split: Split) -> String {
+    let canon = format!(
+        "dims={dims_name};dense={dense_tag};corpus={corpus_seed};\
+         impl={impl_name};eval_seqs={eval_seqs};eval_split={eval_split:?};\
+         ft=epochs:{},lr:{},tol:{},window:{},calib:{},cache:{},lora:{}",
+        ft.epochs, ft.lr, ft.converge_tol, ft.converge_window,
+        ft.calib_seqs, ft.cache_budget_bytes, ft.lora_steps);
+    format!("{:016x}", fnv1a64(&canon))
+}
+
+pub struct RunStore {
+    root: PathBuf,
+}
+
+impl RunStore {
+    pub fn open(root: &Path) -> Result<RunStore> {
+        std::fs::create_dir_all(root)
+            .with_context(|| format!("creating run store {}",
+                                     root.display()))?;
+        Ok(RunStore { root: root.to_path_buf() })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// File-safe stem for a store key: sanitized for the filesystem plus
+    /// a short hash of the exact key, so distinct keys stay distinct
+    /// after sanitization. Deterministic across runs and platforms.
+    pub fn file_name(key: &str) -> String {
+        let sane: String = key
+            .chars()
+            .map(|c| {
+                if c.is_ascii_alphanumeric() || matches!(c, '.' | '-') {
+                    c
+                } else {
+                    '_'
+                }
+            })
+            .collect();
+        format!("{sane}-{:08x}", fnv1a64(key) as u32)
+    }
+
+    fn cell_path(&self, fingerprint: &str, key: &str) -> PathBuf {
+        self.root
+            .join(fingerprint)
+            .join("cells")
+            .join(format!("{}.json", Self::file_name(key)))
+    }
+
+    /// Load a completed cell record, or `None` when absent/unreadable
+    /// (an unreadable record means the cell re-runs, never a hard error).
+    pub fn get_record(&self, fingerprint: &str, key: &str)
+                      -> Result<Option<RunRecord>> {
+        let path = self.cell_path(fingerprint, key);
+        if !path.exists() {
+            return Ok(None);
+        }
+        let parsed = Json::parse_file(&path)
+            .and_then(|j| RunRecord::from_json(&j));
+        match parsed {
+            Ok(r) if r.key() == key => Ok(Some(r)),
+            Ok(r) => {
+                eprintln!("[store] key mismatch in {} (holds {}); ignoring",
+                          path.display(), r.key());
+                Ok(None)
+            }
+            Err(e) => {
+                eprintln!("[store] ignoring unreadable cell {}: {e:#}",
+                          path.display());
+                Ok(None)
+            }
+        }
+    }
+
+    /// Persist a completed cell record (atomic).
+    pub fn put_record(&self, fingerprint: &str, record: &RunRecord)
+                      -> Result<()> {
+        let path = self.cell_path(fingerprint, &record.key());
+        atomic_write(&path, record.to_json().dump().as_bytes())
+    }
+
+    fn ckpt_base(&self, fingerprint: &str, pruner: &str,
+                 pattern_label: &str) -> PathBuf {
+        self.root
+            .join(fingerprint)
+            .join("ckpt")
+            .join(Self::file_name(&format!("{pruner}/{pattern_label}")))
+    }
+
+    /// Persist an in-flight pruned checkpoint. Params and masks land
+    /// first; `meta.json` is the commit marker and is written (atomically)
+    /// last, so a kill mid-save leaves no visible checkpoint.
+    pub fn put_checkpoint(&self, fingerprint: &str, pruned: &PrunedModel)
+                          -> Result<()> {
+        let base = self.ckpt_base(fingerprint, &pruned.pruner,
+                                  &pruned.pattern.label());
+        pruned.params.save(&with_ext(&base, "params.ebft"))?;
+        pruned.masks.save(&with_ext(&base, "masks.ebft"))?;
+        let mut meta = Json::obj();
+        meta.set("pruner", Json::Str(pruned.pruner.clone()));
+        meta.set("pruner_label", Json::Str(pruned.pruner_label.clone()));
+        meta.set("pattern", Json::Str(pruned.pattern.label()));
+        meta.set("prune_secs", Json::Num(pruned.prune_secs));
+        atomic_write(&with_ext(&base, "meta.json"), meta.dump().as_bytes())
+    }
+
+    /// Restore an in-flight pruned checkpoint, or `None` when absent or
+    /// unusable (unusable means the prune re-runs, never a hard error).
+    pub fn get_checkpoint(&self, fingerprint: &str, pruner: &str,
+                          pattern: Pattern, manifest: &Manifest)
+                          -> Result<Option<PrunedModel>> {
+        let base = self.ckpt_base(fingerprint, pruner, &pattern.label());
+        if !with_ext(&base, "meta.json").exists() {
+            return Ok(None);
+        }
+        match restore_checkpoint(&base, pattern, manifest) {
+            Ok(ck) => Ok(Some(ck)),
+            Err(e) => {
+                eprintln!("[store] ignoring unusable checkpoint {}: {e:#}",
+                          base.display());
+                Ok(None)
+            }
+        }
+    }
+
+    /// Drop an in-flight checkpoint once every recovery sharing it has
+    /// completed (its cells are durable; the checkpoint is dead weight).
+    /// The `meta.json` commit marker goes first so a kill mid-removal
+    /// still leaves no visible checkpoint.
+    pub fn remove_checkpoint(&self, fingerprint: &str, pruner: &str,
+                             pattern: Pattern) -> Result<()> {
+        let base = self.ckpt_base(fingerprint, pruner, &pattern.label());
+        for ext in ["meta.json", "params.ebft", "masks.ebft"] {
+            let path = with_ext(&base, ext);
+            if path.exists() {
+                std::fs::remove_file(&path).with_context(|| {
+                    format!("removing {}", path.display())
+                })?;
+            }
+        }
+        Ok(())
+    }
+}
+
+fn with_ext(base: &Path, ext: &str) -> PathBuf {
+    let mut s = base.as_os_str().to_os_string();
+    s.push(".");
+    s.push(ext);
+    PathBuf::from(s)
+}
+
+fn restore_checkpoint(base: &Path, pattern: Pattern, manifest: &Manifest)
+                      -> Result<PrunedModel> {
+    let meta = Json::parse_file(&with_ext(base, "meta.json"))?;
+    let stored_label = meta.get("pattern")?.as_str()?;
+    if stored_label != pattern.label() {
+        anyhow::bail!("pattern mismatch: stored {stored_label}, \
+                       requested {}", pattern.label());
+    }
+    Ok(PrunedModel {
+        pruner: meta.get("pruner")?.as_str()?.to_string(),
+        pruner_label: meta.get("pruner_label")?.as_str()?.to_string(),
+        pattern,
+        params: ParamStore::load(&with_ext(base, "params.ebft"), manifest)?,
+        masks: MaskSet::load(&with_ext(base, "masks.ebft"), manifest)?,
+        prune_secs: meta.get("prune_secs")?.as_f64()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // standard FNV-1a test vectors
+        assert_eq!(fnv1a64(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64("a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64("foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn file_name_sanitizes_and_content_addresses() {
+        assert_eq!(RunStore::file_name("wanda/w.Ours/50%"),
+                   "wanda_w.Ours_50_-8a4940fa");
+        // distinct keys that sanitize identically still get distinct names
+        assert_ne!(RunStore::file_name("wanda/w.Ours/50%"),
+                   RunStore::file_name("wanda_w.Ours_50%"));
+    }
+}

@@ -5,24 +5,30 @@
 //!   prune      prune a base model, save masks + weights
 //!   finetune   EBFT fine-tune a pruned model (the paper's Alg. 1)
 //!   pipeline   prune → {none|dsnot|ebft|masktune} → perplexity, one cell
+//!   grid       concurrent (pruner × pattern × recovery) sweep
 //!   flap       structured pruning + {none|ebft|lora} recovery (§4.4)
 //!   eval       perplexity of a checkpoint (+ masks) on wiki-sim
 //!   zeroshot   the 7-task zero-shot suite
 //!   info       manifest / artifact summary
 //!
 //! Methods resolve through the coordinator registries, so `--method` and
-//! `--ft` accept any registered pruner/recovery name.
+//! `--ft` accept any registered pruner/recovery name. `pipeline` and
+//! `grid` take `--jobs N` (concurrent cells, one session per worker) and
+//! `--resume` (skip cells already completed in `runs/store/`).
 //!
 //! Examples:
 //!   ebft pretrain --config small --steps 300
 //!   ebft pipeline --config small --method wanda --sparsity 0.5 --ft ebft
 //!   ebft pipeline --config small --method sparsegpt --nm 2:4 --ft dsnot
+//!   ebft grid --methods wanda,sparsegpt --sparsities 0.5,0.7 \
+//!             --ft none,dsnot,ebft --jobs 4 --resume
 
 use anyhow::{bail, Context, Result};
 
 use ebft::config::{FtConfig, Paths};
-use ebft::coordinator::{self, base_model, Pipeline, PipelineBuilder};
-use ebft::data::MarkovCorpus;
+use ebft::coordinator::{self, base_model, Grid, GridResult, Pipeline,
+                        PipelineBuilder, RunStore, Scheduler, SweepEnv};
+use ebft::data::{MarkovCorpus, Split};
 use ebft::masks::MaskSet;
 use ebft::model::{Manifest, ParamStore};
 use ebft::pruning::Pattern;
@@ -55,7 +61,10 @@ fn open(args: &Args) -> Result<(Session, Paths, MarkovCorpus)> {
     let config = args.get_or("config", "small");
     let session = Session::open_dir(&paths.artifact_dir(config))
         .with_context(|| format!(
-            "opening artifacts for config '{config}' (run `make artifacts`?)"))?;
+            "opening artifacts for config '{config}' at {}: build them \
+             with `make artifacts`, or directly:\n  cd python && python3 \
+             -m compile.aot --config {config} --out ../artifacts",
+            paths.artifact_dir(config).display()))?;
     let seed = args.get_u64("corpus-seed", 7)?;
     let corpus = MarkovCorpus::new(session.manifest.dims.vocab, seed);
     Ok((session, paths, corpus))
@@ -82,6 +91,7 @@ fn run() -> Result<()> {
         "prune" => cmd_prune(&args),
         "finetune" => cmd_finetune(&args),
         "pipeline" => cmd_pipeline(&args),
+        "grid" => cmd_grid(&args),
         "flap" => cmd_flap(&args),
         "eval" => cmd_eval(&args),
         "zeroshot" => cmd_zeroshot(&args),
@@ -97,8 +107,9 @@ fn run() -> Result<()> {
 fn print_usage() {
     println!("ebft — block-wise fine-tuning for sparse LLMs (reproduction)");
     println!();
-    println!("usage: ebft <pretrain|prune|finetune|pipeline|flap|eval|zeroshot|info> [--options]");
+    println!("usage: ebft <pretrain|prune|finetune|pipeline|grid|flap|eval|zeroshot|info> [--options]");
     println!("common options: --config tiny|small|base  --artifacts DIR  --runs DIR");
+    println!("sweep options (pipeline/grid): --jobs N  --resume");
     println!("see README.md for full examples");
 }
 
@@ -187,6 +198,47 @@ fn cmd_finetune(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The scheduler environment shared by the `pipeline` and `grid`
+/// subcommands (spawned workers rebuild their pipelines from this).
+fn sweep_env<'a>(args: &Args, paths: &Paths, corpus: &'a MarkovCorpus,
+                 dense: &'a ParamStore) -> Result<SweepEnv<'a>> {
+    let config = args.get_or("config", "small");
+    Ok(SweepEnv {
+        artifact_dir: paths.artifact_dir(config),
+        corpus,
+        dense,
+        ft: FtConfig::from_args(args)?,
+        eval_seqs: args.get_usize("eval-seqs", 64)?,
+        impl_name: args.get_or("impl", "xla").to_string(),
+        eval_split: Split::WikiSim,
+        dense_tag: dense_tag(args)?,
+    })
+}
+
+/// Teacher identity for the run-store fingerprint: the checkpoint path
+/// when `--ckpt` is given, else config + pretrain seed/steps.
+fn dense_tag(args: &Args) -> Result<String> {
+    if let Some(ckpt) = args.get("ckpt") {
+        return Ok(format!("ckpt:{ckpt}"));
+    }
+    Ok(format!("{}-seed{}-steps{}", args.get_or("config", "small"),
+               args.get_u64("seed", 0)?, args.get_usize("steps", 300)?))
+}
+
+/// Run a grid through the scheduler with the CLI's `--jobs`/`--resume`
+/// settings, recording every cell in `runs/store/`.
+fn run_sweep(args: &Args, paths: &Paths, session: &Session,
+             corpus: &MarkovCorpus, dense: &ParamStore, grid: &Grid)
+             -> Result<GridResult> {
+    let store = RunStore::open(&paths.runs.join("store"))?;
+    Scheduler::new(sweep_env(args, paths, corpus, dense)?)
+        .jobs(args.get_usize("jobs", 1)?)
+        .resume(args.has_flag("resume"))
+        .store(&store)
+        .local_session(session)
+        .run(grid)
+}
+
 fn cmd_pipeline(args: &Args) -> Result<()> {
     let (session, paths, corpus) = open(args)?;
     let dense = load_base(args, &session, &paths, &corpus)?;
@@ -197,12 +249,27 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
 
     let dense_ppl = pipe.dense_ppl()?;
     println!("dense ppl: {}", fmt_ppl(dense_ppl));
-    let pruned = pipe.prune(pruner, pattern)?;
-    let (_, _, base) = pipe.recover(&pruned, coordinator::recovery("none")?)?;
+
+    // the cell (plus its no-recovery reference) through the scheduler:
+    // --jobs 2 runs both concurrently off one prune, --resume skips
+    // whatever a previous interrupted invocation already completed
+    let recoveries: Vec<&str> = if recovery.name() == "none" {
+        vec!["none"]
+    } else {
+        vec!["none", recovery.name()]
+    };
+    let grid = Grid::new(&[pruner.name()], &[pattern], &recoveries)?;
+    let swept = run_sweep(args, &paths, &session, &corpus, &dense, &grid)?;
+
+    let base = swept
+        .find(pruner.name(), pattern, "none")
+        .context("missing no-recovery reference cell")?;
     println!("{} @ {}: ppl {} (sparsity {:.1}%)", pruner.label(),
              pattern.label(), fmt_ppl(base.ppl), 100.0 * base.sparsity);
     if recovery.name() != "none" {
-        let (_, _, cell) = pipe.recover(&pruned, recovery)?;
+        let cell = swept
+            .find(pruner.name(), pattern, recovery.name())
+            .context("missing recovery cell")?;
         println!("{} {} @ {}: ppl {}  (ft {:.1}s)", pruner.label(),
                  cell.recovery_label, pattern.label(), fmt_ppl(cell.ppl),
                  cell.ft_secs);
@@ -214,6 +281,64 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
             }
         }
     }
+    Ok(())
+}
+
+/// Concurrent sweep over (methods × patterns × recoveries):
+/// `ebft grid --methods wanda,sparsegpt --sparsities 0.5,0.7
+///  --ft none,dsnot,ebft --jobs 4 [--resume]`. Patterns combine
+/// `--sparsities`, `--nm 2:4[,4:8]` and `--structured 0.2[,..]`.
+fn cmd_grid(args: &Args) -> Result<()> {
+    let (session, paths, corpus) = open(args)?;
+    let dense = load_base(args, &session, &paths, &corpus)?;
+
+    let methods: Vec<&str> =
+        args.get_or("methods", "magnitude,wanda,sparsegpt")
+            .split(',').map(str::trim).collect();
+    let recoveries: Vec<&str> = args.get_or("ft", "none,dsnot,ebft")
+        .split(',').map(str::trim).collect();
+    let mut patterns: Vec<Pattern> = args
+        .get_f32_list("sparsities", &[])?
+        .into_iter()
+        .map(Pattern::Unstructured)
+        .collect();
+    if let Some(nms) = args.get("nm") {
+        for nm in nms.split(',') {
+            let (n, m) = nm
+                .split_once(':')
+                .context("--nm expects N:M[,N:M...], e.g. 2:4")?;
+            patterns.push(Pattern::NM(n.trim().parse()?,
+                                      m.trim().parse()?));
+        }
+    }
+    for fraction in args.get_f32_list("structured", &[])? {
+        patterns.push(Pattern::Structured(fraction));
+    }
+    if patterns.is_empty() {
+        patterns.push(Pattern::Unstructured(0.5));
+    }
+
+    let grid = Grid::new(&methods, &patterns, &recoveries)?;
+    println!("grid: {} cells ({} pruners × {} patterns × {} recoveries), \
+              {} worker(s){}",
+             grid.n_cells(), methods.len(), patterns.len(),
+             recoveries.len(), args.get_usize("jobs", 1)?,
+             if args.has_flag("resume") { ", resuming" } else { "" });
+    let swept = run_sweep(args, &paths, &session, &corpus, &dense, &grid)?;
+
+    let mut table = TableWriter::new(
+        "grid sweep",
+        &["pruner", "pattern", "recovery", "ppl", "sparsity", "ft secs"]);
+    for r in &swept.records {
+        table.row(&[r.pruner.clone(), r.pattern_label.clone(),
+                    r.recovery_label.clone(), fmt_ppl(r.ppl),
+                    format!("{:.1}%", 100.0 * r.sparsity),
+                    format!("{:.1}", r.ft_secs)]);
+    }
+    table.print();
+    coordinator::write_result(&paths.runs, "grid", &swept.to_json())?;
+    println!("[results written to {}]",
+             paths.runs.join("grid.json").display());
     Ok(())
 }
 

@@ -13,7 +13,7 @@
 //! they were written (the canonical parameter order matters downstream).
 
 use anyhow::{bail, Context, Result};
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufReader, Read, Write};
 use std::path::Path;
 
 use crate::tensor::Tensor;
@@ -21,33 +21,36 @@ use crate::tensor::Tensor;
 const MAGIC: &[u8; 8] = b"EBFTCKPT";
 const VERSION: u32 = 1;
 
+/// Stream into a sibling staging file, then land atomically (rename): a
+/// save interrupted mid-write never leaves a torn checkpoint for the
+/// caching loaders (`pretrain::ensure_pretrained`, the coordinator's run
+/// store) to pick up on the next launch — they see the previous complete
+/// file, or nothing. Streaming (not buffer-then-write) keeps the extra
+/// memory O(1) even for full-model checkpoints, which matters when the
+/// concurrent scheduler persists several pruned checkpoints at once.
 pub fn save(path: &Path, entries: &[(String, &Tensor)]) -> Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
-    }
-    let file = std::fs::File::create(path)
-        .with_context(|| format!("creating {}", path.display()))?;
-    let mut w = BufWriter::new(file);
-    w.write_all(MAGIC)?;
-    w.write_all(&VERSION.to_le_bytes())?;
-    w.write_all(&(entries.len() as u32).to_le_bytes())?;
-    for (name, t) in entries {
-        let nb = name.as_bytes();
-        w.write_all(&(nb.len() as u32).to_le_bytes())?;
-        w.write_all(nb)?;
-        w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
-        for &d in &t.shape {
-            w.write_all(&(d as u32).to_le_bytes())?;
+    crate::util::fsio::atomic_write_with(path, |w| {
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&(entries.len() as u32).to_le_bytes())?;
+        for (name, t) in entries {
+            let nb = name.as_bytes();
+            w.write_all(&(nb.len() as u32).to_le_bytes())?;
+            w.write_all(nb)?;
+            w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                w.write_all(&(d as u32).to_le_bytes())?;
+            }
+            // bulk write the f32 payload
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(t.data.as_ptr() as *const u8,
+                                           t.data.len() * 4)
+            };
+            w.write_all(bytes)?;
         }
-        // bulk write the f32 payload
-        let bytes: &[u8] = unsafe {
-            std::slice::from_raw_parts(t.data.as_ptr() as *const u8,
-                                       t.data.len() * 4)
-        };
-        w.write_all(bytes)?;
-    }
-    w.flush()?;
-    Ok(())
+        Ok(())
+    })
+    .with_context(|| format!("writing checkpoint {}", path.display()))
 }
 
 pub fn load(path: &Path) -> Result<Vec<(String, Tensor)>> {
@@ -158,6 +161,25 @@ mod tests {
         std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
         assert!(load(&path).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn save_is_atomic_no_staging_left() {
+        let dir = std::env::temp_dir()
+            .join(format!("ebft-ckpt-atomic-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.ebft");
+        let t = Tensor::ones(&[4]);
+        save(&path, &[("w".into(), &t)]).unwrap();
+        save(&path, &[("w".into(), &t)]).unwrap(); // overwrite in place
+        let extras: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n != "c.ebft")
+            .collect();
+        assert!(extras.is_empty(), "staging files left: {extras:?}");
+        assert_eq!(load(&path).unwrap().len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

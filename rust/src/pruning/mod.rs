@@ -14,7 +14,7 @@ pub mod sparsegpt;
 pub mod stats;
 pub mod wanda;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::masks::MaskSet;
 use crate::model::ParamStore;
@@ -44,15 +44,61 @@ impl Pattern {
         }
     }
 
+    /// Display / run-store label. Integer percentages keep the paper's
+    /// row style ("50%", "struct20%"); any fraction whose percentage is
+    /// not exactly integral labels as the raw fraction's shortest f32
+    /// form ("0.555") instead — f32 Display round-trips exactly, where a
+    /// `×100 → ÷100` percent trip double-rounds (~16 % of f32s change),
+    /// which would break [`Pattern::parse_label`] inversion and let
+    /// nearby sparsities collide onto one store key.
     pub fn label(&self) -> String {
         match *self {
-            Pattern::Unstructured(s) => format!("{}%", (s * 100.0) as u32),
+            Pattern::Unstructured(s) => fraction_label(s, ""),
             Pattern::NM(n, m) => format!("{n}:{m}"),
-            Pattern::Structured(s) => {
-                format!("struct{}%", (s * 100.0) as u32)
-            }
+            Pattern::Structured(s) => fraction_label(s, "struct"),
         }
     }
+
+    /// Parse a pattern back from its [`Pattern::label`] string ("50%",
+    /// "0.555", "2:4", "struct20%") — the run store's read path, and an
+    /// exact inverse of [`Pattern::label`]: integer percents divide by
+    /// 100 (correctly rounded, matching the literal the driver passed),
+    /// raw fractions parse bit-exactly.
+    pub fn parse_label(s: &str) -> Result<Pattern> {
+        if let Some(rest) = s.strip_prefix("struct") {
+            return Ok(Pattern::Structured(parse_fraction(rest)?));
+        }
+        if let Some((n, m)) = s.split_once(':') {
+            return Ok(Pattern::NM(n.trim().parse()?, m.trim().parse()?));
+        }
+        Ok(Pattern::Unstructured(parse_fraction(s)?))
+    }
+}
+
+fn fraction_label(s: f32, prefix: &str) -> String {
+    let pct = s * 100.0;
+    if pct.fract() == 0.0 && (0.0..=100.0).contains(&pct) {
+        format!("{prefix}{}%", pct as u32)
+    } else {
+        format!("{prefix}{s}")
+    }
+}
+
+fn parse_fraction(s: &str) -> Result<f32> {
+    if let Some(pct) = s.strip_suffix('%') {
+        return Ok(pct
+            .parse::<f32>()
+            .with_context(|| format!("bad percent label '{s}'"))?
+            / 100.0);
+    }
+    let fraction: f32 = s.parse().with_context(|| {
+        format!("unparseable pattern label '{s}' \
+                 (expected '50%', '0.555', '2:4' or 'struct20%')")
+    })?;
+    if !(0.0..=1.0).contains(&fraction) {
+        anyhow::bail!("pattern fraction '{s}' outside [0, 1]");
+    }
+    Ok(fraction)
 }
 
 /// A block-local pruning criterion: masks one linear at a time, optionally
@@ -156,6 +202,40 @@ mod tests {
         assert_eq!(Pattern::Unstructured(0.7).label(), "70%");
         assert_eq!(Pattern::NM(2, 4).label(), "2:4");
         assert_eq!(Pattern::Structured(0.2).label(), "struct20%");
+    }
+
+    #[test]
+    fn pattern_label_round_trips() {
+        // every pattern the sweep drivers use must survive label() →
+        // parse_label() bit-exactly (grid lookup on resumed records)
+        let patterns = [
+            Pattern::Unstructured(0.5),
+            Pattern::Unstructured(0.6),
+            Pattern::Unstructured(0.7),
+            Pattern::Unstructured(0.8),
+            Pattern::Unstructured(0.9),
+            Pattern::Unstructured(0.13),
+            Pattern::Unstructured(0.26),
+            Pattern::NM(2, 4),
+            Pattern::NM(4, 8),
+            Pattern::Structured(0.2),
+            Pattern::Structured(0.26),
+            // non-integer percents: lossless raw-fraction labels
+            Pattern::Unstructured(0.555),
+            Pattern::Unstructured(0.123_456_7),
+            Pattern::Structured(0.555),
+        ];
+        for p in patterns {
+            assert_eq!(Pattern::parse_label(&p.label()).unwrap(), p,
+                       "label {} did not round-trip", p.label());
+        }
+        // nearby non-integer sparsities must not collide onto one label
+        assert_ne!(Pattern::Unstructured(0.554).label(),
+                   Pattern::Unstructured(0.555).label());
+        assert!(Pattern::parse_label("fifty").is_err());
+        assert!(Pattern::parse_label("struct-fifty").is_err());
+        assert!(Pattern::parse_label("struct20").is_err(),
+                "bare 'struct20' is 20.0, outside [0,1]");
     }
 
     #[test]

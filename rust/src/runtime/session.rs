@@ -7,6 +7,24 @@
 //! not as PJRT aborts), and execute with outputs staying device-resident
 //! until explicitly fetched. See DESIGN.md §Runtime for the residency
 //! model and the before/after perf note.
+//!
+//! ## Threading (Send audit)
+//!
+//! A `Session` is deliberately **not `Send` and not `Sync`**: the PJRT
+//! client and its buffers are reference-counted through raw pointers, and
+//! the executable/metric caches are `RefCell`s. A session, and every
+//! `Plan`/`DeviceBuffer` derived from it, must stay on the thread that
+//! opened it. Concurrency is therefore *one session per worker* — the
+//! `coordinator::scheduler` opens a session per worker thread (cheap:
+//! the manifest is a small JSON parse and executables compile lazily, on
+//! first use per session) and keeps all device state worker-local.
+//!
+//! ```compile_fail
+//! // Session must never become Send; the scheduler's one-session-per-
+//! // worker design (and this audit) relies on it.
+//! fn assert_send<T: Send>() {}
+//! assert_send::<ebft::runtime::Session>();
+//! ```
 
 use anyhow::{Context, Result};
 use std::cell::RefCell;
@@ -36,6 +54,16 @@ impl Session {
 
     pub fn open_dir(dir: &std::path::Path) -> Result<Session> {
         Self::open(Manifest::load(dir)?)
+    }
+
+    /// Open an independent session over the same artifact directory —
+    /// for callers that hold only a session and want another thread's
+    /// worth of isolated device state (the scheduler itself carries the
+    /// artifact dir and calls [`Session::open_dir`] directly). Cheap: no
+    /// artifact is compiled until a plan first uses it, so the new
+    /// session pays only for the artifacts it actually runs.
+    pub fn reopen(&self) -> Result<Session> {
+        Self::open_dir(&self.manifest.dir)
     }
 
     /// Obtain a typed plan for `name`: compiles the artifact now (cached

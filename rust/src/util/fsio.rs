@@ -1,0 +1,108 @@
+//! Crash-safe filesystem helpers shared by the checkpoint writer, the
+//! JSON result files and the coordinator's run store.
+
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Write `bytes` to `path` atomically: the payload lands in a sibling
+/// temp file first and is renamed over the target, so a reader (or a
+/// resumed run) sees either the old content or the new — never a torn
+/// write. Rename is atomic on POSIX within one filesystem, which holds
+/// here because the temp file lives next to its target. The temp name
+/// embeds the pid so concurrent processes writing the same target do not
+/// trample each other's staging files.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    atomic_write_with(path, |w| {
+        w.write_all(bytes).map_err(Into::into)
+    })
+}
+
+/// Streaming variant of [`atomic_write`]: `write` receives a buffered
+/// writer over the staging file, so multi-gigabyte payloads (full model
+/// checkpoints) land atomically without first being assembled in
+/// memory. On any error the staging file is removed (best effort) and
+/// the target is untouched.
+pub fn atomic_write_with(
+    path: &Path,
+    write: impl FnOnce(&mut std::io::BufWriter<std::fs::File>) -> Result<()>,
+) -> Result<()> {
+    let dir = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d,
+        _ => Path::new("."),
+    };
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+    let name = path
+        .file_name()
+        .with_context(|| format!("atomic_write: no file name in {}",
+                                 path.display()))?;
+    let tmp = dir.join(format!(".{}.tmp.{}", name.to_string_lossy(),
+                               std::process::id()));
+    if let Err(e) = stage(&tmp, write) {
+        std::fs::remove_file(&tmp).ok();
+        return Err(e);
+    }
+    std::fs::rename(&tmp, path).with_context(|| {
+        format!("renaming {} over {}", tmp.display(), path.display())
+    })
+}
+
+fn stage(
+    tmp: &Path,
+    write: impl FnOnce(&mut std::io::BufWriter<std::fs::File>) -> Result<()>,
+) -> Result<()> {
+    let file = std::fs::File::create(tmp)
+        .with_context(|| format!("creating {}", tmp.display()))?;
+    let mut w = std::io::BufWriter::new(file);
+    write(&mut w)?;
+    w.flush()
+        .with_context(|| format!("flushing {}", tmp.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("ebft-fsio-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn replaces_content_and_cleans_up() {
+        let dir = tmpdir("replace");
+        let path = dir.join("x.txt");
+        atomic_write(&path, b"old").unwrap();
+        atomic_write(&path, b"new").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"new");
+        let extras: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n != "x.txt")
+            .collect();
+        assert!(extras.is_empty(), "staging files left behind: {extras:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn creates_missing_parent_dirs() {
+        let dir = tmpdir("parents");
+        let path = dir.join("a").join("b").join("x.txt");
+        atomic_write(&path, b"deep").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"deep");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stray_temp_from_crashed_writer_is_harmless() {
+        let dir = tmpdir("stray");
+        let path = dir.join("x.txt");
+        std::fs::write(dir.join(".x.txt.tmp.0"), b"garbage").unwrap();
+        atomic_write(&path, b"good").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"good");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

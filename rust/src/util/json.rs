@@ -69,6 +69,13 @@ impl Json {
         Ok(x as usize)
     }
 
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => bail!("not a bool: {self:?}"),
+        }
+    }
+
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -119,11 +126,10 @@ impl Json {
         out
     }
 
+    /// Write atomically (temp file + rename): an interrupted run never
+    /// leaves a torn result file for a resumed run to trip over.
     pub fn write_file(&self, path: &std::path::Path) -> Result<()> {
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        std::fs::write(path, self.dump())
+        super::fsio::atomic_write(path, self.dump().as_bytes())
             .with_context(|| format!("writing {}", path.display()))
     }
 
@@ -419,6 +425,13 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse("nul").is_err());
+    }
+
+    #[test]
+    fn bool_accessor() {
+        assert!(Json::parse("true").unwrap().as_bool().unwrap());
+        assert!(!Json::parse("false").unwrap().as_bool().unwrap());
+        assert!(Json::parse("1").unwrap().as_bool().is_err());
     }
 
     #[test]

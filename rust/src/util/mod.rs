@@ -1,11 +1,13 @@
 //! Shared substrates built in-repo (the offline environment has no clap /
 //! serde / rand / criterion — we implement what we need).
 pub mod cli;
+pub mod fsio;
 pub mod json;
 pub mod metrics;
 pub mod prng;
 
 pub use cli::Args;
+pub use fsio::atomic_write;
 pub use json::Json;
 pub use metrics::{Stopwatch, TableWriter};
 pub use prng::Pcg64;

@@ -1,0 +1,379 @@
+//! Run-store + scheduler contracts.
+//!
+//! Pure tests (no artifacts): atomic-write crash safety, deterministic
+//! content-addressed keys and fingerprints, RunRecord JSON inversion,
+//! and resume planning (completed cells are skipped, fully-complete
+//! groups schedule no prune).
+//!
+//! `scheduler_suite` additionally needs `make artifacts` (skips
+//! otherwise): 2-worker sweeps prune each (pruner, pattern) exactly
+//! once, match the serial records byte-for-byte modulo timings, resume
+//! without re-running, and pick up an interrupted pruned checkpoint.
+
+use ebft::config::FtConfig;
+use ebft::coordinator::{config_fingerprint, plan_sweep, pruner, Grid,
+                        PipelineBuilder, RunRecord, RunStore, Scheduler,
+                        SweepEnv};
+use ebft::data::{MarkovCorpus, Split};
+use ebft::ebft::finetune::{BlockReport, EbftReport};
+use ebft::pretrain;
+use ebft::pruning::Pattern;
+use ebft::runtime::Session;
+use std::path::{Path, PathBuf};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("ebft-store-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn sample_record(pruner: &str, recovery: &str, recovery_label: &str,
+                 pattern: Pattern) -> RunRecord {
+    RunRecord {
+        pruner: pruner.into(),
+        pruner_label: pruner.into(),
+        pattern,
+        pattern_label: pattern.label(),
+        recovery: recovery.into(),
+        recovery_label: recovery_label.into(),
+        ppl: 12.5,
+        sparsity: 0.5,
+        prune_secs: 1.5,
+        ft_secs: 2.25,
+        eval_secs: 0.25,
+        ebft_report: None,
+    }
+}
+
+#[test]
+fn fingerprint_is_deterministic_and_sensitive() {
+    let ft = FtConfig::default();
+    let a = config_fingerprint("small", "small-seed0-steps400", 7, &ft, 64,
+                               "xla", Split::WikiSim);
+    let b = config_fingerprint("small", "small-seed0-steps400", 7, &ft, 64,
+                               "xla", Split::WikiSim);
+    assert_eq!(a, b);
+    assert_eq!(a.len(), 16);
+    assert!(a.chars().all(|c| c.is_ascii_hexdigit()));
+    // every input that moves a cell's numbers moves the fingerprint
+    assert_ne!(a, config_fingerprint("tiny", "small-seed0-steps400", 7,
+                                     &ft, 64, "xla", Split::WikiSim));
+    assert_ne!(a, config_fingerprint("small", "small-seed1-steps400", 7,
+                                     &ft, 64, "xla", Split::WikiSim));
+    // the corpus seed moves every calibration/eval batch
+    assert_ne!(a, config_fingerprint("small", "small-seed0-steps400", 13,
+                                     &ft, 64, "xla", Split::WikiSim));
+    assert_ne!(a, config_fingerprint("small", "small-seed0-steps400", 7,
+                                     &ft, 32, "xla", Split::WikiSim));
+    assert_ne!(a, config_fingerprint("small", "small-seed0-steps400", 7,
+                                     &ft, 64, "pallas", Split::WikiSim));
+    let ft2 = FtConfig { calib_seqs: 8, ..FtConfig::default() };
+    assert_ne!(a, config_fingerprint("small", "small-seed0-steps400", 7,
+                                     &ft2, 64, "xla", Split::WikiSim));
+}
+
+#[test]
+fn record_json_is_invertible() {
+    // from_json must invert to_json byte-exactly — this is what makes a
+    // resumed sweep emit identical JSON to the run that produced it
+    let mut rec = sample_record("wanda", "ebft", "w.Ours",
+                                Pattern::Unstructured(0.5));
+    rec.ebft_report = Some(EbftReport {
+        per_block: vec![BlockReport {
+            block: 1,
+            epochs_run: 3,
+            steps: 12,
+            first_loss: 0.625,
+            last_loss: 0.25,
+            best_loss: 0.25,
+            converged_early: true,
+            secs: 1.75,
+            bind_secs: 0.125,
+        }],
+        total_secs: 1.75,
+    });
+    let j = rec.to_json();
+    let back = RunRecord::from_json(&j).unwrap();
+    assert_eq!(back.to_json().dump(), j.dump());
+    assert_eq!(back.pattern, rec.pattern);
+    assert_eq!(back.key(), rec.key());
+    // non-dyadic floats too (exercise the f64 shortest-print round-trip)
+    let mut odd = sample_record("wanda", "none", "none",
+                                Pattern::Unstructured(0.7));
+    odd.ppl = 13.700000000000001;
+    odd.sparsity = 0.6999999;
+    let jj = odd.to_json();
+    assert_eq!(RunRecord::from_json(&jj).unwrap().to_json().dump(),
+               jj.dump());
+}
+
+#[test]
+fn store_records_round_trip_and_misses_are_none() {
+    let dir = tmpdir("roundtrip");
+    let store = RunStore::open(&dir).unwrap();
+    let fp = config_fingerprint("small", "t", 7, &FtConfig::default(), 64,
+                                "xla", Split::WikiSim);
+    let rec = sample_record("wanda", "ebft", "w.Ours",
+                            Pattern::Unstructured(0.5));
+    assert!(store.get_record(&fp, &rec.key()).unwrap().is_none());
+    store.put_record(&fp, &rec).unwrap();
+    let back = store.get_record(&fp, &rec.key()).unwrap()
+        .expect("stored record");
+    assert_eq!(back.to_json().dump(), rec.to_json().dump());
+    // unknown key / fingerprint miss cleanly
+    assert!(store.get_record(&fp, "wanda/w.Ours/70%").unwrap().is_none());
+    assert!(store.get_record("0000000000000000", &rec.key()).unwrap()
+        .is_none());
+    // a truncated record is treated as absent (cell re-runs), not fatal
+    let cells = dir.join(&fp).join("cells");
+    let entry = std::fs::read_dir(&cells).unwrap().next().unwrap().unwrap();
+    std::fs::write(entry.path(), b"{\"pruner\":\"wanda\"").unwrap();
+    assert!(store.get_record(&fp, &rec.key()).unwrap().is_none());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn store_writes_are_atomic_no_staging_left() {
+    let dir = tmpdir("atomic");
+    let store = RunStore::open(&dir).unwrap();
+    let rec = sample_record("wanda", "none", "none",
+                            Pattern::Unstructured(0.5));
+    store.put_record("aaaa", &rec).unwrap();
+    store.put_record("aaaa", &rec).unwrap(); // overwrite in place
+    let cells = dir.join("aaaa").join("cells");
+    let names: Vec<String> = std::fs::read_dir(&cells)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    assert_eq!(names.len(), 1, "staging files left behind: {names:?}");
+    assert!(names[0].ends_with(".json"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn plan_skips_completed_cells_and_whole_groups() {
+    let grid = Grid::new(
+        &["wanda"],
+        &[Pattern::Unstructured(0.5), Pattern::Unstructured(0.7)],
+        &["none", "ebft"]).unwrap();
+
+    // fresh sweep: every group prunes, every cell pending
+    let plan = plan_sweep(&grid, |_| None).unwrap();
+    assert_eq!(plan.n_cells, 4);
+    assert_eq!(plan.groups.len(), 2);
+    assert!(plan.groups.iter().all(|g| g.need_prune));
+    assert!(plan.restored.iter().all(|r| r.is_none()));
+    // canonical keys, in canonical order
+    let keys: Vec<&str> = plan
+        .groups
+        .iter()
+        .flat_map(|g| g.cells.iter().map(|c| c.key.as_str()))
+        .collect();
+    assert_eq!(keys, vec!["wanda/none/50%", "wanda/w.Ours/50%",
+                          "wanda/none/70%", "wanda/w.Ours/70%"]);
+
+    // the 50% group fully complete → it schedules nothing (no prune)
+    let plan = plan_sweep(&grid, |key| match key {
+        "wanda/none/50%" => Some(sample_record(
+            "wanda", "none", "none", Pattern::Unstructured(0.5))),
+        "wanda/w.Ours/50%" => Some(sample_record(
+            "wanda", "ebft", "w.Ours", Pattern::Unstructured(0.5))),
+        _ => None,
+    }).unwrap();
+    assert!(!plan.groups[0].need_prune);
+    assert!(plan.groups[0].cells.iter().all(|c| c.done));
+    assert!(plan.groups[1].need_prune);
+    assert!(plan.groups[1].cells.iter().all(|c| !c.done));
+    assert_eq!(plan.restored.iter().filter(|r| r.is_some()).count(), 2);
+
+    // one cell of a group complete → the group still prunes, but only
+    // the missing cell is pending
+    let plan = plan_sweep(&grid, |key| match key {
+        "wanda/none/70%" => Some(sample_record(
+            "wanda", "none", "none", Pattern::Unstructured(0.7))),
+        _ => None,
+    }).unwrap();
+    assert!(plan.groups[1].need_prune);
+    let done: Vec<bool> =
+        plan.groups[1].cells.iter().map(|c| c.done).collect();
+    assert_eq!(done, vec![true, false]);
+}
+
+// ---------------------------------------------------------------------
+// artifact-gated scheduler suite (tiny config), one #[test] entry like
+// tests/pipeline.rs so the expensive env builds once
+// ---------------------------------------------------------------------
+
+struct Env {
+    session: Session,
+    corpus: MarkovCorpus,
+    dense: ebft::model::ParamStore,
+    artifact_dir: PathBuf,
+}
+
+fn build_env() -> Option<Env> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/tiny not built");
+        return None;
+    }
+    let session = Session::open_dir(&dir).unwrap();
+    let corpus = MarkovCorpus::new(session.manifest.dims.vocab, 7);
+    let (dense, _) =
+        pretrain::pretrain(&session, &corpus, 120, 3e-3, 0, 50).unwrap();
+    Some(Env { session, corpus, dense, artifact_dir: dir })
+}
+
+fn test_ft() -> FtConfig {
+    FtConfig { calib_seqs: 8, epochs: 3, ..FtConfig::default() }
+}
+
+fn sweep_env(e: &Env) -> SweepEnv<'_> {
+    SweepEnv {
+        artifact_dir: e.artifact_dir.clone(),
+        corpus: &e.corpus,
+        dense: &e.dense,
+        ft: test_ft(),
+        eval_seqs: 16,
+        impl_name: "xla".to_string(),
+        eval_split: Split::WikiSim,
+        dense_tag: "tiny-sched-test".to_string(),
+    }
+}
+
+/// Record JSON with wall-clock fields zeroed — the "byte-identical
+/// modulo timings" comparison from the acceptance criteria.
+fn normalized(records: &[RunRecord]) -> Vec<String> {
+    records
+        .iter()
+        .map(|r| {
+            let mut r = r.clone();
+            r.prune_secs = 0.0;
+            r.ft_secs = 0.0;
+            r.eval_secs = 0.0;
+            if let Some(rep) = &mut r.ebft_report {
+                rep.total_secs = 0.0;
+                for b in &mut rep.per_block {
+                    b.secs = 0.0;
+                    b.bind_secs = 0.0;
+                }
+            }
+            r.to_json().dump()
+        })
+        .collect()
+}
+
+fn dumps(records: &[RunRecord]) -> Vec<String> {
+    records.iter().map(|r| r.to_json().dump()).collect()
+}
+
+#[test]
+fn scheduler_suite() {
+    let Some(e) = build_env() else { return };
+    let pattern = Pattern::Unstructured(0.6);
+    // cheap recoveries (no EBFT epochs) keep the suite fast while still
+    // exercising the prune → recoveries DAG
+    let grid = Grid::new(&["wanda"], &[pattern],
+                         &["none", "dsnot", "masktune"]).unwrap();
+
+    // --- serial reference: 1 worker reusing the caller's session ---
+    let dir_serial = tmpdir("sched-serial");
+    let store_serial = RunStore::open(&dir_serial).unwrap();
+    let serial = Scheduler::new(sweep_env(&e))
+        .jobs(1)
+        .store(&store_serial)
+        .local_session(&e.session)
+        .run(&grid)
+        .unwrap();
+    assert_eq!(serial.records.len(), 3);
+    assert_eq!(serial.prunes, vec!["wanda/60%".to_string()],
+               "each (pruner, pattern) must prune exactly once");
+    for r in &serial.records {
+        // recoveries share the checkpoint: identical prune timing
+        assert!((r.prune_secs - serial.records[0].prune_secs).abs()
+                    < 1e-12);
+    }
+
+    // --- 2 workers: one prune, identical records modulo timings ---
+    let dir_par = tmpdir("sched-par");
+    let store_par = RunStore::open(&dir_par).unwrap();
+    let par = Scheduler::new(sweep_env(&e))
+        .jobs(2)
+        .store(&store_par)
+        .run(&grid)
+        .unwrap();
+    assert_eq!(par.prunes.len(), 1,
+               "2-worker sweep re-pruned: {:?}", par.prunes);
+    assert_eq!(normalized(&par.records), normalized(&serial.records),
+               "concurrent records must match the serial run");
+
+    // --- resume: nothing re-runs, records byte-identical incl. timings ---
+    let resumed = Scheduler::new(sweep_env(&e))
+        .jobs(2)
+        .resume(true)
+        .store(&store_par)
+        .local_session(&e.session)
+        .run(&grid)
+        .unwrap();
+    assert!(resumed.prunes.is_empty(),
+            "resume re-pruned: {:?}", resumed.prunes);
+    assert_eq!(dumps(&resumed.records), dumps(&par.records));
+
+    // --- kill-mid-sweep: delete one cell, re-create the in-flight
+    // checkpoint an interrupted run would have left, resume ---
+    let fp = sweep_env(&e).fingerprint();
+    let victim = &par.records[2];
+    let cell_file = dir_par.join(&fp).join("cells").join(
+        format!("{}.json", RunStore::file_name(&victim.key())));
+    assert!(cell_file.exists(), "cell file layout changed?");
+    std::fs::remove_file(&cell_file).unwrap();
+    let pipe = PipelineBuilder::new()
+        .session(&e.session)
+        .corpus(&e.corpus)
+        .dense(&e.dense)
+        .ft(test_ft())
+        .eval_seqs(16)
+        .build()
+        .unwrap();
+    let pruned = pipe.prune(pruner("wanda").unwrap(), pattern).unwrap();
+    store_par.put_checkpoint(&fp, &pruned).unwrap();
+
+    let rerun = Scheduler::new(sweep_env(&e))
+        .jobs(2)
+        .resume(true)
+        .store(&store_par)
+        .local_session(&e.session)
+        .run(&grid)
+        .unwrap();
+    assert!(rerun.prunes.is_empty(),
+            "resume must restore the interrupted checkpoint, not re-prune");
+    assert_eq!(rerun.records.len(), 3);
+    assert_eq!(normalized(&rerun.records), normalized(&par.records));
+    // group complete again → the in-flight checkpoint was cleaned up
+    assert!(store_par
+        .get_checkpoint(&fp, "wanda", pattern, &e.session.manifest)
+        .unwrap()
+        .is_none());
+
+    // --- orphaned checkpoint: kill between the last cell's record write
+    // and its cleanup leaves a stale checkpoint with every cell complete;
+    // a resume (which schedules nothing) must still remove it ---
+    store_par.put_checkpoint(&fp, &pruned).unwrap();
+    let noop = Scheduler::new(sweep_env(&e))
+        .jobs(2)
+        .resume(true)
+        .store(&store_par)
+        .local_session(&e.session)
+        .run(&grid)
+        .unwrap();
+    assert!(noop.prunes.is_empty());
+    assert!(store_par
+        .get_checkpoint(&fp, "wanda", pattern, &e.session.manifest)
+        .unwrap()
+        .is_none(),
+        "fully-resumed sweep left an orphaned checkpoint behind");
+
+    std::fs::remove_dir_all(&dir_serial).ok();
+    std::fs::remove_dir_all(&dir_par).ok();
+}
