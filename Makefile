@@ -1,0 +1,43 @@
+# Convenience targets for the EBFT reproduction.
+#
+#   make test           tier-1 gate (artifact-free: the reference-backend
+#                       suites always run; PJRT variants skip until
+#                       `make artifacts`)
+#   make artifacts      build every AOT HLO artifact config (needs
+#                       python3 + jax; see python/compile/aot.py)
+#   make artifacts-tiny just the `tiny` config (integration tests + the
+#                       PJRT↔reference differential test)
+#   make diff-test      the backend differential test against
+#                       artifacts/tiny
+#   make bench-baseline refresh the committed BENCH_baseline.json from a
+#                       local trusted run of the bench-smoke cell (needs
+#                       artifacts/small). Alternative: download the
+#                       `bench-regression` workflow artifact
+#                       (BENCH_pr.json) from a trusted main-branch run
+#                       and commit it as BENCH_baseline.json.
+
+.PHONY: test artifacts artifacts-tiny artifacts-small diff-test \
+        bench-baseline
+
+test:
+	cargo build --release && cargo test -q
+
+artifacts:
+	cd python && python3 -m compile.aot --config all --out ../artifacts
+
+artifacts-tiny:
+	cd python && python3 -m compile.aot --config tiny --out ../artifacts
+
+artifacts-small:
+	cd python && python3 -m compile.aot --config small --out ../artifacts
+
+diff-test:
+	cargo test --test backend_diff -- --nocapture
+
+# Writes the smoke cell's payload directly over the committed baseline;
+# review the diff (ppl + wall-clock move with hardware) before
+# committing. compare_bench.py stops skipping once real metrics land.
+bench-baseline:
+	EBFT_SMOKE=1 EBFT_BENCH_OUT=BENCH_baseline.json \
+	    cargo bench --bench bench_fig2
+	@echo "BENCH_baseline.json refreshed — review and commit it"

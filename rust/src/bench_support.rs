@@ -117,7 +117,9 @@ impl BenchEnv {
         RunStore::open(&self.runs.join("store"))
     }
 
-    /// The scheduler environment for sweeps over this env.
+    /// The scheduler environment for sweeps over this env. Workers open
+    /// their sessions on the same backend as `self.session` (selected by
+    /// `EBFT_BACKEND` at env-open time).
     pub fn sweep_env(&self, ft: FtConfig) -> SweepEnv<'_> {
         SweepEnv {
             artifact_dir: self.artifact_dir.clone(),
@@ -128,6 +130,7 @@ impl BenchEnv {
             impl_name: "xla".to_string(),
             eval_split: Split::WikiSim,
             dense_tag: self.dense_tag.clone(),
+            backend: self.session.backend_kind(),
         }
     }
 

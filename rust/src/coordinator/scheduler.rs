@@ -37,7 +37,7 @@ use crate::config::FtConfig;
 use crate::data::{MarkovCorpus, Split};
 use crate::model::ParamStore;
 use crate::pruning::Pattern;
-use crate::runtime::Session;
+use crate::runtime::{BackendKind, Session};
 
 use super::grid::{Grid, GridResult};
 use super::pipeline::{Pipeline, PipelineBuilder, PrunedModel, RunRecord};
@@ -60,6 +60,10 @@ pub struct SweepEnv<'a> {
     /// Identity of the dense teacher (e.g. "small-seed0-steps400") —
     /// part of the store fingerprint.
     pub dense_tag: String,
+    /// Backend every worker session opens on (match the driver's own
+    /// session — `Session::backend_kind()` — so all cells of a sweep run
+    /// on one substrate). Part of the store fingerprint.
+    pub backend: BackendKind,
 }
 
 impl SweepEnv<'_> {
@@ -75,7 +79,7 @@ impl SweepEnv<'_> {
             .unwrap_or_else(|| self.artifact_dir.display().to_string());
         config_fingerprint(&dims, &self.dense_tag, self.corpus.seed,
                            &self.ft, self.eval_seqs, &self.impl_name,
-                           self.eval_split)
+                           self.eval_split, self.backend)
     }
 }
 
@@ -383,9 +387,11 @@ fn worker(ctx: &WorkerCtx<'_, '_>, local: Option<&Session>, wid: usize) {
     let mut guard = PanicGuard { shared: ctx.shared, wid, armed: true };
     let result = match local {
         Some(session) => worker_loop(ctx, session, wid),
-        None => Session::open_dir(&ctx.env.artifact_dir)
+        None => Session::open_dir_kind(&ctx.env.artifact_dir,
+                                       ctx.env.backend)
             .with_context(|| {
-                format!("scheduler worker {wid}: opening a session over {}",
+                format!("scheduler worker {wid}: opening a {} session \
+                         over {}", ctx.env.backend,
                         ctx.env.artifact_dir.display())
             })
             .and_then(|session| worker_loop(ctx, &session, wid)),

@@ -35,6 +35,7 @@ use crate::data::Split;
 use crate::masks::MaskSet;
 use crate::model::{Manifest, ParamStore};
 use crate::pruning::Pattern;
+use crate::runtime::BackendKind;
 use crate::util::{atomic_write, Json};
 
 use super::pipeline::{PrunedModel, RunRecord};
@@ -55,17 +56,23 @@ pub fn fnv1a64(s: &str) -> u64 {
 /// every input that changes a cell's numbers, FNV-1a hashed to 16 hex
 /// chars. `dense_tag` names the teacher (e.g. "small-seed0-steps400" or
 /// "ckpt:runs/foo.ebft"); `corpus_seed` is the Markov-corpus seed, which
-/// moves every calibration and eval batch.
+/// moves every calibration and eval batch; `backend` joins because the
+/// two execution substrates agree only to float tolerance, so their
+/// records must never shadow each other.
+#[allow(clippy::too_many_arguments)]
 pub fn config_fingerprint(dims_name: &str, dense_tag: &str,
                           corpus_seed: u64, ft: &FtConfig,
                           eval_seqs: usize, impl_name: &str,
-                          eval_split: Split) -> String {
+                          eval_split: Split, backend: BackendKind)
+                          -> String {
     let canon = format!(
         "dims={dims_name};dense={dense_tag};corpus={corpus_seed};\
-         impl={impl_name};eval_seqs={eval_seqs};eval_split={eval_split:?};\
+         impl={impl_name};backend={};eval_seqs={eval_seqs};\
+         eval_split={eval_split:?};\
          ft=epochs:{},lr:{},tol:{},window:{},calib:{},cache:{},lora:{}",
-        ft.epochs, ft.lr, ft.converge_tol, ft.converge_window,
-        ft.calib_seqs, ft.cache_budget_bytes, ft.lora_steps);
+        backend.as_str(), ft.epochs, ft.lr, ft.converge_tol,
+        ft.converge_window, ft.calib_seqs, ft.cache_budget_bytes,
+        ft.lora_steps);
     format!("{:016x}", fnv1a64(&canon))
 }
 

@@ -4,8 +4,10 @@
 //! API quickstart, and DESIGN.md for the stage/registry architecture.
 //!
 //! Layer map:
-//! - [`runtime`] — PJRT client; typed Plan/DeviceBuffer execution over
-//!   AOT HLO-text artifacts, device-resident by default (L2/L1 compute)
+//! - [`runtime`] — typed Plan/DeviceBuffer execution over pluggable
+//!   backends (`EBFT_BACKEND=pjrt|reference`): compiled AOT HLO-text
+//!   artifacts through PJRT, or the artifact-free pure-Rust reference
+//!   interpreter (L2/L1 compute)
 //! - [`model`]   — manifests, parameter store, checkpoints
 //! - [`masks`]   — sparsity mask representation + N:M helpers
 //! - [`pruning`] — magnitude / Wanda / SparseGPT / FLAP (+ N:M variants)

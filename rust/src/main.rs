@@ -199,9 +199,11 @@ fn cmd_finetune(args: &Args) -> Result<()> {
 }
 
 /// The scheduler environment shared by the `pipeline` and `grid`
-/// subcommands (spawned workers rebuild their pipelines from this).
+/// subcommands (spawned workers rebuild their pipelines from this, on
+/// the same backend the driver's session runs on).
 fn sweep_env<'a>(args: &Args, paths: &Paths, corpus: &'a MarkovCorpus,
-                 dense: &'a ParamStore) -> Result<SweepEnv<'a>> {
+                 dense: &'a ParamStore, backend: ebft::runtime::BackendKind)
+                 -> Result<SweepEnv<'a>> {
     let config = args.get_or("config", "small");
     Ok(SweepEnv {
         artifact_dir: paths.artifact_dir(config),
@@ -212,6 +214,7 @@ fn sweep_env<'a>(args: &Args, paths: &Paths, corpus: &'a MarkovCorpus,
         impl_name: args.get_or("impl", "xla").to_string(),
         eval_split: Split::WikiSim,
         dense_tag: dense_tag(args)?,
+        backend,
     })
 }
 
@@ -231,7 +234,8 @@ fn run_sweep(args: &Args, paths: &Paths, session: &Session,
              corpus: &MarkovCorpus, dense: &ParamStore, grid: &Grid)
              -> Result<GridResult> {
     let store = RunStore::open(&paths.runs.join("store"))?;
-    Scheduler::new(sweep_env(args, paths, corpus, dense)?)
+    Scheduler::new(sweep_env(args, paths, corpus, dense,
+                             session.backend_kind())?)
         .jobs(args.get_usize("jobs", 1)?)
         .resume(args.has_flag("resume"))
         .store(&store)

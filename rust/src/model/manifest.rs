@@ -27,6 +27,11 @@ pub struct ModelDims {
     pub batch: usize,
     pub lora_rank: usize,
     pub lora_scale: f32,
+    /// Adam hyperparameters baked into the train-step artifacts (the
+    /// reference backend interprets with exactly these; lr is an input).
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -61,6 +66,13 @@ pub struct Manifest {
     pub artifacts: BTreeMap<String, ArtifactSpec>,
 }
 
+fn opt_f32(c: &Json, key: &str, default: f32) -> Result<f32> {
+    match c.opt(key) {
+        Some(j) => Ok(j.as_f64()? as f32),
+        None => Ok(default),
+    }
+}
+
 fn specs(j: &Json) -> Result<Vec<TensorSpec>> {
     j.as_arr()?
         .iter()
@@ -90,6 +102,11 @@ impl Manifest {
             batch: c.get("batch")?.as_usize()?,
             lora_rank: c.get("lora_rank")?.as_usize()?,
             lora_scale: c.get("lora_scale")?.as_f64()? as f32,
+            // optional with the standard defaults: manifests predating
+            // the backend seam did not need them on the Rust side
+            beta1: opt_f32(c, "beta1", 0.9)?,
+            beta2: opt_f32(c, "beta2", 0.999)?,
+            eps: opt_f32(c, "eps", 1e-8)?,
         };
         let param_names = j
             .get("param_names")?
@@ -294,6 +311,10 @@ pub mod tests {
         assert_eq!(m.param_index("embed").unwrap(), 0);
         assert_eq!(m.param_index("blocks.1.attn.wq").unwrap(), 10);
         assert!(m.param_index("nope").is_err());
+        // adam hyperparams parse from the config block
+        assert!((m.dims.beta1 - 0.9).abs() < 1e-9);
+        assert!((m.dims.beta2 - 0.999).abs() < 1e-9);
+        assert!((m.dims.eps - 1e-8).abs() < 1e-12);
     }
 
     #[test]

@@ -1,7 +1,10 @@
-//! Model-side plumbing: artifact manifests, parameter store, checkpoints.
+//! Model-side plumbing: artifact manifests (compiled and synthetic),
+//! parameter store, checkpoints.
 pub mod checkpoint;
 pub mod manifest;
 pub mod params;
+pub mod synth;
 
 pub use manifest::{ArtifactSpec, Manifest, ModelDims, TensorSpec};
 pub use params::ParamStore;
+pub use synth::{write_synthetic, SynthConfig};

@@ -1,0 +1,417 @@
+//! Synthetic, artifact-free manifest generation for the reference
+//! backend.
+//!
+//! [`write_synthetic`] emits exactly what `python/compile/aot.py` writes
+//! for a config — `manifest.json` with the full artifact signature set
+//! (including the `_pallas` block variants) plus `init_params.bin` — but
+//! generated in pure Rust from a [`SynthConfig`], so `cargo test`
+//! exercises every manifest-driven code path with zero Python/JAX in the
+//! loop. The `.hlo.txt` files the manifest names are *not* written: only
+//! the PJRT backend reads them, and opening such a directory with
+//! `BackendKind::Pjrt` fails with the usual "build artifacts" guidance,
+//! while `BackendKind::Reference` interprets the signatures directly.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+use super::manifest::Manifest;
+use crate::util::{Json, Pcg64};
+
+#[derive(Clone, Debug)]
+pub struct SynthConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub lora_rank: usize,
+    pub lora_scale: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// Seed of the exported init weights (scaled-normal, gains at 1).
+    pub init_seed: u64,
+}
+
+impl SynthConfig {
+    /// Test-scale config: the same shape family as `configs.py`'s `tiny`
+    /// (dims multiples of the 4/8 N:M group sizes, even head_dim for
+    /// RoPE, seq long enough for every zero-shot probe) but ~4× smaller,
+    /// so the interpreter keeps plain debug-profile `cargo test` quick.
+    pub fn tiny() -> SynthConfig {
+        SynthConfig {
+            name: "synth-tiny".to_string(),
+            vocab: 32,
+            d_model: 16,
+            n_heads: 2,
+            d_ff: 32,
+            n_layers: 2,
+            seq: 32,
+            batch: 2,
+            lora_rank: 2,
+            lora_scale: 2.0,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            init_seed: 0,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        assert_eq!(self.d_model % self.n_heads, 0);
+        self.d_model / self.n_heads
+    }
+
+    /// Shapes of one block's params, canonical order (7 linears, 2 gains).
+    fn block_param_shapes(&self) -> Vec<Vec<usize>> {
+        let (d, f) = (self.d_model, self.d_ff);
+        vec![
+            vec![d, d], vec![d, d], vec![d, d], vec![d, d],
+            vec![d, f], vec![d, f], vec![f, d],
+            vec![d], vec![d],
+        ]
+    }
+
+    fn block_mask_shapes(&self) -> Vec<Vec<usize>> {
+        self.block_param_shapes()[..7].to_vec()
+    }
+
+    fn param_shapes(&self) -> Vec<Vec<usize>> {
+        let mut shapes = vec![vec![self.vocab, self.d_model]];
+        for _ in 0..self.n_layers {
+            shapes.extend(self.block_param_shapes());
+        }
+        shapes.push(vec![self.d_model]);
+        shapes.push(vec![self.d_model, self.vocab]);
+        shapes
+    }
+
+    fn param_names(&self) -> Vec<String> {
+        let mut names = vec!["embed".to_string()];
+        for l in 0..self.n_layers {
+            for n in ["attn.wq", "attn.wk", "attn.wv", "attn.wo",
+                      "mlp.w_gate", "mlp.w_up", "mlp.w_down", "ln1.g",
+                      "ln2.g"] {
+                names.push(format!("blocks.{l}.{n}"));
+            }
+        }
+        names.push("final.norm.g".to_string());
+        names.push("final.head".to_string());
+        names
+    }
+
+    /// Flat (A, B) adapter shapes across all blocks, lora-artifact order.
+    fn lora_shapes(&self) -> Vec<Vec<usize>> {
+        let r = self.lora_rank;
+        let mut out = Vec::new();
+        for _ in 0..self.n_layers {
+            for s in self.block_mask_shapes() {
+                out.push(vec![s[0], r]);
+                out.push(vec![r, s[1]]);
+            }
+        }
+        out
+    }
+}
+
+fn spec(name: &str, shape: &[usize], dtype: &str) -> Json {
+    let mut o = Json::obj();
+    o.set("name", Json::Str(name.to_string()));
+    o.set("shape",
+          Json::Arr(shape.iter().map(|&x| Json::Num(x as f64)).collect()));
+    o.set("dtype", Json::Str(dtype.to_string()));
+    o
+}
+
+fn indexed(prefix: &str, shapes: &[Vec<usize>]) -> Vec<Json> {
+    shapes
+        .iter()
+        .enumerate()
+        .map(|(i, s)| spec(&format!("{prefix}.{i}"), s, "f32"))
+        .collect()
+}
+
+fn artifact(name: &str, inputs: Vec<Json>, outputs: Vec<Json>) -> Json {
+    let mut a = Json::obj();
+    a.set("file", Json::Str(format!("{name}.hlo.txt")));
+    a.set("inputs", Json::Arr(inputs));
+    a.set("outputs", Json::Arr(outputs));
+    a
+}
+
+/// The manifest JSON for `cfg`, field-for-field what aot.py emits.
+pub fn manifest_json(cfg: &SynthConfig) -> Json {
+    let (b, s, d, v, f) = (cfg.batch, cfg.seq, cfg.d_model, cfg.vocab,
+                           cfg.d_ff);
+    let x = || spec("x", &[b, s, d], "f32");
+    let tok = || spec("tokens", &[b, s], "i32");
+    let scalar = |n: &str| spec(n, &[], "f32");
+    let bp_shapes = cfg.block_param_shapes();
+    let mask_shapes = cfg.block_mask_shapes();
+    let p_shapes = cfg.param_shapes();
+    let all_mask_shapes: Vec<Vec<usize>> = (0..cfg.n_layers)
+        .flat_map(|_| mask_shapes.clone())
+        .collect();
+    let lora_shapes = cfg.lora_shapes();
+
+    let mut arts = Json::obj();
+    arts.set("embed_fwd", artifact(
+        "embed_fwd",
+        vec![spec("embed", &[v, d], "f32"), tok()],
+        vec![spec("x0", &[b, s, d], "f32")]));
+    arts.set("head_loss", artifact(
+        "head_loss",
+        vec![spec("g_norm", &[d], "f32"), spec("head", &[d, v], "f32"),
+             x(), tok()],
+        vec![scalar("nll_sum"), scalar("count")]));
+    arts.set("head_seq_nll", artifact(
+        "head_seq_nll",
+        vec![spec("g_norm", &[d], "f32"), spec("head", &[d, v], "f32"),
+             x(), tok(), spec("weights", &[b, s], "f32")],
+        vec![spec("nll", &[b], "f32"), spec("wsum", &[b], "f32")]));
+
+    for sfx in ["", "_pallas"] {
+        let mut fwd_ins = indexed("bp", &bp_shapes);
+        fwd_ins.extend(indexed("mask", &mask_shapes));
+        fwd_ins.push(x());
+        arts.set(&format!("block_fwd{sfx}"), artifact(
+            &format!("block_fwd{sfx}"),
+            fwd_ins,
+            vec![spec("y", &[b, s, d], "f32")]));
+
+        let mut ft_ins = indexed("bp", &bp_shapes);
+        ft_ins.extend(indexed("mask", &mask_shapes));
+        ft_ins.extend(indexed("m", &bp_shapes));
+        ft_ins.extend(indexed("v", &bp_shapes));
+        ft_ins.push(scalar("t"));
+        ft_ins.push(scalar("lr"));
+        ft_ins.push(x());
+        ft_ins.push(spec("target", &[b, s, d], "f32"));
+        let mut ft_outs = indexed("bp", &bp_shapes);
+        ft_outs.extend(indexed("m", &bp_shapes));
+        ft_outs.extend(indexed("v", &bp_shapes));
+        ft_outs.push(scalar("loss"));
+        arts.set(&format!("block_ft_step{sfx}"), artifact(
+            &format!("block_ft_step{sfx}"), ft_ins, ft_outs));
+    }
+
+    let mut grad_ins = indexed("bp", &bp_shapes);
+    grad_ins.extend(indexed("mask", &mask_shapes));
+    grad_ins.push(x());
+    grad_ins.push(spec("target", &[b, s, d], "f32"));
+    let mut grad_outs = vec![scalar("loss")];
+    grad_outs.extend(indexed("grad", &bp_shapes[..7]));
+    arts.set("block_grad", artifact("block_grad", grad_ins, grad_outs));
+
+    let mut stat_ins = indexed("bp", &bp_shapes);
+    stat_ins.extend(indexed("mask", &mask_shapes));
+    stat_ins.push(x());
+    let mut stat_outs = vec![spec("y", &[b, s, d], "f32")];
+    for (gname, dim) in [("ln1", d), ("ctx", d), ("ln2", d), ("hmid", f)] {
+        stat_outs.push(spec(&format!("{gname}.colsumsq"), &[dim], "f32"));
+        stat_outs.push(spec(&format!("{gname}.colsum"), &[dim], "f32"));
+        stat_outs.push(spec(&format!("{gname}.gram"), &[dim, dim], "f32"));
+    }
+    arts.set("block_stats", artifact("block_stats", stat_ins, stat_outs));
+
+    let mut lm_ins = indexed("param", &p_shapes);
+    lm_ins.extend(indexed("mask", &all_mask_shapes));
+    lm_ins.push(tok());
+    arts.set("lm_loss", artifact("lm_loss", lm_ins,
+                                 vec![scalar("nll")]));
+
+    let mut tr_ins = indexed("param", &p_shapes);
+    tr_ins.extend(indexed("m", &p_shapes));
+    tr_ins.extend(indexed("v", &p_shapes));
+    tr_ins.push(scalar("t"));
+    tr_ins.push(scalar("lr"));
+    tr_ins.push(tok());
+    let mut tr_outs = indexed("param", &p_shapes);
+    tr_outs.extend(indexed("m", &p_shapes));
+    tr_outs.extend(indexed("v", &p_shapes));
+    tr_outs.push(scalar("loss"));
+    arts.set("lm_train_step", artifact("lm_train_step", tr_ins, tr_outs));
+
+    let mut lora_ins = indexed("param", &p_shapes);
+    lora_ins.extend(indexed("mask", &all_mask_shapes));
+    lora_ins.extend(indexed("lora", &lora_shapes));
+    lora_ins.extend(indexed("m", &lora_shapes));
+    lora_ins.extend(indexed("v", &lora_shapes));
+    lora_ins.push(scalar("t"));
+    lora_ins.push(scalar("lr"));
+    lora_ins.push(tok());
+    let mut lora_outs = indexed("lora", &lora_shapes);
+    lora_outs.extend(indexed("m", &lora_shapes));
+    lora_outs.extend(indexed("v", &lora_shapes));
+    lora_outs.push(scalar("loss"));
+    arts.set("lora_train_step",
+             artifact("lora_train_step", lora_ins, lora_outs));
+
+    let mut config = Json::obj();
+    config.set("name", Json::Str(cfg.name.clone()));
+    config.set("vocab", Json::Num(v as f64));
+    config.set("d_model", Json::Num(d as f64));
+    config.set("n_heads", Json::Num(cfg.n_heads as f64));
+    config.set("head_dim", Json::Num(cfg.head_dim() as f64));
+    config.set("d_ff", Json::Num(f as f64));
+    config.set("n_layers", Json::Num(cfg.n_layers as f64));
+    config.set("seq", Json::Num(s as f64));
+    config.set("batch", Json::Num(b as f64));
+    config.set("lora_rank", Json::Num(cfg.lora_rank as f64));
+    config.set("lora_scale", Json::Num(cfg.lora_scale as f64));
+    config.set("beta1", Json::Num(cfg.beta1 as f64));
+    config.set("beta2", Json::Num(cfg.beta2 as f64));
+    config.set("eps", Json::Num(cfg.eps as f64));
+
+    let mut root = Json::obj();
+    root.set("config", config);
+    root.set("param_names",
+             Json::Arr(cfg.param_names().into_iter().map(Json::Str)
+                       .collect()));
+    root.set("param_shapes",
+             Json::Arr(p_shapes
+                       .iter()
+                       .map(|sh| Json::Arr(sh.iter()
+                                           .map(|&x2| Json::Num(x2 as f64))
+                                           .collect()))
+                       .collect()));
+    root.set("block_linears",
+             Json::Arr(["attn.wq", "attn.wk", "attn.wv", "attn.wo",
+                        "mlp.w_gate", "mlp.w_up", "mlp.w_down"]
+                       .iter()
+                       .map(|n| Json::Str(n.to_string()))
+                       .collect()));
+    root.set("block_norms",
+             Json::Arr(["ln1.g", "ln2.g"]
+                       .iter()
+                       .map(|n| Json::Str(n.to_string()))
+                       .collect()));
+    root.set("artifacts", arts);
+    root
+}
+
+/// Write `manifest.json` + `init_params.bin` for `cfg` under `dir` and
+/// load the result — a drop-in artifact directory for the reference
+/// backend (`Session::open_dir_kind(dir, BackendKind::Reference)`).
+pub fn write_synthetic(dir: &Path, cfg: &SynthConfig) -> Result<Manifest> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+    std::fs::write(dir.join("manifest.json"), manifest_json(cfg).dump())
+        .context("writing synthetic manifest.json")?;
+
+    // scaled-normal init matching model.py::init_params' shape rule
+    // (different RNG, same statistics): gains at 1, matrices at
+    // N(0, 1/fan_in)
+    let mut rng = Pcg64::new(cfg.init_seed, 0x5e3d);
+    let mut bytes = Vec::new();
+    for shape in cfg.param_shapes() {
+        let n: usize = shape.iter().product();
+        if shape.len() == 1 {
+            for _ in 0..n {
+                bytes.extend_from_slice(&1.0f32.to_le_bytes());
+            }
+        } else {
+            let std = 1.0 / (shape[0] as f32).sqrt();
+            for _ in 0..n {
+                bytes.extend_from_slice(
+                    &(rng.next_normal() * std).to_le_bytes());
+            }
+        }
+    }
+    std::fs::write(dir.join("init_params.bin"), bytes)
+        .context("writing synthetic init_params.bin")?;
+    Manifest::load(dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ParamStore;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("ebft-synth-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn synthetic_manifest_loads_and_validates() {
+        let cfg = SynthConfig::tiny();
+        let m = write_synthetic(&tmpdir("load"), &cfg).unwrap();
+        assert_eq!(m.dims.n_layers, cfg.n_layers);
+        assert_eq!(m.dims.head_dim, cfg.head_dim());
+        assert_eq!(m.param_names.len(), 1 + 9 * cfg.n_layers + 2);
+        // every artifact the compiled set carries, incl. pallas variants
+        for name in ["embed_fwd", "block_fwd", "block_fwd_pallas",
+                     "block_ft_step", "block_ft_step_pallas", "block_grad",
+                     "block_stats", "head_loss", "head_seq_nll", "lm_loss",
+                     "lm_train_step", "lora_train_step"] {
+            assert!(m.artifacts.contains_key(name), "missing {name}");
+        }
+        assert!((m.dims.beta2 - 0.999).abs() < 1e-9);
+    }
+
+    #[test]
+    fn artifact_signatures_are_consistent() {
+        let cfg = SynthConfig::tiny();
+        let m = write_synthetic(&tmpdir("sig"), &cfg).unwrap();
+        let l = cfg.n_layers;
+        let n_p = 1 + 9 * l + 2;
+        let ft = m.artifact("block_ft_step").unwrap();
+        assert_eq!(ft.inputs.len(), 9 + 7 + 9 + 9 + 4);
+        assert_eq!(ft.outputs.len(), 27 + 1);
+        // circulating state self-names on both sides (what
+        // donate_matching relies on)
+        for j in 0..9 {
+            for pre in ["bp", "m", "v"] {
+                let name = format!("{pre}.{j}");
+                assert!(ft.inputs.iter().any(|s| s.name == name));
+                assert!(ft.outputs.iter().any(|s| s.name == name));
+            }
+        }
+        let lm = m.artifact("lm_train_step").unwrap();
+        assert_eq!(lm.inputs.len(), 3 * n_p + 3);
+        assert_eq!(lm.outputs.len(), 3 * n_p + 1);
+        let lora = m.artifact("lora_train_step").unwrap();
+        let n_lora = 14 * l;
+        assert_eq!(lora.inputs.len(), n_p + 7 * l + 3 * n_lora + 3);
+        assert_eq!(lora.outputs.len(), 3 * n_lora + 1);
+        let stats = m.artifact("block_stats").unwrap();
+        assert_eq!(stats.outputs.len(), 1 + 12);
+    }
+
+    #[test]
+    fn init_params_load_with_expected_statistics() {
+        let cfg = SynthConfig::tiny();
+        let m = write_synthetic(&tmpdir("init"), &cfg).unwrap();
+        let ps = ParamStore::from_init_bin(&m).unwrap();
+        assert_eq!(ps.len(), m.param_names.len());
+        // gains exported at exactly 1
+        assert_eq!(ps.get("blocks.0.ln1.g").unwrap(),
+                   &crate::tensor::Tensor::ones(&[cfg.d_model]));
+        // matrices near-zero mean, 1/fan_in variance
+        let e = ps.get("embed").unwrap();
+        let mean = e.sum() / e.numel() as f32;
+        assert!(mean.abs() < 0.02, "embed mean {mean}");
+        let var = (e.sq_sum() / e.numel() as f64) as f32 - mean * mean;
+        let want = 1.0 / cfg.vocab as f32;
+        assert!((var - want).abs() < 0.5 * want, "embed var {var}");
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let cfg = SynthConfig::tiny();
+        let d1 = tmpdir("det1");
+        let d2 = tmpdir("det2");
+        write_synthetic(&d1, &cfg).unwrap();
+        write_synthetic(&d2, &cfg).unwrap();
+        assert_eq!(std::fs::read(d1.join("manifest.json")).unwrap(),
+                   std::fs::read(d2.join("manifest.json")).unwrap());
+        assert_eq!(std::fs::read(d1.join("init_params.bin")).unwrap(),
+                   std::fs::read(d2.join("init_params.bin")).unwrap());
+    }
+}

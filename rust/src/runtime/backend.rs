@@ -1,0 +1,198 @@
+//! Pluggable execution backends.
+//!
+//! A [`Backend`] turns a manifest artifact plus slot-ordered input
+//! buffers into tagged output buffers. Everything above this seam —
+//! [`Plan`](super::Plan) binding/validation/donation, [`DeviceBuffer`]
+//! residency, and every compute caller in the crate — is backend-blind;
+//! everything PJRT-specific lives in [`PjrtBackend`] here, and the
+//! pure-Rust interpreter lives in
+//! [`ReferenceBackend`](super::reference::ReferenceBackend).
+//!
+//! Selection: [`Session::open`](super::Session::open) reads
+//! `EBFT_BACKEND` (`pjrt` — the default — or `reference`);
+//! `Session::open_kind` / `open_dir_kind` pick explicitly (what the
+//! tests use, since env vars are process-global). The contract between
+//! the two backends — identical outputs on identical bound inputs,
+//! within float tolerance — is pinned by the differential test in
+//! `rust/tests/backend_diff.rs`. See DESIGN.md §Backends.
+
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::fmt;
+use std::rc::Rc;
+
+use super::buffer::DeviceBuffer;
+use super::reference::ReferenceBackend;
+use crate::model::manifest::Manifest;
+
+/// Which backend a session executes on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT HLO-text artifacts compiled and run through the PJRT client.
+    Pjrt,
+    /// The pure-Rust interpreter (no artifacts, no Python toolchain).
+    Reference,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "pjrt" => Ok(BackendKind::Pjrt),
+            "reference" | "ref" => Ok(BackendKind::Reference),
+            other => bail!("unknown backend '{other}' \
+                            (EBFT_BACKEND accepts: pjrt, reference)"),
+        }
+    }
+
+    /// Read `EBFT_BACKEND`; unset or unparseable defaults to PJRT (with a
+    /// warning for the unparseable case — never a hard error, so a typo'd
+    /// env var degrades to today's behavior).
+    pub fn from_env() -> BackendKind {
+        match std::env::var("EBFT_BACKEND") {
+            Err(_) => BackendKind::Pjrt,
+            Ok(v) => BackendKind::parse(&v).unwrap_or_else(|e| {
+                eprintln!("[runtime] {e:#}; defaulting to pjrt");
+                BackendKind::Pjrt
+            }),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Reference => "reference",
+        }
+    }
+}
+
+impl fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// An execution substrate. Implementations are single-threaded by design
+/// (sessions are `!Send`; see `runtime::session`'s threading audit).
+pub trait Backend {
+    fn kind(&self) -> BackendKind;
+
+    /// Prepare `name` for execution: compile-and-cache on PJRT, artifact
+    /// support check on the reference interpreter. Called at plan-creation
+    /// time so the first `run` is not a hidden compile (or a late
+    /// "unimplemented artifact" surprise).
+    fn ensure_ready(&self, manifest: &Manifest, name: &str) -> Result<()>;
+
+    /// Execute `name` on `inputs` (manifest slot order, pre-validated by
+    /// the plan at bind time). Outputs are tagged per the manifest output
+    /// specs, in manifest output order.
+    fn execute(&self, manifest: &Manifest, name: &str,
+               inputs: &[DeviceBuffer]) -> Result<Vec<DeviceBuffer>>;
+}
+
+/// Instantiate a backend. PJRT construction can fail (client bring-up);
+/// the reference interpreter cannot.
+pub(crate) fn create(kind: BackendKind) -> Result<Box<dyn Backend>> {
+    match kind {
+        BackendKind::Pjrt => Ok(Box::new(PjrtBackend::new()?)),
+        BackendKind::Reference => Ok(Box::new(ReferenceBackend::new())),
+    }
+}
+
+/// The default backend: AOT HLO-text artifacts compiled through the PJRT
+/// CPU client, with a lazy per-backend executable cache.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    executables: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<PjrtBackend> {
+        Ok(PjrtBackend {
+            client: xla::PjRtClient::cpu().context("PJRT CPU client")?,
+            executables: RefCell::new(HashMap::new()),
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Pjrt
+    }
+
+    /// Compile (and cache) an artifact's executable.
+    ///
+    /// HLO *text* (not a serialized proto) is the interchange format on
+    /// purpose: jax ≥ 0.5 emits `HloModuleProto`s with 64-bit instruction
+    /// ids which xla_extension 0.5.1 rejects, while the text parser
+    /// reassigns ids and round-trips cleanly (see python/compile/aot.py).
+    fn ensure_ready(&self, manifest: &Manifest, name: &str) -> Result<()> {
+        if self.executables.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let path = manifest.artifact_path(name)?;
+        let path_str = path.to_str().context("non-utf8 path")?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        self.executables.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    fn execute(&self, manifest: &Manifest, name: &str,
+               inputs: &[DeviceBuffer]) -> Result<Vec<DeviceBuffer>> {
+        self.ensure_ready(manifest, name)?;
+        let spec = manifest.artifact(name)?;
+        // Materialize each input's literal (memoized per buffer — a
+        // persistently bound host upload converts once for the whole loop,
+        // a donated output is already a literal).
+        let lits: Vec<Rc<xla::Literal>> = inputs
+            .iter()
+            .map(|b| b.literal())
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> =
+            lits.iter().map(|l| l.as_ref()).collect();
+        let map = self.executables.borrow();
+        let exe = map.get(name).expect("ensure_ready populated the cache");
+        let devices = exe.execute::<&xla::Literal>(&refs)?;
+        let buffer = devices
+            .first()
+            .and_then(|outputs| outputs.first())
+            .with_context(|| {
+                format!("artifact {name}: execution returned no output \
+                         buffers (corrupt or mis-specified executable?)")
+            })?;
+        let result = buffer.to_literal_sync()?;
+        let out_lits = result.to_tuple()?;
+        if out_lits.len() != spec.outputs.len() {
+            bail!("artifact {name}: runtime returned {} outputs, manifest \
+                   says {}", out_lits.len(), spec.outputs.len());
+        }
+        out_lits
+            .into_iter()
+            .zip(&spec.outputs)
+            .map(|(lit, s)| DeviceBuffer::from_output(lit, s))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert_eq!(BackendKind::parse("reference").unwrap(),
+                   BackendKind::Reference);
+        assert_eq!(BackendKind::parse("ref").unwrap(),
+                   BackendKind::Reference);
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!(BackendKind::Pjrt.as_str(), "pjrt");
+        assert_eq!(BackendKind::Reference.to_string(), "reference");
+    }
+}

@@ -1,19 +1,29 @@
-//! Device-resident buffer handles.
+//! Runtime-owned buffer handles, shared by every backend.
 //!
 //! A [`DeviceBuffer`] is the runtime's unit of residency: a shape- and
-//! dtype-tagged handle over a runtime-owned buffer that stays in the
+//! dtype-tagged handle over backend-owned storage that stays in the
 //! runtime's representation until a caller explicitly `fetch()`es it back
 //! to a host [`Tensor`]. Handles are cheap to clone (the storage is
 //! shared), so rebinding one step's output as the next step's input —
 //! the donation pattern in the EBFT / pretrain / LoRA hot loops — moves a
 //! reference, not data.
 //!
-//! On the PJRT CPU backend the owned representation is an `xla::Literal`
-//! in client memory; on an accelerator backend the same handle would wrap
-//! a `PjRtBuffer`. Callers never see the representation — the tag is the
-//! API, which is what lets the backend change underneath.
+//! Storage is dual-representation so both backends stay zero-copy on
+//! their hot paths: a host payload (`Vec<f32>`/`Vec<i32>`, the reference
+//! backend's native form and what uploads start as) and a PJRT
+//! `xla::Literal` (what PJRT execution consumes and produces). Each side
+//! is materialized from the other lazily and memoized — a PJRT plan
+//! that keeps a host-uploaded tensor persistently bound pays one
+//! conversion for the whole loop, and donated PJRT outputs circulate as
+//! literals without ever touching the host. Materializing the literal
+//! releases the host payload (the literal becomes the canonical copy),
+//! so bound model weights are never held twice; an explicit `fetch`
+//! reconverts. Callers never see the representation — the tag is the
+//! API, which is what lets the backend change underneath (see
+//! `runtime::backend`).
 
 use anyhow::{bail, Result};
+use std::cell::RefCell;
 use std::fmt;
 use std::rc::Rc;
 
@@ -51,10 +61,33 @@ impl fmt::Display for DType {
     }
 }
 
-/// A typed handle to a runtime-owned buffer. See the module docs.
+/// Host-side payload of a buffer (the reference backend's native form).
+#[derive(Clone, Debug)]
+pub(crate) enum HostVals {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostVals {
+    fn len(&self) -> usize {
+        match self {
+            HostVals::F32(v) => v.len(),
+            HostVals::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Dual-representation storage; see the module docs. Both sides are
+/// interior-mutable memo slots — at least one is populated at creation.
+struct Storage {
+    host: RefCell<Option<Rc<HostVals>>>,
+    lit: RefCell<Option<Rc<xla::Literal>>>,
+}
+
+/// A typed handle to runtime-owned storage. See the module docs.
 #[derive(Clone)]
 pub struct DeviceBuffer {
-    lit: Rc<xla::Literal>,
+    storage: Rc<Storage>,
     shape: Vec<usize>,
     dtype: DType,
 }
@@ -66,31 +99,38 @@ impl fmt::Debug for DeviceBuffer {
 }
 
 impl DeviceBuffer {
+    fn from_host(shape: Vec<usize>, vals: HostVals, dtype: DType)
+                 -> DeviceBuffer {
+        debug_assert_eq!(vals.len(), shape.iter().product::<usize>());
+        DeviceBuffer {
+            storage: Rc::new(Storage {
+                host: RefCell::new(Some(Rc::new(vals))),
+                lit: RefCell::new(None),
+            }),
+            shape,
+            dtype,
+        }
+    }
+
     /// Upload an f32 tensor.
     pub fn from_tensor(t: &Tensor) -> Result<DeviceBuffer> {
-        Ok(DeviceBuffer {
-            lit: Rc::new(convert::lit_f32(t)?),
-            shape: t.shape.clone(),
-            dtype: DType::F32,
-        })
+        Ok(Self::from_host(t.shape.clone(), HostVals::F32(t.data.clone()),
+                           DType::F32))
     }
 
     /// Upload an i32 token array with the given shape.
     pub fn from_tokens(shape: &[usize], data: &[i32]) -> Result<DeviceBuffer> {
-        Ok(DeviceBuffer {
-            lit: Rc::new(convert::lit_i32(shape, data)?),
-            shape: shape.to_vec(),
-            dtype: DType::I32,
-        })
+        if shape.iter().product::<usize>() != data.len() {
+            bail!("token buffer shape {:?} wants {} elements, got {}",
+                  shape, shape.iter().product::<usize>(), data.len());
+        }
+        Ok(Self::from_host(shape.to_vec(), HostVals::I32(data.to_vec()),
+                           DType::I32))
     }
 
     /// Upload an f32 scalar (shape `[]`).
     pub fn scalar(v: f32) -> DeviceBuffer {
-        DeviceBuffer {
-            lit: Rc::new(convert::lit_scalar(v)),
-            shape: Vec::new(),
-            dtype: DType::F32,
-        }
+        Self::from_host(Vec::new(), HostVals::F32(vec![v]), DType::F32)
     }
 
     /// Upload an all-zeros f32 buffer (optimizer-state init).
@@ -98,7 +138,19 @@ impl DeviceBuffer {
         DeviceBuffer::from_tensor(&Tensor::zeros(shape))
     }
 
-    /// Wrap an execution output, tagged with its manifest output spec.
+    /// Wrap a reference-backend output: host f32 data tagged with the
+    /// manifest output shape (row-major, so any reshape is free).
+    pub(crate) fn from_host_f32(shape: &[usize], data: Vec<f32>)
+                                -> Result<DeviceBuffer> {
+        if shape.iter().product::<usize>() != data.len() {
+            bail!("output shape {:?} wants {} elements, interpreter \
+                   produced {}", shape, shape.iter().product::<usize>(),
+                  data.len());
+        }
+        Ok(Self::from_host(shape.to_vec(), HostVals::F32(data), DType::F32))
+    }
+
+    /// Wrap a PJRT execution output, tagged with its manifest output spec.
     ///
     /// The executable's output layout is fixed at compile time, so only the
     /// element count is re-checked here (a mismatch means the artifact file
@@ -111,7 +163,10 @@ impl DeviceBuffer {
                   spec.name, lit.element_count(), spec.shape, spec.numel());
         }
         Ok(DeviceBuffer {
-            lit: Rc::new(lit),
+            storage: Rc::new(Storage {
+                host: RefCell::new(None),
+                lit: RefCell::new(Some(Rc::new(lit))),
+            }),
             shape: spec.shape.clone(),
             dtype: DType::parse(&spec.dtype)?,
         })
@@ -129,9 +184,54 @@ impl DeviceBuffer {
         self.shape.iter().product()
     }
 
-    /// The runtime-owned representation (crate-internal: execution only).
-    pub(crate) fn literal(&self) -> &xla::Literal {
-        &self.lit
+    /// Whether two handles share the same storage (clones do; a donated
+    /// output and the slot it was re-bound to do). This is the observable
+    /// identity the donation property tests assert on.
+    pub fn ptr_eq(&self, other: &DeviceBuffer) -> bool {
+        Rc::ptr_eq(&self.storage, &other.storage)
+    }
+
+    /// The PJRT representation, materialized from the host payload on
+    /// first use and memoized (crate-internal: PJRT execution only).
+    pub(crate) fn literal(&self) -> Result<Rc<xla::Literal>> {
+        if let Some(l) = self.storage.lit.borrow().as_ref() {
+            return Ok(l.clone());
+        }
+        let host = self.host()?;
+        let lit = match host.as_ref() {
+            HostVals::F32(v) => convert::lit_f32_raw(&self.shape, v)?,
+            HostVals::I32(v) => convert::lit_i32(&self.shape, v)?,
+        };
+        let rc = Rc::new(lit);
+        *self.storage.lit.borrow_mut() = Some(rc.clone());
+        // the literal is now the canonical copy: drop the host payload so
+        // persistently bound uploads don't hold the data twice for the
+        // plan's lifetime (an explicit fetch reconverts and re-memoizes)
+        *self.storage.host.borrow_mut() = None;
+        Ok(rc)
+    }
+
+    /// The host representation, materialized from the literal on first
+    /// use and memoized (crate-internal: reference execution + fetch).
+    pub(crate) fn host(&self) -> Result<Rc<HostVals>> {
+        if let Some(h) = self.storage.host.borrow().as_ref() {
+            return Ok(h.clone());
+        }
+        let lit = self.storage.lit.borrow().as_ref().cloned();
+        let Some(lit) = lit else {
+            bail!("buffer has neither host nor device storage (bug)");
+        };
+        let vals = match self.dtype {
+            DType::F32 => HostVals::F32(lit.to_vec::<f32>()?),
+            DType::I32 => HostVals::I32(lit.to_vec::<i32>()?),
+        };
+        if vals.len() != self.numel() {
+            bail!("literal has {} elements, shape {:?} wants {}",
+                  vals.len(), self.shape, self.numel());
+        }
+        let rc = Rc::new(vals);
+        *self.storage.host.borrow_mut() = Some(rc.clone());
+        Ok(rc)
     }
 
     /// Check this buffer against a manifest slot spec: both shape and
@@ -154,7 +254,21 @@ impl DeviceBuffer {
         if self.dtype != DType::F32 {
             bail!("fetch: buffer is {}, expected f32", self.dtype);
         }
-        convert::tensor_from_lit(&self.lit, &self.shape)
+        match self.host()?.as_ref() {
+            HostVals::F32(v) => Ok(Tensor::from_vec(&self.shape, v.clone())),
+            HostVals::I32(_) => bail!("fetch: buffer is i32, expected f32"),
+        }
+    }
+
+    /// Download an i32 token buffer.
+    pub fn fetch_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("fetch_i32: buffer is {}, expected i32", self.dtype);
+        }
+        match self.host()?.as_ref() {
+            HostVals::I32(v) => Ok(v.clone()),
+            HostVals::F32(_) => bail!("fetch_i32: buffer is f32"),
+        }
     }
 
     /// Download a scalar f32 (shape `[]` or single-element) output.
@@ -162,7 +276,13 @@ impl DeviceBuffer {
         if self.dtype != DType::F32 {
             bail!("fetch_scalar: buffer is {}, expected f32", self.dtype);
         }
-        convert::scalar_from_lit(&self.lit)
+        match self.host()?.as_ref() {
+            HostVals::F32(v) if v.len() == 1 => Ok(v[0]),
+            HostVals::F32(v) => {
+                bail!("expected scalar, got {} elements", v.len())
+            }
+            HostVals::I32(_) => bail!("fetch_scalar: buffer is i32"),
+        }
     }
 }
 
@@ -199,7 +319,29 @@ mod tests {
     fn clone_shares_storage() {
         let b = DeviceBuffer::from_tensor(&Tensor::ones(&[8])).unwrap();
         let c = b.clone();
-        assert!(Rc::ptr_eq(&b.lit, &c.lit), "clone must not copy data");
+        assert!(b.ptr_eq(&c), "clone must not copy data");
+        assert!(!b.ptr_eq(&DeviceBuffer::zeros(&[8]).unwrap()));
+    }
+
+    #[test]
+    fn literal_roundtrips_and_memoizes() {
+        let t = Tensor::from_vec(&[2, 2], vec![1., -2., 3., 0.5]);
+        let b = DeviceBuffer::from_tensor(&t).unwrap();
+        let l1 = b.literal().unwrap();
+        let l2 = b.literal().unwrap();
+        assert!(Rc::ptr_eq(&l1, &l2), "literal must be converted once");
+        assert_eq!(l1.to_vec::<f32>().unwrap(), t.data);
+        // the literal became the canonical copy (host slot released);
+        // an explicit fetch reconverts losslessly
+        assert_eq!(b.fetch().unwrap(), t);
+    }
+
+    #[test]
+    fn i32_host_roundtrip() {
+        let toks = DeviceBuffer::from_tokens(&[2, 2], &[1, 2, 3, 4]).unwrap();
+        assert_eq!(toks.fetch_i32().unwrap(), vec![1, 2, 3, 4]);
+        let lit = toks.literal().unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4]);
     }
 
     #[test]
@@ -229,6 +371,8 @@ mod tests {
         let toks = DeviceBuffer::from_tokens(&[2], &[7, 8]).unwrap();
         assert!(toks.fetch().is_err());
         assert!(toks.fetch_scalar().is_err());
+        let f = DeviceBuffer::scalar(1.0);
+        assert!(f.fetch_i32().is_err());
     }
 
     #[test]

@@ -1,4 +1,8 @@
-//! Literal ⇄ Tensor conversion.
+//! Host slice → `xla::Literal` conversion (PJRT upload path).
+//!
+//! An implementation detail of `DeviceBuffer`: the literal→host
+//! direction goes through `Literal::to_vec` at the buffer's memo layer,
+//! so only the upload direction needs helpers here.
 
 use anyhow::{bail, Result};
 
@@ -6,13 +10,19 @@ use crate::tensor::Tensor;
 
 /// f32 tensor → device literal with the tensor's shape.
 pub fn lit_f32(t: &Tensor) -> Result<xla::Literal> {
-    let dims: Vec<usize> = t.shape.clone();
+    lit_f32_raw(&t.shape, &t.data)
+}
+
+/// Raw f32 slice → device literal with the given shape.
+pub fn lit_f32_raw(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    if shape.iter().product::<usize>() != data.len() {
+        bail!("lit_f32 shape/data mismatch");
+    }
     let bytes: &[u8] = unsafe {
-        std::slice::from_raw_parts(t.data.as_ptr() as *const u8,
-                                   t.data.len() * 4)
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
     };
     Ok(xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::F32, &dims, bytes)?)
+        xla::ElementType::F32, shape, bytes)?)
 }
 
 /// i32 token array → device literal.
@@ -27,30 +37,6 @@ pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
         xla::ElementType::S32, shape, bytes)?)
 }
 
-/// Scalar f32 literal.
-pub fn lit_scalar(v: f32) -> xla::Literal {
-    xla::Literal::scalar(v)
-}
-
-/// Literal → f32 tensor with the given shape (validated by element count).
-pub fn tensor_from_lit(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
-    let data = lit.to_vec::<f32>()?;
-    if data.len() != shape.iter().product::<usize>() {
-        bail!("literal has {} elements, shape {:?} wants {}", data.len(),
-              shape, shape.iter().product::<usize>());
-    }
-    Ok(Tensor::from_vec(shape, data))
-}
-
-/// Literal → scalar f32.
-pub fn scalar_from_lit(lit: &xla::Literal) -> Result<f32> {
-    let v = lit.to_vec::<f32>()?;
-    if v.len() != 1 {
-        bail!("expected scalar, got {} elements", v.len());
-    }
-    Ok(v[0])
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -59,17 +45,14 @@ mod tests {
     fn f32_roundtrip() {
         let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
         let lit = lit_f32(&t).unwrap();
-        let back = tensor_from_lit(&lit, &[2, 3]).unwrap();
-        assert_eq!(t, back);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), t.data);
+        assert_eq!(lit.element_count(), 6);
     }
 
     #[test]
-    fn scalar_roundtrip() {
-        let lit = lit_scalar(3.25);
-        assert_eq!(scalar_from_lit(&lit).unwrap(), 3.25);
-        let t = Tensor::scalar(-1.5);
-        let lit2 = lit_f32(&t).unwrap();
-        assert_eq!(scalar_from_lit(&lit2).unwrap(), -1.5);
+    fn scalar_shape() {
+        let lit = lit_f32_raw(&[], &[3.25]).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![3.25]);
     }
 
     #[test]
@@ -81,8 +64,6 @@ mod tests {
 
     #[test]
     fn shape_mismatch_rejected() {
-        let t = Tensor::ones(&[4]);
-        let lit = lit_f32(&t).unwrap();
-        assert!(tensor_from_lit(&lit, &[5]).is_err());
+        assert!(lit_f32_raw(&[5], &[1.0; 4]).is_err());
     }
 }

@@ -1,21 +1,31 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them through
-//! typed, device-resident plans.
+//! Runtime: typed, resident execution plans over pluggable backends.
 //!
-//! - [`Session`] owns the client, manifest, and executable cache;
+//! - [`Session`] owns a [`Backend`], the manifest, and execution
+//!   counters; `EBFT_BACKEND=pjrt|reference` (or the `*_kind` openers)
+//!   selects the substrate;
 //! - [`Plan`] (from [`Session::plan`]) binds inputs by manifest slot name,
 //!   validates at bind time, and supports persistent bindings and
 //!   output→input donation for the hot loops;
 //! - [`DeviceBuffer`] is the shape/dtype-tagged residency handle — data
-//!   only returns to host through an explicit `fetch`.
+//!   only returns to host through an explicit `fetch`;
+//! - [`backend`] holds the [`Backend`] seam and [`PjrtBackend`] (AOT
+//!   HLO-text artifacts through PJRT, the default);
+//! - [`reference`] is the pure-Rust interpreter backend: the full
+//!   artifact set executed numerically with no artifacts or Python
+//!   toolchain, pinned against PJRT by `rust/tests/backend_diff.rs`.
 //!
 //! The raw `Literal` conversion helpers live in [`convert`] and are an
 //! implementation detail of `DeviceBuffer`; compute callers never touch
-//! literals directly. See DESIGN.md §Runtime.
+//! literals directly. See DESIGN.md §Runtime and §Backends.
+pub mod backend;
 pub mod buffer;
 pub mod convert;
 pub mod plan;
+pub mod reference;
 pub mod session;
 
+pub use backend::{Backend, BackendKind, PjrtBackend};
 pub use buffer::{DType, DeviceBuffer};
 pub use plan::Plan;
+pub use reference::ReferenceBackend;
 pub use session::Session;

@@ -38,11 +38,12 @@ pub struct Plan<'s> {
 }
 
 impl<'s> Plan<'s> {
-    /// Created via [`Session::plan`] — compiles (and caches) the
-    /// executable so the first `run` is not a hidden compile.
+    /// Created via [`Session::plan`] — prepares the artifact on the
+    /// session's backend (a PJRT compile, cached) so the first `run` is
+    /// not a hidden compile.
     pub(crate) fn new(session: &'s Session, name: &str) -> Result<Plan<'s>> {
         let spec = session.manifest.artifact(name)?.clone();
-        session.ensure_loaded(name)?;
+        session.ensure_ready(name)?;
         let input_index = spec
             .inputs
             .iter()
@@ -222,22 +223,16 @@ impl<'s> Plan<'s> {
             bail!("artifact {}: {} input slot(s) not bound: {}",
                   self.spec.name, unbound.len(), unbound.join(", "));
         }
-        let refs: Vec<&xla::Literal> = self
+        let bound: Vec<DeviceBuffer> = self
             .slots
             .iter()
-            .map(|b| b.as_ref().unwrap().literal())
+            .map(|b| b.as_ref().unwrap().clone())
             .collect();
-        let lits = self.session.execute_refs(&self.spec.name, &refs)?;
-        drop(refs);
-        if lits.len() != self.spec.outputs.len() {
-            bail!("artifact {}: runtime returned {} outputs, manifest says \
-                   {}", self.spec.name, lits.len(), self.spec.outputs.len());
+        let outs = self.session.execute(&self.spec.name, &bound)?;
+        if outs.len() != self.spec.outputs.len() {
+            bail!("artifact {}: backend returned {} outputs, manifest says \
+                   {}", self.spec.name, outs.len(), self.spec.outputs.len());
         }
-        let outs: Vec<DeviceBuffer> = lits
-            .into_iter()
-            .zip(&self.spec.outputs)
-            .map(|(lit, s)| DeviceBuffer::from_output(lit, s))
-            .collect::<Result<_>>()?;
         for &(oi, ii) in &self.donations {
             self.slots[ii] = Some(outs[oi].clone());
         }

@@ -1,0 +1,811 @@
+//! Pure-Rust numerics for the reference backend: forward passes and
+//! hand-derived reverse-mode gradients of the MiniLlama block, the LM
+//! head, and Adam — the same graphs `python/compile/model.py` lowers to
+//! HLO, implemented directly on host tensors.
+//!
+//! Conventions mirror the lowered graphs exactly:
+//! - activations are `[T, D]` row-major with `T = B·S` and token `t`
+//!   at row `b·S + s`; the head layout inside `D` is `h·head_dim + j`
+//!   (a free reinterpretation of jax's `[B,S,H,hd]` reshape);
+//! - the 7 *effective* linear weights (`W⊙M`, `W`, or `W⊙M + s·A·B`
+//!   depending on the artifact) are computed by the caller — every
+//!   backward here returns dense gradients w.r.t. those effective
+//!   weights, which each artifact then chains through its own
+//!   parameterization (mask product, LoRA factors, identity);
+//! - RMSNorm ε and the RoPE frequency schedule match `kernels/ref.py`.
+//!
+//! Shapes are test/CI scale, so clarity beats blocking; `Tensor::matmul`
+//! is the only O(n³) primitive.
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+
+/// RMSNorm epsilon — matches `kernels/ref.py::rmsnorm`.
+pub const RMS_EPS: f32 = 1e-5;
+
+/// Model dimensions the reference kernels need (a subset of
+/// `ModelDims`, copied so this module stays manifest-agnostic).
+#[derive(Clone, Copy, Debug)]
+pub struct Dims {
+    pub batch: usize,
+    pub seq: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+}
+
+impl Dims {
+    pub fn tokens(&self) -> usize {
+        self.batch * self.seq
+    }
+}
+
+// ---------------------------------------------------------------------
+// elementwise
+// ---------------------------------------------------------------------
+
+fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+pub fn silu(z: f32) -> f32 {
+    z * sigmoid(z)
+}
+
+fn dsilu(z: f32) -> f32 {
+    let s = sigmoid(z);
+    s * (1.0 + z * (1.0 - s))
+}
+
+// ---------------------------------------------------------------------
+// RMSNorm
+// ---------------------------------------------------------------------
+
+/// `y[t,j] = x[t,j] · r[t] · g[j]`, `r = rsqrt(mean_j x² + ε)`.
+/// Returns `(y, r)`; `r` is the backward cache.
+pub fn rmsnorm_fwd(x: &Tensor, g: &[f32]) -> (Tensor, Vec<f32>) {
+    let (t, d) = (x.shape[0], x.shape[1]);
+    let mut y = Tensor::zeros(&[t, d]);
+    let mut rs = vec![0.0f32; t];
+    for i in 0..t {
+        let row = x.row(i);
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let r = 1.0 / (ms + RMS_EPS).sqrt();
+        rs[i] = r;
+        let out = y.row_mut(i);
+        for j in 0..d {
+            out[j] = row[j] * r * g[j];
+        }
+    }
+    (y, rs)
+}
+
+/// Gradients of `rmsnorm_fwd`: returns `(dx, dg)`.
+pub fn rmsnorm_bwd(x: &Tensor, g: &[f32], r: &[f32], dy: &Tensor)
+                   -> (Tensor, Vec<f32>) {
+    let (t, d) = (x.shape[0], x.shape[1]);
+    let mut dx = Tensor::zeros(&[t, d]);
+    let mut dg = vec![0.0f32; d];
+    for i in 0..t {
+        let xr = x.row(i);
+        let dyr = dy.row(i);
+        let ri = r[i];
+        let mut s = 0.0f32;
+        for j in 0..d {
+            dg[j] += dyr[j] * xr[j] * ri;
+            s += dyr[j] * g[j] * xr[j];
+        }
+        // through r: dr/dx_j = −x_j·r³/D
+        let c = s * ri * ri / d as f32;
+        let dxr = dx.row_mut(i);
+        for j in 0..d {
+            dxr[j] = ri * (dyr[j] * g[j] - xr[j] * c);
+        }
+    }
+    (dx, dg)
+}
+
+// ---------------------------------------------------------------------
+// RoPE
+// ---------------------------------------------------------------------
+
+/// Apply rotary embedding in place on a `[T, D]` activation in head
+/// layout. `sin_sign = 1.0` is the forward rotation; `-1.0` applies the
+/// transpose (= rotation by −θ), which is the reverse-mode adjoint.
+pub fn rope(x: &mut Tensor, dm: &Dims, sin_sign: f32) {
+    let (h, hd) = (dm.n_heads, dm.head_dim);
+    let half = hd / 2;
+    // the rotation angles depend only on (position, pair index): build
+    // the seq×half sin/cos table once instead of per (batch, head)
+    let table: Vec<(f32, f32)> = (0..dm.seq)
+        .flat_map(|s| {
+            (0..half).map(move |i| {
+                let freq = 10000f32.powf(-(i as f32) / half as f32);
+                let (sin, cos) = (s as f32 * freq).sin_cos();
+                (sin * sin_sign, cos)
+            })
+        })
+        .collect();
+    for b in 0..dm.batch {
+        for s in 0..dm.seq {
+            let row = x.row_mut(b * dm.seq + s);
+            for head in 0..h {
+                let off = head * hd;
+                for i in 0..half {
+                    let (sin, cos) = table[s * half + i];
+                    let a = row[off + i];
+                    let b2 = row[off + half + i];
+                    row[off + i] = a * cos - b2 * sin;
+                    row[off + half + i] = a * sin + b2 * cos;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// causal attention
+// ---------------------------------------------------------------------
+
+/// Softmax probabilities cached by the forward pass: `[B, H, S, S]`
+/// row-major, strictly lower-triangular-plus-diagonal (causal).
+pub struct AttnCache {
+    pub probs: Vec<f32>,
+}
+
+/// Causal softmax attention over post-RoPE `q, k, v` (all `[T, D]` in
+/// head layout). Returns the context in the same layout plus the cache.
+pub fn attention_fwd(q: &Tensor, k: &Tensor, v: &Tensor, dm: &Dims)
+                     -> (Tensor, AttnCache) {
+    let (bn, s, h, hd) = (dm.batch, dm.seq, dm.n_heads, dm.head_dim);
+    let d = h * hd;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut ctx = Tensor::zeros(&[bn * s, d]);
+    let mut probs = vec![0.0f32; bn * h * s * s];
+    let mut scores = vec![0.0f32; s];
+    for b in 0..bn {
+        for head in 0..h {
+            let off = head * hd;
+            for si in 0..s {
+                let ti = b * s + si;
+                let qrow = &q.data[ti * d + off..ti * d + off + hd];
+                let mut maxs = f32::NEG_INFINITY;
+                for (tj, slot) in scores.iter_mut().enumerate().take(si + 1) {
+                    let krow =
+                        &k.data[(b * s + tj) * d + off..(b * s + tj) * d
+                                + off + hd];
+                    let sc: f32 = qrow
+                        .iter()
+                        .zip(krow)
+                        .map(|(a, b2)| a * b2)
+                        .sum::<f32>()
+                        * scale;
+                    *slot = sc;
+                    maxs = maxs.max(sc);
+                }
+                let mut denom = 0.0f32;
+                for slot in scores.iter_mut().take(si + 1) {
+                    *slot = (*slot - maxs).exp();
+                    denom += *slot;
+                }
+                let pbase = ((b * h + head) * s + si) * s;
+                let crow = &mut ctx.data[ti * d + off..ti * d + off + hd];
+                for (tj, &e) in scores.iter().enumerate().take(si + 1) {
+                    let p = e / denom;
+                    probs[pbase + tj] = p;
+                    let vrow =
+                        &v.data[(b * s + tj) * d + off..(b * s + tj) * d
+                                + off + hd];
+                    for j in 0..hd {
+                        crow[j] += p * vrow[j];
+                    }
+                }
+            }
+        }
+    }
+    (ctx, AttnCache { probs })
+}
+
+/// Gradients of `attention_fwd` given `dctx`: returns `(dq, dk, dv)`,
+/// all `[T, D]` in head layout, w.r.t. the *post-RoPE* q/k.
+pub fn attention_bwd(q: &Tensor, k: &Tensor, v: &Tensor, cache: &AttnCache,
+                     dctx: &Tensor, dm: &Dims) -> (Tensor, Tensor, Tensor) {
+    let (bn, s, h, hd) = (dm.batch, dm.seq, dm.n_heads, dm.head_dim);
+    let d = h * hd;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut dq = Tensor::zeros(&[bn * s, d]);
+    let mut dk = Tensor::zeros(&[bn * s, d]);
+    let mut dv = Tensor::zeros(&[bn * s, d]);
+    let mut dp = vec![0.0f32; s];
+    for b in 0..bn {
+        for head in 0..h {
+            let off = head * hd;
+            for si in 0..s {
+                let ti = b * s + si;
+                let pbase = ((b * h + head) * s + si) * s;
+                let dcrow =
+                    &dctx.data[ti * d + off..ti * d + off + hd];
+                // dp[tj] = dctx·v[tj];  dv[tj] += p[tj]·dctx
+                let mut row_dot = 0.0f32;
+                for tj in 0..=si {
+                    let tjr = (b * s + tj) * d + off;
+                    let vrow = &v.data[tjr..tjr + hd];
+                    let mut acc = 0.0f32;
+                    for j in 0..hd {
+                        acc += dcrow[j] * vrow[j];
+                    }
+                    dp[tj] = acc;
+                    let p = cache.probs[pbase + tj];
+                    row_dot += acc * p;
+                    let dvrow = &mut dv.data[tjr..tjr + hd];
+                    for j in 0..hd {
+                        dvrow[j] += p * dcrow[j];
+                    }
+                }
+                // softmax backward: ds = p ⊙ (dp − Σ dp·p), then through
+                // the scaled q·k scores
+                for tj in 0..=si {
+                    let p = cache.probs[pbase + tj];
+                    let ds = p * (dp[tj] - row_dot) * scale;
+                    if ds == 0.0 {
+                        continue;
+                    }
+                    let tjr = (b * s + tj) * d + off;
+                    let tir = ti * d + off;
+                    for j in 0..hd {
+                        dq.data[tir + j] += ds * k.data[tjr + j];
+                        dk.data[tjr + j] += ds * q.data[tir + j];
+                    }
+                }
+            }
+        }
+    }
+    (dq, dk, dv)
+}
+
+// ---------------------------------------------------------------------
+// transformer block
+// ---------------------------------------------------------------------
+
+/// Every intermediate the block backward needs, plus the output `y`.
+pub struct BlockCache {
+    pub x: Tensor,
+    pub xn: Tensor,
+    pub r1: Vec<f32>,
+    /// Post-RoPE projections, `[T, D]` head layout.
+    pub q: Tensor,
+    pub k: Tensor,
+    pub v: Tensor,
+    pub attn: AttnCache,
+    pub ctx: Tensor,
+    pub xa: Tensor,
+    pub hn: Tensor,
+    pub r2: Vec<f32>,
+    pub gate: Tensor,
+    pub up: Tensor,
+    pub hmid: Tensor,
+    pub y: Tensor,
+}
+
+/// One transformer block forward (RMSNorm → RoPE attention → residual,
+/// RMSNorm → SwiGLU → residual). `eff[0..7]` are the effective linear
+/// weights (canonical order wq wk wv wo w_gate w_up w_down); `g1`/`g2`
+/// the norm gains; `x` is `[T, D]`.
+pub fn block_fwd(dm: &Dims, eff: &[Tensor], g1: &[f32], g2: &[f32],
+                 x: &Tensor) -> Result<BlockCache> {
+    let (xn, r1) = rmsnorm_fwd(x, g1);
+    let mut q = xn.matmul(&eff[0])?;
+    let mut k = xn.matmul(&eff[1])?;
+    let v = xn.matmul(&eff[2])?;
+    rope(&mut q, dm, 1.0);
+    rope(&mut k, dm, 1.0);
+    let (ctx, attn) = attention_fwd(&q, &k, &v, dm);
+    let attn_out = ctx.matmul(&eff[3])?;
+    let xa = x.add(&attn_out);
+    let (hn, r2) = rmsnorm_fwd(&xa, g2);
+    let gate = hn.matmul(&eff[4])?;
+    let up = hn.matmul(&eff[5])?;
+    let hmid = gate.zip(&up, |g, u| silu(g) * u);
+    let down = hmid.matmul(&eff[6])?;
+    let y = xa.add(&down);
+    Ok(BlockCache {
+        x: x.clone(),
+        xn,
+        r1,
+        q,
+        k,
+        v,
+        attn,
+        ctx,
+        xa,
+        hn,
+        r2,
+        gate,
+        up,
+        hmid,
+        y,
+    })
+}
+
+/// Reverse-mode gradients of one block.
+pub struct BlockGrads {
+    /// Dense gradients w.r.t. the 7 *effective* linear weights.
+    pub d_eff: Vec<Tensor>,
+    pub dg1: Vec<f32>,
+    pub dg2: Vec<f32>,
+    /// Gradient w.r.t. the block input (chains across layers).
+    pub dx: Tensor,
+}
+
+pub fn block_bwd(dm: &Dims, eff: &[Tensor], g1: &[f32], g2: &[f32],
+                 c: &BlockCache, dy: &Tensor) -> Result<BlockGrads> {
+    // ---- MLP sub-block (y = xa + hmid @ w_down) ----
+    let d_w_down = c.hmid.transpose2()?.matmul(dy)?;
+    let dhmid = dy.matmul(&eff[6].transpose2()?)?;
+    // hmid = silu(gate) ⊙ up
+    let mut dgate = Tensor::zeros(&c.gate.shape);
+    let mut dup = Tensor::zeros(&c.up.shape);
+    for i in 0..dhmid.data.len() {
+        let dh = dhmid.data[i];
+        dgate.data[i] = dh * c.up.data[i] * dsilu(c.gate.data[i]);
+        dup.data[i] = dh * silu(c.gate.data[i]);
+    }
+    let d_w_gate = c.hn.transpose2()?.matmul(&dgate)?;
+    let d_w_up = c.hn.transpose2()?.matmul(&dup)?;
+    let dhn = dgate
+        .matmul(&eff[4].transpose2()?)?
+        .add(&dup.matmul(&eff[5].transpose2()?)?);
+    let (dxa_norm, dg2) = rmsnorm_bwd(&c.xa, g2, &c.r2, &dhn);
+    let dxa = dy.add(&dxa_norm);
+
+    // ---- attention sub-block (xa = x + ctx @ w_o) ----
+    let d_w_o = c.ctx.transpose2()?.matmul(&dxa)?;
+    let dctx = dxa.matmul(&eff[3].transpose2()?)?;
+    let (mut dq, mut dk, dv) =
+        attention_bwd(&c.q, &c.k, &c.v, &c.attn, &dctx, dm);
+    // RoPE adjoint (rotation transpose) back to the pre-RoPE projections
+    rope(&mut dq, dm, -1.0);
+    rope(&mut dk, dm, -1.0);
+    let d_w_q = c.xn.transpose2()?.matmul(&dq)?;
+    let d_w_k = c.xn.transpose2()?.matmul(&dk)?;
+    let d_w_v = c.xn.transpose2()?.matmul(&dv)?;
+    let dxn = dq
+        .matmul(&eff[0].transpose2()?)?
+        .add(&dk.matmul(&eff[1].transpose2()?)?)
+        .add(&dv.matmul(&eff[2].transpose2()?)?);
+    let (dx_norm, dg1) = rmsnorm_bwd(&c.x, g1, &c.r1, &dxn);
+    let dx = dxa.add(&dx_norm);
+    Ok(BlockGrads {
+        d_eff: vec![d_w_q, d_w_k, d_w_v, d_w_o, d_w_gate, d_w_up, d_w_down],
+        dg1,
+        dg2,
+        dx,
+    })
+}
+
+// ---------------------------------------------------------------------
+// embedding + LM head
+// ---------------------------------------------------------------------
+
+/// `tokens → x0 [T, D]` (row gather; out-of-range tokens clamp, matching
+/// `jnp.take`'s jit-mode clipping).
+pub fn embed_fwd(embed: &Tensor, tokens: &[i32], vocab: usize,
+                 d_model: usize) -> Tensor {
+    let mut out = Tensor::zeros(&[tokens.len(), d_model]);
+    for (i, &tok) in tokens.iter().enumerate() {
+        let t = (tok.max(0) as usize).min(vocab - 1);
+        out.row_mut(i).copy_from_slice(embed.row(t));
+    }
+    out
+}
+
+/// Scatter-add of `dx0` rows back onto the embedding table.
+pub fn embed_bwd(vocab: usize, d_model: usize, tokens: &[i32],
+                 dx0: &Tensor) -> Tensor {
+    let mut de = Tensor::zeros(&[vocab, d_model]);
+    for (i, &tok) in tokens.iter().enumerate() {
+        let t = (tok.max(0) as usize).min(vocab - 1);
+        let src = dx0.row(i);
+        let dst = de.row_mut(t);
+        for j in 0..d_model {
+            dst[j] += src[j];
+        }
+    }
+    de
+}
+
+/// Forward cache of the LM head (final norm → logits → next-token NLL).
+pub struct HeadCache {
+    pub xn: Tensor,
+    pub r: Vec<f32>,
+    /// Softmax of every logit row, `[T, V]` (rows at `s = S−1` are
+    /// computed but carry no loss).
+    pub probs: Tensor,
+    pub nll_sum: f32,
+    /// `B·(S−1)` as f32 — the unweighted target-position count.
+    pub count: f32,
+}
+
+/// Head forward: per position `s < S−1`, NLL of predicting
+/// `tokens[b, s+1]` from `x[b, s]`.
+pub fn head_fwd(dm: &Dims, g_norm: &[f32], head: &Tensor, x: &Tensor,
+                tokens: &[i32]) -> Result<HeadCache> {
+    let (xn, r) = rmsnorm_fwd(x, g_norm);
+    let logits = xn.matmul(head)?;
+    let v = dm.vocab;
+    let mut probs = Tensor::zeros(&[dm.tokens(), v]);
+    let mut nll_sum = 0.0f64;
+    for b in 0..dm.batch {
+        for s in 0..dm.seq {
+            let ti = b * dm.seq + s;
+            let row = logits.row(ti);
+            let maxv =
+                row.iter().fold(f32::NEG_INFINITY, |a, &x2| a.max(x2));
+            let mut denom = 0.0f32;
+            let prow = probs.row_mut(ti);
+            for j in 0..v {
+                prow[j] = (row[j] - maxv).exp();
+                denom += prow[j];
+            }
+            for p in prow.iter_mut() {
+                *p /= denom;
+            }
+            if s + 1 < dm.seq {
+                let tgt = (tokens[b * dm.seq + s + 1].max(0) as usize)
+                    .min(v - 1);
+                let logp = row[tgt] - maxv - denom.ln();
+                nll_sum -= logp as f64;
+            }
+        }
+    }
+    Ok(HeadCache {
+        xn,
+        r,
+        probs,
+        nll_sum: nll_sum as f32,
+        count: (dm.batch * (dm.seq - 1)) as f32,
+    })
+}
+
+/// Gradients of `loss = nll_sum / count` through the head:
+/// returns `(dx, dg_norm, dhead)`.
+pub fn head_bwd(dm: &Dims, g_norm: &[f32], head: &Tensor, x: &Tensor,
+                tokens: &[i32], c: &HeadCache)
+                -> Result<(Tensor, Vec<f32>, Tensor)> {
+    let v = dm.vocab;
+    let inv = 1.0 / c.count;
+    let mut dlogits = Tensor::zeros(&[dm.tokens(), v]);
+    for b in 0..dm.batch {
+        for s in 0..dm.seq - 1 {
+            let ti = b * dm.seq + s;
+            let tgt =
+                (tokens[b * dm.seq + s + 1].max(0) as usize).min(v - 1);
+            let prow = c.probs.row(ti);
+            let drow = dlogits.row_mut(ti);
+            for j in 0..v {
+                drow[j] = prow[j] * inv;
+            }
+            drow[tgt] -= inv;
+        }
+    }
+    let dhead = c.xn.transpose2()?.matmul(&dlogits)?;
+    let dxn = dlogits.matmul(&head.transpose2()?)?;
+    let (dx, dg) = rmsnorm_bwd(x, g_norm, &c.r, &dxn);
+    Ok((dx, dg, dhead))
+}
+
+/// Weighted per-sequence NLL (`head_seq_nll` artifact): returns
+/// `(nll[B], wsum[B])` where `nll[b] = Σ_{s<S−1} w[b,s+1]·nll_{b,s}` and
+/// `wsum[b] = Σ_{s≥1} w[b,s]`.
+pub fn head_seq_nll(dm: &Dims, g_norm: &[f32], head: &Tensor, x: &Tensor,
+                    tokens: &[i32], weights: &[f32])
+                    -> Result<(Vec<f32>, Vec<f32>)> {
+    let (xn, _r) = rmsnorm_fwd(x, g_norm);
+    let logits = xn.matmul(head)?;
+    let v = dm.vocab;
+    let mut nll = vec![0.0f32; dm.batch];
+    let mut wsum = vec![0.0f32; dm.batch];
+    for b in 0..dm.batch {
+        for s in 0..dm.seq - 1 {
+            let ti = b * dm.seq + s;
+            let row = logits.row(ti);
+            let maxv =
+                row.iter().fold(f32::NEG_INFINITY, |a, &x2| a.max(x2));
+            let denom: f32 =
+                row.iter().map(|&l| (l - maxv).exp()).sum();
+            let tgt = (tokens[b * dm.seq + s + 1].max(0) as usize)
+                .min(v - 1);
+            let logp = row[tgt] - maxv - denom.ln();
+            let w = weights[b * dm.seq + s + 1];
+            nll[b] += -logp * w;
+            wsum[b] += w;
+        }
+    }
+    Ok((nll, wsum))
+}
+
+// ---------------------------------------------------------------------
+// Adam (bias-corrected, matching model.py::adam_update)
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+pub struct AdamHyper {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+/// One bias-corrected Adam step on a single tensor; `t` is the 1-based
+/// step counter as f32 (exactly the scalar the artifacts take).
+pub fn adam(p: &Tensor, g: &Tensor, m: &Tensor, v: &Tensor, t: f32,
+            lr: f32, h: AdamHyper) -> (Tensor, Tensor, Tensor) {
+    let mut pn = p.clone();
+    let mut mn = m.clone();
+    let mut vn = v.clone();
+    let bc1 = 1.0 - h.beta1.powf(t);
+    let bc2 = 1.0 - h.beta2.powf(t);
+    for i in 0..p.data.len() {
+        let gi = g.data[i];
+        let mi = h.beta1 * m.data[i] + (1.0 - h.beta1) * gi;
+        let vi = h.beta2 * v.data[i] + (1.0 - h.beta2) * gi * gi;
+        mn.data[i] = mi;
+        vn.data[i] = vi;
+        let m_hat = mi / bc1;
+        let v_hat = vi / bc2;
+        pn.data[i] = p.data[i] - lr * m_hat / (v_hat.sqrt() + h.eps);
+    }
+    (pn, mn, vn)
+}
+
+// ---------------------------------------------------------------------
+// activation statistics (block_stats artifact)
+// ---------------------------------------------------------------------
+
+/// Column sum-of-squares and column sum over the rows of `a` (`[T, Dg]`).
+pub fn col_stats(a: &Tensor) -> (Vec<f32>, Vec<f32>) {
+    let (t, d) = (a.shape[0], a.shape[1]);
+    let mut sq = vec![0.0f32; d];
+    let mut su = vec![0.0f32; d];
+    for i in 0..t {
+        let row = a.row(i);
+        for j in 0..d {
+            sq[j] += row[j] * row[j];
+            su[j] += row[j];
+        }
+    }
+    (sq, su)
+}
+
+/// Gram matrix `AᵀA` of `[T, Dg]`.
+pub fn gram(a: &Tensor) -> Result<Tensor> {
+    a.transpose2()?.matmul(a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn dims() -> Dims {
+        Dims { batch: 2, seq: 4, d_model: 8, n_heads: 2, head_dim: 4,
+               d_ff: 12, vocab: 10 }
+    }
+
+    fn randt(shape: &[usize], rng: &mut Pcg64) -> Tensor {
+        Tensor::randn(shape, 0.5, rng)
+    }
+
+    fn block_weights(dm: &Dims, rng: &mut Pcg64)
+                     -> (Vec<Tensor>, Vec<f32>, Vec<f32>) {
+        let (d, f) = (dm.d_model, dm.d_ff);
+        let eff = vec![
+            randt(&[d, d], rng), randt(&[d, d], rng), randt(&[d, d], rng),
+            randt(&[d, d], rng), randt(&[d, f], rng), randt(&[d, f], rng),
+            randt(&[f, d], rng),
+        ];
+        let g1: Vec<f32> = (0..d).map(|_| 1.0 + 0.1 * rng.next_normal())
+            .collect();
+        let g2: Vec<f32> = (0..d).map(|_| 1.0 + 0.1 * rng.next_normal())
+            .collect();
+        (eff, g1, g2)
+    }
+
+    fn recon_loss(dm: &Dims, eff: &[Tensor], g1: &[f32], g2: &[f32],
+                  x: &Tensor, target: &Tensor) -> f32 {
+        let c = block_fwd(dm, eff, g1, g2, x).unwrap();
+        let diff = c.y.sub(target);
+        (diff.sq_sum() / diff.numel() as f64) as f32
+    }
+
+    /// Central-difference check of the full block backward — this is the
+    /// correctness anchor for every train-step artifact the reference
+    /// backend interprets.
+    #[test]
+    fn block_gradients_match_finite_differences() {
+        let dm = dims();
+        let mut rng = Pcg64::seeded(42);
+        let (eff, g1, g2) = block_weights(&dm, &mut rng);
+        let x = randt(&[dm.tokens(), dm.d_model], &mut rng);
+        let target = randt(&[dm.tokens(), dm.d_model], &mut rng);
+
+        let c = block_fwd(&dm, &eff, &g1, &g2, &x).unwrap();
+        let n = c.y.numel() as f32;
+        let dy = c.y.sub(&target).scale(2.0 / n);
+        let g = block_bwd(&dm, &eff, &g1, &g2, &c, &dy).unwrap();
+
+        let h = 1e-2f32;
+        let mut rng2 = Pcg64::seeded(7);
+        // a few random coordinates of every weight, both norm gains, and x
+        for wi in 0..7 {
+            for _ in 0..4 {
+                let i = rng2.below(eff[wi].numel() as u64) as usize;
+                let mut ep = eff.to_vec();
+                ep[wi].data[i] += h;
+                let mut em = eff.to_vec();
+                em[wi].data[i] -= h;
+                let num = (recon_loss(&dm, &ep, &g1, &g2, &x, &target)
+                    - recon_loss(&dm, &em, &g1, &g2, &x, &target))
+                    / (2.0 * h);
+                let ana = g.d_eff[wi].data[i];
+                assert!((num - ana).abs() < 2e-3 + 0.05 * ana.abs(),
+                        "w{wi}[{i}]: numeric {num} vs analytic {ana}");
+            }
+        }
+        for (gain, dgain, tag) in [(&g1, &g.dg1, "g1"), (&g2, &g.dg2, "g2")] {
+            for _ in 0..4 {
+                let i = rng2.below(gain.len() as u64) as usize;
+                let mut gp = gain.to_vec();
+                gp[i] += h;
+                let mut gm = gain.to_vec();
+                gm[i] -= h;
+                let (num, ana) = if tag == "g1" {
+                    ((recon_loss(&dm, &eff, &gp, &g2, &x, &target)
+                      - recon_loss(&dm, &eff, &gm, &g2, &x, &target))
+                     / (2.0 * h),
+                     dgain[i])
+                } else {
+                    ((recon_loss(&dm, &eff, &g1, &gp, &x, &target)
+                      - recon_loss(&dm, &eff, &g1, &gm, &x, &target))
+                     / (2.0 * h),
+                     dgain[i])
+                };
+                assert!((num - ana).abs() < 2e-3 + 0.05 * ana.abs(),
+                        "{tag}[{i}]: numeric {num} vs analytic {ana}");
+            }
+        }
+        for _ in 0..6 {
+            let i = rng2.below(x.numel() as u64) as usize;
+            let mut xp = x.clone();
+            xp.data[i] += h;
+            let mut xm = x.clone();
+            xm.data[i] -= h;
+            let num = (recon_loss(&dm, &eff, &g1, &g2, &xp, &target)
+                - recon_loss(&dm, &eff, &g1, &g2, &xm, &target))
+                / (2.0 * h);
+            let ana = g.dx.data[i];
+            assert!((num - ana).abs() < 2e-3 + 0.05 * ana.abs(),
+                    "x[{i}]: numeric {num} vs analytic {ana}");
+        }
+    }
+
+    #[test]
+    fn head_gradients_match_finite_differences() {
+        let dm = dims();
+        let mut rng = Pcg64::seeded(9);
+        let g_norm: Vec<f32> =
+            (0..dm.d_model).map(|_| 1.0 + 0.1 * rng.next_normal()).collect();
+        let head = randt(&[dm.d_model, dm.vocab], &mut rng);
+        let x = randt(&[dm.tokens(), dm.d_model], &mut rng);
+        let tokens: Vec<i32> = (0..dm.tokens())
+            .map(|_| rng.below(dm.vocab as u64) as i32)
+            .collect();
+
+        let c = head_fwd(&dm, &g_norm, &head, &x, &tokens).unwrap();
+        let (dx, dg, dhead) =
+            head_bwd(&dm, &g_norm, &head, &x, &tokens, &c).unwrap();
+        let loss = |hd: &Tensor, gn: &[f32], xx: &Tensor| -> f32 {
+            let c = head_fwd(&dm, gn, hd, xx, &tokens).unwrap();
+            c.nll_sum / c.count
+        };
+        let h = 1e-2f32;
+        let mut rng2 = Pcg64::seeded(11);
+        for _ in 0..6 {
+            let i = rng2.below(head.numel() as u64) as usize;
+            let mut hp = head.clone();
+            hp.data[i] += h;
+            let mut hm = head.clone();
+            hm.data[i] -= h;
+            let num =
+                (loss(&hp, &g_norm, &x) - loss(&hm, &g_norm, &x)) / (2.0 * h);
+            assert!((num - dhead.data[i]).abs()
+                        < 2e-3 + 0.05 * dhead.data[i].abs(),
+                    "head[{i}]: {num} vs {}", dhead.data[i]);
+        }
+        for _ in 0..4 {
+            let i = rng2.below(dm.d_model as u64) as usize;
+            let mut gp = g_norm.clone();
+            gp[i] += h;
+            let mut gm = g_norm.clone();
+            gm[i] -= h;
+            let num = (loss(&head, &gp, &x) - loss(&head, &gm, &x))
+                / (2.0 * h);
+            assert!((num - dg[i]).abs() < 2e-3 + 0.05 * dg[i].abs(),
+                    "g_norm[{i}]: {num} vs {}", dg[i]);
+        }
+        for _ in 0..6 {
+            let i = rng2.below(x.numel() as u64) as usize;
+            let mut xp = x.clone();
+            xp.data[i] += h;
+            let mut xm = x.clone();
+            xm.data[i] -= h;
+            let num = (loss(&head, &g_norm, &xp) - loss(&head, &g_norm, &xm))
+                / (2.0 * h);
+            assert!((num - dx.data[i]).abs() < 2e-3 + 0.05 * dx.data[i].abs(),
+                    "x[{i}]: {num} vs {}", dx.data[i]);
+        }
+    }
+
+    #[test]
+    fn rope_inverse_is_adjoint() {
+        let dm = dims();
+        let mut rng = Pcg64::seeded(3);
+        let x = randt(&[dm.tokens(), dm.d_model], &mut rng);
+        let mut y = x.clone();
+        rope(&mut y, &dm, 1.0);
+        rope(&mut y, &dm, -1.0);
+        assert!(y.sub(&x).max_abs() < 1e-5, "rope(-θ) must invert rope(θ)");
+    }
+
+    #[test]
+    fn attention_rows_are_causal_and_normalized() {
+        let dm = dims();
+        let mut rng = Pcg64::seeded(4);
+        let q = randt(&[dm.tokens(), dm.d_model], &mut rng);
+        let k = randt(&[dm.tokens(), dm.d_model], &mut rng);
+        let v = randt(&[dm.tokens(), dm.d_model], &mut rng);
+        let (_, cache) = attention_fwd(&q, &k, &v, &dm);
+        let s = dm.seq;
+        for b in 0..dm.batch {
+            for h in 0..dm.n_heads {
+                for si in 0..s {
+                    let base = ((b * dm.n_heads + h) * s + si) * s;
+                    let row = &cache.probs[base..base + s];
+                    let sum: f32 = row[..=si].iter().sum();
+                    assert!((sum - 1.0).abs() < 1e-5, "softmax sum {sum}");
+                    assert!(row[si + 1..].iter().all(|&p| p == 0.0),
+                            "future positions must carry zero probability");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn adam_bias_correction_first_step() {
+        let p = Tensor::from_vec(&[2], vec![1.0, -1.0]);
+        let g = Tensor::from_vec(&[2], vec![0.5, 0.5]);
+        let m = Tensor::zeros(&[2]);
+        let v = Tensor::zeros(&[2]);
+        let h = AdamHyper { beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+        let (pn, mn, vn) = adam(&p, &g, &m, &v, 1.0, 0.1, h);
+        // with zero state and bias correction, step 1 moves by ≈ lr·sign(g)
+        assert!((pn.data[0] - (1.0 - 0.1)).abs() < 1e-3, "{}", pn.data[0]);
+        assert!((mn.data[0] - 0.05).abs() < 1e-6);
+        assert!((vn.data[0] - 0.00025).abs() < 1e-7);
+    }
+
+    #[test]
+    fn embed_gather_scatter_roundtrip() {
+        let embed = Tensor::from_vec(&[3, 2],
+                                     vec![1., 2., 3., 4., 5., 6.]);
+        let tokens = [2i32, 0, 2];
+        let x = embed_fwd(&embed, &tokens, 3, 2);
+        assert_eq!(x.row(0), &[5., 6.]);
+        assert_eq!(x.row(1), &[1., 2.]);
+        let de = embed_bwd(3, 2, &tokens, &Tensor::ones(&[3, 2]));
+        assert_eq!(de.row(2), &[2., 2.], "token 2 hit twice");
+        assert_eq!(de.row(1), &[0., 0.]);
+    }
+}

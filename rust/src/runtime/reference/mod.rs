@@ -1,0 +1,517 @@
+//! The reference backend: a pure-Rust interpreter of the manifest's
+//! artifact set.
+//!
+//! Implements every graph `python/compile/aot.py` lowers — embed/head
+//! forward, block forward, the block/LM/LoRA Adam train steps (with
+//! hand-derived reverse-mode gradients in [`math`]), mask-tuning
+//! gradients and pruning statistics — numerically on host tensors,
+//! driven entirely by the manifest's dims and slot specs. No HLO files,
+//! PJRT client, or Python toolchain are touched, which is what lets the
+//! artifact-bound integration suites run in plain `cargo test` (see
+//! `model::synth` for the matching manifest generator) and what the
+//! PJRT↔reference differential test pins against the compiled graphs.
+//!
+//! `*_pallas` artifact variants alias their base graph: the Pallas/XLA
+//! split is an implementation detail of the compiled backend, not of the
+//! math.
+
+pub mod math;
+
+use anyhow::{bail, Context, Result};
+
+use self::math::{AdamHyper, Dims};
+use super::backend::{Backend, BackendKind};
+use super::buffer::DeviceBuffer;
+use crate::model::manifest::{ArtifactSpec, Manifest, N_BLOCK_LINEARS,
+                             N_BLOCK_PARAMS};
+use crate::tensor::Tensor;
+
+/// Artifact base names the interpreter implements (everything aot.py
+/// emits; `_pallas` suffixes alias the base entry).
+const SUPPORTED: &[&str] = &[
+    "embed_fwd", "block_fwd", "block_ft_step", "block_grad", "block_stats",
+    "head_loss", "head_seq_nll", "lm_loss", "lm_train_step",
+    "lora_train_step",
+];
+
+fn base_name(name: &str) -> &str {
+    name.strip_suffix("_pallas").unwrap_or(name)
+}
+
+pub struct ReferenceBackend;
+
+impl ReferenceBackend {
+    pub fn new() -> ReferenceBackend {
+        ReferenceBackend
+    }
+}
+
+impl Default for ReferenceBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Reference
+    }
+
+    fn ensure_ready(&self, manifest: &Manifest, name: &str) -> Result<()> {
+        manifest.artifact(name)?;
+        if !SUPPORTED.contains(&base_name(name)) {
+            bail!("reference backend does not implement artifact '{name}' \
+                   (supported: {})", SUPPORTED.join(", "));
+        }
+        Ok(())
+    }
+
+    fn execute(&self, manifest: &Manifest, name: &str,
+               inputs: &[DeviceBuffer]) -> Result<Vec<DeviceBuffer>> {
+        self.ensure_ready(manifest, name)?;
+        let spec = manifest.artifact(name)?;
+        if inputs.len() != spec.inputs.len() {
+            bail!("artifact {name}: got {} inputs, manifest says {}",
+                  inputs.len(), spec.inputs.len());
+        }
+        let interp = Interp::new(manifest)?;
+        let outs = match base_name(name) {
+            "embed_fwd" => interp.embed_fwd(inputs),
+            "block_fwd" => interp.block_fwd(inputs),
+            "block_ft_step" => interp.block_ft_step(inputs),
+            "block_grad" => interp.block_grad(inputs),
+            "block_stats" => interp.block_stats(inputs),
+            "head_loss" => interp.head_loss(inputs),
+            "head_seq_nll" => interp.head_seq_nll(inputs),
+            "lm_loss" => interp.lm_loss(inputs),
+            "lm_train_step" => interp.lm_train_step(inputs),
+            "lora_train_step" => interp.lora_train_step(inputs),
+            other => bail!("unimplemented artifact '{other}' (bug: \
+                            ensure_ready admitted it)"),
+        }
+        .with_context(|| format!("reference-interpreting artifact {name}"))?;
+        wrap_outputs(name, spec, outs)
+    }
+}
+
+/// Tag the interpreter's flat f32 outputs with the manifest output specs.
+fn wrap_outputs(name: &str, spec: &ArtifactSpec, outs: Vec<Vec<f32>>)
+                -> Result<Vec<DeviceBuffer>> {
+    if outs.len() != spec.outputs.len() {
+        bail!("artifact {name}: interpreter produced {} outputs, manifest \
+               says {}", outs.len(), spec.outputs.len());
+    }
+    outs.into_iter()
+        .zip(&spec.outputs)
+        .map(|(data, os)| {
+            // the interpreter produces f32 everywhere; make that contract
+            // explicit instead of mislabeling a non-f32 output spec
+            if os.dtype != "f32" {
+                bail!("artifact {name} output '{}': reference backend only \
+                       produces f32, manifest says {}", os.name, os.dtype);
+            }
+            DeviceBuffer::from_host_f32(&os.shape, data)
+                .with_context(|| format!("artifact {name} output '{}'",
+                                         os.name))
+        })
+        .collect()
+}
+
+/// Per-execute interpreter state: the resolved dims plus helpers that
+/// decode the positional slot layout every artifact shares with aot.py.
+struct Interp {
+    dm: Dims,
+    n_layers: usize,
+    n_params: usize,
+    adam: AdamHyper,
+    lora_scale: f32,
+}
+
+impl Interp {
+    fn new(manifest: &Manifest) -> Result<Interp> {
+        let md = &manifest.dims;
+        if md.n_heads * md.head_dim != md.d_model {
+            bail!("reference backend: n_heads·head_dim = {}·{} ≠ d_model {}",
+                  md.n_heads, md.head_dim, md.d_model);
+        }
+        if md.head_dim % 2 != 0 {
+            bail!("reference backend: RoPE needs an even head_dim, got {}",
+                  md.head_dim);
+        }
+        if md.seq < 2 {
+            bail!("reference backend: next-token NLL needs seq ≥ 2");
+        }
+        Ok(Interp {
+            dm: Dims {
+                batch: md.batch,
+                seq: md.seq,
+                d_model: md.d_model,
+                n_heads: md.n_heads,
+                head_dim: md.head_dim,
+                d_ff: md.d_ff,
+                vocab: md.vocab,
+            },
+            n_layers: md.n_layers,
+            n_params: manifest.param_names.len(),
+            adam: AdamHyper { beta1: md.beta1, beta2: md.beta2,
+                              eps: md.eps },
+            lora_scale: md.lora_scale,
+        })
+    }
+
+    // ---- input decoding -------------------------------------------------
+
+    fn ten(&self, inputs: &[DeviceBuffer], i: usize) -> Result<Tensor> {
+        inputs[i].fetch()
+    }
+
+    /// Fetch a rank-3 `[B,S,D]` activation as the interpreter's `[T,D]`
+    /// layout (free: row-major reinterpretation).
+    fn act2d(&self, inputs: &[DeviceBuffer], i: usize) -> Result<Tensor> {
+        let t = inputs[i].fetch()?;
+        Ok(Tensor::from_vec(&[self.dm.tokens(), self.dm.d_model], t.data))
+    }
+
+    fn range(&self, inputs: &[DeviceBuffer], start: usize, n: usize)
+             -> Result<Vec<Tensor>> {
+        (start..start + n).map(|i| inputs[i].fetch()).collect()
+    }
+
+    /// Effective linears `W⊙M` from a (bp, mask) slot pair.
+    fn masked_eff(bp: &[Tensor], masks: &[Tensor]) -> Vec<Tensor> {
+        (0..N_BLOCK_LINEARS).map(|i| bp[i].mul(&masks[i])).collect()
+    }
+
+    fn recon_dy(y: &Tensor, target: &Tensor) -> (f32, Tensor) {
+        let n = y.numel() as f32;
+        let diff = y.sub(target);
+        let loss = (diff.sq_sum() / n as f64) as f32;
+        (loss, diff.scale(2.0 / n))
+    }
+
+    // ---- artifacts ------------------------------------------------------
+
+    /// `embed_fwd(embed, tokens) → x0`.
+    fn embed_fwd(&self, inputs: &[DeviceBuffer]) -> Result<Vec<Vec<f32>>> {
+        let embed = self.ten(inputs, 0)?;
+        let tokens = inputs[1].fetch_i32()?;
+        let x0 = math::embed_fwd(&embed, &tokens, self.dm.vocab,
+                                 self.dm.d_model);
+        Ok(vec![x0.data])
+    }
+
+    /// `block_fwd(bp×9, mask×7, x) → y`.
+    fn block_fwd(&self, inputs: &[DeviceBuffer]) -> Result<Vec<Vec<f32>>> {
+        let bp = self.range(inputs, 0, N_BLOCK_PARAMS)?;
+        let masks = self.range(inputs, N_BLOCK_PARAMS, N_BLOCK_LINEARS)?;
+        let x = self.act2d(inputs, N_BLOCK_PARAMS + N_BLOCK_LINEARS)?;
+        let eff = Self::masked_eff(&bp, &masks);
+        let cache = math::block_fwd(&self.dm, &eff, &bp[7].data,
+                                    &bp[8].data, &x)?;
+        Ok(vec![cache.y.data])
+    }
+
+    /// `block_ft_step(bp×9, mask×7, m×9, v×9, t, lr, x, target)
+    ///  → (bp×9, m×9, v×9, loss)` — one masked-gradient Adam step on the
+    /// block reconstruction loss (Alg. 1 inner step).
+    fn block_ft_step(&self, inputs: &[DeviceBuffer])
+                     -> Result<Vec<Vec<f32>>> {
+        let mut i = 0usize;
+        let bp = self.range(inputs, i, N_BLOCK_PARAMS)?;
+        i += N_BLOCK_PARAMS;
+        let masks = self.range(inputs, i, N_BLOCK_LINEARS)?;
+        i += N_BLOCK_LINEARS;
+        let m_st = self.range(inputs, i, N_BLOCK_PARAMS)?;
+        i += N_BLOCK_PARAMS;
+        let v_st = self.range(inputs, i, N_BLOCK_PARAMS)?;
+        i += N_BLOCK_PARAMS;
+        let t = inputs[i].fetch_scalar()?;
+        let lr = inputs[i + 1].fetch_scalar()?;
+        let x = self.act2d(inputs, i + 2)?;
+        let target = self.act2d(inputs, i + 3)?;
+
+        let eff = Self::masked_eff(&bp, &masks);
+        let cache = math::block_fwd(&self.dm, &eff, &bp[7].data,
+                                    &bp[8].data, &x)?;
+        let (loss, dy) = Self::recon_dy(&cache.y, &target);
+        let g = math::block_bwd(&self.dm, &eff, &bp[7].data, &bp[8].data,
+                                &cache, &dy)?;
+
+        let mut new_bp = Vec::with_capacity(N_BLOCK_PARAMS);
+        let mut new_m = Vec::with_capacity(N_BLOCK_PARAMS);
+        let mut new_v = Vec::with_capacity(N_BLOCK_PARAMS);
+        for j in 0..N_BLOCK_PARAMS {
+            // linears chain through W⊙M (and Alg. 1 masks the step), so
+            // only surviving weights move; norm gains get dense grads
+            let grad = if j < N_BLOCK_LINEARS {
+                g.d_eff[j].mul(&masks[j])
+            } else if j == N_BLOCK_LINEARS {
+                Tensor::from_vec(&bp[j].shape, g.dg1.clone())
+            } else {
+                Tensor::from_vec(&bp[j].shape, g.dg2.clone())
+            };
+            let (p, m, v) = math::adam(&bp[j], &grad, &m_st[j], &v_st[j], t,
+                                       lr, self.adam);
+            new_bp.push(p.data);
+            new_m.push(m.data);
+            new_v.push(v.data);
+        }
+        let mut outs = new_bp;
+        outs.extend(new_m);
+        outs.extend(new_v);
+        outs.push(vec![loss]);
+        Ok(outs)
+    }
+
+    /// `block_grad(bp×9, mask×7, x, target) → (loss, grad×7)` — the mask
+    /// tuner's *dense* gradient w.r.t. the effective weights W̄ = W⊙M.
+    fn block_grad(&self, inputs: &[DeviceBuffer]) -> Result<Vec<Vec<f32>>> {
+        let bp = self.range(inputs, 0, N_BLOCK_PARAMS)?;
+        let masks = self.range(inputs, N_BLOCK_PARAMS, N_BLOCK_LINEARS)?;
+        let x = self.act2d(inputs, N_BLOCK_PARAMS + N_BLOCK_LINEARS)?;
+        let target =
+            self.act2d(inputs, N_BLOCK_PARAMS + N_BLOCK_LINEARS + 1)?;
+        let eff = Self::masked_eff(&bp, &masks);
+        let cache = math::block_fwd(&self.dm, &eff, &bp[7].data,
+                                    &bp[8].data, &x)?;
+        let (loss, dy) = Self::recon_dy(&cache.y, &target);
+        let g = math::block_bwd(&self.dm, &eff, &bp[7].data, &bp[8].data,
+                                &cache, &dy)?;
+        let mut outs = vec![vec![loss]];
+        outs.extend(g.d_eff.into_iter().map(|t| t.data));
+        Ok(outs)
+    }
+
+    /// `block_stats(bp×9, mask×7, x) → (y, {colsumsq, colsum, gram} × 4
+    /// groups)` over ln1-out, attention context, ln2-out and the SwiGLU
+    /// hidden (the Wanda/SparseGPT/DSnoT/FLAP statistics).
+    fn block_stats(&self, inputs: &[DeviceBuffer]) -> Result<Vec<Vec<f32>>> {
+        let bp = self.range(inputs, 0, N_BLOCK_PARAMS)?;
+        let masks = self.range(inputs, N_BLOCK_PARAMS, N_BLOCK_LINEARS)?;
+        let x = self.act2d(inputs, N_BLOCK_PARAMS + N_BLOCK_LINEARS)?;
+        let eff = Self::masked_eff(&bp, &masks);
+        let c = math::block_fwd(&self.dm, &eff, &bp[7].data, &bp[8].data,
+                                &x)?;
+        let mut outs = vec![c.y.data.clone()];
+        for group in [&c.xn, &c.ctx, &c.hn, &c.hmid] {
+            let (sq, su) = math::col_stats(group);
+            outs.push(sq);
+            outs.push(su);
+            outs.push(math::gram(group)?.data);
+        }
+        Ok(outs)
+    }
+
+    /// `head_loss(g_norm, head, x, tokens) → (nll_sum, count)`.
+    fn head_loss(&self, inputs: &[DeviceBuffer]) -> Result<Vec<Vec<f32>>> {
+        let g_norm = self.ten(inputs, 0)?;
+        let head = self.ten(inputs, 1)?;
+        let x = self.act2d(inputs, 2)?;
+        let tokens = inputs[3].fetch_i32()?;
+        let c = math::head_fwd(&self.dm, &g_norm.data, &head, &x, &tokens)?;
+        Ok(vec![vec![c.nll_sum], vec![c.count]])
+    }
+
+    /// `head_seq_nll(g_norm, head, x, tokens, weights) → (nll[B], wsum[B])`.
+    fn head_seq_nll(&self, inputs: &[DeviceBuffer])
+                    -> Result<Vec<Vec<f32>>> {
+        let g_norm = self.ten(inputs, 0)?;
+        let head = self.ten(inputs, 1)?;
+        let x = self.act2d(inputs, 2)?;
+        let tokens = inputs[3].fetch_i32()?;
+        let weights = self.ten(inputs, 4)?;
+        let (nll, wsum) = math::head_seq_nll(&self.dm, &g_norm.data, &head,
+                                             &x, &tokens, &weights.data)?;
+        Ok(vec![nll, wsum])
+    }
+
+    /// Shared full-model forward: embed → blocks (given per-block
+    /// effective linears) → head. Returns the per-block caches and the
+    /// head cache.
+    #[allow(clippy::type_complexity)]
+    fn lm_forward(&self, params: &[Tensor], eff_blocks: &[Vec<Tensor>],
+                  tokens: &[i32])
+                  -> Result<(Vec<math::BlockCache>, math::HeadCache)> {
+        let mut x = math::embed_fwd(&params[0], tokens, self.dm.vocab,
+                                    self.dm.d_model);
+        let mut caches = Vec::with_capacity(self.n_layers);
+        for l in 0..self.n_layers {
+            let bp = &params[1 + l * N_BLOCK_PARAMS
+                             ..1 + (l + 1) * N_BLOCK_PARAMS];
+            let c = math::block_fwd(&self.dm, &eff_blocks[l], &bp[7].data,
+                                    &bp[8].data, &x)?;
+            x = c.y.clone();
+            caches.push(c);
+        }
+        let g_norm = &params[self.n_params - 2];
+        let head = &params[self.n_params - 1];
+        let hc = math::head_fwd(&self.dm, &g_norm.data, head, &x, tokens)?;
+        Ok((caches, hc))
+    }
+
+    /// `lm_loss(param×P, mask×7L, tokens) → nll` (mean next-token NLL).
+    fn lm_loss(&self, inputs: &[DeviceBuffer]) -> Result<Vec<Vec<f32>>> {
+        let params = self.range(inputs, 0, self.n_params)?;
+        let masks = self.range(inputs, self.n_params,
+                               N_BLOCK_LINEARS * self.n_layers)?;
+        let tokens = inputs[inputs.len() - 1].fetch_i32()?;
+        let eff_blocks: Vec<Vec<Tensor>> = (0..self.n_layers)
+            .map(|l| {
+                Self::masked_eff(
+                    &params[1 + l * N_BLOCK_PARAMS..],
+                    &masks[l * N_BLOCK_LINEARS..])
+            })
+            .collect();
+        let (_caches, hc) = self.lm_forward(&params, &eff_blocks, &tokens)?;
+        Ok(vec![vec![hc.nll_sum / hc.count]])
+    }
+
+    /// `lm_train_step(param×P, m×P, v×P, t, lr, tokens)
+    ///  → (param×P, m×P, v×P, loss)` — one dense full-model Adam step
+    /// (MiniLlama pretraining).
+    fn lm_train_step(&self, inputs: &[DeviceBuffer])
+                     -> Result<Vec<Vec<f32>>> {
+        let n_p = self.n_params;
+        let params = self.range(inputs, 0, n_p)?;
+        let m_st = self.range(inputs, n_p, n_p)?;
+        let v_st = self.range(inputs, 2 * n_p, n_p)?;
+        let t = inputs[3 * n_p].fetch_scalar()?;
+        let lr = inputs[3 * n_p + 1].fetch_scalar()?;
+        let tokens = inputs[3 * n_p + 2].fetch_i32()?;
+
+        // dense pretraining: effective weights are the weights themselves
+        let eff_blocks: Vec<Vec<Tensor>> = (0..self.n_layers)
+            .map(|l| {
+                params[1 + l * N_BLOCK_PARAMS..][..N_BLOCK_LINEARS].to_vec()
+            })
+            .collect();
+        let (caches, hc) = self.lm_forward(&params, &eff_blocks, &tokens)?;
+        let loss = hc.nll_sum / hc.count;
+
+        let g_norm = &params[n_p - 2];
+        let head = &params[n_p - 1];
+        let last_x = &caches[self.n_layers - 1].y;
+        let (mut dx, dg_norm, dhead) = math::head_bwd(
+            &self.dm, &g_norm.data, head, last_x, &tokens, &hc)?;
+
+        let mut grads: Vec<Option<Tensor>> = vec![None; n_p];
+        grads[n_p - 2] = Some(Tensor::from_vec(&g_norm.shape, dg_norm));
+        grads[n_p - 1] = Some(dhead);
+        for l in (0..self.n_layers).rev() {
+            let base = 1 + l * N_BLOCK_PARAMS;
+            let bp = &params[base..base + N_BLOCK_PARAMS];
+            let g = math::block_bwd(&self.dm, &eff_blocks[l], &bp[7].data,
+                                    &bp[8].data, &caches[l], &dx)?;
+            for (j, d) in g.d_eff.into_iter().enumerate() {
+                grads[base + j] = Some(d);
+            }
+            grads[base + 7] = Some(Tensor::from_vec(&bp[7].shape, g.dg1));
+            grads[base + 8] = Some(Tensor::from_vec(&bp[8].shape, g.dg2));
+            dx = g.dx;
+        }
+        grads[0] = Some(math::embed_bwd(self.dm.vocab, self.dm.d_model,
+                                        &tokens, &dx));
+
+        let mut new_p = Vec::with_capacity(n_p);
+        let mut new_m = Vec::with_capacity(n_p);
+        let mut new_v = Vec::with_capacity(n_p);
+        for j in 0..n_p {
+            let grad = grads[j].take().expect("every param has a gradient");
+            let (p, m, v) = math::adam(&params[j], &grad, &m_st[j],
+                                       &v_st[j], t, lr, self.adam);
+            new_p.push(p.data);
+            new_m.push(m.data);
+            new_v.push(v.data);
+        }
+        let mut outs = new_p;
+        outs.extend(new_m);
+        outs.extend(new_v);
+        outs.push(vec![loss]);
+        Ok(outs)
+    }
+
+    /// `lora_train_step(param×P, mask×7L, lora×14L, m×14L, v×14L, t, lr,
+    /// tokens) → (lora×14L, m×14L, v×14L, loss)` — Adam on the adapters
+    /// only (frozen sparse base), full-model LM loss.
+    fn lora_train_step(&self, inputs: &[DeviceBuffer])
+                       -> Result<Vec<Vec<f32>>> {
+        let n_p = self.n_params;
+        let n_am = N_BLOCK_LINEARS * self.n_layers;
+        let n_lora = 2 * N_BLOCK_LINEARS * self.n_layers;
+        let mut i = 0usize;
+        let params = self.range(inputs, i, n_p)?;
+        i += n_p;
+        let masks = self.range(inputs, i, n_am)?;
+        i += n_am;
+        let adapters = self.range(inputs, i, n_lora)?;
+        i += n_lora;
+        let m_st = self.range(inputs, i, n_lora)?;
+        i += n_lora;
+        let v_st = self.range(inputs, i, n_lora)?;
+        i += n_lora;
+        let t = inputs[i].fetch_scalar()?;
+        let lr = inputs[i + 1].fetch_scalar()?;
+        let tokens = inputs[i + 2].fetch_i32()?;
+
+        // W̄ = W⊙M + scale·(A·B) per linear
+        let mut eff_blocks: Vec<Vec<Tensor>> =
+            Vec::with_capacity(self.n_layers);
+        for l in 0..self.n_layers {
+            let bp = &params[1 + l * N_BLOCK_PARAMS..];
+            let ms = &masks[l * N_BLOCK_LINEARS..];
+            let mut eff = Vec::with_capacity(N_BLOCK_LINEARS);
+            for j in 0..N_BLOCK_LINEARS {
+                let ai = 2 * (l * N_BLOCK_LINEARS + j);
+                let delta = adapters[ai]
+                    .matmul(&adapters[ai + 1])?
+                    .scale(self.lora_scale);
+                eff.push(bp[j].mul(&ms[j]).add(&delta));
+            }
+            eff_blocks.push(eff);
+        }
+        let (caches, hc) = self.lm_forward(&params, &eff_blocks, &tokens)?;
+        let loss = hc.nll_sum / hc.count;
+
+        let g_norm = &params[n_p - 2];
+        let head = &params[n_p - 1];
+        let last_x = &caches[self.n_layers - 1].y;
+        let (mut dx, _dg_norm, _dhead) = math::head_bwd(
+            &self.dm, &g_norm.data, head, last_x, &tokens, &hc)?;
+
+        let mut dadapters: Vec<Option<Tensor>> = vec![None; n_lora];
+        for l in (0..self.n_layers).rev() {
+            let base = 1 + l * N_BLOCK_PARAMS;
+            let bp = &params[base..base + N_BLOCK_PARAMS];
+            let g = math::block_bwd(&self.dm, &eff_blocks[l], &bp[7].data,
+                                    &bp[8].data, &caches[l], &dx)?;
+            for (j, d_eff) in g.d_eff.into_iter().enumerate() {
+                let ai = 2 * (l * N_BLOCK_LINEARS + j);
+                let a = &adapters[ai];
+                let b = &adapters[ai + 1];
+                // eff = … + s·A·B ⇒ dA = s·dW̄·Bᵀ, dB = s·Aᵀ·dW̄
+                dadapters[ai] = Some(
+                    d_eff.matmul(&b.transpose2()?)?.scale(self.lora_scale));
+                dadapters[ai + 1] = Some(
+                    a.transpose2()?.matmul(&d_eff)?.scale(self.lora_scale));
+            }
+            dx = g.dx;
+        }
+
+        let mut new_a = Vec::with_capacity(n_lora);
+        let mut new_m = Vec::with_capacity(n_lora);
+        let mut new_v = Vec::with_capacity(n_lora);
+        for j in 0..n_lora {
+            let grad = dadapters[j].take().expect("every adapter has a grad");
+            let (p, m, v) = math::adam(&adapters[j], &grad, &m_st[j],
+                                       &v_st[j], t, lr, self.adam);
+            new_a.push(p.data);
+            new_m.push(m.data);
+            new_v.push(v.data);
+        }
+        let mut outs = new_a;
+        outs.extend(new_m);
+        outs.extend(new_v);
+        outs.push(vec![loss]);
+        Ok(outs)
+    }
+}

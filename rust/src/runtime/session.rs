@@ -1,18 +1,28 @@
 //! Manifest-driven execution session.
 //!
-//! A `Session` owns the PJRT client, the artifact manifest, and a lazy
-//! executable cache. Callers do not invoke artifacts directly: they obtain
-//! a typed [`Plan`] per artifact via [`Session::plan`], bind inputs by
-//! manifest slot name (validated at bind time — shape bugs surface there,
-//! not as PJRT aborts), and execute with outputs staying device-resident
-//! until explicitly fetched. See DESIGN.md §Runtime for the residency
-//! model and the before/after perf note.
+//! A `Session` owns a [`Backend`], the artifact manifest, and the
+//! execution counters. Callers do not invoke artifacts directly: they
+//! obtain a typed [`Plan`] per artifact via [`Session::plan`], bind
+//! inputs by manifest slot name (validated at bind time — shape bugs
+//! surface there, not as backend aborts), and execute with outputs
+//! staying runtime-resident until explicitly fetched. See DESIGN.md
+//! §Runtime for the residency model and §Backends for the backend seam.
+//!
+//! ## Backend selection
+//!
+//! [`Session::open`]/[`Session::open_dir`] read `EBFT_BACKEND`
+//! (`pjrt`, the default, or `reference`); `open_kind`/`open_dir_kind`
+//! select explicitly — tests use these, since env vars are
+//! process-global. [`Session::reopen`] preserves the kind, so scheduler
+//! workers spawned from a reference session stay on the reference
+//! backend.
 //!
 //! ## Threading (Send audit)
 //!
 //! A `Session` is deliberately **not `Send` and not `Sync`**: the PJRT
-//! client and its buffers are reference-counted through raw pointers, and
-//! the executable/metric caches are `RefCell`s. A session, and every
+//! client and its buffers are reference-counted through raw pointers,
+//! buffers memoize representations through `Rc<RefCell<…>>`, and the
+//! executable/metric caches are `RefCell`s. A session, and every
 //! `Plan`/`DeviceBuffer` derived from it, must stay on the thread that
 //! opened it. Concurrency is therefore *one session per worker* — the
 //! `coordinator::scheduler` opens a session per worker thread (cheap:
@@ -26,28 +36,37 @@
 //! assert_send::<ebft::runtime::Session>();
 //! ```
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 use std::cell::RefCell;
 use std::collections::HashMap;
 
+use super::backend::{self, Backend, BackendKind};
+use super::buffer::DeviceBuffer;
 use super::plan::Plan;
 use crate::model::manifest::{ArtifactSpec, Manifest};
 
 pub struct Session {
-    pub client: xla::PjRtClient,
     pub manifest: Manifest,
-    executables: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    kind: BackendKind,
+    backend: Box<dyn Backend>,
     /// Executions per artifact (for the metrics report).
     pub exec_counts: RefCell<HashMap<String, u64>>,
 }
 
 impl Session {
+    /// Open on the backend `EBFT_BACKEND` selects (default: PJRT).
     pub fn open(manifest: Manifest) -> Result<Session> {
-        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Self::open_kind(manifest, BackendKind::from_env())
+    }
+
+    /// Open on an explicitly chosen backend.
+    pub fn open_kind(manifest: Manifest, kind: BackendKind)
+                     -> Result<Session> {
+        let backend = backend::create(kind)?;
         Ok(Session {
-            client,
             manifest,
-            executables: RefCell::new(HashMap::new()),
+            kind,
+            backend,
             exec_counts: RefCell::new(HashMap::new()),
         })
     }
@@ -56,71 +75,53 @@ impl Session {
         Self::open(Manifest::load(dir)?)
     }
 
-    /// Open an independent session over the same artifact directory —
-    /// for callers that hold only a session and want another thread's
-    /// worth of isolated device state (the scheduler itself carries the
-    /// artifact dir and calls [`Session::open_dir`] directly). Cheap: no
-    /// artifact is compiled until a plan first uses it, so the new
-    /// session pays only for the artifacts it actually runs.
-    pub fn reopen(&self) -> Result<Session> {
-        Self::open_dir(&self.manifest.dir)
+    pub fn open_dir_kind(dir: &std::path::Path, kind: BackendKind)
+                         -> Result<Session> {
+        Self::open_kind(Manifest::load(dir)?, kind)
     }
 
-    /// Obtain a typed plan for `name`: compiles the artifact now (cached
-    /// across plans) and resolves the slot table once. One plan per
+    /// Which backend this session executes on.
+    pub fn backend_kind(&self) -> BackendKind {
+        self.kind
+    }
+
+    /// Open an independent session over the same artifact directory and
+    /// backend — for callers that hold only a session and want another
+    /// thread's worth of isolated device state (the scheduler itself
+    /// carries the artifact dir and backend kind and opens directly).
+    /// Cheap: no artifact is compiled until a plan first uses it, so the
+    /// new session pays only for the artifacts it actually runs.
+    pub fn reopen(&self) -> Result<Session> {
+        Self::open_dir_kind(&self.manifest.dir, self.kind)
+    }
+
+    /// Obtain a typed plan for `name`: prepares the artifact now (compile
+    /// on PJRT, cached across plans; support check on the reference
+    /// interpreter) and resolves the slot table once. One plan per
     /// logical binding set — two plans over the same artifact share the
-    /// executable but hold independent bindings.
+    /// backend's compiled executable but hold independent bindings.
     pub fn plan(&self, name: &str) -> Result<Plan<'_>> {
         Plan::new(self, name)
     }
 
-    /// Compile (and cache) an artifact's executable.
-    ///
-    /// HLO *text* (not a serialized proto) is the interchange format on
-    /// purpose: jax ≥ 0.5 emits `HloModuleProto`s with 64-bit instruction
-    /// ids which xla_extension 0.5.1 rejects, while the text parser
-    /// reassigns ids and round-trips cleanly (see python/compile/aot.py).
-    pub fn ensure_loaded(&self, name: &str) -> Result<()> {
-        if self.executables.borrow().contains_key(name) {
-            return Ok(());
-        }
-        let path = self.manifest.artifact_path(name)?;
-        let path_str = path.to_str().context("non-utf8 path")?;
-        let proto = xla::HloModuleProto::from_text_file(path_str)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact {name}"))?;
-        self.executables.borrow_mut().insert(name.to_string(), exe);
-        Ok(())
+    /// Prepare an artifact for execution on this session's backend.
+    pub(crate) fn ensure_ready(&self, name: &str) -> Result<()> {
+        self.backend.ensure_ready(&self.manifest, name)
     }
 
     pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
         self.manifest.artifact(name)
     }
 
-    /// Execute a loaded artifact on pre-validated literal references and
-    /// return the tuple-decomposed output literals. Plan-internal: all
-    /// validation (arity, shape, dtype) happened at bind time.
-    pub(crate) fn execute_refs(&self, name: &str, refs: &[&xla::Literal])
-                               -> Result<Vec<xla::Literal>> {
-        self.ensure_loaded(name)?;
-        let map = self.executables.borrow();
-        let exe = map.get(name).unwrap();
-        let devices = exe.execute::<&xla::Literal>(refs)?;
-        let buffer = devices
-            .first()
-            .and_then(|outputs| outputs.first())
-            .with_context(|| {
-                format!("artifact {name}: execution returned no output \
-                         buffers (corrupt or mis-specified executable?)")
-            })?;
-        let result = buffer.to_literal_sync()?;
+    /// Execute an artifact on pre-validated, slot-ordered buffers and
+    /// return its tagged outputs. Plan-internal: all validation (arity,
+    /// shape, dtype) happened at bind time.
+    pub(crate) fn execute(&self, name: &str, inputs: &[DeviceBuffer])
+                          -> Result<Vec<DeviceBuffer>> {
+        let outs = self.backend.execute(&self.manifest, name, inputs)?;
         *self.exec_counts.borrow_mut().entry(name.to_string()).or_insert(0)
             += 1;
-        Ok(result.to_tuple()?)
+        Ok(outs)
     }
 
     pub fn total_executions(&self) -> u64 {

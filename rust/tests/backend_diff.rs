@@ -1,0 +1,113 @@
+//! PJRT ↔ reference differential test — the correctness anchor for the
+//! pure-Rust interpreter.
+//!
+//! For every artifact in `artifacts/tiny` (the compiled set), build one
+//! deterministic, fully-bound input set, run it through a PJRT session
+//! and a reference session over the *same* manifest, and assert every
+//! output agrees within float tolerance. Requires `make artifacts`
+//! (skips otherwise); CI's artifact-cached job runs it on every push.
+//!
+//! `_pallas` variants are skipped: the reference backend aliases them to
+//! the base graphs by construction, and interpret-lowered Pallas HLO is
+//! disproportionately slow to compile on the CPU PJRT client (the
+//! Pallas↔XLA agreement itself is pinned by `runtime_artifacts.rs` and
+//! `bench_ablation`).
+
+use ebft::model::Manifest;
+use ebft::runtime::{BackendKind, Plan, Session};
+use ebft::tensor::Tensor;
+use ebft::util::Pcg64;
+use std::path::Path;
+
+fn open_pair() -> Option<(Session, Session)> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/tiny not built");
+        return None;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let pjrt =
+        Session::open_kind(manifest.clone(), BackendKind::Pjrt).unwrap();
+    let reference =
+        Session::open_kind(manifest, BackendKind::Reference).unwrap();
+    Some((pjrt, reference))
+}
+
+/// Bind one slot with deterministic, slot-role-appropriate data. The
+/// same rng stream drives both plans, so the bound values are identical.
+fn bind_slot(plan: &mut Plan<'_>, name: &str, shape: &[usize], dtype: &str,
+             vocab: usize, rng: &mut Pcg64) {
+    let numel: usize = shape.iter().product();
+    if dtype == "i32" {
+        let toks: Vec<i32> =
+            (0..numel).map(|_| rng.below(vocab as u64) as i32).collect();
+        plan.bind_tokens(name, &toks).unwrap();
+        return;
+    }
+    let role = name.split('.').next().unwrap_or(name);
+    let t = match role {
+        // step counter ≥ 1 and a small lr — valid Adam inputs
+        "t" => Tensor::scalar(3.0),
+        "lr" => Tensor::scalar(1e-3),
+        // binary masks at ~50% density
+        "mask" => Tensor::randn(shape, 1.0, rng)
+            .map(|v| if v > 0.0 { 1.0 } else { 0.0 }),
+        // binary region weights (head_seq_nll)
+        "weights" => Tensor::randn(shape, 1.0, rng)
+            .map(|v| if v > 0.0 { 1.0 } else { 0.0 }),
+        // second Adam moment must be non-negative
+        "v" => Tensor::randn(shape, 0.1, rng).map(|x| x * x),
+        "m" => Tensor::randn(shape, 0.01, rng),
+        // activations at unit scale
+        "x" | "target" => Tensor::randn(shape, 1.0, rng),
+        // weights/params/adapters at small scale (keeps logits sane)
+        _ => Tensor::randn(shape, 0.1, rng),
+    };
+    plan.bind_tensor(name, &t).unwrap();
+}
+
+#[test]
+fn reference_matches_pjrt_on_every_artifact() {
+    let Some((pjrt, reference)) = open_pair() else { return };
+    let vocab = pjrt.manifest.dims.vocab;
+    let names: Vec<String> = pjrt
+        .manifest
+        .artifacts
+        .keys()
+        .filter(|n| !n.ends_with("_pallas"))
+        .cloned()
+        .collect();
+    assert!(names.len() >= 10, "artifact set shrank? {names:?}");
+
+    for name in &names {
+        let t0 = std::time::Instant::now();
+        let spec = pjrt.manifest.artifact(name).unwrap().clone();
+        let mut plan_p = pjrt.plan(name).unwrap();
+        let mut plan_r = reference.plan(name).unwrap();
+        // one rng per plan, same seed → identical bound values
+        let mut rng_p = Pcg64::seeded(0xd1ff ^ name.len() as u64);
+        let mut rng_r = Pcg64::seeded(0xd1ff ^ name.len() as u64);
+        for s in &spec.inputs {
+            bind_slot(&mut plan_p, &s.name, &s.shape, &s.dtype, vocab,
+                      &mut rng_p);
+            bind_slot(&mut plan_r, &s.name, &s.shape, &s.dtype, vocab,
+                      &mut rng_r);
+        }
+        let outs_p = plan_p.run().unwrap();
+        let outs_r = plan_r.run().unwrap();
+        assert_eq!(outs_p.len(), outs_r.len(), "{name}: output arity");
+        for (i, os) in spec.outputs.iter().enumerate() {
+            let (p, r) = (&outs_p[i], &outs_r[i]);
+            assert_eq!(p.shape, r.shape, "{name}/{}", os.name);
+            let scale = p.max_abs().max(r.max_abs()).max(1.0);
+            let diff = p.sub(r).max_abs();
+            // f32 kernels vs XLA's fused/reordered f32: per-element
+            // relative 2e-3 of the output's dynamic range
+            assert!(diff <= 2e-3 * scale,
+                    "artifact {name} output '{}' diverged: max|Δ| = \
+                     {diff:e} against scale {scale:e}", os.name);
+        }
+        eprintln!("  diff {name}: {} outputs agree ({:.2}s)",
+                  spec.outputs.len(), t0.elapsed().as_secs_f64());
+    }
+}

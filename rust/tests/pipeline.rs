@@ -1,15 +1,22 @@
-//! Integration: full coordinator pipelines on the `tiny` config, driven
-//! through the stage-based `Pipeline` API and the method registries.
-//! Requires `make artifacts` (each test skips otherwise).
+//! Integration: full coordinator pipelines driven through the
+//! stage-based `Pipeline` API and the method registries.
+//!
+//! The suite runs twice:
+//! - `pipeline_suite_reference` — always, in plain `cargo test`: a
+//!   synthetic tiny manifest (`model::synth`) on the pure-Rust
+//!   reference backend, no artifacts or Python toolchain needed;
+//! - `pipeline_suite_pjrt` — the compiled-artifact variant on
+//!   `artifacts/tiny`; requires `make artifacts` and skips otherwise.
 
 use ebft::config::FtConfig;
 use ebft::coordinator::{pruner, recovery, Grid, Pipeline, PipelineBuilder};
 use ebft::data::{Batcher, MarkovCorpus, Split};
 use ebft::masks::MaskSet;
+use ebft::model::synth::{write_synthetic, SynthConfig};
 use ebft::model::ParamStore;
 use ebft::pretrain;
 use ebft::pruning::Pattern;
-use ebft::runtime::Session;
+use ebft::runtime::{BackendKind, Session};
 use std::path::Path;
 
 struct Env {
@@ -18,15 +25,28 @@ struct Env {
     dense: ParamStore,
 }
 
-// PJRT sessions are not Send (Rc + raw pointers), so the checks share one
-// env on one thread: a single #[test] entry runs every check in sequence.
-fn build_env() -> Option<Env> {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: artifacts/tiny not built");
-        return None;
-    }
-    let session = Session::open_dir(&dir).unwrap();
+// Sessions are not Send (Rc + RefCell state), so the checks share one
+// env on one thread: a single #[test] entry per backend runs every
+// check in sequence.
+fn build_env(kind: BackendKind) -> Option<Env> {
+    let session = match kind {
+        BackendKind::Pjrt => {
+            let dir =
+                Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+            if !dir.join("manifest.json").exists() {
+                eprintln!("skipping: artifacts/tiny not built");
+                return None;
+            }
+            Session::open_dir_kind(&dir, BackendKind::Pjrt).unwrap()
+        }
+        BackendKind::Reference => {
+            let dir = std::env::temp_dir().join(format!(
+                "ebft-pipeline-synth-{}", std::process::id()));
+            let manifest =
+                write_synthetic(&dir, &SynthConfig::tiny()).unwrap();
+            Session::open_kind(manifest, BackendKind::Reference).unwrap()
+        }
+    };
     let corpus = MarkovCorpus::new(session.manifest.dims.vocab, 7);
     // short pretrain: enough for pruning damage to be measurable
     let (dense, _) =
@@ -34,9 +54,7 @@ fn build_env() -> Option<Env> {
     Some(Env { session, corpus, dense })
 }
 
-#[test]
-fn pipeline_suite() {
-    let Some(e) = build_env() else { return };
+fn run_suite(e: &Env) {
     let checks: Vec<(&str, fn(&Env))> = vec![
         ("every_pruner_hits_target_sparsity",
          every_pruner_hits_target_sparsity),
@@ -57,9 +75,22 @@ fn pipeline_suite() {
     ];
     for (name, check) in checks {
         let t0 = std::time::Instant::now();
-        check(&e);
+        check(e);
         eprintln!("  check {name} ok ({:.1}s)", t0.elapsed().as_secs_f64());
     }
+}
+
+#[test]
+fn pipeline_suite_reference() {
+    let e = build_env(BackendKind::Reference)
+        .expect("reference env needs no artifacts");
+    run_suite(&e);
+}
+
+#[test]
+fn pipeline_suite_pjrt() {
+    let Some(e) = build_env(BackendKind::Pjrt) else { return };
+    run_suite(&e);
 }
 
 fn test_ft() -> FtConfig {
@@ -236,6 +267,9 @@ fn zeroshot_suite_runs_on_sparse_model(e: &Env) {
 }
 
 fn pallas_impl_pipeline_matches_xla(e: &Env) {
+    // on PJRT this pins the Pallas kernel lowering against plain XLA; on
+    // the reference backend the _pallas artifacts alias the base graphs,
+    // so it degenerates to a determinism check of the whole cell
     let pipe_x = pipeline(e);
     let pipe_p = PipelineBuilder::new()
         .session(&e.session)

@@ -1,24 +1,39 @@
-//! Integration: the AOT bridge end-to-end — manifest → PJRT → numerics,
-//! through the typed Plan / DeviceBuffer API.
+//! Integration: the artifact set end-to-end — manifest → backend →
+//! numerics, through the typed Plan / DeviceBuffer API.
 //!
-//! Requires `make artifacts` (skips otherwise). Uses the `tiny` config.
+//! Runs twice per check: on the reference backend over a synthetic
+//! manifest (always, plain `cargo test`) and on PJRT over
+//! `artifacts/tiny` (requires `make artifacts`, skips otherwise).
 
 use ebft::masks::MaskSet;
+use ebft::model::synth::{write_synthetic, SynthConfig};
 use ebft::model::{Manifest, ParamStore};
-use ebft::runtime::{DeviceBuffer, Plan, Session};
+use ebft::runtime::{BackendKind, DeviceBuffer, Plan, Session};
 use ebft::tensor::Tensor;
 use ebft::util::Pcg64;
 use std::path::Path;
 
-fn open_tiny() -> Option<(Session, ParamStore)> {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: artifacts/tiny not built");
-        return None;
-    }
-    let manifest = Manifest::load(&dir).unwrap();
+// tests run on parallel threads, so every reference test generates into
+// its own directory (same synthetic config, so same model everywhere)
+fn open_env(kind: BackendKind, tag: &str) -> Option<(Session, ParamStore)> {
+    let manifest = match kind {
+        BackendKind::Pjrt => {
+            let dir =
+                Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+            if !dir.join("manifest.json").exists() {
+                eprintln!("skipping: artifacts/tiny not built");
+                return None;
+            }
+            Manifest::load(&dir).unwrap()
+        }
+        BackendKind::Reference => {
+            let dir = std::env::temp_dir().join(format!(
+                "ebft-rta-{tag}-{}", std::process::id()));
+            write_synthetic(&dir, &SynthConfig::tiny()).unwrap()
+        }
+    };
     let params = ParamStore::from_init_bin(&manifest).unwrap();
-    Some((Session::open(manifest).unwrap(), params))
+    Some((Session::open_kind(manifest, kind).unwrap(), params))
 }
 
 /// Bind block `l`'s params and masks to a block-artifact plan.
@@ -37,21 +52,20 @@ fn random_tokens(session: &Session, seed: u64) -> Vec<i32> {
         .collect()
 }
 
-#[test]
-fn decomposed_chain_matches_monolithic_lm_loss() {
-    let Some((session, params)) = open_tiny() else { return };
+fn check_decomposed_chain_matches_monolithic_lm_loss(session: &Session,
+                                                     params: &ParamStore) {
     let d = session.manifest.dims.clone();
     let masks = MaskSet::dense(&session.manifest);
-    let tokens = random_tokens(&session, 1);
+    let tokens = random_tokens(session, 1);
 
-    // decomposed: embed → blocks → head, activations device-resident
+    // decomposed: embed → blocks → head, activations runtime-resident
     let mut embed = session.plan("embed_fwd").unwrap();
     embed.bind_tensor("embed", params.get("embed").unwrap()).unwrap();
     embed.bind_tokens("tokens", &tokens).unwrap();
     let mut x = embed.run_to_device().unwrap().remove(0);
     for l in 0..d.n_layers {
         let mut fwd = session.plan("block_fwd").unwrap();
-        bind_block(&mut fwd, &params, &session, &masks, l);
+        bind_block(&mut fwd, params, session, &masks, l);
         fwd.bind("x", &x).unwrap();
         x = fwd.run_to_device().unwrap().remove(0);
     }
@@ -78,8 +92,20 @@ fn decomposed_chain_matches_monolithic_lm_loss() {
 }
 
 #[test]
-fn block_ft_step_converges_with_donated_state() {
-    let Some((session, params)) = open_tiny() else { return };
+fn decomposed_chain_matches_monolithic_lm_loss_reference() {
+    let (session, params) = open_env(BackendKind::Reference, "chain").unwrap();
+    check_decomposed_chain_matches_monolithic_lm_loss(&session, &params);
+}
+
+#[test]
+fn decomposed_chain_matches_monolithic_lm_loss_pjrt() {
+    let Some((session, params)) = open_env(BackendKind::Pjrt, "pjrt") else {
+        return;
+    };
+    check_decomposed_chain_matches_monolithic_lm_loss(&session, &params);
+}
+
+fn check_block_ft_step_converges(session: &Session, params: &ParamStore) {
     let d = session.manifest.dims.clone();
     let masks = MaskSet::dense(&session.manifest);
     let mut rng = Pcg64::seeded(7);
@@ -87,7 +113,7 @@ fn block_ft_step_converges_with_donated_state() {
 
     // target: the same block's dense output (recoverable exactly)
     let mut fwd = session.plan("block_fwd").unwrap();
-    bind_block(&mut fwd, &params, &session, &masks, 0);
+    bind_block(&mut fwd, params, session, &masks, 0);
     fwd.bind_tensor("x", &x).unwrap();
     let target = fwd.run_to_device().unwrap().remove(0);
 
@@ -110,7 +136,7 @@ fn block_ft_step_converges_with_donated_state() {
         ft.bind(&format!("m.{j}"), &z).unwrap();
         ft.bind(&format!("v.{j}"), &z).unwrap();
     }
-    // weights + Adam state circulate on device
+    // weights + Adam state circulate runtime-resident
     assert_eq!(ft.donate_matching().unwrap(), 27);
     ft.bind_scalar("lr", 5e-3).unwrap();
     ft.bind("x", &x).unwrap();
@@ -139,8 +165,24 @@ fn block_ft_step_converges_with_donated_state() {
 }
 
 #[test]
-fn pallas_and_xla_block_fwd_agree() {
-    let Some((session, params)) = open_tiny() else { return };
+fn block_ft_step_converges_with_donated_state_reference() {
+    let (session, params) =
+        open_env(BackendKind::Reference, "ftconv").unwrap();
+    check_block_ft_step_converges(&session, &params);
+}
+
+#[test]
+fn block_ft_step_converges_with_donated_state_pjrt() {
+    let Some((session, params)) = open_env(BackendKind::Pjrt, "pjrt") else {
+        return;
+    };
+    check_block_ft_step_converges(&session, &params);
+}
+
+fn check_pallas_and_xla_block_fwd_agree(session: &Session,
+                                        params: &ParamStore) {
+    // on PJRT this pins the Pallas kernel artifacts against plain XLA;
+    // the reference backend aliases the two, so it checks the alias
     let d = session.manifest.dims.clone();
     let masks = MaskSet::dense(&session.manifest);
     let mut rng = Pcg64::seeded(9);
@@ -148,7 +190,8 @@ fn pallas_and_xla_block_fwd_agree() {
 
     let run_fwd = |name: &str| -> Tensor {
         let mut plan = session.plan(name).unwrap();
-        bind_block(&mut plan, &params, &session, &masks, 1);
+        bind_block(&mut plan, params, session, &masks,
+                   d.n_layers.min(2) - 1);
         plan.bind_tensor("x", &x).unwrap();
         plan.run().unwrap().remove(0)
     };
@@ -160,9 +203,23 @@ fn pallas_and_xla_block_fwd_agree() {
 }
 
 #[test]
-fn masked_weights_do_not_affect_output() {
+fn pallas_and_xla_block_fwd_agree_reference() {
+    let (session, params) =
+        open_env(BackendKind::Reference, "pallas").unwrap();
+    check_pallas_and_xla_block_fwd_agree(&session, &params);
+}
+
+#[test]
+fn pallas_and_xla_block_fwd_agree_pjrt() {
+    let Some((session, params)) = open_env(BackendKind::Pjrt, "pjrt") else {
+        return;
+    };
+    check_pallas_and_xla_block_fwd_agree(&session, &params);
+}
+
+fn check_masked_weights_do_not_affect_output(session: &Session,
+                                             params: &ParamStore) {
     // zeroing a pruned weight's value must not change block output
-    let Some((session, params)) = open_tiny() else { return };
     let d = session.manifest.dims.clone();
     let mut rng = Pcg64::seeded(11);
     let x = Tensor::randn(&[d.batch, d.seq, d.d_model], 1.0, &mut rng);
@@ -171,11 +228,11 @@ fn masked_weights_do_not_affect_output() {
     // prune half of wq
     let shape = masks.masks[0][0].shape.clone();
     let scores = Tensor::randn(&shape, 1.0, &mut rng);
-    masks.masks[0][0] =
-        ebft::masks::mask_from_topk(&scores, shape.iter().product::<usize>() / 2);
+    masks.masks[0][0] = ebft::masks::mask_from_topk(
+        &scores, shape.iter().product::<usize>() / 2);
 
     let mut plan = session.plan("block_fwd").unwrap();
-    bind_block(&mut plan, &params, &session, &masks, 0);
+    bind_block(&mut plan, params, session, &masks, 0);
     plan.bind_tensor("x", &x).unwrap();
     let y1 = plan.run().unwrap().remove(0);
 
@@ -198,14 +255,28 @@ fn masked_weights_do_not_affect_output() {
 }
 
 #[test]
-fn persistent_bindings_survive_across_runs() {
+fn masked_weights_do_not_affect_output_reference() {
+    let (session, params) =
+        open_env(BackendKind::Reference, "masked").unwrap();
+    check_masked_weights_do_not_affect_output(&session, &params);
+}
+
+#[test]
+fn masked_weights_do_not_affect_output_pjrt() {
+    let Some((session, params)) = open_env(BackendKind::Pjrt, "pjrt") else {
+        return;
+    };
+    check_masked_weights_do_not_affect_output(&session, &params);
+}
+
+fn check_persistent_bindings_survive_across_runs(session: &Session,
+                                                 params: &ParamStore) {
     // the same plan executes repeatedly with only the stream slot rebound;
     // results match fresh single-shot plans
-    let Some((session, params)) = open_tiny() else { return };
     let masks = MaskSet::dense(&session.manifest);
 
     let mut plan = session.plan("block_fwd").unwrap();
-    bind_block(&mut plan, &params, &session, &masks, 0);
+    bind_block(&mut plan, params, session, &masks, 0);
     let d = session.manifest.dims.clone();
     let mut rng = Pcg64::seeded(13);
     for _ in 0..3 {
@@ -214,9 +285,24 @@ fn persistent_bindings_survive_across_runs() {
         let y_reused = plan.run().unwrap().remove(0);
 
         let mut fresh = session.plan("block_fwd").unwrap();
-        bind_block(&mut fresh, &params, &session, &masks, 0);
+        bind_block(&mut fresh, params, session, &masks, 0);
         fresh.bind_tensor("x", &x).unwrap();
         let y_fresh = fresh.run().unwrap().remove(0);
         assert_eq!(y_reused.data, y_fresh.data);
     }
+}
+
+#[test]
+fn persistent_bindings_survive_across_runs_reference() {
+    let (session, params) =
+        open_env(BackendKind::Reference, "persist").unwrap();
+    check_persistent_bindings_survive_across_runs(&session, &params);
+}
+
+#[test]
+fn persistent_bindings_survive_across_runs_pjrt() {
+    let Some((session, params)) = open_env(BackendKind::Pjrt, "pjrt") else {
+        return;
+    };
+    check_persistent_bindings_survive_across_runs(&session, &params);
 }

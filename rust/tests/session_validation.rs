@@ -1,24 +1,47 @@
 //! Error-path coverage for the manifest-driven runtime: every malformed
-//! binding must fail at bind time — *before* reaching PJRT — with an
-//! actionable message naming the artifact and slot.
+//! binding must fail at bind time — *before* reaching the backend — with
+//! an actionable message naming the artifact and slot. Plus the donation
+//! semantics property tests (buffer identity moves into the input slot,
+//! rebinding overrides, `unbind_all` releases everything).
+//!
+//! Everything here runs on the reference backend over a synthetic
+//! manifest in plain `cargo test`; the `*_pjrt` variants re-run the
+//! validation checks against the compiled `artifacts/tiny` (skipped
+//! until `make artifacts`).
 
+use ebft::model::synth::{write_synthetic, SynthConfig};
 use ebft::model::Manifest;
-use ebft::runtime::{DeviceBuffer, Session};
+use ebft::runtime::{BackendKind, DeviceBuffer, Session};
 use ebft::tensor::Tensor;
-use std::path::Path;
+use ebft::util::Pcg64;
+use std::path::{Path, PathBuf};
 
-fn open_tiny() -> Option<Session> {
+fn synth_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("ebft-sv-{tag}-{}", std::process::id()));
+    write_synthetic(&dir, &SynthConfig::tiny()).unwrap();
+    dir
+}
+
+fn open_reference(tag: &str) -> Session {
+    Session::open_dir_kind(&synth_dir(tag), BackendKind::Reference).unwrap()
+}
+
+fn open_pjrt_tiny() -> Option<Session> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
     if !dir.join("manifest.json").exists() {
         eprintln!("skipping: artifacts/tiny not built");
         return None;
     }
-    Some(Session::open(Manifest::load(&dir).unwrap()).unwrap())
+    Some(Session::open_dir_kind(&dir, BackendKind::Pjrt).unwrap())
 }
 
-#[test]
-fn plan_error_paths() {
-    let Some(session) = open_tiny() else { return };
+// ---------------------------------------------------------------------
+// bind-time validation (backend-independent by construction; run on
+// both backends to prove it)
+// ---------------------------------------------------------------------
+
+fn check_plan_error_paths(session: &Session) {
     let d = session.manifest.dims.clone();
 
     // unknown artifact fails at plan time
@@ -65,11 +88,20 @@ fn plan_error_paths() {
 }
 
 #[test]
-fn device_buffer_tag_checked_on_bind() {
+fn plan_error_paths_reference() {
+    check_plan_error_paths(&open_reference("errors"));
+}
+
+#[test]
+fn plan_error_paths_pjrt() {
+    let Some(session) = open_pjrt_tiny() else { return };
+    check_plan_error_paths(&session);
+}
+
+fn check_device_buffer_tags(session: &Session) {
     // Regression for the old `Value::Lit` escape hatch, which compared
     // only element counts: a device buffer with the right element count
     // but wrong shape or dtype must be rejected at bind time.
-    let Some(session) = open_tiny() else { return };
     let d = session.manifest.dims.clone();
     let mut plan = session.plan("embed_fwd").unwrap();
 
@@ -103,9 +135,17 @@ fn device_buffer_tag_checked_on_bind() {
 }
 
 #[test]
-fn donation_rules() {
-    let Some(session) = open_tiny() else { return };
+fn device_buffer_tag_checked_on_bind_reference() {
+    check_device_buffer_tags(&open_reference("tags"));
+}
 
+#[test]
+fn device_buffer_tag_checked_on_bind_pjrt() {
+    let Some(session) = open_pjrt_tiny() else { return };
+    check_device_buffer_tags(&session);
+}
+
+fn check_donation_rules(session: &Session) {
     // block_ft_step: every circulating slot (bp/m/v) has a same-named,
     // same-spec output
     let mut ft = session.plan("block_ft_step").unwrap();
@@ -127,11 +167,22 @@ fn donation_rules() {
 }
 
 #[test]
+fn donation_rules_reference() {
+    check_donation_rules(&open_reference("donrules"));
+}
+
+#[test]
+fn donation_rules_pjrt() {
+    let Some(session) = open_pjrt_tiny() else { return };
+    check_donation_rules(&session);
+}
+
+#[test]
 fn manifest_rejects_corruption() {
-    let Some(session) = open_tiny() else { return };
-    let dir = session.manifest.dir.clone();
-    // copy manifest, corrupt a field, expect load failure
-    let tmp = std::env::temp_dir().join(format!("ebft-corrupt-{}",
+    // pure manifest-parsing checks — the synthetic dir stands in for a
+    // built artifact dir, no backend needed
+    let dir = synth_dir("corrupt");
+    let tmp = std::env::temp_dir().join(format!("ebft-sv-corrupted-{}",
                                                 std::process::id()));
     std::fs::create_dir_all(&tmp).unwrap();
     let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
@@ -145,4 +196,185 @@ fn manifest_rejects_corruption() {
         .unwrap();
     assert!(Manifest::load(&tmp).is_err());
     std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn reference_rejects_unknown_artifact_kind() {
+    // a manifest entry the interpreter has no numerics for must fail at
+    // plan (ensure_ready) time with an actionable message
+    let dir = synth_dir("unknown-art");
+    let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    // clone lm_loss under a name outside the supported set
+    let injected = text.replacen(
+        "\"lm_loss\":", "\"mystery_graph\":", 1);
+    // keep a real lm_loss so Manifest::validate still passes
+    let injected = injected.replace(
+        "\"artifacts\":{",
+        &format!("\"artifacts\":{{\"lm_loss\":{},",
+                 extract_lm_loss(&text)));
+    let tmp = std::env::temp_dir().join(format!(
+        "ebft-sv-unknown-{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    std::fs::write(tmp.join("manifest.json"), injected).unwrap();
+    std::fs::copy(dir.join("init_params.bin"),
+                  tmp.join("init_params.bin")).unwrap();
+    let session =
+        Session::open_dir_kind(&tmp, BackendKind::Reference).unwrap();
+    let err = session.plan("mystery_graph").unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("mystery_graph") && msg.contains("reference"),
+            "should name the artifact and the backend: {msg}");
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+/// The `"lm_loss": {...}` object body from a dumped manifest (objects
+/// dump with sorted keys and no whitespace, so brace-matching is safe).
+fn extract_lm_loss(text: &str) -> String {
+    let start = text.find("\"lm_loss\":").unwrap() + "\"lm_loss\":".len();
+    let bytes = text.as_bytes();
+    let mut depth = 0usize;
+    for (i, &b) in bytes.iter().enumerate().skip(start) {
+        match b {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return text[start..=i].to_string();
+                }
+            }
+            _ => {}
+        }
+    }
+    panic!("unbalanced manifest JSON");
+}
+
+// ---------------------------------------------------------------------
+// donation semantics property tests (reference backend; no artifacts)
+// ---------------------------------------------------------------------
+
+/// Bind every `block_ft_step` slot with seeded random state (block 0's
+/// shapes; binary masks, zero Adam state, unit-scale activations).
+fn bind_ft_inputs(ft: &mut ebft::runtime::Plan<'_>, session: &Session,
+                  seed: u64) {
+    let manifest = &session.manifest;
+    let d = manifest.dims.clone();
+    let mut rng = Pcg64::seeded(seed);
+    for (j, shape) in manifest
+        .block_param_indices(0)
+        .iter()
+        .map(|&i| manifest.param_shapes[i].clone())
+        .enumerate()
+    {
+        let w = if shape.len() > 1 {
+            Tensor::randn(&shape, 0.3, &mut rng)
+        } else {
+            Tensor::ones(&shape)
+        };
+        ft.bind_tensor(&format!("bp.{j}"), &w).unwrap();
+        let z = DeviceBuffer::zeros(&shape).unwrap();
+        ft.bind(&format!("m.{j}"), &z).unwrap();
+        ft.bind(&format!("v.{j}"), &z).unwrap();
+    }
+    for (j, shape) in manifest.block_linear_shapes(0).iter().enumerate() {
+        let mask = Tensor::randn(shape, 1.0, &mut rng)
+            .map(|v| if v > 0.0 { 1.0 } else { 0.0 });
+        ft.bind_tensor(&format!("mask.{j}"), &mask).unwrap();
+    }
+    ft.bind_scalar("t", 1.0).unwrap();
+    ft.bind_scalar("lr", 1e-2).unwrap();
+    let x = Tensor::randn(&[d.batch, d.seq, d.d_model], 1.0, &mut rng);
+    let target = Tensor::randn(&[d.batch, d.seq, d.d_model], 1.0, &mut rng);
+    ft.bind_tensor("x", &x).unwrap();
+    ft.bind_tensor("target", &target).unwrap();
+}
+
+/// A fully-bound `block_ft_step` plan with the donations wired.
+fn bind_ft_plan<'s>(session: &'s Session, seed: u64)
+                    -> ebft::runtime::Plan<'s> {
+    let mut ft = session.plan("block_ft_step").unwrap();
+    bind_ft_inputs(&mut ft, session, seed);
+    assert_eq!(ft.donate_matching().unwrap(), 27);
+    ft
+}
+
+#[test]
+fn donation_moves_output_identity_into_the_input_slot() {
+    let session = open_reference("don-identity");
+    // property: over several seeded cases, after every run each donated
+    // output buffer *is* (same storage, not a copy of) the new binding
+    // of its input slot, and non-donated slots keep their binding
+    for seed in [1u64, 2, 3] {
+        let mut ft = bind_ft_plan(&session, seed);
+        let x_before = ft.bound("x").unwrap().clone();
+        for step in 1..=3 {
+            ft.bind_scalar("t", step as f32).unwrap();
+            let outs = ft.run_to_device().unwrap();
+            for j in 0..9 {
+                for prefix in ["bp", "m", "v"] {
+                    let slot = format!("{prefix}.{j}");
+                    let oi = ft.output_index(&slot).unwrap();
+                    assert!(outs[oi].ptr_eq(ft.bound(&slot).unwrap()),
+                            "seed {seed} step {step}: output '{slot}' did \
+                             not move into the input slot");
+                }
+            }
+            // streamed/persistent slots are untouched by donation
+            assert!(ft.bound("x").unwrap().ptr_eq(&x_before));
+        }
+    }
+}
+
+#[test]
+fn rebinding_a_donated_slot_overrides_the_circulating_value() {
+    let session = open_reference("don-rebind");
+    let mut ft = bind_ft_plan(&session, 7);
+    let outs = ft.run_to_device().unwrap();
+    let donated = ft.bound("bp.0").unwrap().clone();
+    assert!(donated.ptr_eq(&outs[ft.output_index("bp.0").unwrap()]));
+
+    // rebinding replaces the donated buffer...
+    let shape = session.manifest.param_shapes
+        [session.manifest.block_param_indices(0)[0]]
+        .clone();
+    let fresh = DeviceBuffer::zeros(&shape).unwrap();
+    ft.bind("bp.0", &fresh).unwrap();
+    assert!(ft.bound("bp.0").unwrap().ptr_eq(&fresh),
+            "rebinding must override the donated value");
+    assert!(!ft.bound("bp.0").unwrap().ptr_eq(&donated));
+
+    // ...and the donation link itself survives: the next run donates the
+    // new output over the rebound buffer again
+    ft.bind_scalar("t", 2.0).unwrap();
+    let outs2 = ft.run_to_device().unwrap();
+    assert!(ft.bound("bp.0").unwrap()
+        .ptr_eq(&outs2[ft.output_index("bp.0").unwrap()]));
+    assert!(!ft.bound("bp.0").unwrap().ptr_eq(&fresh));
+}
+
+#[test]
+fn unbind_all_releases_every_binding_and_keeps_links() {
+    let session = open_reference("don-unbind");
+    let mut ft = bind_ft_plan(&session, 11);
+    ft.run_to_device().unwrap();
+
+    ft.unbind_all();
+    // every slot is released — bound() fails and run reports them all
+    let spec = session.spec("block_ft_step").unwrap().clone();
+    for slot in &spec.inputs {
+        assert!(ft.bound(&slot.name).is_err(),
+                "slot '{}' still bound after unbind_all", slot.name);
+    }
+    let err = ft.run_to_device().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains(&format!("{} input slot(s) not bound",
+                                  spec.inputs.len())),
+            "unbind_all must release all {} slots: {msg}",
+            spec.inputs.len());
+
+    // rebinding the *same* plan brings it back — the compiled slot table
+    // and donation links survive unbind_all
+    bind_ft_inputs(&mut ft, &session, 12);
+    let outs = ft.run_to_device().unwrap();
+    assert!(ft.bound("v.3").unwrap()
+        .ptr_eq(&outs[ft.output_index("v.3").unwrap()]));
 }

@@ -5,10 +5,12 @@
 //! and resume planning (completed cells are skipped, fully-complete
 //! groups schedule no prune).
 //!
-//! `scheduler_suite` additionally needs `make artifacts` (skips
-//! otherwise): 2-worker sweeps prune each (pruner, pattern) exactly
-//! once, match the serial records byte-for-byte modulo timings, resume
-//! without re-running, and pick up an interrupted pruned checkpoint.
+//! `scheduler_suite_reference` runs the full 2-worker sweep contract —
+//! prune-exactly-once, serial ≡ parallel records, resume, interrupted-
+//! checkpoint pickup — on the reference backend over a synthetic
+//! manifest, in plain `cargo test`. `scheduler_suite_pjrt` re-runs it
+//! against `artifacts/tiny` (requires `make artifacts`, skips
+//! otherwise).
 
 use ebft::config::FtConfig;
 use ebft::coordinator::{config_fingerprint, plan_sweep, pruner, Grid,
@@ -16,9 +18,10 @@ use ebft::coordinator::{config_fingerprint, plan_sweep, pruner, Grid,
                         SweepEnv};
 use ebft::data::{MarkovCorpus, Split};
 use ebft::ebft::finetune::{BlockReport, EbftReport};
+use ebft::model::synth::{write_synthetic, SynthConfig};
 use ebft::pretrain;
 use ebft::pruning::Pattern;
-use ebft::runtime::Session;
+use ebft::runtime::{BackendKind, Session};
 use std::path::{Path, PathBuf};
 
 fn tmpdir(tag: &str) -> PathBuf {
@@ -50,27 +53,38 @@ fn sample_record(pruner: &str, recovery: &str, recovery_label: &str,
 fn fingerprint_is_deterministic_and_sensitive() {
     let ft = FtConfig::default();
     let a = config_fingerprint("small", "small-seed0-steps400", 7, &ft, 64,
-                               "xla", Split::WikiSim);
+                               "xla", Split::WikiSim, BackendKind::Pjrt);
     let b = config_fingerprint("small", "small-seed0-steps400", 7, &ft, 64,
-                               "xla", Split::WikiSim);
+                               "xla", Split::WikiSim, BackendKind::Pjrt);
     assert_eq!(a, b);
     assert_eq!(a.len(), 16);
     assert!(a.chars().all(|c| c.is_ascii_hexdigit()));
     // every input that moves a cell's numbers moves the fingerprint
     assert_ne!(a, config_fingerprint("tiny", "small-seed0-steps400", 7,
-                                     &ft, 64, "xla", Split::WikiSim));
+                                     &ft, 64, "xla", Split::WikiSim,
+                                     BackendKind::Pjrt));
     assert_ne!(a, config_fingerprint("small", "small-seed1-steps400", 7,
-                                     &ft, 64, "xla", Split::WikiSim));
+                                     &ft, 64, "xla", Split::WikiSim,
+                                     BackendKind::Pjrt));
     // the corpus seed moves every calibration/eval batch
     assert_ne!(a, config_fingerprint("small", "small-seed0-steps400", 13,
-                                     &ft, 64, "xla", Split::WikiSim));
+                                     &ft, 64, "xla", Split::WikiSim,
+                                     BackendKind::Pjrt));
     assert_ne!(a, config_fingerprint("small", "small-seed0-steps400", 7,
-                                     &ft, 32, "xla", Split::WikiSim));
+                                     &ft, 32, "xla", Split::WikiSim,
+                                     BackendKind::Pjrt));
     assert_ne!(a, config_fingerprint("small", "small-seed0-steps400", 7,
-                                     &ft, 64, "pallas", Split::WikiSim));
+                                     &ft, 64, "pallas", Split::WikiSim,
+                                     BackendKind::Pjrt));
+    // the backends agree only to float tolerance — their records must
+    // never shadow each other
+    assert_ne!(a, config_fingerprint("small", "small-seed0-steps400", 7,
+                                     &ft, 64, "xla", Split::WikiSim,
+                                     BackendKind::Reference));
     let ft2 = FtConfig { calib_seqs: 8, ..FtConfig::default() };
     assert_ne!(a, config_fingerprint("small", "small-seed0-steps400", 7,
-                                     &ft2, 64, "xla", Split::WikiSim));
+                                     &ft2, 64, "xla", Split::WikiSim,
+                                     BackendKind::Pjrt));
 }
 
 #[test]
@@ -113,7 +127,7 @@ fn store_records_round_trip_and_misses_are_none() {
     let dir = tmpdir("roundtrip");
     let store = RunStore::open(&dir).unwrap();
     let fp = config_fingerprint("small", "t", 7, &FtConfig::default(), 64,
-                                "xla", Split::WikiSim);
+                                "xla", Split::WikiSim, BackendKind::Pjrt);
     let rec = sample_record("wanda", "ebft", "w.Ours",
                             Pattern::Unstructured(0.5));
     assert!(store.get_record(&fp, &rec.key()).unwrap().is_none());
@@ -201,8 +215,8 @@ fn plan_skips_completed_cells_and_whole_groups() {
 }
 
 // ---------------------------------------------------------------------
-// artifact-gated scheduler suite (tiny config), one #[test] entry like
-// tests/pipeline.rs so the expensive env builds once
+// scheduler suite — one #[test] entry per backend, like
+// tests/pipeline.rs, so the expensive env builds once per backend
 // ---------------------------------------------------------------------
 
 struct Env {
@@ -212,13 +226,25 @@ struct Env {
     artifact_dir: PathBuf,
 }
 
-fn build_env() -> Option<Env> {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: artifacts/tiny not built");
-        return None;
-    }
-    let session = Session::open_dir(&dir).unwrap();
+fn build_env(kind: BackendKind) -> Option<Env> {
+    let dir = match kind {
+        BackendKind::Pjrt => {
+            let dir =
+                Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+            if !dir.join("manifest.json").exists() {
+                eprintln!("skipping: artifacts/tiny not built");
+                return None;
+            }
+            dir
+        }
+        BackendKind::Reference => {
+            let dir = std::env::temp_dir().join(format!(
+                "ebft-store-synth-{}", std::process::id()));
+            write_synthetic(&dir, &SynthConfig::tiny()).unwrap();
+            dir
+        }
+    };
+    let session = Session::open_dir_kind(&dir, kind).unwrap();
     let corpus = MarkovCorpus::new(session.manifest.dims.vocab, 7);
     let (dense, _) =
         pretrain::pretrain(&session, &corpus, 120, 3e-3, 0, 50).unwrap();
@@ -239,6 +265,7 @@ fn sweep_env(e: &Env) -> SweepEnv<'_> {
         impl_name: "xla".to_string(),
         eval_split: Split::WikiSim,
         dense_tag: "tiny-sched-test".to_string(),
+        backend: e.session.backend_kind(),
     }
 }
 
@@ -268,9 +295,7 @@ fn dumps(records: &[RunRecord]) -> Vec<String> {
     records.iter().map(|r| r.to_json().dump()).collect()
 }
 
-#[test]
-fn scheduler_suite() {
-    let Some(e) = build_env() else { return };
+fn run_scheduler_suite(e: &Env, tag: &str) {
     let pattern = Pattern::Unstructured(0.6);
     // cheap recoveries (no EBFT epochs) keep the suite fast while still
     // exercising the prune → recoveries DAG
@@ -278,9 +303,9 @@ fn scheduler_suite() {
                          &["none", "dsnot", "masktune"]).unwrap();
 
     // --- serial reference: 1 worker reusing the caller's session ---
-    let dir_serial = tmpdir("sched-serial");
+    let dir_serial = tmpdir(&format!("sched-serial-{tag}"));
     let store_serial = RunStore::open(&dir_serial).unwrap();
-    let serial = Scheduler::new(sweep_env(&e))
+    let serial = Scheduler::new(sweep_env(e))
         .jobs(1)
         .store(&store_serial)
         .local_session(&e.session)
@@ -296,9 +321,9 @@ fn scheduler_suite() {
     }
 
     // --- 2 workers: one prune, identical records modulo timings ---
-    let dir_par = tmpdir("sched-par");
+    let dir_par = tmpdir(&format!("sched-par-{tag}"));
     let store_par = RunStore::open(&dir_par).unwrap();
-    let par = Scheduler::new(sweep_env(&e))
+    let par = Scheduler::new(sweep_env(e))
         .jobs(2)
         .store(&store_par)
         .run(&grid)
@@ -309,7 +334,7 @@ fn scheduler_suite() {
                "concurrent records must match the serial run");
 
     // --- resume: nothing re-runs, records byte-identical incl. timings ---
-    let resumed = Scheduler::new(sweep_env(&e))
+    let resumed = Scheduler::new(sweep_env(e))
         .jobs(2)
         .resume(true)
         .store(&store_par)
@@ -322,7 +347,7 @@ fn scheduler_suite() {
 
     // --- kill-mid-sweep: delete one cell, re-create the in-flight
     // checkpoint an interrupted run would have left, resume ---
-    let fp = sweep_env(&e).fingerprint();
+    let fp = sweep_env(e).fingerprint();
     let victim = &par.records[2];
     let cell_file = dir_par.join(&fp).join("cells").join(
         format!("{}.json", RunStore::file_name(&victim.key())));
@@ -339,7 +364,7 @@ fn scheduler_suite() {
     let pruned = pipe.prune(pruner("wanda").unwrap(), pattern).unwrap();
     store_par.put_checkpoint(&fp, &pruned).unwrap();
 
-    let rerun = Scheduler::new(sweep_env(&e))
+    let rerun = Scheduler::new(sweep_env(e))
         .jobs(2)
         .resume(true)
         .store(&store_par)
@@ -360,7 +385,7 @@ fn scheduler_suite() {
     // and its cleanup leaves a stale checkpoint with every cell complete;
     // a resume (which schedules nothing) must still remove it ---
     store_par.put_checkpoint(&fp, &pruned).unwrap();
-    let noop = Scheduler::new(sweep_env(&e))
+    let noop = Scheduler::new(sweep_env(e))
         .jobs(2)
         .resume(true)
         .store(&store_par)
@@ -376,4 +401,17 @@ fn scheduler_suite() {
 
     std::fs::remove_dir_all(&dir_serial).ok();
     std::fs::remove_dir_all(&dir_par).ok();
+}
+
+#[test]
+fn scheduler_suite_reference() {
+    let e = build_env(BackendKind::Reference)
+        .expect("reference env needs no artifacts");
+    run_scheduler_suite(&e, "ref");
+}
+
+#[test]
+fn scheduler_suite_pjrt() {
+    let Some(e) = build_env(BackendKind::Pjrt) else { return };
+    run_scheduler_suite(&e, "pjrt");
 }
