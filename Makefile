@@ -15,9 +15,13 @@
 #                       `bench-regression` workflow artifact
 #                       (BENCH_pr.json) from a trusted main-branch run
 #                       and commit it as BENCH_baseline.json.
+#   make bench-baseline-ref
+#                       same for BENCH_baseline_reference.json — the
+#                       artifact-free reference-backend smoke cell
+#                       (synthetic tiny manifest, no Python needed).
 
 .PHONY: test artifacts artifacts-tiny artifacts-small diff-test \
-        bench-baseline
+        bench-baseline bench-baseline-ref
 
 test:
 	cargo build --release && cargo test -q
@@ -41,3 +45,13 @@ bench-baseline:
 	EBFT_SMOKE=1 EBFT_BENCH_OUT=BENCH_baseline.json \
 	    cargo bench --bench bench_fig2
 	@echo "BENCH_baseline.json refreshed — review and commit it"
+
+# Artifact-free: the reference backend interprets a synthetic tiny
+# manifest, so this needs only the Rust toolchain. EBFT_THREADS=4
+# matches the CI job's configuration (wall-clock baselines are
+# thread-count sensitive; perplexity is not).
+bench-baseline-ref:
+	EBFT_SMOKE=1 EBFT_BACKEND=reference EBFT_THREADS=4 \
+	    EBFT_BENCH_OUT=BENCH_baseline_reference.json \
+	    cargo bench --bench bench_fig2
+	@echo "BENCH_baseline_reference.json refreshed — review and commit it"

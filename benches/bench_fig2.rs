@@ -19,11 +19,20 @@ use ebft::util::{Json, TableWriter};
 use std::path::PathBuf;
 
 fn main() -> anyhow::Result<()> {
-    let env = BenchEnv::open(0)?;
     // EBFT_SMOKE=1: a single cell — CI's hot-loop regression canary for
-    // the runtime Plan/DeviceBuffer API (see .github/workflows/ci.yml)
+    // the runtime Plan/DeviceBuffer API (see .github/workflows/ci.yml).
+    // With EBFT_BACKEND=reference the smoke cell runs artifact-free on
+    // a synthetic tiny manifest (no Python/JAX needed) — the
+    // bench-regression job's zero-setup cell, also used to surface the
+    // host-kernel speedup (EBFT_THREADS=1 vs N) per PR.
     let smoke = std::env::var("EBFT_SMOKE").map(|v| v == "1")
         .unwrap_or(false);
+    let backend = ebft::runtime::BackendKind::from_env();
+    let env = if smoke && backend == ebft::runtime::BackendKind::Reference {
+        BenchEnv::open_synthetic()?
+    } else {
+        BenchEnv::open(0)?
+    };
     let sample_counts: Vec<usize> = if smoke {
         vec![8]
     } else if full_grid() {
@@ -49,7 +58,8 @@ fn main() -> anyhow::Result<()> {
         table.row(&[n.to_string(), fmt_ppl(cell.ppl)]);
         series.set(&n.to_string(), Json::Num(cell.ppl));
         if smoke {
-            write_bench_payload(&cell, n)?;
+            write_bench_payload(&cell, n,
+                                env.session.backend_kind().as_str())?;
         }
     }
     table.print();
@@ -60,7 +70,7 @@ fn main() -> anyhow::Result<()> {
 /// The CI bench-regression payload: the smoke cell's quality (ppl) and
 /// cost (per-stage wall-clock, incl. the residency model's one-off
 /// per-block bind time) in the shape python/ci/compare_bench.py reads.
-fn write_bench_payload(cell: &RunRecord, calib: usize)
+fn write_bench_payload(cell: &RunRecord, calib: usize, backend: &str)
                        -> anyhow::Result<()> {
     let bind_secs: f64 = cell
         .ebft_report
@@ -69,6 +79,9 @@ fn write_bench_payload(cell: &RunRecord, calib: usize)
         .unwrap_or(0.0);
     let mut j = Json::obj();
     j.set("cell", Json::Str(cell.key()));
+    j.set("backend", Json::Str(backend.to_string()));
+    j.set("threads",
+          Json::Num(ebft::tensor::kernels::threads() as f64));
     j.set("calib_seqs", Json::Num(calib as f64));
     j.set("ppl", Json::Num(cell.ppl));
     j.set("prune_secs", Json::Num(cell.prune_secs));

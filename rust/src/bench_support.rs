@@ -11,7 +11,9 @@
 //! independent grid cells over N workers (one session per worker), and
 //! `EBFT_RESUME=1` re-launches an interrupted sweep from the run store
 //! under `runs/store/` without re-running completed cells or re-pruning
-//! in-flight checkpoints.
+//! in-flight checkpoints. `EBFT_THREADS=N` bounds the intra-op kernel
+//! threads (divided across the workers; results are bit-identical at
+//! every setting).
 
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
@@ -55,6 +57,23 @@ pub fn resume() -> bool {
     std::env::var("EBFT_RESUME").map(|v| v == "1").unwrap_or(false)
 }
 
+/// Intra-op kernel thread budget from `EBFT_THREADS` (0 = process
+/// default: core count). Fed into [`SweepEnv::threads`] so the
+/// scheduler can divide it across `EBFT_JOBS` workers.
+pub fn threads() -> usize {
+    match std::env::var("EBFT_THREADS") {
+        Err(_) => 0,
+        Ok(v) => match v.parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                eprintln!("[bench] ignoring invalid EBFT_THREADS='{v}' \
+                           (want an integer ≥ 1)");
+                0
+            }
+        },
+    }
+}
+
 pub struct BenchEnv {
     pub session: Session,
     pub corpus: MarkovCorpus,
@@ -96,6 +115,33 @@ impl BenchEnv {
         })
     }
 
+    /// Artifact-free bench environment: a synthetic `tiny` manifest on
+    /// the pure-Rust reference backend (no Python/JAX, no AOT build) —
+    /// what the CI bench-regression job's reference smoke cell runs on.
+    /// The manifest is written under `runs/synth-tiny` so scheduler
+    /// workers can reopen it like any artifact directory.
+    pub fn open_synthetic() -> Result<BenchEnv> {
+        use crate::model::synth::{write_synthetic, SynthConfig};
+        use crate::runtime::BackendKind;
+        let root = repo_root();
+        let runs = root.join("runs");
+        let dir = runs.join("synth-tiny");
+        let manifest = write_synthetic(&dir, &SynthConfig::tiny())
+            .context("writing the synthetic tiny manifest")?;
+        let session = Session::open_kind(manifest, BackendKind::Reference)?;
+        let corpus = MarkovCorpus::new(session.manifest.dims.vocab, 7);
+        let dense = base_model(&session, &corpus, &runs, BASE_STEPS, 0)?;
+        Ok(BenchEnv {
+            session,
+            corpus,
+            dense,
+            runs,
+            label: "Synth-Tiny".to_string(),
+            artifact_dir: dir,
+            dense_tag: format!("synth-tiny-seed0-steps{BASE_STEPS}"),
+        })
+    }
+
     /// Pipeline over this env with the default fine-tuning config.
     pub fn pipeline(&self) -> Result<Pipeline<'_>> {
         self.pipeline_with(FtConfig::default())
@@ -131,6 +177,7 @@ impl BenchEnv {
             eval_split: Split::WikiSim,
             dense_tag: self.dense_tag.clone(),
             backend: self.session.backend_kind(),
+            threads: threads(),
         }
     }
 

@@ -38,6 +38,7 @@ use crate::data::{MarkovCorpus, Split};
 use crate::model::ParamStore;
 use crate::pruning::Pattern;
 use crate::runtime::{BackendKind, Session};
+use crate::tensor::kernels;
 
 use super::grid::{Grid, GridResult};
 use super::pipeline::{Pipeline, PipelineBuilder, PrunedModel, RunRecord};
@@ -64,6 +65,14 @@ pub struct SweepEnv<'a> {
     /// session — `Session::backend_kind()` — so all cells of a sweep run
     /// on one substrate). Part of the store fingerprint.
     pub backend: BackendKind,
+    /// Intra-op kernel thread budget for the whole sweep (0 = the
+    /// process default, i.e. `--threads`/`EBFT_THREADS`/core count).
+    /// The scheduler divides it by the worker count so `--jobs N`
+    /// composes with kernel parallelism instead of multiplying threads.
+    /// Deliberately *not* part of the store fingerprint: the kernel
+    /// layer's determinism contract makes thread counts invisible to
+    /// every recorded number.
+    pub threads: usize,
 }
 
 impl SweepEnv<'_> {
@@ -219,6 +228,25 @@ impl Drop for PanicGuard<'_> {
     }
 }
 
+/// Scoped override of the kernel layer's intra-op thread target,
+/// restored on drop (including the unwind path — a failed sweep must
+/// not leave the process narrowed).
+struct ThreadsGuard {
+    prev: usize,
+}
+
+impl ThreadsGuard {
+    fn set(n: usize) -> ThreadsGuard {
+        ThreadsGuard { prev: kernels::set_threads(n) }
+    }
+}
+
+impl Drop for ThreadsGuard {
+    fn drop(&mut self) {
+        kernels::set_threads(self.prev);
+    }
+}
+
 /// Read-only worker context, shared across threads.
 struct WorkerCtx<'s, 'e> {
     env: &'s SweepEnv<'e>,
@@ -356,6 +384,17 @@ impl<'a> Scheduler<'a> {
                 resume: self.resume,
             };
             let n_workers = self.jobs.min(outstanding);
+            // split the intra-op kernel budget across workers for the
+            // sweep's duration — `--jobs 4 --threads 8` runs 4 cells ×
+            // 2 kernel threads, not 4 × 8. Restored on exit (numerics
+            // are thread-count-invariant either way).
+            let budget = if self.env.threads > 0 {
+                self.env.threads
+            } else {
+                kernels::threads()
+            };
+            let _threads_guard =
+                ThreadsGuard::set((budget / n_workers).max(1));
             std::thread::scope(|scope| {
                 let ctx_ref = &ctx;
                 for wid in 1..n_workers {

@@ -16,7 +16,7 @@ use anyhow::Result;
 use crate::masks::MaskSet;
 use crate::model::ParamStore;
 use crate::runtime::Session;
-use crate::tensor::Tensor;
+use crate::tensor::{kernels, Tensor};
 use crate::util::Pcg64;
 
 #[derive(Clone, Debug)]
@@ -111,9 +111,9 @@ pub fn merge(session: &Session, params: &ParamStore, masks: &MaskSet,
             let a = &adapters[ai];
             let b = &adapters[ai + 1];
             ai += 2;
-            let delta = a.matmul(b)?.scale(scale);
-            let masked = merged.tensors[pi].mul(&masks.masks[l][j]);
-            merged.tensors[pi] = masked.add(&delta);
+            let delta = a.matmul(b)?;
+            merged.tensors[pi] = kernels::mask_mul_add_scaled(
+                &merged.tensors[pi], &masks.masks[l][j], &delta, scale);
         }
     }
     Ok(merged)

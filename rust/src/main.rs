@@ -14,7 +14,11 @@
 //! Methods resolve through the coordinator registries, so `--method` and
 //! `--ft` accept any registered pruner/recovery name. `pipeline` and
 //! `grid` take `--jobs N` (concurrent cells, one session per worker) and
-//! `--resume` (skip cells already completed in `runs/store/`).
+//! `--resume` (skip cells already completed in `runs/store/`). Every
+//! subcommand takes `--threads N` (intra-op kernel threads, default
+//! `EBFT_THREADS` or the core count); under `--jobs N` the budget is
+//! divided across workers. Thread counts never change results — the
+//! kernel layer is bit-identical across them.
 //!
 //! Examples:
 //!   ebft pretrain --config small --steps 300
@@ -86,6 +90,17 @@ fn build_pipeline<'a>(args: &Args, session: &'a Session,
 
 fn run() -> Result<()> {
     let args = Args::parse_env()?;
+    // intra-op kernel threads: --threads beats EBFT_THREADS beats core
+    // count. Never changes results — the kernel layer is bit-identical
+    // across thread counts — only wall-clock.
+    if let Some(t) = args.get("threads") {
+        let n: usize = t
+            .parse()
+            .ok()
+            .filter(|&n| n >= 1)
+            .context("--threads expects an integer ≥ 1")?;
+        ebft::tensor::kernels::set_threads(n);
+    }
     match args.subcommand.as_str() {
         "pretrain" => cmd_pretrain(&args),
         "prune" => cmd_prune(&args),
@@ -108,7 +123,7 @@ fn print_usage() {
     println!("ebft — block-wise fine-tuning for sparse LLMs (reproduction)");
     println!();
     println!("usage: ebft <pretrain|prune|finetune|pipeline|grid|flap|eval|zeroshot|info> [--options]");
-    println!("common options: --config tiny|small|base  --artifacts DIR  --runs DIR");
+    println!("common options: --config tiny|small|base  --artifacts DIR  --runs DIR  --threads N");
     println!("sweep options (pipeline/grid): --jobs N  --resume");
     println!("see README.md for full examples");
 }
@@ -215,6 +230,7 @@ fn sweep_env<'a>(args: &Args, paths: &Paths, corpus: &'a MarkovCorpus,
         eval_split: Split::WikiSim,
         dense_tag: dense_tag(args)?,
         backend,
+        threads: args.get_usize("threads", 0)?,
     })
 }
 

@@ -16,7 +16,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::tensor::linalg;
+use crate::tensor::{kernels, linalg};
 use crate::tensor::Tensor;
 
 use super::{Criterion, GroupStats, Pattern};
@@ -25,6 +25,14 @@ pub const PERCDAMP: f32 = 0.01;
 pub const BLOCKSIZE: usize = 32;
 
 /// Returns (mask, updated weights).
+///
+/// The OBS sweep is **column-independent**: saliency, selection and the
+/// in/after-block updates of output column `o` never read another
+/// column. The sweep therefore runs on a transposed copy (one
+/// contiguous row per output column, cache-friendly against `U`'s
+/// rows) with columns parallelized over the kernel pool — each column's
+/// float-op sequence is exactly the serial one, so masks and weights
+/// are bit-identical at every thread count.
 pub fn prune(w: &Tensor, gram: &Tensor, pattern: Pattern)
              -> Result<(Tensor, Tensor)> {
     let (rows, cols) = w.dims2()?;
@@ -46,48 +54,100 @@ pub fn prune(w: &Tensor, gram: &Tensor, pattern: Pattern)
     let hinv = linalg::spd_inverse(&h)?;
     let u = linalg::cholesky_upper(&hinv)?; // H⁻¹ = UᵀU
 
-    let mut w = w.clone();
-    let mut mask = Tensor::ones(&[rows, cols]);
-
-    match pattern {
+    // input-row blocks of the left→right sweep: (start, end, n_prune)
+    let plan: Vec<(usize, usize, usize)> = match pattern {
         Pattern::Unstructured(sparsity) => {
-            // per block of input rows, per output: prune the lowest-saliency
-            // `round(block_len · s)` weights
+            // per block of input rows, per output: prune the
+            // lowest-saliency `round(block_len · s)` weights
+            let mut plan = Vec::new();
             let mut i0 = 0;
             while i0 < rows {
                 let i1 = (i0 + BLOCKSIZE).min(rows);
                 let blen = i1 - i0;
                 let n_prune =
                     ((sparsity as f64) * blen as f64).round() as usize;
-                if n_prune > 0 {
-                    prune_block(&mut w, &mut mask, &u, i0, i1, cols,
-                                BlockRule::Count(n_prune))?;
-                }
-                // propagate this block's accumulated error is already done
-                // inside prune_block (full-row updates)
+                plan.push((i0, i1, n_prune.min(blen)));
                 i0 = i1;
             }
+            plan
         }
         Pattern::NM(n, m) => {
             if rows % m != 0 {
                 bail!("{rows} input rows not divisible by N:M group {m}");
             }
-            let mut g = 0;
-            while g < rows {
-                prune_block(&mut w, &mut mask, &u, g, g + m, cols,
-                            BlockRule::Count(m - n))?;
-                g += m;
-            }
+            (0..rows / m).map(|g| (g * m, (g + 1) * m, m - n)).collect()
         }
         Pattern::Structured(_) => {
             bail!("sparsegpt is a block-local pruner; structured patterns \
                    need flap")
         }
+    };
+
+    // transposed working copies: row c holds output column c
+    let mut wt = kernels::transpose(w)?;
+    let mut mask_t = Tensor::ones(&[cols, rows]);
+    {
+        let (cols_per, n_tasks) =
+            kernels::partition(cols, rows * rows / 2 + 4 * rows);
+        let w_view = kernels::SharedMut::new(&mut wt.data);
+        let m_view = kernels::SharedMut::new(&mut mask_t.data);
+        kernels::par_tasks(n_tasks, |ti| {
+            let c0 = ti * cols_per;
+            let c1 = (c0 + cols_per).min(cols);
+            for c in c0..c1 {
+                // Safety: tasks own disjoint column rows of wt/mask_t.
+                let wrow = unsafe { w_view.range(c * rows, rows) };
+                let mrow = unsafe { m_view.range(c * rows, rows) };
+                sweep_column(wrow, mrow, &u, &plan);
+            }
+        });
     }
 
-    // zero the pruned positions explicitly (updates touched only later cols)
-    let masked = w.mul(&mask);
+    // zero the pruned positions explicitly (updates touched only later
+    // rows) while still in transposed space, then transpose back
+    let masked = kernels::transpose(&kernels::mask_mul(&wt, &mask_t))?;
+    let mask = kernels::transpose(&mask_t)?;
     Ok((mask, masked))
+}
+
+/// The per-output-column OBS sweep: for each input-row block, pick the
+/// `n_prune` lowest-saliency weights (saliency at block entry, standard
+/// SparseGPT), zero them, and push each removal's error onto all later
+/// rows through `U`'s rows.
+fn sweep_column(w: &mut [f32], mask: &mut [f32], u: &Tensor,
+                plan: &[(usize, usize, usize)]) {
+    let rows = w.len();
+    let mut saliency = Vec::new();
+    for &(i0, i1, n_prune) in plan {
+        if n_prune == 0 {
+            continue;
+        }
+        let blen = i1 - i0;
+        saliency.clear();
+        saliency.extend((i0..i1).map(|i| {
+            let d = u.at2(i, i);
+            let wv = w[i];
+            -(wv * wv / (d * d).max(1e-20))
+        }));
+        // lowest-saliency n_prune inputs of this column
+        for bi in Tensor::top_k_indices(&saliency, n_prune.min(blen)) {
+            mask[i0 + bi] = 0.0;
+        }
+        // left-to-right OBS sweep: zero pruned entries, push error right
+        for i in i0..i1 {
+            if mask[i] == 0.0 {
+                let d = u.at2(i, i);
+                let err = w[i] / d;
+                if err != 0.0 {
+                    let urow = &u.data[i * rows + i..(i + 1) * rows];
+                    for (wk, &uk) in w[i..].iter_mut().zip(urow) {
+                        *wk -= err * uk;
+                    }
+                }
+                // (w[i] becomes exactly 0 via the k=i update: u[i,i]=d)
+            }
+        }
+    }
 }
 
 /// Registry-facing criterion object.
@@ -106,60 +166,6 @@ impl Criterion for SparseGpt {
         let (mask, new_w) = prune(w, &g.gram, pattern)?;
         Ok((mask, Some(new_w)))
     }
-}
-
-enum BlockRule {
-    /// Prune exactly this many inputs per output within the block.
-    Count(usize),
-}
-
-/// Prune within input rows [i0, i1) for every output column, applying OBS
-/// updates to all later rows (both inside and beyond the block).
-fn prune_block(w: &mut Tensor, mask: &mut Tensor, u: &Tensor, i0: usize,
-               i1: usize, cols: usize, rule: BlockRule) -> Result<()> {
-    let rows = w.shape[0];
-    let blen = i1 - i0;
-    let BlockRule::Count(n_prune) = rule;
-    let n_prune = n_prune.min(blen);
-    if n_prune == 0 {
-        return Ok(());
-    }
-
-    // saliency uses the weight values *at block entry* (standard SparseGPT:
-    // mask chosen per block before the in-block sweep applies updates)
-    let mut saliency = vec![0.0f32; blen];
-    for c in 0..cols {
-        for (bi, i) in (i0..i1).enumerate() {
-            let d = u.at2(i, i);
-            let wv = w.at2(i, c);
-            saliency[bi] = wv * wv / (d * d).max(1e-20);
-        }
-        // lowest-saliency n_prune inputs of this column
-        let neg: Vec<f32> = saliency.iter().map(|&s| -s).collect();
-        let prune_idx = Tensor::top_k_indices(&neg, n_prune);
-        for bi in prune_idx {
-            let i = i0 + bi;
-            *mask.at2_mut(i, c) = 0.0;
-        }
-    }
-
-    // left-to-right OBS sweep: zero pruned entries, push error to the right
-    for i in i0..i1 {
-        let d = u.at2(i, i);
-        for c in 0..cols {
-            if mask.at2(i, c) == 0.0 {
-                let err = w.at2(i, c) / d;
-                if err != 0.0 {
-                    for k in i..rows {
-                        let upd = err * u.at2(i, k);
-                        *w.at2_mut(k, c) -= upd;
-                    }
-                }
-                // (w[i,c] becomes exactly 0 via the k=i update: u[i,i]=d)
-            }
-        }
-    }
-    Ok(())
 }
 
 /// Reconstruction error ‖X(Ŵ − W)‖² expressed through the Gram matrix:

@@ -14,7 +14,7 @@ use anyhow::Result;
 use crate::masks::MaskSet;
 use crate::model::ParamStore;
 use crate::runtime::{DeviceBuffer, Session};
-use crate::tensor::Tensor;
+use crate::tensor::{kernels, Tensor};
 
 pub const N_GROUPS: usize = 4;
 
@@ -49,9 +49,12 @@ impl GroupStats {
 
     fn accumulate(&mut self, colsumsq: &Tensor, colsum: &Tensor,
                   gram: &Tensor, n_tokens: usize) {
-        self.colsumsq = self.colsumsq.add(colsumsq);
-        self.colsum = self.colsum.add(colsum);
-        self.gram = self.gram.add(gram);
+        // in-place parallel accumulation — the Gram matrices are d×d
+        // per batch over the whole calibration stream, the hot part of
+        // stats collection
+        kernels::add_assign(&mut self.colsumsq, colsumsq);
+        kernels::add_assign(&mut self.colsum, colsum);
+        kernels::add_assign(&mut self.gram, gram);
         self.n_tokens += n_tokens;
     }
 

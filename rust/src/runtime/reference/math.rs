@@ -14,15 +14,28 @@
 //!   parameterization (mask product, LoRA factors, identity);
 //! - RMSNorm ε and the RoPE frequency schedule match `kernels/ref.py`.
 //!
-//! Shapes are test/CI scale, so clarity beats blocking; `Tensor::matmul`
-//! is the only O(n³) primitive.
+//! All O(n³) products go through the shared kernel layer
+//! ([`crate::tensor::kernels`]) — blocked, parallel, and bit-identical
+//! across thread counts — and the per-row/per-head loops here
+//! parallelize on the same pool with the same determinism contract:
+//! each output element is owned by one task with a fixed interior
+//! accumulation order, and cross-row reductions combine fixed-size
+//! block partials in block order.
 
 use anyhow::Result;
 
+use crate::tensor::kernels::{self, SharedMut, SharedMut64};
 use crate::tensor::Tensor;
+
+pub use crate::tensor::kernels::AdamHyper;
 
 /// RMSNorm epsilon — matches `kernels/ref.py::rmsnorm`.
 pub const RMS_EPS: f32 = 1e-5;
+
+/// Fixed row-block length for cross-row gradient partials (`dg` in the
+/// RMSNorm backward): partials are computed per block and combined in
+/// block order, so the result is independent of the thread count.
+const ROW_BLOCK: usize = 64;
 
 /// Model dimensions the reference kernels need (a subset of
 /// `ModelDims`, copied so this module stays manifest-agnostic).
@@ -47,17 +60,12 @@ impl Dims {
 // elementwise
 // ---------------------------------------------------------------------
 
-fn sigmoid(z: f32) -> f32 {
-    1.0 / (1.0 + (-z).exp())
-}
-
+/// `silu(z) = z·σ(z)` — the scalar form of [`kernels::silu_mul`]'s
+/// activation (kept for tests and external callers; the hot paths use
+/// the fused kernel).
 pub fn silu(z: f32) -> f32 {
-    z * sigmoid(z)
-}
-
-fn dsilu(z: f32) -> f32 {
-    let s = sigmoid(z);
-    s * (1.0 + z * (1.0 - s))
+    let s = 1.0 / (1.0 + (-z).exp());
+    z * s
 }
 
 // ---------------------------------------------------------------------
@@ -65,44 +73,82 @@ fn dsilu(z: f32) -> f32 {
 // ---------------------------------------------------------------------
 
 /// `y[t,j] = x[t,j] · r[t] · g[j]`, `r = rsqrt(mean_j x² + ε)`.
-/// Returns `(y, r)`; `r` is the backward cache.
+/// Returns `(y, r)`; `r` is the backward cache. Rows are independent —
+/// parallel over row blocks.
 pub fn rmsnorm_fwd(x: &Tensor, g: &[f32]) -> (Tensor, Vec<f32>) {
     let (t, d) = (x.shape[0], x.shape[1]);
     let mut y = Tensor::zeros(&[t, d]);
     let mut rs = vec![0.0f32; t];
-    for i in 0..t {
-        let row = x.row(i);
-        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
-        let r = 1.0 / (ms + RMS_EPS).sqrt();
-        rs[i] = r;
-        let out = y.row_mut(i);
-        for j in 0..d {
-            out[j] = row[j] * r * g[j];
+    let (rows_per, n_tasks) = kernels::partition(t, 3 * d);
+    let y_view = SharedMut::new(&mut y.data);
+    let r_view = SharedMut::new(&mut rs);
+    kernels::par_tasks(n_tasks, |ti| {
+        let i0 = ti * rows_per;
+        let i1 = (i0 + rows_per).min(t);
+        // Safety: tasks own disjoint row ranges.
+        let yrows = unsafe { y_view.range(i0 * d, (i1 - i0) * d) };
+        let rrows = unsafe { r_view.range(i0, i1 - i0) };
+        for i in i0..i1 {
+            let row = x.row(i);
+            let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+            let r = 1.0 / (ms + RMS_EPS).sqrt();
+            rrows[i - i0] = r;
+            let out = &mut yrows[(i - i0) * d..(i - i0 + 1) * d];
+            for ((o, &xv), &gv) in out.iter_mut().zip(row).zip(g) {
+                *o = xv * r * gv;
+            }
         }
-    }
+    });
     (y, rs)
 }
 
-/// Gradients of `rmsnorm_fwd`: returns `(dx, dg)`.
+/// Gradients of `rmsnorm_fwd`: returns `(dx, dg)`. `dx` rows are
+/// independent; `dg` sums over rows through fixed `ROW_BLOCK`-sized
+/// partials combined in block order.
 pub fn rmsnorm_bwd(x: &Tensor, g: &[f32], r: &[f32], dy: &Tensor)
                    -> (Tensor, Vec<f32>) {
     let (t, d) = (x.shape[0], x.shape[1]);
     let mut dx = Tensor::zeros(&[t, d]);
+    let n_blocks = t.div_ceil(ROW_BLOCK);
+    let mut dg_partials = vec![0.0f32; n_blocks * d];
+    {
+        let (blocks_per, n_tasks) =
+            kernels::partition(n_blocks, ROW_BLOCK * 6 * d);
+        let dx_view = SharedMut::new(&mut dx.data);
+        let dg_view = SharedMut::new(&mut dg_partials);
+        kernels::par_tasks(n_tasks, |ti| {
+            let b0 = ti * blocks_per;
+            let b1 = (b0 + blocks_per).min(n_blocks);
+            for bi in b0..b1 {
+                let i0 = bi * ROW_BLOCK;
+                let i1 = (i0 + ROW_BLOCK).min(t);
+                // Safety: tasks own disjoint row-block ranges.
+                let dxrows =
+                    unsafe { dx_view.range(i0 * d, (i1 - i0) * d) };
+                let dgp = unsafe { dg_view.range(bi * d, d) };
+                for i in i0..i1 {
+                    let xr = x.row(i);
+                    let dyr = dy.row(i);
+                    let ri = r[i];
+                    let mut s = 0.0f32;
+                    for j in 0..d {
+                        dgp[j] += dyr[j] * xr[j] * ri;
+                        s += dyr[j] * g[j] * xr[j];
+                    }
+                    // through r: dr/dx_j = −x_j·r³/D
+                    let c = s * ri * ri / d as f32;
+                    let dxr = &mut dxrows[(i - i0) * d..(i - i0 + 1) * d];
+                    for j in 0..d {
+                        dxr[j] = ri * (dyr[j] * g[j] - xr[j] * c);
+                    }
+                }
+            }
+        });
+    }
     let mut dg = vec![0.0f32; d];
-    for i in 0..t {
-        let xr = x.row(i);
-        let dyr = dy.row(i);
-        let ri = r[i];
-        let mut s = 0.0f32;
-        for j in 0..d {
-            dg[j] += dyr[j] * xr[j] * ri;
-            s += dyr[j] * g[j] * xr[j];
-        }
-        // through r: dr/dx_j = −x_j·r³/D
-        let c = s * ri * ri / d as f32;
-        let dxr = dx.row_mut(i);
-        for j in 0..d {
-            dxr[j] = ri * (dyr[j] * g[j] - xr[j] * c);
+    for bi in 0..n_blocks {
+        for (dgj, &p) in dg.iter_mut().zip(&dg_partials[bi * d..]) {
+            *dgj += p;
         }
     }
     (dx, dg)
@@ -115,9 +161,11 @@ pub fn rmsnorm_bwd(x: &Tensor, g: &[f32], r: &[f32], dy: &Tensor)
 /// Apply rotary embedding in place on a `[T, D]` activation in head
 /// layout. `sin_sign = 1.0` is the forward rotation; `-1.0` applies the
 /// transpose (= rotation by −θ), which is the reverse-mode adjoint.
+/// Rows are independent — parallel over row blocks.
 pub fn rope(x: &mut Tensor, dm: &Dims, sin_sign: f32) {
     let (h, hd) = (dm.n_heads, dm.head_dim);
     let half = hd / 2;
+    let d = h * hd;
     // the rotation angles depend only on (position, pair index): build
     // the seq×half sin/cos table once instead of per (batch, head)
     let table: Vec<(f32, f32)> = (0..dm.seq)
@@ -129,9 +177,18 @@ pub fn rope(x: &mut Tensor, dm: &Dims, sin_sign: f32) {
             })
         })
         .collect();
-    for b in 0..dm.batch {
-        for s in 0..dm.seq {
-            let row = x.row_mut(b * dm.seq + s);
+    let t = dm.batch * dm.seq;
+    let (rows_per, n_tasks) = kernels::partition(t, 6 * d);
+    let x_view = SharedMut::new(&mut x.data);
+    let seq = dm.seq;
+    kernels::par_tasks(n_tasks, |ti| {
+        let t0 = ti * rows_per;
+        let t1 = (t0 + rows_per).min(t);
+        // Safety: tasks own disjoint row ranges.
+        let rows = unsafe { x_view.range(t0 * d, (t1 - t0) * d) };
+        for tr in t0..t1 {
+            let s = tr % seq;
+            let row = &mut rows[(tr - t0) * d..(tr - t0 + 1) * d];
             for head in 0..h {
                 let off = head * hd;
                 for i in 0..half {
@@ -143,7 +200,7 @@ pub fn rope(x: &mut Tensor, dm: &Dims, sin_sign: f32) {
                 }
             }
         }
-    }
+    });
 }
 
 // ---------------------------------------------------------------------
@@ -158,6 +215,9 @@ pub struct AttnCache {
 
 /// Causal softmax attention over post-RoPE `q, k, v` (all `[T, D]` in
 /// head layout). Returns the context in the same layout plus the cache.
+/// Parallel over (batch, head) pairs — each pair owns the column slice
+/// `[off, off+hd)` of its batch's context rows and a contiguous probs
+/// block, with the fixed causal accumulation order inside.
 pub fn attention_fwd(q: &Tensor, k: &Tensor, v: &Tensor, dm: &Dims)
                      -> (Tensor, AttnCache) {
     let (bn, s, h, hd) = (dm.batch, dm.seq, dm.n_heads, dm.head_dim);
@@ -165,15 +225,28 @@ pub fn attention_fwd(q: &Tensor, k: &Tensor, v: &Tensor, dm: &Dims)
     let scale = 1.0 / (hd as f32).sqrt();
     let mut ctx = Tensor::zeros(&[bn * s, d]);
     let mut probs = vec![0.0f32; bn * h * s * s];
-    let mut scores = vec![0.0f32; s];
-    for b in 0..bn {
-        for head in 0..h {
+    let ctx_view = SharedMut::new(&mut ctx.data);
+    let probs_view = SharedMut::new(&mut probs);
+    let n_pairs = bn * h;
+    // one task per (batch, head): pairs are few but heavy (O(S²·hd));
+    // partition() only collapses them for tiny shapes
+    let (pairs_per, n_tasks) = kernels::partition(n_pairs, 2 * s * s * hd);
+    kernels::par_tasks(n_tasks, |ti| {
+        let p0 = ti * pairs_per;
+        let p1 = (p0 + pairs_per).min(n_pairs);
+        let mut scores = vec![0.0f32; s];
+        for pair in p0..p1 {
+            let (b, head) = (pair / h, pair % h);
             let off = head * hd;
+            // Safety: probs blocks are contiguous and disjoint per pair.
+            let pblock =
+                unsafe { probs_view.range(pair * s * s, s * s) };
             for si in 0..s {
-                let ti = b * s + si;
-                let qrow = &q.data[ti * d + off..ti * d + off + hd];
+                let ti2 = b * s + si;
+                let qrow = &q.data[ti2 * d + off..ti2 * d + off + hd];
                 let mut maxs = f32::NEG_INFINITY;
-                for (tj, slot) in scores.iter_mut().enumerate().take(si + 1) {
+                for (tj, slot) in scores.iter_mut().enumerate().take(si + 1)
+                {
                     let krow =
                         &k.data[(b * s + tj) * d + off..(b * s + tj) * d
                                 + off + hd];
@@ -191,26 +264,32 @@ pub fn attention_fwd(q: &Tensor, k: &Tensor, v: &Tensor, dm: &Dims)
                     *slot = (*slot - maxs).exp();
                     denom += *slot;
                 }
-                let pbase = ((b * h + head) * s + si) * s;
-                let crow = &mut ctx.data[ti * d + off..ti * d + off + hd];
+                // Safety: this pair owns columns [off, off+hd) of row
+                // ti2 — disjoint from every other pair's slice.
+                let crow =
+                    unsafe { ctx_view.range(ti2 * d + off, hd) };
+                let prow = &mut pblock[si * s..(si + 1) * s];
                 for (tj, &e) in scores.iter().enumerate().take(si + 1) {
                     let p = e / denom;
-                    probs[pbase + tj] = p;
+                    prow[tj] = p;
                     let vrow =
                         &v.data[(b * s + tj) * d + off..(b * s + tj) * d
                                 + off + hd];
-                    for j in 0..hd {
-                        crow[j] += p * vrow[j];
+                    for (c, &vv) in crow.iter_mut().zip(vrow) {
+                        *c += p * vv;
                     }
                 }
             }
         }
-    }
+    });
     (ctx, AttnCache { probs })
 }
 
 /// Gradients of `attention_fwd` given `dctx`: returns `(dq, dk, dv)`,
-/// all `[T, D]` in head layout, w.r.t. the *post-RoPE* q/k.
+/// all `[T, D]` in head layout, w.r.t. the *post-RoPE* q/k. Same
+/// (batch, head) task ownership as the forward — the `dk`/`dv`
+/// accumulations for a pair stay inside its task, in the fixed causal
+/// order.
 pub fn attention_bwd(q: &Tensor, k: &Tensor, v: &Tensor, cache: &AttnCache,
                      dctx: &Tensor, dm: &Dims) -> (Tensor, Tensor, Tensor) {
     let (bn, s, h, hd) = (dm.batch, dm.seq, dm.n_heads, dm.head_dim);
@@ -219,50 +298,61 @@ pub fn attention_bwd(q: &Tensor, k: &Tensor, v: &Tensor, cache: &AttnCache,
     let mut dq = Tensor::zeros(&[bn * s, d]);
     let mut dk = Tensor::zeros(&[bn * s, d]);
     let mut dv = Tensor::zeros(&[bn * s, d]);
-    let mut dp = vec![0.0f32; s];
-    for b in 0..bn {
-        for head in 0..h {
+    let dq_view = SharedMut::new(&mut dq.data);
+    let dk_view = SharedMut::new(&mut dk.data);
+    let dv_view = SharedMut::new(&mut dv.data);
+    let n_pairs = bn * h;
+    let (pairs_per, n_tasks) = kernels::partition(n_pairs, 4 * s * s * hd);
+    kernels::par_tasks(n_tasks, |ti| {
+        let p0 = ti * pairs_per;
+        let p1 = (p0 + pairs_per).min(n_pairs);
+        let mut dp = vec![0.0f32; s];
+        for pair in p0..p1 {
+            let (b, head) = (pair / h, pair % h);
             let off = head * hd;
             for si in 0..s {
-                let ti = b * s + si;
-                let pbase = ((b * h + head) * s + si) * s;
+                let ti2 = b * s + si;
+                let pbase = (pair * s + si) * s;
                 let dcrow =
-                    &dctx.data[ti * d + off..ti * d + off + hd];
+                    &dctx.data[ti2 * d + off..ti2 * d + off + hd];
                 // dp[tj] = dctx·v[tj];  dv[tj] += p[tj]·dctx
                 let mut row_dot = 0.0f32;
-                for tj in 0..=si {
+                for (tj, dpj) in dp.iter_mut().enumerate().take(si + 1) {
                     let tjr = (b * s + tj) * d + off;
                     let vrow = &v.data[tjr..tjr + hd];
                     let mut acc = 0.0f32;
-                    for j in 0..hd {
-                        acc += dcrow[j] * vrow[j];
+                    for (&dc, &vv) in dcrow.iter().zip(vrow) {
+                        acc += dc * vv;
                     }
-                    dp[tj] = acc;
+                    *dpj = acc;
                     let p = cache.probs[pbase + tj];
                     row_dot += acc * p;
-                    let dvrow = &mut dv.data[tjr..tjr + hd];
-                    for j in 0..hd {
-                        dvrow[j] += p * dcrow[j];
+                    // Safety: pair-owned column slice of row tj.
+                    let dvrow = unsafe { dv_view.range(tjr, hd) };
+                    for (dvj, &dc) in dvrow.iter_mut().zip(dcrow) {
+                        *dvj += p * dc;
                     }
                 }
                 // softmax backward: ds = p ⊙ (dp − Σ dp·p), then through
                 // the scaled q·k scores
-                for tj in 0..=si {
+                for (tj, &dpj) in dp.iter().enumerate().take(si + 1) {
                     let p = cache.probs[pbase + tj];
-                    let ds = p * (dp[tj] - row_dot) * scale;
-                    if ds == 0.0 {
-                        continue;
-                    }
+                    let ds = p * (dpj - row_dot) * scale;
                     let tjr = (b * s + tj) * d + off;
-                    let tir = ti * d + off;
+                    let tir = ti2 * d + off;
+                    // Safety: pair-owned column slices.
+                    let dqrow = unsafe { dq_view.range(tir, hd) };
+                    let dkrow = unsafe { dk_view.range(tjr, hd) };
+                    let krow = &k.data[tjr..tjr + hd];
+                    let qrow = &q.data[tir..tir + hd];
                     for j in 0..hd {
-                        dq.data[tir + j] += ds * k.data[tjr + j];
-                        dk.data[tjr + j] += ds * q.data[tir + j];
+                        dqrow[j] += ds * krow[j];
+                        dkrow[j] += ds * qrow[j];
                     }
                 }
             }
         }
-    }
+    });
     (dq, dk, dv)
 }
 
@@ -297,19 +387,19 @@ pub struct BlockCache {
 pub fn block_fwd(dm: &Dims, eff: &[Tensor], g1: &[f32], g2: &[f32],
                  x: &Tensor) -> Result<BlockCache> {
     let (xn, r1) = rmsnorm_fwd(x, g1);
-    let mut q = xn.matmul(&eff[0])?;
-    let mut k = xn.matmul(&eff[1])?;
-    let v = xn.matmul(&eff[2])?;
+    let mut q = kernels::matmul(&xn, &eff[0])?;
+    let mut k = kernels::matmul(&xn, &eff[1])?;
+    let v = kernels::matmul(&xn, &eff[2])?;
     rope(&mut q, dm, 1.0);
     rope(&mut k, dm, 1.0);
     let (ctx, attn) = attention_fwd(&q, &k, &v, dm);
-    let attn_out = ctx.matmul(&eff[3])?;
+    let attn_out = kernels::matmul(&ctx, &eff[3])?;
     let xa = x.add(&attn_out);
     let (hn, r2) = rmsnorm_fwd(&xa, g2);
-    let gate = hn.matmul(&eff[4])?;
-    let up = hn.matmul(&eff[5])?;
-    let hmid = gate.zip(&up, |g, u| silu(g) * u);
-    let down = hmid.matmul(&eff[6])?;
+    let gate = kernels::matmul(&hn, &eff[4])?;
+    let up = kernels::matmul(&hn, &eff[5])?;
+    let hmid = kernels::silu_mul(&gate, &up);
+    let down = kernels::matmul(&hmid, &eff[6])?;
     let y = xa.add(&down);
     Ok(BlockCache {
         x: x.clone(),
@@ -343,39 +433,32 @@ pub struct BlockGrads {
 pub fn block_bwd(dm: &Dims, eff: &[Tensor], g1: &[f32], g2: &[f32],
                  c: &BlockCache, dy: &Tensor) -> Result<BlockGrads> {
     // ---- MLP sub-block (y = xa + hmid @ w_down) ----
-    let d_w_down = c.hmid.transpose2()?.matmul(dy)?;
-    let dhmid = dy.matmul(&eff[6].transpose2()?)?;
-    // hmid = silu(gate) ⊙ up
-    let mut dgate = Tensor::zeros(&c.gate.shape);
-    let mut dup = Tensor::zeros(&c.up.shape);
-    for i in 0..dhmid.data.len() {
-        let dh = dhmid.data[i];
-        dgate.data[i] = dh * c.up.data[i] * dsilu(c.gate.data[i]);
-        dup.data[i] = dh * silu(c.gate.data[i]);
-    }
-    let d_w_gate = c.hn.transpose2()?.matmul(&dgate)?;
-    let d_w_up = c.hn.transpose2()?.matmul(&dup)?;
-    let dhn = dgate
-        .matmul(&eff[4].transpose2()?)?
-        .add(&dup.matmul(&eff[5].transpose2()?)?);
+    // weight grads are Xᵀ·dY, activation grads dY·Wᵀ — both fused
+    // kernels, no transposes materialized
+    let d_w_down = kernels::matmul_at_b(&c.hmid, dy)?;
+    let dhmid = kernels::matmul_a_bt(dy, &eff[6])?;
+    let (dgate, dup) = kernels::silu_mul_bwd(&dhmid, &c.gate, &c.up);
+    let d_w_gate = kernels::matmul_at_b(&c.hn, &dgate)?;
+    let d_w_up = kernels::matmul_at_b(&c.hn, &dup)?;
+    let dhn = kernels::matmul_a_bt(&dgate, &eff[4])?
+        .add(&kernels::matmul_a_bt(&dup, &eff[5])?);
     let (dxa_norm, dg2) = rmsnorm_bwd(&c.xa, g2, &c.r2, &dhn);
     let dxa = dy.add(&dxa_norm);
 
     // ---- attention sub-block (xa = x + ctx @ w_o) ----
-    let d_w_o = c.ctx.transpose2()?.matmul(&dxa)?;
-    let dctx = dxa.matmul(&eff[3].transpose2()?)?;
+    let d_w_o = kernels::matmul_at_b(&c.ctx, &dxa)?;
+    let dctx = kernels::matmul_a_bt(&dxa, &eff[3])?;
     let (mut dq, mut dk, dv) =
         attention_bwd(&c.q, &c.k, &c.v, &c.attn, &dctx, dm);
     // RoPE adjoint (rotation transpose) back to the pre-RoPE projections
     rope(&mut dq, dm, -1.0);
     rope(&mut dk, dm, -1.0);
-    let d_w_q = c.xn.transpose2()?.matmul(&dq)?;
-    let d_w_k = c.xn.transpose2()?.matmul(&dk)?;
-    let d_w_v = c.xn.transpose2()?.matmul(&dv)?;
-    let dxn = dq
-        .matmul(&eff[0].transpose2()?)?
-        .add(&dk.matmul(&eff[1].transpose2()?)?)
-        .add(&dv.matmul(&eff[2].transpose2()?)?);
+    let d_w_q = kernels::matmul_at_b(&c.xn, &dq)?;
+    let d_w_k = kernels::matmul_at_b(&c.xn, &dk)?;
+    let d_w_v = kernels::matmul_at_b(&c.xn, &dv)?;
+    let dxn = kernels::matmul_a_bt(&dq, &eff[0])?
+        .add(&kernels::matmul_a_bt(&dk, &eff[1])?)
+        .add(&kernels::matmul_a_bt(&dv, &eff[2])?);
     let (dx_norm, dg1) = rmsnorm_bwd(&c.x, g1, &c.r1, &dxn);
     let dx = dxa.add(&dx_norm);
     Ok(BlockGrads {
@@ -391,18 +474,32 @@ pub fn block_bwd(dm: &Dims, eff: &[Tensor], g1: &[f32], g2: &[f32],
 // ---------------------------------------------------------------------
 
 /// `tokens → x0 [T, D]` (row gather; out-of-range tokens clamp, matching
-/// `jnp.take`'s jit-mode clipping).
+/// `jnp.take`'s jit-mode clipping). Parallel over output rows.
 pub fn embed_fwd(embed: &Tensor, tokens: &[i32], vocab: usize,
                  d_model: usize) -> Tensor {
-    let mut out = Tensor::zeros(&[tokens.len(), d_model]);
-    for (i, &tok) in tokens.iter().enumerate() {
-        let t = (tok.max(0) as usize).min(vocab - 1);
-        out.row_mut(i).copy_from_slice(embed.row(t));
-    }
+    let t = tokens.len();
+    let mut out = Tensor::zeros(&[t, d_model]);
+    let (rows_per, n_tasks) = kernels::partition(t, d_model);
+    let out_view = SharedMut::new(&mut out.data);
+    kernels::par_tasks(n_tasks, |ti| {
+        let i0 = ti * rows_per;
+        let i1 = (i0 + rows_per).min(t);
+        // Safety: tasks own disjoint row ranges.
+        let rows = unsafe { out_view.range(i0 * d_model,
+                                           (i1 - i0) * d_model) };
+        for i in i0..i1 {
+            let tk = (tokens[i].max(0) as usize).min(vocab - 1);
+            rows[(i - i0) * d_model..(i - i0 + 1) * d_model]
+                .copy_from_slice(embed.row(tk));
+        }
+    });
     out
 }
 
-/// Scatter-add of `dx0` rows back onto the embedding table.
+/// Scatter-add of `dx0` rows back onto the embedding table. Stays
+/// serial: repeated tokens collide on the same output row, and the
+/// fixed row-ascending accumulation order is the determinism contract —
+/// the work is O(T·D), far below the matmuls around it.
 pub fn embed_bwd(vocab: usize, d_model: usize, tokens: &[i32],
                  dx0: &Tensor) -> Tensor {
     let mut de = Tensor::zeros(&[vocab, d_model]);
@@ -410,8 +507,8 @@ pub fn embed_bwd(vocab: usize, d_model: usize, tokens: &[i32],
         let t = (tok.max(0) as usize).min(vocab - 1);
         let src = dx0.row(i);
         let dst = de.row_mut(t);
-        for j in 0..d_model {
-            dst[j] += src[j];
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d += s;
         }
     }
     de
@@ -430,37 +527,53 @@ pub struct HeadCache {
 }
 
 /// Head forward: per position `s < S−1`, NLL of predicting
-/// `tokens[b, s+1]` from `x[b, s]`.
+/// `tokens[b, s+1]` from `x[b, s]`. The `[T,D]@[D,V]` logits product is
+/// the blocked kernel; softmax rows run in parallel with the NLL summed
+/// through fixed row-block f64 partials (block order, thread-count
+/// independent).
 pub fn head_fwd(dm: &Dims, g_norm: &[f32], head: &Tensor, x: &Tensor,
                 tokens: &[i32]) -> Result<HeadCache> {
     let (xn, r) = rmsnorm_fwd(x, g_norm);
-    let logits = xn.matmul(head)?;
+    let logits = kernels::matmul(&xn, head)?;
     let v = dm.vocab;
-    let mut probs = Tensor::zeros(&[dm.tokens(), v]);
-    let mut nll_sum = 0.0f64;
-    for b in 0..dm.batch {
-        for s in 0..dm.seq {
-            let ti = b * dm.seq + s;
-            let row = logits.row(ti);
-            let maxv =
-                row.iter().fold(f32::NEG_INFINITY, |a, &x2| a.max(x2));
-            let mut denom = 0.0f32;
-            let prow = probs.row_mut(ti);
-            for j in 0..v {
-                prow[j] = (row[j] - maxv).exp();
-                denom += prow[j];
+    let t = dm.tokens();
+    let seq = dm.seq;
+    let mut probs = Tensor::zeros(&[t, v]);
+    let mut row_nll = vec![0.0f64; t];
+    {
+        let (rows_per, n_tasks) = kernels::partition(t, 6 * v);
+        let probs_view = SharedMut::new(&mut probs.data);
+        let nll_view = SharedMut64::new(&mut row_nll);
+        kernels::par_tasks(n_tasks, |ti| {
+            let i0 = ti * rows_per;
+            let i1 = (i0 + rows_per).min(t);
+            // Safety: tasks own disjoint row ranges.
+            let prows = unsafe { probs_view.range(i0 * v, (i1 - i0) * v) };
+            for i in i0..i1 {
+                let row = logits.row(i);
+                let maxv =
+                    row.iter().fold(f32::NEG_INFINITY, |a, &x2| a.max(x2));
+                let mut denom = 0.0f32;
+                let prow = &mut prows[(i - i0) * v..(i - i0 + 1) * v];
+                for (p, &l) in prow.iter_mut().zip(row) {
+                    *p = (l - maxv).exp();
+                    denom += *p;
+                }
+                for p in prow.iter_mut() {
+                    *p /= denom;
+                }
+                let s = i % seq;
+                if s + 1 < seq {
+                    let tgt = (tokens[i + 1].max(0) as usize).min(v - 1);
+                    let logp = row[tgt] - maxv - denom.ln();
+                    // Safety: one slot per row.
+                    unsafe { nll_view.set(i, -(logp as f64)) };
+                }
             }
-            for p in prow.iter_mut() {
-                *p /= denom;
-            }
-            if s + 1 < dm.seq {
-                let tgt = (tokens[b * dm.seq + s + 1].max(0) as usize)
-                    .min(v - 1);
-                let logp = row[tgt] - maxv - denom.ln();
-                nll_sum -= logp as f64;
-            }
-        }
+        });
     }
+    // combine per-row NLL in fixed row order (rows at s = S−1 stayed 0)
+    let nll_sum: f64 = row_nll.iter().sum();
     Ok(HeadCache {
         xn,
         r,
@@ -476,35 +589,48 @@ pub fn head_bwd(dm: &Dims, g_norm: &[f32], head: &Tensor, x: &Tensor,
                 tokens: &[i32], c: &HeadCache)
                 -> Result<(Tensor, Vec<f32>, Tensor)> {
     let v = dm.vocab;
+    let t = dm.tokens();
+    let seq = dm.seq;
     let inv = 1.0 / c.count;
-    let mut dlogits = Tensor::zeros(&[dm.tokens(), v]);
-    for b in 0..dm.batch {
-        for s in 0..dm.seq - 1 {
-            let ti = b * dm.seq + s;
-            let tgt =
-                (tokens[b * dm.seq + s + 1].max(0) as usize).min(v - 1);
-            let prow = c.probs.row(ti);
-            let drow = dlogits.row_mut(ti);
-            for j in 0..v {
-                drow[j] = prow[j] * inv;
+    let mut dlogits = Tensor::zeros(&[t, v]);
+    {
+        let (rows_per, n_tasks) = kernels::partition(t, 2 * v);
+        let dl_view = SharedMut::new(&mut dlogits.data);
+        kernels::par_tasks(n_tasks, |ti| {
+            let i0 = ti * rows_per;
+            let i1 = (i0 + rows_per).min(t);
+            // Safety: tasks own disjoint row ranges.
+            let drows = unsafe { dl_view.range(i0 * v, (i1 - i0) * v) };
+            for i in i0..i1 {
+                if i % seq + 1 >= seq {
+                    continue; // no loss at the last position
+                }
+                let tgt = (tokens[i + 1].max(0) as usize).min(v - 1);
+                let prow = c.probs.row(i);
+                let drow = &mut drows[(i - i0) * v..(i - i0 + 1) * v];
+                for (d, &p) in drow.iter_mut().zip(prow) {
+                    *d = p * inv;
+                }
+                drow[tgt] -= inv;
             }
-            drow[tgt] -= inv;
-        }
+        });
     }
-    let dhead = c.xn.transpose2()?.matmul(&dlogits)?;
-    let dxn = dlogits.matmul(&head.transpose2()?)?;
+    let dhead = kernels::matmul_at_b(&c.xn, &dlogits)?;
+    let dxn = kernels::matmul_a_bt(&dlogits, head)?;
     let (dx, dg) = rmsnorm_bwd(x, g_norm, &c.r, &dxn);
     Ok((dx, dg, dhead))
 }
 
 /// Weighted per-sequence NLL (`head_seq_nll` artifact): returns
 /// `(nll[B], wsum[B])` where `nll[b] = Σ_{s<S−1} w[b,s+1]·nll_{b,s}` and
-/// `wsum[b] = Σ_{s≥1} w[b,s]`.
+/// `wsum[b] = Σ_{s≥1} w[b,s]`. The logits product is the blocked
+/// kernel; the per-sequence reduction is O(T·V) and keeps its fixed
+/// serial order.
 pub fn head_seq_nll(dm: &Dims, g_norm: &[f32], head: &Tensor, x: &Tensor,
                     tokens: &[i32], weights: &[f32])
                     -> Result<(Vec<f32>, Vec<f32>)> {
     let (xn, _r) = rmsnorm_fwd(x, g_norm);
-    let logits = xn.matmul(head)?;
+    let logits = kernels::matmul(&xn, head)?;
     let v = dm.vocab;
     let mut nll = vec![0.0f32; dm.batch];
     let mut wsum = vec![0.0f32; dm.batch];
@@ -531,33 +657,12 @@ pub fn head_seq_nll(dm: &Dims, g_norm: &[f32], head: &Tensor, x: &Tensor,
 // Adam (bias-corrected, matching model.py::adam_update)
 // ---------------------------------------------------------------------
 
-#[derive(Clone, Copy, Debug)]
-pub struct AdamHyper {
-    pub beta1: f32,
-    pub beta2: f32,
-    pub eps: f32,
-}
-
 /// One bias-corrected Adam step on a single tensor; `t` is the 1-based
-/// step counter as f32 (exactly the scalar the artifacts take).
+/// step counter as f32 (exactly the scalar the artifacts take). Fused
+/// parallel elementwise — see [`kernels::adam_step`].
 pub fn adam(p: &Tensor, g: &Tensor, m: &Tensor, v: &Tensor, t: f32,
             lr: f32, h: AdamHyper) -> (Tensor, Tensor, Tensor) {
-    let mut pn = p.clone();
-    let mut mn = m.clone();
-    let mut vn = v.clone();
-    let bc1 = 1.0 - h.beta1.powf(t);
-    let bc2 = 1.0 - h.beta2.powf(t);
-    for i in 0..p.data.len() {
-        let gi = g.data[i];
-        let mi = h.beta1 * m.data[i] + (1.0 - h.beta1) * gi;
-        let vi = h.beta2 * v.data[i] + (1.0 - h.beta2) * gi * gi;
-        mn.data[i] = mi;
-        vn.data[i] = vi;
-        let m_hat = mi / bc1;
-        let v_hat = vi / bc2;
-        pn.data[i] = p.data[i] - lr * m_hat / (v_hat.sqrt() + h.eps);
-    }
-    (pn, mn, vn)
+    kernels::adam_step(p, g, m, v, t, lr, h)
 }
 
 // ---------------------------------------------------------------------
@@ -566,22 +671,13 @@ pub fn adam(p: &Tensor, g: &Tensor, m: &Tensor, v: &Tensor, t: f32,
 
 /// Column sum-of-squares and column sum over the rows of `a` (`[T, Dg]`).
 pub fn col_stats(a: &Tensor) -> (Vec<f32>, Vec<f32>) {
-    let (t, d) = (a.shape[0], a.shape[1]);
-    let mut sq = vec![0.0f32; d];
-    let mut su = vec![0.0f32; d];
-    for i in 0..t {
-        let row = a.row(i);
-        for j in 0..d {
-            sq[j] += row[j] * row[j];
-            su[j] += row[j];
-        }
-    }
-    (sq, su)
+    kernels::col_stats(a)
 }
 
-/// Gram matrix `AᵀA` of `[T, Dg]`.
+/// Gram matrix `AᵀA` of `[T, Dg]` — the fused kernel, no transpose
+/// materialized.
 pub fn gram(a: &Tensor) -> Result<Tensor> {
-    a.transpose2()?.matmul(a)
+    kernels::gram(a)
 }
 
 #[cfg(test)]
@@ -807,5 +903,49 @@ mod tests {
         let de = embed_bwd(3, 2, &tokens, &Tensor::ones(&[3, 2]));
         assert_eq!(de.row(2), &[2., 2.], "token 2 hit twice");
         assert_eq!(de.row(1), &[0., 0.]);
+    }
+
+    /// Forward and backward of the whole block are bit-identical across
+    /// intra-op thread counts — the math-level face of the kernel
+    /// determinism contract.
+    #[test]
+    fn block_fwd_bwd_bit_identical_across_thread_counts() {
+        let dm = Dims { batch: 2, seq: 16, d_model: 32, n_heads: 4,
+                        head_dim: 8, d_ff: 48, vocab: 24 };
+        let mut rng = Pcg64::seeded(55);
+        let (eff, g1, g2) = block_weights(&dm, &mut rng);
+        let x = randt(&[dm.tokens(), dm.d_model], &mut rng);
+        let dy = randt(&[dm.tokens(), dm.d_model], &mut rng);
+        let run = || {
+            let c = block_fwd(&dm, &eff, &g1, &g2, &x).unwrap();
+            let g = block_bwd(&dm, &eff, &g1, &g2, &c, &dy).unwrap();
+            (c.y.data.clone(), g)
+        };
+        let prev = kernels::set_threads(1);
+        let (y1, g1r) = run();
+        for t in [2usize, 8] {
+            kernels::set_threads(t);
+            let (yt, gtr) = run();
+            assert_eq!(y1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                       yt.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                       "y@{t}");
+            for wi in 0..7 {
+                assert_eq!(
+                    g1r.d_eff[wi].data.iter().map(|v| v.to_bits())
+                        .collect::<Vec<_>>(),
+                    gtr.d_eff[wi].data.iter().map(|v| v.to_bits())
+                        .collect::<Vec<_>>(),
+                    "d_eff[{wi}]@{t}");
+            }
+            assert_eq!(g1r.dg1.iter().map(|v| v.to_bits())
+                           .collect::<Vec<_>>(),
+                       gtr.dg1.iter().map(|v| v.to_bits())
+                           .collect::<Vec<_>>(), "dg1@{t}");
+            assert_eq!(g1r.dx.data.iter().map(|v| v.to_bits())
+                           .collect::<Vec<_>>(),
+                       gtr.dx.data.iter().map(|v| v.to_bits())
+                           .collect::<Vec<_>>(), "dx@{t}");
+        }
+        kernels::set_threads(prev);
     }
 }

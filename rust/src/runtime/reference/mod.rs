@@ -24,7 +24,7 @@ use super::backend::{Backend, BackendKind};
 use super::buffer::DeviceBuffer;
 use crate::model::manifest::{ArtifactSpec, Manifest, N_BLOCK_LINEARS,
                              N_BLOCK_PARAMS};
-use crate::tensor::Tensor;
+use crate::tensor::{kernels, Tensor};
 
 /// Artifact base names the interpreter implements (everything aot.py
 /// emits; `_pallas` suffixes alias the base entry).
@@ -177,16 +177,18 @@ impl Interp {
         (start..start + n).map(|i| inputs[i].fetch()).collect()
     }
 
-    /// Effective linears `W⊙M` from a (bp, mask) slot pair.
+    /// Effective linears `W⊙M` from a (bp, mask) slot pair — the
+    /// kernel layer's mask-aware product.
     fn masked_eff(bp: &[Tensor], masks: &[Tensor]) -> Vec<Tensor> {
-        (0..N_BLOCK_LINEARS).map(|i| bp[i].mul(&masks[i])).collect()
+        (0..N_BLOCK_LINEARS)
+            .map(|i| kernels::mask_mul(&bp[i], &masks[i]))
+            .collect()
     }
 
+    /// Fused reconstruction loss + upstream gradient (one pass over the
+    /// data instead of sub → sq_sum → scale).
     fn recon_dy(y: &Tensor, target: &Tensor) -> (f32, Tensor) {
-        let n = y.numel() as f32;
-        let diff = y.sub(target);
-        let loss = (diff.sq_sum() / n as f64) as f32;
-        (loss, diff.scale(2.0 / n))
+        kernels::recon_loss_grad(y, target)
     }
 
     // ---- artifacts ------------------------------------------------------
@@ -244,7 +246,7 @@ impl Interp {
             // linears chain through W⊙M (and Alg. 1 masks the step), so
             // only surviving weights move; norm gains get dense grads
             let grad = if j < N_BLOCK_LINEARS {
-                g.d_eff[j].mul(&masks[j])
+                kernels::mask_mul(&g.d_eff[j], &masks[j])
             } else if j == N_BLOCK_LINEARS {
                 Tensor::from_vec(&bp[j].shape, g.dg1.clone())
             } else {
@@ -462,10 +464,9 @@ impl Interp {
             let mut eff = Vec::with_capacity(N_BLOCK_LINEARS);
             for j in 0..N_BLOCK_LINEARS {
                 let ai = 2 * (l * N_BLOCK_LINEARS + j);
-                let delta = adapters[ai]
-                    .matmul(&adapters[ai + 1])?
-                    .scale(self.lora_scale);
-                eff.push(bp[j].mul(&ms[j]).add(&delta));
+                let delta = adapters[ai].matmul(&adapters[ai + 1])?;
+                eff.push(kernels::mask_mul_add_scaled(
+                    &bp[j], &ms[j], &delta, self.lora_scale));
             }
             eff_blocks.push(eff);
         }
@@ -488,11 +489,12 @@ impl Interp {
                 let ai = 2 * (l * N_BLOCK_LINEARS + j);
                 let a = &adapters[ai];
                 let b = &adapters[ai + 1];
-                // eff = … + s·A·B ⇒ dA = s·dW̄·Bᵀ, dB = s·Aᵀ·dW̄
+                // eff = … + s·A·B ⇒ dA = s·dW̄·Bᵀ, dB = s·Aᵀ·dW̄ —
+                // fused transpose kernels, nothing materialized
                 dadapters[ai] = Some(
-                    d_eff.matmul(&b.transpose2()?)?.scale(self.lora_scale));
+                    kernels::matmul_a_bt(&d_eff, b)?.scale(self.lora_scale));
                 dadapters[ai + 1] = Some(
-                    a.transpose2()?.matmul(&d_eff)?.scale(self.lora_scale));
+                    kernels::matmul_at_b(a, &d_eff)?.scale(self.lora_scale));
             }
             dx = g.dx;
         }

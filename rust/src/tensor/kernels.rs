@@ -1,0 +1,1053 @@
+//! Shared parallel, cache-blocked host compute kernels.
+//!
+//! Every O(n³) loop nest in the tree lives here — `Tensor::matmul` and
+//! `Tensor::transpose2` are thin facades over this module, and the
+//! reference backend ([`crate::runtime::reference`]), SparseGPT's
+//! Gram/Hessian math, the pruning statistics and the LoRA merge all call
+//! these kernels instead of hand-rolling their own nests.
+//!
+//! ## Parallelism
+//!
+//! Kernels split their work into **tasks** and run them on a small
+//! process-wide pool of `std::thread` workers (no external crates; the
+//! container provisions no cargo registry). The pool is lazily spawned
+//! with `threads() − 1` workers — the calling thread always participates
+//! — where `threads()` resolves, in order: [`set_threads`] (the CLI's
+//! `--threads`, the scheduler's per-worker share), the `EBFT_THREADS`
+//! environment variable, then `std::thread::available_parallelism()`.
+//! Small inputs never touch the pool: below [`MIN_PAR_OPS`] scalar ops a
+//! kernel runs serially on the caller, so test-scale shapes pay no
+//! submission overhead.
+//!
+//! Concurrent submitters (e.g. scheduler workers under `--jobs N`) share
+//! the one pool through a FIFO job queue, so intra-op parallelism
+//! composes with inter-cell parallelism without multiplying threads:
+//! the process never holds more than `jobs + threads − 1` compute
+//! threads.
+//!
+//! ## Determinism contract
+//!
+//! Results are **bit-identical across thread counts** (and across the
+//! serial path). Two rules enforce this, and every kernel here follows
+//! them:
+//!
+//! 1. each output element is written by exactly one task, and its
+//!    accumulation order (over `k`, rows, or reduce blocks) is a fixed
+//!    ascending order independent of the task partition;
+//! 2. reductions accumulate fixed-size blocks ([`REDUCE_BLOCK`]) into
+//!    indexed partial slots and combine the partials in block order on
+//!    the caller — never in completion order.
+//!
+//! Thread-count knobs therefore move wall-clock only: `backend_diff`
+//! pins, run-store resume byte-identity and golden records are all
+//! unaffected by `EBFT_THREADS`/`--threads`.
+
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use super::Tensor;
+
+// ---------------------------------------------------------------------
+// thread-count control
+// ---------------------------------------------------------------------
+
+/// Resolved intra-op thread target; 0 = not yet resolved.
+static THREAD_TARGET: AtomicUsize = AtomicUsize::new(0);
+
+fn resolve_default() -> usize {
+    std::env::var("EBFT_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+}
+
+/// The current intra-op thread target (≥ 1).
+pub fn threads() -> usize {
+    let t = THREAD_TARGET.load(Ordering::Relaxed);
+    if t != 0 {
+        return t;
+    }
+    let resolved = resolve_default();
+    // racing first resolutions compute the same value; either store wins
+    let _ = THREAD_TARGET.compare_exchange(0, resolved, Ordering::Relaxed,
+                                           Ordering::Relaxed);
+    THREAD_TARGET.load(Ordering::Relaxed)
+}
+
+/// Set the intra-op thread target (clamped to ≥ 1) and return the
+/// previous one — callers that narrow the target for a scope (the grid
+/// scheduler dividing threads across `--jobs` workers) restore it after.
+/// Never changes results, only wall-clock (see the determinism contract).
+pub fn set_threads(n: usize) -> usize {
+    let prev = threads();
+    THREAD_TARGET.store(n.max(1), Ordering::Relaxed);
+    prev
+}
+
+// ---------------------------------------------------------------------
+// the worker pool
+// ---------------------------------------------------------------------
+
+/// Minimum scalar ops per task; below 2× this total, kernels run serial.
+pub const MIN_PAR_OPS: usize = 1 << 15;
+
+/// Fixed reduction block length (rule 2 of the determinism contract).
+pub const REDUCE_BLOCK: usize = 4096;
+
+/// A submitted parallel region: `run(data, i)` executes task `i` of
+/// `n_tasks`. `data` points at the submitting frame's closure; the
+/// submitter blocks until `left == 0`, which keeps the pointee alive for
+/// every execution.
+struct Job {
+    run: unsafe fn(*const (), usize),
+    data: *const (),
+    n_tasks: usize,
+    /// Next unclaimed task index.
+    next: AtomicUsize,
+    /// Tasks claimed but not yet finished + tasks unclaimed.
+    left: AtomicUsize,
+    /// Pool workers currently helping (the submitter is not counted).
+    helpers: AtomicUsize,
+    /// Cap on `helpers` — `threads() − 1` at submit time, so narrowing
+    /// the thread target (the scheduler under `--jobs`) caps effective
+    /// parallelism even when the pool has already grown larger.
+    max_helpers: usize,
+    /// A task panicked; the submitter re-raises after the job drains
+    /// (a dead pool worker must not leave `left` stuck above zero).
+    panicked: AtomicBool,
+}
+
+// Safety: `data` is only dereferenced through `run` for task indices
+// `< n_tasks`, all of which complete before the submitting frame (which
+// owns the pointee) returns.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    /// Claim-and-run loop shared by workers and the submitter.
+    fn drain(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n_tasks {
+                return;
+            }
+            // Safety: i < n_tasks and the submitter is still blocked in
+            // `par_tasks`, so the closure behind `data` is alive.
+            let r = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| unsafe {
+                    (self.run)(self.data, i)
+                }));
+            if r.is_err() {
+                self.panicked.store(true, Ordering::Release);
+            }
+            self.left.fetch_sub(1, Ordering::Release);
+        }
+    }
+}
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Arc<Job>>>,
+    cv: Condvar,
+}
+
+struct Pool {
+    shared: Arc<PoolShared>,
+    /// Workers spawned so far; grows toward `threads() − 1`, never shrinks.
+    spawned: Mutex<usize>,
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool {
+        shared: Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+        }),
+        spawned: Mutex::new(0),
+    })
+}
+
+impl Pool {
+    fn ensure_workers(&self, want: usize) {
+        let mut n = self
+            .spawned
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        while *n < want {
+            let shared = Arc::clone(&self.shared);
+            std::thread::Builder::new()
+                .name(format!("ebft-kern-{n}"))
+                .spawn(move || pool_worker(shared))
+                .expect("spawning a kernel pool worker");
+            *n += 1;
+        }
+    }
+}
+
+fn pool_worker(shared: Arc<PoolShared>) {
+    loop {
+        let job = {
+            let mut q = shared
+                .queue
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            'pick: loop {
+                // drop fully-claimed jobs (their stragglers finish on
+                // whoever claimed them) …
+                while let Some(front) = q.front() {
+                    if front.next.load(Ordering::Relaxed) >= front.n_tasks {
+                        q.pop_front();
+                    } else {
+                        break;
+                    }
+                }
+                // … then help the oldest live job with a free helper
+                // slot (the slot cap is what keeps a narrowed thread
+                // target meaningful on an already-grown pool)
+                for j in q.iter() {
+                    if j.next.load(Ordering::Relaxed) >= j.n_tasks {
+                        continue;
+                    }
+                    let prev = j.helpers.fetch_add(1, Ordering::Relaxed);
+                    if prev >= j.max_helpers {
+                        j.helpers.fetch_sub(1, Ordering::Relaxed);
+                        continue;
+                    }
+                    break 'pick Arc::clone(j);
+                }
+                q = shared
+                    .cv
+                    .wait(q)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+            }
+        };
+        job.drain();
+    }
+}
+
+unsafe fn run_shim<F: Fn(usize) + Sync>(data: *const (), i: usize) {
+    unsafe { (*(data as *const F))(i) }
+}
+
+/// Run `f(i)` for every `i in 0..n_tasks`, each exactly once, possibly
+/// in parallel on the kernel pool. `f` must confine its writes to data
+/// owned by task `i` (see [`SharedMut`]); results must not depend on
+/// task interleaving — which every kernel here guarantees by giving each
+/// output element one owning task with a fixed interior order.
+pub fn par_tasks<F: Fn(usize) + Sync>(n_tasks: usize, f: F) {
+    if n_tasks == 0 {
+        return;
+    }
+    let t = threads();
+    if t <= 1 || n_tasks == 1 {
+        for i in 0..n_tasks {
+            f(i);
+        }
+        return;
+    }
+    let p = pool();
+    p.ensure_workers(t - 1);
+    let job = Arc::new(Job {
+        run: run_shim::<F>,
+        data: &f as *const F as *const (),
+        n_tasks,
+        next: AtomicUsize::new(0),
+        left: AtomicUsize::new(n_tasks),
+        helpers: AtomicUsize::new(0),
+        max_helpers: t - 1,
+        panicked: AtomicBool::new(false),
+    });
+    {
+        let mut q = p
+            .shared
+            .queue
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        q.push_back(Arc::clone(&job));
+    }
+    p.shared.cv.notify_all();
+    job.drain();
+    // stragglers: tasks claimed by pool workers but still running. They
+    // usually complete promptly (tasks are sized by MIN_PAR_OPS), so
+    // start with cheap yields — but back off to sleeping so a
+    // descheduled worker on an oversubscribed box isn't fighting a
+    // spinning submitter for its core.
+    let mut spins = 0u32;
+    while job.left.load(Ordering::Acquire) != 0 {
+        if spins < 64 {
+            std::thread::yield_now();
+            spins += 1;
+        } else {
+            std::thread::sleep(std::time::Duration::from_micros(50));
+        }
+    }
+    {
+        // retire the job eagerly so exhausted entries can't pile up
+        // behind a long-lived front job
+        let mut q = p
+            .shared
+            .queue
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        if let Some(pos) = q.iter().position(|j| Arc::ptr_eq(j, &job)) {
+            q.remove(pos);
+        }
+    }
+    if job.panicked.load(Ordering::Acquire) {
+        panic!("a kernel task panicked (see worker backtrace above)");
+    }
+}
+
+/// Split `n_items` of `ops_per_item` scalar ops each into parallel tasks:
+/// returns `(items_per_task, n_tasks)`, or `(n_items, 1)` when the total
+/// is too small to be worth the pool. The partition affects scheduling
+/// only, never results.
+pub fn partition(n_items: usize, ops_per_item: usize) -> (usize, usize) {
+    let total = n_items.saturating_mul(ops_per_item.max(1));
+    let t = threads();
+    if t <= 1 || total < 2 * MIN_PAR_OPS || n_items <= 1 {
+        return (n_items.max(1), 1);
+    }
+    // aim for ~4 tasks per thread (load balance) but keep tasks chunky
+    let by_balance = n_items.div_ceil(4 * t);
+    let by_cost = (MIN_PAR_OPS / ops_per_item.max(1)).max(1);
+    let per = by_balance.max(by_cost).min(n_items);
+    (per, n_items.div_ceil(per))
+}
+
+// ---------------------------------------------------------------------
+// disjoint-write escape hatch
+// ---------------------------------------------------------------------
+
+/// Shared mutable view over an `f32` buffer for parallel kernels whose
+/// per-task writes are disjoint but interleaved (e.g. per-head column
+/// slices of an activation). The *caller* guarantees no two concurrent
+/// `range` calls overlap.
+pub struct SharedMut<'a> {
+    ptr: *mut f32,
+    len: usize,
+    _marker: PhantomData<&'a mut [f32]>,
+}
+
+unsafe impl Send for SharedMut<'_> {}
+unsafe impl Sync for SharedMut<'_> {}
+
+impl<'a> SharedMut<'a> {
+    pub fn new(data: &'a mut [f32]) -> SharedMut<'a> {
+        SharedMut { ptr: data.as_mut_ptr(), len: data.len(),
+                    _marker: PhantomData }
+    }
+
+    /// Mutable subslice `[start, start + len)`.
+    ///
+    /// # Safety
+    /// No other live reference (from this or any concurrent task) may
+    /// overlap the range.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn range(&self, start: usize, len: usize) -> &mut [f32] {
+        debug_assert!(start + len <= self.len);
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(start), len) }
+    }
+}
+
+// ---------------------------------------------------------------------
+// matmul family
+// ---------------------------------------------------------------------
+
+/// Column-panel width of the blocked matmul inner kernel: one output
+/// panel plus one B-row panel stay L1-resident across the k loop.
+const COL_BLOCK: usize = 128;
+
+fn dims2(t: &Tensor) -> Result<(usize, usize)> {
+    t.dims2()
+}
+
+/// `C = A·B` — parallel over row panels of `A`, cache-blocked over
+/// column panels of `B`, branch-free inner loop. Per element the `k`
+/// accumulation runs ascending, so results match the textbook triple
+/// loop bit-for-bit at every thread count (and zeros in `A` take the
+/// same multiply path as everything else — no mask-dependent timing).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (m, k) = dims2(a)?;
+    let (k2, n) = dims2(b)?;
+    if k != k2 {
+        bail!("matmul dims {m}x{k} @ {k2}x{n}");
+    }
+    let mut out = Tensor::zeros(&[m, n]);
+    let (rows_per, n_tasks) = partition(m, 2 * k * n);
+    let out_view = SharedMut::new(&mut out.data);
+    par_tasks(n_tasks, |ti| {
+        let i0 = ti * rows_per;
+        let i1 = (i0 + rows_per).min(m);
+        // Safety: tasks own disjoint row ranges of `out`.
+        let orows = unsafe { out_view.range(i0 * n, (i1 - i0) * n) };
+        for i in i0..i1 {
+            let arow = &a.data[i * k..(i + 1) * k];
+            let obase = (i - i0) * n;
+            let mut j0 = 0;
+            while j0 < n {
+                let j1 = (j0 + COL_BLOCK).min(n);
+                let opanel = &mut orows[obase + j0..obase + j1];
+                for (p, &av) in arow.iter().enumerate() {
+                    let bpanel = &b.data[p * n + j0..p * n + j1];
+                    for (o, &bv) in opanel.iter_mut().zip(bpanel) {
+                        *o += av * bv;
+                    }
+                }
+                j0 = j1;
+            }
+        }
+    });
+    Ok(out)
+}
+
+/// `C = Aᵀ·B` for `A: [t, m]`, `B: [t, n]` — the Gram/weight-gradient
+/// shape (`Xᵀ·dY`), fused so no transpose is materialized. Parallel over
+/// row panels of `C`; the `t` accumulation runs ascending per element.
+pub fn matmul_at_b(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (t, m) = dims2(a)?;
+    let (t2, n) = dims2(b)?;
+    if t != t2 {
+        bail!("matmul_at_b dims ({t}x{m})ᵀ @ {t2}x{n}");
+    }
+    let mut out = Tensor::zeros(&[m, n]);
+    // narrow panels: the task's C panel (rows_per × n) must stay hot
+    // across the whole t loop
+    let (rows_per, n_tasks) = partition(m, 2 * t * n);
+    let out_view = SharedMut::new(&mut out.data);
+    par_tasks(n_tasks, |ti| {
+        let i0 = ti * rows_per;
+        let i1 = (i0 + rows_per).min(m);
+        // Safety: tasks own disjoint row ranges of `out`.
+        let orows = unsafe { out_view.range(i0 * n, (i1 - i0) * n) };
+        for tt in 0..t {
+            let arow = &a.data[tt * m + i0..tt * m + i1];
+            let brow = &b.data[tt * n..(tt + 1) * n];
+            for (ii, &av) in arow.iter().enumerate() {
+                let opanel = &mut orows[ii * n..(ii + 1) * n];
+                for (o, &bv) in opanel.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    });
+    Ok(out)
+}
+
+/// `C = A·Bᵀ` for `A: [m, k]`, `B: [n, k]` — the activation-gradient
+/// shape (`dY·Wᵀ`), fused so no transpose is materialized. Row-major dot
+/// products; the `k` accumulation runs ascending per element.
+pub fn matmul_a_bt(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (m, k) = dims2(a)?;
+    let (n, k2) = dims2(b)?;
+    if k != k2 {
+        bail!("matmul_a_bt dims {m}x{k} @ ({n}x{k2})ᵀ");
+    }
+    let mut out = Tensor::zeros(&[m, n]);
+    let (rows_per, n_tasks) = partition(m, 2 * k * n);
+    let out_view = SharedMut::new(&mut out.data);
+    par_tasks(n_tasks, |ti| {
+        let i0 = ti * rows_per;
+        let i1 = (i0 + rows_per).min(m);
+        // Safety: tasks own disjoint row ranges of `out`.
+        let orows = unsafe { out_view.range(i0 * n, (i1 - i0) * n) };
+        for i in i0..i1 {
+            let arow = &a.data[i * k..(i + 1) * k];
+            let orow = &mut orows[(i - i0) * n..(i - i0 + 1) * n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let brow = &b.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
+                }
+                *o = acc;
+            }
+        }
+    });
+    Ok(out)
+}
+
+/// Gram matrix `AᵀA` of `A: [t, d]`.
+pub fn gram(a: &Tensor) -> Result<Tensor> {
+    matmul_at_b(a, a)
+}
+
+/// Blocked parallel 2-D transpose.
+pub fn transpose(a: &Tensor) -> Result<Tensor> {
+    let (m, n) = dims2(a)?;
+    let mut out = Tensor::zeros(&[n, m]);
+    let (rows_per, n_tasks) = partition(n, m);
+    let out_view = SharedMut::new(&mut out.data);
+    par_tasks(n_tasks, |ti| {
+        let j0 = ti * rows_per;
+        let j1 = (j0 + rows_per).min(n);
+        // Safety: tasks own disjoint row ranges of `out` (= column
+        // ranges of `a`).
+        let orows = unsafe { out_view.range(j0 * m, (j1 - j0) * m) };
+        // tile the source rows so a's cache lines are reused across the
+        // task's output rows
+        let mut i0 = 0;
+        while i0 < m {
+            let i1 = (i0 + COL_BLOCK).min(m);
+            for i in i0..i1 {
+                let arow = &a.data[i * n + j0..i * n + j1];
+                for (jj, &v) in arow.iter().enumerate() {
+                    orows[jj * m + i] = v;
+                }
+            }
+            i0 = i1;
+        }
+    });
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// fused elementwise
+// ---------------------------------------------------------------------
+
+/// Elementwise block partition shared by the fused kernels below.
+fn elem_tasks(n: usize, ops_per_elem: usize) -> (usize, usize) {
+    partition(n, ops_per_elem.max(2))
+}
+
+/// The mask-aware product `W ⊙ M` used by effective-weight assembly.
+pub fn mask_mul(w: &Tensor, m: &Tensor) -> Tensor {
+    assert_eq!(w.shape, m.shape, "mask_mul shape mismatch");
+    let n = w.data.len();
+    let mut out = Tensor::zeros(&w.shape);
+    let (per, n_tasks) = elem_tasks(n, 2);
+    let out_view = SharedMut::new(&mut out.data);
+    par_tasks(n_tasks, |ti| {
+        let e0 = ti * per;
+        let e1 = (e0 + per).min(n);
+        // Safety: disjoint element ranges per task.
+        let o = unsafe { out_view.range(e0, e1 - e0) };
+        for ((o, &wv), &mv) in
+            o.iter_mut().zip(&w.data[e0..e1]).zip(&m.data[e0..e1])
+        {
+            *o = wv * mv;
+        }
+    });
+    out
+}
+
+/// Fused effective-weight assembly with an adapter: `W ⊙ M + s·Δ`
+/// (the LoRA parameterization `W̄ = W⊙M + s·A·B`, with `Δ = A·B`).
+pub fn mask_mul_add_scaled(w: &Tensor, m: &Tensor, delta: &Tensor, s: f32)
+                           -> Tensor {
+    assert_eq!(w.shape, m.shape, "mask_mul_add_scaled shape mismatch");
+    assert_eq!(w.shape, delta.shape, "mask_mul_add_scaled delta mismatch");
+    let n = w.data.len();
+    let mut out = Tensor::zeros(&w.shape);
+    let (per, n_tasks) = elem_tasks(n, 3);
+    let out_view = SharedMut::new(&mut out.data);
+    par_tasks(n_tasks, |ti| {
+        let e0 = ti * per;
+        let e1 = (e0 + per).min(n);
+        // Safety: disjoint element ranges per task.
+        let o = unsafe { out_view.range(e0, e1 - e0) };
+        for (((o, &wv), &mv), &dv) in o
+            .iter_mut()
+            .zip(&w.data[e0..e1])
+            .zip(&m.data[e0..e1])
+            .zip(&delta.data[e0..e1])
+        {
+            *o = wv * mv + s * dv;
+        }
+    });
+    out
+}
+
+/// In-place accumulation `acc += x` (the calibration-statistics hot
+/// path: Gram matrices summed over the activation stream).
+pub fn add_assign(acc: &mut Tensor, x: &Tensor) {
+    assert_eq!(acc.shape, x.shape, "add_assign shape mismatch");
+    let n = acc.data.len();
+    let (per, n_tasks) = elem_tasks(n, 2);
+    let acc_view = SharedMut::new(&mut acc.data);
+    par_tasks(n_tasks, |ti| {
+        let e0 = ti * per;
+        let e1 = (e0 + per).min(n);
+        // Safety: disjoint element ranges per task.
+        let a = unsafe { acc_view.range(e0, e1 - e0) };
+        for (av, &xv) in a.iter_mut().zip(&x.data[e0..e1]) {
+            *av += xv;
+        }
+    });
+}
+
+fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// SwiGLU activation `silu(gate) ⊙ up`, fused into one pass.
+pub fn silu_mul(gate: &Tensor, up: &Tensor) -> Tensor {
+    assert_eq!(gate.shape, up.shape, "silu_mul shape mismatch");
+    let n = gate.data.len();
+    let mut out = Tensor::zeros(&gate.shape);
+    let (per, n_tasks) = elem_tasks(n, 8);
+    let out_view = SharedMut::new(&mut out.data);
+    par_tasks(n_tasks, |ti| {
+        let e0 = ti * per;
+        let e1 = (e0 + per).min(n);
+        // Safety: disjoint element ranges per task.
+        let o = unsafe { out_view.range(e0, e1 - e0) };
+        for ((o, &g), &u) in
+            o.iter_mut().zip(&gate.data[e0..e1]).zip(&up.data[e0..e1])
+        {
+            *o = g * sigmoid(g) * u;
+        }
+    });
+    out
+}
+
+/// Backward of [`silu_mul`]: given `dh = ∂L/∂(silu(gate)⊙up)`, returns
+/// `(dgate, dup)` in one fused pass.
+pub fn silu_mul_bwd(dh: &Tensor, gate: &Tensor, up: &Tensor)
+                    -> (Tensor, Tensor) {
+    assert_eq!(dh.shape, gate.shape, "silu_mul_bwd shape mismatch");
+    assert_eq!(dh.shape, up.shape, "silu_mul_bwd shape mismatch");
+    let n = dh.data.len();
+    let mut dgate = Tensor::zeros(&dh.shape);
+    let mut dup = Tensor::zeros(&dh.shape);
+    let (per, n_tasks) = elem_tasks(n, 12);
+    let dg_view = SharedMut::new(&mut dgate.data);
+    let du_view = SharedMut::new(&mut dup.data);
+    par_tasks(n_tasks, |ti| {
+        let e0 = ti * per;
+        let e1 = (e0 + per).min(n);
+        // Safety: disjoint element ranges per task.
+        let dg = unsafe { dg_view.range(e0, e1 - e0) };
+        let du = unsafe { du_view.range(e0, e1 - e0) };
+        for i in 0..e1 - e0 {
+            let g = gate.data[e0 + i];
+            let u = up.data[e0 + i];
+            let d = dh.data[e0 + i];
+            let s = sigmoid(g);
+            let silu = g * s;
+            dg[i] = d * u * (s * (1.0 + g * (1.0 - s)));
+            du[i] = d * silu;
+        }
+    });
+    (dgate, dup)
+}
+
+/// Adam hyper-parameters (β₁, β₂, ε from the manifest dims).
+#[derive(Clone, Copy, Debug)]
+pub struct AdamHyper {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+/// One bias-corrected Adam step, fused (moments + update in one pass,
+/// no intermediate clones). `t` is the 1-based step counter as f32 —
+/// exactly the scalar the train-step artifacts take.
+pub fn adam_step(p: &Tensor, g: &Tensor, m: &Tensor, v: &Tensor, t: f32,
+                 lr: f32, h: AdamHyper) -> (Tensor, Tensor, Tensor) {
+    assert_eq!(p.shape, g.shape, "adam_step shape mismatch");
+    let n = p.data.len();
+    let mut pn = Tensor::zeros(&p.shape);
+    let mut mn = Tensor::zeros(&p.shape);
+    let mut vn = Tensor::zeros(&p.shape);
+    let bc1 = 1.0 - h.beta1.powf(t);
+    let bc2 = 1.0 - h.beta2.powf(t);
+    let (per, n_tasks) = elem_tasks(n, 12);
+    let p_view = SharedMut::new(&mut pn.data);
+    let m_view = SharedMut::new(&mut mn.data);
+    let v_view = SharedMut::new(&mut vn.data);
+    par_tasks(n_tasks, |ti| {
+        let e0 = ti * per;
+        let e1 = (e0 + per).min(n);
+        // Safety: disjoint element ranges per task.
+        let po = unsafe { p_view.range(e0, e1 - e0) };
+        let mo = unsafe { m_view.range(e0, e1 - e0) };
+        let vo = unsafe { v_view.range(e0, e1 - e0) };
+        for i in 0..e1 - e0 {
+            let gi = g.data[e0 + i];
+            let mi = h.beta1 * m.data[e0 + i] + (1.0 - h.beta1) * gi;
+            let vi = h.beta2 * v.data[e0 + i] + (1.0 - h.beta2) * gi * gi;
+            mo[i] = mi;
+            vo[i] = vi;
+            let m_hat = mi / bc1;
+            let v_hat = vi / bc2;
+            po[i] = p.data[e0 + i] - lr * m_hat / (v_hat.sqrt() + h.eps);
+        }
+    });
+    (pn, mn, vn)
+}
+
+// ---------------------------------------------------------------------
+// fused reductions
+// ---------------------------------------------------------------------
+
+/// Fused reconstruction loss + gradient: for `y, target` of `n`
+/// elements, returns `(‖y−t‖²/n, 2·(y−t)/n)` in one pass over the data.
+/// The sum accumulates f64 per fixed [`REDUCE_BLOCK`] and combines the
+/// partials in block order (determinism rule 2).
+pub fn recon_loss_grad(y: &Tensor, target: &Tensor) -> (f32, Tensor) {
+    assert_eq!(y.shape, target.shape, "recon_loss_grad shape mismatch");
+    let n = y.data.len();
+    let n_blocks = n.div_ceil(REDUCE_BLOCK).max(1);
+    let mut dy = Tensor::zeros(&y.shape);
+    let mut partials = vec![0.0f64; n_blocks];
+    let scale = 2.0 / n as f32;
+    {
+        let (blocks_per, n_tasks) = partition(n_blocks, 4 * REDUCE_BLOCK);
+        let dy_view = SharedMut::new(&mut dy.data);
+        let part_view = SharedMut64::new(&mut partials);
+        par_tasks(n_tasks, |ti| {
+            let b0 = ti * blocks_per;
+            let b1 = (b0 + blocks_per).min(n_blocks);
+            for bi in b0..b1 {
+                let e0 = bi * REDUCE_BLOCK;
+                let e1 = (e0 + REDUCE_BLOCK).min(n);
+                // Safety: disjoint block ranges per task.
+                let d = unsafe { dy_view.range(e0, e1 - e0) };
+                let mut acc = 0.0f64;
+                for ((d, &yv), &tv) in d
+                    .iter_mut()
+                    .zip(&y.data[e0..e1])
+                    .zip(&target.data[e0..e1])
+                {
+                    let diff = yv - tv;
+                    acc += (diff as f64) * (diff as f64);
+                    *d = diff * scale;
+                }
+                // Safety: one slot per block.
+                unsafe { part_view.set(bi, acc) };
+            }
+        });
+    }
+    let sum: f64 = partials.iter().sum();
+    ((sum / n as f64) as f32, dy)
+}
+
+/// Column sum-of-squares and column sum over the rows of `a: [t, d]`
+/// (the `block_stats` reduction). Parallel over column panels; per
+/// column the row accumulation runs ascending.
+pub fn col_stats(a: &Tensor) -> (Vec<f32>, Vec<f32>) {
+    let (t, d) = (a.shape[0], a.shape[1]);
+    let mut sq = vec![0.0f32; d];
+    let mut su = vec![0.0f32; d];
+    let (cols_per, n_tasks) = partition(d, 4 * t);
+    let sq_view = SharedMut::new(&mut sq);
+    let su_view = SharedMut::new(&mut su);
+    par_tasks(n_tasks, |ti| {
+        let c0 = ti * cols_per;
+        let c1 = (c0 + cols_per).min(d);
+        // Safety: disjoint column ranges per task.
+        let sqs = unsafe { sq_view.range(c0, c1 - c0) };
+        let sus = unsafe { su_view.range(c0, c1 - c0) };
+        for i in 0..t {
+            let row = &a.data[i * d + c0..i * d + c1];
+            for ((sq, su), &v) in sqs.iter_mut().zip(sus.iter_mut()).zip(row)
+            {
+                *sq += v * v;
+                *su += v;
+            }
+        }
+    });
+    (sq, su)
+}
+
+/// [`SharedMut`] for f64 partial-sum slots (one writer per slot).
+pub(crate) struct SharedMut64<'a> {
+    ptr: *mut f64,
+    len: usize,
+    _marker: PhantomData<&'a mut [f64]>,
+}
+
+unsafe impl Send for SharedMut64<'_> {}
+unsafe impl Sync for SharedMut64<'_> {}
+
+impl<'a> SharedMut64<'a> {
+    pub(crate) fn new(data: &'a mut [f64]) -> SharedMut64<'a> {
+        SharedMut64 { ptr: data.as_mut_ptr(), len: data.len(),
+                      _marker: PhantomData }
+    }
+
+    /// # Safety
+    /// Each index must be written by at most one concurrent task.
+    pub(crate) unsafe fn set(&self, i: usize, v: f64) {
+        debug_assert!(i < self.len);
+        unsafe { *self.ptr.add(i) = v };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    /// The pre-refactor naive triple loop, kept as the golden reference
+    /// (minus the old `a == 0.0` fast path, which made dense-path timing
+    /// mask-dependent and is exactly what the blocked kernel must not
+    /// reintroduce).
+    fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = a.dims2().unwrap();
+        let (_, n) = b.dims2().unwrap();
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for p in 0..k {
+                let av = a.at2(i, p);
+                for j in 0..n {
+                    out.data[i * n + j] += av * b.data[p * n + j];
+                }
+            }
+        }
+        out
+    }
+
+    fn randt(shape: &[usize], rng: &mut Pcg64) -> Tensor {
+        Tensor::randn(shape, 1.0, rng)
+    }
+
+    fn assert_bits_eq(a: &Tensor, b: &Tensor, tag: &str) {
+        assert_eq!(a.shape, b.shape, "{tag}: shape");
+        for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(),
+                       "{tag}: element {i} differs: {x} vs {y}");
+        }
+    }
+
+    /// Awkward shapes: non-multiples of COL_BLOCK, degenerate 1×N / N×1,
+    /// and shapes wide enough to exercise several column panels.
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (1, 7, 5),
+        (5, 7, 1),
+        (1, 300, 1),
+        (67, 13, 31),
+        (3, 257, 129),
+        (130, 5, 259),
+    ];
+
+    #[test]
+    fn blocked_matmul_matches_naive_bitwise() {
+        let mut rng = Pcg64::seeded(21);
+        for &(m, k, n) in SHAPES {
+            let a = randt(&[m, k], &mut rng);
+            let b = randt(&[k, n], &mut rng);
+            assert_bits_eq(&matmul(&a, &b).unwrap(), &naive_matmul(&a, &b),
+                           &format!("matmul {m}x{k}x{n}"));
+        }
+    }
+
+    #[test]
+    fn matmul_handles_zeros_like_any_other_value() {
+        // the old fast path skipped a == 0.0 rows; the blocked kernel
+        // must produce identical results with and without zeros (and
+        // preserve IEEE signed-zero semantics of plain accumulation)
+        let mut rng = Pcg64::seeded(22);
+        let mut a = randt(&[9, 14], &mut rng);
+        for i in (0..a.data.len()).step_by(3) {
+            a.data[i] = 0.0;
+        }
+        let b = randt(&[14, 11], &mut rng);
+        assert_bits_eq(&matmul(&a, &b).unwrap(), &naive_matmul(&a, &b),
+                       "sparse A");
+    }
+
+    #[test]
+    fn fused_transpose_variants_match_materialized() {
+        let mut rng = Pcg64::seeded(23);
+        for &(m, k, n) in SHAPES {
+            // Aᵀ·B with A: [k, m] (so Aᵀ is m×k)
+            let a = randt(&[k, m], &mut rng);
+            let b = randt(&[k, n], &mut rng);
+            let want = naive_matmul(&transpose(&a).unwrap(), &b);
+            assert_bits_eq(&matmul_at_b(&a, &b).unwrap(), &want,
+                           &format!("at_b {m}x{k}x{n}"));
+            // A·Bᵀ with B: [n, k]
+            let a2 = randt(&[m, k], &mut rng);
+            let b2 = randt(&[n, k], &mut rng);
+            let want2 = naive_matmul(&a2, &transpose(&b2).unwrap());
+            assert_bits_eq(&matmul_a_bt(&a2, &b2).unwrap(), &want2,
+                           &format!("a_bt {m}x{k}x{n}"));
+        }
+    }
+
+    #[test]
+    fn gram_is_symmetric_and_matches() {
+        let mut rng = Pcg64::seeded(24);
+        let a = randt(&[70, 33], &mut rng);
+        let g = gram(&a).unwrap();
+        let want = naive_matmul(&transpose(&a).unwrap(), &a);
+        assert_bits_eq(&g, &want, "gram");
+        for i in 0..33 {
+            for j in 0..i {
+                assert!((g.at2(i, j) - g.at2(j, i)).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Pcg64::seeded(25);
+        for &(m, n) in &[(1usize, 1usize), (1, 9), (9, 1), (67, 131),
+                         (200, 3)] {
+            let a = randt(&[m, n], &mut rng);
+            let t = transpose(&a).unwrap();
+            assert_eq!(t.shape, vec![n, m]);
+            assert_bits_eq(&transpose(&t).unwrap(), &a, "roundtrip");
+        }
+    }
+
+    #[test]
+    fn results_bit_identical_across_thread_counts() {
+        // the determinism contract itself: every kernel, same bits at
+        // 1, 2, 3 and 8 threads. (set_threads is global and other tests
+        // may race it — which is harmless precisely because of this
+        // contract; shapes here are large enough to actually engage the
+        // pool at > 1 thread.)
+        let mut rng = Pcg64::seeded(26);
+        let a = randt(&[190, 65], &mut rng);
+        let b = randt(&[65, 140], &mut rng);
+        let c = randt(&[190, 65], &mut rng);
+        let prev = set_threads(1);
+        let mm1 = matmul(&a, &b).unwrap();
+        let g1 = gram(&a).unwrap();
+        let (l1, dy1) = recon_loss_grad(&a, &c);
+        let (sq1, su1) = col_stats(&a);
+        for t in [2usize, 3, 8] {
+            set_threads(t);
+            assert_bits_eq(&matmul(&a, &b).unwrap(), &mm1,
+                           &format!("matmul@{t}"));
+            assert_bits_eq(&gram(&a).unwrap(), &g1, &format!("gram@{t}"));
+            let (lt, dyt) = recon_loss_grad(&a, &c);
+            assert_eq!(lt.to_bits(), l1.to_bits(), "loss@{t}");
+            assert_bits_eq(&dyt, &dy1, &format!("recon dy@{t}"));
+            let (sqt, sut) = col_stats(&a);
+            assert_eq!(sqt.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                       sq1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                       "colsumsq@{t}");
+            assert_eq!(sut.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                       su1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                       "colsum@{t}");
+        }
+        set_threads(prev);
+    }
+
+    #[test]
+    fn mask_products_and_adam() {
+        let mut rng = Pcg64::seeded(27);
+        let w = randt(&[40, 30], &mut rng);
+        let m = Tensor::from_vec(
+            &[40, 30],
+            (0..1200).map(|i| (i % 3 == 0) as u32 as f32).collect());
+        let wm = mask_mul(&w, &m);
+        for i in 0..1200 {
+            assert_eq!(wm.data[i], w.data[i] * m.data[i]);
+        }
+        let delta = randt(&[40, 30], &mut rng);
+        let eff = mask_mul_add_scaled(&w, &m, &delta, 2.0);
+        for i in 0..1200 {
+            assert_eq!(eff.data[i], w.data[i] * m.data[i]
+                       + 2.0 * delta.data[i]);
+        }
+        // Adam: first step with zero state moves by ≈ lr·sign(g)
+        let p = Tensor::from_vec(&[2], vec![1.0, -1.0]);
+        let g = Tensor::from_vec(&[2], vec![0.5, 0.5]);
+        let h = AdamHyper { beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+        let (pn, mn, vn) = adam_step(&p, &g, &Tensor::zeros(&[2]),
+                                     &Tensor::zeros(&[2]), 1.0, 0.1, h);
+        assert!((pn.data[0] - 0.9).abs() < 1e-3);
+        assert!((mn.data[0] - 0.05).abs() < 1e-6);
+        assert!((vn.data[0] - 0.00025).abs() < 1e-7);
+    }
+
+    #[test]
+    fn fused_silu_matches_scalar_math() {
+        let mut rng = Pcg64::seeded(28);
+        let gate = randt(&[33, 17], &mut rng);
+        let up = randt(&[33, 17], &mut rng);
+        let h = silu_mul(&gate, &up);
+        for i in 0..h.data.len() {
+            let g = gate.data[i];
+            let want = g / (1.0 + (-g).exp()) * up.data[i];
+            assert!((h.data[i] - want).abs() < 1e-6);
+        }
+        // bwd against central differences of the fused forward
+        let dh = randt(&[33, 17], &mut rng);
+        let (dg, du) = silu_mul_bwd(&dh, &gate, &up);
+        let eps = 1e-3f32;
+        for &i in &[0usize, 5, 100, 550] {
+            let mut gp = gate.clone();
+            gp.data[i] += eps;
+            let mut gm = gate.clone();
+            gm.data[i] -= eps;
+            let num: f32 = (silu_mul(&gp, &up).data[i]
+                            - silu_mul(&gm, &up).data[i]) / (2.0 * eps)
+                * dh.data[i];
+            assert!((num - dg.data[i]).abs() < 1e-2 + 0.02 * num.abs(),
+                    "dgate[{i}]: {num} vs {}", dg.data[i]);
+            assert!((du.data[i] - dh.data[i] * silu_mul(
+                &gate, &Tensor::ones(&up.shape)).data[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn reductions_and_stats() {
+        let mut rng = Pcg64::seeded(29);
+        let a = randt(&[37, 21], &mut rng);
+        let (sq, su) = col_stats(&a);
+        for j in 0..21 {
+            let mut wsq = 0.0f32;
+            let mut wsu = 0.0f32;
+            for i in 0..37 {
+                wsq += a.at2(i, j) * a.at2(i, j);
+                wsu += a.at2(i, j);
+            }
+            assert_eq!(sq[j].to_bits(), wsq.to_bits(), "col {j} sq");
+            assert_eq!(su[j].to_bits(), wsu.to_bits(), "col {j} sum");
+        }
+        let b = randt(&[37, 21], &mut rng);
+        let (loss, dy) = recon_loss_grad(&a, &b);
+        let diff = a.sub(&b);
+        let want = (diff.sq_sum() / diff.numel() as f64) as f32;
+        assert!((loss - want).abs() < 1e-6 * want.abs().max(1.0));
+        assert_bits_eq(&dy, &diff.scale(2.0 / diff.numel() as f32),
+                       "recon dy");
+    }
+
+    #[test]
+    fn add_assign_accumulates() {
+        let mut acc = Tensor::zeros(&[6, 6]);
+        let x = Tensor::full(&[6, 6], 1.5);
+        add_assign(&mut acc, &x);
+        add_assign(&mut acc, &x);
+        assert!(acc.data.iter().all(|&v| v == 3.0));
+    }
+
+    #[test]
+    fn partition_is_serial_for_small_work() {
+        let prev = set_threads(8);
+        assert_eq!(partition(10, 100).1, 1, "small work stays serial");
+        let (per, n_tasks) = partition(100_000, 64);
+        assert!(n_tasks > 1, "big work splits");
+        assert!(per * n_tasks >= 100_000);
+        set_threads(prev);
+    }
+
+    #[test]
+    fn par_tasks_runs_every_task_exactly_once() {
+        let n = 257;
+        let counts: Vec<AtomicUsize> =
+            (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let prev = set_threads(4);
+        par_tasks(n, |i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+        });
+        set_threads(prev);
+        for (i, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "task {i}");
+        }
+    }
+}

@@ -2,12 +2,14 @@
 //!
 //! SparseGPT needs, per layer, the inverse Hessian H⁻¹ where H = XᵀX + λI,
 //! and specifically the *Cholesky factor of H⁻¹* (its rows drive the
-//! column-blocked weight updates). Sizes here are d_model/d_ff (≤ ~512), so
-//! straightforward O(n³) with f64 accumulation is plenty.
+//! column-blocked weight updates). The factorization itself is a
+//! sequential recurrence and stays serial; the O(n³) inversion solves are
+//! column-independent and run on the shared kernel pool, with f64
+//! accumulation throughout.
 
 use anyhow::{bail, Result};
 
-use super::Tensor;
+use super::{kernels, Tensor};
 
 /// Cholesky decomposition A = L·Lᵀ (lower-triangular L). A must be
 /// symmetric positive definite.
@@ -70,21 +72,36 @@ pub fn solve_lower_t(l: &Tensor, y: &[f32]) -> Result<Vec<f32>> {
     Ok(x)
 }
 
-/// Inverse of an SPD matrix via Cholesky: A⁻¹ = L⁻ᵀ·L⁻¹.
+/// Inverse of an SPD matrix via Cholesky: A⁻¹ = L⁻ᵀ·L⁻¹. The n
+/// forward/backward substitutions are independent per unit-basis column
+/// and run in parallel (each column's recurrence is unchanged, so the
+/// result is bit-identical at every thread count); they solve into the
+/// rows of a scratch matrix so the writes stay contiguous, transposed
+/// back at the end.
 pub fn spd_inverse(a: &Tensor) -> Result<Tensor> {
     let (n, _) = a.dims2()?;
     let l = cholesky(a)?;
-    let mut inv = Tensor::zeros(&[n, n]);
-    let mut e = vec![0.0f32; n];
-    for j in 0..n {
-        e.iter_mut().for_each(|x| *x = 0.0);
-        e[j] = 1.0;
-        let y = solve_lower(&l, &e)?;
-        let x = solve_lower_t(&l, &y)?;
-        for i in 0..n {
-            *inv.at2_mut(i, j) = x[i];
-        }
+    // row j of `cols` = A⁻¹ e_j
+    let mut cols = Tensor::zeros(&[n, n]);
+    {
+        let (cols_per, n_tasks) = kernels::partition(n, 2 * n * n);
+        let view = kernels::SharedMut::new(&mut cols.data);
+        kernels::par_tasks(n_tasks, |ti| {
+            let j0 = ti * cols_per;
+            let j1 = (j0 + cols_per).min(n);
+            let mut e = vec![0.0f32; n];
+            for j in j0..j1 {
+                e.iter_mut().for_each(|x| *x = 0.0);
+                e[j] = 1.0;
+                // the solves only fail on size mismatch; e/y are n-long
+                let y = solve_lower(&l, &e).expect("sized to n");
+                let x = solve_lower_t(&l, &y).expect("sized to n");
+                // Safety: tasks own disjoint row ranges of `cols`.
+                unsafe { view.range(j * n, n) }.copy_from_slice(&x);
+            }
+        });
     }
+    let mut inv = kernels::transpose(&cols)?;
     // symmetrize (f32 round-off)
     for i in 0..n {
         for j in 0..i {

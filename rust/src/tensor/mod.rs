@@ -1,9 +1,14 @@
-//! Dense f32 tensor substrate + linear algebra for the pruners.
+//! Dense f32 tensor substrate + the shared host kernel layer.
 //!
-//! The heavy math runs in AOT-compiled XLA; this module covers the
-//! coordinator-side work: mask construction, pruning criteria, SparseGPT's
-//! OBS solves, and statistics plumbing. Keep it simple and correct — the
-//! hot path never allocates tensors per-token.
+//! [`kernels`] holds the one parallel, cache-blocked implementation of
+//! every O(n³) primitive (matmul/gram/transpose), the fused
+//! elementwise/reduction helpers, and the mask-aware products — with a
+//! bit-identical-across-thread-counts determinism contract (see its
+//! module docs). [`Tensor`] is the thin data handle plus facade;
+//! [`linalg`] the SparseGPT OBS solves. Both backends' host numerics —
+//! the reference interpreter and the coordinator-side pruning math —
+//! run on these kernels.
+pub mod kernels;
 pub mod linalg;
 pub mod tensor;
 

@@ -136,39 +136,16 @@ impl Tensor {
         self.data.iter().fold(0.0f32, |a, &b| a.max(b.abs()))
     }
 
-    // ---- linear algebra (small matrices only; the hot path is in XLA) ----
+    // ---- linear algebra (facade over the shared kernel layer) ----
+    /// `self @ other` via [`crate::tensor::kernels::matmul`] — the one
+    /// parallel, cache-blocked O(n³) implementation in the tree.
     pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
-        let (m, k) = self.dims2()?;
-        let (k2, n) = other.dims2()?;
-        if k != k2 {
-            bail!("matmul dims {m}x{k} @ {k2}x{n}");
-        }
-        let mut out = Tensor::zeros(&[m, n]);
-        for i in 0..m {
-            for p in 0..k {
-                let a = self.at2(i, p);
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                let brow = &other.data[p * n..(p + 1) * n];
-                for j in 0..n {
-                    orow[j] += a * brow[j];
-                }
-            }
-        }
-        Ok(out)
+        super::kernels::matmul(self, other)
     }
 
+    /// Rank-2 transpose via [`crate::tensor::kernels::transpose`].
     pub fn transpose2(&self) -> Result<Tensor> {
-        let (m, n) = self.dims2()?;
-        let mut out = Tensor::zeros(&[n, m]);
-        for i in 0..m {
-            for j in 0..n {
-                *out.at2_mut(j, i) = self.at2(i, j);
-            }
-        }
-        Ok(out)
+        super::kernels::transpose(self)
     }
 
     // ---- selection ----

@@ -1,0 +1,141 @@
+//! Kernel-layer determinism at the artifact level: the reference
+//! backend's `block_ft_step` (the EBFT hot loop — masked-gradient Adam
+//! through the full block forward/backward) must produce bit-identical
+//! outputs under `EBFT_THREADS=1/2/8`. This is the contract that lets
+//! `--threads`/`EBFT_THREADS` move wall-clock without touching
+//! `backend_diff` pins, run-store resume byte-identity, or any recorded
+//! number. Runs artifact-free on a synthetic tiny manifest.
+
+use ebft::model::synth::{write_synthetic, SynthConfig};
+use ebft::model::ParamStore;
+use ebft::runtime::{BackendKind, DeviceBuffer, Session};
+use ebft::tensor::{kernels, Tensor};
+use ebft::util::Pcg64;
+
+fn open_session(tag: &str) -> Session {
+    let dir = std::env::temp_dir().join(format!(
+        "ebft-kdet-{tag}-{}", std::process::id()));
+    let manifest = write_synthetic(&dir, &SynthConfig::tiny()).unwrap();
+    Session::open_kind(manifest, BackendKind::Reference).unwrap()
+}
+
+/// Random binary mask with ~50% zeros.
+fn random_mask(shape: &[usize], rng: &mut Pcg64) -> Tensor {
+    let n: usize = shape.iter().product();
+    let data = (0..n)
+        .map(|_| if rng.below(2) == 0 { 0.0 } else { 1.0 })
+        .collect();
+    Tensor::from_vec(shape, data)
+}
+
+/// One `block_ft_step` execution with every input freshly bound,
+/// returning all 28 outputs as f32 bit patterns.
+fn run_ft_step(session: &Session, bp: &[Tensor], masks: &[Tensor],
+               x: &Tensor, target: &Tensor) -> Vec<Vec<u32>> {
+    let mut plan = session.plan("block_ft_step").unwrap();
+    plan.bind_indexed("bp", bp.iter()).unwrap();
+    plan.bind_indexed("mask", masks.iter()).unwrap();
+    for (j, t) in bp.iter().enumerate() {
+        let z = DeviceBuffer::zeros(&t.shape).unwrap();
+        plan.bind(&format!("m.{j}"), &z).unwrap();
+        plan.bind(&format!("v.{j}"), &z).unwrap();
+    }
+    plan.bind_scalar("t", 1.0).unwrap();
+    plan.bind_scalar("lr", 1e-2).unwrap();
+    plan.bind_tensor("x", x).unwrap();
+    plan.bind_tensor("target", target).unwrap();
+    plan.run_to_device()
+        .unwrap()
+        .iter()
+        .map(|o| {
+            o.fetch().unwrap().data.iter().map(|v| v.to_bits()).collect()
+        })
+        .collect()
+}
+
+#[test]
+fn block_ft_step_bit_identical_across_thread_counts() {
+    let session = open_session("ftstep");
+    let manifest = &session.manifest;
+    let d = manifest.dims.clone();
+
+    let dense = ParamStore::from_init_bin(manifest).unwrap();
+    let bp: Vec<Tensor> = dense
+        .block_params(manifest, 0)
+        .into_iter()
+        .cloned()
+        .collect();
+    let mut rng = Pcg64::seeded(0xde7);
+    let masks: Vec<Tensor> = manifest
+        .block_linear_shapes(0)
+        .iter()
+        .map(|s| random_mask(s, &mut rng))
+        .collect();
+    let act = [d.batch, d.seq, d.d_model];
+    let x = Tensor::randn(&act, 0.5, &mut rng);
+    let target = Tensor::randn(&act, 0.5, &mut rng);
+
+    let prev = kernels::set_threads(1);
+    let serial = run_ft_step(&session, &bp, &masks, &x, &target);
+    assert_eq!(serial.len(), 28, "bp×9 + m×9 + v×9 + loss");
+    for t in [2usize, 8] {
+        kernels::set_threads(t);
+        let outs = run_ft_step(&session, &bp, &masks, &x, &target);
+        for (oi, (a, b)) in serial.iter().zip(&outs).enumerate() {
+            assert_eq!(a, b,
+                       "output {oi} differs between EBFT_THREADS=1 and \
+                        EBFT_THREADS={t}");
+        }
+    }
+    kernels::set_threads(prev);
+}
+
+/// The full-model train step exercises embed/head/attention backwards
+/// and the LM-head softmax reduction on top of the block path — same
+/// contract, one level up.
+#[test]
+fn lm_train_step_bit_identical_across_thread_counts() {
+    let session = open_session("lmstep");
+    let manifest = &session.manifest;
+    let d = manifest.dims.clone();
+
+    let dense = ParamStore::from_init_bin(manifest).unwrap();
+    let mut rng = Pcg64::seeded(0x1337);
+    let tokens: Vec<i32> = (0..d.batch * d.seq)
+        .map(|_| rng.below(d.vocab as u64) as i32)
+        .collect();
+
+    let run = |_label: &str| -> Vec<Vec<u32>> {
+        let mut plan = session.plan("lm_train_step").unwrap();
+        plan.bind_indexed("param", dense.tensors.iter()).unwrap();
+        for (j, t) in dense.tensors.iter().enumerate() {
+            let z = DeviceBuffer::zeros(&t.shape).unwrap();
+            plan.bind(&format!("m.{j}"), &z).unwrap();
+            plan.bind(&format!("v.{j}"), &z).unwrap();
+        }
+        plan.bind_scalar("t", 1.0).unwrap();
+        plan.bind_scalar("lr", 3e-3).unwrap();
+        plan.bind_tokens("tokens", &tokens).unwrap();
+        plan.run_to_device()
+            .unwrap()
+            .iter()
+            .map(|o| {
+                o.fetch().unwrap().data.iter().map(|v| v.to_bits())
+                    .collect()
+            })
+            .collect()
+    };
+
+    let prev = kernels::set_threads(1);
+    let serial = run("serial");
+    for t in [2usize, 8] {
+        kernels::set_threads(t);
+        let outs = run("parallel");
+        for (oi, (a, b)) in serial.iter().zip(&outs).enumerate() {
+            assert_eq!(a, b,
+                       "lm_train_step output {oi} differs at \
+                        EBFT_THREADS={t}");
+        }
+    }
+    kernels::set_threads(prev);
+}

@@ -266,6 +266,7 @@ fn sweep_env(e: &Env) -> SweepEnv<'_> {
         eval_split: Split::WikiSim,
         dense_tag: "tiny-sched-test".to_string(),
         backend: e.session.backend_kind(),
+        threads: 0,
     }
 }
 
