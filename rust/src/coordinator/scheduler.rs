@@ -228,25 +228,6 @@ impl Drop for PanicGuard<'_> {
     }
 }
 
-/// Scoped override of the kernel layer's intra-op thread target,
-/// restored on drop (including the unwind path — a failed sweep must
-/// not leave the process narrowed).
-struct ThreadsGuard {
-    prev: usize,
-}
-
-impl ThreadsGuard {
-    fn set(n: usize) -> ThreadsGuard {
-        ThreadsGuard { prev: kernels::set_threads(n) }
-    }
-}
-
-impl Drop for ThreadsGuard {
-    fn drop(&mut self) {
-        kernels::set_threads(self.prev);
-    }
-}
-
 /// Read-only worker context, shared across threads.
 struct WorkerCtx<'s, 'e> {
     env: &'s SweepEnv<'e>,
@@ -394,7 +375,7 @@ impl<'a> Scheduler<'a> {
                 kernels::threads()
             };
             let _threads_guard =
-                ThreadsGuard::set((budget / n_workers).max(1));
+                kernels::ThreadsGuard::set((budget / n_workers).max(1));
             std::thread::scope(|scope| {
                 let ctx_ref = &ctx;
                 for wid in 1..n_workers {

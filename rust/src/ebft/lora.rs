@@ -11,10 +11,11 @@
 //! evaluation — note the merged model is no longer sparse (LoRA's
 //! deployment downside the paper calls out).
 
-use anyhow::Result;
+use anyhow::{bail, Result};
+use std::path::Path;
 
 use crate::masks::MaskSet;
-use crate::model::ParamStore;
+use crate::model::{checkpoint, Manifest, ParamStore};
 use crate::runtime::Session;
 use crate::tensor::{kernels, Tensor};
 use crate::util::Pcg64;
@@ -97,16 +98,86 @@ pub fn train(session: &Session, params: &ParamStore, masks: &MaskSet,
     }))
 }
 
+/// Canonical checkpoint entry names for the flat adapter sequence:
+/// `blocks.{l}.{linear}.lora_{a|b}`, in `Manifest::lora_shapes` order.
+fn adapter_names(manifest: &Manifest) -> Vec<String> {
+    let mut names = Vec::new();
+    for l in 0..manifest.dims.n_layers {
+        for linear in &manifest.block_linears {
+            names.push(format!("blocks.{l}.{linear}.lora_a"));
+            names.push(format!("blocks.{l}.{linear}.lora_b"));
+        }
+    }
+    names
+}
+
+/// Export a trained adapter set to a `.ebft` checkpoint (named A/B pairs
+/// in canonical order; atomic write). The frozen base is *not* included —
+/// an adapter file is the per-tenant deployment unit served over one
+/// shared pruned base.
+pub fn save_adapters(manifest: &Manifest, adapters: &[Tensor],
+                     path: &Path) -> Result<()> {
+    let names = adapter_names(manifest);
+    if adapters.len() != names.len() {
+        bail!("adapter export: got {} tensors, manifest {} says {} \
+               (2 per prunable linear)", adapters.len(),
+              manifest.dims.name, names.len());
+    }
+    let entries: Vec<(String, &Tensor)> =
+        names.into_iter().zip(adapters).collect();
+    checkpoint::save(path, &entries)
+}
+
+/// Load an adapter set exported by [`save_adapters`], validating entry
+/// names and shapes against the manifest so a file trained for a
+/// different config (or a base-model checkpoint) fails loudly.
+pub fn load_adapters(manifest: &Manifest, path: &Path)
+                     -> Result<Vec<Tensor>> {
+    let entries = checkpoint::load(path)?;
+    let names = adapter_names(manifest);
+    let shapes = manifest.lora_shapes();
+    if entries.len() != names.len() {
+        bail!("adapter file {}: {} entries, manifest {} expects {}",
+              path.display(), entries.len(), manifest.dims.name,
+              names.len());
+    }
+    entries
+        .into_iter()
+        .zip(names.iter().zip(&shapes))
+        .map(|((got_name, t), (want_name, want_shape))| {
+            if &got_name != want_name {
+                bail!("adapter file {}: entry '{got_name}' where \
+                       '{want_name}' was expected — not an adapter \
+                       export for this config?", path.display());
+            }
+            if &t.shape != want_shape {
+                bail!("adapter file {}: '{got_name}' has shape {:?}, \
+                       manifest {} expects {:?} (different lora_rank or \
+                       model dims)", path.display(), t.shape,
+                      manifest.dims.name, want_shape);
+            }
+            Ok(t)
+        })
+        .collect()
+}
+
 /// Fold adapters into a copy of the params: W ← W⊙M + s·A·B. The returned
 /// store evaluates with *dense* masks (the merge destroys sparsity).
 pub fn merge(session: &Session, params: &ParamStore, masks: &MaskSet,
              adapters: &[Tensor]) -> Result<ParamStore> {
-    let d = session.manifest.dims.clone();
-    let scale = d.lora_scale;
+    merge_manifest(&session.manifest, params, masks, adapters)
+}
+
+/// Session-free [`merge`] — the serving `AdapterRegistry` folds tenant
+/// adapters with only a manifest in hand (its workers own the sessions).
+pub fn merge_manifest(manifest: &Manifest, params: &ParamStore,
+                      masks: &MaskSet, adapters: &[Tensor])
+                      -> Result<ParamStore> {
+    let scale = manifest.dims.lora_scale;
     let mut merged = params.clone();
     let mut ai = 0usize;
-    for l in 0..d.n_layers {
-        let idx = session.manifest.block_linear_indices(l);
+    for l in 0..manifest.dims.n_layers {
+        let idx = manifest.block_linear_indices(l);
         for (j, &pi) in idx.iter().enumerate() {
             let a = &adapters[ai];
             let b = &adapters[ai + 1];

@@ -17,6 +17,9 @@
 //! - [`data`]    — synthetic corpus + batcher + zero-shot probes
 //! - [`coordinator`] — stage-based pipeline (prune→recover→eval), the
 //!   pruner/recovery registries, and the grid sweep driver
+//! - [`serve`]   — autoregressive decoding with device-resident KV
+//!   caches, continuous-batching worker engine, and multi-adapter
+//!   multi-tenant routing over one shared pruned base
 pub mod bench_support;
 pub mod config;
 pub mod coordinator;
@@ -29,5 +32,6 @@ pub mod model;
 pub mod pretrain;
 pub mod pruning;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;

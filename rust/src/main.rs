@@ -9,6 +9,10 @@
 //!   flap       structured pruning + {none|ebft|lora} recovery (§4.4)
 //!   eval       perplexity of a checkpoint (+ masks) on wiki-sim
 //!   zeroshot   the 7-task zero-shot suite
+//!   generate   one-shot autoregressive generation (KV-cache decode)
+//!   serve-bench  synthetic concurrent load over the serving engine:
+//!              continuous batching + multi-tenant adapters, reporting
+//!              tokens/sec and p50/p99 latency vs a serial baseline
 //!   info       manifest / artifact summary
 //!
 //! Methods resolve through the coordinator registries, so `--method` and
@@ -37,8 +41,9 @@ use ebft::masks::MaskSet;
 use ebft::model::{Manifest, ParamStore};
 use ebft::pruning::Pattern;
 use ebft::runtime::Session;
+use ebft::serve::{Sampler, Sampling};
 use ebft::util::metrics::fmt_ppl;
-use ebft::util::{Args, TableWriter};
+use ebft::util::{Args, Json, TableWriter};
 
 fn main() {
     if let Err(e) = run() {
@@ -110,6 +115,8 @@ fn run() -> Result<()> {
         "flap" => cmd_flap(&args),
         "eval" => cmd_eval(&args),
         "zeroshot" => cmd_zeroshot(&args),
+        "generate" => cmd_generate(&args),
+        "serve-bench" => cmd_serve_bench(&args),
         "info" => cmd_info(&args),
         "" => {
             print_usage();
@@ -122,9 +129,11 @@ fn run() -> Result<()> {
 fn print_usage() {
     println!("ebft — block-wise fine-tuning for sparse LLMs (reproduction)");
     println!();
-    println!("usage: ebft <pretrain|prune|finetune|pipeline|grid|flap|eval|zeroshot|info> [--options]");
+    println!("usage: ebft <pretrain|prune|finetune|pipeline|grid|flap|eval|zeroshot|generate|serve-bench|info> [--options]");
     println!("common options: --config tiny|small|base  --artifacts DIR  --runs DIR  --threads N");
     println!("sweep options (pipeline/grid): --jobs N  --resume");
+    println!("serving options (generate/serve-bench): --synthetic  --max-new N  --top-k K --temperature T");
+    println!("serve-bench options: --tenants N  --requests N  --workers N  --max-batch N  --deadline-ms MS");
     println!("see README.md for full examples");
 }
 
@@ -428,6 +437,233 @@ fn cmd_zeroshot(args: &Args) -> Result<()> {
                         ebft::eval::zeroshot::mean_accuracy(&results))]);
     table.print();
     Ok(())
+}
+
+/// Session + artifact dir for the serving subcommands. `--synthetic`
+/// writes the tiny synthetic manifest under runs/ and opens it on the
+/// pure-Rust reference backend (no AOT artifacts needed — the CI serve
+/// smoke path); otherwise the usual compiled-artifact path.
+fn open_serving(args: &Args)
+                -> Result<(Session, std::path::PathBuf, Paths,
+                           MarkovCorpus)> {
+    if args.has_flag("synthetic") {
+        let paths = Paths::from_args(args);
+        let dir = paths.runs.join("synth-tiny");
+        let manifest = ebft::model::write_synthetic(
+            &dir, &ebft::model::SynthConfig::tiny())
+            .context("writing the synthetic tiny manifest")?;
+        let session = Session::open_kind(
+            manifest, ebft::runtime::BackendKind::Reference)?;
+        let seed = args.get_u64("corpus-seed", 7)?;
+        let corpus = MarkovCorpus::new(session.manifest.dims.vocab, seed);
+        Ok((session, dir, paths, corpus))
+    } else {
+        let config = args.get_or("config", "small").to_string();
+        let (session, paths, corpus) = open(args)?;
+        let dir = paths.artifact_dir(&config);
+        Ok((session, dir, paths, corpus))
+    }
+}
+
+fn sampling_from_args(args: &Args) -> Result<Sampling> {
+    match args.get("top-k") {
+        Some(k) => Ok(Sampling::TopK {
+            k: k.parse().context("--top-k expects an integer ≥ 1")?,
+            temperature: args.get_f32("temperature", 0.8)?,
+        }),
+        None => Ok(Sampling::Greedy),
+    }
+}
+
+/// One-shot generation through the KV-cache decoder: `ebft generate
+/// --synthetic --prompt 3,1,4 --max-new 16 [--top-k 5 --gen-seed 1]`.
+/// Greedy is fully deterministic; top-k reproduces per `--gen-seed`.
+fn cmd_generate(args: &Args) -> Result<()> {
+    let (session, _dir, paths, corpus) = open_serving(args)?;
+    let params = load_base(args, &session, &paths, &corpus)?;
+    let masks = match args.get("masks") {
+        Some(p) => MaskSet::load(std::path::Path::new(p),
+                                 &session.manifest)?,
+        None => MaskSet::dense(&session.manifest),
+    };
+    let vocab = session.manifest.dims.vocab;
+    let prompt: Vec<i32> = match args.get("prompt") {
+        Some(p) => p
+            .split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<i32>()
+                    .ok()
+                    .filter(|&tok| (0..vocab as i32).contains(&tok))
+                    .with_context(|| format!(
+                        "--prompt token '{t}' is not a token id in \
+                         0..{vocab}"))
+            })
+            .collect::<Result<_>>()?,
+        None => corpus.sequence(Split::WikiSim,
+                                args.get_u64("prompt-seq", 0)?,
+                                args.get_usize("prompt-len", 8)?),
+    };
+    let mut sampler = Sampler::new(sampling_from_args(args)?,
+                                   args.get_u64("gen-seed", 0)?);
+    let max_new = args.get_usize("max-new", 16)?;
+    let t0 = std::time::Instant::now();
+    let tokens = ebft::serve::generate(&session, &params, &masks, &prompt,
+                                       max_new, &mut sampler)?;
+    let secs = t0.elapsed().as_secs_f64();
+    println!("prompt ({} tokens): {}", prompt.len(), fmt_tokens(&prompt));
+    println!("generated ({} tokens): {}", tokens.len(),
+             fmt_tokens(&tokens));
+    println!("{:.1} tok/s ({:.2}s incl. prefill)",
+             tokens.len() as f64 / secs.max(1e-9), secs);
+    Ok(())
+}
+
+fn fmt_tokens(tokens: &[i32]) -> String {
+    tokens
+        .iter()
+        .map(|t| t.to_string())
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// Synthetic concurrent load over the serving engine: prune the base,
+/// register `--tenants N` LoRA adapter sets over it, then serve
+/// `--requests N` round-robin-tenant requests twice — serially
+/// (1 worker, batch 1) and batched (`--workers`/`--max-batch`) — and
+/// report tokens/sec, p50/p99 latency, and peak concurrency for both.
+/// Greedy serving is deterministic, so the batched run must emit
+/// exactly the serial run's tokens (checked unless a deadline is set).
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    use ebft::serve::{serve, AdapterRegistry, Request, ServeConfig,
+                      BASE_TENANT};
+    let (session, artifact_dir, paths, corpus) = open_serving(args)?;
+    let dense = load_base(args, &session, &paths, &corpus)?;
+    let pipe = build_pipeline(args, &session, &corpus, &dense)?;
+    let pruner = coordinator::pruner(args.get_or("method", "magnitude"))?;
+    let pattern = parse_pattern(args)?;
+    let pruned = pipe.prune(pruner, pattern)?;
+    println!("base pruned with {} at {} (sparsity {:.1}%)",
+             pruner.label(), pattern.label(),
+             100.0 * pruned.masks.sparsity());
+
+    let n_tenants = args.get_usize("tenants", 2)?;
+    let mut registry = AdapterRegistry::new(session.manifest.clone(),
+                                            pruned.params.clone(),
+                                            pruned.masks.clone());
+    for i in 0..n_tenants {
+        registry.register(&format!("tenant{i}"),
+                          ebft::ebft::lora::init_adapters(&session,
+                                                          i as u64))?;
+    }
+
+    let n_requests = args.get_usize("requests", 8)?;
+    let prompt_len = args
+        .get_usize("prompt-len", 4)?
+        .clamp(1, session.manifest.dims.seq / 2);
+    let max_new = args.get_usize("max-new", 8)?;
+    let deadline_ms = match args.get("deadline-ms") {
+        Some(v) => Some(v.parse::<f64>()
+            .ok()
+            .filter(|d| *d > 0.0)
+            .context("--deadline-ms expects a positive number")?),
+        None => None,
+    };
+    let requests: Vec<Request> = (0..n_requests)
+        .map(|i| Request {
+            id: i,
+            tenant: if n_tenants == 0 {
+                BASE_TENANT.to_string()
+            } else {
+                format!("tenant{}", i % n_tenants)
+            },
+            prompt: corpus.sequence(Split::WikiSim, i as u64, prompt_len),
+            max_new,
+            deadline_ms,
+        })
+        .collect();
+
+    let sampling = sampling_from_args(args)?;
+    let seed = args.get_u64("gen-seed", 0)?;
+    let threads = args.get_usize("threads", 0)?;
+    let backend = session.backend_kind();
+    let serial_cfg = ServeConfig {
+        workers: 1,
+        max_batch: 1,
+        sampling,
+        seed,
+        threads,
+    };
+    let batched_cfg = ServeConfig {
+        workers: args.get_usize("workers", 2)?,
+        max_batch: args.get_usize("max-batch", 2)?,
+        sampling,
+        seed,
+        threads,
+    };
+    println!("serving {n_requests} requests over {n_tenants} tenant(s) \
+              + shared base: prompt {prompt_len}, max_new {max_new}");
+    let serial = serve(&artifact_dir, backend, &registry,
+                       requests.clone(), &serial_cfg)?;
+    print_serve("serial ", &serial_cfg, &serial);
+    let batched = serve(&artifact_dir, backend, &registry, requests,
+                        &batched_cfg)?;
+    print_serve("batched", &batched_cfg, &batched);
+
+    if deadline_ms.is_none() {
+        for (a, b) in serial.completions.iter().zip(&batched.completions)
+        {
+            if a.tokens != b.tokens {
+                bail!("serve-bench: batched tokens diverge from serial \
+                       for request {} — scheduling leaked into sampling \
+                       (engine bug)", a.id);
+            }
+        }
+        println!("determinism: batched token streams identical to serial");
+    }
+    let speedup = batched.tokens_per_sec / serial.tokens_per_sec.max(1e-9);
+    println!("batched/serial throughput: ×{speedup:.2}");
+
+    let mut j = Json::obj();
+    j.set("requests", Json::Num(n_requests as f64));
+    j.set("tenants", Json::Num(n_tenants as f64));
+    j.set("serial", serve_json(&serial));
+    j.set("batched", serve_json(&batched));
+    j.set("speedup", Json::Num(speedup));
+    std::fs::create_dir_all(&paths.runs)?;
+    let out = paths.runs.join("serve_bench.json");
+    j.write_file(&out)?;
+    println!("[results written to {}]", out.display());
+    Ok(())
+}
+
+fn print_serve(tag: &str, cfg: &ebft::serve::ServeConfig,
+               r: &ebft::serve::ServeReport) {
+    let mut finishes = std::collections::BTreeMap::new();
+    for c in &r.completions {
+        *finishes.entry(c.finish.label()).or_insert(0usize) += 1;
+    }
+    let finishes = finishes
+        .iter()
+        .map(|(k, v)| format!("{v} {k}"))
+        .collect::<Vec<_>>()
+        .join(", ");
+    println!("{tag} (workers {}, batch {}): {:.1} tok/s  p50 {:.1}ms  \
+              p99 {:.1}ms  peak {} in flight  ({} tokens in {:.2}s; {})",
+             cfg.workers, cfg.max_batch, r.tokens_per_sec, r.p50_ms,
+             r.p99_ms, r.max_concurrent, r.total_new_tokens, r.secs,
+             finishes);
+}
+
+fn serve_json(r: &ebft::serve::ServeReport) -> Json {
+    let mut j = Json::obj();
+    j.set("tokens_per_sec", Json::Num(r.tokens_per_sec));
+    j.set("total_new_tokens", Json::Num(r.total_new_tokens as f64));
+    j.set("secs", Json::Num(r.secs));
+    j.set("p50_ms", Json::Num(r.p50_ms));
+    j.set("p99_ms", Json::Num(r.p99_ms));
+    j.set("max_concurrent", Json::Num(r.max_concurrent as f64));
+    j
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

@@ -173,6 +173,33 @@ pub fn manifest_json(cfg: &SynthConfig) -> Json {
              x(), tok(), spec("weights", &[b, s], "f32")],
         vec![spec("nll", &[b], "f32"), spec("wsum", &[b], "f32")]));
 
+    // Decode-step artifacts (serving path). Batch-1 single-position
+    // signatures; `block_decode` names `k_cache`/`v_cache` identically on
+    // both sides so `donate_matching` keeps the KV cache device-resident
+    // across steps. Optional extras: `Manifest::validate` does not require
+    // them, so compiled PJRT manifests without a decode path still load.
+    arts.set("embed_decode", artifact(
+        "embed_decode",
+        vec![spec("embed", &[v, d], "f32"), spec("token", &[1], "i32")],
+        vec![spec("x", &[1, d], "f32")]));
+    let mut dec_ins = indexed("bp", &bp_shapes);
+    dec_ins.extend(indexed("mask", &mask_shapes));
+    dec_ins.push(spec("x", &[1, d], "f32"));
+    dec_ins.push(spec("k_cache", &[s, d], "f32"));
+    dec_ins.push(spec("v_cache", &[s, d], "f32"));
+    dec_ins.push(scalar("pos"));
+    arts.set("block_decode", artifact(
+        "block_decode",
+        dec_ins,
+        vec![spec("y", &[1, d], "f32"),
+             spec("k_cache", &[s, d], "f32"),
+             spec("v_cache", &[s, d], "f32")]));
+    arts.set("head_decode", artifact(
+        "head_decode",
+        vec![spec("g_norm", &[d], "f32"), spec("head", &[d, v], "f32"),
+             spec("x", &[1, d], "f32")],
+        vec![spec("logits", &[1, v], "f32")]));
+
     for sfx in ["", "_pallas"] {
         let mut fwd_ins = indexed("bp", &bp_shapes);
         fwd_ins.extend(indexed("mask", &mask_shapes));
@@ -349,7 +376,8 @@ mod tests {
         for name in ["embed_fwd", "block_fwd", "block_fwd_pallas",
                      "block_ft_step", "block_ft_step_pallas", "block_grad",
                      "block_stats", "head_loss", "head_seq_nll", "lm_loss",
-                     "lm_train_step", "lora_train_step"] {
+                     "lm_train_step", "lora_train_step", "embed_decode",
+                     "block_decode", "head_decode"] {
             assert!(m.artifacts.contains_key(name), "missing {name}");
         }
         assert!((m.dims.beta2 - 0.999).abs() < 1e-9);
@@ -382,6 +410,19 @@ mod tests {
         assert_eq!(lora.outputs.len(), 3 * n_lora + 1);
         let stats = m.artifact("block_stats").unwrap();
         assert_eq!(stats.outputs.len(), 1 + 12);
+        // decode path: per-step shapes + self-named circulating caches
+        let bd = m.artifact("block_decode").unwrap();
+        assert_eq!(bd.inputs.len(), 9 + 7 + 4);
+        assert_eq!(bd.outputs.len(), 3);
+        for cache in ["k_cache", "v_cache"] {
+            assert!(bd.inputs.iter().any(|s| s.name == cache));
+            assert!(bd.outputs.iter().any(|s| s.name == cache));
+        }
+        let ed = m.artifact("embed_decode").unwrap();
+        assert_eq!(ed.inputs[1].dtype, "i32");
+        assert_eq!(ed.outputs[0].shape, vec![1, cfg.d_model]);
+        let hd = m.artifact("head_decode").unwrap();
+        assert_eq!(hd.outputs[0].shape, vec![1, cfg.vocab]);
     }
 
     #[test]

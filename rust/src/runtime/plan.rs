@@ -154,8 +154,10 @@ impl<'s> Plan<'s> {
     pub fn bound(&self, slot: &str) -> Result<&DeviceBuffer> {
         let i = self.slot_index(slot)?;
         self.slots[i].as_ref().with_context(|| {
-            format!("artifact {} slot '{slot}' is not bound",
-                    self.spec.name)
+            format!("artifact {} slot '{slot}' is not bound — bind it \
+                     with bind/bind_tensor/bind_scalar/bind_tokens (or \
+                     run a plan whose donation fills it) before reading \
+                     it back", self.spec.name)
         })
     }
 
@@ -220,8 +222,19 @@ impl<'s> Plan<'s> {
             .map(|(_, s)| s.name.as_str())
             .collect();
         if !unbound.is_empty() {
-            bail!("artifact {}: {} input slot(s) not bound: {}",
-                  self.spec.name, unbound.len(), unbound.join(", "));
+            let shown = if unbound.len() > 12 {
+                format!("{}, … {} total", unbound[..12].join(", "),
+                        unbound.len())
+            } else {
+                unbound.join(", ")
+            };
+            bail!("artifact {}: {} of {} input slot(s) not bound before \
+                   run: {} — bind each with bind/bind_tensor/bind_scalar/\
+                   bind_tokens (indexed groups via bind_indexed); slots \
+                   keep their binding across runs, so persistent inputs \
+                   only need binding once",
+                  self.spec.name, unbound.len(), self.spec.inputs.len(),
+                  shown);
         }
         let bound: Vec<DeviceBuffer> = self
             .slots

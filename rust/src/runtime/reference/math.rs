@@ -470,6 +470,119 @@ pub fn block_bwd(dm: &Dims, eff: &[Tensor], g1: &[f32], g2: &[f32],
 }
 
 // ---------------------------------------------------------------------
+// incremental decode (serving path)
+// ---------------------------------------------------------------------
+//
+// The decode kernels are the single-position restriction of the forward
+// graphs above, bit-identical to row `pos` of a full forward over the
+// same prefix: every expression below is copied verbatim from its batch
+// counterpart (`rope`'s angle table entry, `attention_fwd`'s causal
+// score/softmax/context accumulation order, `rmsnorm_fwd` via direct
+// reuse on `[1, D]`), and `kernels::matmul` owns each output row with a
+// fixed ascending-k accumulation, so a `[1, D]` product equals the
+// corresponding row of the `[T, D]` product. The work is far below the
+// kernel layer's parallel thresholds, so decode runs serially inside a
+// worker — thread-count invariance is trivial, and serving concurrency
+// comes from running many sequences on independent sessions.
+
+/// Rotary embedding of one `[D]` row in head layout at an explicit
+/// `pos` — the decode-time counterpart of [`rope`]'s row `s = pos`.
+pub fn rope_row(row: &mut [f32], pos: usize, dm: &Dims, sin_sign: f32) {
+    let (h, hd) = (dm.n_heads, dm.head_dim);
+    let half = hd / 2;
+    for head in 0..h {
+        let off = head * hd;
+        for i in 0..half {
+            let freq = 10000f32.powf(-(i as f32) / half as f32);
+            let (sin, cos) = (pos as f32 * freq).sin_cos();
+            let sin = sin * sin_sign;
+            let a = row[off + i];
+            let b2 = row[off + half + i];
+            row[off + i] = a * cos - b2 * sin;
+            row[off + half + i] = a * sin + b2 * cos;
+        }
+    }
+}
+
+/// Causal attention for one post-RoPE query row at `pos` over cached
+/// K/V (`[S, D]` head layout, rows `0..=pos` valid). Mirrors
+/// [`attention_fwd`]'s inner loop for `si = pos` exactly: scores in
+/// ascending `tj` with a running max, exp/denominator in the same
+/// order, context accumulated from zero in ascending `tj`.
+pub fn attention_decode(q: &[f32], k_cache: &Tensor, v_cache: &Tensor,
+                        pos: usize, dm: &Dims) -> Vec<f32> {
+    let (h, hd) = (dm.n_heads, dm.head_dim);
+    let d = h * hd;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut ctx = vec![0.0f32; d];
+    let mut scores = vec![0.0f32; pos + 1];
+    for head in 0..h {
+        let off = head * hd;
+        let qrow = &q[off..off + hd];
+        let mut maxs = f32::NEG_INFINITY;
+        for (tj, slot) in scores.iter_mut().enumerate() {
+            let krow = &k_cache.data[tj * d + off..tj * d + off + hd];
+            let sc: f32 = qrow
+                .iter()
+                .zip(krow)
+                .map(|(a, b2)| a * b2)
+                .sum::<f32>()
+                * scale;
+            *slot = sc;
+            maxs = maxs.max(sc);
+        }
+        let mut denom = 0.0f32;
+        for slot in scores.iter_mut() {
+            *slot = (*slot - maxs).exp();
+            denom += *slot;
+        }
+        let crow = &mut ctx[off..off + hd];
+        for (tj, &e) in scores.iter().enumerate() {
+            let p = e / denom;
+            let vrow = &v_cache.data[tj * d + off..tj * d + off + hd];
+            for (c, &vv) in crow.iter_mut().zip(vrow) {
+                *c += p * vv;
+            }
+        }
+    }
+    ctx
+}
+
+/// One transformer block for a single position: writes this step's
+/// post-RoPE K and pre-attention V rows into the caches at `pos`, then
+/// attends over rows `0..=pos`. `x` is `[1, D]`; returns `y [1, D]`.
+pub fn block_decode_fwd(dm: &Dims, eff: &[Tensor], g1: &[f32], g2: &[f32],
+                        x: &Tensor, k_cache: &mut Tensor,
+                        v_cache: &mut Tensor, pos: usize) -> Result<Tensor> {
+    let d = dm.d_model;
+    let (xn, _r1) = rmsnorm_fwd(x, g1);
+    let mut q = kernels::matmul(&xn, &eff[0])?;
+    let mut k = kernels::matmul(&xn, &eff[1])?;
+    let v = kernels::matmul(&xn, &eff[2])?;
+    rope_row(&mut q.data[..d], pos, dm, 1.0);
+    rope_row(&mut k.data[..d], pos, dm, 1.0);
+    k_cache.row_mut(pos).copy_from_slice(&k.data);
+    v_cache.row_mut(pos).copy_from_slice(&v.data);
+    let ctx = Tensor::from_vec(
+        &[1, d], attention_decode(&q.data, k_cache, v_cache, pos, dm));
+    let attn_out = kernels::matmul(&ctx, &eff[3])?;
+    let xa = x.add(&attn_out);
+    let (hn, _r2) = rmsnorm_fwd(&xa, g2);
+    let gate = kernels::matmul(&hn, &eff[4])?;
+    let up = kernels::matmul(&hn, &eff[5])?;
+    let hmid = kernels::silu_mul(&gate, &up);
+    let down = kernels::matmul(&hmid, &eff[6])?;
+    Ok(xa.add(&down))
+}
+
+/// Final norm → logits for one position (`x [1, D]` → `[1, V]`).
+pub fn head_decode(g_norm: &[f32], head: &Tensor, x: &Tensor)
+                   -> Result<Tensor> {
+    let (xn, _r) = rmsnorm_fwd(x, g_norm);
+    kernels::matmul(&xn, head)
+}
+
+// ---------------------------------------------------------------------
 // embedding + LM head
 // ---------------------------------------------------------------------
 
@@ -947,5 +1060,55 @@ mod tests {
                            .collect::<Vec<_>>(), "dx@{t}");
         }
         kernels::set_threads(prev);
+    }
+
+    /// Single-position decode over a growing KV cache reproduces each
+    /// row of the full batched block forward bit-for-bit — the math-level
+    /// face of the decode↔full-forward parity contract.
+    #[test]
+    fn block_decode_matches_full_forward_rows() {
+        let dm = dims();
+        let mut rng = Pcg64::seeded(0xdec0de);
+        let (eff, g1, g2) = block_weights(&dm, &mut rng);
+        let x = randt(&[dm.tokens(), dm.d_model], &mut rng);
+        let full = block_fwd(&dm, &eff, &g1, &g2, &x).unwrap();
+        let d = dm.d_model;
+        // batch 0 occupies rows 0..seq; decode it position by position
+        let mut kc = Tensor::zeros(&[dm.seq, d]);
+        let mut vc = Tensor::zeros(&[dm.seq, d]);
+        for pos in 0..dm.seq {
+            let xr = Tensor::from_vec(&[1, d], x.row(pos).to_vec());
+            let y = block_decode_fwd(&dm, &eff, &g1, &g2, &xr,
+                                     &mut kc, &mut vc, pos).unwrap();
+            assert_eq!(
+                y.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                full.y.row(pos).iter().map(|v| v.to_bits())
+                    .collect::<Vec<_>>(),
+                "decode row {pos} diverges from full forward");
+        }
+    }
+
+    /// `head_decode` equals the corresponding logits row of the batched
+    /// norm→head product.
+    #[test]
+    fn head_decode_matches_batched_logits_row() {
+        let dm = dims();
+        let mut rng = Pcg64::seeded(0xbead);
+        let g_norm: Vec<f32> = (0..dm.d_model)
+            .map(|_| 1.0 + 0.1 * rng.next_normal())
+            .collect();
+        let head = randt(&[dm.d_model, dm.vocab], &mut rng);
+        let x = randt(&[dm.tokens(), dm.d_model], &mut rng);
+        let (xn, _r) = rmsnorm_fwd(&x, &g_norm);
+        let full = kernels::matmul(&xn, &head).unwrap();
+        for t in [0usize, 3, dm.tokens() - 1] {
+            let xr = Tensor::from_vec(&[1, dm.d_model], x.row(t).to_vec());
+            let got = head_decode(&g_norm, &head, &xr).unwrap();
+            assert_eq!(
+                got.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                full.row(t).iter().map(|v| v.to_bits())
+                    .collect::<Vec<_>>(),
+                "logits row {t}");
+        }
     }
 }

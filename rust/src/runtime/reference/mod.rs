@@ -4,7 +4,9 @@
 //! Implements every graph `python/compile/aot.py` lowers — embed/head
 //! forward, block forward, the block/LM/LoRA Adam train steps (with
 //! hand-derived reverse-mode gradients in [`math`]), mask-tuning
-//! gradients and pruning statistics — numerically on host tensors,
+//! gradients, pruning statistics, and the single-position decode path
+//! (`embed_decode`/`block_decode`/`head_decode`, the serving layer's
+//! KV-cache step) — numerically on host tensors,
 //! driven entirely by the manifest's dims and slot specs. No HLO files,
 //! PJRT client, or Python toolchain are touched, which is what lets the
 //! artifact-bound integration suites run in plain `cargo test` (see
@@ -31,7 +33,7 @@ use crate::tensor::{kernels, Tensor};
 const SUPPORTED: &[&str] = &[
     "embed_fwd", "block_fwd", "block_ft_step", "block_grad", "block_stats",
     "head_loss", "head_seq_nll", "lm_loss", "lm_train_step",
-    "lora_train_step",
+    "lora_train_step", "embed_decode", "block_decode", "head_decode",
 ];
 
 fn base_name(name: &str) -> &str {
@@ -86,6 +88,9 @@ impl Backend for ReferenceBackend {
             "lm_loss" => interp.lm_loss(inputs),
             "lm_train_step" => interp.lm_train_step(inputs),
             "lora_train_step" => interp.lora_train_step(inputs),
+            "embed_decode" => interp.embed_decode(inputs),
+            "block_decode" => interp.block_decode(inputs),
+            "head_decode" => interp.head_decode(inputs),
             other => bail!("unimplemented artifact '{other}' (bug: \
                             ensure_ready admitted it)"),
         }
@@ -325,6 +330,52 @@ impl Interp {
         let (nll, wsum) = math::head_seq_nll(&self.dm, &g_norm.data, &head,
                                              &x, &tokens, &weights.data)?;
         Ok(vec![nll, wsum])
+    }
+
+    /// `embed_decode(embed, token) → x [1, D]` — one-token gather.
+    fn embed_decode(&self, inputs: &[DeviceBuffer])
+                    -> Result<Vec<Vec<f32>>> {
+        let embed = self.ten(inputs, 0)?;
+        let token = inputs[1].fetch_i32()?;
+        let x = math::embed_fwd(&embed, &token, self.dm.vocab,
+                                self.dm.d_model);
+        Ok(vec![x.data])
+    }
+
+    /// `block_decode(bp×9, mask×7, x, k_cache, v_cache, pos)
+    ///  → (y, k_cache, v_cache)` — one block, one position, attending
+    /// over the cached prefix. Caches self-name on both sides so
+    /// `donate_matching` keeps them device-resident across steps.
+    fn block_decode(&self, inputs: &[DeviceBuffer])
+                    -> Result<Vec<Vec<f32>>> {
+        let bp = self.range(inputs, 0, N_BLOCK_PARAMS)?;
+        let masks = self.range(inputs, N_BLOCK_PARAMS, N_BLOCK_LINEARS)?;
+        let i = N_BLOCK_PARAMS + N_BLOCK_LINEARS;
+        let x = self.ten(inputs, i)?;
+        let mut k_cache = self.ten(inputs, i + 1)?;
+        let mut v_cache = self.ten(inputs, i + 2)?;
+        let pos_f = inputs[i + 3].fetch_scalar()?;
+        let pos = pos_f as usize;
+        if pos_f < 0.0 || pos_f.fract() != 0.0 || pos >= self.dm.seq {
+            bail!("block_decode: pos {pos_f} outside the cache capacity \
+                   0..{} (the KV cache holds `seq` positions)",
+                  self.dm.seq);
+        }
+        let eff = Self::masked_eff(&bp, &masks);
+        let y = math::block_decode_fwd(&self.dm, &eff, &bp[7].data,
+                                       &bp[8].data, &x, &mut k_cache,
+                                       &mut v_cache, pos)?;
+        Ok(vec![y.data, k_cache.data, v_cache.data])
+    }
+
+    /// `head_decode(g_norm, head, x) → logits [1, V]`.
+    fn head_decode(&self, inputs: &[DeviceBuffer])
+                   -> Result<Vec<Vec<f32>>> {
+        let g_norm = self.ten(inputs, 0)?;
+        let head = self.ten(inputs, 1)?;
+        let x = self.ten(inputs, 2)?;
+        let logits = math::head_decode(&g_norm.data, &head, &x)?;
+        Ok(vec![logits.data])
     }
 
     /// Shared full-model forward: embed → blocks (given per-block

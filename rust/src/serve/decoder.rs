@@ -1,0 +1,238 @@
+//! Per-sequence incremental decoding over device-resident KV caches,
+//! plus the seeded greedy/top-k sampler.
+
+use anyhow::{bail, Result};
+
+use crate::masks::MaskSet;
+use crate::model::ParamStore;
+use crate::runtime::{DeviceBuffer, Plan, Session};
+use crate::tensor::Tensor;
+use crate::util::Pcg64;
+
+/// Token-selection policy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Sampling {
+    /// Argmax, ties to the lowest token id — fully deterministic.
+    Greedy,
+    /// Softmax over the `k` highest logits at `temperature`, sampled
+    /// from the sequence's seeded RNG stream.
+    TopK { k: usize, temperature: f32 },
+}
+
+/// Next-token selector. Each sequence owns one, seeded from the serve
+/// seed and the request id, so sampled generations are reproducible
+/// regardless of which worker decodes them or in what order.
+pub struct Sampler {
+    sampling: Sampling,
+    rng: Pcg64,
+}
+
+impl Sampler {
+    pub fn new(sampling: Sampling, seed: u64) -> Sampler {
+        Sampler { sampling, rng: Pcg64::new(seed, 0x5e27e) }
+    }
+
+    /// Select the next token from a logits row.
+    pub fn next_token(&mut self, logits: &[f32]) -> Result<i32> {
+        if logits.is_empty() {
+            bail!("sampler: empty logits row");
+        }
+        match self.sampling {
+            Sampling::Greedy => {
+                let mut best = 0usize;
+                for (i, &v) in logits.iter().enumerate() {
+                    if v > logits[best] {
+                        best = i;
+                    }
+                }
+                Ok(best as i32)
+            }
+            Sampling::TopK { k, temperature } => {
+                if k == 0 {
+                    bail!("sampler: top-k needs k ≥ 1");
+                }
+                if !(temperature > 0.0) {
+                    bail!("sampler: top-k needs temperature > 0, got \
+                           {temperature} (use Greedy for temperature 0)");
+                }
+                let idx = Tensor::top_k_indices(logits, k);
+                let maxv = idx
+                    .iter()
+                    .map(|&i| logits[i])
+                    .fold(f32::NEG_INFINITY, f32::max);
+                let weights: Vec<f32> = idx
+                    .iter()
+                    .map(|&i| ((logits[i] - maxv) / temperature).exp())
+                    .collect();
+                Ok(idx[self.rng.sample_weighted(&weights)] as i32)
+            }
+        }
+    }
+}
+
+/// One sequence's decode state: an embed plan, one `block_decode` plan
+/// per layer (params + masks bound once; `[seq, d_model]` K/V caches
+/// circulating device-resident through output→input donation), and a
+/// head plan. Feeding a token advances the cache by one position; the
+/// cache capacity is the manifest's `seq`.
+pub struct Decoder<'s> {
+    embed: Plan<'s>,
+    blocks: Vec<Plan<'s>>,
+    head: Plan<'s>,
+    /// `block_decode`'s `y` output index (same for every layer).
+    y_idx: usize,
+    pos: usize,
+    seq: usize,
+}
+
+impl<'s> Decoder<'s> {
+    /// Bind `params`/`masks` (a tenant's servable weights) into fresh
+    /// decode plans with zeroed caches at position 0.
+    pub fn new(session: &'s Session, params: &ParamStore,
+               masks: &MaskSet) -> Result<Decoder<'s>> {
+        let manifest = &session.manifest;
+        let d = manifest.dims.clone();
+        let mut embed = session.plan("embed_decode")?;
+        embed.bind_tensor("embed", params.get("embed")?)?;
+        let mut blocks = Vec::with_capacity(d.n_layers);
+        for l in 0..d.n_layers {
+            let mut p = session.plan("block_decode")?;
+            p.bind_indexed("bp", params.block_params(manifest, l))?;
+            p.bind_indexed("mask", masks.block(l).iter())?;
+            p.bind("k_cache",
+                   &DeviceBuffer::zeros(&[d.seq, d.d_model])?)?;
+            p.bind("v_cache",
+                   &DeviceBuffer::zeros(&[d.seq, d.d_model])?)?;
+            // k_cache/v_cache self-name on both sides: after every run
+            // the fresh caches re-bind without a host round-trip
+            p.donate_matching()?;
+            blocks.push(p);
+        }
+        let mut head = session.plan("head_decode")?;
+        head.bind_tensor("g_norm", params.get("final.norm.g")?)?;
+        head.bind_tensor("head", params.get("final.head")?)?;
+        let y_idx = blocks[0].output_index("y")?;
+        Ok(Decoder { embed, blocks, head, y_idx, pos: 0, seq: d.seq })
+    }
+
+    /// Positions consumed so far (prompt + generated).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Cache capacity in positions (the manifest's `seq`).
+    pub fn capacity(&self) -> usize {
+        self.seq
+    }
+
+    /// Positions left before the cache is full.
+    pub fn remaining(&self) -> usize {
+        self.seq - self.pos
+    }
+
+    /// Feed one token: embed → blocks (chained on device) → head.
+    /// Returns the next-token logits `[1, vocab]` on host.
+    pub fn step(&mut self, token: i32) -> Result<Tensor> {
+        if self.pos >= self.seq {
+            bail!("decoder: KV cache full at {} positions — `seq` bounds \
+                   a sequence's total length (prompt + generated)",
+                  self.seq);
+        }
+        self.embed.bind_tokens("token", &[token])?;
+        let mut x = self.embed.run_to_device()?.remove(0);
+        for p in self.blocks.iter_mut() {
+            p.bind("x", &x)?;
+            p.bind_scalar("pos", self.pos as f32)?;
+            x = p.run_to_device()?.swap_remove(self.y_idx);
+        }
+        self.head.bind("x", &x)?;
+        let logits = self.head.run_to_device()?[0].fetch()?;
+        self.pos += 1;
+        Ok(logits)
+    }
+
+    /// Feed a whole prompt; returns the logits after its last token.
+    pub fn prefill(&mut self, prompt: &[i32]) -> Result<Tensor> {
+        if prompt.is_empty() {
+            bail!("decoder: empty prompt (need at least one token)");
+        }
+        if prompt.len() > self.remaining() {
+            bail!("decoder: prompt of {} tokens exceeds the {} cache \
+                   positions left", prompt.len(), self.remaining());
+        }
+        let mut logits = None;
+        for &t in prompt {
+            logits = Some(self.step(t)?);
+        }
+        Ok(logits.expect("non-empty prompt"))
+    }
+}
+
+/// One-shot generation: prefill `prompt`, then sample up to `max_new`
+/// tokens (stopping early when the KV cache fills). The `generate` CLI
+/// subcommand and the serve engine both reduce to this loop.
+pub fn generate(session: &Session, params: &ParamStore, masks: &MaskSet,
+                prompt: &[i32], max_new: usize, sampler: &mut Sampler)
+                -> Result<Vec<i32>> {
+    let mut dec = Decoder::new(session, params, masks)?;
+    let mut logits = dec.prefill(prompt)?;
+    let mut out = Vec::with_capacity(max_new);
+    for i in 0..max_new {
+        let tok = sampler.next_token(&logits.data)?;
+        out.push(tok);
+        if i + 1 == max_new || dec.remaining() == 0 {
+            break;
+        }
+        logits = dec.step(tok)?;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_breaks_ties_to_lowest_index() {
+        let mut s = Sampler::new(Sampling::Greedy, 0);
+        assert_eq!(s.next_token(&[0.5, 2.0, 2.0, -1.0]).unwrap(), 1);
+        assert_eq!(s.next_token(&[3.0]).unwrap(), 0);
+    }
+
+    #[test]
+    fn top_k_stays_inside_the_top_set_and_reproduces() {
+        let logits = vec![0.0, 5.0, 4.0, -2.0, 4.5, 1.0];
+        let mut a = Sampler::new(Sampling::TopK { k: 3, temperature: 0.8 },
+                                 42);
+        let mut b = Sampler::new(Sampling::TopK { k: 3, temperature: 0.8 },
+                                 42);
+        for _ in 0..200 {
+            let ta = a.next_token(&logits).unwrap();
+            assert_eq!(ta, b.next_token(&logits).unwrap(),
+                       "same seed must reproduce");
+            assert!([1, 2, 4].contains(&ta), "token {ta} not in top-3");
+        }
+    }
+
+    #[test]
+    fn top_k_one_is_greedy() {
+        let logits = vec![0.1, 0.9, 0.9, 0.3];
+        let mut s = Sampler::new(Sampling::TopK { k: 1, temperature: 1.0 },
+                                 7);
+        for _ in 0..20 {
+            assert_eq!(s.next_token(&logits).unwrap(), 1);
+        }
+    }
+
+    #[test]
+    fn sampler_rejects_bad_config() {
+        let mut s = Sampler::new(Sampling::TopK { k: 0, temperature: 1.0 },
+                                 0);
+        assert!(s.next_token(&[1.0]).is_err());
+        let mut s = Sampler::new(Sampling::TopK { k: 2, temperature: 0.0 },
+                                 0);
+        assert!(s.next_token(&[1.0, 2.0]).is_err());
+        let mut s = Sampler::new(Sampling::Greedy, 0);
+        assert!(s.next_token(&[]).is_err());
+    }
+}

@@ -1,0 +1,415 @@
+//! Concurrent serving front end: a request queue drained by a worker
+//! pool with continuous batching of decode steps.
+//!
+//! Mirrors the grid scheduler's pool shape (DESIGN.md §Scheduler):
+//! `Session` is not `Send`, so each worker opens its own session over
+//! the artifact directory and keeps every plan and device buffer
+//! worker-local; a panic guard marks the serve failed instead of
+//! cascading lock poisoning; the intra-op kernel thread budget is split
+//! across workers for the duration.
+//!
+//! *Continuous batching*: a worker interleaves up to `max_batch`
+//! sequences, advancing each by one decode step per tick, and admits
+//! queued requests the moment a slot frees — sequences join and leave
+//! the batch between steps, never at batch boundaries. Each sequence's
+//! sampler is seeded from `cfg.seed ^ request id`, so generated tokens
+//! are independent of worker count, batch makeup, and admission order:
+//! a `workers = 4, max_batch = 4` serve emits exactly the tokens a
+//! serial one does.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::{HashSet, VecDeque};
+use std::path::Path;
+use std::sync::{Mutex, PoisonError};
+use std::time::Instant;
+
+use crate::runtime::{BackendKind, Session};
+use crate::tensor::{kernels, Tensor};
+
+use super::decoder::{Decoder, Sampler, Sampling};
+use super::registry::AdapterRegistry;
+
+/// One generation request. `id` must be unique per serve call — it keys
+/// the completion order and the per-sequence RNG stream.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: usize,
+    /// Tenant routed through the [`AdapterRegistry`]
+    /// ([`BASE_TENANT`](super::BASE_TENANT) for the shared base).
+    pub tenant: String,
+    pub prompt: Vec<i32>,
+    /// Generation budget in new tokens.
+    pub max_new: usize,
+    /// Optional deadline in milliseconds from serve start; checked
+    /// between decode steps, so a sequence past it finishes early with
+    /// whatever it has.
+    pub deadline_ms: Option<f64>,
+}
+
+/// Why a sequence stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Finish {
+    /// Generated its full `max_new` budget.
+    Length,
+    /// Ran out of KV-cache positions (`seq` bounds prompt + generated).
+    CacheFull,
+    /// Hit its deadline between steps.
+    Deadline,
+}
+
+impl Finish {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Finish::Length => "length",
+            Finish::CacheFull => "cache_full",
+            Finish::Deadline => "deadline",
+        }
+    }
+}
+
+/// One finished request.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: usize,
+    pub tenant: String,
+    /// Generated tokens (prompt not included).
+    pub tokens: Vec<i32>,
+    pub finish: Finish,
+    /// Milliseconds from serve start to completion (queueing included).
+    pub latency_ms: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Worker sessions (≥ 1; capped at the request count).
+    pub workers: usize,
+    /// Sequences a worker interleaves per tick (≥ 1).
+    pub max_batch: usize,
+    pub sampling: Sampling,
+    /// Serve-level seed; sequence `i` samples from stream
+    /// `seed ^ request id`.
+    pub seed: u64,
+    /// Intra-op kernel thread budget split across workers
+    /// (0 = the process default).
+    pub threads: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            workers: 1,
+            max_batch: 1,
+            sampling: Sampling::Greedy,
+            seed: 0,
+            threads: 0,
+        }
+    }
+}
+
+/// Aggregate results of one serve call.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// All completions, sorted by request id.
+    pub completions: Vec<Completion>,
+    pub total_new_tokens: usize,
+    pub secs: f64,
+    pub tokens_per_sec: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Peak in-flight sequences across all workers — ≥ 2 demonstrates
+    /// continuous batching actually overlapped decodes.
+    pub max_concurrent: usize,
+}
+
+struct State {
+    queue: VecDeque<Request>,
+    completions: Vec<Completion>,
+    /// In-flight sequences across all workers.
+    active_total: usize,
+    max_concurrent: usize,
+    /// First failure; set once, drains every worker at its next admit.
+    failed: Option<anyhow::Error>,
+}
+
+struct Shared {
+    m: Mutex<State>,
+}
+
+impl Shared {
+    /// Poison-tolerant lock — a panicked worker must not cascade poison
+    /// panics through its peers (the panic guard marks the serve failed
+    /// and everyone drains).
+    fn lock(&self) -> std::sync::MutexGuard<'_, State> {
+        self.m.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+/// Marks the serve failed when a worker unwinds instead of returning,
+/// so `std::thread::scope` joins peers that then drain at their next
+/// admit rather than decoding a queue nobody will report on.
+struct PanicGuard<'a> {
+    shared: &'a Shared,
+    wid: usize,
+    armed: bool,
+}
+
+impl Drop for PanicGuard<'_> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let mut st = self.shared.lock();
+        if st.failed.is_none() {
+            st.failed = Some(anyhow!("serve worker {} panicked", self.wid));
+        }
+    }
+}
+
+/// Read-only worker context, shared across threads.
+struct Ctx<'a> {
+    artifact_dir: &'a Path,
+    backend: BackendKind,
+    registry: &'a AdapterRegistry,
+    cfg: &'a ServeConfig,
+    shared: &'a Shared,
+    t0: Instant,
+}
+
+/// One in-flight sequence on a worker.
+struct Active<'s> {
+    req: Request,
+    dec: Decoder<'s>,
+    sampler: Sampler,
+    /// Next-token logits from the last prefill/step.
+    logits: Tensor,
+    tokens: Vec<i32>,
+}
+
+/// Serve `requests` over the registry's tenants with `cfg.workers`
+/// sessions opened on `backend` over `artifact_dir`. Returns when the
+/// queue and every in-flight sequence have drained; all sessions, plans
+/// and caches are torn down before the report is produced (clean
+/// shutdown), and exactly one completion per request is guaranteed.
+pub fn serve(artifact_dir: &Path, backend: BackendKind,
+             registry: &AdapterRegistry, requests: Vec<Request>,
+             cfg: &ServeConfig) -> Result<ServeReport> {
+    if cfg.max_batch == 0 {
+        bail!("serve: max_batch must be ≥ 1");
+    }
+    let mut ids = HashSet::new();
+    for r in &requests {
+        if !ids.insert(r.id) {
+            bail!("serve: duplicate request id {} — ids key completions \
+                   and RNG streams, make them unique", r.id);
+        }
+    }
+    // resolve every tenant up front: unknown tenants fail before any
+    // thread spawns, and per-tenant adapter merges happen exactly once
+    // here instead of racing across workers
+    let tenants: HashSet<&str> =
+        requests.iter().map(|r| r.tenant.as_str()).collect();
+    for t in tenants {
+        registry.resolve(t)?;
+    }
+
+    let n_requests = requests.len();
+    let shared = Shared {
+        m: Mutex::new(State {
+            queue: requests.into(),
+            completions: Vec::with_capacity(n_requests),
+            active_total: 0,
+            max_concurrent: 0,
+            failed: None,
+        }),
+    };
+
+    let t0 = Instant::now();
+    if n_requests > 0 {
+        let n_workers = cfg.workers.max(1).min(n_requests);
+        // split the intra-op kernel budget across workers (the
+        // scheduler's rule): throughput comes from sequence-level
+        // concurrency, not from multiplying kernel threads
+        let budget = if cfg.threads > 0 {
+            cfg.threads
+        } else {
+            kernels::threads()
+        };
+        let _threads_guard =
+            kernels::ThreadsGuard::set((budget / n_workers).max(1));
+        let ctx = Ctx {
+            artifact_dir,
+            backend,
+            registry,
+            cfg,
+            shared: &shared,
+            t0,
+        };
+        std::thread::scope(|scope| {
+            let ctx_ref = &ctx;
+            for wid in 1..n_workers {
+                scope.spawn(move || worker(ctx_ref, wid));
+            }
+            worker(ctx_ref, 0);
+        });
+    }
+    let secs = t0.elapsed().as_secs_f64();
+
+    let state = shared
+        .m
+        .into_inner()
+        .unwrap_or_else(PoisonError::into_inner);
+    if let Some(e) = state.failed {
+        return Err(e);
+    }
+    let mut completions = state.completions;
+    completions.sort_by_key(|c| c.id);
+    if completions.len() != n_requests {
+        bail!("serve finished with {}/{} completions (engine bug)",
+              completions.len(), n_requests);
+    }
+    let total_new_tokens: usize =
+        completions.iter().map(|c| c.tokens.len()).sum();
+    let mut latencies: Vec<f64> =
+        completions.iter().map(|c| c.latency_ms).collect();
+    latencies.sort_by(|a, b| a.total_cmp(b));
+    Ok(ServeReport {
+        total_new_tokens,
+        secs,
+        tokens_per_sec: if secs > 0.0 {
+            total_new_tokens as f64 / secs
+        } else {
+            0.0
+        },
+        p50_ms: percentile(&latencies, 0.50),
+        p99_ms: percentile(&latencies, 0.99),
+        max_concurrent: state.max_concurrent,
+        completions,
+    })
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample (0 if empty).
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (p * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+fn worker(ctx: &Ctx<'_>, wid: usize) {
+    let mut guard = PanicGuard { shared: ctx.shared, wid, armed: true };
+    let result = Session::open_dir_kind(ctx.artifact_dir, ctx.backend)
+        .and_then(|session| worker_loop(ctx, &session));
+    guard.armed = false;
+    if let Err(e) = result {
+        let mut st = ctx.shared.lock();
+        if st.failed.is_none() {
+            st.failed = Some(e.context(format!("serve worker {wid}")));
+        } else {
+            eprintln!("[serve w{wid}] additional failure (first one \
+                       wins): {e:#}");
+        }
+    }
+}
+
+fn worker_loop(ctx: &Ctx<'_>, session: &Session) -> Result<()> {
+    let mut active: Vec<Active<'_>> = Vec::new();
+    loop {
+        // admit queued requests into free batch slots — between ticks,
+        // so a fresh sequence prefills while its batchmates are mid-
+        // generation (this is the "continuous" in continuous batching)
+        while active.len() < ctx.cfg.max_batch {
+            let req = {
+                let mut st = ctx.shared.lock();
+                if st.failed.is_some() {
+                    return Ok(());
+                }
+                match st.queue.pop_front() {
+                    Some(r) => {
+                        st.active_total += 1;
+                        st.max_concurrent =
+                            st.max_concurrent.max(st.active_total);
+                        r
+                    }
+                    None => break,
+                }
+            };
+            let (params, masks) = ctx.registry.resolve(&req.tenant)?;
+            let mut dec = Decoder::new(session, &params, &masks)?;
+            let logits = dec.prefill(&req.prompt)?;
+            let sampler = Sampler::new(ctx.cfg.sampling,
+                                       ctx.cfg.seed ^ req.id as u64);
+            active.push(Active {
+                req,
+                dec,
+                sampler,
+                logits,
+                tokens: Vec::new(),
+            });
+        }
+        if active.is_empty() {
+            return Ok(());
+        }
+        // one tick: advance every in-flight sequence by one token,
+        // retiring finished ones in place so their slots free this tick
+        let mut i = 0;
+        while i < active.len() {
+            let now_ms = ctx.t0.elapsed().as_secs_f64() * 1e3;
+            let a = &mut active[i];
+            let finish = if a.req.deadline_ms.is_some_and(|d| now_ms > d)
+            {
+                Some(Finish::Deadline)
+            } else {
+                let tok = a.sampler.next_token(&a.logits.data)?;
+                a.tokens.push(tok);
+                if a.tokens.len() == a.req.max_new {
+                    Some(Finish::Length)
+                } else if a.dec.remaining() == 0 {
+                    Some(Finish::CacheFull)
+                } else {
+                    a.logits = a.dec.step(tok)?;
+                    None
+                }
+            };
+            match finish {
+                Some(f) => {
+                    let done = active.swap_remove(i);
+                    let latency_ms =
+                        ctx.t0.elapsed().as_secs_f64() * 1e3;
+                    let mut st = ctx.shared.lock();
+                    st.active_total -= 1;
+                    st.completions.push(Completion {
+                        id: done.req.id,
+                        tenant: done.req.tenant,
+                        tokens: done.tokens,
+                        finish: f,
+                        latency_ms,
+                    });
+                }
+                None => i += 1,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let s = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&s, 0.50), 2.0);
+        assert_eq!(percentile(&s, 0.99), 4.0);
+        assert_eq!(percentile(&s, 0.25), 1.0);
+        assert_eq!(percentile(&[5.0], 0.50), 5.0);
+        assert_eq!(percentile(&[], 0.50), 0.0);
+    }
+
+    #[test]
+    fn finish_labels() {
+        assert_eq!(Finish::Length.label(), "length");
+        assert_eq!(Finish::CacheFull.label(), "cache_full");
+        assert_eq!(Finish::Deadline.label(), "deadline");
+    }
+}

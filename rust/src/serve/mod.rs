@@ -1,0 +1,40 @@
+//! Serving layer: autoregressive decoding with a KV cache, continuous
+//! batching, and multi-adapter multi-tenancy.
+//!
+//! The deployment story of EBFT (and of S²FT / scaled sparse
+//! fine-tuning) is many cheaply-repaired per-task adapters served over
+//! one shared pruned base. This module is that story end to end:
+//!
+//! - [`Decoder`] ([`decoder`]) — per-sequence incremental decoding over
+//!   the `embed_decode`/`block_decode`/`head_decode` artifacts. Each
+//!   block plan binds params and masks once and circulates its
+//!   `[seq, d_model]` K/V caches device-resident via output→input
+//!   donation, so a decode step uploads one token id and one scalar
+//!   position. On the reference backend the step is bit-identical to
+//!   the matching row of a full forward (see `kernel_determinism.rs`).
+//! - [`Sampler`] — greedy or top-k/temperature selection with a seeded
+//!   per-sequence [`Pcg64`](crate::util::Pcg64) stream, so generation is
+//!   reproducible independent of worker scheduling.
+//! - [`AdapterRegistry`] ([`registry`]) — routes a tenant name to its
+//!   servable weights: the shared sparse base, or the tenant's LoRA
+//!   adapters folded in via `mask_mul_add_scaled` (W⊙M + s·A·B), merged
+//!   once per tenant and cached.
+//! - [`serve`] ([`engine`]) — a request queue drained by a pool of
+//!   workers (one `!Send` session each, the grid scheduler's pattern)
+//!   with *continuous batching*: each worker interleaves up to
+//!   `max_batch` sequences one decode step at a time, admitting queued
+//!   requests the moment a sequence finishes — sequences join and leave
+//!   the batch between steps, never at batch boundaries. Per-request
+//!   deadlines are checked between steps.
+//!
+//! Driven by the `generate` and `serve-bench` CLI subcommands; invariants
+//! are documented in DESIGN.md §Serving.
+
+pub mod decoder;
+pub mod engine;
+pub mod registry;
+
+pub use decoder::{generate, Decoder, Sampler, Sampling};
+pub use engine::{serve, Completion, Finish, Request, ServeConfig,
+                 ServeReport};
+pub use registry::{AdapterRegistry, BASE_TENANT};

@@ -1,0 +1,121 @@
+//! Multi-adapter multi-tenancy: one resident pruned base, many LoRA
+//! adapter sets, routed by tenant name.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex, PoisonError};
+
+use crate::ebft::lora;
+use crate::masks::MaskSet;
+use crate::model::{Manifest, ParamStore};
+use crate::tensor::Tensor;
+
+/// Reserved tenant name that serves the shared pruned base unmodified.
+pub const BASE_TENANT: &str = "base";
+
+/// Routes tenant names to servable weights. All tenants share one
+/// pruned base ([`ParamStore`]) and its sparsity masks; each registered
+/// tenant adds a LoRA adapter set folded in on first use via
+/// `mask_mul_add_scaled` (W⊙M + s·A·B) and cached behind an `Arc` —
+/// the merge runs once per tenant, not once per request. Merged stores
+/// evaluate with dense masks (the merge destroys sparsity); the base
+/// tenant keeps the sparse masks.
+pub struct AdapterRegistry {
+    manifest: Manifest,
+    base: Arc<ParamStore>,
+    masks: Arc<MaskSet>,
+    dense_masks: Arc<MaskSet>,
+    adapters: HashMap<String, Vec<Tensor>>,
+    merged: Mutex<HashMap<String, Arc<ParamStore>>>,
+}
+
+impl AdapterRegistry {
+    pub fn new(manifest: Manifest, base: ParamStore, masks: MaskSet)
+               -> AdapterRegistry {
+        let dense_masks = MaskSet::dense(&manifest);
+        AdapterRegistry {
+            manifest,
+            base: Arc::new(base),
+            masks: Arc::new(masks),
+            dense_masks: Arc::new(dense_masks),
+            adapters: HashMap::new(),
+            merged: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Register a tenant's in-memory adapter set (A/B pairs in
+    /// `Manifest::lora_shapes` order).
+    pub fn register(&mut self, tenant: &str, adapters: Vec<Tensor>)
+                    -> Result<()> {
+        if tenant == BASE_TENANT {
+            bail!("tenant name '{BASE_TENANT}' is reserved for the \
+                   shared pruned base — pick another name");
+        }
+        let shapes = self.manifest.lora_shapes();
+        if adapters.len() != shapes.len() {
+            bail!("tenant '{tenant}': {} adapter tensors, manifest {} \
+                   expects {} (2 per prunable linear)", adapters.len(),
+                  self.manifest.dims.name, shapes.len());
+        }
+        for (i, (t, want)) in adapters.iter().zip(&shapes).enumerate() {
+            if &t.shape != want {
+                bail!("tenant '{tenant}': adapter {i} has shape {:?}, \
+                       manifest {} expects {:?}", t.shape,
+                      self.manifest.dims.name, want);
+            }
+        }
+        self.adapters.insert(tenant.to_string(), adapters);
+        self.lock_merged().remove(tenant);
+        Ok(())
+    }
+
+    /// Register a tenant from a `.ebft` adapter export (the per-tenant
+    /// deployment unit written by `lora::save_adapters`).
+    pub fn register_file(&mut self, tenant: &str, path: &Path)
+                         -> Result<()> {
+        let adapters = lora::load_adapters(&self.manifest, path)?;
+        self.register(tenant, adapters)
+    }
+
+    /// Registered tenant names (not including [`BASE_TENANT`]), sorted.
+    pub fn tenants(&self) -> Vec<String> {
+        let mut names: Vec<String> =
+            self.adapters.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Resolve a tenant to its servable (params, masks). The base
+    /// tenant gets the sparse base; adapter tenants get their merged
+    /// store (computed on first call, then cached) with dense masks.
+    pub fn resolve(&self, tenant: &str)
+                   -> Result<(Arc<ParamStore>, Arc<MaskSet>)> {
+        if tenant == BASE_TENANT {
+            return Ok((self.base.clone(), self.masks.clone()));
+        }
+        let Some(adapters) = self.adapters.get(tenant) else {
+            let known = self.tenants().join(", ");
+            bail!("unknown tenant '{tenant}' — registered tenants: \
+                   [{known}] (or '{BASE_TENANT}' for the shared base)");
+        };
+        if let Some(m) = self.lock_merged().get(tenant) {
+            return Ok((m.clone(), self.dense_masks.clone()));
+        }
+        let merged = Arc::new(lora::merge_manifest(
+            &self.manifest, &self.base, &self.masks, adapters)?);
+        self.lock_merged().insert(tenant.to_string(), merged.clone());
+        Ok((merged, self.dense_masks.clone()))
+    }
+
+    fn lock_merged(&self)
+                   -> std::sync::MutexGuard<'_,
+                                            HashMap<String,
+                                                    Arc<ParamStore>>> {
+        self.merged.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}

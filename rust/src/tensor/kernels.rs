@@ -90,6 +90,26 @@ pub fn set_threads(n: usize) -> usize {
     prev
 }
 
+/// Scoped override of the intra-op thread target, restored on drop —
+/// including the unwind path, so a failed sweep or serve run never
+/// leaves the process narrowed. Worker pools (the grid scheduler, the
+/// serve engine) divide their budget across workers with this.
+pub struct ThreadsGuard {
+    prev: usize,
+}
+
+impl ThreadsGuard {
+    pub fn set(n: usize) -> ThreadsGuard {
+        ThreadsGuard { prev: set_threads(n) }
+    }
+}
+
+impl Drop for ThreadsGuard {
+    fn drop(&mut self) {
+        set_threads(self.prev);
+    }
+}
+
 // ---------------------------------------------------------------------
 // the worker pool
 // ---------------------------------------------------------------------

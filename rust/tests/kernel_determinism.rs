@@ -6,9 +6,11 @@
 //! `backend_diff` pins, run-store resume byte-identity, or any recorded
 //! number. Runs artifact-free on a synthetic tiny manifest.
 
+use ebft::masks::MaskSet;
 use ebft::model::synth::{write_synthetic, SynthConfig};
 use ebft::model::ParamStore;
 use ebft::runtime::{BackendKind, DeviceBuffer, Session};
+use ebft::serve::{Decoder, Sampler, Sampling};
 use ebft::tensor::{kernels, Tensor};
 use ebft::util::Pcg64;
 
@@ -136,6 +138,123 @@ fn lm_train_step_bit_identical_across_thread_counts() {
                        "lm_train_step output {oi} differs at \
                         EBFT_THREADS={t}");
         }
+    }
+    kernels::set_threads(prev);
+}
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.data.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Greedy-decode through the serving [`Decoder`] until the KV cache is
+/// full, returning the chosen tokens (prompt + generated) and the logits
+/// bit patterns at every position.
+fn greedy_decode(session: &Session, params: &ParamStore, masks: &MaskSet,
+                 prompt: &[i32]) -> (Vec<i32>, Vec<Vec<u32>>) {
+    let mut dec = Decoder::new(session, params, masks).unwrap();
+    let mut sampler = Sampler::new(Sampling::Greedy, 0);
+    let mut tokens = prompt.to_vec();
+    let mut logits_bits = Vec::new();
+    let mut logits = Tensor::zeros(&[0]);
+    for &t in prompt {
+        logits = dec.step(t).unwrap();
+        logits_bits.push(bits(&logits));
+    }
+    while dec.remaining() > 0 {
+        let next = sampler.next_token(&logits.data).unwrap();
+        tokens.push(next);
+        logits = dec.step(next).unwrap();
+        logits_bits.push(bits(&logits));
+    }
+    assert_eq!(tokens.len(), session.manifest.dims.seq);
+    assert_eq!(logits_bits.len(), session.manifest.dims.seq);
+    (tokens, logits_bits)
+}
+
+/// Full (batched, non-incremental) forward over `tokens` through the
+/// `embed_fwd` → `block_fwd`× → `head_decode` artifacts, returning the
+/// per-position next-token logits bit patterns of batch row 0.
+fn full_forward_logits(session: &Session, params: &ParamStore,
+                       masks: &MaskSet, tokens: &[i32]) -> Vec<Vec<u32>> {
+    let manifest = &session.manifest;
+    let d = manifest.dims.clone();
+    assert_eq!(tokens.len(), d.seq);
+    // every batch row carries the same sequence; causal attention makes
+    // rows independent, so row 0 is what the decoder must reproduce
+    let mut padded = Vec::with_capacity(d.batch * d.seq);
+    for _ in 0..d.batch {
+        padded.extend_from_slice(tokens);
+    }
+    let mut embed = session.plan("embed_fwd").unwrap();
+    embed.bind_tensor("embed", params.get("embed").unwrap()).unwrap();
+    embed.bind_tokens("tokens", &padded).unwrap();
+    let mut x = embed.run_to_device().unwrap().remove(0);
+    for l in 0..d.n_layers {
+        let mut p = session.plan("block_fwd").unwrap();
+        p.bind_indexed("bp", params.block_params(manifest, l)).unwrap();
+        p.bind_indexed("mask", masks.block(l).iter()).unwrap();
+        p.bind("x", &x).unwrap();
+        x = p.run_to_device().unwrap().remove(0);
+    }
+    let y = x.fetch().unwrap();
+    let mut head = session.plan("head_decode").unwrap();
+    head.bind_tensor("g_norm", params.get("final.norm.g").unwrap())
+        .unwrap();
+    head.bind_tensor("head", params.get("final.head").unwrap()).unwrap();
+    (0..d.seq)
+        .map(|t| {
+            let row = Tensor::from_vec(
+                &[1, d.d_model],
+                y.data[t * d.d_model..(t + 1) * d.d_model].to_vec());
+            head.bind_tensor("x", &row).unwrap();
+            let logits = head.run_to_device().unwrap()[0].fetch().unwrap();
+            bits(&logits)
+        })
+        .collect()
+}
+
+/// The serving contract (DESIGN.md §Serving): a greedy KV-cache decode
+/// emits, at every position, logits bit-identical to a full batched
+/// forward over the same prefix — and both are bit-identical across
+/// kernel thread counts, so serving numerics are schedule-invariant.
+#[test]
+fn greedy_decode_bit_identical_to_full_forward_across_threads() {
+    let session = open_session("decode");
+    let manifest = &session.manifest;
+    let d = manifest.dims.clone();
+    let params = ParamStore::from_init_bin(manifest).unwrap();
+    let mut rng = Pcg64::seeded(0x5e12);
+    // a pruned (random ~50%-sparse) base, like the serving deployment
+    let mut masks = MaskSet::dense(manifest);
+    for l in 0..d.n_layers {
+        for (j, s) in manifest.block_linear_shapes(l).iter().enumerate() {
+            masks.masks[l][j] = random_mask(s, &mut rng);
+        }
+    }
+    let prompt: Vec<i32> = (0..4)
+        .map(|_| rng.below(d.vocab as u64) as i32)
+        .collect();
+
+    let prev = kernels::set_threads(1);
+    let (tokens1, dec1) = greedy_decode(&session, &params, &masks,
+                                        &prompt);
+    let full1 = full_forward_logits(&session, &params, &masks, &tokens1);
+    for (t, (a, b)) in dec1.iter().zip(&full1).enumerate() {
+        assert_eq!(a, b,
+                   "decode logits at position {t} differ from the full \
+                    forward over the same prefix");
+    }
+    for th in [2usize, 8] {
+        kernels::set_threads(th);
+        let (tokens, dec) = greedy_decode(&session, &params, &masks,
+                                          &prompt);
+        assert_eq!(tokens, tokens1,
+                   "greedy token stream changed at EBFT_THREADS={th}");
+        assert_eq!(dec, dec1,
+                   "decode logits changed at EBFT_THREADS={th}");
+        assert_eq!(full_forward_logits(&session, &params, &masks, &tokens),
+                   full1,
+                   "full-forward logits changed at EBFT_THREADS={th}");
     }
     kernels::set_threads(prev);
 }

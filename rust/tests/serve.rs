@@ -1,0 +1,298 @@
+//! Serving-layer integration tests on the synthetic tiny manifest +
+//! reference backend: `.ebft` adapter export/import round-trip through
+//! the [`AdapterRegistry`], and the continuous-batching engine's
+//! contracts — scheduling-invariant token streams, overlapped
+//! sequences, deadlines, and clean completion accounting.
+
+use ebft::ebft::lora;
+use ebft::masks::MaskSet;
+use ebft::model::synth::{write_synthetic, SynthConfig};
+use ebft::model::{Manifest, ParamStore};
+use ebft::runtime::{BackendKind, Session};
+use ebft::serve::{serve, AdapterRegistry, Finish, Request, Sampling,
+                  ServeConfig, BASE_TENANT};
+use ebft::tensor::Tensor;
+use ebft::util::Pcg64;
+
+fn artifact_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("ebft-serve-{tag}-{}",
+                                      std::process::id()))
+}
+
+fn open_session(tag: &str) -> (Session, std::path::PathBuf) {
+    let dir = artifact_dir(tag);
+    let manifest = write_synthetic(&dir, &SynthConfig::tiny()).unwrap();
+    (Session::open_kind(manifest, BackendKind::Reference).unwrap(), dir)
+}
+
+/// Random binary mask with ~50% zeros.
+fn random_mask(shape: &[usize], rng: &mut Pcg64) -> Tensor {
+    let n: usize = shape.iter().product();
+    let data = (0..n)
+        .map(|_| if rng.below(2) == 0 { 0.0 } else { 1.0 })
+        .collect();
+    Tensor::from_vec(shape, data)
+}
+
+fn random_masks(manifest: &Manifest, seed: u64) -> MaskSet {
+    let mut rng = Pcg64::seeded(seed);
+    let mut masks = MaskSet::dense(manifest);
+    for l in 0..manifest.dims.n_layers {
+        for (j, s) in manifest.block_linear_shapes(l).iter().enumerate() {
+            masks.masks[l][j] = random_mask(s, &mut rng);
+        }
+    }
+    masks
+}
+
+/// Random A *and* B (unlike training init, where B = 0) so the merged
+/// model actually differs from the base.
+fn random_adapters(manifest: &Manifest, seed: u64) -> Vec<Tensor> {
+    let mut rng = Pcg64::seeded(seed);
+    manifest
+        .lora_shapes()
+        .iter()
+        .map(|s| Tensor::randn(s, 0.05, &mut rng))
+        .collect()
+}
+
+#[test]
+fn adapter_export_import_round_trip_through_registry() {
+    let (session, dir) = open_session("roundtrip");
+    let manifest = session.manifest.clone();
+    let params = ParamStore::from_init_bin(&manifest).unwrap();
+    let masks = random_masks(&manifest, 0xada);
+    let adapters = random_adapters(&manifest, 0xbeef);
+
+    let path = dir.join("tenant0.ebft");
+    lora::save_adapters(&manifest, &adapters, &path).unwrap();
+
+    let mut registry = AdapterRegistry::new(manifest.clone(),
+                                            params.clone(), masks.clone());
+    registry.register_file("tenant0", &path).unwrap();
+    let (merged, served_masks) = registry.resolve("tenant0").unwrap();
+
+    // the registry's merge must equal the in-memory mask_mul_add_scaled
+    // merge exactly — same code path, bit-identical tensors
+    let expected =
+        lora::merge_manifest(&manifest, &params, &masks, &adapters)
+            .unwrap();
+    assert_eq!(merged.tensors, expected.tensors,
+               "file round-trip changed the merged weights");
+    // a merged store is dense (the merge destroys sparsity)
+    assert!(served_masks.masks[0][0].data.iter().all(|&m| m == 1.0),
+            "merged tenants must serve with dense masks");
+    // ...and differs from the sparse base, since B was nonzero
+    assert_ne!(merged.tensors, params.tensors);
+
+    // merge-once caching: resolving again returns the same store
+    let (again, _) = registry.resolve("tenant0").unwrap();
+    assert!(std::sync::Arc::ptr_eq(&merged, &again));
+
+    // the base tenant serves the sparse base unmodified
+    let (base, base_masks) = registry.resolve(BASE_TENANT).unwrap();
+    assert_eq!(base.tensors, params.tensors);
+    assert_eq!(base_masks.masks, masks.masks);
+}
+
+#[test]
+fn registry_and_adapter_io_validate_loudly() {
+    let (session, dir) = open_session("validate");
+    let manifest = session.manifest.clone();
+    let params = ParamStore::from_init_bin(&manifest).unwrap();
+    let masks = random_masks(&manifest, 1);
+    let adapters = random_adapters(&manifest, 2);
+
+    // wrong tensor count fails at export time
+    let err = lora::save_adapters(&manifest, &adapters[1..], &dir.join("x"))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("adapter export"), "{err}");
+
+    // a non-adapter checkpoint fails at import with the path named
+    let bogus = dir.join("bogus.ebft");
+    ebft::model::checkpoint::save(
+        &bogus, &[("not_an_adapter".to_string(), &adapters[0])]).unwrap();
+    let err = lora::load_adapters(&manifest, &bogus)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("bogus.ebft"), "{err}");
+
+    let mut registry = AdapterRegistry::new(manifest.clone(), params,
+                                            masks);
+    // the base tenant name is reserved
+    let err = registry
+        .register(BASE_TENANT, adapters.clone())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("reserved"), "{err}");
+    // shape mismatches name the tenant
+    let mut bad = adapters.clone();
+    bad[0] = Tensor::zeros(&[1, 1]);
+    let err = registry.register("t", bad).unwrap_err().to_string();
+    assert!(err.contains("'t'") && err.contains("shape"), "{err}");
+    // unknown tenants list what is registered
+    registry.register("alpha", adapters).unwrap();
+    let err = registry.resolve("nope").unwrap_err().to_string();
+    assert!(err.contains("nope") && err.contains("alpha"), "{err}");
+    assert_eq!(registry.tenants(), vec!["alpha".to_string()]);
+}
+
+/// Multi-tenant requests for the engine tests: round-robin over two
+/// adapter tenants plus the shared base.
+fn mixed_requests(n: usize, prompt_len: usize, max_new: usize,
+                  deadline_ms: Option<f64>) -> Vec<Request> {
+    (0..n)
+        .map(|i| Request {
+            id: i,
+            tenant: match i % 3 {
+                0 => BASE_TENANT.to_string(),
+                1 => "alpha".to_string(),
+                _ => "beta".to_string(),
+            },
+            prompt: (0..prompt_len)
+                .map(|p| ((i * 7 + p * 3) % 32) as i32)
+                .collect(),
+            max_new,
+            deadline_ms,
+        })
+        .collect()
+}
+
+fn engine_registry(session: &Session) -> AdapterRegistry {
+    let manifest = session.manifest.clone();
+    let params = ParamStore::from_init_bin(&manifest).unwrap();
+    let masks = random_masks(&manifest, 0x5e);
+    let mut registry = AdapterRegistry::new(manifest.clone(), params,
+                                            masks);
+    registry
+        .register("alpha", random_adapters(&manifest, 10))
+        .unwrap();
+    registry
+        .register("beta", random_adapters(&manifest, 11))
+        .unwrap();
+    registry
+}
+
+#[test]
+fn continuous_batching_overlaps_and_matches_serial_exactly() {
+    let (session, dir) = open_session("engine");
+    let registry = engine_registry(&session);
+    let requests = mixed_requests(6, 3, 6, None);
+
+    let serial = serve(&dir, BackendKind::Reference, &registry,
+                       requests.clone(),
+                       &ServeConfig { workers: 1, max_batch: 1,
+                                      ..ServeConfig::default() })
+        .unwrap();
+    let batched = serve(&dir, BackendKind::Reference, &registry, requests,
+                        &ServeConfig { workers: 2, max_batch: 2,
+                                       ..ServeConfig::default() })
+        .unwrap();
+
+    assert_eq!(serial.completions.len(), 6);
+    assert_eq!(batched.completions.len(), 6);
+    assert_eq!(serial.max_concurrent, 1);
+    assert!(batched.max_concurrent >= 2,
+            "2 workers × batch 2 over 6 requests must overlap, peak was \
+             {}", batched.max_concurrent);
+    assert!(batched.tokens_per_sec > 0.0);
+    for (s, b) in serial.completions.iter().zip(&batched.completions) {
+        assert_eq!(s.id, b.id);
+        assert_eq!(s.tokens, b.tokens,
+                   "request {}: batching changed the sampled tokens",
+                   s.id);
+        assert_eq!(s.finish, Finish::Length);
+        assert_eq!(s.tokens.len(), 6);
+    }
+    assert_eq!(serial.total_new_tokens, 36);
+    assert!(serial.p50_ms <= serial.p99_ms);
+}
+
+#[test]
+fn top_k_sampling_is_scheduling_invariant_too() {
+    let (session, dir) = open_session("topk");
+    let registry = engine_registry(&session);
+    let cfg = |workers, max_batch| ServeConfig {
+        workers,
+        max_batch,
+        sampling: Sampling::TopK { k: 4, temperature: 0.9 },
+        seed: 0xfeed,
+        threads: 0,
+    };
+    let serial = serve(&dir, BackendKind::Reference, &registry,
+                       mixed_requests(5, 2, 5, None), &cfg(1, 1))
+        .unwrap();
+    let batched = serve(&dir, BackendKind::Reference, &registry,
+                        mixed_requests(5, 2, 5, None), &cfg(3, 2))
+        .unwrap();
+    for (s, b) in serial.completions.iter().zip(&batched.completions) {
+        assert_eq!(s.tokens, b.tokens,
+                   "request {}: per-request RNG streams must make \
+                    sampling scheduling-invariant", s.id);
+    }
+}
+
+#[test]
+fn deadlines_cut_sequences_short() {
+    let (session, dir) = open_session("deadline");
+    let registry = engine_registry(&session);
+    // a deadline already in the past: every sequence is cut at its
+    // first tick, before sampling anything
+    let report = serve(&dir, BackendKind::Reference, &registry,
+                       mixed_requests(3, 2, 8, Some(0.0)),
+                       &ServeConfig::default())
+        .unwrap();
+    for c in &report.completions {
+        assert_eq!(c.finish, Finish::Deadline);
+        assert!(c.tokens.is_empty());
+    }
+    assert_eq!(report.total_new_tokens, 0);
+}
+
+#[test]
+fn cache_capacity_bounds_generation() {
+    let (session, dir) = open_session("cachefull");
+    let seq = session.manifest.dims.seq;
+    let registry = engine_registry(&session);
+    let prompt_len = 3;
+    // a budget beyond the KV cache: generation stops at capacity
+    let report = serve(&dir, BackendKind::Reference, &registry,
+                       mixed_requests(2, prompt_len, seq * 2, None),
+                       &ServeConfig::default())
+        .unwrap();
+    for c in &report.completions {
+        assert_eq!(c.finish, Finish::CacheFull);
+        assert_eq!(c.tokens.len(), seq - prompt_len + 1,
+                   "one token per cache position, plus the final sample \
+                    from the last position's logits");
+    }
+}
+
+#[test]
+fn serve_validates_requests_up_front() {
+    let (session, dir) = open_session("validate-req");
+    let registry = engine_registry(&session);
+    let mut dup = mixed_requests(2, 2, 2, None);
+    dup[1].id = dup[0].id;
+    let err = serve(&dir, BackendKind::Reference, &registry, dup,
+                    &ServeConfig::default())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("duplicate request id"), "{err}");
+
+    let mut unknown = mixed_requests(1, 2, 2, None);
+    unknown[0].tenant = "ghost".to_string();
+    let err = serve(&dir, BackendKind::Reference, &registry, unknown,
+                    &ServeConfig::default())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("ghost"), "{err}");
+
+    // empty request set is a clean no-op
+    let report = serve(&dir, BackendKind::Reference, &registry,
+                       Vec::new(), &ServeConfig::default())
+        .unwrap();
+    assert!(report.completions.is_empty());
+    assert_eq!(report.total_new_tokens, 0);
+}

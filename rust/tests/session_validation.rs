@@ -80,6 +80,9 @@ fn check_plan_error_paths(session: &Session) {
     let msg = format!("{err:#}");
     assert!(msg.contains("not bound") && msg.contains("embed"),
             "missing-slot error should name the slot: {msg}");
+    assert!(msg.contains("embed_fwd") && msg.contains("bind_tensor"),
+            "missing-slot error should name the artifact and say how to \
+             bind: {msg}");
 
     // valid call still works after all the failures (no poisoned state)
     plan.bind_tensor("embed", &embed).unwrap();
