@@ -1,0 +1,157 @@
+//! Sparse-vs-dense A/B gate — the bench-regression job's hard check on
+//! the sparse execution subsystem's acceptance criteria.
+//!
+//!   cargo run --release --example sparse_ab
+//!
+//! Three gates, each a plain assert so the process exits nonzero (and
+//! the CI step fails) on any violation:
+//!
+//! 1. **End-to-end bit-equality.** One wanda@70% + EBFT smoke cell on
+//!    the synthetic tiny manifest (reference backend), run twice — once
+//!    with sparse dispatch off, once forced — must produce bit-identical
+//!    perplexities. This drives the compressed formats through pruning
+//!    stats, the EBFT recovery loop and eval, not just one matmul.
+//! 2. **Kernel speedup.** A 70%-sparse masked linear must run faster
+//!    through the compressed formats than through the dense masked path
+//!    (mask_mul + dense matmul), median wall-clock over several reps,
+//!    with bit-equal output. The cell above is too small for its wall
+//!    clock to gate reliably, so the measurable-speedup criterion is
+//!    pinned here, at the layer shape where the work actually happens.
+//! 3. **Checkpoint compression.** The masked pruned params saved in the
+//!    compact v2 `.ebft` encoding must be ≤ 50% of the dense v1 size
+//!    and reload bit-exactly.
+//!
+//! Every summary line is prefixed `sparse-ab:` so the CI job summary
+//! can grep them out of the log.
+
+use std::time::Instant;
+
+use ebft::bench_support::BenchEnv;
+use ebft::config::FtConfig;
+use ebft::coordinator::pruner;
+use ebft::model::ParamStore;
+use ebft::pruning::Pattern;
+use ebft::tensor::sparse::{set_sparse_mode, EffWeight, SparseMode};
+use ebft::tensor::Tensor;
+use ebft::util::Pcg64;
+
+/// Microbench layer shape: one mid-size linear (batch × in → out).
+const BATCH: usize = 256;
+const K_IN: usize = 512;
+const N_OUT: usize = 1024;
+/// Timing repetitions per path (median taken).
+const REPS: usize = 5;
+
+fn main() -> anyhow::Result<()> {
+    let pattern = Pattern::Unstructured(0.7);
+
+    // ---- gate 1: full cell, dense dispatch vs forced sparse ----------
+    let env = BenchEnv::open_synthetic()?;
+    let ft = FtConfig { calib_seqs: 8, ..FtConfig::default() };
+    let pipe = env.pipeline_with(ft)?;
+
+    let prev = set_sparse_mode(SparseMode::Off);
+    let t0 = Instant::now();
+    let dense_cell = pipe.run_named("wanda", pattern, "ebft")?;
+    let dense_secs = t0.elapsed().as_secs_f64();
+
+    set_sparse_mode(SparseMode::Force);
+    let t1 = Instant::now();
+    let sparse_cell = pipe.run_named("wanda", pattern, "ebft")?;
+    let sparse_secs = t1.elapsed().as_secs_f64();
+    set_sparse_mode(prev);
+
+    assert_eq!(dense_cell.ppl.to_bits(), sparse_cell.ppl.to_bits(),
+               "sparse dispatch changed the cell's perplexity: \
+                dense {} vs sparse {}", dense_cell.ppl, sparse_cell.ppl);
+    println!("sparse-ab: cell wanda@70%+ebft ppl {:.6} bit-identical \
+              across dispatch modes", dense_cell.ppl);
+    println!("sparse-ab: cell wall dense {dense_secs:.2}s sparse \
+              {sparse_secs:.2}s (x{:.2}, informational)",
+             dense_secs / sparse_secs);
+
+    // ---- gate 2: kernel-level speedup at 70% sparsity ----------------
+    let mut rng = Pcg64::seeded(7);
+    let w = Tensor::randn(&[K_IN, N_OUT], 0.02, &mut rng);
+    let mask = Tensor::from_vec(
+        &[K_IN, N_OUT],
+        (0..K_IN * N_OUT)
+            .map(|_| if rng.below(10) < 7 { 0.0 } else { 1.0 })
+            .collect());
+    let a = Tensor::randn(&[BATCH, K_IN], 1.0, &mut rng);
+
+    // both paths rebuild their effective weight per call, exactly like
+    // the reference backend's per-forward masked_eff
+    let (y_dense, t_dense) = timed(|| {
+        let eff = EffWeight::from_masked_mode(&w, &mask, SparseMode::Off);
+        eff.matmul(&a)
+    })?;
+    let (y_sparse, t_sparse) = timed(|| {
+        let eff = EffWeight::from_masked_mode(&w, &mask,
+                                              SparseMode::Force);
+        eff.matmul(&a)
+    })?;
+    assert_bits_eq(&y_dense, &y_sparse, "kernel A/B output");
+
+    let nnz = mask.count_nonzero();
+    let density = nnz as f64 / mask.numel() as f64;
+    let speedup = t_dense / t_sparse;
+    println!("sparse-ab: kernel {BATCH}x{K_IN}x{N_OUT} density {:.3} \
+              median dense {:.1}ms sparse {:.1}ms speedup x{:.2}",
+             density, t_dense * 1e3, t_sparse * 1e3, speedup);
+    assert!(speedup > 1.0,
+            "sparse path not faster than dense masked path at \
+             {:.0}% sparsity (x{speedup:.2})", (1.0 - density) * 100.0);
+
+    // ---- gate 3: compact checkpoint size + exact round-trip ----------
+    // wanda leaves pruned weights in place (masks carry the sparsity),
+    // so realize the zeros before measuring what compaction buys
+    let pruned = pipe.prune(pruner("wanda")?, pattern)?;
+    let mut params = pruned.params.clone();
+    pruned.masks.apply(&env.session.manifest, &mut params)?;
+
+    let dir = env.runs.join("sparse-ab");
+    std::fs::create_dir_all(&dir)?;
+    let dense_path = dir.join("params_dense.ebft");
+    let sparse_path = dir.join("params_sparse.ebft");
+    params.save(&dense_path)?;
+    params.save_compact(&sparse_path)?;
+    let dense_len = std::fs::metadata(&dense_path)?.len();
+    let sparse_len = std::fs::metadata(&sparse_path)?.len();
+
+    let reloaded = ParamStore::load(&sparse_path, &env.session.manifest)?;
+    for (t, r) in params.tensors.iter().zip(&reloaded.tensors) {
+        assert_bits_eq(t, r, "compact checkpoint round-trip");
+    }
+    println!("sparse-ab: checkpoint dense {dense_len} B sparse \
+              {sparse_len} B ratio {:.1}% round-trip bit-exact",
+             sparse_len as f64 / dense_len as f64 * 100.0);
+    assert!(sparse_len * 2 <= dense_len,
+            "70%-sparse compact checkpoint is {sparse_len} B, more than \
+             half the dense {dense_len} B");
+
+    println!("sparse-ab: all gates passed");
+    Ok(())
+}
+
+/// Median wall-clock over [`REPS`] runs of `f`, plus its (last) output.
+fn timed(f: impl Fn() -> anyhow::Result<Tensor>)
+         -> anyhow::Result<(Tensor, f64)> {
+    let mut times = Vec::with_capacity(REPS);
+    let mut out = None;
+    for _ in 0..REPS {
+        let t0 = Instant::now();
+        out = Some(f()?);
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(f64::total_cmp);
+    Ok((out.expect("REPS >= 1"), times[times.len() / 2]))
+}
+
+fn assert_bits_eq(a: &Tensor, b: &Tensor, what: &str) {
+    assert_eq!(a.shape, b.shape, "{what}: shape mismatch");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert!(x.to_bits() == y.to_bits(),
+                "{what}: bit mismatch at flat index {i}: {x} vs {y}");
+    }
+}

@@ -147,6 +147,9 @@ pub struct RunRecord {
     pub ppl: f64,
     /// Realized overall sparsity of the masks after recovery.
     pub sparsity: f64,
+    /// Realized per-layer sparsity (1 − nnz/total per block), layer
+    /// order. Empty on records written before it was tracked.
+    pub layer_sparsity: Vec<f64>,
     pub prune_secs: f64,
     pub ft_secs: f64,
     pub eval_secs: f64,
@@ -169,6 +172,11 @@ impl RunRecord {
         j.set("recovery_label", Json::Str(self.recovery_label.clone()));
         j.set("ppl", Json::Num(self.ppl));
         j.set("sparsity", Json::Num(self.sparsity));
+        if !self.layer_sparsity.is_empty() {
+            j.set("layer_sparsity",
+                  Json::Arr(self.layer_sparsity.iter()
+                                .map(|&s| Json::Num(s)).collect()));
+        }
         j.set("prune_secs", Json::Num(self.prune_secs));
         j.set("ft_secs", Json::Num(self.ft_secs));
         j.set("eval_secs", Json::Num(self.eval_secs));
@@ -237,6 +245,13 @@ impl RunRecord {
             recovery_label: j.get("recovery_label")?.as_str()?.to_string(),
             ppl: j.get("ppl")?.as_f64()?,
             sparsity: j.get("sparsity")?.as_f64()?,
+            layer_sparsity: match j.opt("layer_sparsity") {
+                None => Vec::new(),
+                Some(a) => a.as_arr()?
+                    .iter()
+                    .map(|v| v.as_f64())
+                    .collect::<Result<Vec<f64>>>()?,
+            },
             prune_secs: j.get("prune_secs")?.as_f64()?,
             ft_secs: j.get("ft_secs")?.as_f64()?,
             eval_secs: j.get("eval_secs")?.as_f64()?,
@@ -332,6 +347,7 @@ impl<'a> Pipeline<'a> {
             recovery_label: recovery.label().to_string(),
             ppl,
             sparsity: recovered.masks.sparsity(),
+            layer_sparsity: recovered.masks.layer_sparsity(),
             prune_secs: pruned.prune_secs,
             ft_secs: recovered.ft_secs,
             eval_secs,

@@ -163,7 +163,9 @@ impl RunStore {
                           -> Result<()> {
         let base = self.ckpt_base(fingerprint, &pruned.pruner,
                                   &pruned.pattern.label());
-        pruned.params.save(&with_ext(&base, "params.ebft"))?;
+        // compact encoding: pruned params are mostly zeros, so the
+        // checkpoint shrinks with sparsity (masks pack to 1 bit/weight)
+        pruned.params.save_compact(&with_ext(&base, "params.ebft"))?;
         pruned.masks.save(&with_ext(&base, "masks.ebft"))?;
         let mut meta = Json::obj();
         meta.set("pruner", Json::Str(pruned.pruner.clone()));

@@ -13,6 +13,8 @@
 //!   serve-bench  synthetic concurrent load over the serving engine:
 //!              continuous batching + multi-tenant adapters, reporting
 //!              tokens/sec and p50/p99 latency vs a serial baseline
+//!   compress   re-encode a `.ebft` checkpoint (dense v1 ↔ compact
+//!              sparse v2), verifying a bit-exact round-trip
 //!   info       manifest / artifact summary
 //!
 //! Methods resolve through the coordinator registries, so `--method` and
@@ -21,8 +23,11 @@
 //! `--resume` (skip cells already completed in `runs/store/`). Every
 //! subcommand takes `--threads N` (intra-op kernel threads, default
 //! `EBFT_THREADS` or the core count); under `--jobs N` the budget is
-//! divided across workers. Thread counts never change results — the
-//! kernel layer is bit-identical across them.
+//! divided across workers, and `--sparse-mode off|auto|force` (default
+//! `EBFT_SPARSE` or auto) picks whether masked weights execute through
+//! the compressed sparse formats. Neither ever changes results — the
+//! kernel layer is bit-identical across thread counts, and every sparse
+//! path is bit-equal to the dense masked one.
 //!
 //! Examples:
 //!   ebft pretrain --config small --steps 300
@@ -106,6 +111,14 @@ fn run() -> Result<()> {
             .context("--threads expects an integer ≥ 1")?;
         ebft::tensor::kernels::set_threads(n);
     }
+    // sparse execution dispatch: --sparse-mode beats EBFT_SPARSE beats
+    // auto. Never changes results — sparse products are bit-equal to the
+    // dense masked path — only how masked weights are represented/run.
+    if let Some(m) = args.get("sparse-mode") {
+        let mode = ebft::tensor::sparse::SparseMode::parse(m)
+            .context("--sparse-mode expects off|auto|force")?;
+        ebft::tensor::sparse::set_sparse_mode(mode);
+    }
     match args.subcommand.as_str() {
         "pretrain" => cmd_pretrain(&args),
         "prune" => cmd_prune(&args),
@@ -117,6 +130,7 @@ fn run() -> Result<()> {
         "zeroshot" => cmd_zeroshot(&args),
         "generate" => cmd_generate(&args),
         "serve-bench" => cmd_serve_bench(&args),
+        "compress" => cmd_compress(&args),
         "info" => cmd_info(&args),
         "" => {
             print_usage();
@@ -129,8 +143,9 @@ fn run() -> Result<()> {
 fn print_usage() {
     println!("ebft — block-wise fine-tuning for sparse LLMs (reproduction)");
     println!();
-    println!("usage: ebft <pretrain|prune|finetune|pipeline|grid|flap|eval|zeroshot|generate|serve-bench|info> [--options]");
-    println!("common options: --config tiny|small|base  --artifacts DIR  --runs DIR  --threads N");
+    println!("usage: ebft <pretrain|prune|finetune|pipeline|grid|flap|eval|zeroshot|generate|serve-bench|compress|info> [--options]");
+    println!("common options: --config tiny|small|base  --artifacts DIR  --runs DIR  --threads N  --sparse-mode off|auto|force");
+    println!("compress options: --in FILE.ebft  --out FILE.ebft  [--dense]");
     println!("sweep options (pipeline/grid): --jobs N  --resume");
     println!("serving options (generate/serve-bench): --synthetic  --max-new N  --top-k K --temperature T");
     println!("serve-bench options: --tenants N  --requests N  --workers N  --max-batch N  --deadline-ms MS");
@@ -183,10 +198,14 @@ fn cmd_prune(args: &Args) -> Result<()> {
     println!("pruned with {} at {} → realized sparsity {:.2}%",
              pruner.label(), pattern.label(),
              100.0 * pruned.masks.sparsity());
+    println!("  per-layer sparsity: {}",
+             fmt_layer_sparsity(&pruned.masks.layer_sparsity()));
     let tag = format!("{}-{}-{}", session.manifest.dims.name, pruner.label(),
                       pattern.label().replace([':', '%'], "_"));
     std::fs::create_dir_all(&paths.runs)?;
-    pruned.params.save(&paths.runs.join(format!("{tag}.ebft")))?;
+    // compact encoding: pruned weights and 0/1 masks both shrink with
+    // sparsity on disk; `ebft compress --dense` converts back if needed
+    pruned.params.save_compact(&paths.runs.join(format!("{tag}.ebft")))?;
     pruned.masks.save(&paths.runs.join(format!("{tag}.masks.ebft")))?;
     println!("saved {tag}.ebft + {tag}.masks.ebft under {}",
              paths.runs.display());
@@ -295,6 +314,10 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         .context("missing no-recovery reference cell")?;
     println!("{} @ {}: ppl {} (sparsity {:.1}%)", pruner.label(),
              pattern.label(), fmt_ppl(base.ppl), 100.0 * base.sparsity);
+    if !base.layer_sparsity.is_empty() {
+        println!("  per-layer sparsity: {}",
+                 fmt_layer_sparsity(&base.layer_sparsity));
+    }
     if recovery.name() != "none" {
         let cell = swept
             .find(pruner.name(), pattern, recovery.name())
@@ -519,6 +542,16 @@ fn cmd_generate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// "L0 50.0%  L1 48.7%  …" — the realized per-layer sparsity line the
+/// pipeline and serve-bench subcommands print.
+fn fmt_layer_sparsity(ls: &[f64]) -> String {
+    ls.iter()
+        .enumerate()
+        .map(|(l, s)| format!("L{l} {:.1}%", 100.0 * s))
+        .collect::<Vec<_>>()
+        .join("  ")
+}
+
 fn fmt_tokens(tokens: &[i32]) -> String {
     tokens
         .iter()
@@ -546,11 +579,13 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     println!("base pruned with {} at {} (sparsity {:.1}%)",
              pruner.label(), pattern.label(),
              100.0 * pruned.masks.sparsity());
-
     let n_tenants = args.get_usize("tenants", 2)?;
     let mut registry = AdapterRegistry::new(session.manifest.clone(),
                                             pruned.params.clone(),
                                             pruned.masks.clone());
+    let layer_sparsity = registry.base_layer_sparsity();
+    println!("  per-layer sparsity: {}",
+             fmt_layer_sparsity(&layer_sparsity));
     for i in 0..n_tenants {
         registry.register(&format!("tenant{i}"),
                           ebft::ebft::lora::init_adapters(&session,
@@ -627,6 +662,10 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let mut j = Json::obj();
     j.set("requests", Json::Num(n_requests as f64));
     j.set("tenants", Json::Num(n_tenants as f64));
+    j.set("base_sparsity", Json::Num(pruned.masks.sparsity()));
+    j.set("layer_sparsity",
+          Json::Arr(layer_sparsity.iter().map(|&s| Json::Num(s))
+                        .collect()));
     j.set("serial", serve_json(&serial));
     j.set("batched", serve_json(&batched));
     j.set("speedup", Json::Num(speedup));
@@ -664,6 +703,50 @@ fn serve_json(r: &ebft::serve::ServeReport) -> Json {
     j.set("p99_ms", Json::Num(r.p99_ms));
     j.set("max_concurrent", Json::Num(r.max_concurrent as f64));
     j
+}
+
+/// Re-encode a `.ebft` checkpoint: `ebft compress --in pruned.ebft --out
+/// pruned.sparse.ebft` writes the v2 compact sparse encoding (smallest
+/// of dense/index/bitmap/binary per tensor); `--dense` converts back to
+/// the dense v1 layout. The output is re-read and compared bit-for-bit
+/// against the input before the size ratio is reported, so a successful
+/// run *is* the round-trip proof.
+fn cmd_compress(args: &Args) -> Result<()> {
+    use ebft::model::checkpoint;
+    let input = args.get("in").context("--in FILE.ebft required")?;
+    let output = args.get("out").context("--out FILE.ebft required")?;
+    let inp = std::path::Path::new(input);
+    let outp = std::path::Path::new(output);
+    let entries = checkpoint::load(inp)
+        .with_context(|| format!("reading {input}"))?;
+    let refs: Vec<(String, &ebft::tensor::Tensor)> =
+        entries.iter().map(|(n, t)| (n.clone(), t)).collect();
+    if args.has_flag("dense") {
+        checkpoint::save(outp, &refs)?;
+    } else {
+        checkpoint::save_compact(outp, &refs)?;
+    }
+    let back = checkpoint::load(outp)?;
+    let identical = back.len() == entries.len()
+        && entries.iter().zip(&back).all(|((an, at), (bn, bt))| {
+            an == bn && at.shape == bt.shape
+                && at.data.iter().zip(&bt.data)
+                    .all(|(x, y)| x.to_bits() == y.to_bits())
+        });
+    if !identical {
+        bail!("compress: {output} does not round-trip bit-exactly (bug)");
+    }
+    let numel: usize = entries.iter().map(|(_, t)| t.numel()).sum();
+    let nnz: usize = entries.iter().map(|(_, t)| t.count_nonzero()).sum();
+    let in_len = std::fs::metadata(inp)?.len();
+    let out_len = std::fs::metadata(outp)?.len();
+    println!("{input}: {} tensors, {numel} values ({:.1}% nonzero)",
+             entries.len(),
+             100.0 * nnz as f64 / (numel as f64).max(1.0));
+    println!("{input} ({in_len} bytes) → {output} ({out_len} bytes, \
+              {:.1}% of input; verified bit-exact)",
+             100.0 * out_len as f64 / (in_len as f64).max(1.0));
+    Ok(())
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

@@ -64,6 +64,21 @@ impl MaskSet {
         1.0 - m.count_nonzero() as f64 / m.numel() as f64
     }
 
+    /// Realized per-layer sparsity: `1 - nnz/total` over the 7 linears
+    /// of each block, in layer order (the `RunRecord` observability
+    /// satellite — compression claims become per-layer numbers).
+    pub fn layer_sparsity(&self) -> Vec<f64> {
+        self.masks
+            .iter()
+            .map(|block| {
+                let kept: usize =
+                    block.iter().map(|m| m.count_nonzero()).sum();
+                let total: usize = block.iter().map(|m| m.numel()).sum();
+                1.0 - kept as f64 / total as f64
+            })
+            .collect()
+    }
+
     /// Validate every entry is exactly 0.0 or 1.0.
     pub fn validate_binary(&self) -> Result<()> {
         for (l, block) in self.masks.iter().enumerate() {
@@ -111,7 +126,11 @@ impl MaskSet {
                 if w.shape != self.masks[l][j].shape {
                     bail!("mask/weight shape mismatch at block {l} linear {j}");
                 }
-                params.tensors[pi] = w.mul(&self.masks[l][j]);
+                // mask_mul (not a raw product) so pruned slots land on
+                // exact +0.0 — the compact checkpoint encodings and the
+                // sparse dispatcher key nonzero-ness off the bit pattern
+                params.tensors[pi] =
+                    crate::tensor::kernels::mask_mul(w, &self.masks[l][j]);
             }
         }
         Ok(())
@@ -126,7 +145,8 @@ impl MaskSet {
         }
         let refs: Vec<(String, &Tensor)> =
             entries.iter().map(|(n, t)| (n.clone(), *t)).collect();
-        checkpoint::save(path, &refs)
+        // 0/1 masks hit the v2 binary-bitmap encoding: 1 bit per weight
+        checkpoint::save_compact(path, &refs)
     }
 
     pub fn load(path: &Path, manifest: &Manifest) -> Result<MaskSet> {
@@ -291,6 +311,42 @@ mod tests {
         ms.apply(&manifest, &mut ps).unwrap();
         assert_eq!(ps.get("blocks.0.attn.wq").unwrap().count_nonzero(), 0);
         assert!(ps.get("blocks.0.attn.wk").unwrap().count_nonzero() > 0);
+    }
+
+    #[test]
+    fn layer_sparsity_per_block() {
+        let manifest = fake_manifest(&tmpdir("layersp"));
+        let mut ms = MaskSet::dense(&manifest);
+        // zero every linear of block 1 ⇒ [0.0, 1.0]
+        for j in 0..7 {
+            let shape = ms.masks[1][j].shape.clone();
+            ms.masks[1][j] = Tensor::zeros(&shape);
+        }
+        let ls = ms.layer_sparsity();
+        assert_eq!(ls.len(), 2);
+        assert_eq!(ls[0], 0.0);
+        assert_eq!(ls[1], 1.0);
+    }
+
+    #[test]
+    fn apply_canonicalizes_to_positive_zero() {
+        let manifest = fake_manifest(&tmpdir("applyzero"));
+        let mut rng = Pcg64::seeded(11);
+        let tensors: Vec<Tensor> = manifest.param_shapes.iter()
+            .map(|s| Tensor::randn(s, 1.0, &mut rng)).collect();
+        let mut ps = crate::model::ParamStore::new(
+            manifest.param_names.clone(), tensors).unwrap();
+        let ms = {
+            let mut ms = MaskSet::dense(&manifest);
+            ms.masks[0][0] = Tensor::zeros(&[4, 4]);
+            ms
+        };
+        ms.apply(&manifest, &mut ps).unwrap();
+        // every pruned slot must be exact +0.0, never -0.0 from a
+        // negative weight times 0.0
+        for v in &ps.get("blocks.0.attn.wq").unwrap().data {
+            assert_eq!(v.to_bits(), 0, "pruned slot not canonical +0.0");
+        }
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! `.ebft` checkpoint format — named-tensor container (params, masks, …).
 //!
-//! Layout (little-endian):
+//! Version 1 layout (little-endian):
 //!   magic   8 bytes  "EBFTCKPT"
 //!   version u32      (1)
 //!   count   u32
@@ -8,6 +8,23 @@
 //!     name_len u32, name bytes (utf-8)
 //!     rank u32, dims u32 × rank
 //!     data f32 × numel
+//!
+//! Version 2 (the compact sparse encoding, written by [`save_compact`])
+//! keeps the same header and per-entry name/rank/dims prefix, then tags
+//! each payload with an encoding word:
+//!   enc u32:
+//!     0 dense   — f32 × numel (identical to v1's payload)
+//!     1 index   — nnz u32, ascending flat indices u32 × nnz,
+//!                 values f32 × nnz
+//!     2 bitmap  — ⌈numel/8⌉ occupancy bytes (LSB-first), then
+//!                 values f32 × nnz in ascending index order
+//!     3 binary  — occupancy bytes only; every set bit decodes to 1.0
+//!                 (the natural encoding for 0/1 pruning masks)
+//! [`save_compact`] picks the smallest encoding per tensor, so dense
+//! tensors cost one extra word and sparse ones shrink with sparsity. A
+//! value is "zero" only when its bit pattern is +0.0 (`to_bits() == 0`):
+//! -0.0, denormals and NaNs are kept verbatim, so both versions
+//! round-trip every tensor bit-exactly. [`load`] accepts both versions.
 //!
 //! The format is order-preserving: tensors round-trip in the exact order
 //! they were written (the canonical parameter order matters downstream).
@@ -20,6 +37,20 @@ use crate::tensor::Tensor;
 
 const MAGIC: &[u8; 8] = b"EBFTCKPT";
 const VERSION: u32 = 1;
+const VERSION_COMPACT: u32 = 2;
+
+const ENC_DENSE: u32 = 0;
+const ENC_INDEX: u32 = 1;
+const ENC_BITMAP: u32 = 2;
+const ENC_BINARY: u32 = 3;
+
+/// The compact encodings' nonzero criterion: exact bit pattern of +0.0.
+/// Anything else (including -0.0 and NaN payloads) is stored verbatim,
+/// which is what makes the sparse round-trip bit-exact.
+#[inline]
+fn is_nz(v: f32) -> bool {
+    v.to_bits() != 0
+}
 
 /// Stream into a sibling staging file, then land atomically (rename): a
 /// save interrupted mid-write never leaves a torn checkpoint for the
@@ -53,6 +84,109 @@ pub fn save(path: &Path, entries: &[(String, &Tensor)]) -> Result<()> {
     .with_context(|| format!("writing checkpoint {}", path.display()))
 }
 
+/// [`save`] with the v2 compact payloads: per tensor, the smallest of
+/// dense / index / bitmap / binary encodings (see the module docs).
+/// Same atomicity and ordering guarantees; `load` reads the result back
+/// bit-exactly.
+pub fn save_compact(path: &Path, entries: &[(String, &Tensor)])
+                    -> Result<()> {
+    crate::util::fsio::atomic_write_with(path, |w| {
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION_COMPACT.to_le_bytes())?;
+        w.write_all(&(entries.len() as u32).to_le_bytes())?;
+        for (name, t) in entries {
+            let nb = name.as_bytes();
+            w.write_all(&(nb.len() as u32).to_le_bytes())?;
+            w.write_all(nb)?;
+            w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                w.write_all(&(d as u32).to_le_bytes())?;
+            }
+            write_compact_payload(w, t)?;
+        }
+        Ok(())
+    })
+    .with_context(|| format!("writing compact checkpoint {}",
+                             path.display()))
+}
+
+fn write_compact_payload<W: Write>(w: &mut W, t: &Tensor)
+                                   -> std::io::Result<()> {
+    let numel = t.data.len();
+    let nnz = t.data.iter().filter(|v| is_nz(**v)).count();
+    let ones_bits = 1.0f32.to_bits();
+    let all_ones = t.data.iter()
+        .all(|v| !is_nz(*v) || v.to_bits() == ones_bits);
+    let bm_bytes = numel.div_ceil(8);
+    // payload sizes per encoding (the enc word itself is common)
+    let sz_dense = 4 * numel;
+    let sz_index = 4 + 8 * nnz;
+    let sz_bitmap = bm_bytes + 4 * nnz;
+    let sz_binary = if all_ones { bm_bytes } else { usize::MAX };
+    let enc = if sz_binary <= sz_dense && sz_binary <= sz_index
+        && sz_binary <= sz_bitmap
+    {
+        ENC_BINARY
+    } else if sz_index < sz_dense && sz_index <= sz_bitmap {
+        ENC_INDEX
+    } else if sz_bitmap < sz_dense {
+        ENC_BITMAP
+    } else {
+        ENC_DENSE
+    };
+    w.write_all(&enc.to_le_bytes())?;
+    match enc {
+        ENC_DENSE => write_f32s(w, &t.data)?,
+        ENC_INDEX => {
+            w.write_all(&(nnz as u32).to_le_bytes())?;
+            for (i, v) in t.data.iter().enumerate() {
+                if is_nz(*v) {
+                    w.write_all(&(i as u32).to_le_bytes())?;
+                }
+            }
+            for v in t.data.iter().filter(|v| is_nz(**v)) {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        _ => {
+            write_bitmap(w, &t.data)?;
+            if enc == ENC_BITMAP {
+                for v in t.data.iter().filter(|v| is_nz(**v)) {
+                    w.write_all(&v.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn write_f32s<W: Write>(w: &mut W, data: &[f32]) -> std::io::Result<()> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                   data.len() * 4)
+    };
+    w.write_all(bytes)
+}
+
+/// Occupancy bitmap, LSB-first within each byte; trailing bits of the
+/// final byte are zero.
+fn write_bitmap<W: Write>(w: &mut W, data: &[f32]) -> std::io::Result<()> {
+    let mut byte = 0u8;
+    for (i, v) in data.iter().enumerate() {
+        if is_nz(*v) {
+            byte |= 1 << (i % 8);
+        }
+        if i % 8 == 7 {
+            w.write_all(&[byte])?;
+            byte = 0;
+        }
+    }
+    if data.len() % 8 != 0 {
+        w.write_all(&[byte])?;
+    }
+    Ok(())
+}
+
 pub fn load(path: &Path) -> Result<Vec<(String, Tensor)>> {
     let file = std::fs::File::open(path)
         .with_context(|| format!("opening {}", path.display()))?;
@@ -63,7 +197,7 @@ pub fn load(path: &Path) -> Result<Vec<(String, Tensor)>> {
         bail!("{} is not an EBFT checkpoint", path.display());
     }
     let version = read_u32(&mut r)?;
-    if version != VERSION {
+    if version != VERSION && version != VERSION_COMPACT {
         bail!("unsupported checkpoint version {version}");
     }
     let count = read_u32(&mut r)? as usize;
@@ -84,15 +218,84 @@ pub fn load(path: &Path) -> Result<Vec<(String, Tensor)>> {
             shape.push(read_u32(&mut r)? as usize);
         }
         let numel: usize = shape.iter().product();
-        let mut data = vec![0f32; numel];
-        let bytes: &mut [u8] = unsafe {
-            std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8,
-                                           numel * 4)
+        let data = if version == VERSION {
+            read_f32s(&mut r, numel)?
+        } else {
+            read_compact_payload(&mut r, numel)?
         };
-        r.read_exact(bytes)?;
         out.push((String::from_utf8(name)?, Tensor::from_vec(&shape, data)));
     }
     Ok(out)
+}
+
+fn read_f32s<R: Read>(r: &mut R, n: usize) -> Result<Vec<f32>> {
+    let mut data = vec![0f32; n];
+    let bytes: &mut [u8] = unsafe {
+        std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, n * 4)
+    };
+    r.read_exact(bytes)?;
+    Ok(data)
+}
+
+fn read_compact_payload<R: Read>(r: &mut R, numel: usize)
+                                 -> Result<Vec<f32>> {
+    let enc = read_u32(r)?;
+    match enc {
+        ENC_DENSE => read_f32s(r, numel),
+        ENC_INDEX => {
+            let nnz = read_u32(r)? as usize;
+            if nnz > numel {
+                bail!("corrupt checkpoint: nnz {nnz} exceeds numel {numel}");
+            }
+            let mut idx = Vec::with_capacity(nnz);
+            let mut prev: Option<usize> = None;
+            for _ in 0..nnz {
+                let i = read_u32(r)? as usize;
+                if i >= numel || prev.is_some_and(|p| i <= p) {
+                    bail!("corrupt checkpoint: index {i} out of order or \
+                           out of range (numel {numel})");
+                }
+                prev = Some(i);
+                idx.push(i);
+            }
+            let vals = read_f32s(r, nnz)?;
+            let mut data = vec![0f32; numel];
+            for (i, v) in idx.into_iter().zip(vals) {
+                data[i] = v;
+            }
+            Ok(data)
+        }
+        ENC_BITMAP | ENC_BINARY => {
+            let mut bm = vec![0u8; numel.div_ceil(8)];
+            r.read_exact(&mut bm)?;
+            let mut idx = Vec::new();
+            for (bi, &b) in bm.iter().enumerate() {
+                for bit in 0..8 {
+                    if b & (1 << bit) != 0 {
+                        let i = bi * 8 + bit;
+                        if i >= numel {
+                            bail!("corrupt checkpoint: occupancy bit \
+                                   beyond numel {numel}");
+                        }
+                        idx.push(i);
+                    }
+                }
+            }
+            let mut data = vec![0f32; numel];
+            if enc == ENC_BINARY {
+                for i in idx {
+                    data[i] = 1.0;
+                }
+            } else {
+                let vals = read_f32s(r, idx.len())?;
+                for (i, v) in idx.into_iter().zip(vals) {
+                    data[i] = v;
+                }
+            }
+            Ok(data)
+        }
+        other => bail!("corrupt checkpoint: unknown encoding {other}"),
+    }
 }
 
 fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
@@ -187,6 +390,122 @@ mod tests {
         let path = tmpfile("empty");
         save(&path, &[]).unwrap();
         assert!(load(&path).unwrap().is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    fn assert_bits_eq(a: &Tensor, b: &Tensor, tag: &str) {
+        assert_eq!(a.shape, b.shape, "{tag} shape");
+        assert_eq!(a.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                   b.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                   "{tag} payload");
+    }
+
+    /// Every compact encoding round-trips bit-exactly, including the
+    /// shapes that stress the payload pickers: all-zero (binary bitmap
+    /// with no values), all-dense, a 0/1 mask (binary), a handful of
+    /// nonzeros (index), -0.0 survivors, and a numel that is not a
+    /// multiple of the bitmap's byte granularity.
+    #[test]
+    fn compact_roundtrip_bit_exact() {
+        let mut rng = Pcg64::seeded(21);
+        let dense = Tensor::randn(&[6, 9], 1.0, &mut rng);
+        let zero = Tensor::zeros(&[4, 13]);
+        let mut mask = Tensor::zeros(&[5, 11]);
+        for i in (0..mask.numel()).step_by(3) {
+            mask.data[i] = 1.0;
+        }
+        let mut sparse = Tensor::zeros(&[17]); // odd numel: partial byte
+        sparse.data[0] = -0.0; // sign bit set ⇒ nonzero, must survive
+        sparse.data[3] = 2.5;
+        sparse.data[16] = -1.25;
+        let mut lone = Tensor::zeros(&[300]);
+        lone.data[299] = f32::NAN;
+        let entries: Vec<(String, &Tensor)> = vec![
+            ("dense".into(), &dense), ("zero".into(), &zero),
+            ("mask".into(), &mask), ("sparse".into(), &sparse),
+            ("lone".into(), &lone),
+        ];
+        let path = tmpfile("compact-rt");
+        save_compact(&path, &entries).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.len(), entries.len());
+        for ((name, orig), (lname, lt)) in entries.iter().zip(&loaded) {
+            assert_eq!(name, lname);
+            assert_bits_eq(orig, lt, name);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// At 70% sparsity the compact file is at most half the dense one —
+    /// the acceptance bar for the sparse encoding.
+    #[test]
+    fn compact_sparse_checkpoint_halves_size() {
+        let mut rng = Pcg64::seeded(33);
+        let mut w = Tensor::randn(&[96, 128], 1.0, &mut rng);
+        for v in w.data.iter_mut() {
+            if rng.below(10) < 7 {
+                *v = 0.0;
+            }
+        }
+        let entries: Vec<(String, &Tensor)> = vec![("w".into(), &w)];
+        let pd = tmpfile("size-dense");
+        let ps = tmpfile("size-sparse");
+        save(&pd, &entries).unwrap();
+        save_compact(&ps, &entries).unwrap();
+        let dense_len = std::fs::metadata(&pd).unwrap().len();
+        let sparse_len = std::fs::metadata(&ps).unwrap().len();
+        assert!(sparse_len * 2 <= dense_len,
+                "sparse {sparse_len} vs dense {dense_len}");
+        assert_bits_eq(&load(&ps).unwrap()[0].1, &w, "sparse reload");
+        std::fs::remove_file(&pd).ok();
+        std::fs::remove_file(&ps).ok();
+    }
+
+    /// Dense-ish tensors fall back to the dense payload: compact never
+    /// costs more than one enc word per tensor.
+    #[test]
+    fn compact_dense_overhead_is_one_word_per_tensor() {
+        let mut rng = Pcg64::seeded(8);
+        let w = Tensor::randn(&[32, 32], 1.0, &mut rng);
+        let entries: Vec<(String, &Tensor)> = vec![("w".into(), &w)];
+        let pd = tmpfile("ovh-dense");
+        let pc = tmpfile("ovh-compact");
+        save(&pd, &entries).unwrap();
+        save_compact(&pc, &entries).unwrap();
+        let dense_len = std::fs::metadata(&pd).unwrap().len();
+        let compact_len = std::fs::metadata(&pc).unwrap().len();
+        assert_eq!(compact_len, dense_len + 4);
+        std::fs::remove_file(&pd).ok();
+        std::fs::remove_file(&pc).ok();
+    }
+
+    #[test]
+    fn compact_rejects_corrupt_payloads() {
+        let mut sparse = Tensor::zeros(&[64]);
+        sparse.data[5] = 3.0;
+        let entries: Vec<(String, &Tensor)> =
+            vec![("w".into(), &sparse)];
+        let path = tmpfile("compact-corrupt");
+        save_compact(&path, &entries).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        // v2 header: magic 8 + version 4 + count 4; entry: name_len 4 +
+        // name 1 + rank 4 + dim 4, then enc at offset 29
+        let enc_off = 8 + 4 + 4 + 4 + 1 + 4 + 4;
+        let mut bad = good.clone();
+        bad[enc_off] = 9; // unknown encoding tag
+        std::fs::write(&path, &bad).unwrap();
+        assert!(load(&path).is_err(), "unknown enc must be rejected");
+        let mut bad = good.clone();
+        // index encoding: nnz right after enc; inflate it past numel
+        bad[enc_off + 4] = 0xff;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(load(&path).is_err(), "oversized nnz must be rejected");
+        let mut bad = good;
+        // first stored index (after enc + nnz) pushed out of range
+        bad[enc_off + 8] = 0xff;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(load(&path).is_err(),
+                "out-of-range index must be rejected");
         std::fs::remove_file(&path).ok();
     }
 }

@@ -119,13 +119,22 @@ impl ParamStore {
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {
-        let entries: Vec<(String, &Tensor)> = self
-            .names
+        checkpoint::save(path, &self.entries())
+    }
+
+    /// [`Self::save`] in the v2 compact `.ebft` encoding: pruned params
+    /// (zeros from `MaskSet::apply`) shrink with sparsity, dense ones
+    /// cost one word per tensor. [`Self::load`] reads both.
+    pub fn save_compact(&self, path: &Path) -> Result<()> {
+        checkpoint::save_compact(path, &self.entries())
+    }
+
+    fn entries(&self) -> Vec<(String, &Tensor)> {
+        self.names
             .iter()
             .cloned()
             .zip(self.tensors.iter())
-            .collect();
-        checkpoint::save(path, &entries)
+            .collect()
     }
 
     pub fn load(path: &Path, manifest: &Manifest) -> Result<Self> {
@@ -230,6 +239,26 @@ mod tests {
         let ps = ParamStore::from_init_bin(&m).unwrap();
         let path = m.dir.join("ckpt.ebft");
         ps.save(&path).unwrap();
+        let ps2 = ParamStore::load(&path, &m).unwrap();
+        assert_eq!(ps.tensors, ps2.tensors);
+    }
+
+    #[test]
+    fn save_compact_load_matches_dense_save() {
+        let m = fake_manifest(&tmpdir("savecompact"));
+        write_init_bin(&m, 7);
+        let mut ps = ParamStore::from_init_bin(&m).unwrap();
+        // zero most of one linear so at least one tensor takes a sparse
+        // encoding; loads must be indistinguishable from the dense path
+        let mut w = ps.get("blocks.0.attn.wq").unwrap().clone();
+        for (i, v) in w.data.iter_mut().enumerate() {
+            if i % 4 != 0 {
+                *v = 0.0;
+            }
+        }
+        ps.set("blocks.0.attn.wq", w).unwrap();
+        let path = m.dir.join("ckpt-compact.ebft");
+        ps.save_compact(&path).unwrap();
         let ps2 = ParamStore::load(&path, &m).unwrap();
         assert_eq!(ps.tensors, ps2.tensors);
     }

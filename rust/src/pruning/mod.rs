@@ -7,6 +7,12 @@
 //! [`prune_model`]; whole-model structured pruning (FLAP) has its own
 //! driver in [`flap`]. Method selection by name happens in
 //! `coordinator::registry`, not here.
+//!
+//! The masks these methods emit are what the sparse execution layer
+//! ([`crate::tensor::sparse`]) keys off downstream: unstructured masks
+//! compress to CSR, N:M masks to offset panels, FLAP's whole-column
+//! masks to shrunken dense GEMMs — all bit-equal to the dense masked
+//! path, so pruning numerics are unchanged by how the masks execute.
 
 pub mod flap;
 pub mod magnitude;

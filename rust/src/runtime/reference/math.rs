@@ -25,6 +25,7 @@
 use anyhow::Result;
 
 use crate::tensor::kernels::{self, SharedMut, SharedMut64};
+use crate::tensor::sparse::EffWeight;
 use crate::tensor::Tensor;
 
 pub use crate::tensor::kernels::AdamHyper;
@@ -384,22 +385,22 @@ pub struct BlockCache {
 /// RMSNorm → SwiGLU → residual). `eff[0..7]` are the effective linear
 /// weights (canonical order wq wk wv wo w_gate w_up w_down); `g1`/`g2`
 /// the norm gains; `x` is `[T, D]`.
-pub fn block_fwd(dm: &Dims, eff: &[Tensor], g1: &[f32], g2: &[f32],
+pub fn block_fwd(dm: &Dims, eff: &[EffWeight], g1: &[f32], g2: &[f32],
                  x: &Tensor) -> Result<BlockCache> {
     let (xn, r1) = rmsnorm_fwd(x, g1);
-    let mut q = kernels::matmul(&xn, &eff[0])?;
-    let mut k = kernels::matmul(&xn, &eff[1])?;
-    let v = kernels::matmul(&xn, &eff[2])?;
+    let mut q = eff[0].matmul(&xn)?;
+    let mut k = eff[1].matmul(&xn)?;
+    let v = eff[2].matmul(&xn)?;
     rope(&mut q, dm, 1.0);
     rope(&mut k, dm, 1.0);
     let (ctx, attn) = attention_fwd(&q, &k, &v, dm);
-    let attn_out = kernels::matmul(&ctx, &eff[3])?;
+    let attn_out = eff[3].matmul(&ctx)?;
     let xa = x.add(&attn_out);
     let (hn, r2) = rmsnorm_fwd(&xa, g2);
-    let gate = kernels::matmul(&hn, &eff[4])?;
-    let up = kernels::matmul(&hn, &eff[5])?;
+    let gate = eff[4].matmul(&hn)?;
+    let up = eff[5].matmul(&hn)?;
     let hmid = kernels::silu_mul(&gate, &up);
-    let down = kernels::matmul(&hmid, &eff[6])?;
+    let down = eff[6].matmul(&hmid)?;
     let y = xa.add(&down);
     Ok(BlockCache {
         x: x.clone(),
@@ -430,24 +431,24 @@ pub struct BlockGrads {
     pub dx: Tensor,
 }
 
-pub fn block_bwd(dm: &Dims, eff: &[Tensor], g1: &[f32], g2: &[f32],
+pub fn block_bwd(dm: &Dims, eff: &[EffWeight], g1: &[f32], g2: &[f32],
                  c: &BlockCache, dy: &Tensor) -> Result<BlockGrads> {
     // ---- MLP sub-block (y = xa + hmid @ w_down) ----
     // weight grads are Xᵀ·dY, activation grads dY·Wᵀ — both fused
     // kernels, no transposes materialized
     let d_w_down = kernels::matmul_at_b(&c.hmid, dy)?;
-    let dhmid = kernels::matmul_a_bt(dy, &eff[6])?;
+    let dhmid = eff[6].matmul_bt(dy)?;
     let (dgate, dup) = kernels::silu_mul_bwd(&dhmid, &c.gate, &c.up);
     let d_w_gate = kernels::matmul_at_b(&c.hn, &dgate)?;
     let d_w_up = kernels::matmul_at_b(&c.hn, &dup)?;
-    let dhn = kernels::matmul_a_bt(&dgate, &eff[4])?
-        .add(&kernels::matmul_a_bt(&dup, &eff[5])?);
+    let dhn = eff[4].matmul_bt(&dgate)?
+        .add(&eff[5].matmul_bt(&dup)?);
     let (dxa_norm, dg2) = rmsnorm_bwd(&c.xa, g2, &c.r2, &dhn);
     let dxa = dy.add(&dxa_norm);
 
     // ---- attention sub-block (xa = x + ctx @ w_o) ----
     let d_w_o = kernels::matmul_at_b(&c.ctx, &dxa)?;
-    let dctx = kernels::matmul_a_bt(&dxa, &eff[3])?;
+    let dctx = eff[3].matmul_bt(&dxa)?;
     let (mut dq, mut dk, dv) =
         attention_bwd(&c.q, &c.k, &c.v, &c.attn, &dctx, dm);
     // RoPE adjoint (rotation transpose) back to the pre-RoPE projections
@@ -456,9 +457,9 @@ pub fn block_bwd(dm: &Dims, eff: &[Tensor], g1: &[f32], g2: &[f32],
     let d_w_q = kernels::matmul_at_b(&c.xn, &dq)?;
     let d_w_k = kernels::matmul_at_b(&c.xn, &dk)?;
     let d_w_v = kernels::matmul_at_b(&c.xn, &dv)?;
-    let dxn = kernels::matmul_a_bt(&dq, &eff[0])?
-        .add(&kernels::matmul_a_bt(&dk, &eff[1])?)
-        .add(&kernels::matmul_a_bt(&dv, &eff[2])?);
+    let dxn = eff[0].matmul_bt(&dq)?
+        .add(&eff[1].matmul_bt(&dk)?)
+        .add(&eff[2].matmul_bt(&dv)?);
     let (dx_norm, dg1) = rmsnorm_bwd(&c.x, g1, &c.r1, &dxn);
     let dx = dxa.add(&dx_norm);
     Ok(BlockGrads {
@@ -551,27 +552,27 @@ pub fn attention_decode(q: &[f32], k_cache: &Tensor, v_cache: &Tensor,
 /// One transformer block for a single position: writes this step's
 /// post-RoPE K and pre-attention V rows into the caches at `pos`, then
 /// attends over rows `0..=pos`. `x` is `[1, D]`; returns `y [1, D]`.
-pub fn block_decode_fwd(dm: &Dims, eff: &[Tensor], g1: &[f32], g2: &[f32],
-                        x: &Tensor, k_cache: &mut Tensor,
+pub fn block_decode_fwd(dm: &Dims, eff: &[EffWeight], g1: &[f32],
+                        g2: &[f32], x: &Tensor, k_cache: &mut Tensor,
                         v_cache: &mut Tensor, pos: usize) -> Result<Tensor> {
     let d = dm.d_model;
     let (xn, _r1) = rmsnorm_fwd(x, g1);
-    let mut q = kernels::matmul(&xn, &eff[0])?;
-    let mut k = kernels::matmul(&xn, &eff[1])?;
-    let v = kernels::matmul(&xn, &eff[2])?;
+    let mut q = eff[0].matmul(&xn)?;
+    let mut k = eff[1].matmul(&xn)?;
+    let v = eff[2].matmul(&xn)?;
     rope_row(&mut q.data[..d], pos, dm, 1.0);
     rope_row(&mut k.data[..d], pos, dm, 1.0);
     k_cache.row_mut(pos).copy_from_slice(&k.data);
     v_cache.row_mut(pos).copy_from_slice(&v.data);
     let ctx = Tensor::from_vec(
         &[1, d], attention_decode(&q.data, k_cache, v_cache, pos, dm));
-    let attn_out = kernels::matmul(&ctx, &eff[3])?;
+    let attn_out = eff[3].matmul(&ctx)?;
     let xa = x.add(&attn_out);
     let (hn, _r2) = rmsnorm_fwd(&xa, g2);
-    let gate = kernels::matmul(&hn, &eff[4])?;
-    let up = kernels::matmul(&hn, &eff[5])?;
+    let gate = eff[4].matmul(&hn)?;
+    let up = eff[5].matmul(&hn)?;
     let hmid = kernels::silu_mul(&gate, &up);
-    let down = kernels::matmul(&hmid, &eff[6])?;
+    let down = eff[6].matmul(&hmid)?;
     Ok(xa.add(&down))
 }
 
@@ -822,9 +823,15 @@ mod tests {
         (eff, g1, g2)
     }
 
+    /// Tests perturb plain tensors, then wrap them as dense effective
+    /// weights at the call boundary.
+    fn wrap(eff: &[Tensor]) -> Vec<EffWeight> {
+        eff.iter().map(|t| EffWeight::dense(t.clone())).collect()
+    }
+
     fn recon_loss(dm: &Dims, eff: &[Tensor], g1: &[f32], g2: &[f32],
                   x: &Tensor, target: &Tensor) -> f32 {
-        let c = block_fwd(dm, eff, g1, g2, x).unwrap();
+        let c = block_fwd(dm, &wrap(eff), g1, g2, x).unwrap();
         let diff = c.y.sub(target);
         (diff.sq_sum() / diff.numel() as f64) as f32
     }
@@ -840,10 +847,10 @@ mod tests {
         let x = randt(&[dm.tokens(), dm.d_model], &mut rng);
         let target = randt(&[dm.tokens(), dm.d_model], &mut rng);
 
-        let c = block_fwd(&dm, &eff, &g1, &g2, &x).unwrap();
+        let c = block_fwd(&dm, &wrap(&eff), &g1, &g2, &x).unwrap();
         let n = c.y.numel() as f32;
         let dy = c.y.sub(&target).scale(2.0 / n);
-        let g = block_bwd(&dm, &eff, &g1, &g2, &c, &dy).unwrap();
+        let g = block_bwd(&dm, &wrap(&eff), &g1, &g2, &c, &dy).unwrap();
 
         let h = 1e-2f32;
         let mut rng2 = Pcg64::seeded(7);
@@ -1029,6 +1036,7 @@ mod tests {
         let (eff, g1, g2) = block_weights(&dm, &mut rng);
         let x = randt(&[dm.tokens(), dm.d_model], &mut rng);
         let dy = randt(&[dm.tokens(), dm.d_model], &mut rng);
+        let eff = wrap(&eff);
         let run = || {
             let c = block_fwd(&dm, &eff, &g1, &g2, &x).unwrap();
             let g = block_bwd(&dm, &eff, &g1, &g2, &c, &dy).unwrap();
@@ -1070,6 +1078,7 @@ mod tests {
         let dm = dims();
         let mut rng = Pcg64::seeded(0xdec0de);
         let (eff, g1, g2) = block_weights(&dm, &mut rng);
+        let eff = wrap(&eff);
         let x = randt(&[dm.tokens(), dm.d_model], &mut rng);
         let full = block_fwd(&dm, &eff, &g1, &g2, &x).unwrap();
         let d = dm.d_model;

@@ -26,6 +26,7 @@ use super::backend::{Backend, BackendKind};
 use super::buffer::DeviceBuffer;
 use crate::model::manifest::{ArtifactSpec, Manifest, N_BLOCK_LINEARS,
                              N_BLOCK_PARAMS};
+use crate::tensor::sparse::EffWeight;
 use crate::tensor::{kernels, Tensor};
 
 /// Artifact base names the interpreter implements (everything aot.py
@@ -182,11 +183,13 @@ impl Interp {
         (start..start + n).map(|i| inputs[i].fetch()).collect()
     }
 
-    /// Effective linears `W⊙M` from a (bp, mask) slot pair — the
-    /// kernel layer's mask-aware product.
-    fn masked_eff(bp: &[Tensor], masks: &[Tensor]) -> Vec<Tensor> {
+    /// Effective linears `W⊙M` from a (bp, mask) slot pair, handed to
+    /// the sparse dispatcher: dense enough masks stay a dense
+    /// `mask_mul` product, sparse/structured ones compress into the
+    /// matching [`EffWeight`] format — bit-equal either way.
+    fn masked_eff(bp: &[Tensor], masks: &[Tensor]) -> Vec<EffWeight> {
         (0..N_BLOCK_LINEARS)
-            .map(|i| kernels::mask_mul(&bp[i], &masks[i]))
+            .map(|i| EffWeight::from_masked(&bp[i], &masks[i]))
             .collect()
     }
 
@@ -382,7 +385,7 @@ impl Interp {
     /// effective linears) → head. Returns the per-block caches and the
     /// head cache.
     #[allow(clippy::type_complexity)]
-    fn lm_forward(&self, params: &[Tensor], eff_blocks: &[Vec<Tensor>],
+    fn lm_forward(&self, params: &[Tensor], eff_blocks: &[Vec<EffWeight>],
                   tokens: &[i32])
                   -> Result<(Vec<math::BlockCache>, math::HeadCache)> {
         let mut x = math::embed_fwd(&params[0], tokens, self.dm.vocab,
@@ -408,7 +411,7 @@ impl Interp {
         let masks = self.range(inputs, self.n_params,
                                N_BLOCK_LINEARS * self.n_layers)?;
         let tokens = inputs[inputs.len() - 1].fetch_i32()?;
-        let eff_blocks: Vec<Vec<Tensor>> = (0..self.n_layers)
+        let eff_blocks: Vec<Vec<EffWeight>> = (0..self.n_layers)
             .map(|l| {
                 Self::masked_eff(
                     &params[1 + l * N_BLOCK_PARAMS..],
@@ -433,9 +436,12 @@ impl Interp {
         let tokens = inputs[3 * n_p + 2].fetch_i32()?;
 
         // dense pretraining: effective weights are the weights themselves
-        let eff_blocks: Vec<Vec<Tensor>> = (0..self.n_layers)
+        let eff_blocks: Vec<Vec<EffWeight>> = (0..self.n_layers)
             .map(|l| {
-                params[1 + l * N_BLOCK_PARAMS..][..N_BLOCK_LINEARS].to_vec()
+                params[1 + l * N_BLOCK_PARAMS..][..N_BLOCK_LINEARS]
+                    .iter()
+                    .map(|t| EffWeight::dense(t.clone()))
+                    .collect()
             })
             .collect();
         let (caches, hc) = self.lm_forward(&params, &eff_blocks, &tokens)?;
@@ -506,8 +512,9 @@ impl Interp {
         let lr = inputs[i + 1].fetch_scalar()?;
         let tokens = inputs[i + 2].fetch_i32()?;
 
-        // W̄ = W⊙M + scale·(A·B) per linear
-        let mut eff_blocks: Vec<Vec<Tensor>> =
+        // W̄ = W⊙M + scale·(A·B) per linear — the adapter term is dense,
+        // so the effective weight stays a dense product
+        let mut eff_blocks: Vec<Vec<EffWeight>> =
             Vec::with_capacity(self.n_layers);
         for l in 0..self.n_layers {
             let bp = &params[1 + l * N_BLOCK_PARAMS..];
@@ -516,8 +523,8 @@ impl Interp {
             for j in 0..N_BLOCK_LINEARS {
                 let ai = 2 * (l * N_BLOCK_LINEARS + j);
                 let delta = adapters[ai].matmul(&adapters[ai + 1])?;
-                eff.push(kernels::mask_mul_add_scaled(
-                    &bp[j], &ms[j], &delta, self.lora_scale));
+                eff.push(EffWeight::dense(kernels::mask_mul_add_scaled(
+                    &bp[j], &ms[j], &delta, self.lora_scale)));
             }
             eff_blocks.push(eff);
         }

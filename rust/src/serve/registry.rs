@@ -20,7 +20,12 @@ pub const BASE_TENANT: &str = "base";
 /// `mask_mul_add_scaled` (W⊙M + s·A·B) and cached behind an `Arc` —
 /// the merge runs once per tenant, not once per request. Merged stores
 /// evaluate with dense masks (the merge destroys sparsity); the base
-/// tenant keeps the sparse masks.
+/// tenant keeps the sparse masks, so its block products run through the
+/// sparse execution formats whenever the density dispatcher elects them.
+///
+/// Base checkpoints and adapter exports arrive via `ParamStore::load` /
+/// `lora::load_adapters`, which read both `.ebft` encodings (dense v1
+/// and compact sparse v2) interchangeably.
 pub struct AdapterRegistry {
     manifest: Manifest,
     base: Arc<ParamStore>,
@@ -88,6 +93,18 @@ impl AdapterRegistry {
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
+    }
+
+    /// Realized overall sparsity of the shared base's masks.
+    pub fn base_sparsity(&self) -> f64 {
+        self.masks.sparsity()
+    }
+
+    /// Realized per-layer sparsity (1 − nnz/total per block) of the
+    /// shared base — what serve-bench reports so the sparse-base
+    /// tenants' compression is observable.
+    pub fn base_layer_sparsity(&self) -> Vec<f64> {
+        self.masks.layer_sparsity()
     }
 
     /// Resolve a tenant to its servable (params, masks). The base

@@ -537,6 +537,12 @@ fn elem_tasks(n: usize, ops_per_elem: usize) -> (usize, usize) {
 }
 
 /// The mask-aware product `W ⊙ M` used by effective-weight assembly.
+/// Masked-out entries (`m == 0.0`) produce a canonical `+0.0` rather
+/// than the sign-of-`w` zero a raw product would give: downstream
+/// accumulations are bitwise-insensitive to the zero's sign (dense
+/// accumulators never sit at `-0.0`), and canonical zeros are what the
+/// compact sparse `.ebft` encoding and the sparse execution formats key
+/// their nonzero structure on.
 pub fn mask_mul(w: &Tensor, m: &Tensor) -> Tensor {
     assert_eq!(w.shape, m.shape, "mask_mul shape mismatch");
     let n = w.data.len();
@@ -551,7 +557,7 @@ pub fn mask_mul(w: &Tensor, m: &Tensor) -> Tensor {
         for ((o, &wv), &mv) in
             o.iter_mut().zip(&w.data[e0..e1]).zip(&m.data[e0..e1])
         {
-            *o = wv * mv;
+            *o = if mv == 0.0 { 0.0 } else { wv * mv };
         }
     });
     out
@@ -1044,6 +1050,46 @@ mod tests {
         add_assign(&mut acc, &x);
         add_assign(&mut acc, &x);
         assert!(acc.data.iter().all(|&v| v == 3.0));
+    }
+
+    #[test]
+    fn masked_edge_densities_match_naive_and_sparse() {
+        // dispatcher boundary densities: 0% kept, 100% kept, and a
+        // single-nnz row — the blocked kernel, the naive golden loop and
+        // the sparse execution path must all agree bitwise
+        use crate::tensor::sparse::{EffWeight, SparseMode};
+        let mut rng = Pcg64::seeded(30);
+        let (t, k, n) = (9usize, 14usize, 11usize);
+        let a = randt(&[t, k], &mut rng);
+        let w = randt(&[k, n], &mut rng);
+        let mut single = Tensor::zeros(&[k, n]);
+        single.data[4 * n + 7] = 1.0;
+        let masks = [("0%", Tensor::zeros(&[k, n])),
+                     ("100%", Tensor::ones(&[k, n])),
+                     ("single-nnz-row", single)];
+        for (tag, m) in &masks {
+            let eff = mask_mul(&w, m);
+            let golden = naive_matmul(&a, &eff);
+            assert_bits_eq(&matmul(&a, &eff).unwrap(), &golden,
+                           &format!("blocked {tag}"));
+            let ew = EffWeight::from_masked_mode(&w, m, SparseMode::Force);
+            assert_bits_eq(&ew.matmul(&a).unwrap(), &golden,
+                           &format!("sparse {tag}"));
+        }
+    }
+
+    #[test]
+    fn mask_mul_canonicalizes_zeros() {
+        // masked-out entries are exact +0.0 regardless of the weight's
+        // sign — the invariant the compact checkpoint encoding and the
+        // sparse formats key their nonzero structure on
+        let w = Tensor::from_vec(&[1, 4], vec![-3.0, 2.0, -0.5, 0.0]);
+        let m = Tensor::from_vec(&[1, 4], vec![0.0, 1.0, 0.0, 1.0]);
+        let wm = mask_mul(&w, &m);
+        assert_eq!(wm.data[0].to_bits(), 0.0f32.to_bits());
+        assert_eq!(wm.data[1], 2.0);
+        assert_eq!(wm.data[2].to_bits(), 0.0f32.to_bits());
+        assert_eq!(wm.data[3], 0.0);
     }
 
     #[test]

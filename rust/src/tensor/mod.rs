@@ -4,12 +4,16 @@
 //! every O(n³) primitive (matmul/gram/transpose), the fused
 //! elementwise/reduction helpers, and the mask-aware products — with a
 //! bit-identical-across-thread-counts determinism contract (see its
-//! module docs). [`Tensor`] is the thin data handle plus facade;
-//! [`linalg`] the SparseGPT OBS solves. Both backends' host numerics —
-//! the reference interpreter and the coordinator-side pruning math —
-//! run on these kernels.
+//! module docs). [`sparse`] layers compressed representations for
+//! masked weights (CSR/CSC, N:M offset panels, shrunken structured
+//! GEMMs) behind the same contract — every sparse product is bit-equal
+//! to the dense masked path. [`Tensor`] is the thin data handle plus
+//! facade; [`linalg`] the SparseGPT OBS solves. Both backends' host
+//! numerics — the reference interpreter and the coordinator-side
+//! pruning math — run on these kernels.
 pub mod kernels;
 pub mod linalg;
+pub mod sparse;
 pub mod tensor;
 
 pub use tensor::Tensor;

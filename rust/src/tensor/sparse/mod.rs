@@ -1,0 +1,961 @@
+//! Sparse execution formats for masked weights.
+//!
+//! After pruning, every effective weight is `W ⊙ M` — yet executing it
+//! densely spends full FLOPs on entries the mask already zeroed. This
+//! module gives each masked weight a compressed representation chosen
+//! from the realized mask structure:
+//!
+//! * [`EffWeight::Csr`] — unstructured masks: compressed-sparse rows
+//!   *and* columns over the kept entries (each product uses its natural
+//!   orientation);
+//! * [`EffWeight::Nm`] — N:M semi-structured masks (uniform keep count
+//!   per group of M input rows, per output column): a byte-offset panel,
+//!   2:4-tensor-core style;
+//! * [`EffWeight::Cols`]/[`EffWeight::Rows`] — FLAP-style structured
+//!   masks that zero whole output columns (q/k/v, gate/up) or whole
+//!   input rows (o, down): a shrunken dense GEMM plus a column
+//!   gather/scatter;
+//! * [`EffWeight::Dense`] — everything else (and every mask denser than
+//!   [`MAX_AUTO_DENSITY`], where the dense kernel's vectorized panels
+//!   win).
+//!
+//! [`EffWeight::from_masked`] is the density-threshold dispatcher: the
+//! reference backend assembles every effective weight through it, so the
+//! SparseGPT/Wanda numerics, the EBFT recovery loops and the serving
+//! layer's sparse-base tenants pick the compressed paths up without any
+//! call-site changes. `EBFT_SPARSE` (or [`set_sparse_mode`], the CLI's
+//! `--sparse`) selects `off` (always dense), `auto` (sparse below the
+//! density threshold — the default) or `force` (sparse whenever the mask
+//! has any zero).
+//!
+//! ## Determinism and bit-equality contract
+//!
+//! Every format here produces outputs **bit-identical to the dense
+//! masked path** ([`kernels::matmul`]/[`kernels::matmul_a_bt`] over
+//! `mask_mul(w, m)`) at every thread count. Two facts carry the proof:
+//!
+//! 1. the dense kernels accumulate each output element in ascending
+//!    inner-dimension order from a `+0.0` start, and an IEEE-754
+//!    round-to-nearest sum whose partial never equals `-0.0` stays
+//!    `+0.0`-signed under added `±0.0` terms — so *skipping* the terms
+//!    whose weight factor is `±0.0` (exactly the masked entries, for
+//!    finite activations) leaves every partial sum bit-identical;
+//! 2. each sparse kernel visits the kept entries of one output element
+//!    in the same ascending inner order the dense kernel uses, writes
+//!    each output element from exactly one task, and dropped structured
+//!    rows/columns are filled with the `+0.0` the dense accumulator
+//!    would have produced.
+//!
+//! The sparse kernels reach vector throughput by computing through
+//! transposes: `A·W` walks the CSC of `W` and accumulates contiguous
+//! length-`m` AXPYs over rows of `Aᵀ` into rows of `outᵀ` (ascending
+//! input row per column), `A·Wᵀ` walks the CSR symmetrically. Work
+//! scales with `nnz`, so at the paper's 50–70% sparsity the sparse path
+//! does a fraction of the dense FLOPs plus two cheap `O(m·k + m·n)`
+//! transposes.
+
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::kernels::{self, par_tasks, partition, SharedMut};
+use super::Tensor;
+
+// ---------------------------------------------------------------------
+// dispatch mode
+// ---------------------------------------------------------------------
+
+/// Sparse-execution dispatch mode (see [`sparse_mode`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SparseMode {
+    /// Always execute densely (the pre-sparse behavior).
+    Off,
+    /// Sparse formats for masks at or below [`MAX_AUTO_DENSITY`].
+    Auto,
+    /// Sparse formats for any mask with at least one zero.
+    Force,
+}
+
+impl SparseMode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SparseMode::Off => "off",
+            SparseMode::Auto => "auto",
+            SparseMode::Force => "force",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SparseMode> {
+        match s {
+            "off" | "0" => Some(SparseMode::Off),
+            "auto" | "1" => Some(SparseMode::Auto),
+            "force" => Some(SparseMode::Force),
+            _ => None,
+        }
+    }
+}
+
+/// Densest mask `auto` mode will execute sparsely. Above this the dense
+/// kernel's contiguous vectorized panels beat index-driven AXPYs; at the
+/// paper's common 50% sparsity and sparser, skipping masked FLOPs wins.
+pub const MAX_AUTO_DENSITY: f64 = 0.5;
+
+/// Resolved dispatch mode; 0 = not yet resolved, else mode + 1.
+static SPARSE_MODE: AtomicUsize = AtomicUsize::new(0);
+
+fn mode_from_usize(v: usize) -> SparseMode {
+    match v {
+        1 => SparseMode::Off,
+        3 => SparseMode::Force,
+        _ => SparseMode::Auto,
+    }
+}
+
+fn resolve_mode_default() -> usize {
+    match std::env::var("EBFT_SPARSE")
+        .ok()
+        .as_deref()
+        .and_then(SparseMode::parse)
+    {
+        Some(SparseMode::Off) => 1,
+        Some(SparseMode::Force) => 3,
+        _ => 2,
+    }
+}
+
+/// The current dispatch mode: [`set_sparse_mode`] (the CLI's `--sparse`)
+/// beats the `EBFT_SPARSE` environment variable beats `auto`. Mode never
+/// changes results — every format is bit-identical to the dense masked
+/// path — only which kernels run.
+pub fn sparse_mode() -> SparseMode {
+    let v = SPARSE_MODE.load(Ordering::Relaxed);
+    if v != 0 {
+        return mode_from_usize(v);
+    }
+    let resolved = resolve_mode_default();
+    // racing first resolutions compute the same value; either store wins
+    let _ = SPARSE_MODE.compare_exchange(0, resolved, Ordering::Relaxed,
+                                         Ordering::Relaxed);
+    mode_from_usize(SPARSE_MODE.load(Ordering::Relaxed))
+}
+
+/// Set the dispatch mode, returning the previous one.
+pub fn set_sparse_mode(mode: SparseMode) -> SparseMode {
+    let prev = sparse_mode();
+    let v = match mode {
+        SparseMode::Off => 1,
+        SparseMode::Auto => 2,
+        SparseMode::Force => 3,
+    };
+    SPARSE_MODE.store(v, Ordering::Relaxed);
+    prev
+}
+
+// ---------------------------------------------------------------------
+// the format payloads
+// ---------------------------------------------------------------------
+
+/// Unstructured mask: the kept entries of `W: [k, n]` in both
+/// compressed-sparse-row order (over the `k` input rows — the `A·Wᵀ`
+/// orientation) and compressed-sparse-column order (over the `n` output
+/// columns — the `A·W` orientation). Values are `w·m` at the kept
+/// positions; within a row/column the indices ascend, which is what
+/// keeps the accumulation order identical to the dense kernels'.
+#[derive(Clone, Debug)]
+pub struct CsrWeight {
+    k: usize,
+    n: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<u32>,
+    row_val: Vec<f32>,
+    col_ptr: Vec<usize>,
+    row_idx: Vec<u32>,
+    col_val: Vec<f32>,
+}
+
+/// N:M semi-structured mask (`keep` of every `g` consecutive input rows,
+/// per output column): a byte-offset panel for the `A·W` orientation —
+/// per output column, per group, `keep` ascending in-group offsets plus
+/// the kept values — and a CSR for the `A·Wᵀ` orientation.
+#[derive(Clone, Debug)]
+pub struct NmWeight {
+    k: usize,
+    n: usize,
+    /// Group size M (4 or 8).
+    g: usize,
+    /// Kept entries per group (the N of N:M).
+    keep: usize,
+    /// `[n × k/g × keep]` in-group offsets, ascending within each group.
+    offs: Vec<u8>,
+    /// Kept values, same layout as `offs`.
+    vals: Vec<f32>,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<u32>,
+    row_val: Vec<f32>,
+}
+
+/// Structured mask zeroing whole output columns (FLAP's q/k/v/gate/up
+/// pattern): the kept columns gathered into a shrunken dense `[k, nk]`
+/// weight. `A·W` is a dense GEMM plus a column scatter; `A·Wᵀ` is a
+/// column gather of `A` plus a dense `A·Bᵀ`.
+#[derive(Clone, Debug)]
+pub struct ColsWeight {
+    k: usize,
+    n: usize,
+    kept: Vec<u32>,
+    w: Tensor,
+}
+
+/// Structured mask zeroing whole input rows (FLAP's o/down pattern): the
+/// kept rows gathered into a shrunken dense `[kk, n]` weight. `A·W` is a
+/// column gather of `A` plus a dense GEMM; `A·Wᵀ` is a dense `A·Bᵀ` plus
+/// a column scatter.
+#[derive(Clone, Debug)]
+pub struct RowsWeight {
+    k: usize,
+    n: usize,
+    kept: Vec<u32>,
+    w: Tensor,
+}
+
+/// One effective weight `W ⊙ M` in whichever representation the
+/// dispatcher chose. All variants execute [`EffWeight::matmul`] (`A·W`)
+/// and [`EffWeight::matmul_bt`] (`A·Wᵀ`) bit-identically to the dense
+/// masked path, at every thread count.
+#[derive(Clone, Debug)]
+pub enum EffWeight {
+    Dense(Tensor),
+    Csr(Box<CsrWeight>),
+    Nm(Box<NmWeight>),
+    Cols(Box<ColsWeight>),
+    Rows(Box<RowsWeight>),
+}
+
+impl EffWeight {
+    /// Wrap an already-assembled dense effective weight (the LM train
+    /// step's unmasked parameters, LoRA-merged weights).
+    pub fn dense(t: Tensor) -> EffWeight {
+        EffWeight::Dense(t)
+    }
+
+    /// The density-threshold dispatcher: choose a representation for
+    /// `W ⊙ M` under the process-wide [`sparse_mode`].
+    pub fn from_masked(w: &Tensor, m: &Tensor) -> EffWeight {
+        Self::from_masked_mode(w, m, sparse_mode())
+    }
+
+    /// [`EffWeight::from_masked`] with an explicit mode (tests and the
+    /// A/B harness pin formats without touching the global mode).
+    pub fn from_masked_mode(w: &Tensor, m: &Tensor, mode: SparseMode)
+                            -> EffWeight {
+        assert_eq!(w.shape, m.shape, "from_masked shape mismatch");
+        let (k, n) = match w.dims2() {
+            Ok(d) => d,
+            Err(_) => return EffWeight::Dense(kernels::mask_mul(w, m)),
+        };
+        if mode == SparseMode::Off || k == 0 || n == 0 {
+            return EffWeight::Dense(kernels::mask_mul(w, m));
+        }
+        let nnz = m.data.iter().filter(|&&v| v != 0.0).count();
+        let density = nnz as f64 / (k * n) as f64;
+        if nnz == k * n
+            || (mode == SparseMode::Auto && density > MAX_AUTO_DENSITY)
+        {
+            return EffWeight::Dense(kernels::mask_mul(w, m));
+        }
+        if let Some(cw) = ColsWeight::detect(w, m, k, n) {
+            return EffWeight::Cols(Box::new(cw));
+        }
+        if let Some(rw) = RowsWeight::detect(w, m, k, n) {
+            return EffWeight::Rows(Box::new(rw));
+        }
+        if let Some(nw) = NmWeight::detect(w, m, k, n) {
+            return EffWeight::Nm(Box::new(nw));
+        }
+        EffWeight::Csr(Box::new(CsrWeight::build(w, m, k, n)))
+    }
+
+    /// Representation tag ("dense", "csr", "nm", "cols", "rows").
+    pub fn format(&self) -> &'static str {
+        match self {
+            EffWeight::Dense(_) => "dense",
+            EffWeight::Csr(_) => "csr",
+            EffWeight::Nm(_) => "nm",
+            EffWeight::Cols(_) => "cols",
+            EffWeight::Rows(_) => "rows",
+        }
+    }
+
+    /// Weight shape `(k, n)` (input dim, output dim).
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            EffWeight::Dense(t) => (t.shape[0], t.shape[1]),
+            EffWeight::Csr(c) => (c.k, c.n),
+            EffWeight::Nm(p) => (p.k, p.n),
+            EffWeight::Cols(c) => (c.k, c.n),
+            EffWeight::Rows(r) => (r.k, r.n),
+        }
+    }
+
+    /// Stored (kept) entries.
+    pub fn nnz(&self) -> usize {
+        match self {
+            EffWeight::Dense(t) => t.numel(),
+            EffWeight::Csr(c) => c.row_val.len(),
+            EffWeight::Nm(p) => p.vals.len(),
+            EffWeight::Cols(c) => c.w.numel(),
+            EffWeight::Rows(r) => r.w.numel(),
+        }
+    }
+
+    /// Materialize the effective weight densely (tests, debugging).
+    pub fn to_dense(&self) -> Tensor {
+        let (k, n) = self.dims();
+        match self {
+            EffWeight::Dense(t) => t.clone(),
+            EffWeight::Csr(c) => {
+                let mut out = Tensor::zeros(&[k, n]);
+                for p in 0..k {
+                    let (t0, t1) = (c.row_ptr[p], c.row_ptr[p + 1]);
+                    for (&j, &v) in
+                        c.col_idx[t0..t1].iter().zip(&c.row_val[t0..t1])
+                    {
+                        out.data[p * n + j as usize] = v;
+                    }
+                }
+                out
+            }
+            EffWeight::Nm(pn) => {
+                let mut out = Tensor::zeros(&[k, n]);
+                for p in 0..k {
+                    let (t0, t1) = (pn.row_ptr[p], pn.row_ptr[p + 1]);
+                    for (&j, &v) in
+                        pn.col_idx[t0..t1].iter().zip(&pn.row_val[t0..t1])
+                    {
+                        out.data[p * n + j as usize] = v;
+                    }
+                }
+                out
+            }
+            EffWeight::Cols(c) => {
+                let mut out = Tensor::zeros(&[k, n]);
+                let nk = c.kept.len();
+                for p in 0..k {
+                    for (jj, &j) in c.kept.iter().enumerate() {
+                        out.data[p * n + j as usize] = c.w.data[p * nk + jj];
+                    }
+                }
+                out
+            }
+            EffWeight::Rows(r) => {
+                let mut out = Tensor::zeros(&[k, n]);
+                for (pp, &p) in r.kept.iter().enumerate() {
+                    out.data[p as usize * n..(p as usize + 1) * n]
+                        .copy_from_slice(&r.w.data[pp * n..(pp + 1) * n]);
+                }
+                out
+            }
+        }
+    }
+
+    /// `A·W` for `A: [m, k]` — the forward-activation product,
+    /// bit-identical to `kernels::matmul(a, &mask_mul(w, m))`.
+    pub fn matmul(&self, a: &Tensor) -> Result<Tensor> {
+        let (k, n) = self.dims();
+        match self {
+            EffWeight::Dense(t) => kernels::matmul(a, t),
+            EffWeight::Csr(c) => {
+                check_matmul(a, k, n)?;
+                let at = kernels::transpose(a)?;
+                let out_t = gather_axpy(&c.col_ptr, &c.row_idx, &c.col_val,
+                                        &at, n);
+                kernels::transpose(&out_t)
+            }
+            EffWeight::Nm(p) => {
+                check_matmul(a, k, n)?;
+                let at = kernels::transpose(a)?;
+                let out_t = p.panel_axpy(&at);
+                kernels::transpose(&out_t)
+            }
+            EffWeight::Cols(c) => {
+                check_matmul(a, k, n)?;
+                let dense = kernels::matmul(a, &c.w)?;
+                Ok(scatter_cols(&dense, &c.kept, n))
+            }
+            EffWeight::Rows(r) => {
+                check_matmul(a, k, n)?;
+                let ag = gather_cols(a, &r.kept);
+                kernels::matmul(&ag, &r.w)
+            }
+        }
+    }
+
+    /// `A·Wᵀ` for `A: [m, n]` — the activation-gradient product,
+    /// bit-identical to `kernels::matmul_a_bt(a, &mask_mul(w, m))`.
+    pub fn matmul_bt(&self, a: &Tensor) -> Result<Tensor> {
+        let (k, n) = self.dims();
+        match self {
+            EffWeight::Dense(t) => kernels::matmul_a_bt(a, t),
+            EffWeight::Csr(c) => {
+                check_matmul_bt(a, k, n)?;
+                let at = kernels::transpose(a)?;
+                let out_t = gather_axpy(&c.row_ptr, &c.col_idx, &c.row_val,
+                                        &at, k);
+                kernels::transpose(&out_t)
+            }
+            EffWeight::Nm(p) => {
+                check_matmul_bt(a, k, n)?;
+                let at = kernels::transpose(a)?;
+                let out_t = gather_axpy(&p.row_ptr, &p.col_idx, &p.row_val,
+                                        &at, k);
+                kernels::transpose(&out_t)
+            }
+            EffWeight::Cols(c) => {
+                check_matmul_bt(a, k, n)?;
+                let ag = gather_cols(a, &c.kept);
+                kernels::matmul_a_bt(&ag, &c.w)
+            }
+            EffWeight::Rows(r) => {
+                check_matmul_bt(a, k, n)?;
+                let dense = kernels::matmul_a_bt(a, &r.w)?;
+                Ok(scatter_cols(&dense, &r.kept, k))
+            }
+        }
+    }
+}
+
+fn check_matmul(a: &Tensor, k: usize, n: usize) -> Result<()> {
+    let (ma, ka) = a.dims2()?;
+    if ka != k {
+        bail!("sparse matmul dims {ma}x{ka} @ {k}x{n}");
+    }
+    Ok(())
+}
+
+fn check_matmul_bt(a: &Tensor, k: usize, n: usize) -> Result<()> {
+    let (ma, na) = a.dims2()?;
+    if na != n {
+        bail!("sparse matmul_bt dims {ma}x{na} @ ({k}x{n})ᵀ");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// construction
+// ---------------------------------------------------------------------
+
+/// Kept value at a position: the same `w·m` product the dense masked
+/// path feeds its kernels, so kept-entry terms are bit-identical.
+#[inline]
+fn kept_val(w: &Tensor, m: &Tensor, i: usize) -> f32 {
+    w.data[i] * m.data[i]
+}
+
+impl CsrWeight {
+    fn build(w: &Tensor, m: &Tensor, k: usize, n: usize) -> CsrWeight {
+        let mut row_ptr = Vec::with_capacity(k + 1);
+        let mut col_idx = Vec::new();
+        let mut row_val = Vec::new();
+        row_ptr.push(0);
+        for p in 0..k {
+            for j in 0..n {
+                if m.data[p * n + j] != 0.0 {
+                    col_idx.push(j as u32);
+                    row_val.push(kept_val(w, m, p * n + j));
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        // CSC: count per column, prefix-sum, then fill scanning rows in
+        // ascending order so indices ascend within each column
+        let mut counts = vec![0usize; n];
+        for &j in &col_idx {
+            counts[j as usize] += 1;
+        }
+        let mut col_ptr = Vec::with_capacity(n + 1);
+        let mut acc = 0usize;
+        col_ptr.push(0);
+        for &c in &counts {
+            acc += c;
+            col_ptr.push(acc);
+        }
+        let nnz = col_idx.len();
+        let mut row_idx = vec![0u32; nnz];
+        let mut col_val = vec![0.0f32; nnz];
+        let mut cursor = col_ptr[..n].to_vec();
+        for p in 0..k {
+            let (t0, t1) = (row_ptr[p], row_ptr[p + 1]);
+            for (&j, &v) in col_idx[t0..t1].iter().zip(&row_val[t0..t1]) {
+                let slot = cursor[j as usize];
+                row_idx[slot] = p as u32;
+                col_val[slot] = v;
+                cursor[j as usize] += 1;
+            }
+        }
+        CsrWeight { k, n, row_ptr, col_idx, row_val, col_ptr, row_idx,
+                    col_val }
+    }
+}
+
+impl NmWeight {
+    /// Detect a uniform N:M layout (per output column, every group of
+    /// `g ∈ {4, 8}` consecutive input rows keeps the same `0 < keep < g`
+    /// count) and build the offset panel + CSR.
+    fn detect(w: &Tensor, m: &Tensor, k: usize, n: usize)
+              -> Option<NmWeight> {
+        'group: for g in [4usize, 8] {
+            if k % g != 0 || k < g {
+                continue;
+            }
+            let groups = k / g;
+            let mut keep = None;
+            for j in 0..n {
+                for gi in 0..groups {
+                    let cnt = (0..g)
+                        .filter(|s| m.data[(gi * g + s) * n + j] != 0.0)
+                        .count();
+                    match keep {
+                        None if cnt > 0 && cnt < g => keep = Some(cnt),
+                        Some(kc) if kc == cnt => {}
+                        _ => continue 'group,
+                    }
+                }
+            }
+            let keep = keep?;
+            let mut offs = Vec::with_capacity(n * groups * keep);
+            let mut vals = Vec::with_capacity(n * groups * keep);
+            for j in 0..n {
+                for gi in 0..groups {
+                    for s in 0..g {
+                        let i = (gi * g + s) * n + j;
+                        if m.data[i] != 0.0 {
+                            offs.push(s as u8);
+                            vals.push(kept_val(w, m, i));
+                        }
+                    }
+                }
+            }
+            let csr = CsrWeight::build(w, m, k, n);
+            return Some(NmWeight {
+                k,
+                n,
+                g,
+                keep,
+                offs,
+                vals,
+                row_ptr: csr.row_ptr,
+                col_idx: csr.col_idx,
+                row_val: csr.row_val,
+            });
+        }
+        None
+    }
+
+    /// `(A·W)ᵀ` from `Aᵀ: [k, m]` via the offset panel: per output
+    /// column, groups ascend and in-group offsets ascend, so each output
+    /// element accumulates over ascending input rows — the dense order
+    /// with the masked (`±0.0`-product) terms skipped.
+    fn panel_axpy(&self, at: &Tensor) -> Tensor {
+        let m = at.shape[1];
+        let groups = self.k / self.g;
+        let per_col = groups * self.keep;
+        let mut out_t = Tensor::zeros(&[self.n, m]);
+        let (rows_per, n_tasks) = partition(self.n, 2 * per_col * m.max(1));
+        let view = SharedMut::new(&mut out_t.data);
+        par_tasks(n_tasks, |ti| {
+            let j0 = ti * rows_per;
+            let j1 = (j0 + rows_per).min(self.n);
+            // Safety: tasks own disjoint row ranges of `out_t`.
+            let orows = unsafe { view.range(j0 * m, (j1 - j0) * m) };
+            for j in j0..j1 {
+                let orow = &mut orows[(j - j0) * m..(j - j0 + 1) * m];
+                let base = j * per_col;
+                for gi in 0..groups {
+                    let s0 = base + gi * self.keep;
+                    for (&off, &v) in self.offs[s0..s0 + self.keep]
+                        .iter()
+                        .zip(&self.vals[s0..s0 + self.keep])
+                    {
+                        let p = gi * self.g + off as usize;
+                        let arow = &at.data[p * m..(p + 1) * m];
+                        for (o, &av) in orow.iter_mut().zip(arow) {
+                            *o += v * av;
+                        }
+                    }
+                }
+            }
+        });
+        out_t
+    }
+}
+
+impl ColsWeight {
+    /// Detect a whole-output-column mask (every column either fully kept
+    /// or fully zero, with at least one zero column).
+    fn detect(w: &Tensor, m: &Tensor, k: usize, n: usize)
+              -> Option<ColsWeight> {
+        let mut counts = vec![0usize; n];
+        for p in 0..k {
+            let row = &m.data[p * n..(p + 1) * n];
+            for (c, &v) in counts.iter_mut().zip(row) {
+                if v != 0.0 {
+                    *c += 1;
+                }
+            }
+        }
+        let mut kept = Vec::new();
+        for (j, &c) in counts.iter().enumerate() {
+            if c == k {
+                kept.push(j as u32);
+            } else if c != 0 {
+                return None;
+            }
+        }
+        if kept.len() == n {
+            return None;
+        }
+        let nk = kept.len();
+        let mut wk = Tensor::zeros(&[k, nk]);
+        for p in 0..k {
+            for (jj, &j) in kept.iter().enumerate() {
+                wk.data[p * nk + jj] = kept_val(w, m, p * n + j as usize);
+            }
+        }
+        Some(ColsWeight { k, n, kept, w: wk })
+    }
+}
+
+impl RowsWeight {
+    /// Detect a whole-input-row mask (every row either fully kept or
+    /// fully zero, with at least one zero row).
+    fn detect(w: &Tensor, m: &Tensor, k: usize, n: usize)
+              -> Option<RowsWeight> {
+        let mut kept = Vec::new();
+        for p in 0..k {
+            let row = &m.data[p * n..(p + 1) * n];
+            let cnt = row.iter().filter(|&&v| v != 0.0).count();
+            if cnt == n {
+                kept.push(p as u32);
+            } else if cnt != 0 {
+                return None;
+            }
+        }
+        if kept.len() == k {
+            return None;
+        }
+        let kk = kept.len();
+        let mut wk = Tensor::zeros(&[kk, n]);
+        for (pp, &p) in kept.iter().enumerate() {
+            for j in 0..n {
+                wk.data[pp * n + j] = kept_val(w, m, p as usize * n + j);
+            }
+        }
+        Some(RowsWeight { k, n, kept, w: wk })
+    }
+}
+
+// ---------------------------------------------------------------------
+// the shared sparse kernels
+// ---------------------------------------------------------------------
+
+/// The transposed-AXPY core both sparse products share:
+/// `out_t[r, :] = Σ_t val[t] · at[idx[t], :]` over `t` ascending within
+/// each row `r` — contiguous vectorizable AXPYs of length `m`, one
+/// owning task per output row, entries visited in ascending index order
+/// (determinism rule 1).
+fn gather_axpy(ptr: &[usize], idx: &[u32], val: &[f32], at: &Tensor,
+               out_rows: usize) -> Tensor {
+    let m = at.shape[1];
+    let nnz = val.len();
+    let mut out_t = Tensor::zeros(&[out_rows, m]);
+    let avg_ops = (2 * nnz * m) / out_rows.max(1);
+    let (rows_per, n_tasks) = partition(out_rows, avg_ops.max(1));
+    let view = SharedMut::new(&mut out_t.data);
+    par_tasks(n_tasks, |ti| {
+        let r0 = ti * rows_per;
+        let r1 = (r0 + rows_per).min(out_rows);
+        // Safety: tasks own disjoint row ranges of `out_t`.
+        let orows = unsafe { view.range(r0 * m, (r1 - r0) * m) };
+        for r in r0..r1 {
+            let orow = &mut orows[(r - r0) * m..(r - r0 + 1) * m];
+            let (t0, t1) = (ptr[r], ptr[r + 1]);
+            for (&i, &v) in idx[t0..t1].iter().zip(&val[t0..t1]) {
+                let arow = &at.data[i as usize * m..(i as usize + 1) * m];
+                for (o, &av) in orow.iter_mut().zip(arow) {
+                    *o += v * av;
+                }
+            }
+        }
+    });
+    out_t
+}
+
+/// Gather the `kept` columns of `a: [m, n]` into `[m, |kept|]`
+/// (deterministic data movement, parallel over rows).
+fn gather_cols(a: &Tensor, kept: &[u32]) -> Tensor {
+    let m = a.shape[0];
+    let n = a.shape[1];
+    let nk = kept.len();
+    let mut out = Tensor::zeros(&[m, nk]);
+    let (rows_per, n_tasks) = partition(m, 2 * nk.max(1));
+    let view = SharedMut::new(&mut out.data);
+    par_tasks(n_tasks, |ti| {
+        let i0 = ti * rows_per;
+        let i1 = (i0 + rows_per).min(m);
+        // Safety: tasks own disjoint row ranges of `out`.
+        let orows = unsafe { view.range(i0 * nk, (i1 - i0) * nk) };
+        for i in i0..i1 {
+            let arow = &a.data[i * n..(i + 1) * n];
+            let orow = &mut orows[(i - i0) * nk..(i - i0 + 1) * nk];
+            for (o, &j) in orow.iter_mut().zip(kept) {
+                *o = arow[j as usize];
+            }
+        }
+    });
+    out
+}
+
+/// Scatter the columns of `src: [m, |kept|]` into a `[m, n]` tensor at
+/// the `kept` positions; dropped columns are the exact `+0.0` the dense
+/// masked accumulator produces for fully-masked columns.
+fn scatter_cols(src: &Tensor, kept: &[u32], n: usize) -> Tensor {
+    let m = src.shape[0];
+    let nk = kept.len();
+    let mut out = Tensor::zeros(&[m, n]);
+    let (rows_per, n_tasks) = partition(m, 2 * nk.max(1));
+    let view = SharedMut::new(&mut out.data);
+    par_tasks(n_tasks, |ti| {
+        let i0 = ti * rows_per;
+        let i1 = (i0 + rows_per).min(m);
+        // Safety: tasks own disjoint row ranges of `out`.
+        let orows = unsafe { view.range(i0 * n, (i1 - i0) * n) };
+        for i in i0..i1 {
+            let srow = &src.data[i * nk..(i + 1) * nk];
+            let orow = &mut orows[(i - i0) * n..(i - i0 + 1) * n];
+            for (&j, &v) in kept.iter().zip(srow) {
+                orow[j as usize] = v;
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::kernels::set_threads;
+    use crate::util::Pcg64;
+
+    fn assert_bits_eq(a: &Tensor, b: &Tensor, tag: &str) {
+        assert_eq!(a.shape, b.shape, "{tag}: shape");
+        for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(),
+                       "{tag}: element {i} differs: {x} vs {y}");
+        }
+    }
+
+    fn rand_mask(shape: &[usize], density: f64, rng: &mut Pcg64) -> Tensor {
+        let mut m = Tensor::zeros(shape);
+        for v in m.data.iter_mut() {
+            // fractional part of |N(0,1)| is a serviceable uniform for
+            // "roughly this density" test masks
+            let u = Tensor::randn(&[1], 1.0, rng).data[0];
+            *v = if (u.abs() % 1.0) < density as f32 { 1.0 } else { 0.0 };
+        }
+        m
+    }
+
+    fn nm_mask(k: usize, n: usize, keep: usize, g: usize,
+               rng: &mut Pcg64) -> Tensor {
+        let mut m = Tensor::zeros(&[k, n]);
+        for j in 0..n {
+            for gi in 0..k / g {
+                // pick `keep` distinct offsets pseudo-randomly
+                let mut offsets: Vec<usize> = (0..g).collect();
+                for s in (1..g).rev() {
+                    let r = Tensor::randn(&[1], 1.0, rng).data[0];
+                    let pick = (r.abs() * 1000.0) as usize % (s + 1);
+                    offsets.swap(s, pick);
+                }
+                for &off in &offsets[..keep] {
+                    m.data[(gi * g + off) * n + j] = 1.0;
+                }
+            }
+        }
+        m
+    }
+
+    /// The dense masked reference both products must match bitwise.
+    fn dense_ref(a: &Tensor, w: &Tensor, m: &Tensor) -> Tensor {
+        kernels::matmul(a, &kernels::mask_mul(w, m)).unwrap()
+    }
+
+    fn dense_ref_bt(a: &Tensor, w: &Tensor, m: &Tensor) -> Tensor {
+        kernels::matmul_a_bt(a, &kernels::mask_mul(w, m)).unwrap()
+    }
+
+    fn check_both(a_fwd: &Tensor, a_bwd: &Tensor, w: &Tensor, m: &Tensor,
+                  want_format: &str, tag: &str) {
+        let ew = EffWeight::from_masked_mode(w, m, SparseMode::Force);
+        assert_eq!(ew.format(), want_format, "{tag}: format");
+        assert_bits_eq(&ew.to_dense(), &kernels::mask_mul(w, m),
+                       &format!("{tag}: to_dense"));
+        assert_bits_eq(&ew.matmul(a_fwd).unwrap(),
+                       &dense_ref(a_fwd, w, m), &format!("{tag}: matmul"));
+        assert_bits_eq(&ew.matmul_bt(a_bwd).unwrap(),
+                       &dense_ref_bt(a_bwd, w, m),
+                       &format!("{tag}: matmul_bt"));
+    }
+
+    #[test]
+    fn unstructured_csr_bit_equal_to_dense_masked() {
+        let mut rng = Pcg64::seeded(41);
+        for &(t, k, n) in &[(1usize, 7usize, 5usize), (9, 33, 17),
+                            (67, 13, 31), (3, 130, 129)] {
+            let a = Tensor::randn(&[t, k], 1.0, &mut rng);
+            let g = Tensor::randn(&[t, n], 1.0, &mut rng);
+            let w = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let m = rand_mask(&[k, n], 0.3, &mut rng);
+            if m.count_nonzero() == m.numel() || m.count_nonzero() == 0 {
+                continue;
+            }
+            let ew = EffWeight::from_masked_mode(&w, &m, SparseMode::Force);
+            // random masks may accidentally be row/col structured at
+            // tiny sizes; only the bit-equality is load-bearing
+            assert_bits_eq(&ew.matmul(&a).unwrap(), &dense_ref(&a, &w, &m),
+                           &format!("csr {t}x{k}x{n}"));
+            assert_bits_eq(&ew.matmul_bt(&g).unwrap(),
+                           &dense_ref_bt(&g, &w, &m),
+                           &format!("csr bt {t}x{k}x{n}"));
+        }
+    }
+
+    #[test]
+    fn nm_panel_detected_and_bit_equal() {
+        let mut rng = Pcg64::seeded(42);
+        for &(keep, g) in &[(2usize, 4usize), (1, 4), (4, 8)] {
+            let (t, k, n) = (9usize, 32usize, 21usize);
+            let a = Tensor::randn(&[t, k], 1.0, &mut rng);
+            let gy = Tensor::randn(&[t, n], 1.0, &mut rng);
+            let w = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let m = nm_mask(k, n, keep, g, &mut rng);
+            check_both(&a, &gy, &w, &m, "nm", &format!("{keep}:{g}"));
+        }
+    }
+
+    #[test]
+    fn structured_cols_and_rows_bit_equal() {
+        let mut rng = Pcg64::seeded(43);
+        let (t, k, n) = (11usize, 24usize, 18usize);
+        let a = Tensor::randn(&[t, k], 1.0, &mut rng);
+        let gy = Tensor::randn(&[t, n], 1.0, &mut rng);
+        let w = Tensor::randn(&[k, n], 1.0, &mut rng);
+        // whole output columns zeroed (FLAP q/k/v/gate/up)
+        let mut mc = Tensor::ones(&[k, n]);
+        for j in [1usize, 4, 5, 17] {
+            for p in 0..k {
+                mc.data[p * n + j] = 0.0;
+            }
+        }
+        check_both(&a, &gy, &w, &mc, "cols", "cols");
+        // whole input rows zeroed (FLAP o/down)
+        let mut mr = Tensor::ones(&[k, n]);
+        for p in [0usize, 7, 23] {
+            for j in 0..n {
+                mr.data[p * n + j] = 0.0;
+            }
+        }
+        check_both(&a, &gy, &w, &mr, "rows", "rows");
+    }
+
+    #[test]
+    fn mask_density_edges_bit_equal() {
+        let mut rng = Pcg64::seeded(44);
+        let (t, k, n) = (6usize, 12usize, 10usize);
+        let a = Tensor::randn(&[t, k], 1.0, &mut rng);
+        let gy = Tensor::randn(&[t, n], 1.0, &mut rng);
+        let w = Tensor::randn(&[k, n], 1.0, &mut rng);
+        // 0% kept: all-zero mask (detected as Cols with no kept columns)
+        let m0 = Tensor::zeros(&[k, n]);
+        let e0 = EffWeight::from_masked_mode(&w, &m0, SparseMode::Force);
+        assert_bits_eq(&e0.matmul(&a).unwrap(), &dense_ref(&a, &w, &m0),
+                       "0% matmul");
+        assert_bits_eq(&e0.matmul_bt(&gy).unwrap(),
+                       &dense_ref_bt(&gy, &w, &m0), "0% bt");
+        // 100% kept: stays dense even under Force (nothing to exploit)
+        let m1 = Tensor::ones(&[k, n]);
+        let e1 = EffWeight::from_masked_mode(&w, &m1, SparseMode::Force);
+        assert_eq!(e1.format(), "dense");
+        assert_bits_eq(&e1.matmul(&a).unwrap(), &dense_ref(&a, &w, &m1),
+                       "100% matmul");
+        // single-nnz row: one kept entry in one row, rest zero
+        let mut ms = Tensor::zeros(&[k, n]);
+        ms.data[5 * n + 3] = 1.0;
+        let es = EffWeight::from_masked_mode(&w, &ms, SparseMode::Force);
+        assert_bits_eq(&es.matmul(&a).unwrap(), &dense_ref(&a, &w, &ms),
+                       "single-nnz matmul");
+        assert_bits_eq(&es.matmul_bt(&gy).unwrap(),
+                       &dense_ref_bt(&gy, &w, &ms), "single-nnz bt");
+    }
+
+    #[test]
+    fn dispatcher_honors_mode_and_threshold() {
+        let mut rng = Pcg64::seeded(45);
+        let w = Tensor::randn(&[16, 12], 1.0, &mut rng);
+        let mut m = Tensor::ones(&[16, 12]);
+        m.data[0] = 0.0; // density just below 1.0
+        // off → dense always
+        assert_eq!(EffWeight::from_masked_mode(&w, &m, SparseMode::Off)
+                       .format(), "dense");
+        // auto → dense above the threshold …
+        assert_eq!(EffWeight::from_masked_mode(&w, &m, SparseMode::Auto)
+                       .format(), "dense");
+        // … sparse below it
+        let msp = rand_mask(&[16, 12], 0.3, &mut rng);
+        let density = msp.count_nonzero() as f64 / msp.numel() as f64;
+        if density <= MAX_AUTO_DENSITY && msp.count_nonzero() > 0 {
+            assert_ne!(EffWeight::from_masked_mode(&w, &msp,
+                                                   SparseMode::Auto)
+                           .format(), "dense");
+        }
+        // force → sparse for any mask with a zero
+        assert_ne!(EffWeight::from_masked_mode(&w, &m, SparseMode::Force)
+                       .format(), "dense");
+        // nnz/density accounting
+        let ew = EffWeight::from_masked_mode(&w, &msp, SparseMode::Force);
+        assert_eq!(ew.nnz(), msp.count_nonzero());
+        assert_eq!(ew.dims(), (16, 12));
+    }
+
+    #[test]
+    fn sparse_products_bit_identical_across_thread_counts() {
+        let mut rng = Pcg64::seeded(46);
+        let (t, k, n) = (190usize, 65usize, 140usize);
+        let a = Tensor::randn(&[t, k], 1.0, &mut rng);
+        let gy = Tensor::randn(&[t, n], 1.0, &mut rng);
+        let w = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let m = rand_mask(&[k, n], 0.3, &mut rng);
+        let ew = EffWeight::from_masked_mode(&w, &m, SparseMode::Force);
+        let prev = set_threads(1);
+        let fwd1 = ew.matmul(&a).unwrap();
+        let bwd1 = ew.matmul_bt(&gy).unwrap();
+        for threads in [2usize, 3, 8] {
+            set_threads(threads);
+            assert_bits_eq(&ew.matmul(&a).unwrap(), &fwd1,
+                           &format!("fwd@{threads}"));
+            assert_bits_eq(&ew.matmul_bt(&gy).unwrap(), &bwd1,
+                           &format!("bwd@{threads}"));
+        }
+        set_threads(prev);
+        // and the dense masked path agrees with all of them
+        assert_bits_eq(&fwd1, &dense_ref(&a, &w, &m), "fwd vs dense");
+        assert_bits_eq(&bwd1, &dense_ref_bt(&gy, &w, &m), "bwd vs dense");
+    }
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for mode in [SparseMode::Off, SparseMode::Auto, SparseMode::Force] {
+            assert_eq!(SparseMode::parse(mode.as_str()), Some(mode));
+        }
+        assert_eq!(SparseMode::parse("bogus"), None);
+    }
+}

@@ -71,6 +71,7 @@ fn golden_record() -> RunRecord {
         recovery_label: "w.Ours".into(),
         ppl: 12.5,
         sparsity: 0.5,
+        layer_sparsity: Vec::new(),
         prune_secs: 1.5,
         ft_secs: 2.25,
         eval_secs: 0.25,
@@ -115,4 +116,12 @@ fn run_record_json_round_trips() {
     let mut bare = golden_record();
     bare.ebft_report = None;
     assert!(bare.to_json().opt("ebft").is_none());
+    // per-layer sparsity is emitted only when tracked, and round-trips
+    let mut layered = golden_record();
+    assert!(layered.to_json().opt("layer_sparsity").is_none());
+    layered.layer_sparsity = vec![0.5, 0.75];
+    let lj = layered.to_json();
+    assert!(lj.opt("layer_sparsity").is_some());
+    assert_eq!(RunRecord::from_json(&lj).unwrap().to_json().dump(),
+               lj.dump());
 }

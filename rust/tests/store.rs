@@ -42,6 +42,7 @@ fn sample_record(pruner: &str, recovery: &str, recovery_label: &str,
         recovery_label: recovery_label.into(),
         ppl: 12.5,
         sparsity: 0.5,
+        layer_sparsity: Vec::new(),
         prune_secs: 1.5,
         ft_secs: 2.25,
         eval_secs: 0.25,
