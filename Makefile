@@ -19,9 +19,13 @@
 #                       same for BENCH_baseline_reference.json — the
 #                       artifact-free reference-backend smoke cell
 #                       (synthetic tiny manifest, no Python needed).
+#   make bench-baseline-kernels
+#                       same for BENCH_kernels_baseline.json — the
+#                       per-kernel microbench rig (scalar vs SIMD ×
+#                       f32 vs bf16; std-only, no artifacts).
 
 .PHONY: test artifacts artifacts-tiny artifacts-small diff-test \
-        bench-baseline bench-baseline-ref
+        bench-baseline bench-baseline-ref bench-baseline-kernels
 
 test:
 	cargo build --release && cargo test -q
@@ -55,3 +59,11 @@ bench-baseline-ref:
 	    EBFT_BENCH_OUT=BENCH_baseline_reference.json \
 	    cargo bench --bench bench_fig2
 	@echo "BENCH_baseline_reference.json refreshed — review and commit it"
+
+# Per-kernel timings are host-sensitive: refresh from the same runner
+# class CI uses (or let the bench-regression job self-arm on main). The
+# rig's determinism hard-checks run regardless of the baseline state.
+bench-baseline-kernels:
+	EBFT_BENCH_OUT=BENCH_kernels_baseline.json \
+	    cargo run --release --example bench_kernels
+	@echo "BENCH_kernels_baseline.json refreshed — review and commit it"

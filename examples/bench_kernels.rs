@@ -1,0 +1,282 @@
+//! Per-kernel microbench + determinism rig — the CI bench-regression
+//! job's kernel gate (README §CI).
+//!
+//!   cargo run --release --example bench_kernels
+//!
+//! Times every host kernel at one representative shape, for each
+//! storage dtype (f32 inputs, and the same inputs rounded to bf16) on
+//! both the scalar path and the detected SIMD path: median of
+//! `EBFT_BENCH_REPS` (default 5) timed runs after one warmup. The
+//! payload lands in BENCH_kernels.json at the repo root (override:
+//! `EBFT_BENCH_OUT`); python/ci/compare_bench.py --kernels gates it
+//! per kernel against the committed BENCH_kernels_baseline.json.
+//!
+//! Before any timing, the rig hard-checks the kernel layer's
+//! determinism contract on every (kernel × dtype) cell — bit-identical
+//! outputs across thread counts (1 vs 4) and across the scalar ↔
+//! detected SIMD paths — and exits nonzero on the first violation, so
+//! CI fails even when the baseline is still null-seeded. On a host
+//! without SIMD both paths run scalar; the JSON records
+//! `simd_path: "scalar"` and the compare script skips the speedup gate.
+//!
+//! Everything here is std-only (no artifacts, no Python): inputs are
+//! seeded `Pcg64` tensors, the sparse cells build their formats through
+//! the real `EffWeight` dispatcher.
+
+use anyhow::{bail, Result};
+use ebft::bench_support::repo_root;
+use ebft::tensor::dtype::quantize_bf16;
+use ebft::tensor::kernels::{self, AdamHyper, SimdPath};
+use ebft::tensor::sparse::{EffWeight, SparseMode};
+use ebft::tensor::Tensor;
+use ebft::util::{Json, Pcg64};
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Matmul-family shape (M×K @ K×N): the ISSUE's reference point for
+/// the SIMD speedup gate.
+const M: usize = 256;
+const K: usize = 512;
+const N: usize = 1024;
+
+struct Inputs {
+    a: Tensor,      // [M, K]
+    at: Tensor,     // [K, M]
+    b: Tensor,      // [K, N]
+    bt: Tensor,     // [N, K]
+    gate: Tensor,   // [M, N]
+    up: Tensor,     // [M, N]
+    dh: Tensor,     // [M, N]
+    target: Tensor, // [M, N]
+    p: Tensor,      // [K, N]
+    g: Tensor,      // [K, N]
+    m: Tensor,      // [K, N]
+    v: Tensor,      // [K, N] (non-negative: Adam second moment)
+    mask: Tensor,   // [K, N] ~50% kept, unstructured
+    nm: EffWeight,  // 2:4 structured W⊙M of [K, N] (panel_axpy core)
+    csr: EffWeight, // unstructured ~50% W⊙M of [K, N] (gather_axpy core)
+}
+
+impl Inputs {
+    fn build(bf16: bool) -> Result<Inputs> {
+        let mut rng = Pcg64::seeded(17);
+        let mut t = |shape: &[usize]| {
+            let mut x = Tensor::randn(shape, 1.0, &mut rng);
+            if bf16 {
+                for v in x.data.iter_mut() {
+                    *v = quantize_bf16(*v);
+                }
+            }
+            x
+        };
+        let a = t(&[M, K]);
+        let at = kernels::transpose(&a)?;
+        let b = t(&[K, N]);
+        let bt = t(&[N, K]);
+        let gate = t(&[M, N]);
+        let up = t(&[M, N]);
+        let dh = t(&[M, N]);
+        let target = t(&[M, N]);
+        let p = t(&[K, N]);
+        let g = t(&[K, N]);
+        let m = t(&[K, N]);
+        let mut v = t(&[K, N]);
+        for x in v.data.iter_mut() {
+            *x = x.abs();
+        }
+        // unstructured ~50% mask (0/1 is bf16-exact, no quantization
+        // needed); also the mask_mul timing input
+        let mut mask = Tensor::zeros(&[K, N]);
+        for x in mask.data.iter_mut() {
+            *x = (rng.next_f32() < 0.5) as u32 as f32;
+        }
+        // 2:4 structured mask along k, kept offsets varying per output
+        // column so no full row/column zeroes out (the dispatcher must
+        // land on the N:M panel format, not rows/cols)
+        let mut nm_mask = Tensor::zeros(&[K, N]);
+        for j in 0..N {
+            let o = j % 3; // kept in-group offsets {o, o+1} ⊂ {0..3}
+            for gi in 0..K / 4 {
+                nm_mask.data[(4 * gi + o) * N + j] = 1.0;
+                nm_mask.data[(4 * gi + o + 1) * N + j] = 1.0;
+            }
+        }
+        // reuse the Adam param tensor as the sparse weight
+        let nm = EffWeight::from_masked_mode(&p, &nm_mask, SparseMode::Force);
+        let csr = EffWeight::from_masked_mode(&p, &mask, SparseMode::Force);
+        if nm.format() != "nm" || csr.format() != "csr" {
+            bail!("sparse dispatcher picked {}/{} (want nm/csr) — the \
+                   bench masks no longer exercise panel_axpy/gather_axpy",
+                  nm.format(), csr.format());
+        }
+        Ok(Inputs { a, at, b, bt, gate, up, dh, target,
+                    p, g, m, v, mask, nm, csr })
+    }
+}
+
+type Kernel = (&'static str, String, fn(&Inputs) -> Vec<f32>);
+
+/// Every timed kernel, returning its full output bits (flattened) so
+/// the determinism check can compare runs exactly.
+fn kernel_table() -> Vec<Kernel> {
+    let mmshape = format!("{M}x{K}x{N}");
+    let ewshape = format!("{M}x{N}");
+    let pshape = format!("{K}x{N}");
+    vec![
+        ("matmul", mmshape.clone(), |i| {
+            kernels::matmul(&i.a, &i.b).unwrap().data
+        }),
+        ("matmul_at_b", mmshape.clone(), |i| {
+            kernels::matmul_at_b(&i.at, &i.b).unwrap().data
+        }),
+        ("matmul_a_bt", mmshape.clone(), |i| {
+            kernels::matmul_a_bt(&i.a, &i.bt).unwrap().data
+        }),
+        ("gram", format!("{M}x{K}"), |i| {
+            kernels::gram(&i.a).unwrap().data
+        }),
+        ("silu_mul", ewshape.clone(), |i| {
+            kernels::silu_mul(&i.gate, &i.up).data
+        }),
+        ("silu_mul_bwd", ewshape.clone(), |i| {
+            let (dg, du) = kernels::silu_mul_bwd(&i.dh, &i.gate, &i.up);
+            let mut out = dg.data;
+            out.extend(du.data);
+            out
+        }),
+        ("adam_step", pshape.clone(), |i| {
+            let h = AdamHyper { beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+            let (p, m, v) =
+                kernels::adam_step(&i.p, &i.g, &i.m, &i.v, 3.0, 1e-3, h);
+            let mut out = p.data;
+            out.extend(m.data);
+            out.extend(v.data);
+            out
+        }),
+        ("recon_loss_grad", ewshape.clone(), |i| {
+            let (loss, dy) = kernels::recon_loss_grad(&i.gate, &i.target);
+            let mut out = vec![loss];
+            out.extend(dy.data);
+            out
+        }),
+        ("add_assign", pshape.clone(), |i| {
+            let mut acc = i.p.clone();
+            kernels::add_assign(&mut acc, &i.g);
+            acc.data
+        }),
+        ("mask_mul", pshape.clone(), |i| {
+            kernels::mask_mul(&i.p, &i.mask).data
+        }),
+        ("col_stats", ewshape, |i| {
+            let (sq, su) = kernels::col_stats(&i.gate);
+            let mut out = sq;
+            out.extend(su);
+            out
+        }),
+        ("panel_axpy", pshape.clone(), |i| {
+            i.nm.matmul(&i.a).unwrap().data
+        }),
+        ("gather_axpy", pshape, |i| {
+            i.csr.matmul_bt(&i.gate).unwrap().data
+        }),
+    ]
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], tag: &str) -> Result<()> {
+    if a.len() != b.len() {
+        bail!("{tag}: output lengths differ ({} vs {})", a.len(), b.len());
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            bail!("{tag}: element {i} differs: {x} vs {y} — the \
+                   determinism contract is broken");
+        }
+    }
+    Ok(())
+}
+
+/// Median of `reps` timed runs after one warmup (which also yields the
+/// reference output for the determinism checks).
+fn time_kernel(f: fn(&Inputs) -> Vec<f32>, inputs: &Inputs, reps: usize)
+               -> (f64, Vec<f32>) {
+    let reference = f(inputs);
+    let mut samples: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            std::hint::black_box(f(inputs));
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(f64::total_cmp);
+    (samples[reps / 2], reference)
+}
+
+fn main() -> Result<()> {
+    let reps = std::env::var("EBFT_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(5);
+    let detected = SimdPath::detected();
+    let timing_threads = kernels::threads();
+    println!("bench-kernels: simd path {} | {} timing threads | \
+              median of {reps}", detected.as_str(), timing_threads);
+
+    let mut entries: Vec<Json> = Vec::new();
+    for (dtype, bf16) in [("f32", false), ("bf16", true)] {
+        let inputs = Inputs::build(bf16)?;
+        for (name, shape, f) in kernel_table() {
+            // determinism first: scalar output is the golden reference;
+            // 1 vs 4 threads and scalar vs detected must agree bitwise
+            let prev_path = kernels::set_simd_path(SimdPath::Scalar);
+            let prev_threads = kernels::set_threads(1);
+            let golden = f(&inputs);
+            kernels::set_threads(4);
+            assert_bits_eq(&f(&inputs), &golden,
+                           &format!("{name}/{dtype} threads 1 vs 4"))?;
+            kernels::set_simd_path(detected);
+            assert_bits_eq(&f(&inputs), &golden,
+                           &format!("{name}/{dtype} scalar vs {}",
+                                    detected.as_str()))?;
+            kernels::set_threads(prev_threads);
+
+            // timing: both paths at the process thread target
+            kernels::set_simd_path(SimdPath::Scalar);
+            let (scalar_secs, _) = time_kernel(f, &inputs, reps);
+            kernels::set_simd_path(detected);
+            let (simd_secs, _) = time_kernel(f, &inputs, reps);
+            kernels::set_simd_path(prev_path);
+
+            for (path, secs) in [("scalar", scalar_secs),
+                                 (detected.as_str(), simd_secs)] {
+                let mut e = Json::obj();
+                e.set("kernel", Json::Str(name.to_string()));
+                e.set("shape", Json::Str(shape.clone()));
+                e.set("dtype", Json::Str(dtype.to_string()));
+                e.set("path", Json::Str(path.to_string()));
+                e.set("secs", Json::Num(secs));
+                entries.push(e);
+            }
+            println!("bench-kernels: {name:<16} {dtype:<4} {shape:<12} \
+                      scalar {scalar_secs:.6}s  {} {simd_secs:.6}s  \
+                      speedup {:.2}x", detected.as_str(),
+                     scalar_secs / simd_secs.max(1e-12));
+        }
+    }
+    println!("bench-kernels: determinism OK — every kernel bit-identical \
+              across 1/4 threads and scalar/{} at both dtypes",
+             detected.as_str());
+
+    let mut j = Json::obj();
+    j.set("simd_path", Json::Str(detected.as_str().to_string()));
+    j.set("threads", Json::Num(timing_threads as f64));
+    j.set("reps", Json::Num(reps as f64));
+    j.set("kernels", Json::Arr(entries));
+    let path = match std::env::var("EBFT_BENCH_OUT") {
+        Ok(p) => PathBuf::from(p),
+        Err(_) => repo_root().join("BENCH_kernels.json"),
+    };
+    j.write_file(&path)?;
+    println!("[kernel bench payload written to {}]", path.display());
+    Ok(())
+}

@@ -1,18 +1,35 @@
 #!/usr/bin/env python3
-"""Bench-regression gate: compare a PR's BENCH_pr.json (written by
-`EBFT_SMOKE=1 cargo bench --bench bench_fig2`) against the committed
-BENCH_baseline.json.
+"""Bench-regression gates.
 
-Fails when quality regresses (perplexity up by more than --ppl-tol) or
-the cell got slower (wall-clock up by more than --time-tol). Baseline
-metrics set to null are skipped with a notice — that is how the baseline
-is seeded before real CI numbers exist. To refresh the baseline, download
-the `bench-regression` workflow artifact from a trusted run and commit it
-as BENCH_baseline.json.
+Default (cell) mode compares a PR's BENCH_pr.json (written by
+`EBFT_SMOKE=1 cargo bench --bench bench_fig2`) against the committed
+BENCH_baseline.json: fails when quality regresses (perplexity up by
+more than --ppl-tol) or the cell got slower (wall-clock up by more than
+--time-tol).
+
+--kernels mode compares a BENCH_kernels.json (written by
+`cargo run --release --example bench_kernels`) against the committed
+BENCH_kernels_baseline.json, per kernel × shape × dtype × SIMD path:
+every entry slower than baseline by more than --time-tol fails, ALL
+failing kernels are reported (not just the first), and on a
+SIMD-capable host the f32 matmul SIMD path must beat scalar by
+--min-simd-speedup (skipped when the payload says simd_path=scalar).
+--summary FILE additionally renders the kernel × dtype table with
+speedup columns as markdown (append mode — point it at
+$GITHUB_STEP_SUMMARY).
+
+In both modes, baseline metrics set to null are skipped with a notice —
+that is how a baseline is seeded before real CI numbers exist. To
+refresh a baseline, download the matching workflow artifact from a
+trusted run and commit it, or run the `make bench-baseline*` target
+(see README §CI).
 
 Usage:
     python3 python/ci/compare_bench.py BENCH_baseline.json BENCH_pr.json \
         [--ppl-tol 0.02] [--time-tol 0.25]
+    python3 python/ci/compare_bench.py --kernels \
+        BENCH_kernels_baseline.json BENCH_kernels.json \
+        [--time-tol 0.5] [--min-simd-speedup 1.5] [--summary FILE]
 """
 
 import argparse
@@ -30,16 +47,16 @@ def load(path):
         sys.exit(f"FAIL: {path} is not valid JSON: {e}")
 
 
-def main():
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("baseline")
-    ap.add_argument("candidate")
-    ap.add_argument("--ppl-tol", type=float, default=0.02,
-                    help="max relative perplexity regression (default 2%%)")
-    ap.add_argument("--time-tol", type=float, default=0.25,
-                    help="max relative wall-clock regression (default 25%%)")
-    args = ap.parse_args()
+def finish(failures):
+    if failures:
+        print()
+        for f in failures:
+            print(f"FAIL: {f}")
+        sys.exit(1)
+    print("bench-regression gate passed")
 
+
+def cell_mode(args):
     base = load(args.baseline)
     cand = load(args.candidate)
 
@@ -78,12 +95,131 @@ def main():
         if metric in cand:
             print(f"info  {metric}: {cand[metric]:.4f}s")
 
-    if failures:
-        print()
-        for f in failures:
-            print(f"FAIL: {f}")
-        sys.exit(1)
-    print("bench-regression gate passed")
+    finish(failures)
+
+
+def entry_key(e):
+    return f'{e["kernel"]}|{e["shape"]}|{e["dtype"]}|{e["path"]}'
+
+
+def kernels_mode(args):
+    base = load(args.baseline)
+    cand = load(args.candidate)
+    entries = cand.get("kernels")
+    if not entries:
+        sys.exit(f"FAIL: {args.candidate} carries no kernel entries — "
+                 "did bench_kernels run?")
+    cmap = {entry_key(e): e for e in entries}
+    simd = cand.get("simd_path") or "scalar"
+    failures = []
+
+    # 1. per-kernel wall-clock gate against the committed baseline —
+    # every failing kernel is reported, not just the first
+    base_entries = base.get("kernels")
+    if base_entries is None:
+        print("SKIP  per-kernel timings: baseline is null-seeded — "
+              f"candidate measured {len(cmap)} entries")
+        bmap = {}
+    else:
+        bmap = {entry_key(e): e for e in base_entries}
+        for key in sorted(cmap):
+            c = cmap[key]["secs"]
+            b = bmap.get(key, {}).get("secs")
+            if b is None:
+                print(f"info  {key}: no baseline entry — measured "
+                      f"{c:.6f}s (refresh the baseline to gate it)")
+                continue
+            limit = b * (1.0 + args.time_tol)
+            delta = (c - b) / b if b else float("inf")
+            verdict = "FAIL" if c > limit else "ok"
+            print(f"{verdict:>4}  {key}: baseline {b:.6f}s → candidate "
+                  f"{c:.6f}s ({delta:+.1%}, tolerance +{args.time_tol:.0%})")
+            if c > limit:
+                failures.append(
+                    f"{key} slowed {delta:+.1%} (limit "
+                    f"+{args.time_tol:.0%}): {b:.6f}s → {c:.6f}s")
+
+    # 2. SIMD speedup hard gate: needs no baseline, only the candidate's
+    # own scalar/SIMD pair — skipped on scalar-only hosts
+    if simd == "scalar":
+        print("SKIP  SIMD speedup gate: host has no SIMD path "
+              "(simd_path=scalar)")
+    else:
+        sc = next((e for e in entries if e["kernel"] == "matmul"
+                   and e["dtype"] == "f32" and e["path"] == "scalar"),
+                  None)
+        sv = next((e for e in entries if e["kernel"] == "matmul"
+                   and e["dtype"] == "f32" and e["path"] == simd), None)
+        if sc is None or sv is None:
+            failures.append("f32 matmul scalar/SIMD pair missing from "
+                            "candidate payload")
+        else:
+            speedup = sc["secs"] / max(sv["secs"], 1e-12)
+            verdict = "ok" if speedup >= args.min_simd_speedup else "FAIL"
+            print(f"{verdict:>4}  f32 matmul {sc['shape']} SIMD speedup: "
+                  f"{speedup:.2f}× ({simd} vs scalar, floor "
+                  f"{args.min_simd_speedup:.2f}×)")
+            if speedup < args.min_simd_speedup:
+                failures.append(
+                    f"f32 matmul SIMD speedup {speedup:.2f}× below the "
+                    f"{args.min_simd_speedup:.2f}× floor "
+                    f"({sc['secs']:.6f}s scalar vs {sv['secs']:.6f}s "
+                    f"{simd})")
+
+    # 3. kernel × dtype markdown table (speedup + baseline delta)
+    if args.summary:
+        with open(args.summary, "a") as out:
+            render_table(out, entries, bmap, simd,
+                         cand.get("threads"), cand.get("reps"))
+
+    finish(failures)
+
+
+def render_table(out, entries, bmap, simd, threads, reps):
+    def row_key(e):
+        return (e["kernel"], e["shape"], e["dtype"])
+
+    rows = {}
+    for e in entries:
+        rows.setdefault(row_key(e), {})[e["path"]] = e
+    print("### kernel microbench (median secs, "
+          f"{threads} threads × {reps} reps)", file=out)
+    print(file=out)
+    print(f"| kernel | shape | dtype | scalar | {simd} | speedup "
+          "| Δ vs baseline |", file=out)
+    print("| --- | --- | --- | --- | --- | --- | --- |", file=out)
+    for (kernel, shape, dtype), paths in rows.items():
+        sc = paths.get("scalar")
+        sv = paths.get(simd) if simd != "scalar" else sc
+        if sc is None or sv is None:
+            continue
+        speedup = sc["secs"] / max(sv["secs"], 1e-12)
+        b = bmap.get(entry_key(sv), {}).get("secs")
+        delta = "—" if b is None else f"{(sv['secs'] - b) / b:+.1%}"
+        print(f"| {kernel} | {shape} | {dtype} | {sc['secs']:.6f}s "
+              f"| {sv['secs']:.6f}s | {speedup:.2f}× | {delta} |",
+              file=out)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("candidate")
+    ap.add_argument("--kernels", action="store_true",
+                    help="per-kernel microbench mode (BENCH_kernels.json)")
+    ap.add_argument("--ppl-tol", type=float, default=0.02,
+                    help="max relative perplexity regression (default 2%%)")
+    ap.add_argument("--time-tol", type=float, default=0.25,
+                    help="max relative wall-clock regression (default 25%%)")
+    ap.add_argument("--min-simd-speedup", type=float, default=1.5,
+                    help="f32 matmul SIMD-over-scalar floor (kernels mode)")
+    ap.add_argument("--summary", default=None,
+                    help="append the kernels-mode markdown table here")
+    args = ap.parse_args()
+    if args.kernels:
+        kernels_mode(args)
+    else:
+        cell_mode(args)
 
 
 if __name__ == "__main__":

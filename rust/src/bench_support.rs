@@ -13,7 +13,8 @@
 //! under `runs/store/` without re-running completed cells or re-pruning
 //! in-flight checkpoints. `EBFT_THREADS=N` bounds the intra-op kernel
 //! threads (divided across the workers; results are bit-identical at
-//! every setting).
+//! every setting). `EBFT_DTYPE=bf16` switches storage precision — unlike
+//! the thread knob it moves numbers, so it joins the store fingerprint.
 
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
@@ -178,6 +179,7 @@ impl BenchEnv {
             dense_tag: self.dense_tag.clone(),
             backend: self.session.backend_kind(),
             threads: threads(),
+            dtype: crate::tensor::dtype::active_dtype(),
         }
     }
 

@@ -39,6 +39,7 @@ use crate::model::ParamStore;
 use crate::pruning::Pattern;
 use crate::runtime::{BackendKind, Session};
 use crate::tensor::kernels;
+use crate::tensor::Dtype;
 
 use super::grid::{Grid, GridResult};
 use super::pipeline::{Pipeline, PipelineBuilder, PrunedModel, RunRecord};
@@ -73,6 +74,10 @@ pub struct SweepEnv<'a> {
     /// layer's determinism contract makes thread counts invisible to
     /// every recorded number.
     pub threads: usize,
+    /// Storage dtype every worker runs under. Unlike `threads` this IS
+    /// part of the store fingerprint: bf16 storage rounds every param
+    /// and activation.
+    pub dtype: Dtype,
 }
 
 impl SweepEnv<'_> {
@@ -88,7 +93,7 @@ impl SweepEnv<'_> {
             .unwrap_or_else(|| self.artifact_dir.display().to_string());
         config_fingerprint(&dims, &self.dense_tag, self.corpus.seed,
                            &self.ft, self.eval_seqs, &self.impl_name,
-                           self.eval_split, self.backend)
+                           self.eval_split, self.backend, self.dtype)
     }
 }
 

@@ -36,6 +36,7 @@ use crate::masks::MaskSet;
 use crate::model::{Manifest, ParamStore};
 use crate::pruning::Pattern;
 use crate::runtime::BackendKind;
+use crate::tensor::Dtype;
 use crate::util::{atomic_write, Json};
 
 use super::pipeline::{PrunedModel, RunRecord};
@@ -58,21 +59,23 @@ pub fn fnv1a64(s: &str) -> u64 {
 /// "ckpt:runs/foo.ebft"); `corpus_seed` is the Markov-corpus seed, which
 /// moves every calibration and eval batch; `backend` joins because the
 /// two execution substrates agree only to float tolerance, so their
-/// records must never shadow each other.
+/// records must never shadow each other; `dtype` joins because bf16
+/// storage rounds every param and activation (unlike `--threads` or the
+/// SIMD path, which never move a bit).
 #[allow(clippy::too_many_arguments)]
 pub fn config_fingerprint(dims_name: &str, dense_tag: &str,
                           corpus_seed: u64, ft: &FtConfig,
                           eval_seqs: usize, impl_name: &str,
-                          eval_split: Split, backend: BackendKind)
-                          -> String {
+                          eval_split: Split, backend: BackendKind,
+                          dtype: Dtype) -> String {
     let canon = format!(
         "dims={dims_name};dense={dense_tag};corpus={corpus_seed};\
-         impl={impl_name};backend={};eval_seqs={eval_seqs};\
+         impl={impl_name};backend={};dtype={};eval_seqs={eval_seqs};\
          eval_split={eval_split:?};\
          ft=epochs:{},lr:{},tol:{},window:{},calib:{},cache:{},lora:{}",
-        backend.as_str(), ft.epochs, ft.lr, ft.converge_tol,
-        ft.converge_window, ft.calib_seqs, ft.cache_budget_bytes,
-        ft.lora_steps);
+        backend.as_str(), dtype.as_str(), ft.epochs, ft.lr,
+        ft.converge_tol, ft.converge_window, ft.calib_seqs,
+        ft.cache_budget_bytes, ft.lora_steps);
     format!("{:016x}", fnv1a64(&canon))
 }
 

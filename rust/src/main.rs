@@ -27,7 +27,11 @@
 //! `EBFT_SPARSE` or auto) picks whether masked weights execute through
 //! the compressed sparse formats. Neither ever changes results — the
 //! kernel layer is bit-identical across thread counts, and every sparse
-//! path is bit-equal to the dense masked one.
+//! path is bit-equal to the dense masked one. `--dtype f32|bf16`
+//! (default `EBFT_DTYPE` or f32) sets the storage precision: bf16
+//! rounds every stored param/activation (compute stays f32), halves
+//! compact checkpoint payloads, and — unlike the other knobs — joins
+//! the run-store fingerprint because it moves recorded numbers.
 //!
 //! Examples:
 //!   ebft pretrain --config small --steps 300
@@ -119,6 +123,14 @@ fn run() -> Result<()> {
             .context("--sparse-mode expects off|auto|force")?;
         ebft::tensor::sparse::set_sparse_mode(mode);
     }
+    // storage dtype: --dtype beats EBFT_DTYPE beats f32. Unlike the two
+    // knobs above this DOES change results (bf16 rounds every stored
+    // param/activation), so it joins the run-store fingerprint.
+    if let Some(d) = args.get("dtype") {
+        let dt = ebft::tensor::Dtype::parse(d)
+            .context("--dtype expects f32|bf16")?;
+        ebft::tensor::dtype::set_dtype(dt);
+    }
     match args.subcommand.as_str() {
         "pretrain" => cmd_pretrain(&args),
         "prune" => cmd_prune(&args),
@@ -144,7 +156,7 @@ fn print_usage() {
     println!("ebft — block-wise fine-tuning for sparse LLMs (reproduction)");
     println!();
     println!("usage: ebft <pretrain|prune|finetune|pipeline|grid|flap|eval|zeroshot|generate|serve-bench|compress|info> [--options]");
-    println!("common options: --config tiny|small|base  --artifacts DIR  --runs DIR  --threads N  --sparse-mode off|auto|force");
+    println!("common options: --config tiny|small|base  --artifacts DIR  --runs DIR  --threads N  --sparse-mode off|auto|force  --dtype f32|bf16");
     println!("compress options: --in FILE.ebft  --out FILE.ebft  [--dense]");
     println!("sweep options (pipeline/grid): --jobs N  --resume");
     println!("serving options (generate/serve-bench): --synthetic  --max-new N  --top-k K --temperature T");
@@ -259,6 +271,7 @@ fn sweep_env<'a>(args: &Args, paths: &Paths, corpus: &'a MarkovCorpus,
         dense_tag: dense_tag(args)?,
         backend,
         threads: args.get_usize("threads", 0)?,
+        dtype: ebft::tensor::dtype::active_dtype(),
     })
 }
 

@@ -20,11 +20,23 @@
 //!                 values f32 × nnz in ascending index order
 //!     3 binary  — occupancy bytes only; every set bit decodes to 1.0
 //!                 (the natural encoding for 0/1 pruning masks)
-//! [`save_compact`] picks the smallest encoding per tensor, so dense
-//! tensors cost one extra word and sparse ones shrink with sparsity. A
-//! value is "zero" only when its bit pattern is +0.0 (`to_bits() == 0`):
-//! -0.0, denormals and NaNs are kept verbatim, so both versions
-//! round-trip every tensor bit-exactly. [`load`] accepts both versions.
+//!     4 dense-bf16  — bf16 (high half of f32) × numel
+//!     5 index-bf16  — nnz u32, indices u32 × nnz, bf16 values × nnz
+//!     6 bitmap-bf16 — occupancy bytes, then bf16 values × nnz
+//! The bf16 encodings are value-driven, not flag-driven: a tensor gets
+//! one only when **every** element is exactly bf16-representable (the
+//! low 16 mantissa bits are zero), in which case storing the high half
+//! loses nothing and the round-trip stays bit-exact. Under
+//! `--dtype bf16` all stored values are quantized at the storage
+//! boundaries, so compact saves automatically land on encs 4–6 at half
+//! the f32 payload size; under f32 a tensor that happens to be
+//! bf16-clean gets the same benefit for free.
+//! [`save_compact`] picks the smallest applicable encoding per tensor,
+//! so dense tensors cost one extra word and sparse ones shrink with
+//! sparsity. A value is "zero" only when its bit pattern is +0.0
+//! (`to_bits() == 0`): -0.0, denormals and NaNs are kept verbatim, so
+//! both versions round-trip every tensor bit-exactly. [`load`] accepts
+//! both versions.
 //!
 //! The format is order-preserving: tensors round-trip in the exact order
 //! they were written (the canonical parameter order matters downstream).
@@ -33,6 +45,7 @@ use anyhow::{bail, Context, Result};
 use std::io::{BufReader, Read, Write};
 use std::path::Path;
 
+use crate::tensor::dtype::{bf16_to_f32, f32_to_bf16, is_bf16_exact};
 use crate::tensor::Tensor;
 
 const MAGIC: &[u8; 8] = b"EBFTCKPT";
@@ -43,6 +56,9 @@ const ENC_DENSE: u32 = 0;
 const ENC_INDEX: u32 = 1;
 const ENC_BITMAP: u32 = 2;
 const ENC_BINARY: u32 = 3;
+const ENC_DENSE_BF16: u32 = 4;
+const ENC_INDEX_BF16: u32 = 5;
+const ENC_BITMAP_BF16: u32 = 6;
 
 /// The compact encodings' nonzero criterion: exact bit pattern of +0.0.
 /// Anything else (including -0.0 and NaN payloads) is stored verbatim,
@@ -117,43 +133,60 @@ fn write_compact_payload<W: Write>(w: &mut W, t: &Tensor)
     let ones_bits = 1.0f32.to_bits();
     let all_ones = t.data.iter()
         .all(|v| !is_nz(*v) || v.to_bits() == ones_bits);
+    // bf16 payloads apply only when every value survives the 16-bit
+    // truncation bit-exactly — always true under `--dtype bf16`
+    let all_bf16 = t.data.iter().all(|v| is_bf16_exact(*v));
     let bm_bytes = numel.div_ceil(8);
-    // payload sizes per encoding (the enc word itself is common)
-    let sz_dense = 4 * numel;
-    let sz_index = 4 + 8 * nnz;
-    let sz_bitmap = bm_bytes + 4 * nnz;
-    let sz_binary = if all_ones { bm_bytes } else { usize::MAX };
-    let enc = if sz_binary <= sz_dense && sz_binary <= sz_index
-        && sz_binary <= sz_bitmap
-    {
-        ENC_BINARY
-    } else if sz_index < sz_dense && sz_index <= sz_bitmap {
-        ENC_INDEX
-    } else if sz_bitmap < sz_dense {
-        ENC_BITMAP
-    } else {
-        ENC_DENSE
-    };
+    const NA: usize = usize::MAX;
+    // payload sizes per encoding (the enc word itself is common);
+    // candidates in tie-break preference order, first-smallest wins —
+    // binary beats everything at equal size, and within a width the
+    // dense/index/bitmap ties resolve exactly as the pre-bf16 cascade
+    // did (dense on a dense/index or dense/bitmap tie, index on an
+    // index/bitmap tie)
+    let candidates = [
+        (if all_ones { bm_bytes } else { NA }, ENC_BINARY),
+        (if all_bf16 { 2 * numel } else { NA }, ENC_DENSE_BF16),
+        (if all_bf16 { 4 + 6 * nnz } else { NA }, ENC_INDEX_BF16),
+        (if all_bf16 { bm_bytes + 2 * nnz } else { NA }, ENC_BITMAP_BF16),
+        (4 * numel, ENC_DENSE),
+        (4 + 8 * nnz, ENC_INDEX),
+        (bm_bytes + 4 * nnz, ENC_BITMAP),
+    ];
+    let enc = candidates
+        .iter()
+        .min_by_key(|(sz, _)| *sz)
+        .map(|&(_, e)| e)
+        .unwrap_or(ENC_DENSE);
     w.write_all(&enc.to_le_bytes())?;
     match enc {
         ENC_DENSE => write_f32s(w, &t.data)?,
-        ENC_INDEX => {
+        ENC_DENSE_BF16 => write_bf16s(w, t.data.iter().copied())?,
+        ENC_INDEX | ENC_INDEX_BF16 => {
             w.write_all(&(nnz as u32).to_le_bytes())?;
             for (i, v) in t.data.iter().enumerate() {
                 if is_nz(*v) {
                     w.write_all(&(i as u32).to_le_bytes())?;
                 }
             }
-            for v in t.data.iter().filter(|v| is_nz(**v)) {
-                w.write_all(&v.to_le_bytes())?;
+            let kept = t.data.iter().copied().filter(|v| is_nz(*v));
+            if enc == ENC_INDEX {
+                for v in kept {
+                    w.write_all(&v.to_le_bytes())?;
+                }
+            } else {
+                write_bf16s(w, kept)?;
             }
         }
         _ => {
             write_bitmap(w, &t.data)?;
+            let kept = t.data.iter().copied().filter(|v| is_nz(*v));
             if enc == ENC_BITMAP {
-                for v in t.data.iter().filter(|v| is_nz(**v)) {
+                for v in kept {
                     w.write_all(&v.to_le_bytes())?;
                 }
+            } else if enc == ENC_BITMAP_BF16 {
+                write_bf16s(w, kept)?;
             }
         }
     }
@@ -166,6 +199,20 @@ fn write_f32s<W: Write>(w: &mut W, data: &[f32]) -> std::io::Result<()> {
                                    data.len() * 4)
     };
     w.write_all(bytes)
+}
+
+/// Stream values as bf16 (the high half of each f32's bit pattern; the
+/// writer only picks a bf16 encoding when the low half is all-zero, so
+/// nothing is lost).
+fn write_bf16s<W, I>(w: &mut W, vals: I) -> std::io::Result<()>
+where
+    W: Write,
+    I: Iterator<Item = f32>,
+{
+    for v in vals {
+        w.write_all(&f32_to_bf16(v).to_le_bytes())?;
+    }
+    Ok(())
 }
 
 /// Occupancy bitmap, LSB-first within each byte; trailing bits of the
@@ -242,7 +289,8 @@ fn read_compact_payload<R: Read>(r: &mut R, numel: usize)
     let enc = read_u32(r)?;
     match enc {
         ENC_DENSE => read_f32s(r, numel),
-        ENC_INDEX => {
+        ENC_DENSE_BF16 => read_bf16s(r, numel),
+        ENC_INDEX | ENC_INDEX_BF16 => {
             let nnz = read_u32(r)? as usize;
             if nnz > numel {
                 bail!("corrupt checkpoint: nnz {nnz} exceeds numel {numel}");
@@ -258,14 +306,18 @@ fn read_compact_payload<R: Read>(r: &mut R, numel: usize)
                 prev = Some(i);
                 idx.push(i);
             }
-            let vals = read_f32s(r, nnz)?;
+            let vals = if enc == ENC_INDEX {
+                read_f32s(r, nnz)?
+            } else {
+                read_bf16s(r, nnz)?
+            };
             let mut data = vec![0f32; numel];
             for (i, v) in idx.into_iter().zip(vals) {
                 data[i] = v;
             }
             Ok(data)
         }
-        ENC_BITMAP | ENC_BINARY => {
+        ENC_BITMAP | ENC_BINARY | ENC_BITMAP_BF16 => {
             let mut bm = vec![0u8; numel.div_ceil(8)];
             r.read_exact(&mut bm)?;
             let mut idx = Vec::new();
@@ -287,7 +339,11 @@ fn read_compact_payload<R: Read>(r: &mut R, numel: usize)
                     data[i] = 1.0;
                 }
             } else {
-                let vals = read_f32s(r, idx.len())?;
+                let vals = if enc == ENC_BITMAP {
+                    read_f32s(r, idx.len())?
+                } else {
+                    read_bf16s(r, idx.len())?
+                };
                 for (i, v) in idx.into_iter().zip(vals) {
                     data[i] = v;
                 }
@@ -296,6 +352,15 @@ fn read_compact_payload<R: Read>(r: &mut R, numel: usize)
         }
         other => bail!("corrupt checkpoint: unknown encoding {other}"),
     }
+}
+
+fn read_bf16s<R: Read>(r: &mut R, n: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 2];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(2)
+        .map(|c| bf16_to_f32(u16::from_le_bytes([c[0], c[1]])))
+        .collect())
 }
 
 fn read_u32<R: Read>(r: &mut R) -> Result<u32> {

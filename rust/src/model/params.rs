@@ -6,6 +6,7 @@ use std::path::Path;
 
 use super::checkpoint;
 use super::manifest::{Manifest, N_BLOCK_PARAMS};
+use crate::tensor::dtype;
 use crate::tensor::Tensor;
 
 #[derive(Clone, Debug)]
@@ -32,7 +33,9 @@ impl ParamStore {
     }
 
     /// Load the AOT-exported init weights (`init_params.bin`: raw f32 LE in
-    /// canonical order, shapes from the manifest).
+    /// canonical order, shapes from the manifest). Params cross a storage
+    /// boundary here, so under `--dtype bf16` they are quantized on the
+    /// way in (no-op at f32).
     pub fn from_init_bin(manifest: &Manifest) -> Result<Self> {
         let path = manifest.dir.join("init_params.bin");
         let bytes = std::fs::read(&path)
@@ -54,6 +57,7 @@ impl ParamStore {
                 data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
             }
             off += 4 * n;
+            dtype::quantize_storage(&mut data);
             tensors.push(Tensor::from_vec(shape, data));
         }
         Self::new(manifest.param_names.clone(), tensors)
@@ -137,6 +141,10 @@ impl ParamStore {
             .collect()
     }
 
+    /// Load a checkpoint, validating names and shapes against the
+    /// manifest. Like [`Self::from_init_bin`] this is a storage
+    /// boundary: under `--dtype bf16` the loaded tensors are quantized
+    /// (a no-op when the file already holds bf16 payloads).
     pub fn load(path: &Path, manifest: &Manifest) -> Result<Self> {
         let entries = checkpoint::load(path)?;
         let names: Vec<String> = entries.iter().map(|(n, _)| n.clone())
@@ -148,8 +156,11 @@ impl ParamStore {
                   names.iter().zip(&manifest.param_names)
                       .find(|(a, b)| a != b));
         }
-        let tensors: Vec<Tensor> =
+        let mut tensors: Vec<Tensor> =
             entries.into_iter().map(|(_, t)| t).collect();
+        for t in tensors.iter_mut() {
+            dtype::quantize_tensor(t);
+        }
         for (t, s) in tensors.iter().zip(&manifest.param_shapes) {
             if &t.shape != s {
                 bail!("checkpoint tensor shape mismatch: {:?} vs {:?}",

@@ -26,6 +26,7 @@ use super::backend::{Backend, BackendKind};
 use super::buffer::DeviceBuffer;
 use crate::model::manifest::{ArtifactSpec, Manifest, N_BLOCK_LINEARS,
                              N_BLOCK_PARAMS};
+use crate::tensor::dtype;
 use crate::tensor::sparse::EffWeight;
 use crate::tensor::{kernels, Tensor};
 
@@ -101,20 +102,36 @@ impl Backend for ReferenceBackend {
 }
 
 /// Tag the interpreter's flat f32 outputs with the manifest output specs.
+///
+/// This is also the activation/param **storage boundary** of the dtype
+/// axis: under `--dtype bf16` every artifact output is quantized here —
+/// symmetrically for the batched and decode paths, which is what keeps
+/// greedy decode bit-identical to the full forward at either dtype. The
+/// one exemption is `block_decode`'s k/v cache outputs (indices 1 and
+/// 2): KV caches are device-resident scratch that the batched
+/// `block_fwd` keeps internal in f32, so quantizing only the decode
+/// side's copy would break that equivalence.
 fn wrap_outputs(name: &str, spec: &ArtifactSpec, outs: Vec<Vec<f32>>)
                 -> Result<Vec<DeviceBuffer>> {
     if outs.len() != spec.outputs.len() {
         bail!("artifact {name}: interpreter produced {} outputs, manifest \
                says {}", outs.len(), spec.outputs.len());
     }
+    let kv_cache_output = |i: usize| {
+        base_name(name) == "block_decode" && (i == 1 || i == 2)
+    };
     outs.into_iter()
         .zip(&spec.outputs)
-        .map(|(data, os)| {
+        .enumerate()
+        .map(|(i, (mut data, os))| {
             // the interpreter produces f32 everywhere; make that contract
             // explicit instead of mislabeling a non-f32 output spec
             if os.dtype != "f32" {
                 bail!("artifact {name} output '{}': reference backend only \
                        produces f32, manifest says {}", os.name, os.dtype);
+            }
+            if !kv_cache_output(i) {
+                dtype::quantize_storage(&mut data);
             }
             DeviceBuffer::from_host_f32(&os.shape, data)
                 .with_context(|| format!("artifact {name} output '{}'",

@@ -9,6 +9,7 @@ use std::sync::{Arc, Mutex, PoisonError};
 use crate::ebft::lora;
 use crate::masks::MaskSet;
 use crate::model::{Manifest, ParamStore};
+use crate::tensor::dtype;
 use crate::tensor::Tensor;
 
 /// Reserved tenant name that serves the shared pruned base unmodified.
@@ -123,8 +124,14 @@ impl AdapterRegistry {
         if let Some(m) = self.lock_merged().get(tenant) {
             return Ok((m.clone(), self.dense_masks.clone()));
         }
-        let merged = Arc::new(lora::merge_manifest(
-            &self.manifest, &self.base, &self.masks, adapters)?);
+        let mut store = lora::merge_manifest(
+            &self.manifest, &self.base, &self.masks, adapters)?;
+        // merged weights are a fresh param storage surface: under
+        // `--dtype bf16` they are quantized like any loaded checkpoint
+        for t in store.tensors.iter_mut() {
+            dtype::quantize_tensor(t);
+        }
+        let merged = Arc::new(store);
         self.lock_merged().insert(tenant.to_string(), merged.clone());
         Ok((merged, self.dense_masks.clone()))
     }

@@ -1,0 +1,210 @@
+//! Storage dtype policy: f32 or bf16-in-f32.
+//!
+//! `Dtype` is a **storage precision** axis, not a compute one: kernels
+//! always accumulate in f32 (DESIGN.md §Kernels), and in-memory tensors
+//! stay `Vec<f32>` at either setting. Under [`Dtype::Bf16`] every value
+//! that crosses a *storage* boundary — params loaded from
+//! `init_params.bin` or a checkpoint, activations leaving a reference
+//! artifact, merged serving tenants — is rounded to the nearest
+//! bf16-representable f32 (round-to-nearest-even on the mantissa's low
+//! 16 bits). Because the values are then exactly representable in 16
+//! bits, `.ebft` v2 compact checkpoints store them as raw bf16 payloads
+//! (checkpoint.rs enc codes 4–6) at half the f32 payload size, and the
+//! round-trip stays bit-exact.
+//!
+//! The active dtype is process-global and once-resolved, exactly like
+//! `sparse::SparseMode`: CLI `--dtype` / env `EBFT_DTYPE` / default
+//! `F32`, with [`set_dtype`] returning the previous value for scoped
+//! overrides in tests and benches. Quantization is elementwise and
+//! deterministic, so the bit-identical-across-thread-counts contract
+//! holds unchanged at each dtype — but the dtype **does** move every
+//! recorded number, so it joins the run-store fingerprint
+//! (`coordinator::store::config_fingerprint`), unlike `--threads` or
+//! `--sparse-mode`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::Tensor;
+
+/// Storage precision for params, activations and checkpoints.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    /// Full f32 storage (the default; quantization is the identity).
+    F32,
+    /// bf16 storage / f32 accumulate: stored values are rounded to the
+    /// nearest bf16, compute is unchanged.
+    Bf16,
+}
+
+impl Dtype {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::Bf16 => "bf16",
+        }
+    }
+
+    /// Parse a CLI/env spelling. Accepts the canonical names plus the
+    /// common aliases.
+    pub fn parse(s: &str) -> Option<Dtype> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "float32" | "fp32" => Some(Dtype::F32),
+            "bf16" | "bfloat16" => Some(Dtype::Bf16),
+            _ => None,
+        }
+    }
+}
+
+// Once-resolved global, mirroring sparse::SPARSE_MODE:
+// 0 = unresolved, 1 = F32, 2 = Bf16.
+static DTYPE: AtomicUsize = AtomicUsize::new(0);
+
+fn encode(d: Dtype) -> usize {
+    match d {
+        Dtype::F32 => 1,
+        Dtype::Bf16 => 2,
+    }
+}
+
+fn decode(v: usize) -> Dtype {
+    match v {
+        2 => Dtype::Bf16,
+        _ => Dtype::F32,
+    }
+}
+
+/// The active storage dtype. First call resolves `EBFT_DTYPE` (unless
+/// [`set_dtype`] ran earlier); later calls return the cached value.
+pub fn active_dtype() -> Dtype {
+    let v = DTYPE.load(Ordering::Relaxed);
+    if v != 0 {
+        return decode(v);
+    }
+    let resolved = std::env::var("EBFT_DTYPE")
+        .ok()
+        .and_then(|s| Dtype::parse(&s))
+        .unwrap_or(Dtype::F32);
+    // first writer wins, so a concurrent set_dtype isn't clobbered
+    match DTYPE.compare_exchange(0, encode(resolved), Ordering::Relaxed,
+                                 Ordering::Relaxed) {
+        Ok(_) => resolved,
+        Err(cur) => decode(cur),
+    }
+}
+
+/// Override the active dtype, returning the previous setting (for
+/// scoped save/restore in tests and benches).
+pub fn set_dtype(d: Dtype) -> Dtype {
+    let prev = DTYPE.swap(encode(d), Ordering::Relaxed);
+    if prev == 0 { active_dtype_default() } else { decode(prev) }
+}
+
+fn active_dtype_default() -> Dtype {
+    std::env::var("EBFT_DTYPE")
+        .ok()
+        .and_then(|s| Dtype::parse(&s))
+        .unwrap_or(Dtype::F32)
+}
+
+/// f32 → bf16 bits, round-to-nearest-even. NaNs map to a quiet NaN
+/// (payload truncation must not turn a NaN into ±inf).
+pub fn f32_to_bf16(v: f32) -> u16 {
+    let x = v.to_bits();
+    if v.is_nan() {
+        // keep sign, force a quiet-NaN mantissa bit that survives the
+        // 16-bit truncation
+        return ((x >> 16) as u16) | 0x0040;
+    }
+    let round = ((x >> 16) & 1) + 0x7fff;
+    ((x.wrapping_add(round)) >> 16) as u16
+}
+
+/// bf16 bits → f32 (exact: bf16 is a prefix of f32).
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Round one value to the nearest bf16-representable f32.
+pub fn quantize_bf16(v: f32) -> f32 {
+    bf16_to_f32(f32_to_bf16(v))
+}
+
+/// Is `v` exactly representable in bf16 (round-trip is the identity at
+/// the bit level)?
+pub fn is_bf16_exact(v: f32) -> bool {
+    quantize_bf16(v).to_bits() == v.to_bits()
+}
+
+/// Quantize a slice in place when the active dtype is bf16; no-op at
+/// f32. This is the one helper storage boundaries call.
+pub fn quantize_storage(data: &mut [f32]) {
+    if active_dtype() == Dtype::Bf16 {
+        for v in data.iter_mut() {
+            *v = quantize_bf16(*v);
+        }
+    }
+}
+
+/// [`quantize_storage`] over a tensor.
+pub fn quantize_tensor(t: &mut Tensor) {
+    quantize_storage(&mut t.data);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_and_rejects() {
+        for d in [Dtype::F32, Dtype::Bf16] {
+            assert_eq!(Dtype::parse(d.as_str()), Some(d));
+        }
+        assert_eq!(Dtype::parse("bfloat16"), Some(Dtype::Bf16));
+        assert_eq!(Dtype::parse("fp32"), Some(Dtype::F32));
+        assert_eq!(Dtype::parse("f16"), None);
+        assert_eq!(Dtype::parse(""), None);
+    }
+
+    #[test]
+    fn conversion_matches_known_values() {
+        // exactly-representable values are fixed points
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, -2.0, 256.0,
+                  f32::INFINITY, f32::NEG_INFINITY] {
+            assert_eq!(quantize_bf16(v).to_bits(), v.to_bits(), "{v}");
+        }
+        // 1.0 + 2^-8 sits exactly between bf16 neighbours 1.0 and
+        // 1.0078125; round-to-nearest-even picks the even mantissa (1.0)
+        assert_eq!(quantize_bf16(1.00390625), 1.0);
+        // just above the midpoint rounds up
+        assert_eq!(quantize_bf16(1.0039063), 1.0078125);
+        // relative error bound: ≤ 2^-9 of the magnitude for normals
+        for v in [3.14159265f32, -0.1, 123.456, 1e-3, 1e20, -7.7] {
+            let q = quantize_bf16(v);
+            assert!((q - v).abs() <= v.abs() * 3.9e-3,
+                    "{v} -> {q} off by more than 2^-8");
+        }
+        // NaN stays NaN (never collapses to inf)
+        assert!(quantize_bf16(f32::NAN).is_nan());
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn quantization_is_idempotent() {
+        let mut rng_state = 0x9e3779b97f4a7c15u64;
+        for _ in 0..1000 {
+            rng_state = rng_state.wrapping_mul(6364136223846793005)
+                                 .wrapping_add(1442695040888963407);
+            let v = f32::from_bits((rng_state >> 32) as u32);
+            if v.is_nan() {
+                continue;
+            }
+            let q = quantize_bf16(v);
+            assert_eq!(quantize_bf16(q).to_bits(), q.to_bits());
+            assert!(is_bf16_exact(q));
+        }
+    }
+
+    // set_dtype/active_dtype flip a process-global, so their tests live
+    // in the integration binary rust/tests/dtype.rs (own process) —
+    // flipping it here would race the other lib unit tests.
+}

@@ -7,13 +7,16 @@
 //! module docs). [`sparse`] layers compressed representations for
 //! masked weights (CSR/CSC, N:M offset panels, shrunken structured
 //! GEMMs) behind the same contract — every sparse product is bit-equal
-//! to the dense masked path. [`Tensor`] is the thin data handle plus
-//! facade; [`linalg`] the SparseGPT OBS solves. Both backends' host
-//! numerics — the reference interpreter and the coordinator-side
-//! pruning math — run on these kernels.
+//! to the dense masked path. [`dtype`] is the storage-precision axis
+//! (f32 or bf16-in-f32; compute always accumulates f32). [`Tensor`] is
+//! the thin data handle plus facade; [`linalg`] the SparseGPT OBS
+//! solves. Both backends' host numerics — the reference interpreter and
+//! the coordinator-side pruning math — run on these kernels.
+pub mod dtype;
 pub mod kernels;
 pub mod linalg;
 pub mod sparse;
 pub mod tensor;
 
+pub use dtype::Dtype;
 pub use tensor::Tensor;

@@ -577,9 +577,7 @@ impl NmWeight {
                     {
                         let p = gi * self.g + off as usize;
                         let arow = &at.data[p * m..(p + 1) * m];
-                        for (o, &av) in orow.iter_mut().zip(arow) {
-                            *o += v * av;
-                        }
+                        kernels::axpy(orow, v, arow);
                     }
                 }
             }
@@ -680,9 +678,7 @@ fn gather_axpy(ptr: &[usize], idx: &[u32], val: &[f32], at: &Tensor,
             let (t0, t1) = (ptr[r], ptr[r + 1]);
             for (&i, &v) in idx[t0..t1].iter().zip(&val[t0..t1]) {
                 let arow = &at.data[i as usize * m..(i as usize + 1) * m];
-                for (o, &av) in orow.iter_mut().zip(arow) {
-                    *o += v * av;
-                }
+                kernels::axpy(orow, v, arow);
             }
         }
     });

@@ -1,0 +1,124 @@
+//! Integration: the storage-dtype axis (`--dtype` / `EBFT_DTYPE`).
+//!
+//! Lives in its own binary because [`ebft::tensor::dtype::set_dtype`]
+//! flips a process-global — running these flips inside the lib unit
+//! tests would race every test that crosses a storage boundary. The
+//! tests here that DO flip the global are serialized into one `#[test]`
+//! fn for the same reason.
+//!
+//! CI runs this suite under both `EBFT_DTYPE=f32` and `EBFT_DTYPE=bf16`
+//! (the tier-1 dtype matrix), so assertions about the resolved default
+//! are written against the environment, not a constant.
+
+use ebft::model::synth::{write_synthetic, SynthConfig};
+use ebft::model::ParamStore;
+use ebft::tensor::dtype::{self, is_bf16_exact, quantize_bf16, Dtype};
+use ebft::tensor::kernels::{self, SimdPath};
+use std::path::PathBuf;
+
+fn env_default() -> Dtype {
+    std::env::var("EBFT_DTYPE")
+        .ok()
+        .and_then(|s| Dtype::parse(&s))
+        .unwrap_or(Dtype::F32)
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("ebft-dtype-{tag}-{}", std::process::id()))
+}
+
+#[test]
+fn report_simd_path() {
+    // the tier-1 job summary greps this exact prefix out of the dtype
+    // matrix log (see ci.yml) to surface the chosen SIMD path per run
+    println!("simd-path: {} (detected: {}, dtype: {})",
+             kernels::simd_path().as_str(),
+             SimdPath::detected().as_str(),
+             dtype::active_dtype().as_str());
+}
+
+#[test]
+fn conversion_bounds_against_known_values() {
+    // bf16 keeps an 8-bit mantissa: relative error ≤ 2^-8 for normals,
+    // exact for values already on the bf16 grid
+    for v in [1.0f32, -1.0, 0.5, 2.0, 256.0, 0.0, -0.0] {
+        assert_eq!(quantize_bf16(v).to_bits(), v.to_bits(), "{v}");
+        assert!(is_bf16_exact(v));
+    }
+    assert_eq!(quantize_bf16(1.00390625), 1.0); // midpoint → even
+    // one f32 ulp above the midpoint rounds up (a decimal literal like
+    // 1.0039063 would itself parse to the midpoint and round down)
+    let above = f32::from_bits(1.00390625f32.to_bits() + 1);
+    assert_eq!(quantize_bf16(above), 1.0078125);
+    for v in [std::f32::consts::PI, -0.1, 123.456, 3e-3, 1e30] {
+        let q = quantize_bf16(v);
+        assert!((q - v).abs() <= v.abs() * 3.9e-3, "{v} -> {q}");
+        assert!(is_bf16_exact(q));
+    }
+    assert!(quantize_bf16(f32::NAN).is_nan());
+}
+
+#[test]
+fn dtype_global_and_bf16_checkpoints() {
+    // --- resolution order: env default, then set_dtype wins ---
+    let initial = env_default();
+    assert_eq!(dtype::active_dtype(), initial,
+               "first resolution must follow EBFT_DTYPE (or F32)");
+    let prev = dtype::set_dtype(Dtype::Bf16);
+    assert_eq!(prev, initial, "set_dtype must return the prior setting");
+    assert_eq!(dtype::active_dtype(), Dtype::Bf16);
+
+    // --- bf16 storage boundary: params off init_params.bin are
+    // rounded, so every stored value sits on the bf16 grid ---
+    let dir = scratch("ckpt");
+    let manifest = write_synthetic(&dir, &SynthConfig::tiny()).unwrap();
+    let store_bf = ParamStore::from_init_bin(&manifest).unwrap();
+    for (name, t) in store_bf.names.iter().zip(&store_bf.tensors) {
+        assert!(t.data.iter().all(|&v| is_bf16_exact(v)),
+                "{name}: loaded under bf16 but not on the bf16 grid");
+    }
+
+    // --- .ebft v2 bf16 payloads round-trip bit-exactly ---
+    let p_bf = dir.join("params.bf16.ebft");
+    store_bf.save_compact(&p_bf).unwrap();
+    let loaded = ParamStore::load(&p_bf, &manifest).unwrap();
+    for ((name, a), b) in
+        store_bf.names.iter().zip(&store_bf.tensors).zip(&loaded.tensors)
+    {
+        assert_eq!(a.shape, b.shape, "{name}");
+        for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(),
+                       "{name}[{i}]: bf16 compact round-trip moved a bit");
+        }
+    }
+
+    // --- the bf16 payload halves the compact checkpoint: ≤55% of the
+    // same store's f32 compact encoding (2 vs 4 bytes/value, plus
+    // shared per-tensor headers) ---
+    dtype::set_dtype(Dtype::F32);
+    let store_f32 = ParamStore::from_init_bin(&manifest).unwrap();
+    let p_f32 = dir.join("params.f32.ebft");
+    store_f32.save_compact(&p_f32).unwrap();
+    let size_bf = std::fs::metadata(&p_bf).unwrap().len();
+    let size_f32 = std::fs::metadata(&p_f32).unwrap().len();
+    assert!(size_bf as f64 <= 0.55 * size_f32 as f64,
+            "bf16 compact checkpoint is {size_bf} bytes vs {size_f32} \
+             f32 bytes — expected ≤55%");
+
+    // dtype moves stored numbers (unlike threads / the SIMD path):
+    // the two loads really differ, which is why the run-store
+    // fingerprint carries the dtype
+    let differs = store_bf
+        .tensors
+        .iter()
+        .zip(&store_f32.tensors)
+        .any(|(a, b)| {
+            a.data.iter().zip(&b.data).any(|(x, y)| x.to_bits() != y.to_bits())
+        });
+    assert!(differs, "bf16 quantization changed nothing — init values \
+                      all landed on the bf16 grid?");
+
+    dtype::set_dtype(initial);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -22,6 +22,7 @@ use ebft::model::synth::{write_synthetic, SynthConfig};
 use ebft::pretrain;
 use ebft::pruning::Pattern;
 use ebft::runtime::{BackendKind, Session};
+use ebft::tensor::Dtype;
 use std::path::{Path, PathBuf};
 
 fn tmpdir(tag: &str) -> PathBuf {
@@ -54,38 +55,44 @@ fn sample_record(pruner: &str, recovery: &str, recovery_label: &str,
 fn fingerprint_is_deterministic_and_sensitive() {
     let ft = FtConfig::default();
     let a = config_fingerprint("small", "small-seed0-steps400", 7, &ft, 64,
-                               "xla", Split::WikiSim, BackendKind::Pjrt);
+                               "xla", Split::WikiSim, BackendKind::Pjrt,
+                               Dtype::F32);
     let b = config_fingerprint("small", "small-seed0-steps400", 7, &ft, 64,
-                               "xla", Split::WikiSim, BackendKind::Pjrt);
+                               "xla", Split::WikiSim, BackendKind::Pjrt,
+                               Dtype::F32);
     assert_eq!(a, b);
     assert_eq!(a.len(), 16);
     assert!(a.chars().all(|c| c.is_ascii_hexdigit()));
     // every input that moves a cell's numbers moves the fingerprint
     assert_ne!(a, config_fingerprint("tiny", "small-seed0-steps400", 7,
                                      &ft, 64, "xla", Split::WikiSim,
-                                     BackendKind::Pjrt));
+                                     BackendKind::Pjrt, Dtype::F32));
     assert_ne!(a, config_fingerprint("small", "small-seed1-steps400", 7,
                                      &ft, 64, "xla", Split::WikiSim,
-                                     BackendKind::Pjrt));
+                                     BackendKind::Pjrt, Dtype::F32));
     // the corpus seed moves every calibration/eval batch
     assert_ne!(a, config_fingerprint("small", "small-seed0-steps400", 13,
                                      &ft, 64, "xla", Split::WikiSim,
-                                     BackendKind::Pjrt));
+                                     BackendKind::Pjrt, Dtype::F32));
     assert_ne!(a, config_fingerprint("small", "small-seed0-steps400", 7,
                                      &ft, 32, "xla", Split::WikiSim,
-                                     BackendKind::Pjrt));
+                                     BackendKind::Pjrt, Dtype::F32));
     assert_ne!(a, config_fingerprint("small", "small-seed0-steps400", 7,
                                      &ft, 64, "pallas", Split::WikiSim,
-                                     BackendKind::Pjrt));
+                                     BackendKind::Pjrt, Dtype::F32));
     // the backends agree only to float tolerance — their records must
     // never shadow each other
     assert_ne!(a, config_fingerprint("small", "small-seed0-steps400", 7,
                                      &ft, 64, "xla", Split::WikiSim,
-                                     BackendKind::Reference));
+                                     BackendKind::Reference, Dtype::F32));
+    // bf16 storage rounds every number — its records must not shadow f32
+    assert_ne!(a, config_fingerprint("small", "small-seed0-steps400", 7,
+                                     &ft, 64, "xla", Split::WikiSim,
+                                     BackendKind::Pjrt, Dtype::Bf16));
     let ft2 = FtConfig { calib_seqs: 8, ..FtConfig::default() };
     assert_ne!(a, config_fingerprint("small", "small-seed0-steps400", 7,
                                      &ft2, 64, "xla", Split::WikiSim,
-                                     BackendKind::Pjrt));
+                                     BackendKind::Pjrt, Dtype::F32));
 }
 
 #[test]
@@ -128,7 +135,8 @@ fn store_records_round_trip_and_misses_are_none() {
     let dir = tmpdir("roundtrip");
     let store = RunStore::open(&dir).unwrap();
     let fp = config_fingerprint("small", "t", 7, &FtConfig::default(), 64,
-                                "xla", Split::WikiSim, BackendKind::Pjrt);
+                                "xla", Split::WikiSim, BackendKind::Pjrt,
+                                Dtype::F32);
     let rec = sample_record("wanda", "ebft", "w.Ours",
                             Pattern::Unstructured(0.5));
     assert!(store.get_record(&fp, &rec.key()).unwrap().is_none());
@@ -268,6 +276,7 @@ fn sweep_env(e: &Env) -> SweepEnv<'_> {
         dense_tag: "tiny-sched-test".to_string(),
         backend: e.session.backend_kind(),
         threads: 0,
+        dtype: ebft::tensor::dtype::active_dtype(),
     }
 }
 
