@@ -27,12 +27,7 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Pcg64::seeded(3);
     let x = Tensor::randn(&[d.batch, d.seq, d.d_model], 1.0, &mut rng);
     let target = Tensor::randn(&[d.batch, d.seq, d.d_model], 1.0, &mut rng);
-    let bp: Vec<Tensor> = env
-        .dense
-        .block_params(&env.session.manifest, 0)
-        .into_iter()
-        .cloned()
-        .collect();
+    let bp: Vec<Tensor> = env.dense.block_params(&env.session.manifest, 0)?;
     let zeros: Vec<Tensor> =
         bp.iter().map(|t| Tensor::zeros(&t.shape)).collect();
 
@@ -112,7 +107,7 @@ fn main() -> anyhow::Result<()> {
         let calib = ebft::data::Batcher::with_offset(
             &env.corpus, split, 10_000, ft.calib_seqs, d.batch, d.seq)
             .ordered_batches();
-        let mut params = env.dense.clone();
+        let mut params = env.dense_params()?.clone();
         let masks = ebft::pruning::prune_model(
             &env.session, &mut params, &ebft::pruning::wanda::Wanda,
             Pattern::Unstructured(0.7), &calib)?;

@@ -39,8 +39,8 @@ fn main() -> anyhow::Result<()> {
                 vec!["method".into()];
             // task names from a probe run on the dense model
             let dense_masks = ebft::masks::MaskSet::dense(&env.session.manifest);
-            let probe = run_suite(&env.session, &env.dense, &dense_masks,
-                                  &env.corpus, 2, 3)?;
+            let probe = run_suite(&env.session, env.dense_params()?,
+                                  &dense_masks, &env.corpus, 2, 3)?;
             headers.extend(probe.iter().map(|r| r.task.to_string()));
             headers.push("Mean".into());
             let hdr_refs: Vec<&str> =
@@ -50,8 +50,8 @@ fn main() -> anyhow::Result<()> {
                 &hdr_refs);
 
             // dense reference row
-            let dense_res = run_suite(&env.session, &env.dense, &dense_masks,
-                                      &env.corpus, ITEMS, 3)?;
+            let dense_res = run_suite(&env.session, env.dense_params()?,
+                                      &dense_masks, &env.corpus, ITEMS, 3)?;
             let mut cells = vec!["dense".to_string()];
             cells.extend(dense_res.iter()
                              .map(|r| format!("{:.2}", r.accuracy())));

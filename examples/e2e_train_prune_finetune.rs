@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
     let env = BenchEnv {
         session,
         corpus,
-        dense,
+        dense: ebft::model::DenseModel::resident(dense),
         runs: root.join("runs"),
         label: "MiniLlama-A".into(),
         artifact_dir: root.join("artifacts/small"),
@@ -90,8 +90,9 @@ fn main() -> anyhow::Result<()> {
 
     // --- stage 4: held-out splits sanity ---
     let masks = ebft::masks::MaskSet::dense(&env.session.manifest);
-    let calib_ppl = ebft::eval::perplexity(&env.session, &env.dense, &masks,
-                                           &env.corpus, Split::Calib, 32)?;
+    let calib_ppl = ebft::eval::perplexity(&env.session, env.dense_params()?,
+                                           &masks, &env.corpus,
+                                           Split::Calib, 32)?;
     println!("dense ppl on calib split (distribution-shifted): {}",
              fmt_ppl(calib_ppl));
 

@@ -29,6 +29,7 @@ fn main() -> anyhow::Result<()> {
                                              0, 50)?;
     println!("      final train loss {:.3} in {:.1}s", report.final_loss,
              report.secs);
+    let dense = ebft::model::DenseModel::resident(dense);
 
     let pipe = PipelineBuilder::new()
         .session(&session)

@@ -18,8 +18,8 @@ fn main() -> anyhow::Result<()> {
     let pattern = Pattern::Unstructured(0.6);
 
     let dense_masks = MaskSet::dense(&env.session.manifest);
-    let dense = run_suite(&env.session, &env.dense, &dense_masks, &env.corpus,
-                          items, 3)?;
+    let dense = run_suite(&env.session, env.dense_params()?, &dense_masks,
+                          &env.corpus, items, 3)?;
     // prune once; both variants share the pruned checkpoint (and skip the
     // perplexity stage — accuracy is the metric here)
     let ckpt = pipe.prune(pruner("wanda")?, pattern)?;

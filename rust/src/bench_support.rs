@@ -20,11 +20,11 @@ use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
 
 use crate::config::FtConfig;
-use crate::coordinator::{base_model, Grid, GridResult, Pipeline,
+use crate::coordinator::{base_dense_model, Grid, GridResult, Pipeline,
                          PipelineBuilder, RunRecord, RunStore, Scheduler,
                          SweepEnv};
 use crate::data::{MarkovCorpus, Split};
-use crate::model::ParamStore;
+use crate::model::{DenseModel, ParamStore};
 use crate::pruning::Pattern;
 use crate::runtime::Session;
 use crate::util::Json;
@@ -58,6 +58,24 @@ pub fn resume() -> bool {
     std::env::var("EBFT_RESUME").map(|v| v == "1").unwrap_or(false)
 }
 
+/// Teacher residency budget from `EBFT_MAX_RESIDENT_BLOCKS` (0 = fully
+/// resident, N > 0 = stream the dense teacher out-of-core with at most
+/// N block groups in memory). Never moves results, only peak memory.
+pub fn max_resident_blocks() -> usize {
+    match std::env::var("EBFT_MAX_RESIDENT_BLOCKS") {
+        Err(_) => 0,
+        Ok(v) => match v.parse::<usize>() {
+            Ok(n) => n,
+            Err(_) => {
+                eprintln!("[bench] ignoring invalid \
+                           EBFT_MAX_RESIDENT_BLOCKS='{v}' \
+                           (want an integer ≥ 0)");
+                0
+            }
+        },
+    }
+}
+
 /// Intra-op kernel thread budget from `EBFT_THREADS` (0 = process
 /// default: core count). Fed into [`SweepEnv::threads`] so the
 /// scheduler can divide it across `EBFT_JOBS` workers.
@@ -78,7 +96,10 @@ pub fn threads() -> usize {
 pub struct BenchEnv {
     pub session: Session,
     pub corpus: MarkovCorpus,
-    pub dense: ParamStore,
+    /// The dense teacher — resident by default, streamed out-of-core
+    /// when `EBFT_MAX_RESIDENT_BLOCKS` > 0 (or via
+    /// [`BenchEnv::open_synthetic_with`]).
+    pub dense: DenseModel,
     pub runs: PathBuf,
     /// Display label ("Lla.1"-style stand-in name).
     pub label: String,
@@ -104,7 +125,8 @@ impl BenchEnv {
         })?;
         let corpus = MarkovCorpus::new(session.manifest.dims.vocab, 7);
         let runs = root.join("runs");
-        let dense = base_model(&session, &corpus, &runs, BASE_STEPS, seed)?;
+        let dense = base_dense_model(&session, &corpus, &runs, BASE_STEPS,
+                                     seed, max_resident_blocks())?;
         Ok(BenchEnv {
             session,
             corpus,
@@ -122,6 +144,14 @@ impl BenchEnv {
     /// The manifest is written under `runs/synth-tiny` so scheduler
     /// workers can reopen it like any artifact directory.
     pub fn open_synthetic() -> Result<BenchEnv> {
+        Self::open_synthetic_with(max_resident_blocks())
+    }
+
+    /// [`BenchEnv::open_synthetic`] with an explicit teacher residency
+    /// budget (0 = fully resident) — the out-of-core equivalence tests'
+    /// seam for comparing streamed and resident runs in one process.
+    pub fn open_synthetic_with(max_resident_blocks: usize)
+                               -> Result<BenchEnv> {
         use crate::model::synth::{write_synthetic, SynthConfig};
         use crate::runtime::BackendKind;
         let root = repo_root();
@@ -131,7 +161,8 @@ impl BenchEnv {
             .context("writing the synthetic tiny manifest")?;
         let session = Session::open_kind(manifest, BackendKind::Reference)?;
         let corpus = MarkovCorpus::new(session.manifest.dims.vocab, 7);
-        let dense = base_model(&session, &corpus, &runs, BASE_STEPS, 0)?;
+        let dense = base_dense_model(&session, &corpus, &runs, BASE_STEPS,
+                                     0, max_resident_blocks)?;
         Ok(BenchEnv {
             session,
             corpus,
@@ -141,6 +172,16 @@ impl BenchEnv {
             artifact_dir: dir,
             dense_tag: format!("synth-tiny-seed0-steps{BASE_STEPS}"),
         })
+    }
+
+    /// The teacher as a resident [`ParamStore`] — for drivers that need
+    /// direct tensor access (LoRA init, zero-shot eval). Errors under a
+    /// streamed teacher instead of silently materializing it.
+    pub fn dense_params(&self) -> Result<&ParamStore> {
+        self.dense.as_store().context(
+            "this driver needs a resident teacher — unset \
+             EBFT_MAX_RESIDENT_BLOCKS (streamed teachers apply to the \
+             prune/recover/eval pipeline, not to this path)")
     }
 
     /// Pipeline over this env with the default fine-tuning config.
@@ -180,6 +221,7 @@ impl BenchEnv {
             backend: self.session.backend_kind(),
             threads: threads(),
             dtype: crate::tensor::dtype::active_dtype(),
+            max_resident_blocks: self.dense.max_resident_blocks(),
         }
     }
 

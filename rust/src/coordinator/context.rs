@@ -21,14 +21,15 @@ use crate::config::FtConfig;
 use crate::data::{Batcher, MarkovCorpus, Split};
 use crate::eval;
 use crate::masks::MaskSet;
-use crate::model::ParamStore;
+use crate::model::{DenseModel, ParamStore};
 use crate::runtime::{Plan, Session};
 
 pub struct RunContext<'a> {
     pub session: &'a Session,
     pub corpus: &'a MarkovCorpus,
-    /// The dense (teacher) model.
-    pub dense: &'a ParamStore,
+    /// The dense (teacher) model — fully resident or streamed
+    /// out-of-core; every stage reads it through the owned-tensor API.
+    pub dense: &'a DenseModel,
     pub ft: FtConfig,
     /// Sequences used for perplexity eval.
     pub eval_seqs: usize,
@@ -42,7 +43,7 @@ pub struct RunContext<'a> {
 
 impl<'a> RunContext<'a> {
     pub fn new(session: &'a Session, corpus: &'a MarkovCorpus,
-               dense: &'a ParamStore, ft: FtConfig, eval_seqs: usize,
+               dense: &'a DenseModel, ft: FtConfig, eval_seqs: usize,
                impl_name: String) -> Self {
         Self {
             session,
@@ -83,10 +84,14 @@ impl<'a> RunContext<'a> {
         f(plan)
     }
 
-    /// Perplexity of the dense teacher (reference row).
+    /// Perplexity of the dense teacher (reference row). Streamed
+    /// teachers bind one tensor at a time through
+    /// [`eval::bind_dense_lm_inputs`], never materializing the model.
     pub fn dense_ppl(&self) -> Result<f64> {
         let masks = MaskSet::dense(&self.session.manifest);
-        self.eval_ppl(self.dense, &masks)
+        self.ppl_with(|plan| {
+            eval::bind_dense_lm_inputs(plan, self.dense, &masks)
+        })
     }
 
     /// Perplexity of `params` under `masks` on the eval split, through the
@@ -94,8 +99,13 @@ impl<'a> RunContext<'a> {
     /// eval, token batches streamed).
     pub fn eval_ppl(&self, params: &ParamStore, masks: &MaskSet)
                     -> Result<f64> {
+        self.ppl_with(|plan| eval::bind_lm_inputs(plan, params, masks))
+    }
+
+    fn ppl_with(&self, bind: impl FnOnce(&mut Plan<'a>) -> Result<()>)
+                -> Result<f64> {
         let nll = self.with_plan("lm_loss", |plan| {
-            let nll = match eval::bind_lm_inputs(plan, params, masks) {
+            let nll = match bind(plan) {
                 Ok(()) => eval::mean_nll_bound(plan, self.corpus,
                                                self.eval_split,
                                                self.eval_seqs),

@@ -21,7 +21,7 @@ use anyhow::Result;
 use std::path::Path;
 
 use crate::data::MarkovCorpus;
-use crate::model::ParamStore;
+use crate::model::{DenseModel, ParamSource, ParamStore};
 use crate::pretrain;
 use crate::runtime::Session;
 use crate::util::Json;
@@ -39,7 +39,8 @@ pub use pipeline::{Pipeline, PipelineBuilder, PrunedModel, RecoveredModel,
                    RunRecord};
 pub use registry::{pruner, pruners, recoveries, recovery, Pruner, Recovery};
 pub use scheduler::{plan_sweep, Scheduler, SweepEnv, SweepPlan};
-pub use store::{config_fingerprint, RunStore};
+pub use store::{config_fingerprint, Lease, LeaseConfig,
+                LeaseOutcome, RunStore};
 
 /// Persist a result object under runs/ as JSON.
 pub fn write_result(runs_dir: &Path, name: &str, result: &Json) -> Result<()> {
@@ -53,4 +54,22 @@ pub fn base_model(session: &Session, corpus: &MarkovCorpus, runs_dir: &Path,
     let (params, _) = pretrain::ensure_pretrained(session, corpus, runs_dir,
                                                   steps, 3e-3, seed)?;
     Ok(params)
+}
+
+/// [`base_model`] as a [`DenseModel`]: fully resident when
+/// `max_resident_blocks` is 0, otherwise streamed out-of-core from the
+/// cached pretrain checkpoint under a `max_resident_blocks`-block
+/// residency budget. Both variants yield bit-identical teachers.
+pub fn base_dense_model(session: &Session, corpus: &MarkovCorpus,
+                        runs_dir: &Path, steps: usize, seed: u64,
+                        max_resident_blocks: usize) -> Result<DenseModel> {
+    if max_resident_blocks == 0 {
+        return Ok(DenseModel::resident(
+            base_model(session, corpus, runs_dir, steps, seed)?));
+    }
+    let path = pretrain::ensure_pretrained_path(session, corpus, runs_dir,
+                                                steps, 3e-3, seed)?;
+    let source = ParamSource::open_ckpt(&path, &session.manifest,
+                                        max_resident_blocks)?;
+    Ok(DenseModel::streamed(source))
 }

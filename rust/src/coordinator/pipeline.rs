@@ -14,7 +14,7 @@ use crate::config::FtConfig;
 use crate::data::{MarkovCorpus, Split};
 use crate::ebft::finetune::{BlockReport, EbftReport};
 use crate::masks::MaskSet;
-use crate::model::ParamStore;
+use crate::model::{DenseModel, ParamStore};
 use crate::pruning::Pattern;
 use crate::runtime::Session;
 use crate::util::Json;
@@ -28,7 +28,7 @@ use super::store::RunStore;
 pub struct PipelineBuilder<'a> {
     session: Option<&'a Session>,
     corpus: Option<&'a MarkovCorpus>,
-    dense: Option<&'a ParamStore>,
+    dense: Option<&'a DenseModel>,
     ft: FtConfig,
     eval_seqs: usize,
     impl_name: String,
@@ -58,8 +58,9 @@ impl<'a> PipelineBuilder<'a> {
         self
     }
 
-    /// The dense (teacher) model cells start from.
-    pub fn dense(mut self, dense: &'a ParamStore) -> Self {
+    /// The dense (teacher) model cells start from — fully resident or
+    /// streamed out-of-core ([`DenseModel::streamed`]).
+    pub fn dense(mut self, dense: &'a DenseModel) -> Self {
         self.dense = Some(dense);
         self
     }
@@ -153,6 +154,11 @@ pub struct RunRecord {
     pub prune_secs: f64,
     pub ft_secs: f64,
     pub eval_secs: f64,
+    /// Peak host bytes the dense teacher held during the cell: the full
+    /// store when resident, the block-cache high-water mark when
+    /// streamed under `--max-resident-blocks`. 0 on records written
+    /// before it was tracked.
+    pub peak_resident_bytes: usize,
     pub ebft_report: Option<EbftReport>,
 }
 
@@ -180,6 +186,10 @@ impl RunRecord {
         j.set("prune_secs", Json::Num(self.prune_secs));
         j.set("ft_secs", Json::Num(self.ft_secs));
         j.set("eval_secs", Json::Num(self.eval_secs));
+        if self.peak_resident_bytes > 0 {
+            j.set("peak_resident_bytes",
+                  Json::Num(self.peak_resident_bytes as f64));
+        }
         if let Some(r) = &self.ebft_report {
             let mut er = Json::obj();
             er.set("total_secs", Json::Num(r.total_secs));
@@ -255,6 +265,10 @@ impl RunRecord {
             prune_secs: j.get("prune_secs")?.as_f64()?,
             ft_secs: j.get("ft_secs")?.as_f64()?,
             eval_secs: j.get("eval_secs")?.as_f64()?,
+            peak_resident_bytes: match j.opt("peak_resident_bytes") {
+                None => 0,
+                Some(v) => v.as_usize()?,
+            },
             ebft_report,
         })
     }
@@ -280,7 +294,10 @@ impl<'a> Pipeline<'a> {
     pub fn prune(&self, pruner: &dyn Pruner, pattern: Pattern)
                  -> Result<PrunedModel> {
         let t0 = Instant::now();
-        let mut params = self.ctx.dense.clone();
+        // the student copy the pruner mutates is always fully resident
+        // (recovery fine-tunes and eval bind it whole); out-of-core
+        // applies to the *teacher* reads, which stay block-by-block
+        let mut params = self.ctx.dense.materialize()?;
         let masks = pruner.prune(&self.ctx, &mut params, pattern)?;
         Ok(PrunedModel {
             pruner: pruner.name().to_string(),
@@ -351,6 +368,7 @@ impl<'a> Pipeline<'a> {
             prune_secs: pruned.prune_secs,
             ft_secs: recovered.ft_secs,
             eval_secs,
+            peak_resident_bytes: self.ctx.dense.peak_resident_bytes(),
             ebft_report: recovered.ebft_report,
         };
         Ok((recovered.params, recovered.masks, record))

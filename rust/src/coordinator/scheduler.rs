@@ -27,15 +27,26 @@
 //!   cells load from the store instead of re-running, and an interrupted
 //!   group's persisted pruned checkpoint is restored instead of
 //!   re-pruned. Groups whose cells all resumed schedule nothing.
+//! - **Multi-process cooperation.** Resuming *with* a store also turns on
+//!   cell leasing (DESIGN.md §RunStore): before pruning a group or running
+//!   a cell, a worker claims the store lease for it; "leased by a live
+//!   peer" parks the job on a deferred queue that is re-polled every
+//!   `poll_ms`, by which time the peer's committed record/checkpoint is
+//!   adopted instead of recomputed. Stale leases (crashed peers) are
+//!   broken and counted — the run ends with a `lease-takeovers: N` line —
+//!   so N independent `ebft grid --resume` processes drain one sweep DAG
+//!   together and merge to the same records a serial run writes.
 
 use anyhow::{anyhow, Context, Result};
 use std::collections::VecDeque;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 use crate::config::FtConfig;
 use crate::data::{MarkovCorpus, Split};
-use crate::model::ParamStore;
+use crate::model::DenseModel;
 use crate::pruning::Pattern;
 use crate::runtime::{BackendKind, Session};
 use crate::tensor::kernels;
@@ -44,7 +55,8 @@ use crate::tensor::Dtype;
 use super::grid::{Grid, GridResult};
 use super::pipeline::{Pipeline, PipelineBuilder, PrunedModel, RunRecord};
 use super::registry;
-use super::store::{config_fingerprint, RunStore};
+use super::store::{config_fingerprint, Lease, LeaseConfig, LeaseOutcome,
+                   RunStore};
 
 /// Everything a worker needs to rebuild its own pipeline. Shared by
 /// reference across worker threads — sessions are deliberately absent
@@ -53,8 +65,9 @@ pub struct SweepEnv<'a> {
     /// Artifact directory every worker session opens.
     pub artifact_dir: PathBuf,
     pub corpus: &'a MarkovCorpus,
-    /// The dense (teacher) model, shared read-only by all workers.
-    pub dense: &'a ParamStore,
+    /// The dense (teacher) model — fully resident or streamed
+    /// out-of-core — shared read-only by all workers.
+    pub dense: &'a DenseModel,
     pub ft: FtConfig,
     pub eval_seqs: usize,
     pub impl_name: String,
@@ -78,6 +91,11 @@ pub struct SweepEnv<'a> {
     /// part of the store fingerprint: bf16 storage rounds every param
     /// and activation.
     pub dtype: Dtype,
+    /// Teacher residency budget (`--max-resident-blocks`; 0 = fully
+    /// resident). Informational — like `threads` it is deliberately NOT
+    /// part of the store fingerprint, because streamed and resident runs
+    /// produce bit-identical records.
+    pub max_resident_blocks: usize,
 }
 
 impl SweepEnv<'_> {
@@ -177,6 +195,10 @@ enum Job {
 
 struct State {
     ready: VecDeque<Job>,
+    /// Jobs leased by a live peer process — re-queued onto `ready` every
+    /// `poll_ms`, by which time the peer's committed work is adopted (or
+    /// its stale lease broken). Always empty outside cooperative mode.
+    deferred: VecDeque<Job>,
     /// Per group: recovery jobs awaiting the prune.
     waiting: Vec<Vec<Job>>,
     /// Per group: the pruned checkpoint, shared across recovery workers.
@@ -241,6 +263,77 @@ struct WorkerCtx<'s, 'e> {
     plan: &'s SweepPlan,
     shared: &'s Shared,
     resume: bool,
+    /// Resume + store: cells and prunes are leased through the store so
+    /// peer processes draining the same sweep never duplicate live work.
+    cooperative: bool,
+    lease_cfg: LeaseConfig,
+    /// Stale leases broken this run (reported as `lease-takeovers: N`).
+    takeovers: &'s AtomicUsize,
+    /// Leases this process holds, re-stamped by the heartbeat thread.
+    leases: &'s LeaseRegistry,
+}
+
+/// The process's live leases. Workers insert on claim and remove on
+/// release; the heartbeat thread re-stamps every member each
+/// `heartbeat_ms` so peers never mistake a slow cell for a dead holder.
+struct LeaseRegistry {
+    held: Mutex<Vec<Lease>>,
+}
+
+impl LeaseRegistry {
+    fn new() -> Self {
+        LeaseRegistry { held: Mutex::new(Vec::new()) }
+    }
+
+    /// Poison-tolerant for the same reason as [`Shared::lock`].
+    fn lock(&self) -> std::sync::MutexGuard<'_, Vec<Lease>> {
+        self.held.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    fn insert(&self, lease: &Lease) {
+        self.lock().push(lease.clone());
+    }
+
+    fn remove(&self, lease: &Lease) {
+        // tokens are process-unique per claim, so this drops exactly one
+        self.lock().retain(|held| held.token != lease.token);
+    }
+
+    fn snapshot(&self) -> Vec<Lease> {
+        self.lock().clone()
+    }
+}
+
+/// Re-stamps every held lease until `stop`; sleeps in short ticks so
+/// shutdown never waits out a full heartbeat interval.
+fn heartbeat_loop(store: &RunStore, leases: &LeaseRegistry,
+                  cfg: &LeaseConfig, stop: &AtomicBool) {
+    let tick = Duration::from_millis(10);
+    let mut since_beat = 0u64;
+    while !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(tick);
+        since_beat += 10;
+        if since_beat < cfg.heartbeat_ms {
+            continue;
+        }
+        since_beat = 0;
+        for lease in leases.snapshot() {
+            match store.heartbeat(&lease) {
+                Ok(true) => {}
+                Ok(false) => {
+                    // benign duplicate, not lost work: the breaking peer
+                    // recomputes the same deterministic cell
+                    eprintln!("[scheduler] lease {} broken by a peer \
+                               (cell may run twice, records identical)",
+                              lease.path.display());
+                }
+                Err(e) => {
+                    eprintln!("[scheduler] heartbeat failed for {}: {e:#}",
+                              lease.path.display());
+                }
+            }
+        }
+    }
 }
 
 /// Runs a [`Grid`] over a [`SweepEnv`] with `jobs` workers, optionally
@@ -348,6 +441,7 @@ impl<'a> Scheduler<'a> {
         let shared = Shared {
             m: Mutex::new(State {
                 ready,
+                deferred: VecDeque::new(),
                 waiting,
                 checkpoints: vec![None; plan.groups.len()],
                 uses_left,
@@ -360,6 +454,12 @@ impl<'a> Scheduler<'a> {
             cv: Condvar::new(),
         };
 
+        // resume + store ⇒ peer processes may be draining the same sweep:
+        // lease every prune/cell so live work is never duplicated
+        let cooperative = self.resume && self.store.is_some();
+        let lease_cfg = LeaseConfig::from_env();
+        let takeovers = AtomicUsize::new(0);
+        let leases = LeaseRegistry::new();
         if outstanding > 0 {
             let ctx = WorkerCtx {
                 env: &self.env,
@@ -368,6 +468,10 @@ impl<'a> Scheduler<'a> {
                 plan: &plan,
                 shared: &shared,
                 resume: self.resume,
+                cooperative,
+                lease_cfg: lease_cfg.clone(),
+                takeovers: &takeovers,
+                leases: &leases,
             };
             let n_workers = self.jobs.min(outstanding);
             // split the intra-op kernel budget across workers for the
@@ -381,13 +485,33 @@ impl<'a> Scheduler<'a> {
             };
             let _threads_guard =
                 kernels::ThreadsGuard::set((budget / n_workers).max(1));
-            std::thread::scope(|scope| {
-                let ctx_ref = &ctx;
-                for wid in 1..n_workers {
-                    scope.spawn(move || worker(ctx_ref, None, wid));
+            // nested scopes: the inner one joins every worker, then the
+            // outer one stops and joins the heartbeat thread — so leases
+            // stay fresh for exactly as long as any worker can hold one
+            let stop = AtomicBool::new(false);
+            let hb_store = self.store.filter(|_| cooperative);
+            let (leases_ref, cfg_ref, stop_ref) =
+                (&leases, &lease_cfg, &stop);
+            std::thread::scope(|outer| {
+                if let Some(store) = hb_store {
+                    outer.spawn(move || {
+                        heartbeat_loop(store, leases_ref, cfg_ref, stop_ref)
+                    });
                 }
-                worker(ctx_ref, self.local_session, 0);
+                std::thread::scope(|inner| {
+                    let ctx_ref = &ctx;
+                    for wid in 1..n_workers {
+                        inner.spawn(move || worker(ctx_ref, None, wid));
+                    }
+                    worker(ctx_ref, self.local_session, 0);
+                });
+                stop.store(true, Ordering::Relaxed);
             });
+        }
+        if cooperative {
+            // greppable by the CI two-process grid job
+            eprintln!("[scheduler] lease-takeovers: {}",
+                      takeovers.load(Ordering::Relaxed));
         }
 
         let state = shared
@@ -461,11 +585,28 @@ fn worker_loop(ctx: &WorkerCtx<'_, '_>, session: &Session, wid: usize)
                 }
                 // poison-tolerant like Shared::lock: a peer's panic must
                 // surface as st.failed, not a poison-panic cascade
-                st = ctx
-                    .shared
-                    .cv
-                    .wait(st)
-                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+                if st.deferred.is_empty() {
+                    st = ctx
+                        .shared
+                        .cv
+                        .wait(st)
+                        .unwrap_or_else(std::sync::PoisonError::into_inner);
+                } else {
+                    // some jobs are leased by a peer process — wake at
+                    // poll_ms and re-queue them; the retry adopts the
+                    // peer's committed work or breaks its stale lease
+                    let (guard, _) = ctx
+                        .shared
+                        .cv
+                        .wait_timeout(
+                            st,
+                            Duration::from_millis(ctx.lease_cfg.poll_ms))
+                        .unwrap_or_else(std::sync::PoisonError::into_inner);
+                    st = guard;
+                    while let Some(job) = st.deferred.pop_front() {
+                        st.ready.push_back(job);
+                    }
+                }
             }
         };
         match job {
@@ -477,70 +618,28 @@ fn worker_loop(ctx: &WorkerCtx<'_, '_>, session: &Session, wid: usize)
     }
 }
 
-fn run_prune(ctx: &WorkerCtx<'_, '_>, pipe: &Pipeline<'_>, group: usize,
-             wid: usize) -> Result<()> {
-    let g = &ctx.plan.groups[group];
-    // an interrupted sweep's in-flight checkpoint short-circuits the
-    // prune — but only when resuming, so a fresh sweep recomputes
-    let mut restored = None;
-    if ctx.resume {
-        if let Some(store) = ctx.store {
-            restored = store.get_checkpoint(
-                ctx.fingerprint, g.pruner, g.pattern,
-                &pipe.ctx().session.manifest)?;
-        }
-    }
-    let mut did_prune = false;
-    let pruned = match restored {
-        Some(ck) => {
-            eprintln!("[scheduler w{wid}] restored pruned checkpoint \
-                       {}", g.tag);
-            ck
-        }
-        None => {
-            let pruned = pipe.prune(registry::pruner(g.pruner)?,
-                                    g.pattern)?;
-            if let Some(store) = ctx.store {
-                store.put_checkpoint(ctx.fingerprint, &pruned)?;
-            }
-            did_prune = true;
-            pruned
-        }
-    };
-    let mut st = ctx.shared.lock();
-    if did_prune {
-        st.prunes_run.push(g.tag.clone());
-    }
-    st.checkpoints[group] = Some(Arc::new(pruned));
-    // depth-first: this group's recoveries run before further prunes, so
-    // resident checkpoints stay bounded by the worker count
-    let pending = std::mem::take(&mut st.waiting[group]);
-    for job in pending.into_iter().rev() {
-        st.ready.push_front(job);
-    }
-    st.outstanding -= 1;
-    drop(st);
-    ctx.shared.cv.notify_all();
-    Ok(())
+/// Park a job a live peer holds the lease on. No notify: the worker loop
+/// polls the deferred queue at `poll_ms`, which paces retries instead of
+/// ping-ponging claim attempts between workers at syscall speed.
+fn defer(ctx: &WorkerCtx<'_, '_>, job: Job) {
+    ctx.shared.lock().deferred.push_back(job);
 }
 
-fn run_recover(ctx: &WorkerCtx<'_, '_>, pipe: &Pipeline<'_>, group: usize,
-               cell: usize, wid: usize) -> Result<()> {
-    let checkpoint = {
-        let st = ctx.shared.lock();
-        st.checkpoints[group]
-            .clone()
-            .expect("recovery scheduled before its prune completed")
-    };
+fn note_takeover(ctx: &WorkerCtx<'_, '_>, took_over: bool, what: &str,
+                 wid: usize) {
+    if took_over {
+        ctx.takeovers.fetch_add(1, Ordering::Relaxed);
+        eprintln!("[scheduler w{wid}] took over a stale lease on {what}");
+    }
+}
+
+/// Bookkeeping for a completed cell — run locally or adopted from a
+/// peer's record: fill the result slot, log progress, drop the group
+/// checkpoint with its last use, retire the job.
+fn finish_cell(ctx: &WorkerCtx<'_, '_>, group: usize, cell: usize,
+               record: RunRecord, wid: usize) -> Result<()> {
     let g = &ctx.plan.groups[group];
     let c = &g.cells[cell];
-    let recovery = registry::recovery(c.recovery)?;
-    let (_params, _masks, record) =
-        pipe.recover(checkpoint.as_ref(), recovery)?;
-    drop(checkpoint);
-    if let Some(store) = ctx.store {
-        store.put_record(ctx.fingerprint, &record)?;
-    }
     let mut st = ctx.shared.lock();
     st.done_cells += 1;
     eprintln!("[scheduler w{wid}] cell {}/{}: {} ppl {:.3} \
@@ -565,4 +664,176 @@ fn run_recover(ctx: &WorkerCtx<'_, '_>, pipe: &Pipeline<'_>, group: usize,
     drop(st);
     ctx.shared.cv.notify_all();
     Ok(())
+}
+
+/// Adopt every pending cell of `group` whose record a peer has already
+/// committed (they never reach the ready queue). Returns how many cells
+/// remain pending — 0 means the group's prune is moot. Safe without the
+/// group lease: only this group's single prune job touches
+/// `waiting[group]`.
+fn adopt_finished_cells(ctx: &WorkerCtx<'_, '_>, group: usize, wid: usize)
+                        -> Result<usize> {
+    let store = ctx.store.expect("cooperative mode implies a store");
+    let pending = {
+        let mut st = ctx.shared.lock();
+        std::mem::take(&mut st.waiting[group])
+    };
+    let mut still_pending = Vec::new();
+    for job in pending {
+        let cell = match job {
+            Job::Recover { cell, .. } => cell,
+            Job::Prune { .. } => {
+                still_pending.push(job);
+                continue;
+            }
+        };
+        let c = &ctx.plan.groups[group].cells[cell];
+        match store.get_record(ctx.fingerprint, &c.key)? {
+            Some(record) => {
+                eprintln!("[scheduler w{wid}] adopted {} from a peer",
+                          c.key);
+                finish_cell(ctx, group, cell, record, wid)?;
+            }
+            None => still_pending.push(job),
+        }
+    }
+    let n = still_pending.len();
+    ctx.shared.lock().waiting[group] = still_pending;
+    Ok(n)
+}
+
+fn run_prune(ctx: &WorkerCtx<'_, '_>, pipe: &Pipeline<'_>, group: usize,
+             wid: usize) -> Result<()> {
+    let g = &ctx.plan.groups[group];
+    // cells a peer already finished need neither prune nor recovery —
+    // adopt their records; an empty group retires the prune outright
+    if ctx.cooperative && adopt_finished_cells(ctx, group, wid)? == 0 {
+        let mut st = ctx.shared.lock();
+        st.outstanding -= 1;
+        drop(st);
+        ctx.shared.cv.notify_all();
+        return Ok(());
+    }
+    // an interrupted sweep's in-flight checkpoint short-circuits the
+    // prune — but only when resuming, so a fresh sweep recomputes
+    let mut restored = None;
+    if ctx.resume {
+        if let Some(store) = ctx.store {
+            restored = store.get_checkpoint(
+                ctx.fingerprint, g.pruner, g.pattern,
+                &pipe.ctx().session.manifest)?;
+        }
+    }
+    let mut lease = None;
+    if restored.is_none() && ctx.cooperative {
+        let store = ctx.store.expect("cooperative mode implies a store");
+        let key = format!("prune:{}", g.tag);
+        match store.try_lease(ctx.fingerprint, &key, &ctx.lease_cfg)? {
+            LeaseOutcome::Held => {
+                // a live peer is pruning this group — poll back later
+                // and restore its checkpoint instead of re-pruning
+                defer(ctx, Job::Prune { group });
+                return Ok(());
+            }
+            LeaseOutcome::Acquired { lease: l, took_over } => {
+                note_takeover(ctx, took_over, &key, wid);
+                ctx.leases.insert(&l);
+                // the broken holder may have committed before dying
+                restored = store.get_checkpoint(
+                    ctx.fingerprint, g.pruner, g.pattern,
+                    &pipe.ctx().session.manifest)?;
+                lease = Some(l);
+            }
+        }
+    }
+    let mut did_prune = false;
+    let pruned = match restored {
+        Some(ck) => {
+            eprintln!("[scheduler w{wid}] restored pruned checkpoint \
+                       {}", g.tag);
+            ck
+        }
+        None => {
+            let pruned = pipe.prune(registry::pruner(g.pruner)?,
+                                    g.pattern)?;
+            if let Some(store) = ctx.store {
+                store.put_checkpoint(ctx.fingerprint, &pruned)?;
+            }
+            did_prune = true;
+            pruned
+        }
+    };
+    if let Some(l) = lease {
+        ctx.leases.remove(&l);
+        ctx.store.expect("cooperative mode implies a store").release(&l)?;
+    }
+    let mut st = ctx.shared.lock();
+    if did_prune {
+        st.prunes_run.push(g.tag.clone());
+    }
+    st.checkpoints[group] = Some(Arc::new(pruned));
+    // depth-first: this group's recoveries run before further prunes, so
+    // resident checkpoints stay bounded by the worker count
+    let pending = std::mem::take(&mut st.waiting[group]);
+    for job in pending.into_iter().rev() {
+        st.ready.push_front(job);
+    }
+    st.outstanding -= 1;
+    drop(st);
+    ctx.shared.cv.notify_all();
+    Ok(())
+}
+
+fn run_recover(ctx: &WorkerCtx<'_, '_>, pipe: &Pipeline<'_>, group: usize,
+               cell: usize, wid: usize) -> Result<()> {
+    let g = &ctx.plan.groups[group];
+    let c = &g.cells[cell];
+    let mut lease = None;
+    if ctx.cooperative {
+        let store = ctx.store.expect("cooperative mode implies a store");
+        // a peer may have finished this cell since it was scheduled
+        if let Some(r) = store.get_record(ctx.fingerprint, &c.key)? {
+            eprintln!("[scheduler w{wid}] adopted {} from a peer", c.key);
+            return finish_cell(ctx, group, cell, r, wid);
+        }
+        match store.try_lease(ctx.fingerprint, &c.key, &ctx.lease_cfg)? {
+            LeaseOutcome::Held => {
+                defer(ctx, Job::Recover { group, cell });
+                return Ok(());
+            }
+            LeaseOutcome::Acquired { lease: l, took_over } => {
+                note_takeover(ctx, took_over, &c.key, wid);
+                ctx.leases.insert(&l);
+                // the broken holder may have committed before dying
+                if let Some(r) =
+                    store.get_record(ctx.fingerprint, &c.key)?
+                {
+                    ctx.leases.remove(&l);
+                    store.release(&l)?;
+                    eprintln!("[scheduler w{wid}] adopted {} from a peer",
+                              c.key);
+                    return finish_cell(ctx, group, cell, r, wid);
+                }
+                lease = Some(l);
+            }
+        }
+    }
+    let checkpoint = {
+        let st = ctx.shared.lock();
+        st.checkpoints[group]
+            .clone()
+            .expect("recovery scheduled before its prune completed")
+    };
+    let recovery = registry::recovery(c.recovery)?;
+    let (_params, _masks, record) =
+        pipe.recover(checkpoint.as_ref(), recovery)?;
+    drop(checkpoint);
+    if let Some(store) = ctx.store {
+        store.put_record(ctx.fingerprint, &record)?;
+    }
+    if let Some(l) = lease {
+        ctx.leases.remove(&l);
+        ctx.store.expect("cooperative mode implies a store").release(&l)?;
+    }
+    finish_cell(ctx, group, cell, record, wid)
 }

@@ -26,9 +26,41 @@
 //! so a torn multi-file checkpoint is never visible to a resumed run.
 //! Unreadable store entries are treated as absent (the cell re-runs),
 //! never as fatal.
+//!
+//! ## Cell leasing (multi-process sweeps)
+//!
+//! N independent `ebft grid --resume` processes — possibly on different
+//! hosts over a shared filesystem — drain one sweep DAG cooperatively
+//! through *leases* under `<root>/<fingerprint>/leases/`:
+//!
+//! ```text
+//! <root>/<fingerprint>/leases/<key>-<hash>.lease
+//!   {"key": …, "pid": …, "host": …, "token": …, "beat_ms": …}
+//! ```
+//!
+//! The claim primitive is `hard_link(private-temp, lease)`: link fails
+//! with `AlreadyExists` iff someone holds the lease, and succeeds
+//! atomically otherwise — the exclusive-create analogue of the store's
+//! rename-into-place writes, and just as portable across NFS-style
+//! shared filesystems. Holders re-stamp `beat_ms` every
+//! `heartbeat_ms`; a lease whose beat is older than `stale_ms` is dead
+//! (crashed or partitioned holder) and any process may *break* it by
+//! renaming the lease file away — rename picks exactly one winner among
+//! concurrent breakers — and then re-claiming. `release` deletes the
+//! file only while it still carries the holder's own token.
+//!
+//! Exactly-once is best-effort, not absolute: a holder paused longer
+//! than `stale_ms` (GC-less Rust, so think SIGSTOP or NFS partition)
+//! can lose its lease mid-cell and the cell runs twice. That is benign
+//! by construction — cells are deterministic, records content-addressed
+//! and atomically replaced with identical bytes — so the protocol
+//! optimizes for liveness: no fsync barriers, no lock server, nothing
+//! a crashed process can leave behind that a peer cannot break.
 
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
 
 use crate::config::FtConfig;
 use crate::data::Split;
@@ -147,8 +179,11 @@ impl RunStore {
     /// Persist a completed cell record (atomic).
     pub fn put_record(&self, fingerprint: &str, record: &RunRecord)
                       -> Result<()> {
+        crate::util::faults::kill_point("record.before_write");
         let path = self.cell_path(fingerprint, &record.key());
-        atomic_write(&path, record.to_json().dump().as_bytes())
+        atomic_write(&path, record.to_json().dump().as_bytes())?;
+        crate::util::faults::kill_point("record.after_write");
+        Ok(())
     }
 
     fn ckpt_base(&self, fingerprint: &str, pruner: &str,
@@ -169,13 +204,18 @@ impl RunStore {
         // compact encoding: pruned params are mostly zeros, so the
         // checkpoint shrinks with sparsity (masks pack to 1 bit/weight)
         pruned.params.save_compact(&with_ext(&base, "params.ebft"))?;
+        crate::util::faults::kill_point("ckpt.after_params");
         pruned.masks.save(&with_ext(&base, "masks.ebft"))?;
+        crate::util::faults::kill_point("ckpt.after_masks");
         let mut meta = Json::obj();
         meta.set("pruner", Json::Str(pruned.pruner.clone()));
         meta.set("pruner_label", Json::Str(pruned.pruner_label.clone()));
         meta.set("pattern", Json::Str(pruned.pattern.label()));
         meta.set("prune_secs", Json::Num(pruned.prune_secs));
-        atomic_write(&with_ext(&base, "meta.json"), meta.dump().as_bytes())
+        atomic_write(&with_ext(&base, "meta.json"),
+                     meta.dump().as_bytes())?;
+        crate::util::faults::kill_point("ckpt.after_meta");
+        Ok(())
     }
 
     /// Restore an in-flight pruned checkpoint, or `None` when absent or
@@ -214,6 +254,232 @@ impl RunStore {
         }
         Ok(())
     }
+
+    fn lease_path(&self, fingerprint: &str, key: &str) -> PathBuf {
+        self.root
+            .join(fingerprint)
+            .join("leases")
+            .join(format!("{}.lease", Self::file_name(key)))
+    }
+
+    /// Try to claim the lease on `key` (see the module docs for the
+    /// protocol). Never blocks: the answer is [`LeaseOutcome::Acquired`]
+    /// or [`LeaseOutcome::Held`], and a holder's crash is survivable by
+    /// any peer once its heartbeat goes stale.
+    pub fn try_lease(&self, fingerprint: &str, key: &str,
+                     cfg: &LeaseConfig) -> Result<LeaseOutcome> {
+        self.try_lease_at(fingerprint, key, cfg, now_ms())
+    }
+
+    /// [`RunStore::try_lease`] at an explicit wall-clock instant —
+    /// the seam the lease-state-machine property tests drive time
+    /// through.
+    pub fn try_lease_at(&self, fingerprint: &str, key: &str,
+                        cfg: &LeaseConfig, now_ms: u64)
+                        -> Result<LeaseOutcome> {
+        let path = self.lease_path(fingerprint, key);
+        let dir = path.parent().expect("lease path has a parent");
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let token = fresh_token();
+        let name = path.file_name().expect("lease file name")
+            .to_string_lossy().into_owned();
+        let claim = dir.join(format!(".{name}.claim.{token}"));
+        std::fs::write(&claim, lease_json(key, &token, now_ms).dump())
+            .with_context(|| format!("staging {}", claim.display()))?;
+        let mut took_over = false;
+        let outcome = loop {
+            match std::fs::hard_link(&claim, &path) {
+                Ok(()) => {
+                    break Ok(LeaseOutcome::Acquired {
+                        lease: Lease { path: path.clone(), token },
+                        took_over,
+                    });
+                }
+                Err(e) if e.kind()
+                    == std::io::ErrorKind::AlreadyExists => {
+                    let beat = read_lease(&path)
+                        .map(|(_, beat)| beat).unwrap_or(0);
+                    if now_ms.saturating_sub(beat) < cfg.stale_ms {
+                        break Ok(LeaseOutcome::Held);
+                    }
+                    // stale (or unreadable, which only a crashed
+                    // claimant could leave): break it. rename picks
+                    // exactly one winner among concurrent breakers;
+                    // the loser sees the fresh claim next iteration
+                    // and reports Held.
+                    let brk = dir.join(format!(".{name}.break.{token}"));
+                    match std::fs::rename(&path, &brk) {
+                        Ok(()) => {
+                            std::fs::remove_file(&brk).ok();
+                            took_over = true;
+                        }
+                        Err(_) => break Ok(LeaseOutcome::Held),
+                    }
+                }
+                Err(e) => {
+                    break Err(e).with_context(|| {
+                        format!("claiming {}", path.display())
+                    });
+                }
+            }
+        };
+        std::fs::remove_file(&claim).ok();
+        if let Ok(LeaseOutcome::Acquired { .. }) = &outcome {
+            crate::util::faults::kill_point("lease.after_claim");
+        }
+        outcome
+    }
+
+    /// Re-stamp a held lease's heartbeat. Returns `false` when the
+    /// lease is no longer ours (broken by a peer after we went stale) —
+    /// the holder should treat its work as possibly duplicated but
+    /// carry on: the records it writes are identical to the peer's.
+    pub fn heartbeat(&self, lease: &Lease) -> Result<bool> {
+        self.heartbeat_at(lease, now_ms())
+    }
+
+    /// [`RunStore::heartbeat`] at an explicit instant (test seam).
+    pub fn heartbeat_at(&self, lease: &Lease, now_ms: u64)
+                        -> Result<bool> {
+        let key = match read_lease_key(&lease.path, &lease.token) {
+            Some(key) => key,
+            None => return Ok(false),
+        };
+        atomic_write(&lease.path,
+                     lease_json(&key, &lease.token, now_ms)
+                         .dump().as_bytes())?;
+        Ok(true)
+    }
+
+    /// Drop a held lease. A lease already broken away (token mismatch,
+    /// file gone) is a no-op — the peer that broke it owns the file now.
+    pub fn release(&self, lease: &Lease) -> Result<()> {
+        crate::util::faults::kill_point("lease.before_release");
+        if read_lease_key(&lease.path, &lease.token).is_some() {
+            std::fs::remove_file(&lease.path).ok();
+        }
+        Ok(())
+    }
+}
+
+/// Timing knobs of the lease protocol, overridable via
+/// `EBFT_LEASE_HEARTBEAT_MS` / `EBFT_LEASE_STALE_MS` /
+/// `EBFT_LEASE_POLL_MS` (the fault-injection suite shrinks them to keep
+/// takeover tests fast).
+#[derive(Clone, Debug)]
+pub struct LeaseConfig {
+    /// How often a holder re-stamps `beat_ms`.
+    pub heartbeat_ms: u64,
+    /// A beat older than this marks the holder dead. Keep well above
+    /// `heartbeat_ms` (10× by default) so a merely slow holder is not
+    /// declared dead.
+    pub stale_ms: u64,
+    /// How often a worker re-polls cells that are leased elsewhere.
+    pub poll_ms: u64,
+}
+
+impl Default for LeaseConfig {
+    fn default() -> Self {
+        LeaseConfig { heartbeat_ms: 1000, stale_ms: 10_000, poll_ms: 200 }
+    }
+}
+
+impl LeaseConfig {
+    pub fn from_env() -> Self {
+        let d = LeaseConfig::default();
+        LeaseConfig {
+            heartbeat_ms: env_ms("EBFT_LEASE_HEARTBEAT_MS", d.heartbeat_ms),
+            stale_ms: env_ms("EBFT_LEASE_STALE_MS", d.stale_ms),
+            poll_ms: env_ms("EBFT_LEASE_POLL_MS", d.poll_ms),
+        }
+    }
+}
+
+fn env_ms(var: &str, default: u64) -> u64 {
+    match std::env::var(var) {
+        Err(_) => default,
+        Ok(v) => match v.parse::<u64>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                eprintln!("[store] ignoring invalid {var}='{v}' \
+                           (want an integer ≥ 1 ms)");
+                default
+            }
+        },
+    }
+}
+
+/// A held claim: the lease file plus the token proving it is ours.
+#[derive(Clone, Debug)]
+pub struct Lease {
+    pub path: PathBuf,
+    pub token: String,
+}
+
+/// Result of a claim attempt.
+#[derive(Debug)]
+pub enum LeaseOutcome {
+    /// The lease is ours; `took_over` means a stale holder was broken.
+    Acquired { lease: Lease, took_over: bool },
+    /// A live peer holds it — skip the cell and poll back later.
+    Held,
+}
+
+/// Wall-clock milliseconds since the epoch — comparable across hosts
+/// sharing a filesystem to the accuracy the stale threshold needs
+/// (seconds, not milliseconds).
+pub fn now_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Process-unique claim token: pid + a counter + a nanosecond stamp.
+/// Two attempts never share one, so `.claim.{token}` staging files and
+/// `.break.{token}` rename targets cannot collide even within one
+/// process.
+fn fresh_token() -> String {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let nanos = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.subsec_nanos())
+        .unwrap_or(0);
+    format!("{}-{}-{nanos}", std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed))
+}
+
+fn lease_json(key: &str, token: &str, beat_ms: u64) -> Json {
+    let mut j = Json::obj();
+    j.set("key", Json::Str(key.to_string()));
+    j.set("pid", Json::Num(f64::from(std::process::id())));
+    j.set("host", Json::Str(std::env::var("HOSTNAME")
+        .unwrap_or_else(|_| "unknown".to_string())));
+    j.set("token", Json::Str(token.to_string()));
+    j.set("beat_ms", Json::Num(beat_ms as f64));
+    j
+}
+
+/// `(token, beat_ms)` of the lease at `path`, or `None` when absent or
+/// unreadable. Claims land complete (hard link of a fully written
+/// file), so unreadable means a crashed writer's debris — callers
+/// treat it as maximally stale.
+fn read_lease(path: &Path) -> Option<(String, u64)> {
+    let j = Json::parse_file(path).ok()?;
+    let token = j.get("token").ok()?.as_str().ok()?.to_string();
+    let beat = j.get("beat_ms").ok()?.as_f64().ok()? as u64;
+    Some((token, beat))
+}
+
+/// The key recorded in the lease at `path`, iff the lease still carries
+/// `token` (i.e. it is still ours).
+fn read_lease_key(path: &Path, token: &str) -> Option<String> {
+    let j = Json::parse_file(path).ok()?;
+    if j.get("token").ok()?.as_str().ok()? != token {
+        return None;
+    }
+    Some(j.get("key").ok()?.as_str().ok()?.to_string())
 }
 
 fn with_ext(base: &Path, ext: &str) -> PathBuf {
@@ -260,5 +526,130 @@ mod tests {
         // distinct keys that sanitize identically still get distinct names
         assert_ne!(RunStore::file_name("wanda/w.Ours/50%"),
                    RunStore::file_name("wanda_w.Ours_50%"));
+    }
+
+    fn tmpstore(tag: &str) -> RunStore {
+        let d = std::env::temp_dir()
+            .join(format!("ebft-lease-{tag}-{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        RunStore::open(&d).unwrap()
+    }
+
+    fn acquired(o: LeaseOutcome) -> Lease {
+        match o {
+            LeaseOutcome::Acquired { lease, .. } => lease,
+            LeaseOutcome::Held => panic!("expected to acquire the lease"),
+        }
+    }
+
+    #[test]
+    fn lease_is_exclusive_until_released() {
+        let s = tmpstore("excl");
+        let cfg = LeaseConfig::default();
+        let l = acquired(s.try_lease_at("fp", "cell-a", &cfg, 1000)
+            .unwrap());
+        // a second claimant (any process) sees Held while the beat is
+        // fresh
+        assert!(matches!(
+            s.try_lease_at("fp", "cell-a", &cfg, 1000).unwrap(),
+            LeaseOutcome::Held));
+        // an unrelated key is independent
+        let other = acquired(s.try_lease_at("fp", "cell-b", &cfg, 1000)
+            .unwrap());
+        s.release(&other).unwrap();
+        s.release(&l).unwrap();
+        let re = s.try_lease_at("fp", "cell-a", &cfg, 1001).unwrap();
+        match re {
+            LeaseOutcome::Acquired { took_over, .. } => {
+                assert!(!took_over, "released lease is not a takeover");
+            }
+            LeaseOutcome::Held => panic!("released lease must be free"),
+        }
+        // no staging debris next to the lease files
+        let leases = s.root().join("fp").join("leases");
+        for e in std::fs::read_dir(&leases).unwrap() {
+            let n = e.unwrap().file_name().to_string_lossy().into_owned();
+            assert!(n.ends_with(".lease"), "debris in leases/: {n}");
+        }
+    }
+
+    #[test]
+    fn stale_lease_is_taken_over() {
+        let s = tmpstore("stale");
+        let cfg = LeaseConfig::default();
+        let dead = acquired(s.try_lease_at("fp", "cell", &cfg, 1000)
+            .unwrap());
+        // before stale_ms elapses the dead holder still blocks peers
+        assert!(matches!(
+            s.try_lease_at("fp", "cell", &cfg,
+                           1000 + cfg.stale_ms - 1).unwrap(),
+            LeaseOutcome::Held));
+        match s.try_lease_at("fp", "cell", &cfg, 1000 + cfg.stale_ms)
+            .unwrap() {
+            LeaseOutcome::Acquired { lease, took_over } => {
+                assert!(took_over, "breaking a stale lease is a takeover");
+                // the dead holder's release is now a no-op: the file
+                // carries the new token
+                s.release(&dead).unwrap();
+                assert!(lease.path.exists(),
+                        "stale holder's release must not drop the \
+                         taker's lease");
+                s.release(&lease).unwrap();
+                assert!(!lease.path.exists());
+            }
+            LeaseOutcome::Held => panic!("stale lease must be breakable"),
+        }
+    }
+
+    #[test]
+    fn heartbeat_refreshes_and_detects_loss() {
+        let s = tmpstore("beat");
+        let cfg = LeaseConfig::default();
+        let l = acquired(s.try_lease_at("fp", "cell", &cfg, 1000)
+            .unwrap());
+        // heartbeats keep pushing staleness out
+        assert!(s.heartbeat_at(&l, 5000).unwrap());
+        assert!(matches!(
+            s.try_lease_at("fp", "cell", &cfg,
+                           5000 + cfg.stale_ms - 1).unwrap(),
+            LeaseOutcome::Held));
+        // a taker breaks it once stale; the old holder's next heartbeat
+        // reports the loss instead of resurrecting the lease
+        let taker = acquired(s.try_lease_at("fp", "cell", &cfg,
+                                            5000 + cfg.stale_ms).unwrap());
+        assert!(!s.heartbeat_at(&l, 5000 + cfg.stale_ms + 1).unwrap(),
+                "lost lease must not heartbeat");
+        assert!(s.heartbeat_at(&taker, 5000 + cfg.stale_ms + 2).unwrap());
+        s.release(&taker).unwrap();
+    }
+
+    #[test]
+    fn unreadable_lease_counts_as_stale() {
+        let s = tmpstore("garbage");
+        let cfg = LeaseConfig::default();
+        let path = s.lease_path("fp", "cell");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, b"not json").unwrap();
+        // unreadable ⇒ beat 0 ⇒ stale at any realistic wall clock
+        match s.try_lease_at("fp", "cell", &cfg, cfg.stale_ms).unwrap() {
+            LeaseOutcome::Acquired { took_over, lease } => {
+                assert!(took_over);
+                s.release(&lease).unwrap();
+            }
+            LeaseOutcome::Held => {
+                panic!("garbage lease must be breakable");
+            }
+        }
+    }
+
+    #[test]
+    fn lease_config_defaults_are_sane() {
+        let d = LeaseConfig::default();
+        assert!(d.stale_ms >= 10 * d.heartbeat_ms,
+                "stale threshold must dominate the heartbeat interval");
+        assert!(d.poll_ms < d.stale_ms);
+        if std::env::var("EBFT_LEASE_STALE_MS").is_err() {
+            assert_eq!(LeaseConfig::from_env().stale_ms, d.stale_ms);
+        }
     }
 }

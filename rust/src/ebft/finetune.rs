@@ -23,7 +23,7 @@ use super::cache::ActivationCache;
 use super::convergence::ConvergenceDetector;
 use crate::config::FtConfig;
 use crate::masks::MaskSet;
-use crate::model::ParamStore;
+use crate::model::{DenseModel, ParamStore};
 use crate::runtime::{DeviceBuffer, Session};
 use crate::tensor::Tensor;
 use crate::util::Pcg64;
@@ -75,7 +75,13 @@ pub fn ft_artifact_name(impl_name: &str) -> String {
 
 /// Fine-tune `sparse` (with `masks`) toward `dense` on the calibration
 /// batches. Mutates `sparse` in place; returns the per-block report.
-pub fn finetune(session: &Session, dense: &ParamStore,
+///
+/// The teacher is read strictly block-by-block — embed once up front,
+/// then block `l`'s nine tensors only while computing block `l`'s
+/// targets — so a streamed [`DenseModel`] with a one-block budget never
+/// holds more than one teacher block resident (the paper's single-GPU
+/// memory shape).
+pub fn finetune(session: &Session, dense: &DenseModel,
                 sparse: &mut ParamStore, masks: &MaskSet, cfg: &FtConfig,
                 calib_batches: &[Vec<i32>], impl_name: &str)
                 -> Result<EbftReport> {
@@ -91,8 +97,10 @@ pub fn finetune(session: &Session, dense: &ParamStore,
     let mut student = ActivationCache::new(n_batches, &act_shape,
                                            cfg.cache_budget_bytes / 2,
                                            "student");
-    super::streams::embed_into(session, dense.get("embed")?, calib_batches,
+    let embed = dense.get("embed")?;
+    super::streams::embed_into(session, &embed, calib_batches,
                                &mut teacher, &mut student)?;
+    drop(embed);
 
     let mut report = EbftReport::default();
     let sw_total = std::time::Instant::now();
@@ -111,9 +119,15 @@ pub fn finetune(session: &Session, dense: &ParamStore,
             .iter()
             .map(|s| Tensor::ones(s))
             .collect();
-        super::streams::block_fwd_sweep(
-            session, &dense.block_params(&session.manifest, l), &ones,
-            &mut teacher, Some(&mut targets))?;
+        {
+            let dbp = dense.block_params(&session.manifest, l)?;
+            let refs: Vec<&Tensor> = dbp.iter().collect();
+            super::streams::block_fwd_sweep(session, &refs, &ones,
+                                            &mut teacher,
+                                            Some(&mut targets))?;
+            // dbp drops here: the teacher block's host copy is gone
+            // before the fine-tune loop binds the student block
+        }
 
         // ---- fine-tune block l ----
         // One plan per block: masks persistent, params + Adam state

@@ -17,7 +17,7 @@ use anyhow::Result;
 use super::cache::ActivationCache;
 use crate::config::FtConfig;
 use crate::masks::MaskSet;
-use crate::model::ParamStore;
+use crate::model::{DenseModel, ParamStore};
 use crate::runtime::Session;
 use crate::tensor::Tensor;
 
@@ -60,9 +60,10 @@ pub fn swap_step(mask: &mut Tensor, w: &Tensor, grad: &Tensor, k: usize) {
     }
 }
 
-/// Mask-tune the whole model block by block. Weights never change.
-pub fn masktune(session: &Session, dense: &ParamStore, params: &ParamStore,
-                masks: &mut MaskSet, cfg: &FtConfig,
+/// Mask-tune the whole model block by block. Weights never change. Like
+/// [`super::finetune`], the teacher streams strictly block-by-block.
+pub fn masktune(session: &Session, dense: &DenseModel,
+                params: &ParamStore, masks: &mut MaskSet, cfg: &FtConfig,
                 calib_batches: &[Vec<i32>]) -> Result<()> {
     let d = session.manifest.dims.clone();
     let n_batches = calib_batches.len();
@@ -74,8 +75,10 @@ pub fn masktune(session: &Session, dense: &ParamStore, params: &ParamStore,
     let mut student = ActivationCache::new(n_batches, &act_shape,
                                            cfg.cache_budget_bytes / 2,
                                            "mt-student");
-    super::streams::embed_into(session, dense.get("embed")?, calib_batches,
+    let embed = dense.get("embed")?;
+    super::streams::embed_into(session, &embed, calib_batches,
                                &mut teacher, &mut student)?;
+    drop(embed);
 
     for l in 0..d.n_layers {
         // dense targets (dense weights + all-ones masks, bound once)
@@ -88,9 +91,13 @@ pub fn masktune(session: &Session, dense: &ParamStore, params: &ParamStore,
             .iter()
             .map(|s| Tensor::ones(s))
             .collect();
-        super::streams::block_fwd_sweep(
-            session, &dense.block_params(&session.manifest, l), &ones,
-            &mut teacher, Some(&mut targets))?;
+        {
+            let dbp = dense.block_params(&session.manifest, l)?;
+            let refs: Vec<&Tensor> = dbp.iter().collect();
+            super::streams::block_fwd_sweep(session, &refs, &ones,
+                                            &mut teacher,
+                                            Some(&mut targets))?;
+        }
 
         let mut grad_plan = session.plan("block_grad")?;
         grad_plan

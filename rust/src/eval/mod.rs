@@ -2,5 +2,6 @@
 pub mod perplexity;
 pub mod zeroshot;
 
-pub use perplexity::{bind_lm_inputs, mean_nll_bound, perplexity};
+pub use perplexity::{bind_dense_lm_inputs, bind_lm_inputs,
+                     mean_nll_bound, perplexity};
 pub use zeroshot::{run_suite, TaskResult};

@@ -5,7 +5,7 @@ use anyhow::{bail, Result};
 
 use crate::data::{Batcher, MarkovCorpus, Split};
 use crate::masks::MaskSet;
-use crate::model::ParamStore;
+use crate::model::{DenseModel, ParamStore};
 use crate::runtime::{Plan, Session};
 
 /// Bind a model (all params + all masks, flat manifest order) to an
@@ -15,6 +15,28 @@ use crate::runtime::{Plan, Session};
 pub fn bind_lm_inputs(plan: &mut Plan<'_>, params: &ParamStore,
                       masks: &MaskSet) -> Result<()> {
     plan.bind_indexed("param", params.tensors.iter())?;
+    bind_flat_masks(plan, masks)
+}
+
+/// [`bind_lm_inputs`] for a (possibly streamed) teacher: `param.{j}`
+/// slots bind one owned tensor at a time, so a streamed dense eval
+/// holds at most one host tensor beyond the source's block-cache budget
+/// — the device upload happens inside `bind_tensor`, after which the
+/// host copy drops.
+pub fn bind_dense_lm_inputs(plan: &mut Plan<'_>, dense: &DenseModel,
+                            masks: &MaskSet) -> Result<()> {
+    if let Some(store) = dense.as_store() {
+        return bind_lm_inputs(plan, store, masks);
+    }
+    let names = plan.session().manifest.param_names.clone();
+    for (j, name) in names.iter().enumerate() {
+        let t = dense.get(name)?;
+        plan.bind_tensor(&format!("param.{j}"), &t)?;
+    }
+    bind_flat_masks(plan, masks)
+}
+
+fn bind_flat_masks(plan: &mut Plan<'_>, masks: &MaskSet) -> Result<()> {
     let n_layers = plan.session().manifest.dims.n_layers;
     let flat_masks = (0..n_layers).flat_map(|l| masks.block(l).iter());
     plan.bind_indexed("mask", flat_masks)?;

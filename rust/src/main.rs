@@ -32,6 +32,15 @@
 //! rounds every stored param/activation (compute stays f32), halves
 //! compact checkpoint payloads, and — unlike the other knobs — joins
 //! the run-store fingerprint because it moves recorded numbers.
+//! `--max-resident-blocks N` (default `EBFT_MAX_RESIDENT_BLOCKS` or 0)
+//! streams the dense teacher out-of-core with at most N block groups
+//! resident — bit-identical results, strictly lower peak teacher
+//! memory. `--synthetic` on any experiment subcommand swaps in the tiny
+//! synthetic manifest on the reference backend (no AOT artifacts
+//! needed), and running several `ebft grid --resume` processes against
+//! one runs dir drains a single sweep cooperatively through store
+//! leases (stale holders are taken over; records merge byte-identical
+//! to a serial run).
 //!
 //! Examples:
 //!   ebft pretrain --config small --steps 300
@@ -47,7 +56,7 @@ use ebft::coordinator::{self, base_model, Grid, GridResult, Pipeline,
                         PipelineBuilder, RunStore, Scheduler, SweepEnv};
 use ebft::data::{MarkovCorpus, Split};
 use ebft::masks::MaskSet;
-use ebft::model::{Manifest, ParamStore};
+use ebft::model::{DenseModel, Manifest, ParamSource, ParamStore};
 use ebft::pruning::Pattern;
 use ebft::runtime::Session;
 use ebft::serve::{Sampler, Sampling};
@@ -74,8 +83,32 @@ fn parse_pattern(args: &Args) -> Result<Pattern> {
     }
 }
 
+/// The directory worker sessions open over: the synthetic manifest dir
+/// under runs/ with `--synthetic`, else the compiled artifact dir.
+fn artifact_dir(args: &Args, paths: &Paths) -> std::path::PathBuf {
+    if args.has_flag("synthetic") {
+        paths.runs.join("synth-tiny")
+    } else {
+        paths.artifact_dir(args.get_or("config", "small"))
+    }
+}
+
 fn open(args: &Args) -> Result<(Session, Paths, MarkovCorpus)> {
     let paths = Paths::from_args(args);
+    let seed = args.get_u64("corpus-seed", 7)?;
+    if args.has_flag("synthetic") {
+        // artifact-free path: write the tiny synthetic manifest under
+        // runs/ and run on the pure-Rust reference backend — the CI
+        // route for grid/pipeline smoke tests and the serving commands
+        let dir = paths.runs.join("synth-tiny");
+        let manifest = ebft::model::write_synthetic(
+            &dir, &ebft::model::SynthConfig::tiny())
+            .context("writing the synthetic tiny manifest")?;
+        let session = Session::open_kind(
+            manifest, ebft::runtime::BackendKind::Reference)?;
+        let corpus = MarkovCorpus::new(session.manifest.dims.vocab, seed);
+        return Ok((session, paths, corpus));
+    }
     let config = args.get_or("config", "small");
     let session = Session::open_dir(&paths.artifact_dir(config))
         .with_context(|| format!(
@@ -83,14 +116,13 @@ fn open(args: &Args) -> Result<(Session, Paths, MarkovCorpus)> {
              with `make artifacts`, or directly:\n  cd python && python3 \
              -m compile.aot --config {config} --out ../artifacts",
             paths.artifact_dir(config).display()))?;
-    let seed = args.get_u64("corpus-seed", 7)?;
     let corpus = MarkovCorpus::new(session.manifest.dims.vocab, seed);
     Ok((session, paths, corpus))
 }
 
 /// Assemble the pipeline every experiment subcommand drives.
 fn build_pipeline<'a>(args: &Args, session: &'a Session,
-                      corpus: &'a MarkovCorpus, dense: &'a ParamStore)
+                      corpus: &'a MarkovCorpus, dense: &'a DenseModel)
                       -> Result<Pipeline<'a>> {
     PipelineBuilder::new()
         .session(session)
@@ -157,8 +189,9 @@ fn print_usage() {
     println!();
     println!("usage: ebft <pretrain|prune|finetune|pipeline|grid|flap|eval|zeroshot|generate|serve-bench|compress|info> [--options]");
     println!("common options: --config tiny|small|base  --artifacts DIR  --runs DIR  --threads N  --sparse-mode off|auto|force  --dtype f32|bf16");
+    println!("teacher options: --max-resident-blocks N  (0 = fully resident; N > 0 streams the dense teacher out-of-core, at most N block groups in memory)");
     println!("compress options: --in FILE.ebft  --out FILE.ebft  [--dense]");
-    println!("sweep options (pipeline/grid): --jobs N  --resume");
+    println!("sweep options (pipeline/grid): --jobs N  --resume  --synthetic  (N processes with --resume on one runs dir drain the sweep cooperatively via store leases)");
     println!("serving options (generate/serve-bench): --synthetic  --max-new N  --top-k K --temperature T");
     println!("serve-bench options: --tenants N  --requests N  --workers N  --max-batch N  --deadline-ms MS");
     println!("see README.md for full examples");
@@ -199,9 +232,47 @@ fn load_base(args: &Args, session: &Session, paths: &Paths,
     base_model(session, corpus, &paths.runs, steps, seed)
 }
 
+/// Teacher residency budget: `--max-resident-blocks` beats
+/// `EBFT_MAX_RESIDENT_BLOCKS` beats 0 (fully resident).
+fn max_resident_blocks(args: &Args) -> Result<usize> {
+    if let Some(v) = args.get("max-resident-blocks") {
+        return v.parse::<usize>().ok().context(
+            "--max-resident-blocks expects an integer ≥ 0 \
+             (0 = fully resident)");
+    }
+    match std::env::var("EBFT_MAX_RESIDENT_BLOCKS") {
+        Err(_) => Ok(0),
+        Ok(v) => v.parse::<usize>().ok().with_context(|| format!(
+            "EBFT_MAX_RESIDENT_BLOCKS='{v}' is not an integer ≥ 0")),
+    }
+}
+
+/// The dense teacher as a [`DenseModel`]: out-of-core (block-streamed
+/// from the checkpoint on disk, under the residency budget) when
+/// `--max-resident-blocks`/`EBFT_MAX_RESIDENT_BLOCKS` is > 0, fully
+/// resident otherwise. Both variants are bit-identical to every consumer.
+fn load_dense(args: &Args, session: &Session, paths: &Paths,
+              corpus: &MarkovCorpus) -> Result<DenseModel> {
+    let budget = max_resident_blocks(args)?;
+    if let Some(ckpt) = args.get("ckpt") {
+        let path = std::path::Path::new(ckpt);
+        return Ok(if budget > 0 {
+            DenseModel::streamed(ParamSource::open_ckpt(
+                path, &session.manifest, budget)?)
+        } else {
+            DenseModel::resident(ParamStore::load(path,
+                                                  &session.manifest)?)
+        });
+    }
+    let steps = args.get_usize("steps", 300)?;
+    let seed = args.get_u64("seed", 0)?;
+    coordinator::base_dense_model(session, corpus, &paths.runs, steps,
+                                  seed, budget)
+}
+
 fn cmd_prune(args: &Args) -> Result<()> {
     let (session, paths, corpus) = open(args)?;
-    let dense = load_base(args, &session, &paths, &corpus)?;
+    let dense = load_dense(args, &session, &paths, &corpus)?;
     let pruner = coordinator::pruner(args.get_or("method", "wanda"))?;
     let pattern = parse_pattern(args)?;
 
@@ -226,7 +297,7 @@ fn cmd_prune(args: &Args) -> Result<()> {
 
 fn cmd_finetune(args: &Args) -> Result<()> {
     let (session, paths, corpus) = open(args)?;
-    let dense = load_base(args, &session, &paths, &corpus)?;
+    let dense = load_dense(args, &session, &paths, &corpus)?;
     let sparse_path = args.get("sparse").context("--sparse CKPT required")?;
     let masks_path = args.get("masks").context("--masks FILE required")?;
     let mut sparse = ParamStore::load(std::path::Path::new(sparse_path),
@@ -257,11 +328,10 @@ fn cmd_finetune(args: &Args) -> Result<()> {
 /// subcommands (spawned workers rebuild their pipelines from this, on
 /// the same backend the driver's session runs on).
 fn sweep_env<'a>(args: &Args, paths: &Paths, corpus: &'a MarkovCorpus,
-                 dense: &'a ParamStore, backend: ebft::runtime::BackendKind)
+                 dense: &'a DenseModel, backend: ebft::runtime::BackendKind)
                  -> Result<SweepEnv<'a>> {
-    let config = args.get_or("config", "small");
     Ok(SweepEnv {
-        artifact_dir: paths.artifact_dir(config),
+        artifact_dir: artifact_dir(args, paths),
         corpus,
         dense,
         ft: FtConfig::from_args(args)?,
@@ -272,6 +342,7 @@ fn sweep_env<'a>(args: &Args, paths: &Paths, corpus: &'a MarkovCorpus,
         backend,
         threads: args.get_usize("threads", 0)?,
         dtype: ebft::tensor::dtype::active_dtype(),
+        max_resident_blocks: max_resident_blocks(args)?,
     })
 }
 
@@ -281,14 +352,19 @@ fn dense_tag(args: &Args) -> Result<String> {
     if let Some(ckpt) = args.get("ckpt") {
         return Ok(format!("ckpt:{ckpt}"));
     }
-    Ok(format!("{}-seed{}-steps{}", args.get_or("config", "small"),
+    let config = if args.has_flag("synthetic") {
+        "synth-tiny"
+    } else {
+        args.get_or("config", "small")
+    };
+    Ok(format!("{config}-seed{}-steps{}",
                args.get_u64("seed", 0)?, args.get_usize("steps", 300)?))
 }
 
 /// Run a grid through the scheduler with the CLI's `--jobs`/`--resume`
 /// settings, recording every cell in `runs/store/`.
 fn run_sweep(args: &Args, paths: &Paths, session: &Session,
-             corpus: &MarkovCorpus, dense: &ParamStore, grid: &Grid)
+             corpus: &MarkovCorpus, dense: &DenseModel, grid: &Grid)
              -> Result<GridResult> {
     let store = RunStore::open(&paths.runs.join("store"))?;
     Scheduler::new(sweep_env(args, paths, corpus, dense,
@@ -302,7 +378,7 @@ fn run_sweep(args: &Args, paths: &Paths, session: &Session,
 
 fn cmd_pipeline(args: &Args) -> Result<()> {
     let (session, paths, corpus) = open(args)?;
-    let dense = load_base(args, &session, &paths, &corpus)?;
+    let dense = load_dense(args, &session, &paths, &corpus)?;
     let pruner = coordinator::pruner(args.get_or("method", "wanda"))?;
     let pattern = parse_pattern(args)?;
     let recovery = coordinator::recovery(args.get_or("ft", "ebft"))?;
@@ -355,7 +431,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
 /// `--sparsities`, `--nm 2:4[,4:8]` and `--structured 0.2[,..]`.
 fn cmd_grid(args: &Args) -> Result<()> {
     let (session, paths, corpus) = open(args)?;
-    let dense = load_base(args, &session, &paths, &corpus)?;
+    let dense = load_dense(args, &session, &paths, &corpus)?;
 
     let methods: Vec<&str> =
         args.get_or("methods", "magnitude,wanda,sparsegpt")
@@ -411,7 +487,7 @@ fn cmd_grid(args: &Args) -> Result<()> {
 /// --recover ebft|lora|none`.
 fn cmd_flap(args: &Args) -> Result<()> {
     let (session, paths, corpus) = open(args)?;
-    let dense = load_base(args, &session, &paths, &corpus)?;
+    let dense = load_dense(args, &session, &paths, &corpus)?;
     let fraction = args.get_f32("fraction", 0.2)?;
     let recover = args.get_or("recover", "ebft");
     if !matches!(recover, "none" | "ebft" | "lora") {
@@ -475,30 +551,16 @@ fn cmd_zeroshot(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Session + artifact dir for the serving subcommands. `--synthetic`
-/// writes the tiny synthetic manifest under runs/ and opens it on the
-/// pure-Rust reference backend (no AOT artifacts needed — the CI serve
-/// smoke path); otherwise the usual compiled-artifact path.
+/// Session + artifact dir for the serving subcommands. `--synthetic` is
+/// handled by [`open`] (tiny synthetic manifest on the reference
+/// backend); this just pairs the session with the directory serving
+/// workers re-open.
 fn open_serving(args: &Args)
                 -> Result<(Session, std::path::PathBuf, Paths,
                            MarkovCorpus)> {
-    if args.has_flag("synthetic") {
-        let paths = Paths::from_args(args);
-        let dir = paths.runs.join("synth-tiny");
-        let manifest = ebft::model::write_synthetic(
-            &dir, &ebft::model::SynthConfig::tiny())
-            .context("writing the synthetic tiny manifest")?;
-        let session = Session::open_kind(
-            manifest, ebft::runtime::BackendKind::Reference)?;
-        let seed = args.get_u64("corpus-seed", 7)?;
-        let corpus = MarkovCorpus::new(session.manifest.dims.vocab, seed);
-        Ok((session, dir, paths, corpus))
-    } else {
-        let config = args.get_or("config", "small").to_string();
-        let (session, paths, corpus) = open(args)?;
-        let dir = paths.artifact_dir(&config);
-        Ok((session, dir, paths, corpus))
-    }
+    let (session, paths, corpus) = open(args)?;
+    let dir = artifact_dir(args, &paths);
+    Ok((session, dir, paths, corpus))
 }
 
 fn sampling_from_args(args: &Args) -> Result<Sampling> {
@@ -584,7 +646,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     use ebft::serve::{serve, AdapterRegistry, Request, ServeConfig,
                       BASE_TENANT};
     let (session, artifact_dir, paths, corpus) = open_serving(args)?;
-    let dense = load_base(args, &session, &paths, &corpus)?;
+    let dense = load_dense(args, &session, &paths, &corpus)?;
     let pipe = build_pipeline(args, &session, &corpus, &dense)?;
     let pruner = coordinator::pruner(args.get_or("method", "magnitude"))?;
     let pattern = parse_pattern(args)?;

@@ -272,7 +272,202 @@ pub fn load(path: &Path) -> Result<Vec<(String, Tensor)>> {
         };
         out.push((String::from_utf8(name)?, Tensor::from_vec(&shape, data)));
     }
+    // exact-length contract: a checkpoint carries its entry count up
+    // front, so anything after the last payload is corruption (a torn
+    // concatenation, a bad copy) — reject it rather than silently
+    // ignoring it like a short file would be rejected by read_exact
+    let mut probe = [0u8; 1];
+    if r.read(&mut probe)? != 0 {
+        bail!("corrupt checkpoint: trailing bytes after the last entry \
+               in {}", path.display());
+    }
     Ok(out)
+}
+
+/// One tensor's location inside a scanned checkpoint: everything needed
+/// to decode it later with [`read_entry`] without touching the payload
+/// bytes now.
+#[derive(Clone, Debug)]
+pub struct CkptEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Absolute file offset of the payload (v1: raw f32s; v2: the enc
+    /// word).
+    pub payload_off: u64,
+    /// Container version, which selects the payload decoder.
+    pub version: u32,
+}
+
+impl CkptEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Index of a checkpoint's entries built by [`scan`].
+#[derive(Clone, Debug)]
+pub struct CkptIndex {
+    pub version: u32,
+    pub entries: Vec<CkptEntry>,
+}
+
+struct Scanner {
+    r: BufReader<std::fs::File>,
+    pos: u64,
+}
+
+impl Scanner {
+    fn read_exact(&mut self, buf: &mut [u8]) -> Result<()> {
+        self.r.read_exact(buf)?;
+        self.pos += buf.len() as u64;
+        Ok(())
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.read_exact(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    /// Skip payload bytes without reading them. Seeking past EOF does
+    /// not error here; the caller's final exact-length check catches a
+    /// truncated file.
+    fn skip(&mut self, n: u64) -> Result<()> {
+        self.r.seek_relative(n as i64)?;
+        self.pos += n;
+        Ok(())
+    }
+}
+
+/// Index a checkpoint without materializing any tensor: read the
+/// metadata stream (names, shapes, encodings), skip every payload, and
+/// validate the exact file length — the count is declared up front, so
+/// a scanned file is bit-for-bit accounted for even though no payload
+/// was decoded. This is the entry point of the out-of-core param path:
+/// [`crate::model::params::ParamSource`] scans once, then streams
+/// individual tensors with [`read_entry`].
+pub fn scan(path: &Path) -> Result<CkptIndex> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let file_len = file.metadata()?.len();
+    let mut s = Scanner { r: BufReader::new(file), pos: 0 };
+    let mut magic = [0u8; 8];
+    s.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not an EBFT checkpoint", path.display());
+    }
+    let version = s.u32()?;
+    if version != VERSION && version != VERSION_COMPACT {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let count = s.u32()? as usize;
+    let mut entries = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = s.u32()? as usize;
+        if name_len > 4096 {
+            bail!("corrupt checkpoint: name length {name_len}");
+        }
+        let mut name = vec![0u8; name_len];
+        s.read_exact(&mut name)?;
+        let rank = s.u32()? as usize;
+        if rank > 8 {
+            bail!("corrupt checkpoint: rank {rank}");
+        }
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(s.u32()? as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let payload_off = s.pos;
+        if version == VERSION {
+            s.skip(4 * numel as u64)?;
+        } else {
+            skip_compact_payload(&mut s, numel)?;
+        }
+        entries.push(CkptEntry {
+            name: String::from_utf8(name)?,
+            shape,
+            payload_off,
+            version,
+        });
+    }
+    if s.pos != file_len {
+        bail!("corrupt checkpoint: {} declares {} entries ending at byte \
+               {} but the file is {} bytes",
+              path.display(), count, s.pos, file_len);
+    }
+    Ok(CkptIndex { version, entries })
+}
+
+/// Advance past one v2 payload, reading only what sizing requires (the
+/// enc word, an nnz count, or the occupancy bitmap — whose popcount is
+/// the value count).
+fn skip_compact_payload(s: &mut Scanner, numel: usize) -> Result<()> {
+    let enc = s.u32()?;
+    match enc {
+        ENC_DENSE => s.skip(4 * numel as u64),
+        ENC_DENSE_BF16 => s.skip(2 * numel as u64),
+        ENC_INDEX | ENC_INDEX_BF16 => {
+            let nnz = s.u32()? as usize;
+            if nnz > numel {
+                bail!("corrupt checkpoint: nnz {nnz} exceeds numel {numel}");
+            }
+            let val = if enc == ENC_INDEX { 4 } else { 2 };
+            s.skip((4 + val) * nnz as u64)
+        }
+        ENC_BITMAP | ENC_BINARY | ENC_BITMAP_BF16 => {
+            let mut bm = vec![0u8; numel.div_ceil(8)];
+            s.read_exact(&mut bm)?;
+            let mut nnz = 0usize;
+            for (bi, &b) in bm.iter().enumerate() {
+                for bit in 0..8 {
+                    if b & (1 << bit) != 0 {
+                        if bi * 8 + bit >= numel {
+                            bail!("corrupt checkpoint: occupancy bit \
+                                   beyond numel {numel}");
+                        }
+                        nnz += 1;
+                    }
+                }
+            }
+            match enc {
+                ENC_BINARY => Ok(()),
+                ENC_BITMAP => s.skip(4 * nnz as u64),
+                _ => s.skip(2 * nnz as u64),
+            }
+        }
+        other => bail!("corrupt checkpoint: unknown encoding {other}"),
+    }
+}
+
+/// Positional reader over a shared file handle: `read_at` (pread) keeps
+/// no cursor in the `File`, so concurrent [`read_entry`] calls from
+/// scheduler workers never race each other's offsets.
+struct PreadReader<'a> {
+    file: &'a std::fs::File,
+    off: u64,
+}
+
+impl Read for PreadReader<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        use std::os::unix::fs::FileExt;
+        let n = self.file.read_at(buf, self.off)?;
+        self.off += n as u64;
+        Ok(n)
+    }
+}
+
+/// Decode one scanned tensor from its payload offset — the streaming
+/// counterpart of [`load`], sharing its payload decoders so both paths
+/// are bit-identical by construction.
+pub fn read_entry(file: &std::fs::File, e: &CkptEntry) -> Result<Tensor> {
+    let mut r = BufReader::new(PreadReader { file, off: e.payload_off });
+    let data = if e.version == VERSION {
+        read_f32s(&mut r, e.numel())?
+    } else {
+        read_compact_payload(&mut r, e.numel())?
+    };
+    Ok(Tensor::from_vec(&e.shape, data))
 }
 
 fn read_f32s<R: Read>(r: &mut R, n: usize) -> Result<Vec<f32>> {
@@ -542,6 +737,82 @@ mod tests {
         assert_eq!(compact_len, dense_len + 4);
         std::fs::remove_file(&pd).ok();
         std::fs::remove_file(&pc).ok();
+    }
+
+    /// Regression: a checkpoint with bytes after the declared last entry
+    /// is corrupt (bad copy, torn concatenation) and must be rejected by
+    /// both the materializing loader and the scanner — short files were
+    /// always rejected, long ones used to slip through `load`.
+    #[test]
+    fn rejects_trailing_bytes() {
+        let mut rng = Pcg64::seeded(44);
+        let a = Tensor::randn(&[7, 5], 1.0, &mut rng);
+        let entries: Vec<(String, &Tensor)> = vec![("w".into(), &a)];
+        for (tag, compact) in [("v1", false), ("v2", true)] {
+            let path = tmpfile(&format!("trailing-{tag}"));
+            if compact {
+                save_compact(&path, &entries).unwrap();
+            } else {
+                save(&path, &entries).unwrap();
+            }
+            assert!(load(&path).is_ok());
+            assert!(scan(&path).is_ok());
+            let mut bytes = std::fs::read(&path).unwrap();
+            bytes.push(0u8);
+            std::fs::write(&path, &bytes).unwrap();
+            assert!(load(&path).is_err(),
+                    "{tag}: load must reject trailing bytes");
+            assert!(scan(&path).is_err(),
+                    "{tag}: scan must reject trailing bytes");
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    /// `scan` + `read_entry` reproduce `load` bit-exactly for every
+    /// encoding the compact writer emits, and `scan` rejects truncation.
+    #[test]
+    fn scan_and_read_entry_match_load() {
+        let mut rng = Pcg64::seeded(55);
+        let dense = Tensor::randn(&[6, 9], 1.0, &mut rng);
+        let mut mask = Tensor::zeros(&[5, 11]);
+        for i in (0..mask.numel()).step_by(3) {
+            mask.data[i] = 1.0;
+        }
+        let mut sparse = Tensor::zeros(&[17]);
+        sparse.data[3] = 2.5;
+        sparse.data[16] = -0.0;
+        let zero = Tensor::zeros(&[4, 13]);
+        let entries: Vec<(String, &Tensor)> = vec![
+            ("dense".into(), &dense), ("mask".into(), &mask),
+            ("sparse".into(), &sparse), ("zero".into(), &zero),
+        ];
+        for (tag, compact) in [("v1", false), ("v2", true)] {
+            let path = tmpfile(&format!("scan-{tag}"));
+            if compact {
+                save_compact(&path, &entries).unwrap();
+            } else {
+                save(&path, &entries).unwrap();
+            }
+            let loaded = load(&path).unwrap();
+            let idx = scan(&path).unwrap();
+            assert_eq!(idx.entries.len(), entries.len());
+            let file = std::fs::File::open(&path).unwrap();
+            for (e, (lname, lt)) in idx.entries.iter().zip(&loaded) {
+                assert_eq!(&e.name, lname);
+                assert_eq!(&e.shape, &lt.shape);
+                let t = read_entry(&file, e).unwrap();
+                assert_bits_eq(&t, lt, &format!("{tag}/{lname}"));
+            }
+            // entries can be streamed in any order, repeatedly
+            let first = &idx.entries[0];
+            assert_bits_eq(&read_entry(&file, first).unwrap(),
+                           &loaded[0].1, "re-read");
+            let bytes = std::fs::read(&path).unwrap();
+            std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+            assert!(scan(&path).is_err(),
+                    "{tag}: scan must reject a truncated file");
+            std::fs::remove_file(&path).ok();
+        }
     }
 
     #[test]

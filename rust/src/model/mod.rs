@@ -6,5 +6,5 @@ pub mod params;
 pub mod synth;
 
 pub use manifest::{ArtifactSpec, Manifest, ModelDims, TensorSpec};
-pub use params::ParamStore;
+pub use params::{DenseModel, ParamSource, ParamStore};
 pub use synth::{write_synthetic, SynthConfig};

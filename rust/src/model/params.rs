@@ -1,8 +1,22 @@
 //! Parameter store: the model's named tensors in canonical (manifest) order.
+//!
+//! Two representations share the canonical order:
+//! - [`ParamStore`] — everything resident, the mutable store the student
+//!   copy and the training loops work on.
+//! - [`ParamSource`] — an out-of-core *teacher*: tensors stream on demand
+//!   from `init_params.bin` or a `.ebft` checkpoint via positional reads
+//!   (pread), cached per block group under a `--max-resident-blocks`
+//!   budget. The EBFT block loop only ever needs one teacher block
+//!   resident (the paper's single-16GB-GPU trick), so the budget makes
+//!   teacher memory O(1) in depth instead of O(model).
+//!
+//! [`DenseModel`] is the seam the coordinator passes around: either
+//! representation behind one read-only owned-tensor API.
 
 use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
-use std::path::Path;
+use std::collections::{HashMap, VecDeque};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
 
 use super::checkpoint;
 use super::manifest::{Manifest, N_BLOCK_PARAMS};
@@ -171,6 +185,359 @@ impl ParamStore {
     }
 }
 
+/// What a [`ParamSource`] streams from.
+enum Backing {
+    /// Raw f32 LE in canonical order; `offsets[i]` is the byte offset of
+    /// param `i`.
+    InitBin { file: std::fs::File, offsets: Vec<u64> },
+    /// A v1/v2 `.ebft` checkpoint indexed by [`checkpoint::scan`].
+    Ckpt { file: std::fs::File, entries: Vec<checkpoint::CkptEntry> },
+}
+
+/// Cache bookkeeping behind the source's lock. Tensors cache per param
+/// index but evict per *block group* — embed, each transformer block,
+/// and the final norm/head tail — because that is the granularity the
+/// EBFT/masktune/eval loops touch the teacher at.
+struct CacheState {
+    cached: Vec<Option<Tensor>>,
+    /// Resident group ids, least-recently-touched first.
+    lru: VecDeque<usize>,
+    resident_bytes: usize,
+    peak_resident_bytes: usize,
+}
+
+/// Out-of-core teacher parameters: an open file plus a bounded per-block
+/// cache. All reads are positional (`pread`), so one source is safely
+/// shared by every scheduler worker; the lock guards only the cache
+/// index, never the I/O of a miss... actually misses read under the lock
+/// too — teacher reads are rare (once per block per recovery) and the
+/// simplicity buys strict budget enforcement.
+pub struct ParamSource {
+    path: PathBuf,
+    backing: Backing,
+    names: Vec<String>,
+    shapes: Vec<Vec<usize>>,
+    index: HashMap<String, usize>,
+    n_layers: usize,
+    /// Cache budget in block groups; 0 = unbounded.
+    max_resident_blocks: usize,
+    state: Mutex<CacheState>,
+}
+
+impl ParamSource {
+    /// Stream from an AOT-exported `init_params.bin`. Validates the
+    /// exact file length up front — short *and* long files are rejected,
+    /// same contract as [`ParamStore::from_init_bin`].
+    pub fn open_init_bin(manifest: &Manifest, max_resident_blocks: usize)
+                         -> Result<Self> {
+        let path = manifest.dir.join("init_params.bin");
+        let file = std::fs::File::open(&path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut offsets = Vec::with_capacity(manifest.param_shapes.len());
+        let mut off = 0u64;
+        for shape in &manifest.param_shapes {
+            offsets.push(off);
+            off += 4 * shape.iter().product::<usize>() as u64;
+        }
+        let actual = file.metadata()?.len();
+        if actual != off {
+            bail!("init_params.bin has {actual} bytes, expected {off}");
+        }
+        Ok(Self::from_backing(path, Backing::InitBin { file, offsets },
+                              manifest, max_resident_blocks))
+    }
+
+    /// Stream from a `.ebft` checkpoint (v1 or v2 compact). The scan
+    /// validates the container (names/shapes against the manifest, exact
+    /// file length) without materializing a single payload.
+    pub fn open_ckpt(path: &Path, manifest: &Manifest,
+                     max_resident_blocks: usize) -> Result<Self> {
+        let idx = checkpoint::scan(path)?;
+        let names: Vec<&str> =
+            idx.entries.iter().map(|e| e.name.as_str()).collect();
+        let want: Vec<&str> =
+            manifest.param_names.iter().map(|s| s.as_str()).collect();
+        if names != want {
+            bail!("checkpoint params don't match manifest (got {} tensors, \
+                   expected {}; first diff: {:?})",
+                  names.len(), want.len(),
+                  names.iter().zip(&want).find(|(a, b)| a != b));
+        }
+        for (e, s) in idx.entries.iter().zip(&manifest.param_shapes) {
+            if &e.shape != s {
+                bail!("checkpoint tensor shape mismatch: {:?} vs {:?}",
+                      e.shape, s);
+            }
+        }
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        Ok(Self::from_backing(path.to_path_buf(),
+                              Backing::Ckpt { file, entries: idx.entries },
+                              manifest, max_resident_blocks))
+    }
+
+    fn from_backing(path: PathBuf, backing: Backing, manifest: &Manifest,
+                    max_resident_blocks: usize) -> Self {
+        let names = manifest.param_names.clone();
+        let index = names.iter().enumerate()
+            .map(|(i, n)| (n.clone(), i)).collect();
+        let n = names.len();
+        Self {
+            path,
+            backing,
+            names,
+            shapes: manifest.param_shapes.clone(),
+            index,
+            n_layers: manifest.dims.n_layers,
+            max_resident_blocks,
+            state: Mutex::new(CacheState {
+                cached: vec![None; n],
+                lru: VecDeque::new(),
+                resident_bytes: 0,
+                peak_resident_bytes: 0,
+            }),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.shapes.iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+
+    /// High-water mark of cached teacher bytes (f32 host bytes).
+    pub fn peak_resident_bytes(&self) -> usize {
+        self.lock().peak_resident_bytes
+    }
+
+    /// The residency budget this source was opened with (0 = unbounded).
+    pub fn max_resident_blocks(&self) -> usize {
+        self.max_resident_blocks
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, CacheState> {
+        // a panic while holding this lock leaves only a cache, never an
+        // inconsistent model — poisoning carries no information here
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Block-group id of a param index: 0 = embed, 1+l = block l,
+    /// last = the final norm + head tail.
+    fn group_of(&self, i: usize) -> usize {
+        if i == 0 {
+            0
+        } else if i < 1 + self.n_layers * N_BLOCK_PARAMS {
+            1 + (i - 1) / N_BLOCK_PARAMS
+        } else {
+            self.n_layers + 1
+        }
+    }
+
+    /// Uncached positional read of param `i`, quantized at the storage
+    /// boundary exactly like the resident loaders — which is what makes
+    /// streamed and resident runs bit-identical.
+    fn read_raw(&self, i: usize) -> Result<Tensor> {
+        match &self.backing {
+            Backing::InitBin { file, offsets } => {
+                use std::os::unix::fs::FileExt;
+                let shape = &self.shapes[i];
+                let n: usize = shape.iter().product();
+                let mut bytes = vec![0u8; 4 * n];
+                file.read_exact_at(&mut bytes, offsets[i]).with_context(
+                    || format!("reading param {i} from {}",
+                               self.path.display()))?;
+                let mut data = vec![0f32; n];
+                for (v, chunk) in data.iter_mut()
+                    .zip(bytes.chunks_exact(4)) {
+                    *v = f32::from_le_bytes(chunk.try_into().unwrap());
+                }
+                dtype::quantize_storage(&mut data);
+                Ok(Tensor::from_vec(shape, data))
+            }
+            Backing::Ckpt { file, entries } => {
+                let mut t = checkpoint::read_entry(file, &entries[i])
+                    .with_context(|| format!("reading '{}' from {}",
+                                             self.names[i],
+                                             self.path.display()))?;
+                dtype::quantize_tensor(&mut t);
+                Ok(t)
+            }
+        }
+    }
+
+    /// Cached read of param `i` (owned copy). Touches the LRU and, on a
+    /// miss that brings a new group in over budget, evicts the
+    /// least-recently-used other group wholesale.
+    fn get_idx(&self, i: usize) -> Result<Tensor> {
+        let g = self.group_of(i);
+        let mut st = self.lock();
+        if let Some(t) = &st.cached[i] {
+            let t = t.clone();
+            touch(&mut st.lru, g);
+            return Ok(t);
+        }
+        let t = self.read_raw(i)?;
+        if !st.lru.contains(&g) && self.max_resident_blocks > 0 {
+            while st.lru.len() >= self.max_resident_blocks {
+                let victim = match st.lru.pop_front() {
+                    Some(v) => v,
+                    None => break,
+                };
+                self.evict_group(&mut st, victim);
+            }
+        }
+        touch(&mut st.lru, g);
+        st.resident_bytes += 4 * t.numel();
+        st.peak_resident_bytes =
+            st.peak_resident_bytes.max(st.resident_bytes);
+        st.cached[i] = Some(t.clone());
+        Ok(t)
+    }
+
+    fn evict_group(&self, st: &mut CacheState, g: usize) {
+        let (lo, hi) = self.group_range(g);
+        for slot in lo..hi {
+            if let Some(t) = st.cached[slot].take() {
+                st.resident_bytes -= 4 * t.numel();
+            }
+        }
+    }
+
+    /// Param-index range `[lo, hi)` of block group `g`.
+    fn group_range(&self, g: usize) -> (usize, usize) {
+        let n_block = 1 + self.n_layers * N_BLOCK_PARAMS;
+        if g == 0 {
+            (0, 1)
+        } else if g <= self.n_layers {
+            (1 + (g - 1) * N_BLOCK_PARAMS, 1 + g * N_BLOCK_PARAMS)
+        } else {
+            (n_block, self.names.len())
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Result<Tensor> {
+        let i = *self.index.get(name)
+            .with_context(|| format!("no param '{name}'"))?;
+        self.get_idx(i)
+    }
+
+    /// The 9 canonical tensors of block `l`, owned.
+    pub fn block_params(&self, manifest: &Manifest, l: usize)
+                        -> Result<Vec<Tensor>> {
+        manifest.block_param_indices(l).iter()
+            .map(|&i| self.get_idx(i)).collect()
+    }
+
+    /// Materialize the full model as a [`ParamStore`]. Reads bypass the
+    /// cache (and its budget accounting): the result is caller-owned
+    /// memory — e.g. the student copy a pruner mutates — not teacher
+    /// residency.
+    pub fn materialize(&self) -> Result<ParamStore> {
+        let tensors = (0..self.len()).map(|i| self.read_raw(i))
+            .collect::<Result<Vec<_>>>()?;
+        ParamStore::new(self.names.clone(), tensors)
+    }
+}
+
+fn touch(lru: &mut VecDeque<usize>, g: usize) {
+    if let Some(p) = lru.iter().position(|&x| x == g) {
+        lru.remove(p);
+    }
+    lru.push_back(g);
+}
+
+/// The dense teacher as the coordinator sees it: fully resident or
+/// streamed out-of-core, behind one read-only owned-tensor API. Both
+/// variants produce bit-identical tensors; they differ only in memory
+/// footprint, which [`DenseModel::peak_resident_bytes`] reports.
+pub enum DenseModel {
+    Resident(ParamStore),
+    Streamed(ParamSource),
+}
+
+impl DenseModel {
+    pub fn resident(ps: ParamStore) -> Self {
+        DenseModel::Resident(ps)
+    }
+
+    pub fn streamed(src: ParamSource) -> Self {
+        DenseModel::Streamed(src)
+    }
+
+    pub fn is_streamed(&self) -> bool {
+        matches!(self, DenseModel::Streamed(_))
+    }
+
+    /// The resident store, when there is one (benches and the serving
+    /// registry want `&ParamStore` without a copy).
+    pub fn as_store(&self) -> Option<&ParamStore> {
+        match self {
+            DenseModel::Resident(ps) => Some(ps),
+            DenseModel::Streamed(_) => None,
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Result<Tensor> {
+        match self {
+            DenseModel::Resident(ps) => Ok(ps.get(name)?.clone()),
+            DenseModel::Streamed(src) => src.get(name),
+        }
+    }
+
+    pub fn block_params(&self, manifest: &Manifest, l: usize)
+                        -> Result<Vec<Tensor>> {
+        match self {
+            DenseModel::Resident(ps) => {
+                Ok(ps.block_params(manifest, l).into_iter().cloned()
+                    .collect())
+            }
+            DenseModel::Streamed(src) => src.block_params(manifest, l),
+        }
+    }
+
+    /// A full resident copy (the student a pruner starts from).
+    pub fn materialize(&self) -> Result<ParamStore> {
+        match self {
+            DenseModel::Resident(ps) => Ok(ps.clone()),
+            DenseModel::Streamed(src) => src.materialize(),
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        match self {
+            DenseModel::Resident(ps) => ps.n_params(),
+            DenseModel::Streamed(src) => src.n_params(),
+        }
+    }
+
+    /// The streamed variant's residency budget; 0 for resident (which
+    /// by definition has no budget).
+    pub fn max_resident_blocks(&self) -> usize {
+        match self {
+            DenseModel::Resident(_) => 0,
+            DenseModel::Streamed(src) => src.max_resident_blocks(),
+        }
+    }
+
+    /// Peak teacher host bytes: the full store for the resident variant
+    /// (it holds everything for the whole run), the cache high-water
+    /// mark for the streamed one — so a streamed run under any finite
+    /// budget reports strictly less than a resident run of the same
+    /// model.
+    pub fn peak_resident_bytes(&self) -> usize {
+        match self {
+            DenseModel::Resident(ps) => 4 * ps.n_params(),
+            DenseModel::Streamed(src) => src.peak_resident_bytes(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -212,6 +579,118 @@ mod tests {
         let m = fake_manifest(&tmpdir("initbad"));
         std::fs::write(m.dir.join("init_params.bin"), [0u8; 12]).unwrap();
         assert!(ParamStore::from_init_bin(&m).is_err());
+    }
+
+    /// Regression: a *longer* init_params.bin must be rejected too, by
+    /// both the resident loader and the streaming source — trailing
+    /// bytes mean the export and the manifest disagree.
+    #[test]
+    fn init_bin_rejects_trailing_bytes() {
+        let m = fake_manifest(&tmpdir("initlong"));
+        write_init_bin(&m, 9);
+        assert!(ParamStore::from_init_bin(&m).is_ok());
+        assert!(ParamSource::open_init_bin(&m, 0).is_ok());
+        let path = m.dir.join("init_params.bin");
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(&[0u8; 4]);
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(ParamStore::from_init_bin(&m).is_err(),
+                "loader must reject a long file");
+        assert!(ParamSource::open_init_bin(&m, 0).is_err(),
+                "source must reject a long file");
+    }
+
+    /// Streamed reads are bit-identical to the resident loaders, from
+    /// both backings, at any cache budget.
+    #[test]
+    fn param_source_matches_resident() {
+        let m = fake_manifest(&tmpdir("src-eq"));
+        write_init_bin(&m, 11);
+        let resident = ParamStore::from_init_bin(&m).unwrap();
+        let ckpt = m.dir.join("teacher.ebft");
+        resident.save_compact(&ckpt).unwrap();
+        let sources = [
+            ParamSource::open_init_bin(&m, 0).unwrap(),
+            ParamSource::open_init_bin(&m, 1).unwrap(),
+            ParamSource::open_ckpt(&ckpt, &m, 1).unwrap(),
+        ];
+        for src in &sources {
+            assert_eq!(src.n_params(), resident.n_params());
+            assert_eq!(src.get("embed").unwrap(),
+                       *resident.get("embed").unwrap());
+            for l in 0..m.dims.n_layers {
+                let want: Vec<Tensor> = resident.block_params(&m, l)
+                    .into_iter().cloned().collect();
+                assert_eq!(src.block_params(&m, l).unwrap(), want);
+            }
+            assert_eq!(src.get("final.head").unwrap(),
+                       *resident.get("final.head").unwrap());
+            // repeated reads (cache hits and re-materializations) agree
+            assert_eq!(src.get("embed").unwrap(),
+                       *resident.get("embed").unwrap());
+            let mat = src.materialize().unwrap();
+            assert_eq!(mat.tensors, resident.tensors);
+        }
+    }
+
+    /// A finite block budget keeps the cache high-water mark strictly
+    /// below the full model; an unbounded source converges to it.
+    #[test]
+    fn param_source_budget_bounds_residency() {
+        let m = fake_manifest(&tmpdir("src-budget"));
+        write_init_bin(&m, 13);
+        let full_bytes = 4 * ParamStore::from_init_bin(&m).unwrap()
+            .n_params();
+        let tight = ParamSource::open_init_bin(&m, 1).unwrap();
+        let loose = ParamSource::open_init_bin(&m, 0).unwrap();
+        for src in [&tight, &loose] {
+            src.get("embed").unwrap();
+            for l in 0..m.dims.n_layers {
+                src.block_params(&m, l).unwrap();
+            }
+            src.get("final.norm.g").unwrap();
+            src.get("final.head").unwrap();
+        }
+        assert!(tight.peak_resident_bytes() < full_bytes,
+                "budget 1 peak {} vs full {}",
+                tight.peak_resident_bytes(), full_bytes);
+        assert_eq!(loose.peak_resident_bytes(), full_bytes,
+                   "unbounded source ends fully resident");
+        // budget 1: at most one group resident at a time, so the peak
+        // is the largest single group
+        let group_max = {
+            let embed = 4 * 8 * 4;
+            let block: usize = 4 * (4 * 4 * 4 + 2 * 4 * 6 + 4 + 4
+                                    + 6 * 4);
+            let tail = 4 * (4 + 4 * 8);
+            embed.max(block).max(tail)
+        };
+        assert_eq!(tight.peak_resident_bytes(), group_max);
+    }
+
+    /// The [`DenseModel`] seam: both variants answer the same reads with
+    /// the same bits, and the resident variant reports the full store as
+    /// its peak.
+    #[test]
+    fn dense_model_variants_agree() {
+        let m = fake_manifest(&tmpdir("densemodel"));
+        write_init_bin(&m, 17);
+        let ps = ParamStore::from_init_bin(&m).unwrap();
+        let resident = DenseModel::resident(ps.clone());
+        let streamed = DenseModel::streamed(
+            ParamSource::open_init_bin(&m, 1).unwrap());
+        assert!(!resident.is_streamed());
+        assert!(streamed.is_streamed());
+        assert!(resident.as_store().is_some());
+        assert!(streamed.as_store().is_none());
+        assert_eq!(resident.get("embed").unwrap(),
+                   streamed.get("embed").unwrap());
+        assert_eq!(resident.block_params(&m, 1).unwrap(),
+                   streamed.block_params(&m, 1).unwrap());
+        assert_eq!(streamed.materialize().unwrap().tensors, ps.tensors);
+        assert_eq!(resident.peak_resident_bytes(), 4 * ps.n_params());
+        assert!(streamed.peak_resident_bytes() <
+                resident.peak_resident_bytes());
     }
 
     #[test]

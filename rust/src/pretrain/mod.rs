@@ -85,14 +85,20 @@ pub fn pretrain(session: &Session, corpus: &MarkovCorpus, steps: usize,
     }))
 }
 
+/// The on-disk cache path of a pretrained base model:
+/// `runs/<cfg>-seed<k>-<steps>.ebft`.
+pub fn cached_path(session: &Session, runs_dir: &Path, steps: usize,
+                   seed: u64) -> std::path::PathBuf {
+    runs_dir.join(format!("{}-seed{}-steps{}.ebft",
+                          session.manifest.dims.name, seed, steps))
+}
+
 /// Pretrain with on-disk caching: reuse `runs/<cfg>-seed<k>-<steps>.ebft`
 /// when present so benches don't retrain the base model every run.
 pub fn ensure_pretrained(session: &Session, corpus: &MarkovCorpus,
                          runs_dir: &Path, steps: usize, lr: f32, seed: u64)
                          -> Result<(ParamStore, Option<PretrainReport>)> {
-    let name = format!("{}-seed{}-steps{}.ebft",
-                       session.manifest.dims.name, seed, steps);
-    let path = runs_dir.join(name);
+    let path = cached_path(session, runs_dir, steps, seed);
     if path.exists() {
         let params = ParamStore::load(&path, &session.manifest)?;
         return Ok((params, None));
@@ -101,6 +107,22 @@ pub fn ensure_pretrained(session: &Session, corpus: &MarkovCorpus,
     std::fs::create_dir_all(runs_dir)?;
     params.save(&path)?;
     Ok((params, Some(report)))
+}
+
+/// Like [`ensure_pretrained`], but returns the checkpoint *path* instead
+/// of a resident `ParamStore` — the seam out-of-core teachers stream
+/// through. Trains and saves first when the cache is cold (training
+/// itself is resident; streaming applies to everything downstream).
+pub fn ensure_pretrained_path(session: &Session, corpus: &MarkovCorpus,
+                              runs_dir: &Path, steps: usize, lr: f32,
+                              seed: u64) -> Result<std::path::PathBuf> {
+    let path = cached_path(session, runs_dir, steps, seed);
+    if !path.exists() {
+        let (params, _) = pretrain(session, corpus, steps, lr, seed, 25)?;
+        std::fs::create_dir_all(runs_dir)?;
+        params.save(&path)?;
+    }
+    Ok(path)
 }
 
 #[cfg(test)]

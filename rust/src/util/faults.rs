@@ -1,0 +1,47 @@
+//! Fault-injection kill points for the crash-safety test layer.
+//!
+//! A kill point is a named place in a commit path (store writes, lease
+//! claims, checkpoint commits) where the process exits immediately —
+//! mid-protocol, no unwinding, no destructors — when the environment
+//! selects it. `tests/fault_injection.rs` spawns child processes with
+//! `EBFT_KILL_POINT=<name>` and asserts every such death leaves the run
+//! store resumable and untorn.
+//!
+//! In normal operation (`EBFT_KILL_POINT` unset) each call is one cached
+//! `Option` check — the env var is read once per process.
+
+use std::sync::OnceLock;
+
+/// Exit code used by [`kill_point`] so the harness can tell an injected
+/// death apart from a genuine failure.
+pub const KILL_EXIT_CODE: i32 = 17;
+
+fn armed() -> Option<&'static str> {
+    static ARMED: OnceLock<Option<String>> = OnceLock::new();
+    ARMED
+        .get_or_init(|| std::env::var("EBFT_KILL_POINT").ok())
+        .as_deref()
+}
+
+/// Die here (exit code [`KILL_EXIT_CODE`], no unwinding) iff
+/// `EBFT_KILL_POINT` names this point. No-op otherwise.
+pub fn kill_point(name: &str) {
+    if armed() == Some(name) {
+        eprintln!("[fault] killed at '{name}'");
+        std::process::exit(KILL_EXIT_CODE);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_kill_point_is_a_no_op() {
+        // EBFT_KILL_POINT is never set for the in-process suite; if this
+        // call exited, the whole test binary would die and CI would show
+        // a truncated run rather than a failed assertion.
+        kill_point("test.nonexistent");
+        kill_point("");
+    }
+}

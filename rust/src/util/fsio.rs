@@ -43,6 +43,9 @@ pub fn atomic_write_with(
         std::fs::remove_file(&tmp).ok();
         return Err(e);
     }
+    // staged but not yet published — a crash here must leave only the
+    // pid-suffixed temp file, never a torn target
+    crate::util::faults::kill_point("fsio.after_stage");
     std::fs::rename(&tmp, path).with_context(|| {
         format!("renaming {} over {}", tmp.display(), path.display())
     })

@@ -1,6 +1,7 @@
 //! Shared substrates built in-repo (the offline environment has no clap /
 //! serde / rand / criterion — we implement what we need).
 pub mod cli;
+pub mod faults;
 pub mod fsio;
 pub mod json;
 pub mod metrics;

@@ -75,6 +75,8 @@ fn golden_record() -> RunRecord {
         prune_secs: 1.5,
         ft_secs: 2.25,
         eval_secs: 0.25,
+        // 0 is elided from the JSON, so the golden bytes below still hold
+        peak_resident_bytes: 0,
         ebft_report: Some(EbftReport {
             per_block: vec![BlockReport {
                 block: 0,

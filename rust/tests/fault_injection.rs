@@ -1,0 +1,265 @@
+//! Crash/fault-injection harness for the run store, the lease protocol
+//! and the checkpoint commit path.
+//!
+//! Each scenario spawns this same test binary as a child process
+//! (`--exact fi_child_sweep`) with `EBFT_KILL_POINT` naming one of the
+//! kill points compiled into the store/lease/checkpoint commit paths
+//! (`util::faults::kill_point`). The child dies there with exit code 17
+//! — no unwinding, exactly like `kill -9` landing between two syscalls —
+//! and the harness then proves the contract:
+//!
+//! 1. a second, unkilled child *resumes* the same store and completes
+//!    the sweep,
+//! 2. the merged cell records are identical (modulo wall-clock timings)
+//!    to a golden serial sweep that was never killed,
+//! 3. no torn cell file is ever visible (every published `*.json`
+//!    parses), and no `.claim.` / `.break.` lease debris survives
+//!    recovery,
+//! 4. a lease left behind by the dead holder is taken over once stale
+//!    (the recovery run logs `lease-takeovers:`).
+//!
+//! The child is itself a `#[test]`, inert unless `EBFT_FI_CHILD` is set,
+//! so a plain `cargo test` run never executes the sweep twice.
+
+use ebft::config::FtConfig;
+use ebft::coordinator::{Grid, RunRecord, RunStore, Scheduler, SweepEnv};
+use ebft::data::{MarkovCorpus, Split};
+use ebft::model::synth::{write_synthetic, SynthConfig};
+use ebft::model::DenseModel;
+use ebft::pretrain;
+use ebft::pruning::Pattern;
+use ebft::runtime::{BackendKind, Session};
+use ebft::util::Json;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+/// Exit code `util::faults::kill_point` dies with (asserted, not
+/// imported: the wire format is part of the contract under test).
+const KILL_EXIT_CODE: i32 = 17;
+
+const CHILD_VAR: &str = "EBFT_FI_CHILD";
+
+fn base_dir() -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("ebft-fi-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+// ---------------------------------------------------------------------
+// the child: one resumable single-worker sweep over a shared store
+// ---------------------------------------------------------------------
+
+/// Helper process body. Runs a small wanda sweep with `resume(true)`
+/// against the store named by `EBFT_FI_STORE`; the pretrained teacher is
+/// cached on disk so only the first child of the suite trains it.
+#[test]
+fn fi_child_sweep() {
+    if std::env::var(CHILD_VAR).is_err() {
+        return; // not spawned by the harness — inert under plain cargo test
+    }
+    let base = PathBuf::from(std::env::var("EBFT_FI_DIR").unwrap());
+    let store_dir = PathBuf::from(std::env::var("EBFT_FI_STORE").unwrap());
+
+    let synth = base.join("synth");
+    let manifest = write_synthetic(&synth, &SynthConfig::tiny()).unwrap();
+    let session =
+        Session::open_kind(manifest, BackendKind::Reference).unwrap();
+    let corpus = MarkovCorpus::new(session.manifest.dims.vocab, 7);
+    let (dense, _) = pretrain::ensure_pretrained(
+        &session, &corpus, &base.join("runs"), 40, 3e-3, 0).unwrap();
+    let dense = DenseModel::resident(dense);
+
+    let store = RunStore::open(&store_dir).unwrap();
+    let grid = Grid::new(&["wanda"], &[Pattern::Unstructured(0.6)],
+                         &["none", "dsnot"]).unwrap();
+    let env = SweepEnv {
+        artifact_dir: synth,
+        corpus: &corpus,
+        dense: &dense,
+        ft: FtConfig { calib_seqs: 4, epochs: 2, ..FtConfig::default() },
+        eval_seqs: 8,
+        impl_name: "xla".to_string(),
+        eval_split: Split::WikiSim,
+        dense_tag: "fi-tiny".to_string(),
+        backend: BackendKind::Reference,
+        threads: 0,
+        dtype: ebft::tensor::dtype::active_dtype(),
+        max_resident_blocks: 0,
+    };
+    let out = Scheduler::new(env)
+        .jobs(1)
+        .resume(true)
+        .store(&store)
+        .local_session(&session)
+        .run(&grid)
+        .unwrap();
+    println!("[fi-child] records={}", out.records.len());
+    assert_eq!(out.records.len(), 2);
+}
+
+// ---------------------------------------------------------------------
+// the harness
+// ---------------------------------------------------------------------
+
+fn spawn_child(store: &Path, kill: Option<&str>) -> std::process::Output {
+    let exe = std::env::current_exe().unwrap();
+    let mut cmd = Command::new(exe);
+    cmd.args(["--exact", "fi_child_sweep", "--nocapture",
+              "--test-threads=1"])
+        .env(CHILD_VAR, "1")
+        .env("EBFT_FI_DIR", base_dir())
+        .env("EBFT_FI_STORE", store)
+        // shrink the protocol clocks so stale-lease takeover happens in
+        // tens of milliseconds, not tens of seconds
+        .env("EBFT_LEASE_HEARTBEAT_MS", "10")
+        .env("EBFT_LEASE_STALE_MS", "50")
+        .env("EBFT_LEASE_POLL_MS", "20")
+        .env_remove("EBFT_KILL_POINT");
+    if let Some(point) = kill {
+        cmd.env("EBFT_KILL_POINT", point);
+    }
+    cmd.output().unwrap()
+}
+
+fn stderr_of(out: &std::process::Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+/// Every *published* cell record under `store` (dot-prefixed staging
+/// temps are invisible by construction). Panics on a torn file: a
+/// half-written record that parses as neither JSON nor a RunRecord is
+/// exactly the corruption the atomic-write protocol must rule out.
+fn cell_records(store: &Path) -> Vec<RunRecord> {
+    let mut records = Vec::new();
+    for fp_entry in std::fs::read_dir(store).unwrap() {
+        let cells = fp_entry.unwrap().path().join("cells");
+        if !cells.is_dir() {
+            continue;
+        }
+        for entry in std::fs::read_dir(&cells).unwrap() {
+            let path = entry.unwrap().path();
+            let name = path.file_name().unwrap().to_string_lossy()
+                .into_owned();
+            if !name.ends_with(".json") || name.starts_with('.') {
+                continue;
+            }
+            let text = std::fs::read_to_string(&path).unwrap();
+            let json = Json::parse(&text)
+                .unwrap_or_else(|e| panic!("torn cell file {name}: {e:#}"));
+            records.push(RunRecord::from_json(&json)
+                .unwrap_or_else(|e| panic!("torn record {name}: {e:#}")));
+        }
+    }
+    records
+}
+
+/// Record JSON with wall-clock and residency telemetry zeroed — the
+/// "identical modulo timings" comparison, sorted for order independence.
+fn normalized(mut records: Vec<RunRecord>) -> Vec<String> {
+    let mut out: Vec<String> = records
+        .iter_mut()
+        .map(|r| {
+            r.prune_secs = 0.0;
+            r.ft_secs = 0.0;
+            r.eval_secs = 0.0;
+            r.peak_resident_bytes = 0;
+            if let Some(rep) = &mut r.ebft_report {
+                rep.total_secs = 0.0;
+                for b in &mut rep.per_block {
+                    b.secs = 0.0;
+                    b.bind_secs = 0.0;
+                }
+            }
+            r.to_json().dump()
+        })
+        .collect();
+    out.sort();
+    out
+}
+
+/// `.claim.` / `.break.` staging names must never survive: both are
+/// removed on every exit path of `try_lease`, including takeover races.
+fn assert_no_lease_debris(store: &Path, context: &str) {
+    let mut stack = vec![store.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let Ok(entries) = std::fs::read_dir(&dir) else { continue };
+        for entry in entries {
+            let path = entry.unwrap().path();
+            if path.is_dir() {
+                stack.push(path);
+                continue;
+            }
+            let name = path.file_name().unwrap().to_string_lossy()
+                .into_owned();
+            assert!(
+                !name.contains(".claim.") && !name.contains(".break."),
+                "{context}: lease staging debris survived: {}",
+                path.display());
+        }
+    }
+}
+
+/// Kill the child at `point`, then prove a fresh child resumes the
+/// store to completion with records ≡ `golden`.
+fn check_kill_point(point: &str, golden: &[String]) {
+    let store = base_dir().join(point.replace('.', "-")).join("store");
+    std::fs::create_dir_all(&store).unwrap();
+
+    let killed = spawn_child(&store, Some(point));
+    assert_eq!(killed.status.code(), Some(KILL_EXIT_CODE),
+               "child was not killed at '{point}': status {:?}\n--- \
+                stderr ---\n{}", killed.status, stderr_of(&killed));
+    assert!(stderr_of(&killed).contains(&format!("killed at '{point}'")),
+            "kill point '{point}' never fired");
+    // whatever the crash left behind must already be readable: either a
+    // complete record or nothing, never a torn file
+    let partial = cell_records(&store);
+    assert!(partial.len() < 2,
+            "'{point}' fired after the sweep already finished");
+
+    let resumed = spawn_child(&store, None);
+    assert!(resumed.status.success(),
+            "resume after '{point}' failed: status {:?}\n--- stderr ---\n{}",
+            resumed.status, stderr_of(&resumed));
+    assert_eq!(normalized(cell_records(&store)), golden,
+               "records after crash-at-'{point}' + resume diverged from \
+                the golden sweep");
+    assert_no_lease_debris(&store, point);
+
+    // a crash while *holding* a lease leaves the lease file behind with
+    // a fresh heartbeat; the resumed run must have broken it once stale
+    if point == "lease.after_claim" {
+        let err = stderr_of(&resumed);
+        assert!(err.contains("took over a stale lease"),
+                "resume never took over the dead child's lease:\n{err}");
+        assert!(err.contains("lease-takeovers:"),
+                "scheduler did not report its takeover count:\n{err}");
+    }
+}
+
+#[test]
+fn kill_points_recover() {
+    // golden serial sweep: never killed, same store layout
+    let golden_store = base_dir().join("golden").join("store");
+    std::fs::create_dir_all(&golden_store).unwrap();
+    let out = spawn_child(&golden_store, None);
+    assert!(out.status.success(),
+            "golden sweep failed: status {:?}\n--- stderr ---\n{}",
+            out.status, stderr_of(&out));
+    let golden = normalized(cell_records(&golden_store));
+    assert_eq!(golden.len(), 2, "golden sweep produced {golden:?}");
+    assert_no_lease_debris(&golden_store, "golden");
+
+    // every compiled kill point, ordered along the commit paths:
+    // checkpoint body → lease lifecycle → record publish → rename
+    for point in ["ckpt.after_params", "ckpt.after_masks",
+                  "ckpt.after_meta", "lease.after_claim",
+                  "lease.before_release", "record.before_write",
+                  "record.after_write", "fsio.after_stage"] {
+        eprintln!("--- kill point {point} ---");
+        check_kill_point(point, &golden);
+    }
+
+    std::fs::remove_dir_all(base_dir()).ok();
+}

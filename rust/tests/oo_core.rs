@@ -1,0 +1,118 @@
+//! Out-of-core equivalence: a sweep whose dense teacher is streamed
+//! block-by-block from the pretrain checkpoint (`--max-resident-blocks
+//! 1`, the tightest budget) must produce byte-identical `RunRecord`s to
+//! the fully-resident run — across intra-op thread counts and both
+//! storage dtypes — while holding strictly less teacher memory.
+//!
+//! Runs entirely on the reference backend over the synthetic tiny
+//! manifest (no artifacts), via `BenchEnv::open_synthetic_with` — the
+//! same seam `ebft grid --synthetic --max-resident-blocks 1` exercises
+//! from the CLI.
+
+use ebft::bench_support::BenchEnv;
+use ebft::config::FtConfig;
+use ebft::coordinator::{Grid, GridResult, RunRecord, RunStore, Scheduler};
+use ebft::pruning::Pattern;
+use ebft::tensor::dtype::{self, Dtype};
+use std::path::PathBuf;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("ebft-oo-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn test_ft() -> FtConfig {
+    FtConfig { calib_seqs: 8, epochs: 2, ..FtConfig::default() }
+}
+
+/// One serial sweep of `grid` over `env` into a throwaway store, with an
+/// explicit intra-op thread target.
+fn sweep(env: &BenchEnv, grid: &Grid, threads: usize, tag: &str)
+         -> GridResult {
+    let dir = tmpdir(tag);
+    let store = RunStore::open(&dir).unwrap();
+    let mut senv = env.sweep_env(test_ft());
+    senv.threads = threads;
+    let out = Scheduler::new(senv)
+        .jobs(1)
+        .store(&store)
+        .local_session(&env.session)
+        .run(grid)
+        .unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    out
+}
+
+/// Record JSON with wall-clock and residency telemetry zeroed: the
+/// bit-identity claim is about every number the sweep computes, not
+/// about how long or how much memory computing it took.
+fn normalized(records: &[RunRecord]) -> Vec<String> {
+    records
+        .iter()
+        .map(|r| {
+            let mut r = r.clone();
+            r.prune_secs = 0.0;
+            r.ft_secs = 0.0;
+            r.eval_secs = 0.0;
+            r.peak_resident_bytes = 0;
+            if let Some(rep) = &mut r.ebft_report {
+                rep.total_secs = 0.0;
+                for b in &mut rep.per_block {
+                    b.secs = 0.0;
+                    b.bind_secs = 0.0;
+                }
+            }
+            r.to_json().dump()
+        })
+        .collect()
+}
+
+#[test]
+fn streamed_teacher_matches_resident_across_threads_and_dtypes() {
+    // ebft reads every teacher block per epoch; masktune streams them
+    // once more through its own distillation pass — together they cover
+    // both teacher-consuming recovery paths
+    let grid = Grid::new(&["wanda"], &[Pattern::Unstructured(0.6)],
+                         &["ebft", "masktune"]).unwrap();
+
+    for dt in [Dtype::F32, Dtype::Bf16] {
+        let prev = dtype::set_dtype(dt);
+
+        // golden: fully-resident teacher, single-threaded kernels. The
+        // resident env is opened first so a cold pretrain cache is
+        // trained and saved under the dtype being tested.
+        let resident_env = BenchEnv::open_synthetic_with(0).unwrap();
+        let golden = sweep(&resident_env, &grid, 1, "golden");
+        assert_eq!(golden.records.len(), 2);
+        let resident_peak = resident_env.dense.peak_resident_bytes();
+        assert!(resident_peak > 0);
+        for r in &golden.records {
+            assert_eq!(r.peak_resident_bytes, resident_peak,
+                       "resident records must report the full store size");
+        }
+
+        for threads in [1usize, 2, 8] {
+            // fresh streamed env per setting: the block cache's
+            // high-water mark starts at zero every time
+            let env = BenchEnv::open_synthetic_with(1).unwrap();
+            assert!(env.dense.is_streamed());
+            let out = sweep(&env, &grid, threads, "streamed");
+            assert_eq!(
+                normalized(&out.records), normalized(&golden.records),
+                "streamed ({dt:?}, {threads} threads) diverged from the \
+                 resident golden run");
+            for (s, g) in out.records.iter().zip(&golden.records) {
+                assert!(s.peak_resident_bytes > 0,
+                        "streamed run never tracked residency");
+                assert!(
+                    s.peak_resident_bytes < g.peak_resident_bytes,
+                    "streamed {} peak {} not strictly below resident {}",
+                    s.key(), s.peak_resident_bytes, g.peak_resident_bytes);
+            }
+        }
+
+        dtype::set_dtype(prev);
+    }
+}

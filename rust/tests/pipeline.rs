@@ -13,7 +13,7 @@ use ebft::coordinator::{pruner, recovery, Grid, Pipeline, PipelineBuilder};
 use ebft::data::{Batcher, MarkovCorpus, Split};
 use ebft::masks::MaskSet;
 use ebft::model::synth::{write_synthetic, SynthConfig};
-use ebft::model::ParamStore;
+use ebft::model::{DenseModel, ParamStore};
 use ebft::pretrain;
 use ebft::pruning::Pattern;
 use ebft::runtime::{BackendKind, Session};
@@ -22,7 +22,14 @@ use std::path::Path;
 struct Env {
     session: Session,
     corpus: MarkovCorpus,
-    dense: ParamStore,
+    dense: DenseModel,
+}
+
+impl Env {
+    /// The resident teacher store (these envs never stream).
+    fn dense_store(&self) -> &ParamStore {
+        self.dense.as_store().expect("test env teacher is resident")
+    }
 }
 
 // Sessions are not Send (Rc + RefCell state), so the checks share one
@@ -51,7 +58,7 @@ fn build_env(kind: BackendKind) -> Option<Env> {
     // short pretrain: enough for pruning damage to be measurable
     let (dense, _) =
         pretrain::pretrain(&session, &corpus, 150, 3e-3, 0, 50).unwrap();
-    Some(Env { session, corpus, dense })
+    Some(Env { session, corpus, dense: DenseModel::resident(dense) })
 }
 
 fn run_suite(e: &Env) {
@@ -239,11 +246,11 @@ fn lora_trains_and_merges(e: &Env) {
             .masks
     };
     let (adapters, report) = ebft::ebft::lora::train(
-        &e.session, &e.dense, &masks, &calib, 30, 1e-2, 0).unwrap();
+        &e.session, e.dense_store(), &masks, &calib, 30, 1e-2, 0).unwrap();
     assert!(report.last_loss < report.first_loss,
             "LoRA loss did not drop: {} → {}", report.first_loss,
             report.last_loss);
-    let merged = ebft::ebft::lora::merge(&e.session, &e.dense, &masks,
+    let merged = ebft::ebft::lora::merge(&e.session, e.dense_store(), &masks,
                                          &adapters).unwrap();
     let dense_masks = MaskSet::dense(&e.session.manifest);
     let ppl = ebft::eval::perplexity(&e.session, &merged, &dense_masks,

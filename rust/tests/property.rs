@@ -295,3 +295,139 @@ fn prop_zero_shot_items_always_well_formed() {
         }
     }
 }
+
+// ---------------------------------------------------------------------
+// lease state machine
+// ---------------------------------------------------------------------
+
+use ebft::coordinator::{Lease, LeaseConfig, LeaseOutcome, RunStore};
+
+struct Holder {
+    lease: Lease,
+    /// Instant of the last *successful* heartbeat (or the claim).
+    beat: u64,
+    /// Set once another claim has provably broken this lease: every
+    /// later heartbeat from the old holder must fail.
+    zombie: bool,
+}
+
+/// Arbitrary interleavings of claim / heartbeat / release / clock-stall
+/// over 2–4 simulated workers hammering one real `RunStore` lease file,
+/// with time injected through the `*_at` seams.
+///
+/// Safety: a claim never succeeds while another worker holds the lease
+/// with a fresh heartbeat (the never-double-execute invariant); once it
+/// does succeed, the previous holder's heartbeats fail forever.
+/// Liveness: whatever state an interleaving ends in, the lease is
+/// claimable after one stale interval (the sweep always drains).
+#[test]
+fn prop_lease_never_double_held_and_always_drains() {
+    let dir = std::env::temp_dir()
+        .join(format!("ebft-prop-lease-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let store = RunStore::open(&dir).unwrap();
+    let cfg = LeaseConfig { heartbeat_ms: 10, stale_ms: 100, poll_ms: 10 };
+
+    for seed in 0..CASES as u64 {
+        let mut rng = Pcg64::seeded(9000 + seed);
+        let fp = format!("leasefp{seed}");
+        let key = "wanda/w.Ours/60%";
+        let n_workers = 2 + rng.below(3) as usize;
+        let mut workers: Vec<Option<Holder>> =
+            (0..n_workers).map(|_| None).collect();
+        let mut now: u64 = cfg.stale_ms; // past the epoch: beat 0 is stale
+        let mut acquires = 0usize;
+
+        for step in 0..60 {
+            now += rng.below(40);
+            let w = rng.below(n_workers as u64) as usize;
+            match rng.below(4) {
+                0 => {
+                    // claim
+                    let outcome = store
+                        .try_lease_at(&fp, key, &cfg, now)
+                        .unwrap();
+                    if let LeaseOutcome::Acquired { lease, took_over } =
+                        outcome
+                    {
+                        let mut live_stale = false;
+                        for (i, slot) in workers.iter_mut().enumerate() {
+                            let Some(h) = slot else { continue };
+                            if i == w || h.zombie {
+                                continue;
+                            }
+                            assert!(
+                                now.saturating_sub(h.beat) >= cfg.stale_ms,
+                                "seed {seed} step {step}: worker {w} \
+                                 acquired while worker {i} held a fresh \
+                                 lease (beat {} now {now})", h.beat);
+                            live_stale = true;
+                        }
+                        if live_stale {
+                            assert!(took_over,
+                                    "seed {seed} step {step}: broke a \
+                                     tracked stale lease without \
+                                     reporting a takeover");
+                        }
+                        // every other holder (incl. w's own old lease)
+                        // is dead from here on
+                        for (i, slot) in
+                            workers.iter_mut().enumerate()
+                        {
+                            if let Some(h) = slot {
+                                if i != w || h.lease.token != lease.token {
+                                    h.zombie = true;
+                                }
+                            }
+                        }
+                        workers[w] = Some(Holder {
+                            lease,
+                            beat: now,
+                            zombie: false,
+                        });
+                        acquires += 1;
+                    }
+                }
+                1 => {
+                    // heartbeat
+                    let Some(h) = &mut workers[w] else { continue };
+                    let ok =
+                        store.heartbeat_at(&h.lease, now).unwrap();
+                    if h.zombie {
+                        assert!(!ok,
+                                "seed {seed} step {step}: a broken \
+                                 lease's heartbeat succeeded");
+                        workers[w] = None;
+                    } else {
+                        assert!(ok,
+                                "seed {seed} step {step}: a live \
+                                 holder's heartbeat failed");
+                        h.beat = now;
+                    }
+                }
+                2 => {
+                    // release (a no-op on a lease broken away)
+                    if let Some(h) = workers[w].take() {
+                        store.release(&h.lease).unwrap();
+                    }
+                }
+                _ => {
+                    // clock stall: the current holder (if any) stops
+                    // heartbeating for a full stale interval
+                    now += cfg.stale_ms;
+                }
+            }
+        }
+
+        // liveness: one stale interval after the last event, a fresh
+        // worker always gets the lease
+        now += cfg.stale_ms;
+        let outcome = store.try_lease_at(&fp, key, &cfg, now).unwrap();
+        let LeaseOutcome::Acquired { lease, .. } = outcome else {
+            panic!("seed {seed}: lease not claimable after a stale \
+                    interval ({acquires} acquires during the run)");
+        };
+        store.release(&lease).unwrap();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

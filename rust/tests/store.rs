@@ -47,6 +47,7 @@ fn sample_record(pruner: &str, recovery: &str, recovery_label: &str,
         prune_secs: 1.5,
         ft_secs: 2.25,
         eval_secs: 0.25,
+        peak_resident_bytes: 0,
         ebft_report: None,
     }
 }
@@ -231,7 +232,7 @@ fn plan_skips_completed_cells_and_whole_groups() {
 struct Env {
     session: Session,
     corpus: MarkovCorpus,
-    dense: ebft::model::ParamStore,
+    dense: ebft::model::DenseModel,
     artifact_dir: PathBuf,
 }
 
@@ -257,6 +258,7 @@ fn build_env(kind: BackendKind) -> Option<Env> {
     let corpus = MarkovCorpus::new(session.manifest.dims.vocab, 7);
     let (dense, _) =
         pretrain::pretrain(&session, &corpus, 120, 3e-3, 0, 50).unwrap();
+    let dense = ebft::model::DenseModel::resident(dense);
     Some(Env { session, corpus, dense, artifact_dir: dir })
 }
 
@@ -277,6 +279,7 @@ fn sweep_env(e: &Env) -> SweepEnv<'_> {
         backend: e.session.backend_kind(),
         threads: 0,
         dtype: ebft::tensor::dtype::active_dtype(),
+        max_resident_blocks: 0,
     }
 }
 
@@ -290,6 +293,7 @@ fn normalized(records: &[RunRecord]) -> Vec<String> {
             r.prune_secs = 0.0;
             r.ft_secs = 0.0;
             r.eval_secs = 0.0;
+            r.peak_resident_bytes = 0;
             if let Some(rep) = &mut r.ebft_report {
                 rep.total_secs = 0.0;
                 for b in &mut rep.per_block {
