@@ -4,20 +4,31 @@
 //!   cargo run --release --example bench_kernels
 //!
 //! Times every host kernel at one representative shape, for each
-//! storage dtype (f32 inputs, and the same inputs rounded to bf16) on
-//! both the scalar path and the detected SIMD path: median of
+//! storage dtype (f32 inputs, and the same inputs rounded to bf16) and
+//! each numeric tier: the exact tier on both the scalar path and the
+//! detected SIMD path, the fast tier on the detected path (the
+//! exact-vs-fast speedup cell compare_bench.py gates ≥1.3× for
+//! `silu_mul`/`recon_loss_grad` on SIMD hosts). Median of
 //! `EBFT_BENCH_REPS` (default 5) timed runs after one warmup. The
 //! payload lands in BENCH_kernels.json at the repo root (override:
 //! `EBFT_BENCH_OUT`); python/ci/compare_bench.py --kernels gates it
 //! per kernel against the committed BENCH_kernels_baseline.json.
 //!
-//! Before any timing, the rig hard-checks the kernel layer's
-//! determinism contract on every (kernel × dtype) cell — bit-identical
-//! outputs across thread counts (1 vs 4) and across the scalar ↔
-//! detected SIMD paths — and exits nonzero on the first violation, so
-//! CI fails even when the baseline is still null-seeded. On a host
-//! without SIMD both paths run scalar; the JSON records
-//! `simd_path: "scalar"` and the compare script skips the speedup gate.
+//! Before any timing, the rig checks the numeric contract on every
+//! (kernel × dtype) cell, tier-aware: at the **exact** tier outputs
+//! must be bit-identical across thread counts (1 vs 4) and across the
+//! scalar ↔ detected SIMD paths; at the **fast** tier the same
+//! bit-identity must hold (the fast tier is its own deterministic
+//! universe — every fused op is the correctly rounded IEEE fma) *and*
+//! outputs must sit within the documented per-kernel tolerance of the
+//! exact tier ([`fast_tol`], DESIGN.md §Kernels). The rig exits
+//! nonzero on the first violation, so CI fails even when the baseline
+//! is still null-seeded. On a host without SIMD both paths run scalar;
+//! the JSON records `simd_path: "scalar"` and the compare script skips
+//! the speedup gates. In the bf16 sweep the fast tier runs under
+//! `Dtype::Bf16`, so the matmul family exercises the native
+//! bf16-operand cores (the inputs are bf16-exact, making the pack
+//! lossless — any mismatch vs the f32 fast path is a real bug).
 //!
 //! Everything here is std-only (no artifacts, no Python): inputs are
 //! seeded `Pcg64` tensors, the sparse cells build their formats through
@@ -25,10 +36,10 @@
 
 use anyhow::{bail, Result};
 use ebft::bench_support::repo_root;
-use ebft::tensor::dtype::quantize_bf16;
-use ebft::tensor::kernels::{self, AdamHyper, SimdPath};
+use ebft::tensor::dtype::{quantize_bf16, set_dtype};
+use ebft::tensor::kernels::{self, AdamHyper, MathTier, SimdPath};
 use ebft::tensor::sparse::{EffWeight, SparseMode};
-use ebft::tensor::Tensor;
+use ebft::tensor::{Dtype, Tensor};
 use ebft::util::{Json, Pcg64};
 use std::path::PathBuf;
 use std::time::Instant;
@@ -195,6 +206,44 @@ fn assert_bits_eq(a: &[f32], b: &[f32], tag: &str) -> Result<()> {
     Ok(())
 }
 
+/// Fast-tier acceptance bounds vs the exact tier as `(rel, abs)`, per
+/// the numeric-contract table in DESIGN.md §Kernels. Matmul-family
+/// bounds absorb fma re-rounding over K=512-term dots at the bench's
+/// unit-normal input scale; the silu pair is bounded by the ≤8-ulp
+/// polynomial exp; the recon loss trades the f64 scalar accumulator
+/// for f32 lane trees. Kernels with no fast core return `(0, 0)`:
+/// they must stay bit-identical across tiers.
+fn fast_tol(name: &str) -> (f64, f64) {
+    match name {
+        "matmul" | "matmul_at_b" | "matmul_a_bt" | "gram"
+        | "panel_axpy" | "gather_axpy" => (1e-4, 1e-3),
+        "silu_mul" | "silu_mul_bwd" => (1e-5, 1e-5),
+        "recon_loss_grad" => (1e-3, 1e-5),
+        _ => (0.0, 0.0),
+    }
+}
+
+/// `|a−b| ≤ abs + rel·max(|a|,|b|)` elementwise; `(0, 0)` degrades to
+/// the bitwise check (tier-invariant kernels).
+fn assert_close(a: &[f32], b: &[f32], rel: f64, abs: f64, tag: &str)
+                -> Result<()> {
+    if rel == 0.0 && abs == 0.0 {
+        return assert_bits_eq(a, b, tag);
+    }
+    if a.len() != b.len() {
+        bail!("{tag}: output lengths differ ({} vs {})", a.len(), b.len());
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let (xf, yf) = (x as f64, y as f64);
+        let lim = abs + rel * xf.abs().max(yf.abs());
+        if !((xf - yf).abs() <= lim) {
+            bail!("{tag}: element {i} outside the fast-tier tolerance: \
+                   {x} vs {y} (|Δ| {:.3e} > {lim:.3e})", (xf - yf).abs());
+        }
+    }
+    Ok(())
+}
+
 /// Median of `reps` timed runs after one warmup (which also yields the
 /// reference output for the determinism checks).
 fn time_kernel(f: fn(&Inputs) -> Vec<f32>, inputs: &Inputs, reps: usize)
@@ -219,6 +268,9 @@ fn main() -> Result<()> {
         .unwrap_or(5);
     let detected = SimdPath::detected();
     let timing_threads = kernels::threads();
+    // the rig drives both tiers itself; whatever EBFT_MATH asked for is
+    // restored on exit
+    let prev_tier = kernels::set_math_tier(MathTier::Exact);
     println!("bench-kernels: simd path {} | {} timing threads | \
               median of {reps}", detected.as_str(), timing_threads);
 
@@ -226,8 +278,9 @@ fn main() -> Result<()> {
     for (dtype, bf16) in [("f32", false), ("bf16", true)] {
         let inputs = Inputs::build(bf16)?;
         for (name, shape, f) in kernel_table() {
-            // determinism first: scalar output is the golden reference;
-            // 1 vs 4 threads and scalar vs detected must agree bitwise
+            // exact-tier determinism first: scalar output is the golden
+            // reference; 1 vs 4 threads and scalar vs detected must
+            // agree bitwise
             let prev_path = kernels::set_simd_path(SimdPath::Scalar);
             let prev_threads = kernels::set_threads(1);
             let golden = f(&inputs);
@@ -240,31 +293,64 @@ fn main() -> Result<()> {
                                     detected.as_str()))?;
             kernels::set_threads(prev_threads);
 
-            // timing: both paths at the process thread target
+            // exact timing: both paths at the process thread target
             kernels::set_simd_path(SimdPath::Scalar);
             let (scalar_secs, _) = time_kernel(f, &inputs, reps);
             kernels::set_simd_path(detected);
             let (simd_secs, _) = time_kernel(f, &inputs, reps);
+
+            // fast tier: the bf16 sweep flips the active dtype so the
+            // matmul family runs its native bf16-operand cores
+            kernels::set_math_tier(MathTier::Fast);
+            let prev_dtype = bf16.then(|| set_dtype(Dtype::Bf16));
+            kernels::set_simd_path(SimdPath::Scalar);
+            kernels::set_threads(1);
+            let fast_golden = f(&inputs);
+            let (rel, abs) = fast_tol(name);
+            // within documented tolerance of the exact tier…
+            assert_close(&fast_golden, &golden, rel, abs,
+                         &format!("{name}/{dtype} fast vs exact"))?;
+            // …and bit-deterministic in its own right
+            kernels::set_threads(4);
+            assert_bits_eq(&f(&inputs), &fast_golden,
+                           &format!("{name}/{dtype} fast threads 1 vs 4"))?;
+            kernels::set_simd_path(detected);
+            assert_bits_eq(&f(&inputs), &fast_golden,
+                           &format!("{name}/{dtype} fast scalar vs {}",
+                                    detected.as_str()))?;
+            kernels::set_threads(prev_threads);
+            let (fast_secs, _) = time_kernel(f, &inputs, reps);
+            if let Some(d) = prev_dtype {
+                set_dtype(d);
+            }
+            kernels::set_math_tier(MathTier::Exact);
             kernels::set_simd_path(prev_path);
 
-            for (path, secs) in [("scalar", scalar_secs),
-                                 (detected.as_str(), simd_secs)] {
+            for (math, path, secs) in
+                [("exact", "scalar", scalar_secs),
+                 ("exact", detected.as_str(), simd_secs),
+                 ("fast", detected.as_str(), fast_secs)] {
                 let mut e = Json::obj();
                 e.set("kernel", Json::Str(name.to_string()));
                 e.set("shape", Json::Str(shape.clone()));
                 e.set("dtype", Json::Str(dtype.to_string()));
                 e.set("path", Json::Str(path.to_string()));
+                e.set("math", Json::Str(math.to_string()));
                 e.set("secs", Json::Num(secs));
                 entries.push(e);
             }
             println!("bench-kernels: {name:<16} {dtype:<4} {shape:<12} \
                       scalar {scalar_secs:.6}s  {} {simd_secs:.6}s  \
-                      speedup {:.2}x", detected.as_str(),
-                     scalar_secs / simd_secs.max(1e-12));
+                      speedup {:.2}x  fast {fast_secs:.6}s  \
+                      exact-vs-fast {:.2}x", detected.as_str(),
+                     scalar_secs / simd_secs.max(1e-12),
+                     simd_secs / fast_secs.max(1e-12));
         }
     }
-    println!("bench-kernels: determinism OK — every kernel bit-identical \
-              across 1/4 threads and scalar/{} at both dtypes",
+    kernels::set_math_tier(prev_tier);
+    println!("bench-kernels: numeric contract OK — exact bit-identical \
+              across 1/4 threads and scalar/{}, fast bit-deterministic \
+              and within tolerance of exact, at both dtypes",
              detected.as_str());
 
     let mut j = Json::obj();

@@ -9,14 +9,17 @@ more than --ppl-tol) or the cell got slower (wall-clock up by more than
 
 --kernels mode compares a BENCH_kernels.json (written by
 `cargo run --release --example bench_kernels`) against the committed
-BENCH_kernels_baseline.json, per kernel × shape × dtype × SIMD path:
-every entry slower than baseline by more than --time-tol fails, ALL
-failing kernels are reported (not just the first), and on a
-SIMD-capable host the f32 matmul SIMD path must beat scalar by
---min-simd-speedup (skipped when the payload says simd_path=scalar).
+BENCH_kernels_baseline.json, per kernel × shape × dtype × SIMD path ×
+math tier: every entry slower than baseline by more than --time-tol
+fails, ALL failing kernels are reported (not just the first), and on a
+SIMD-capable host two speedup floors apply — the f32 matmul SIMD path
+must beat scalar by --min-simd-speedup, and the fast-math tier must
+beat the exact tier by --min-fast-speedup for silu_mul and
+recon_loss_grad (both skipped when the payload says simd_path=scalar;
+the fast gate is also skipped when the payload predates the tier axis).
 --summary FILE additionally renders the kernel × dtype table with
-speedup columns as markdown (append mode — point it at
-$GITHUB_STEP_SUMMARY).
+SIMD-over-scalar and exact-over-fast speedup columns as markdown
+(append mode — point it at $GITHUB_STEP_SUMMARY).
 
 In both modes, baseline metrics set to null are skipped with a notice —
 that is how a baseline is seeded before real CI numbers exist. To
@@ -29,7 +32,8 @@ Usage:
         [--ppl-tol 0.02] [--time-tol 0.25]
     python3 python/ci/compare_bench.py --kernels \
         BENCH_kernels_baseline.json BENCH_kernels.json \
-        [--time-tol 0.5] [--min-simd-speedup 1.5] [--summary FILE]
+        [--time-tol 0.5] [--min-simd-speedup 1.5] \
+        [--min-fast-speedup 1.3] [--summary FILE]
 """
 
 import argparse
@@ -99,7 +103,10 @@ def cell_mode(args):
 
 
 def entry_key(e):
-    return f'{e["kernel"]}|{e["shape"]}|{e["dtype"]}|{e["path"]}'
+    # `math` joined the payload with the numeric-tier axis; entries from
+    # older payloads/baselines are exact-tier by construction
+    math = e.get("math", "exact")
+    return f'{e["kernel"]}|{e["shape"]}|{e["dtype"]}|{e["path"]}|{math}'
 
 
 def kernels_mode(args):
@@ -166,7 +173,40 @@ def kernels_mode(args):
                     f"({sc['secs']:.6f}s scalar vs {sv['secs']:.6f}s "
                     f"{simd})")
 
-    # 3. kernel × dtype markdown table (speedup + baseline delta)
+    # 3. fast-math speedup hard gate: the fast tier must earn its keep
+    # on the kernels the ISSUE names — again candidate-only, and again
+    # meaningless on a scalar host (the fast wins are vector wins)
+    if simd == "scalar":
+        print("SKIP  fast-tier speedup gate: host has no SIMD path "
+              "(simd_path=scalar)")
+    elif not any(e.get("math") == "fast" for e in entries):
+        print("SKIP  fast-tier speedup gate: payload carries no "
+              "fast-tier entries (bench binary predates the tier axis)")
+    else:
+        for kernel in ("silu_mul", "recon_loss_grad"):
+            ex = next((e for e in entries if e["kernel"] == kernel
+                       and e["dtype"] == "f32" and e["path"] == simd
+                       and e.get("math", "exact") == "exact"), None)
+            fa = next((e for e in entries if e["kernel"] == kernel
+                       and e["dtype"] == "f32" and e["path"] == simd
+                       and e.get("math") == "fast"), None)
+            if ex is None or fa is None:
+                failures.append(f"f32 {kernel} exact/fast pair missing "
+                                "from candidate payload")
+                continue
+            speedup = ex["secs"] / max(fa["secs"], 1e-12)
+            verdict = "ok" if speedup >= args.min_fast_speedup else "FAIL"
+            print(f"{verdict:>4}  f32 {kernel} {ex['shape']} fast-tier "
+                  f"speedup: {speedup:.2f}× (fast vs exact on {simd}, "
+                  f"floor {args.min_fast_speedup:.2f}×)")
+            if speedup < args.min_fast_speedup:
+                failures.append(
+                    f"f32 {kernel} fast-tier speedup {speedup:.2f}× "
+                    f"below the {args.min_fast_speedup:.2f}× floor "
+                    f"({ex['secs']:.6f}s exact vs {fa['secs']:.6f}s "
+                    f"fast on {simd})")
+
+    # 4. kernel × dtype markdown table (speedups + baseline delta)
     if args.summary:
         with open(args.summary, "a") as out:
             render_table(out, entries, bmap, simd,
@@ -181,24 +221,30 @@ def render_table(out, entries, bmap, simd, threads, reps):
 
     rows = {}
     for e in entries:
-        rows.setdefault(row_key(e), {})[e["path"]] = e
+        cell = (e["path"], e.get("math", "exact"))
+        rows.setdefault(row_key(e), {})[cell] = e
     print("### kernel microbench (median secs, "
           f"{threads} threads × {reps} reps)", file=out)
     print(file=out)
     print(f"| kernel | shape | dtype | scalar | {simd} | speedup "
-          "| Δ vs baseline |", file=out)
-    print("| --- | --- | --- | --- | --- | --- | --- |", file=out)
+          "| fast | exact/fast | Δ vs baseline |", file=out)
+    print("| --- | --- | --- | --- | --- | --- | --- | --- | --- |",
+          file=out)
     for (kernel, shape, dtype), paths in rows.items():
-        sc = paths.get("scalar")
-        sv = paths.get(simd) if simd != "scalar" else sc
+        sc = paths.get(("scalar", "exact"))
+        sv = paths.get((simd, "exact")) if simd != "scalar" else sc
+        fa = paths.get((simd, "fast"))
         if sc is None or sv is None:
             continue
         speedup = sc["secs"] / max(sv["secs"], 1e-12)
+        fast_secs = "—" if fa is None else f"{fa['secs']:.6f}s"
+        fast_speed = ("—" if fa is None
+                      else f"{sv['secs'] / max(fa['secs'], 1e-12):.2f}×")
         b = bmap.get(entry_key(sv), {}).get("secs")
         delta = "—" if b is None else f"{(sv['secs'] - b) / b:+.1%}"
         print(f"| {kernel} | {shape} | {dtype} | {sc['secs']:.6f}s "
-              f"| {sv['secs']:.6f}s | {speedup:.2f}× | {delta} |",
-              file=out)
+              f"| {sv['secs']:.6f}s | {speedup:.2f}× | {fast_secs} "
+              f"| {fast_speed} | {delta} |", file=out)
 
 
 def main():
@@ -213,6 +259,9 @@ def main():
                     help="max relative wall-clock regression (default 25%%)")
     ap.add_argument("--min-simd-speedup", type=float, default=1.5,
                     help="f32 matmul SIMD-over-scalar floor (kernels mode)")
+    ap.add_argument("--min-fast-speedup", type=float, default=1.3,
+                    help="fast-over-exact floor for silu_mul and "
+                         "recon_loss_grad (kernels mode)")
     ap.add_argument("--summary", default=None,
                     help="append the kernels-mode markdown table here")
     args = ap.parse_args()

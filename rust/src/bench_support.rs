@@ -221,6 +221,7 @@ impl BenchEnv {
             backend: self.session.backend_kind(),
             threads: threads(),
             dtype: crate::tensor::dtype::active_dtype(),
+            math: crate::tensor::kernels::math_tier(),
             max_resident_blocks: self.dense.max_resident_blocks(),
         }
     }

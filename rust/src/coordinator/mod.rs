@@ -39,8 +39,8 @@ pub use pipeline::{Pipeline, PipelineBuilder, PrunedModel, RecoveredModel,
                    RunRecord};
 pub use registry::{pruner, pruners, recoveries, recovery, Pruner, Recovery};
 pub use scheduler::{plan_sweep, Scheduler, SweepEnv, SweepPlan};
-pub use store::{config_fingerprint, Lease, LeaseConfig,
-                LeaseOutcome, RunStore};
+pub use store::{config_fingerprint, config_fingerprint_math, Lease,
+                LeaseConfig, LeaseOutcome, RunStore};
 
 /// Persist a result object under runs/ as JSON.
 pub fn write_result(runs_dir: &Path, name: &str, result: &Json) -> Result<()> {

@@ -17,6 +17,7 @@ use crate::masks::MaskSet;
 use crate::model::{DenseModel, ParamStore};
 use crate::pruning::Pattern;
 use crate::runtime::Session;
+use crate::tensor::{kernels, MathTier};
 use crate::util::Json;
 
 use super::context::RunContext;
@@ -159,6 +160,16 @@ pub struct RunRecord {
     /// streamed under `--max-resident-blocks`. 0 on records written
     /// before it was tracked.
     pub peak_resident_bytes: usize,
+    /// Numeric tier the cell ran at. `Exact` on every record written
+    /// before the tier existed (the tier's default), and elided from
+    /// JSON then — exact-tier records stay byte-identical to
+    /// pre-tier ones.
+    pub math: MathTier,
+    /// Resolved SIMD dispatch path of a fast-tier cell ("avx512",
+    /// "avx2", "neon", "scalar") — the triage context for its perf
+    /// numbers. Empty (and elided from JSON) on exact-tier records:
+    /// there the path is bitwise-invisible by contract.
+    pub simd_path: String,
     pub ebft_report: Option<EbftReport>,
 }
 
@@ -189,6 +200,12 @@ impl RunRecord {
         if self.peak_resident_bytes > 0 {
             j.set("peak_resident_bytes",
                   Json::Num(self.peak_resident_bytes as f64));
+        }
+        if self.math == MathTier::Fast {
+            j.set("math", Json::Str(self.math.as_str().to_string()));
+        }
+        if !self.simd_path.is_empty() {
+            j.set("simd_path", Json::Str(self.simd_path.clone()));
         }
         if let Some(r) = &self.ebft_report {
             let mut er = Json::obj();
@@ -268,6 +285,16 @@ impl RunRecord {
             peak_resident_bytes: match j.opt("peak_resident_bytes") {
                 None => 0,
                 Some(v) => v.as_usize()?,
+            },
+            math: match j.opt("math") {
+                None => MathTier::Exact,
+                Some(v) => MathTier::parse(v.as_str()?)
+                    .ok_or_else(|| anyhow::anyhow!(
+                        "unknown math tier in record"))?,
+            },
+            simd_path: match j.opt("simd_path") {
+                None => String::new(),
+                Some(v) => v.as_str()?.to_string(),
             },
             ebft_report,
         })
@@ -355,6 +382,7 @@ impl<'a> Pipeline<'a> {
         let ppl = self.ctx.eval_ppl(&recovered.params, &recovered.masks)?;
         let eval_secs = t1.elapsed().as_secs_f64();
 
+        let math = kernels::math_tier();
         let record = RunRecord {
             pruner: pruned.pruner.clone(),
             pruner_label: pruned.pruner_label.clone(),
@@ -369,6 +397,12 @@ impl<'a> Pipeline<'a> {
             ft_secs: recovered.ft_secs,
             eval_secs,
             peak_resident_bytes: self.ctx.dense.peak_resident_bytes(),
+            math,
+            simd_path: if math == MathTier::Fast {
+                kernels::simd_path().as_str().to_string()
+            } else {
+                String::new()
+            },
             ebft_report: recovered.ebft_report,
         };
         Ok((recovered.params, recovered.masks, record))

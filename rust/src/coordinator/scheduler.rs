@@ -50,13 +50,13 @@ use crate::model::DenseModel;
 use crate::pruning::Pattern;
 use crate::runtime::{BackendKind, Session};
 use crate::tensor::kernels;
-use crate::tensor::Dtype;
+use crate::tensor::{Dtype, MathTier};
 
 use super::grid::{Grid, GridResult};
 use super::pipeline::{Pipeline, PipelineBuilder, PrunedModel, RunRecord};
 use super::registry;
-use super::store::{config_fingerprint, Lease, LeaseConfig, LeaseOutcome,
-                   RunStore};
+use super::store::{config_fingerprint_math, Lease, LeaseConfig,
+                   LeaseOutcome, RunStore};
 
 /// Everything a worker needs to rebuild its own pipeline. Shared by
 /// reference across worker threads — sessions are deliberately absent
@@ -91,6 +91,11 @@ pub struct SweepEnv<'a> {
     /// part of the store fingerprint: bf16 storage rounds every param
     /// and activation.
     pub dtype: Dtype,
+    /// Numeric tier every worker runs under. Like `dtype` it IS part of
+    /// the store fingerprint: the fast tier's fused/approximated
+    /// kernels move recorded numbers, so fast cells must never shadow
+    /// exact ones (and `--resume` must never mix tiers).
+    pub math: MathTier,
     /// Teacher residency budget (`--max-resident-blocks`; 0 = fully
     /// resident). Informational — like `threads` it is deliberately NOT
     /// part of the store fingerprint, because streamed and resident runs
@@ -109,9 +114,10 @@ impl SweepEnv<'_> {
             .file_name()
             .map(|s| s.to_string_lossy().into_owned())
             .unwrap_or_else(|| self.artifact_dir.display().to_string());
-        config_fingerprint(&dims, &self.dense_tag, self.corpus.seed,
-                           &self.ft, self.eval_seqs, &self.impl_name,
-                           self.eval_split, self.backend, self.dtype)
+        config_fingerprint_math(&dims, &self.dense_tag, self.corpus.seed,
+                                &self.ft, self.eval_seqs, &self.impl_name,
+                                self.eval_split, self.backend, self.dtype,
+                                self.math)
     }
 }
 

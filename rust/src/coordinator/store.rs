@@ -68,7 +68,7 @@ use crate::masks::MaskSet;
 use crate::model::{Manifest, ParamStore};
 use crate::pruning::Pattern;
 use crate::runtime::BackendKind;
-use crate::tensor::Dtype;
+use crate::tensor::{Dtype, MathTier};
 use crate::util::{atomic_write, Json};
 
 use super::pipeline::{PrunedModel, RunRecord};
@@ -93,22 +93,55 @@ pub fn fnv1a64(s: &str) -> u64 {
 /// two execution substrates agree only to float tolerance, so their
 /// records must never shadow each other; `dtype` joins because bf16
 /// storage rounds every param and activation (unlike `--threads` or the
-/// SIMD path, which never move a bit).
+/// SIMD path, which never move a bit). The math tier joins through
+/// [`config_fingerprint_math`]; this 9-input form is the exact-tier
+/// fingerprint, byte-identical to what it always produced.
 #[allow(clippy::too_many_arguments)]
 pub fn config_fingerprint(dims_name: &str, dense_tag: &str,
                           corpus_seed: u64, ft: &FtConfig,
                           eval_seqs: usize, impl_name: &str,
                           eval_split: Split, backend: BackendKind,
                           dtype: Dtype) -> String {
-    let canon = format!(
+    let canon = fingerprint_canon(dims_name, dense_tag, corpus_seed, ft,
+                                  eval_seqs, impl_name, eval_split,
+                                  backend, dtype);
+    format!("{:016x}", fnv1a64(&canon))
+}
+
+/// [`config_fingerprint`] with the numeric tier as a tenth input. The
+/// fast tier runs fused/approximated kernels, so its cells must never
+/// shadow exact ones; the exact tier appends nothing, keeping every
+/// historical fingerprint stable (and `--resume` of pre-tier stores
+/// working). The SIMD path still does NOT join: within a tier every
+/// path is bit-identical.
+#[allow(clippy::too_many_arguments)]
+pub fn config_fingerprint_math(dims_name: &str, dense_tag: &str,
+                               corpus_seed: u64, ft: &FtConfig,
+                               eval_seqs: usize, impl_name: &str,
+                               eval_split: Split, backend: BackendKind,
+                               dtype: Dtype, math: MathTier) -> String {
+    let mut canon = fingerprint_canon(dims_name, dense_tag, corpus_seed,
+                                      ft, eval_seqs, impl_name,
+                                      eval_split, backend, dtype);
+    if math == MathTier::Fast {
+        canon.push_str(";math=fast");
+    }
+    format!("{:016x}", fnv1a64(&canon))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn fingerprint_canon(dims_name: &str, dense_tag: &str, corpus_seed: u64,
+                     ft: &FtConfig, eval_seqs: usize, impl_name: &str,
+                     eval_split: Split, backend: BackendKind,
+                     dtype: Dtype) -> String {
+    format!(
         "dims={dims_name};dense={dense_tag};corpus={corpus_seed};\
          impl={impl_name};backend={};dtype={};eval_seqs={eval_seqs};\
          eval_split={eval_split:?};\
          ft=epochs:{},lr:{},tol:{},window:{},calib:{},cache:{},lora:{}",
         backend.as_str(), dtype.as_str(), ft.epochs, ft.lr,
         ft.converge_tol, ft.converge_window, ft.calib_seqs,
-        ft.cache_budget_bytes, ft.lora_steps);
-    format!("{:016x}", fnv1a64(&canon))
+        ft.cache_budget_bytes, ft.lora_steps)
 }
 
 pub struct RunStore {

@@ -32,6 +32,12 @@
 //! rounds every stored param/activation (compute stays f32), halves
 //! compact checkpoint payloads, and — unlike the other knobs — joins
 //! the run-store fingerprint because it moves recorded numbers.
+//! `--math exact|fast` (default `EBFT_MATH` or exact) picks the kernel
+//! numeric tier: `fast` unlocks FMA/AVX-512 matmul cores, vectorized
+//! SwiGLU, f32 reduction sums and — under `--dtype bf16` — native bf16
+//! operands, trading the exact tier's reference numerics for
+//! throughput within documented tolerances; like `--dtype` it joins
+//! the run-store fingerprint (fast cells never shadow exact ones).
 //! `--max-resident-blocks N` (default `EBFT_MAX_RESIDENT_BLOCKS` or 0)
 //! streams the dense teacher out-of-core with at most N block groups
 //! resident — bit-identical results, strictly lower peak teacher
@@ -163,6 +169,14 @@ fn run() -> Result<()> {
             .context("--dtype expects f32|bf16")?;
         ebft::tensor::dtype::set_dtype(dt);
     }
+    // numeric tier: --math beats EBFT_MATH beats exact. Like --dtype it
+    // DOES change results (the fast tier runs fused/approximated
+    // kernels), so it joins the run-store fingerprint too.
+    if let Some(m) = args.get("math") {
+        let t = ebft::tensor::MathTier::parse(m)
+            .context("--math expects exact|fast")?;
+        ebft::tensor::kernels::set_math_tier(t);
+    }
     match args.subcommand.as_str() {
         "pretrain" => cmd_pretrain(&args),
         "prune" => cmd_prune(&args),
@@ -188,7 +202,7 @@ fn print_usage() {
     println!("ebft — block-wise fine-tuning for sparse LLMs (reproduction)");
     println!();
     println!("usage: ebft <pretrain|prune|finetune|pipeline|grid|flap|eval|zeroshot|generate|serve-bench|compress|info> [--options]");
-    println!("common options: --config tiny|small|base  --artifacts DIR  --runs DIR  --threads N  --sparse-mode off|auto|force  --dtype f32|bf16");
+    println!("common options: --config tiny|small|base  --artifacts DIR  --runs DIR  --threads N  --sparse-mode off|auto|force  --dtype f32|bf16  --math exact|fast");
     println!("teacher options: --max-resident-blocks N  (0 = fully resident; N > 0 streams the dense teacher out-of-core, at most N block groups in memory)");
     println!("compress options: --in FILE.ebft  --out FILE.ebft  [--dense]");
     println!("sweep options (pipeline/grid): --jobs N  --resume  --synthetic  (N processes with --resume on one runs dir drain the sweep cooperatively via store leases)");
@@ -342,6 +356,7 @@ fn sweep_env<'a>(args: &Args, paths: &Paths, corpus: &'a MarkovCorpus,
         backend,
         threads: args.get_usize("threads", 0)?,
         dtype: ebft::tensor::dtype::active_dtype(),
+        math: ebft::tensor::kernels::math_tier(),
         max_resident_blocks: max_resident_blocks(args)?,
     })
 }
@@ -737,6 +752,13 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let mut j = Json::obj();
     j.set("requests", Json::Num(n_requests as f64));
     j.set("tenants", Json::Num(n_tenants as f64));
+    // perf-triage context for fast-tier benches; elided at the default
+    // exact tier so existing consumers see unchanged JSON
+    if ebft::tensor::kernels::math_tier() == ebft::tensor::MathTier::Fast {
+        j.set("math", Json::Str("fast".to_string()));
+        j.set("simd_path", Json::Str(
+            ebft::tensor::kernels::simd_path().as_str().to_string()));
+    }
     j.set("base_sparsity", Json::Num(pruned.masks.sparsity()));
     j.set("layer_sparsity",
           Json::Arr(layer_sparsity.iter().map(|&s| Json::Num(s))

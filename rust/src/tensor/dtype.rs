@@ -2,7 +2,13 @@
 //!
 //! `Dtype` is a **storage precision** axis, not a compute one: kernels
 //! always accumulate in f32 (DESIGN.md §Kernels), and in-memory tensors
-//! stay `Vec<f32>` at either setting. Under [`Dtype::Bf16`] every value
+//! stay `Vec<f32>` at either setting. (One deliberate crossover: under
+//! the opt-in fast math tier — `kernels::MathTier::Fast` — the
+//! matmul-family kernels multiply bf16 B operands natively with f32
+//! accumulate, skipping the widened-f32 stream; for weight operands the
+//! storage contract already made those values bf16-exact, so the pack
+//! is lossless there. See kernels.rs "Numeric tiers".) Under
+//! [`Dtype::Bf16`] every value
 //! that crosses a *storage* boundary — params loaded from
 //! `init_params.bin` or a checkpoint, activations leaving a reference
 //! artifact, merged serving tenants — is rounded to the nearest

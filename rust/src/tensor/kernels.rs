@@ -27,28 +27,55 @@
 //!
 //! ## SIMD
 //!
-//! The inner loops run through explicit SIMD cores — AVX2 on x86_64,
-//! NEON on aarch64 — selected once at runtime ([`simd_path`], override
-//! with `EBFT_SIMD=scalar|avx2|neon`) with a scalar fallback that is
-//! **bitwise-equal by construction**: every SIMD core assigns each
-//! output element to exactly one lane and replays the scalar code's
-//! per-element operation sequence (separate mul-then-add — never FMA,
-//! which single-rounds where the scalar path double-rounds; `sqrt`/
-//! `div` vector ops are IEEE correctly rounded, identical to their
-//! scalar forms). The dot-product kernel ([`matmul_a_bt`]) vectorizes
-//! over *output columns* (one dot per lane, via a panel of B packed
-//! lane-interleaved), so each dot's `k` accumulation order stays the
-//! scalar ascending order. `EBFT_SIMD` is therefore a pure wall-clock
-//! knob, exactly like `EBFT_THREADS`. Two kernels deliberately stay
-//! scalar: [`silu_mul`]`(_bwd)` (libm `exp` has no bit-equal vector
-//! form) and [`recon_loss_grad`]'s f64 block sums (lane-splitting a
-//! running f64 sum would change its order); both are memory-bound.
+//! The inner loops run through explicit SIMD cores — AVX-512/AVX2 on
+//! x86_64, NEON on aarch64 — selected once at runtime ([`simd_path`],
+//! override with `EBFT_SIMD=scalar|avx2|avx512|neon`) with a scalar
+//! fallback that is **bitwise-equal by construction**: every SIMD core
+//! assigns each output element to exactly one lane and replays the
+//! scalar code's per-element operation sequence (on the exact tier,
+//! separate mul-then-add — never FMA, which single-rounds where the
+//! scalar path double-rounds; `sqrt`/`div` vector ops are IEEE
+//! correctly rounded, identical to their scalar forms). The dot-product
+//! kernel ([`matmul_a_bt`]) vectorizes over *output columns* (one dot
+//! per lane, via a panel of B packed lane-interleaved), so each dot's
+//! `k` accumulation order stays the scalar ascending order. `EBFT_SIMD`
+//! is therefore a pure wall-clock knob, exactly like `EBFT_THREADS`.
+//! On the exact tier two kernels deliberately stay scalar:
+//! [`silu_mul`]`(_bwd)` (libm `exp` has no bit-equal vector form) and
+//! [`recon_loss_grad`]'s f64 block sums (lane-splitting a running f64
+//! sum would change its order).
+//!
+//! ## Numeric tiers
+//!
+//! [`math_tier`] selects one of two numeric universes (CLI `--math`,
+//! env `EBFT_MATH`, scoped [`set_math_tier`]):
+//!
+//! * [`MathTier::Exact`] (default) — the historical contract above,
+//!   untouched: no FMA, scalar `exp`, f64 reduction sums.
+//! * [`MathTier::Fast`] — the matmul family fuses multiply-add into
+//!   single-rounded FMA, [`silu_mul`]`(_bwd)` vectorize through a
+//!   polynomial `exp` (`exp_fast`, ≤ 8 ulp of libm `expf` over the
+//!   clamped range), [`recon_loss_grad`] accumulates f32 8-lane block
+//!   sums instead of a scalar f64 sum, and under `--dtype bf16` the
+//!   matmul-family B operand is multiplied natively from packed bf16
+//!   (f32 accumulate, no widened materialization).
+//!
+//! The fast tier is *also* deterministic across thread counts and SIMD
+//! paths: every fused op is the correctly rounded IEEE fma — scalar
+//! `f32::mul_add` ≡ `vfmadd231ps` ≡ `vfmaq_f32` — every lane structure
+//! is replicated exactly by its scalar fallback (including
+//! [`recon_loss_grad`]'s fixed 8-slot accumulator and tail rule), and
+//! `exp_fast` runs the same clamped op sequence on every ISA. What the
+//! tier changes is the *values* relative to the exact tier (and NaN
+//! propagation through `exp_fast`'s clamp is unspecified), which is why
+//! the tier — unlike `--threads`/`EBFT_SIMD` — joins the run-store
+//! fingerprint, exactly like `--dtype`.
 //!
 //! ## Determinism contract
 //!
-//! Results are **bit-identical across thread counts** (and across the
-//! serial path). Two rules enforce this, and every kernel here follows
-//! them:
+//! Within a tier, results are **bit-identical across thread counts**
+//! (and across the serial path). Two rules enforce this, and every
+//! kernel here follows them:
 //!
 //! 1. each output element is written by exactly one task, and its
 //!    accumulation order (over `k`, rows, or reduce blocks) is a fixed
@@ -138,6 +165,11 @@ impl Drop for ThreadsGuard {
 /// is a pure wall-clock knob.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SimdPath {
+    /// 16-lane AVX-512 intrinsics (x86_64 with runtime AVX512F + AVX2
+    /// support; the 512-bit cores cover the matmul family, everything
+    /// else delegates to the AVX2 cores — which the availability gate
+    /// guarantees are runnable).
+    Avx512,
     /// 8-lane AVX2 intrinsics (x86_64 with runtime AVX2 support).
     Avx2,
     /// 4-lane NEON intrinsics (aarch64; NEON is architecturally
@@ -151,6 +183,7 @@ pub enum SimdPath {
 impl SimdPath {
     pub fn as_str(self) -> &'static str {
         match self {
+            SimdPath::Avx512 => "avx512",
             SimdPath::Avx2 => "avx2",
             SimdPath::Neon => "neon",
             SimdPath::Scalar => "scalar",
@@ -161,6 +194,7 @@ impl SimdPath {
     /// lane-interleaved packing).
     fn lanes(self) -> usize {
         match self {
+            SimdPath::Avx512 => 16,
             SimdPath::Avx2 => 8,
             SimdPath::Neon => 4,
             SimdPath::Scalar => 0,
@@ -172,7 +206,9 @@ impl SimdPath {
     /// override, and what the microbench rig and the SIMD↔scalar golden
     /// tests flip against the scalar reference.
     pub fn detected() -> SimdPath {
-        if SimdPath::Avx2.available() {
+        if SimdPath::Avx512.available() {
+            SimdPath::Avx512
+        } else if SimdPath::Avx2.available() {
             SimdPath::Avx2
         } else if SimdPath::Neon.available() {
             SimdPath::Neon
@@ -184,6 +220,11 @@ impl SimdPath {
     /// Can this path actually execute on the running host?
     fn available(self) -> bool {
         match self {
+            #[cfg(target_arch = "x86_64")]
+            SimdPath::Avx512 => {
+                std::is_x86_feature_detected!("avx512f")
+                    && std::is_x86_feature_detected!("avx2")
+            }
             #[cfg(target_arch = "x86_64")]
             SimdPath::Avx2 => std::is_x86_feature_detected!("avx2"),
             #[cfg(target_arch = "aarch64")]
@@ -203,6 +244,7 @@ fn encode_path(p: SimdPath) -> usize {
         SimdPath::Avx2 => 1,
         SimdPath::Neon => 2,
         SimdPath::Scalar => 3,
+        SimdPath::Avx512 => 4,
     }
 }
 
@@ -210,6 +252,7 @@ fn decode_path(v: usize) -> SimdPath {
     match v {
         1 => SimdPath::Avx2,
         2 => SimdPath::Neon,
+        4 => SimdPath::Avx512,
         _ => SimdPath::Scalar,
     }
 }
@@ -219,6 +262,7 @@ fn detect_path() -> SimdPath {
         let want = match s.trim().to_ascii_lowercase().as_str() {
             "scalar" => Some(SimdPath::Scalar),
             "avx2" => Some(SimdPath::Avx2),
+            "avx512" => Some(SimdPath::Avx512),
             "neon" => Some(SimdPath::Neon),
             _ => None, // unknown/"auto": fall through to detection
         };
@@ -258,6 +302,105 @@ pub fn set_simd_path(p: SimdPath) -> SimdPath {
 }
 
 // ---------------------------------------------------------------------
+// math-tier control
+// ---------------------------------------------------------------------
+
+/// The numeric tier the kernels run at (see the module docs' "Numeric
+/// tiers" section). Both tiers are deterministic across thread counts
+/// and SIMD paths; the fast tier trades the exact tier's reference
+/// numerics for fused/vectorized ones, so the tier joins the run-store
+/// fingerprint like `--dtype` does.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MathTier {
+    /// The default: the historical bit-identical contract — no FMA,
+    /// scalar libm `exp`, f64 reduction block sums.
+    Exact,
+    /// Opt-in throughput tier: FMA matmul cores, polynomial-`exp`
+    /// SwiGLU, f32 lane-tree reduction sums, bf16-native B operands
+    /// under `--dtype bf16`.
+    Fast,
+}
+
+impl MathTier {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MathTier::Exact => "exact",
+            MathTier::Fast => "fast",
+        }
+    }
+
+    /// Parse a CLI/env spelling.
+    pub fn parse(s: &str) -> Option<MathTier> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "exact" => Some(MathTier::Exact),
+            "fast" => Some(MathTier::Fast),
+            _ => None,
+        }
+    }
+}
+
+/// Resolved math tier; 0 = not yet resolved, then 1 = exact, 2 = fast.
+static MATH_TARGET: AtomicUsize = AtomicUsize::new(0);
+
+fn encode_tier(t: MathTier) -> usize {
+    match t {
+        MathTier::Exact => 1,
+        MathTier::Fast => 2,
+    }
+}
+
+fn decode_tier(v: usize) -> MathTier {
+    match v {
+        2 => MathTier::Fast,
+        _ => MathTier::Exact,
+    }
+}
+
+fn detect_tier() -> MathTier {
+    std::env::var("EBFT_MATH")
+        .ok()
+        .and_then(|s| MathTier::parse(&s))
+        .unwrap_or(MathTier::Exact)
+}
+
+/// The active math tier. First call resolves `EBFT_MATH` (unless
+/// [`set_math_tier`] ran earlier); later calls return the cached
+/// choice, exactly like [`simd_path`].
+pub fn math_tier() -> MathTier {
+    let v = MATH_TARGET.load(Ordering::Relaxed);
+    if v != 0 {
+        return decode_tier(v);
+    }
+    let resolved = detect_tier();
+    let _ = MATH_TARGET.compare_exchange(0, encode_tier(resolved),
+                                         Ordering::Relaxed,
+                                         Ordering::Relaxed);
+    decode_tier(MATH_TARGET.load(Ordering::Relaxed))
+}
+
+/// Override the math tier and return the previous one — the microbench
+/// rig and the tier-tolerance tests flip between tiers with this.
+/// Unlike [`set_threads`]/[`set_simd_path`] this DOES change results
+/// (that is its point), so anything that records numbers must carry the
+/// tier in its fingerprint.
+pub fn set_math_tier(t: MathTier) -> MathTier {
+    let prev = math_tier();
+    MATH_TARGET.store(encode_tier(t), Ordering::Relaxed);
+    prev
+}
+
+/// Does the host implement the FMA instruction set (a separate CPUID
+/// bit from AVX2)? Without it the fast tier's AVX2 dispatch arms fall
+/// back to the scalar soft-fma loops — `f32::mul_add` is the same
+/// correctly rounded fused op, so the results are bit-identical, only
+/// slower. AVX512F implies FMA, so the AVX-512 arms need no guard.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn fma_available() -> bool {
+    std::is_x86_feature_detected!("fma")
+}
+
+// ---------------------------------------------------------------------
 // SIMD cores
 // ---------------------------------------------------------------------
 //
@@ -270,10 +413,31 @@ pub fn set_simd_path(p: SimdPath) -> SimdPath {
 
 /// `out[j] += a · x[j]` — the shared axpy core of [`matmul`],
 /// [`matmul_at_b`] and the sparse `gather_axpy`/`panel_axpy` loops.
+/// Tier-aware: the fast tier fuses the multiply-add (sparse execution
+/// inherits the fast cores through this one wrapper).
 #[inline]
 pub fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
     debug_assert_eq!(out.len(), x.len());
+    if math_tier() == MathTier::Fast {
+        match simd_path() {
+            #[cfg(target_arch = "x86_64")]
+            // Safety: simd_path() == Avx512 only after runtime detection.
+            SimdPath::Avx512 => unsafe { x86_512::axpy_fma(out, a, x) },
+            #[cfg(target_arch = "x86_64")]
+            // Safety: runtime-detected AVX2, guarded runtime FMA.
+            SimdPath::Avx2 if fma_available() => unsafe {
+                x86::axpy_fma(out, a, x)
+            },
+            #[cfg(target_arch = "aarch64")]
+            SimdPath::Neon => neon::axpy_fma(out, a, x),
+            _ => axpy_scalar_fma(out, a, x),
+        }
+        return;
+    }
     match simd_path() {
+        #[cfg(target_arch = "x86_64")]
+        // Safety: simd_path() == Avx512 only after runtime detection.
+        SimdPath::Avx512 => unsafe { x86_512::axpy(out, a, x) },
         #[cfg(target_arch = "x86_64")]
         // Safety: simd_path() == Avx2 only after runtime detection.
         SimdPath::Avx2 => unsafe { x86::axpy(out, a, x) },
@@ -290,13 +454,67 @@ fn axpy_scalar(out: &mut [f32], a: f32, x: &[f32]) {
     }
 }
 
+/// Fast-tier scalar axpy: `f32::mul_add` is the correctly rounded
+/// fused multiply-add, bit-identical to the vector `vfmadd`/`vfmaq`
+/// forms — so it is both the scalar-path core and every tail.
+#[inline]
+fn axpy_scalar_fma(out: &mut [f32], a: f32, x: &[f32]) {
+    for (o, &xv) in out.iter_mut().zip(x) {
+        *o = a.mul_add(xv, *o);
+    }
+}
+
+/// Fast-tier bf16-operand axpy: `out[j] += a · widen(x[j])` where `x`
+/// is packed bf16 bits ([`bf16_pack_operand`]). The widen is exact
+/// (bf16 is an f32 prefix), the accumulate is f32 fma.
+#[inline]
+fn axpy_bf16(out: &mut [f32], a: f32, x: &[u16]) {
+    debug_assert_eq!(out.len(), x.len());
+    match simd_path() {
+        #[cfg(target_arch = "x86_64")]
+        // Safety: simd_path() == Avx512 only after runtime detection.
+        SimdPath::Avx512 => unsafe { x86_512::axpy_bf16(out, a, x) },
+        #[cfg(target_arch = "x86_64")]
+        // Safety: runtime-detected AVX2, guarded runtime FMA.
+        SimdPath::Avx2 if fma_available() => unsafe {
+            x86::axpy_bf16(out, a, x)
+        },
+        #[cfg(target_arch = "aarch64")]
+        SimdPath::Neon => neon::axpy_bf16(out, a, x),
+        _ => axpy_bf16_scalar(out, a, x),
+    }
+}
+
+#[inline]
+fn axpy_bf16_scalar(out: &mut [f32], a: f32, x: &[u16]) {
+    for (o, &xv) in out.iter_mut().zip(x) {
+        *o = a.mul_add(super::dtype::bf16_to_f32(xv), *o);
+    }
+}
+
+/// Pack a matmul-family B operand to bf16 bits when the fast tier runs
+/// under `--dtype bf16`; `None` otherwise (the f32 cores run). Under
+/// the bf16 *storage* contract weights are already bf16-exact, so for
+/// weight operands the pack is lossless and the product is
+/// bit-identical to the f32 fast path — activation operands round
+/// elementwise (deterministically) instead of paying the widened f32
+/// stream.
+fn bf16_pack_operand(x: &[f32]) -> Option<Vec<u16>> {
+    if math_tier() != MathTier::Fast
+        || super::dtype::active_dtype() != super::Dtype::Bf16
+    {
+        return None;
+    }
+    Some(x.iter().map(|&v| super::dtype::f32_to_bf16(v)).collect())
+}
+
 /// `acc[e] += x[e]` over a slice pair ([`add_assign`]'s core).
 #[inline]
 fn add_slice(acc: &mut [f32], x: &[f32]) {
     match simd_path() {
         #[cfg(target_arch = "x86_64")]
-        // Safety: simd_path() == Avx2 only after runtime detection.
-        SimdPath::Avx2 => unsafe { x86::add(acc, x) },
+        // Safety: both paths imply runtime AVX2 (Avx512 requires it).
+        SimdPath::Avx2 | SimdPath::Avx512 => unsafe { x86::add(acc, x) },
         #[cfg(target_arch = "aarch64")]
         SimdPath::Neon => neon::add(acc, x),
         _ => add_slice_scalar(acc, x),
@@ -316,8 +534,10 @@ fn add_slice_scalar(acc: &mut [f32], x: &[f32]) {
 fn mask_mul_slice(o: &mut [f32], w: &[f32], m: &[f32]) {
     match simd_path() {
         #[cfg(target_arch = "x86_64")]
-        // Safety: simd_path() == Avx2 only after runtime detection.
-        SimdPath::Avx2 => unsafe { x86::mask_mul(o, w, m) },
+        // Safety: both paths imply runtime AVX2 (Avx512 requires it).
+        SimdPath::Avx2 | SimdPath::Avx512 => unsafe {
+            x86::mask_mul(o, w, m)
+        },
         #[cfg(target_arch = "aarch64")]
         SimdPath::Neon => neon::mask_mul(o, w, m),
         _ => mask_mul_slice_scalar(o, w, m),
@@ -337,8 +557,10 @@ fn mask_mul_add_slice(o: &mut [f32], w: &[f32], m: &[f32], d: &[f32],
                       s: f32) {
     match simd_path() {
         #[cfg(target_arch = "x86_64")]
-        // Safety: simd_path() == Avx2 only after runtime detection.
-        SimdPath::Avx2 => unsafe { x86::mask_mul_add(o, w, m, d, s) },
+        // Safety: both paths imply runtime AVX2 (Avx512 requires it).
+        SimdPath::Avx2 | SimdPath::Avx512 => unsafe {
+            x86::mask_mul_add(o, w, m, d, s)
+        },
         #[cfg(target_arch = "aarch64")]
         SimdPath::Neon => neon::mask_mul_add(o, w, m, d, s),
         _ => mask_mul_add_slice_scalar(o, w, m, d, s),
@@ -362,8 +584,8 @@ fn adam_slice(po: &mut [f32], mo: &mut [f32], vo: &mut [f32], p: &[f32],
               bc1: f32, bc2: f32) {
     match simd_path() {
         #[cfg(target_arch = "x86_64")]
-        // Safety: simd_path() == Avx2 only after runtime detection.
-        SimdPath::Avx2 => unsafe {
+        // Safety: both paths imply runtime AVX2 (Avx512 requires it).
+        SimdPath::Avx2 | SimdPath::Avx512 => unsafe {
             x86::adam(po, mo, vo, p, g, m, v, lr, h, bc1, bc2)
         },
         #[cfg(target_arch = "aarch64")]
@@ -397,8 +619,10 @@ fn adam_slice_scalar(po: &mut [f32], mo: &mut [f32], vo: &mut [f32],
 fn col_stats_row(sq: &mut [f32], su: &mut [f32], row: &[f32]) {
     match simd_path() {
         #[cfg(target_arch = "x86_64")]
-        // Safety: simd_path() == Avx2 only after runtime detection.
-        SimdPath::Avx2 => unsafe { x86::col_stats_row(sq, su, row) },
+        // Safety: both paths imply runtime AVX2 (Avx512 requires it).
+        SimdPath::Avx2 | SimdPath::Avx512 => unsafe {
+            x86::col_stats_row(sq, su, row)
+        },
         #[cfg(target_arch = "aarch64")]
         SimdPath::Neon => neon::col_stats_row(sq, su, row),
         _ => col_stats_row_scalar(sq, su, row),
@@ -415,10 +639,34 @@ fn col_stats_row_scalar(sq: &mut [f32], su: &mut [f32], row: &[f32]) {
 
 /// `LANES` simultaneous dot products against a lane-interleaved B panel
 /// (`pack[p·lanes + l] = B[jb+l][p]`): lane `l` runs output column
-/// `jb+l`'s dot in the scalar ascending-`k` order.
+/// `jb+l`'s dot in the scalar ascending-`k` order. Tier-aware: the fast
+/// tier runs the fma cores.
 #[inline]
 fn dot_panel(dst: &mut [f32], arow: &[f32], pack: &[f32], lanes: usize) {
+    if math_tier() == MathTier::Fast {
+        match simd_path() {
+            #[cfg(target_arch = "x86_64")]
+            // Safety: simd_path() == Avx512 only after runtime detection.
+            SimdPath::Avx512 if lanes == 16 => unsafe {
+                x86_512::dot16_fma(dst, arow, pack)
+            },
+            #[cfg(target_arch = "x86_64")]
+            // Safety: runtime-detected AVX2, guarded runtime FMA.
+            SimdPath::Avx2 if lanes == 8 && fma_available() => unsafe {
+                x86::dot8_fma(dst, arow, pack)
+            },
+            #[cfg(target_arch = "aarch64")]
+            SimdPath::Neon if lanes == 4 => neon::dot4_fma(dst, arow, pack),
+            _ => dot_panel_scalar_fma(dst, arow, pack, lanes),
+        }
+        return;
+    }
     match simd_path() {
+        #[cfg(target_arch = "x86_64")]
+        // Safety: simd_path() == Avx512 only after runtime detection.
+        SimdPath::Avx512 if lanes == 16 => unsafe {
+            x86_512::dot16(dst, arow, pack)
+        },
         #[cfg(target_arch = "x86_64")]
         // Safety: simd_path() == Avx2 only after runtime detection.
         SimdPath::Avx2 if lanes == 8 => unsafe {
@@ -442,12 +690,217 @@ fn dot_panel_scalar(dst: &mut [f32], arow: &[f32], pack: &[f32],
     }
 }
 
+#[inline]
+fn dot_panel_scalar_fma(dst: &mut [f32], arow: &[f32], pack: &[f32],
+                        lanes: usize) {
+    for (l, d) in dst.iter_mut().enumerate() {
+        let mut acc = 0.0f32;
+        for (p, &av) in arow.iter().enumerate() {
+            acc = av.mul_add(pack[p * lanes + l], acc);
+        }
+        *d = acc;
+    }
+}
+
+/// [`dot_panel`] against a bf16-packed B panel (fast tier under
+/// `--dtype bf16`): lanes widen bf16 → f32 exactly, accumulate f32 fma.
+#[inline]
+fn dot_panel_bf16(dst: &mut [f32], arow: &[f32], pack: &[u16],
+                  lanes: usize) {
+    match simd_path() {
+        #[cfg(target_arch = "x86_64")]
+        // Safety: simd_path() == Avx512 only after runtime detection.
+        SimdPath::Avx512 if lanes == 16 => unsafe {
+            x86_512::dot16_bf16(dst, arow, pack)
+        },
+        #[cfg(target_arch = "x86_64")]
+        // Safety: runtime-detected AVX2, guarded runtime FMA.
+        SimdPath::Avx2 if lanes == 8 && fma_available() => unsafe {
+            x86::dot8_bf16(dst, arow, pack)
+        },
+        #[cfg(target_arch = "aarch64")]
+        SimdPath::Neon if lanes == 4 => neon::dot4_bf16(dst, arow, pack),
+        _ => dot_panel_bf16_scalar(dst, arow, pack, lanes),
+    }
+}
+
+#[inline]
+fn dot_panel_bf16_scalar(dst: &mut [f32], arow: &[f32], pack: &[u16],
+                         lanes: usize) {
+    for (l, d) in dst.iter_mut().enumerate() {
+        let mut acc = 0.0f32;
+        for (p, &av) in arow.iter().enumerate() {
+            acc = av.mul_add(
+                super::dtype::bf16_to_f32(pack[p * lanes + l]), acc);
+        }
+        *d = acc;
+    }
+}
+
+// ---------------------------------------------------------------------
+// fast-tier transcendental + reduction scalar cores
+// ---------------------------------------------------------------------
+//
+// The fast tier's vector silu/reduction cores and these scalar forms
+// are bit-identical by construction: the same clamped Cephes-style op
+// sequence for `exp_fast` (every step a correctly rounded IEEE op —
+// mul, fma, round-ties-even, div — so scalar and vector lanes agree),
+// and the same fixed 8-slot accumulator structure for the reduction.
+
+/// `exp_fast`'s clamp range: inputs below/above saturate so the 2^n
+/// exponent-bit scale below stays in [1, 254] — no inf/denormal wrap.
+const EXP_LO: f32 = -87.0;
+const EXP_HI: f32 = 88.0;
+/// log2(e); `n = round_ties_even(x·LOG2EF)` picks the power-of-two.
+const EXP_LOG2EF: f32 = 1.442_695_04;
+/// Extended-precision split of ln(2): C1 + C2 = ln 2, C1 exact in 11
+/// bits so `x − n·C1` is exact for |n| ≤ 2^11.
+const EXP_C1: f32 = 0.693_359_375;
+const EXP_C2: f32 = -2.121_944_4e-4;
+/// Cephes `expf` minimax polynomial over the reduced range
+/// [−½ln2, ½ln2], Horner order P0 → P5.
+const EXP_P: [f32; 6] = [
+    1.987_569_1e-4,
+    1.398_199_9e-3,
+    8.333_452e-3,
+    4.166_579_6e-2,
+    1.666_666_5e-1,
+    0.5,
+];
+
+/// Fast-tier polynomial `exp`: Cephes-style range reduction + degree-5
+/// minimax + exponent-bit 2^n scale. ≤ ~8 ulp (< 1e-6 relative) of
+/// libm `expf` over the clamped range; saturates (never inf) outside
+/// it; NaN propagation unspecified (the clamp's min/max semantics
+/// differ per ISA for NaN inputs). Every operation is a correctly
+/// rounded IEEE op performed in the same order by the vector cores, so
+/// scalar and SIMD results are bit-identical.
+fn exp_fast(x: f32) -> f32 {
+    let x = x.max(EXP_LO).min(EXP_HI);
+    let n = (x * EXP_LOG2EF).round_ties_even();
+    let r = (-n).mul_add(EXP_C1, x);
+    let r = (-n).mul_add(EXP_C2, r);
+    let mut y = EXP_P[0];
+    y = y.mul_add(r, EXP_P[1]);
+    y = y.mul_add(r, EXP_P[2]);
+    y = y.mul_add(r, EXP_P[3]);
+    y = y.mul_add(r, EXP_P[4]);
+    y = y.mul_add(r, EXP_P[5]);
+    y = y.mul_add(r * r, r);
+    y += 1.0;
+    // n is integral and in [-126, 127], so the exponent-bit construction
+    // of 2^n is exact
+    let ni = n as i32;
+    y * f32::from_bits(((ni + 127) << 23) as u32)
+}
+
+/// Fast-tier fused SwiGLU slice: `o = (g·σ(g))·u` with
+/// `σ(g) = 1/(1 + exp_fast(−g))` — the same op order on every path.
+fn silu_mul_slice_fast(o: &mut [f32], g: &[f32], u: &[f32]) {
+    match simd_path() {
+        #[cfg(target_arch = "x86_64")]
+        // Safety: both paths imply runtime AVX2; FMA guarded.
+        SimdPath::Avx2 | SimdPath::Avx512 if fma_available() => unsafe {
+            x86::silu_mul_fast(o, g, u)
+        },
+        #[cfg(target_arch = "aarch64")]
+        SimdPath::Neon => neon::silu_mul_fast(o, g, u),
+        _ => silu_mul_slice_fast_scalar(o, g, u),
+    }
+}
+
+fn silu_mul_slice_fast_scalar(o: &mut [f32], g: &[f32], u: &[f32]) {
+    for ((o, &g), &u) in o.iter_mut().zip(g).zip(u) {
+        let s = 1.0 / (1.0 + exp_fast(-g));
+        *o = (g * s) * u;
+    }
+}
+
+/// Fast-tier fused SwiGLU backward slice (see [`silu_mul_bwd`] for the
+/// math): `dg = (d·u)·(s·fma(g, 1−s, 1))`, `du = d·(g·s)`.
+fn silu_mul_bwd_slice_fast(dg: &mut [f32], du: &mut [f32], d: &[f32],
+                           g: &[f32], u: &[f32]) {
+    match simd_path() {
+        #[cfg(target_arch = "x86_64")]
+        // Safety: both paths imply runtime AVX2; FMA guarded.
+        SimdPath::Avx2 | SimdPath::Avx512 if fma_available() => unsafe {
+            x86::silu_mul_bwd_fast(dg, du, d, g, u)
+        },
+        #[cfg(target_arch = "aarch64")]
+        SimdPath::Neon => neon::silu_mul_bwd_fast(dg, du, d, g, u),
+        _ => silu_mul_bwd_slice_fast_scalar(dg, du, d, g, u),
+    }
+}
+
+fn silu_mul_bwd_slice_fast_scalar(dg: &mut [f32], du: &mut [f32],
+                                  d: &[f32], g: &[f32], u: &[f32]) {
+    for i in 0..dg.len() {
+        let (dv, gv, uv) = (d[i], g[i], u[i]);
+        let s = 1.0 / (1.0 + exp_fast(-gv));
+        let f = s * gv.mul_add(1.0 - s, 1.0);
+        dg[i] = (dv * uv) * f;
+        du[i] = dv * (gv * s);
+    }
+}
+
+/// Fast-tier reduction block: accumulates `Σ diff²` over one
+/// [`REDUCE_BLOCK`]-sized block into a fixed 8-slot f32 lane structure
+/// (slot `i mod 8` over the 8-aligned prefix, slot `j − len8` over the
+/// tail) combined by a fixed tree — identical slot assignment and
+/// order on every path — and writes `dy = diff·scale` (the gradient is
+/// plain mul, bit-identical to the exact tier's). Returns the block
+/// partial.
+fn recon_block_fast(d: &mut [f32], y: &[f32], t: &[f32], scale: f32)
+                    -> f32 {
+    match simd_path() {
+        #[cfg(target_arch = "x86_64")]
+        // Safety: both paths imply runtime AVX2; FMA guarded.
+        SimdPath::Avx2 | SimdPath::Avx512 if fma_available() => unsafe {
+            x86::recon_block_fast(d, y, t, scale)
+        },
+        #[cfg(target_arch = "aarch64")]
+        SimdPath::Neon => neon::recon_block_fast(d, y, t, scale),
+        _ => recon_block_fast_scalar(d, y, t, scale),
+    }
+}
+
+fn recon_block_fast_scalar(d: &mut [f32], y: &[f32], t: &[f32],
+                           scale: f32) -> f32 {
+    let len = d.len();
+    let len8 = len - len % 8;
+    let mut lanes = [0.0f32; 8];
+    let mut i = 0usize;
+    while i < len8 {
+        for l in 0..8 {
+            let diff = y[i + l] - t[i + l];
+            lanes[l] = diff.mul_add(diff, lanes[l]);
+            d[i + l] = diff * scale;
+        }
+        i += 8;
+    }
+    for j in len8..len {
+        let diff = y[j] - t[j];
+        lanes[j - len8] = diff.mul_add(diff, lanes[j - len8]);
+        d[j] = diff * scale;
+    }
+    combine_lane_tree(&lanes)
+}
+
+/// The fixed combine tree for the 8 reduction slots:
+/// `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`.
+fn combine_lane_tree(l: &[f32; 8]) -> f32 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
 #[cfg(target_arch = "x86_64")]
 mod x86 {
     //! AVX2 cores. Every function requires runtime AVX2 support (the
-    //! dispatch wrappers guarantee it via `simd_path()`), keeps one
-    //! output element per lane, and uses separate `mul`/`add` — never
-    //! FMA — so results are bitwise-equal to the scalar cores.
+    //! dispatch wrappers guarantee it via `simd_path()`) and keeps one
+    //! output element per lane. The exact-tier cores use separate
+    //! `mul`/`add` — never FMA — so they are bitwise-equal to the
+    //! exact scalar cores; the `*_fma`/`*_fast` cores (fast tier only,
+    //! additionally gated on runtime FMA) use the correctly rounded
+    //! fused ops and are bitwise-equal to the fast scalar cores.
     #![allow(clippy::missing_safety_doc, clippy::too_many_arguments)]
 
     use super::AdamHyper;
@@ -605,14 +1058,323 @@ mod x86 {
             _mm256_storeu_ps(dst.as_mut_ptr(), acc);
         }
     }
+
+    // --- fast-tier cores (runtime FMA guaranteed by dispatch) --------
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy_fma(out: &mut [f32], a: f32, x: &[f32]) {
+        let n = out.len();
+        let mut i = 0usize;
+        unsafe {
+            let va = _mm256_set1_ps(a);
+            while i + 8 <= n {
+                let vo = _mm256_loadu_ps(out.as_ptr().add(i));
+                let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+                _mm256_storeu_ps(out.as_mut_ptr().add(i),
+                                 _mm256_fmadd_ps(va, vx, vo));
+                i += 8;
+            }
+        }
+        super::axpy_scalar_fma(&mut out[i..], a, &x[i..]);
+    }
+
+    /// Widen 8 bf16 values (u16 bits) to f32 lanes — exact (bf16 is an
+    /// f32 prefix): zero-extend to u32, shift into the high half.
+    #[target_feature(enable = "avx2")]
+    unsafe fn widen8(p: *const u16) -> __m256 {
+        unsafe {
+            let h = _mm_loadu_si128(p as *const __m128i);
+            _mm256_castsi256_ps(
+                _mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(h)))
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy_bf16(out: &mut [f32], a: f32, x: &[u16]) {
+        let n = out.len();
+        let mut i = 0usize;
+        unsafe {
+            let va = _mm256_set1_ps(a);
+            while i + 8 <= n {
+                let vo = _mm256_loadu_ps(out.as_ptr().add(i));
+                let vx = widen8(x.as_ptr().add(i));
+                _mm256_storeu_ps(out.as_mut_ptr().add(i),
+                                 _mm256_fmadd_ps(va, vx, vo));
+                i += 8;
+            }
+        }
+        super::axpy_bf16_scalar(&mut out[i..], a, &x[i..]);
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot8_fma(dst: &mut [f32], arow: &[f32], pack: &[f32]) {
+        debug_assert_eq!(dst.len(), 8);
+        debug_assert_eq!(pack.len(), arow.len() * 8);
+        unsafe {
+            let mut acc = _mm256_setzero_ps();
+            for (p, &av) in arow.iter().enumerate() {
+                let vb = _mm256_loadu_ps(pack.as_ptr().add(p * 8));
+                acc = _mm256_fmadd_ps(_mm256_set1_ps(av), vb, acc);
+            }
+            _mm256_storeu_ps(dst.as_mut_ptr(), acc);
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot8_bf16(dst: &mut [f32], arow: &[f32], pack: &[u16]) {
+        debug_assert_eq!(dst.len(), 8);
+        debug_assert_eq!(pack.len(), arow.len() * 8);
+        unsafe {
+            let mut acc = _mm256_setzero_ps();
+            for (p, &av) in arow.iter().enumerate() {
+                let vb = widen8(pack.as_ptr().add(p * 8));
+                acc = _mm256_fmadd_ps(_mm256_set1_ps(av), vb, acc);
+            }
+            _mm256_storeu_ps(dst.as_mut_ptr(), acc);
+        }
+    }
+
+    /// Vector `exp_fast` — the same clamped op sequence as the scalar
+    /// form, every step correctly rounded, so lanes match it bitwise.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn exp256(x: __m256) -> __m256 {
+        unsafe {
+            let x = _mm256_min_ps(
+                _mm256_max_ps(x, _mm256_set1_ps(super::EXP_LO)),
+                _mm256_set1_ps(super::EXP_HI));
+            let n = _mm256_round_ps::<{
+                _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC
+            }>(_mm256_mul_ps(x, _mm256_set1_ps(super::EXP_LOG2EF)));
+            let r = _mm256_fnmadd_ps(n, _mm256_set1_ps(super::EXP_C1), x);
+            let r = _mm256_fnmadd_ps(n, _mm256_set1_ps(super::EXP_C2), r);
+            let mut y = _mm256_set1_ps(super::EXP_P[0]);
+            y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(super::EXP_P[1]));
+            y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(super::EXP_P[2]));
+            y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(super::EXP_P[3]));
+            y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(super::EXP_P[4]));
+            y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(super::EXP_P[5]));
+            y = _mm256_fmadd_ps(y, _mm256_mul_ps(r, r), r);
+            y = _mm256_add_ps(y, _mm256_set1_ps(1.0));
+            let ni = _mm256_cvtps_epi32(n);
+            let scale = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(
+                _mm256_add_epi32(ni, _mm256_set1_epi32(127))));
+            _mm256_mul_ps(y, scale)
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn silu_mul_fast(o: &mut [f32], g: &[f32], u: &[f32]) {
+        let n = o.len();
+        let mut i = 0usize;
+        unsafe {
+            let one = _mm256_set1_ps(1.0);
+            let sign = _mm256_set1_ps(-0.0);
+            while i + 8 <= n {
+                let vg = _mm256_loadu_ps(g.as_ptr().add(i));
+                let vu = _mm256_loadu_ps(u.as_ptr().add(i));
+                // xor with the sign mask is the scalar `-g` exactly
+                let e = exp256(_mm256_xor_ps(vg, sign));
+                let s = _mm256_div_ps(one, _mm256_add_ps(one, e));
+                let r = _mm256_mul_ps(_mm256_mul_ps(vg, s), vu);
+                _mm256_storeu_ps(o.as_mut_ptr().add(i), r);
+                i += 8;
+            }
+        }
+        super::silu_mul_slice_fast_scalar(&mut o[i..], &g[i..], &u[i..]);
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn silu_mul_bwd_fast(dg: &mut [f32], du: &mut [f32],
+                                    d: &[f32], g: &[f32], u: &[f32]) {
+        let n = dg.len();
+        let mut i = 0usize;
+        unsafe {
+            let one = _mm256_set1_ps(1.0);
+            let sign = _mm256_set1_ps(-0.0);
+            while i + 8 <= n {
+                let vd = _mm256_loadu_ps(d.as_ptr().add(i));
+                let vg = _mm256_loadu_ps(g.as_ptr().add(i));
+                let vu = _mm256_loadu_ps(u.as_ptr().add(i));
+                let e = exp256(_mm256_xor_ps(vg, sign));
+                let s = _mm256_div_ps(one, _mm256_add_ps(one, e));
+                let om = _mm256_sub_ps(one, s);
+                let f = _mm256_mul_ps(s, _mm256_fmadd_ps(vg, om, one));
+                _mm256_storeu_ps(
+                    dg.as_mut_ptr().add(i),
+                    _mm256_mul_ps(_mm256_mul_ps(vd, vu), f));
+                _mm256_storeu_ps(
+                    du.as_mut_ptr().add(i),
+                    _mm256_mul_ps(vd, _mm256_mul_ps(vg, s)));
+                i += 8;
+            }
+        }
+        super::silu_mul_bwd_slice_fast_scalar(&mut dg[i..], &mut du[i..],
+                                              &d[i..], &g[i..], &u[i..]);
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn recon_block_fast(d: &mut [f32], y: &[f32], t: &[f32],
+                                   scale: f32) -> f32 {
+        let len = d.len();
+        let len8 = len - len % 8;
+        let mut lanes = [0.0f32; 8];
+        unsafe {
+            let vscale = _mm256_set1_ps(scale);
+            let mut acc = _mm256_setzero_ps();
+            let mut i = 0usize;
+            while i < len8 {
+                let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+                let vt = _mm256_loadu_ps(t.as_ptr().add(i));
+                let diff = _mm256_sub_ps(vy, vt);
+                acc = _mm256_fmadd_ps(diff, diff, acc);
+                _mm256_storeu_ps(d.as_mut_ptr().add(i),
+                                 _mm256_mul_ps(diff, vscale));
+                i += 8;
+            }
+            _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        }
+        // tail elements land in slots 0.. in order — the exact slot
+        // rule the scalar form replays
+        for j in len8..len {
+            let diff = y[j] - t[j];
+            lanes[j - len8] = diff.mul_add(diff, lanes[j - len8]);
+            d[j] = diff * scale;
+        }
+        super::combine_lane_tree(&lanes)
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86_512 {
+    //! AVX-512 cores (16 f32 lanes), covering the matmul family only —
+    //! axpy and the packed-panel dots, in exact (separate mul/add),
+    //! fma and bf16 forms. Elementwise/stat wrappers under
+    //! [`super::SimdPath::Avx512`] delegate to the AVX2 cores instead:
+    //! they are memory-bound, so the wider ISA buys nothing there.
+    //! Every function requires runtime AVX512F support (guaranteed by
+    //! the dispatch wrappers); one output element per lane, scalar
+    //! tails — the exact forms are bitwise-equal to the exact scalar
+    //! cores, the fast forms to the fast scalar cores.
+    #![allow(clippy::missing_safety_doc)]
+
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
+        let n = out.len();
+        let mut i = 0usize;
+        unsafe {
+            let va = _mm512_set1_ps(a);
+            while i + 16 <= n {
+                let vo = _mm512_loadu_ps(out.as_ptr().add(i));
+                let vx = _mm512_loadu_ps(x.as_ptr().add(i));
+                _mm512_storeu_ps(out.as_mut_ptr().add(i),
+                                 _mm512_add_ps(vo, _mm512_mul_ps(va, vx)));
+                i += 16;
+            }
+        }
+        super::axpy_scalar(&mut out[i..], a, &x[i..]);
+    }
+
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn axpy_fma(out: &mut [f32], a: f32, x: &[f32]) {
+        let n = out.len();
+        let mut i = 0usize;
+        unsafe {
+            let va = _mm512_set1_ps(a);
+            while i + 16 <= n {
+                let vo = _mm512_loadu_ps(out.as_ptr().add(i));
+                let vx = _mm512_loadu_ps(x.as_ptr().add(i));
+                _mm512_storeu_ps(out.as_mut_ptr().add(i),
+                                 _mm512_fmadd_ps(va, vx, vo));
+                i += 16;
+            }
+        }
+        super::axpy_scalar_fma(&mut out[i..], a, &x[i..]);
+    }
+
+    /// Widen 16 bf16 values (u16 bits) to f32 lanes — exact.
+    #[target_feature(enable = "avx512f")]
+    unsafe fn widen16(p: *const u16) -> __m512 {
+        unsafe {
+            let h = _mm256_loadu_si256(p as *const __m256i);
+            _mm512_castsi512_ps(
+                _mm512_slli_epi32::<16>(_mm512_cvtepu16_epi32(h)))
+        }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn axpy_bf16(out: &mut [f32], a: f32, x: &[u16]) {
+        let n = out.len();
+        let mut i = 0usize;
+        unsafe {
+            let va = _mm512_set1_ps(a);
+            while i + 16 <= n {
+                let vo = _mm512_loadu_ps(out.as_ptr().add(i));
+                let vx = widen16(x.as_ptr().add(i));
+                _mm512_storeu_ps(out.as_mut_ptr().add(i),
+                                 _mm512_fmadd_ps(va, vx, vo));
+                i += 16;
+            }
+        }
+        super::axpy_bf16_scalar(&mut out[i..], a, &x[i..]);
+    }
+
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn dot16(dst: &mut [f32], arow: &[f32], pack: &[f32]) {
+        debug_assert_eq!(dst.len(), 16);
+        debug_assert_eq!(pack.len(), arow.len() * 16);
+        unsafe {
+            let mut acc = _mm512_setzero_ps();
+            for (p, &av) in arow.iter().enumerate() {
+                let vb = _mm512_loadu_ps(pack.as_ptr().add(p * 16));
+                acc = _mm512_add_ps(acc,
+                                    _mm512_mul_ps(_mm512_set1_ps(av), vb));
+            }
+            _mm512_storeu_ps(dst.as_mut_ptr(), acc);
+        }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn dot16_fma(dst: &mut [f32], arow: &[f32], pack: &[f32]) {
+        debug_assert_eq!(dst.len(), 16);
+        debug_assert_eq!(pack.len(), arow.len() * 16);
+        unsafe {
+            let mut acc = _mm512_setzero_ps();
+            for (p, &av) in arow.iter().enumerate() {
+                let vb = _mm512_loadu_ps(pack.as_ptr().add(p * 16));
+                acc = _mm512_fmadd_ps(_mm512_set1_ps(av), vb, acc);
+            }
+            _mm512_storeu_ps(dst.as_mut_ptr(), acc);
+        }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn dot16_bf16(dst: &mut [f32], arow: &[f32],
+                             pack: &[u16]) {
+        debug_assert_eq!(dst.len(), 16);
+        debug_assert_eq!(pack.len(), arow.len() * 16);
+        unsafe {
+            let mut acc = _mm512_setzero_ps();
+            for (p, &av) in arow.iter().enumerate() {
+                let vb = widen16(pack.as_ptr().add(p * 16));
+                acc = _mm512_fmadd_ps(_mm512_set1_ps(av), vb, acc);
+            }
+            _mm512_storeu_ps(dst.as_mut_ptr(), acc);
+        }
+    }
 }
 
 #[cfg(target_arch = "aarch64")]
 mod neon {
     //! NEON cores (4 f32 lanes). NEON is architecturally guaranteed on
-    //! aarch64, so these are safe fns; like the AVX2 cores they keep one
-    //! output element per lane and use separate `vmulq`/`vaddq` (never
-    //! the fusing `vfmaq`), staying bitwise-equal to the scalar cores.
+    //! aarch64, so these are safe fns; like the AVX2 cores they keep
+    //! one output element per lane. The exact-tier cores use separate
+    //! `vmulq`/`vaddq` (never the fusing `vfmaq`), staying
+    //! bitwise-equal to the exact scalar cores; the `*_fma`/`*_fast`
+    //! cores (fast tier only) use `vfmaq_f32` — the same correctly
+    //! rounded fused op as `f32::mul_add` — and match the fast scalar
+    //! cores bitwise.
     #![allow(clippy::too_many_arguments)]
 
     use super::AdamHyper;
@@ -756,6 +1518,178 @@ mod neon {
             }
             vst1q_f32(dst.as_mut_ptr(), acc);
         }
+    }
+
+    // --- fast-tier cores ---------------------------------------------
+
+    pub fn axpy_fma(out: &mut [f32], a: f32, x: &[f32]) {
+        let n = out.len();
+        let mut i = 0usize;
+        unsafe {
+            let va = vdupq_n_f32(a);
+            while i + 4 <= n {
+                let vo = vld1q_f32(out.as_ptr().add(i));
+                let vx = vld1q_f32(x.as_ptr().add(i));
+                vst1q_f32(out.as_mut_ptr().add(i), vfmaq_f32(vo, va, vx));
+                i += 4;
+            }
+        }
+        super::axpy_scalar_fma(&mut out[i..], a, &x[i..]);
+    }
+
+    /// Widen 4 bf16 values (u16 bits) to f32 lanes — exact.
+    #[inline]
+    fn widen4(p: *const u16) -> float32x4_t {
+        unsafe {
+            vreinterpretq_f32_u32(vshll_n_u16::<16>(vld1_u16(p)))
+        }
+    }
+
+    pub fn axpy_bf16(out: &mut [f32], a: f32, x: &[u16]) {
+        let n = out.len();
+        let mut i = 0usize;
+        unsafe {
+            let va = vdupq_n_f32(a);
+            while i + 4 <= n {
+                let vo = vld1q_f32(out.as_ptr().add(i));
+                let vx = widen4(x.as_ptr().add(i));
+                vst1q_f32(out.as_mut_ptr().add(i), vfmaq_f32(vo, va, vx));
+                i += 4;
+            }
+        }
+        super::axpy_bf16_scalar(&mut out[i..], a, &x[i..]);
+    }
+
+    pub fn dot4_fma(dst: &mut [f32], arow: &[f32], pack: &[f32]) {
+        debug_assert_eq!(dst.len(), 4);
+        debug_assert_eq!(pack.len(), arow.len() * 4);
+        unsafe {
+            let mut acc = vdupq_n_f32(0.0);
+            for (p, &av) in arow.iter().enumerate() {
+                let vb = vld1q_f32(pack.as_ptr().add(p * 4));
+                acc = vfmaq_f32(acc, vdupq_n_f32(av), vb);
+            }
+            vst1q_f32(dst.as_mut_ptr(), acc);
+        }
+    }
+
+    pub fn dot4_bf16(dst: &mut [f32], arow: &[f32], pack: &[u16]) {
+        debug_assert_eq!(dst.len(), 4);
+        debug_assert_eq!(pack.len(), arow.len() * 4);
+        unsafe {
+            let mut acc = vdupq_n_f32(0.0);
+            for (p, &av) in arow.iter().enumerate() {
+                let vb = widen4(pack.as_ptr().add(p * 4));
+                acc = vfmaq_f32(acc, vdupq_n_f32(av), vb);
+            }
+            vst1q_f32(dst.as_mut_ptr(), acc);
+        }
+    }
+
+    /// Vector `exp_fast` — the same clamped op sequence as the scalar
+    /// form (`vrndnq` is round-ties-even, `vfmsq_f32(a,b,c) = a − b·c`
+    /// is the fused negate-multiply-add), so lanes match it bitwise.
+    #[inline]
+    fn exp4(x: float32x4_t) -> float32x4_t {
+        unsafe {
+            let x = vminq_f32(vmaxq_f32(x, vdupq_n_f32(super::EXP_LO)),
+                              vdupq_n_f32(super::EXP_HI));
+            let n = vrndnq_f32(
+                vmulq_f32(x, vdupq_n_f32(super::EXP_LOG2EF)));
+            let r = vfmsq_f32(x, n, vdupq_n_f32(super::EXP_C1));
+            let r = vfmsq_f32(r, n, vdupq_n_f32(super::EXP_C2));
+            let mut y = vdupq_n_f32(super::EXP_P[0]);
+            y = vfmaq_f32(vdupq_n_f32(super::EXP_P[1]), y, r);
+            y = vfmaq_f32(vdupq_n_f32(super::EXP_P[2]), y, r);
+            y = vfmaq_f32(vdupq_n_f32(super::EXP_P[3]), y, r);
+            y = vfmaq_f32(vdupq_n_f32(super::EXP_P[4]), y, r);
+            y = vfmaq_f32(vdupq_n_f32(super::EXP_P[5]), y, r);
+            y = vfmaq_f32(r, y, vmulq_f32(r, r));
+            y = vaddq_f32(y, vdupq_n_f32(1.0));
+            let ni = vcvtnq_s32_f32(n);
+            let scale = vreinterpretq_f32_s32(vshlq_n_s32::<23>(
+                vaddq_s32(ni, vdupq_n_s32(127))));
+            vmulq_f32(y, scale)
+        }
+    }
+
+    pub fn silu_mul_fast(o: &mut [f32], g: &[f32], u: &[f32]) {
+        let n = o.len();
+        let mut i = 0usize;
+        unsafe {
+            let one = vdupq_n_f32(1.0);
+            while i + 4 <= n {
+                let vg = vld1q_f32(g.as_ptr().add(i));
+                let vu = vld1q_f32(u.as_ptr().add(i));
+                // vnegq is the scalar `-g` exactly (sign-bit flip)
+                let e = exp4(vnegq_f32(vg));
+                let s = vdivq_f32(one, vaddq_f32(one, e));
+                let r = vmulq_f32(vmulq_f32(vg, s), vu);
+                vst1q_f32(o.as_mut_ptr().add(i), r);
+                i += 4;
+            }
+        }
+        super::silu_mul_slice_fast_scalar(&mut o[i..], &g[i..], &u[i..]);
+    }
+
+    pub fn silu_mul_bwd_fast(dg: &mut [f32], du: &mut [f32], d: &[f32],
+                             g: &[f32], u: &[f32]) {
+        let n = dg.len();
+        let mut i = 0usize;
+        unsafe {
+            let one = vdupq_n_f32(1.0);
+            while i + 4 <= n {
+                let vd = vld1q_f32(d.as_ptr().add(i));
+                let vg = vld1q_f32(g.as_ptr().add(i));
+                let vu = vld1q_f32(u.as_ptr().add(i));
+                let e = exp4(vnegq_f32(vg));
+                let s = vdivq_f32(one, vaddq_f32(one, e));
+                let om = vsubq_f32(one, s);
+                let f = vmulq_f32(s, vfmaq_f32(one, vg, om));
+                vst1q_f32(dg.as_mut_ptr().add(i),
+                          vmulq_f32(vmulq_f32(vd, vu), f));
+                vst1q_f32(du.as_mut_ptr().add(i),
+                          vmulq_f32(vd, vmulq_f32(vg, s)));
+                i += 4;
+            }
+        }
+        super::silu_mul_bwd_slice_fast_scalar(&mut dg[i..], &mut du[i..],
+                                              &d[i..], &g[i..], &u[i..]);
+    }
+
+    /// Two q-register accumulators cover the 8 reduction slots (lanes
+    /// 0–3 / 4–7), replaying the scalar form's slot rule exactly.
+    pub fn recon_block_fast(d: &mut [f32], y: &[f32], t: &[f32],
+                            scale: f32) -> f32 {
+        let len = d.len();
+        let len8 = len - len % 8;
+        let mut lanes = [0.0f32; 8];
+        unsafe {
+            let vscale = vdupq_n_f32(scale);
+            let mut acc_lo = vdupq_n_f32(0.0);
+            let mut acc_hi = vdupq_n_f32(0.0);
+            let mut i = 0usize;
+            while i < len8 {
+                let d0 = vsubq_f32(vld1q_f32(y.as_ptr().add(i)),
+                                   vld1q_f32(t.as_ptr().add(i)));
+                acc_lo = vfmaq_f32(acc_lo, d0, d0);
+                vst1q_f32(d.as_mut_ptr().add(i), vmulq_f32(d0, vscale));
+                let d1 = vsubq_f32(vld1q_f32(y.as_ptr().add(i + 4)),
+                                   vld1q_f32(t.as_ptr().add(i + 4)));
+                acc_hi = vfmaq_f32(acc_hi, d1, d1);
+                vst1q_f32(d.as_mut_ptr().add(i + 4),
+                          vmulq_f32(d1, vscale));
+                i += 8;
+            }
+            vst1q_f32(lanes.as_mut_ptr(), acc_lo);
+            vst1q_f32(lanes.as_mut_ptr().add(4), acc_hi);
+        }
+        for j in len8..len {
+            let diff = y[j] - t[j];
+            lanes[j - len8] = diff.mul_add(diff, lanes[j - len8]);
+            d[j] = diff * scale;
+        }
+        super::combine_lane_tree(&lanes)
     }
 }
 
@@ -1042,6 +1976,10 @@ fn dims2(t: &Tensor) -> Result<(usize, usize)> {
 /// accumulation runs ascending, so results match the textbook triple
 /// loop bit-for-bit at every thread count (and zeros in `A` take the
 /// same multiply path as everything else — no mask-dependent timing).
+/// Under `--math fast --dtype bf16` the B operand is packed to bf16
+/// bits once and multiplied natively ([`bf16_pack_operand`]) — for
+/// weight operands (bf16-exact under the storage contract) this is
+/// bit-identical to the f32 fast path.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     let (m, k) = dims2(a)?;
     let (k2, n) = dims2(b)?;
@@ -1049,6 +1987,7 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
         bail!("matmul dims {m}x{k} @ {k2}x{n}");
     }
     let mut out = Tensor::zeros(&[m, n]);
+    let bq = bf16_pack_operand(&b.data);
     let (rows_per, n_tasks) = partition(m, 2 * k * n);
     let out_view = SharedMut::new(&mut out.data);
     par_tasks(n_tasks, |ti| {
@@ -1063,8 +2002,19 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
             while j0 < n {
                 let j1 = (j0 + COL_BLOCK).min(n);
                 let opanel = &mut orows[obase + j0..obase + j1];
-                for (p, &av) in arow.iter().enumerate() {
-                    axpy(opanel, av, &b.data[p * n + j0..p * n + j1]);
+                match &bq {
+                    Some(bq) => {
+                        for (p, &av) in arow.iter().enumerate() {
+                            axpy_bf16(opanel, av,
+                                      &bq[p * n + j0..p * n + j1]);
+                        }
+                    }
+                    None => {
+                        for (p, &av) in arow.iter().enumerate() {
+                            axpy(opanel, av,
+                                 &b.data[p * n + j0..p * n + j1]);
+                        }
+                    }
                 }
                 j0 = j1;
             }
@@ -1133,43 +2083,79 @@ pub fn matmul_a_bt(a: &Tensor, b: &Tensor) -> Result<Tensor> {
 /// One task of [`matmul_a_bt`]: rows `i0..i1` of the output.
 fn a_bt_rows(a: &Tensor, b: &Tensor, orows: &mut [f32], i0: usize,
              i1: usize, k: usize, n: usize) {
-    // resolve the lane width once so the pack layout and the consuming
-    // core can't disagree if another thread flips the path mid-kernel
-    // (dot_panel's lane guards fall back to the lanes-parameterized
-    // scalar core on any mismatch, which is bitwise-equal anyway)
+    // resolve the lane width (and tier) once so the pack layout and the
+    // consuming core can't disagree if another thread flips the path
+    // mid-kernel (dot_panel's lane guards fall back to the
+    // lanes-parameterized scalar core on any mismatch, which is
+    // bitwise-equal anyway)
     let lanes = simd_path().lanes();
+    let fast = math_tier() == MathTier::Fast;
+    let bf16 = fast && super::dtype::active_dtype() == super::Dtype::Bf16;
     let mut jb = 0usize;
     if lanes > 0 && n >= lanes && k > 0 {
         // pack `lanes` B rows at a time: pack[p·lanes + l] = B[jb+l][p],
-        // amortized over every A row this task owns. Pure data movement —
-        // no float ops, so determinism is untouched.
-        let mut pack = vec![0.0f32; lanes * k];
-        while jb + lanes <= n {
-            for l in 0..lanes {
-                let brow = &b.data[(jb + l) * k..(jb + l + 1) * k];
-                for (p, &v) in brow.iter().enumerate() {
-                    pack[p * lanes + l] = v;
+        // amortized over every A row this task owns. Pure data movement
+        // on the f32 path; the bf16-fast pack rounds each element once
+        // (RNE), exactly the rounding the storage contract already
+        // applied to weight operands.
+        if bf16 {
+            let mut pack = vec![0u16; lanes * k];
+            while jb + lanes <= n {
+                for l in 0..lanes {
+                    let brow = &b.data[(jb + l) * k..(jb + l + 1) * k];
+                    for (p, &v) in brow.iter().enumerate() {
+                        pack[p * lanes + l] = super::dtype::f32_to_bf16(v);
+                    }
                 }
+                for i in i0..i1 {
+                    let arow = &a.data[i * k..(i + 1) * k];
+                    let dst0 = (i - i0) * n + jb;
+                    dot_panel_bf16(&mut orows[dst0..dst0 + lanes], arow,
+                                   &pack, lanes);
+                }
+                jb += lanes;
             }
-            for i in i0..i1 {
-                let arow = &a.data[i * k..(i + 1) * k];
-                let dst0 = (i - i0) * n + jb;
-                dot_panel(&mut orows[dst0..dst0 + lanes], arow, &pack,
-                          lanes);
+        } else {
+            let mut pack = vec![0.0f32; lanes * k];
+            while jb + lanes <= n {
+                for l in 0..lanes {
+                    let brow = &b.data[(jb + l) * k..(jb + l + 1) * k];
+                    for (p, &v) in brow.iter().enumerate() {
+                        pack[p * lanes + l] = v;
+                    }
+                }
+                for i in i0..i1 {
+                    let arow = &a.data[i * k..(i + 1) * k];
+                    let dst0 = (i - i0) * n + jb;
+                    dot_panel(&mut orows[dst0..dst0 + lanes], arow, &pack,
+                              lanes);
+                }
+                jb += lanes;
             }
-            jb += lanes;
         }
     }
     // remaining columns (all of them on the scalar path): plain dots in
-    // the same ascending-k per-element order
+    // the same ascending-k per-element order; the fast tier fuses with
+    // mul_add (matching the vector cores' fma), bf16-fast round-trips
+    // the B element first (matching the packed cores' widen)
     for i in i0..i1 {
         let arow = &a.data[i * k..(i + 1) * k];
         let obase = (i - i0) * n;
         for j in jb..n {
             let brow = &b.data[j * k..(j + 1) * k];
             let mut acc = 0.0f32;
-            for (&av, &bv) in arow.iter().zip(brow) {
-                acc += av * bv;
+            if bf16 {
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    acc = av.mul_add(super::dtype::quantize_bf16(bv), acc);
+                }
+            } else if fast {
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    acc = av.mul_add(bv, acc);
+                }
+            } else {
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
+                }
             }
             orows[obase + j] = acc;
         }
@@ -1283,11 +2269,15 @@ fn sigmoid(z: f32) -> f32 {
     1.0 / (1.0 + (-z).exp())
 }
 
-/// SwiGLU activation `silu(gate) ⊙ up`, fused into one pass.
+/// SwiGLU activation `silu(gate) ⊙ up`, fused into one pass. On the
+/// fast tier the sigmoid goes through the vectorized `exp_fast`
+/// polynomial (documented tolerance in the module docs); the exact
+/// tier keeps the scalar `libm` exp.
 pub fn silu_mul(gate: &Tensor, up: &Tensor) -> Tensor {
     assert_eq!(gate.shape, up.shape, "silu_mul shape mismatch");
     let n = gate.data.len();
     let mut out = Tensor::zeros(&gate.shape);
+    let fast = math_tier() == MathTier::Fast;
     let (per, n_tasks) = elem_tasks(n, 8);
     let out_view = SharedMut::new(&mut out.data);
     par_tasks(n_tasks, |ti| {
@@ -1295,10 +2285,14 @@ pub fn silu_mul(gate: &Tensor, up: &Tensor) -> Tensor {
         let e1 = (e0 + per).min(n);
         // Safety: disjoint element ranges per task.
         let o = unsafe { out_view.range(e0, e1 - e0) };
-        for ((o, &g), &u) in
-            o.iter_mut().zip(&gate.data[e0..e1]).zip(&up.data[e0..e1])
-        {
-            *o = g * sigmoid(g) * u;
+        if fast {
+            silu_mul_slice_fast(o, &gate.data[e0..e1], &up.data[e0..e1]);
+        } else {
+            for ((o, &g), &u) in
+                o.iter_mut().zip(&gate.data[e0..e1]).zip(&up.data[e0..e1])
+            {
+                *o = g * sigmoid(g) * u;
+            }
         }
     });
     out
@@ -1313,6 +2307,7 @@ pub fn silu_mul_bwd(dh: &Tensor, gate: &Tensor, up: &Tensor)
     let n = dh.data.len();
     let mut dgate = Tensor::zeros(&dh.shape);
     let mut dup = Tensor::zeros(&dh.shape);
+    let fast = math_tier() == MathTier::Fast;
     let (per, n_tasks) = elem_tasks(n, 12);
     let dg_view = SharedMut::new(&mut dgate.data);
     let du_view = SharedMut::new(&mut dup.data);
@@ -1322,14 +2317,19 @@ pub fn silu_mul_bwd(dh: &Tensor, gate: &Tensor, up: &Tensor)
         // Safety: disjoint element ranges per task.
         let dg = unsafe { dg_view.range(e0, e1 - e0) };
         let du = unsafe { du_view.range(e0, e1 - e0) };
-        for i in 0..e1 - e0 {
-            let g = gate.data[e0 + i];
-            let u = up.data[e0 + i];
-            let d = dh.data[e0 + i];
-            let s = sigmoid(g);
-            let silu = g * s;
-            dg[i] = d * u * (s * (1.0 + g * (1.0 - s)));
-            du[i] = d * silu;
+        if fast {
+            silu_mul_bwd_slice_fast(dg, du, &dh.data[e0..e1],
+                                    &gate.data[e0..e1], &up.data[e0..e1]);
+        } else {
+            for i in 0..e1 - e0 {
+                let g = gate.data[e0 + i];
+                let u = up.data[e0 + i];
+                let d = dh.data[e0 + i];
+                let s = sigmoid(g);
+                let silu = g * s;
+                dg[i] = d * u * (s * (1.0 + g * (1.0 - s)));
+                du[i] = d * silu;
+            }
         }
     });
     (dgate, dup)
@@ -1378,10 +2378,16 @@ pub fn adam_step(p: &Tensor, g: &Tensor, m: &Tensor, v: &Tensor, t: f32,
 
 /// Fused reconstruction loss + gradient: for `y, target` of `n`
 /// elements, returns `(‖y−t‖²/n, 2·(y−t)/n)` in one pass over the data.
-/// The sum accumulates f64 per fixed [`REDUCE_BLOCK`] and combines the
-/// partials in block order (determinism rule 2).
+/// On the exact tier the sum accumulates f64 per fixed [`REDUCE_BLOCK`]
+/// and combines the partials in block order (determinism rule 2); the
+/// fast tier swaps the f64 scalar accumulator for SIMD f32 lane-tree
+/// block sums (`recon_block_fast`) — the gradient is identical on both
+/// tiers.
 pub fn recon_loss_grad(y: &Tensor, target: &Tensor) -> (f32, Tensor) {
     assert_eq!(y.shape, target.shape, "recon_loss_grad shape mismatch");
+    if math_tier() == MathTier::Fast {
+        return recon_loss_grad_fast(y, target);
+    }
     let n = y.data.len();
     let n_blocks = n.div_ceil(REDUCE_BLOCK).max(1);
     let mut dy = Tensor::zeros(&y.shape);
@@ -1416,6 +2422,41 @@ pub fn recon_loss_grad(y: &Tensor, target: &Tensor) -> (f32, Tensor) {
     }
     let sum: f64 = partials.iter().sum();
     ((sum / n as f64) as f32, dy)
+}
+
+/// Fast-tier [`recon_loss_grad`]: the same block partition, but each
+/// block's `Σ diff²` runs through the fixed 8-slot f32 lane structure
+/// of `recon_block_fast` (SIMD fma on AVX2/AVX-512/NEON, replicated
+/// exactly by the scalar core) and the f32 partials combine in block
+/// order. The gradient write `diff·scale` is plain mul, bit-identical
+/// to the exact tier's.
+fn recon_loss_grad_fast(y: &Tensor, target: &Tensor) -> (f32, Tensor) {
+    let n = y.data.len();
+    let n_blocks = n.div_ceil(REDUCE_BLOCK).max(1);
+    let mut dy = Tensor::zeros(&y.shape);
+    let mut partials = vec![0.0f32; n_blocks];
+    let scale = 2.0 / n as f32;
+    {
+        let (blocks_per, n_tasks) = partition(n_blocks, 4 * REDUCE_BLOCK);
+        let dy_view = SharedMut::new(&mut dy.data);
+        let part_view = SharedMut::new(&mut partials);
+        par_tasks(n_tasks, |ti| {
+            let b0 = ti * blocks_per;
+            let b1 = (b0 + blocks_per).min(n_blocks);
+            for bi in b0..b1 {
+                let e0 = bi * REDUCE_BLOCK;
+                let e1 = (e0 + REDUCE_BLOCK).min(n);
+                // Safety: disjoint block ranges per task.
+                let d = unsafe { dy_view.range(e0, e1 - e0) };
+                let p = recon_block_fast(d, &y.data[e0..e1],
+                                         &target.data[e0..e1], scale);
+                // Safety: one slot per block.
+                unsafe { part_view.range(bi, 1) }[0] = p;
+            }
+        });
+    }
+    let sum: f32 = partials.iter().sum();
+    (sum / n as f32, dy)
 }
 
 /// Column sum-of-squares and column sum over the rows of `a: [t, d]`

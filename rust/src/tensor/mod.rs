@@ -8,10 +8,15 @@
 //! masked weights (CSR/CSC, N:M offset panels, shrunken structured
 //! GEMMs) behind the same contract — every sparse product is bit-equal
 //! to the dense masked path. [`dtype`] is the storage-precision axis
-//! (f32 or bf16-in-f32; compute always accumulates f32). [`Tensor`] is
-//! the thin data handle plus facade; [`linalg`] the SparseGPT OBS
-//! solves. Both backends' host numerics — the reference interpreter and
-//! the coordinator-side pruning math — run on these kernels.
+//! (f32 or bf16-in-f32; compute accumulates f32). The orthogonal
+//! numeric-tier axis ([`kernels::MathTier`], `--math exact|fast`)
+//! selects between the exact reference numerics and the opt-in
+//! fast-math cores (FMA, vectorized exp, bf16-native operands) — both
+//! tiers deterministic, only the fast one changing results vs the
+//! historical contract. [`Tensor`] is the thin data handle plus facade;
+//! [`linalg`] the SparseGPT OBS solves. Both backends' host numerics —
+//! the reference interpreter and the coordinator-side pruning math —
+//! run on these kernels.
 pub mod dtype;
 pub mod kernels;
 pub mod linalg;
@@ -19,4 +24,5 @@ pub mod sparse;
 pub mod tensor;
 
 pub use dtype::Dtype;
+pub use kernels::MathTier;
 pub use tensor::Tensor;

@@ -5,6 +5,7 @@ use ebft::coordinator::{pruner, pruners, recoveries, recovery,
                         PipelineBuilder, RunRecord};
 use ebft::ebft::finetune::{BlockReport, EbftReport};
 use ebft::pruning::Pattern;
+use ebft::tensor::MathTier;
 use ebft::util::Json;
 
 #[test]
@@ -77,6 +78,10 @@ fn golden_record() -> RunRecord {
         eval_secs: 0.25,
         // 0 is elided from the JSON, so the golden bytes below still hold
         peak_resident_bytes: 0,
+        // the defaults (exact tier, no recorded path) are elided too —
+        // exact-tier records keep the pre-tier golden bytes
+        math: MathTier::Exact,
+        simd_path: String::new(),
         ebft_report: Some(EbftReport {
             per_block: vec![BlockReport {
                 block: 0,
@@ -126,4 +131,14 @@ fn run_record_json_round_trips() {
     assert!(lj.opt("layer_sparsity").is_some());
     assert_eq!(RunRecord::from_json(&lj).unwrap().to_json().dump(),
                lj.dump());
+    // fast-tier records carry the tier + resolved dispatch path (the
+    // perf-triage context), and round-trip byte-exactly
+    let mut fast = golden_record();
+    fast.math = MathTier::Fast;
+    fast.simd_path = "avx2".into();
+    let fj = fast.to_json();
+    assert_eq!(fj.get("math").unwrap().as_str().unwrap(), "fast");
+    assert_eq!(fj.get("simd_path").unwrap().as_str().unwrap(), "avx2");
+    assert_eq!(RunRecord::from_json(&fj).unwrap().to_json().dump(),
+               fj.dump());
 }

@@ -85,6 +85,7 @@ fn fi_child_sweep() {
         backend: BackendKind::Reference,
         threads: 0,
         dtype: ebft::tensor::dtype::active_dtype(),
+        math: ebft::tensor::kernels::math_tier(),
         max_resident_blocks: 0,
     };
     let out = Scheduler::new(env)

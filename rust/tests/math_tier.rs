@@ -1,0 +1,368 @@
+//! Integration: the numeric-tier axis (`--math` / `EBFT_MATH`).
+//!
+//! Lives in its own binary because [`ebft::tensor::kernels::set_math_tier`]
+//! flips a process-global — running these flips inside the lib unit
+//! tests would race every kernel-layer assertion. The tests here that DO
+//! flip globals are serialized into one `#[test]` fn, like tests/dtype.rs.
+//!
+//! What is pinned here (DESIGN.md §Kernels, numeric-contract table):
+//!
+//! 1. `EBFT_MATH` resolution and `set_math_tier` override semantics.
+//! 2. The fast tier stays within the documented per-kernel relative-
+//!    error bounds of the exact tier, across awkward shapes (including
+//!    lane-tail and multi-reduce-block sizes) and sparse densities.
+//! 3. The fast tier is its own deterministic universe: bit-identical
+//!    across 1/2/8 threads × every SIMD path the host can run (every
+//!    fused op is the correctly rounded IEEE fma; scalar fast tails
+//!    replay the vector ops exactly). The exact tier's matrix is
+//!    re-pinned alongside for symmetry.
+//! 4. Under `--dtype bf16`, the fast tier's native bf16-operand matmul
+//!    cores are bit-identical to the f32 fast path on bf16-exact inputs
+//!    (the pack is lossless there — any drift is a real bug).
+//! 5. The tier joins the run-store fingerprint: fast runs land in
+//!    distinct store cells, exact fingerprints are unchanged from the
+//!    pre-tier format, and `--resume` planning never restores a record
+//!    across tiers.
+//!
+//! CI runs this suite in the tier-1 matrix under both `EBFT_MATH=exact`
+//! and `EBFT_MATH=fast`, so assertions about the resolved default are
+//! written against the environment, not a constant.
+
+use ebft::config::FtConfig;
+use ebft::coordinator::{config_fingerprint, config_fingerprint_math,
+                        plan_sweep, Grid, RunRecord, RunStore};
+use ebft::data::Split;
+use ebft::pruning::Pattern;
+use ebft::runtime::BackendKind;
+use ebft::tensor::dtype::{quantize_bf16, set_dtype};
+use ebft::tensor::kernels::{self, SimdPath};
+use ebft::tensor::sparse::{EffWeight, SparseMode};
+use ebft::tensor::{Dtype, MathTier, Tensor};
+use ebft::util::Pcg64;
+
+fn env_tier() -> MathTier {
+    std::env::var("EBFT_MATH")
+        .ok()
+        .and_then(|s| MathTier::parse(&s))
+        .unwrap_or(MathTier::Exact)
+}
+
+/// Every SIMD path the running host can execute. `set_simd_path` clamps
+/// an unavailable ISA to scalar, so a round-trip through the setter
+/// doubles as the availability probe.
+fn available_paths() -> Vec<SimdPath> {
+    let prev = kernels::set_simd_path(SimdPath::Scalar);
+    let mut out = vec![SimdPath::Scalar];
+    for p in [SimdPath::Neon, SimdPath::Avx2, SimdPath::Avx512] {
+        kernels::set_simd_path(p);
+        if kernels::simd_path() == p {
+            out.push(p);
+        }
+    }
+    kernels::set_simd_path(prev);
+    out
+}
+
+fn assert_bits(got: &[f32], want: &[f32], tag: &str) {
+    assert_eq!(got.len(), want.len(), "{tag}: output lengths differ");
+    for (i, (x, y)) in got.iter().zip(want).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(),
+                   "{tag}: element {i} differs: {x} vs {y}");
+    }
+}
+
+/// `|got−want| ≤ abs + rel·max(|got|,|want|)` elementwise; `(0, 0)`
+/// degrades to the bitwise check.
+fn assert_close(got: &[f32], want: &[f32], rel: f64, abs: f64, tag: &str) {
+    if rel == 0.0 && abs == 0.0 {
+        return assert_bits(got, want, tag);
+    }
+    assert_eq!(got.len(), want.len(), "{tag}: output lengths differ");
+    for (i, (&x, &y)) in got.iter().zip(want).enumerate() {
+        let (xf, yf) = (x as f64, y as f64);
+        let lim = abs + rel * xf.abs().max(yf.abs());
+        assert!((xf - yf).abs() <= lim,
+                "{tag}: element {i} outside the fast-tier tolerance: \
+                 {x} vs {y} (|Δ| {:.3e} > {lim:.3e})", (xf - yf).abs());
+    }
+}
+
+/// One kernel invocation with its documented fast-tier `(rel, abs)`
+/// bound vs the exact tier (the same numbers DESIGN.md tabulates and
+/// the microbench rig enforces).
+struct Case {
+    name: String,
+    rel: f64,
+    abs: f64,
+    run: Box<dyn Fn() -> Vec<f32>>,
+}
+
+/// The tier-sensitive kernel family at one (possibly awkward) shape:
+/// the matmuls re-associate K-term dots through fma, the SwiGLU pair
+/// swaps libm `exp` for the ≤8-ulp polynomial, the recon loss trades
+/// the f64 scalar accumulator for f32 lane trees.
+fn build_cases(m: usize, k: usize, n: usize, seed: u64) -> Vec<Case> {
+    let mut rng = Pcg64::seeded(seed);
+    let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+    let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+    let at = kernels::transpose(&a).unwrap();
+    let bt = kernels::transpose(&b).unwrap();
+    let gate = Tensor::randn(&[m, n], 1.0, &mut rng);
+    let up = Tensor::randn(&[m, n], 1.0, &mut rng);
+    let dh = Tensor::randn(&[m, n], 1.0, &mut rng);
+    let target = Tensor::randn(&[m, n], 1.0, &mut rng);
+
+    let mut cases: Vec<Case> = Vec::new();
+    let mut case = |name: &str, rel: f64, abs: f64,
+                    run: Box<dyn Fn() -> Vec<f32>>| {
+        cases.push(Case { name: name.to_string(), rel, abs, run });
+    };
+    let (a1, b1) = (a.clone(), b.clone());
+    case("matmul", 1e-4, 1e-3,
+         Box::new(move || kernels::matmul(&a1, &b1).unwrap().data));
+    let b2 = b.clone();
+    case("matmul_at_b", 1e-4, 1e-3,
+         Box::new(move || kernels::matmul_at_b(&at, &b2).unwrap().data));
+    let a3 = a.clone();
+    case("matmul_a_bt", 1e-4, 1e-3,
+         Box::new(move || kernels::matmul_a_bt(&a3, &bt).unwrap().data));
+    case("gram", 1e-4, 1e-3,
+         Box::new(move || kernels::gram(&a).unwrap().data));
+    let (g5, u5) = (gate.clone(), up.clone());
+    case("silu_mul", 1e-5, 1e-5,
+         Box::new(move || kernels::silu_mul(&g5, &u5).data));
+    let g6 = gate.clone();
+    case("silu_mul_bwd", 1e-5, 1e-5,
+         Box::new(move || {
+             let (dg, du) = kernels::silu_mul_bwd(&dh, &g6, &up);
+             let mut out = dg.data;
+             out.extend(du.data);
+             out
+         }));
+    case("recon_loss_grad", 1e-3, 1e-5,
+         Box::new(move || {
+             let (loss, dy) = kernels::recon_loss_grad(&gate, &target);
+             let mut out = vec![loss];
+             out.extend(dy.data);
+             out
+         }));
+    cases
+}
+
+/// Sparse matmuls across densities: the compressed-format axpy cores
+/// funnel through the same tier-dispatched `axpy`, and the density
+/// moves which format the dispatcher picks.
+fn sparse_cases(seed: u64) -> Vec<Case> {
+    let (m, k, n) = (7usize, 67usize, 45usize);
+    let mut rng = Pcg64::seeded(seed);
+    let mut out: Vec<Case> = Vec::new();
+    for keep in [0.25f32, 0.5, 0.9] {
+        let w = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let x = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let mut mask = Tensor::zeros(&[k, n]);
+        for v in mask.data.iter_mut() {
+            *v = (rng.next_f32() < keep) as u32 as f32;
+        }
+        let eff = EffWeight::from_masked_mode(&w, &mask, SparseMode::Force);
+        out.push(Case {
+            name: format!("sparse/{}@{keep}", eff.format()),
+            rel: 1e-4,
+            abs: 1e-3,
+            run: Box::new(move || eff.matmul(&x).unwrap().data),
+        });
+    }
+    out
+}
+
+/// The tolerance + bit-determinism matrix for one case set: exact and
+/// fast goldens at (scalar, 1 thread), fast within tolerance of exact,
+/// then both tiers bit-identical to their golden across 1/2/8 threads ×
+/// every available SIMD path.
+fn check_cases(cases: &[Case], paths: &[SimdPath], shape: &str) {
+    kernels::set_simd_path(SimdPath::Scalar);
+    kernels::set_threads(1);
+    kernels::set_math_tier(MathTier::Exact);
+    let exact: Vec<Vec<f32>> = cases.iter().map(|c| (c.run)()).collect();
+    kernels::set_math_tier(MathTier::Fast);
+    let fast: Vec<Vec<f32>> = cases.iter().map(|c| (c.run)()).collect();
+    for (c, (e, f)) in cases.iter().zip(exact.iter().zip(&fast)) {
+        assert_close(f, e, c.rel, c.abs,
+                     &format!("{}/{shape} fast vs exact", c.name));
+    }
+    for (tier, goldens) in [(MathTier::Exact, &exact),
+                            (MathTier::Fast, &fast)] {
+        kernels::set_math_tier(tier);
+        for &p in paths {
+            kernels::set_simd_path(p);
+            for t in [1usize, 2, 8] {
+                kernels::set_threads(t);
+                for (c, g) in cases.iter().zip(goldens) {
+                    assert_bits(&(c.run)(), g,
+                                &format!("{}/{shape} {} {} at {t} threads",
+                                         c.name, tier.as_str(), p.as_str()));
+                }
+            }
+        }
+    }
+    kernels::set_simd_path(SimdPath::Scalar);
+    kernels::set_threads(1);
+    kernels::set_math_tier(MathTier::Exact);
+}
+
+#[test]
+fn math_tier_suite() {
+    // --- resolution order: env default, then set_math_tier wins ---
+    let initial = env_tier();
+    assert_eq!(kernels::math_tier(), initial,
+               "first resolution must follow EBFT_MATH (or Exact)");
+    assert_eq!(MathTier::parse("FAST"), Some(MathTier::Fast));
+    assert_eq!(MathTier::parse(" exact "), Some(MathTier::Exact));
+    assert_eq!(MathTier::parse("fastest"), None);
+    let prev_tier = kernels::set_math_tier(MathTier::Exact);
+    assert_eq!(prev_tier, initial,
+               "set_math_tier must return the prior setting");
+    // the suite drives tiers itself; pin f32 storage so the fast-tier
+    // matmuls don't engage the bf16 pack on non-bf16-exact inputs when
+    // CI's dtype matrix exports EBFT_DTYPE=bf16
+    let prev_dtype = set_dtype(Dtype::F32);
+    let prev_path = kernels::set_simd_path(SimdPath::Scalar);
+    let prev_threads = kernels::set_threads(1);
+    let paths = available_paths();
+
+    // --- tolerance + determinism across awkward shapes: degenerate,
+    // sub-lane, lane-tail (4097 = 256·16 + 1), and a gate large enough
+    // to span multiple 4096-element reduction blocks (33·257 = 8481) ---
+    for &(m, k, n, seed) in &[(1usize, 1usize, 1usize, 11u64),
+                              (3, 5, 7, 12),
+                              (17, 33, 9, 13),
+                              (5, 4097, 3, 14),
+                              (33, 64, 257, 15)] {
+        check_cases(&build_cases(m, k, n, seed), &paths,
+                    &format!("{m}x{k}x{n}"));
+    }
+
+    // --- sparse formats across densities ---
+    check_cases(&sparse_cases(77), &paths, "7x67x45");
+
+    // --- bf16 compute: on bf16-exact inputs the native bf16-operand
+    // cores are a lossless re-encoding of the f32 fast path ---
+    let mut rng = Pcg64::seeded(99);
+    let mut a = Tensor::randn(&[9, 130], 1.0, &mut rng);
+    let mut b = Tensor::randn(&[130, 37], 1.0, &mut rng);
+    for v in a.data.iter_mut().chain(b.data.iter_mut()) {
+        *v = quantize_bf16(*v);
+    }
+    let bt = kernels::transpose(&b).unwrap();
+    kernels::set_math_tier(MathTier::Fast);
+    let f32_mm = kernels::matmul(&a, &b).unwrap().data;
+    let f32_abt = kernels::matmul_a_bt(&a, &bt).unwrap().data;
+    set_dtype(Dtype::Bf16);
+    for &p in &paths {
+        kernels::set_simd_path(p);
+        assert_bits(&kernels::matmul(&a, &b).unwrap().data, &f32_mm,
+                    &format!("bf16-native matmul on {}", p.as_str()));
+        assert_bits(&kernels::matmul_a_bt(&a, &bt).unwrap().data, &f32_abt,
+                    &format!("bf16-native matmul_a_bt on {}", p.as_str()));
+    }
+    set_dtype(Dtype::F32);
+
+    // --- restore every global the suite touched ---
+    set_dtype(prev_dtype);
+    kernels::set_simd_path(prev_path);
+    kernels::set_threads(prev_threads);
+    kernels::set_math_tier(prev_tier);
+}
+
+// ---------------------------------------------------------------------
+// fingerprint membership — pure store/planning tests, no global flips
+// ---------------------------------------------------------------------
+
+fn sample_record(math: MathTier, simd_path: &str) -> RunRecord {
+    RunRecord {
+        pruner: "wanda".into(),
+        pruner_label: "wanda".into(),
+        pattern: Pattern::Unstructured(0.5),
+        pattern_label: Pattern::Unstructured(0.5).label(),
+        recovery: "none".into(),
+        recovery_label: "none".into(),
+        ppl: 12.5,
+        sparsity: 0.5,
+        layer_sparsity: Vec::new(),
+        prune_secs: 1.5,
+        ft_secs: 2.25,
+        eval_secs: 0.25,
+        peak_resident_bytes: 0,
+        math,
+        simd_path: simd_path.into(),
+        ebft_report: None,
+    }
+}
+
+#[test]
+fn fast_tier_fingerprints_are_distinct_and_resume_never_mixes_tiers() {
+    let ft = FtConfig::default();
+    let args = ("small", "small-seed0-steps400", 7u64, &ft, 64usize,
+                "xla", Split::WikiSim, BackendKind::Reference, Dtype::F32);
+    // the exact tier IS the pre-tier fingerprint, byte for byte — old
+    // stores stay resumable without migration
+    let exact_fp = config_fingerprint(args.0, args.1, args.2, args.3,
+                                      args.4, args.5, args.6, args.7,
+                                      args.8);
+    assert_eq!(config_fingerprint_math(args.0, args.1, args.2, args.3,
+                                       args.4, args.5, args.6, args.7,
+                                       args.8, MathTier::Exact),
+               exact_fp);
+    // fast moves the numbers, so it must move the fingerprint
+    let fast_fp = config_fingerprint_math(args.0, args.1, args.2, args.3,
+                                          args.4, args.5, args.6, args.7,
+                                          args.8, MathTier::Fast);
+    assert_ne!(fast_fp, exact_fp);
+    assert_eq!(fast_fp.len(), 16);
+    assert!(fast_fp.chars().all(|c| c.is_ascii_hexdigit()));
+
+    // records of the two tiers land in distinct store cells, and resume
+    // planning keyed by one tier's fingerprint never sees the other's
+    let dir = std::env::temp_dir()
+        .join(format!("ebft-mathtier-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let store = RunStore::open(&dir).unwrap();
+    store.put_record(&exact_fp, &sample_record(MathTier::Exact, ""))
+        .unwrap();
+    store.put_record(&fast_fp, &sample_record(MathTier::Fast, "avx2"))
+        .unwrap();
+    assert!(dir.join(&exact_fp).join("cells").is_dir());
+    assert!(dir.join(&fast_fp).join("cells").is_dir());
+
+    let grid = Grid::new(&["wanda"], &[Pattern::Unstructured(0.5)],
+                         &["none"]).unwrap();
+    let plan_exact = plan_sweep(&grid, |key| {
+        store.get_record(&exact_fp, key).unwrap()
+    }).unwrap();
+    let restored: Vec<&RunRecord> =
+        plan_exact.restored.iter().flatten().collect();
+    assert_eq!(restored.len(), 1);
+    assert_eq!(restored[0].math, MathTier::Exact);
+    assert!(restored[0].simd_path.is_empty());
+
+    let plan_fast = plan_sweep(&grid, |key| {
+        store.get_record(&fast_fp, key).unwrap()
+    }).unwrap();
+    let restored: Vec<&RunRecord> =
+        plan_fast.restored.iter().flatten().collect();
+    assert_eq!(restored.len(), 1);
+    assert_eq!(restored[0].math, MathTier::Fast);
+    assert_eq!(restored[0].simd_path, "avx2");
+
+    // a tier with no completed cells resumes from scratch — the other
+    // tier's records never shadow it
+    let untouched_fp = config_fingerprint_math(
+        args.0, "other-dense", args.2, args.3, args.4, args.5, args.6,
+        args.7, args.8, MathTier::Fast);
+    let plan_empty = plan_sweep(&grid, |key| {
+        store.get_record(&untouched_fp, key).unwrap()
+    }).unwrap();
+    assert!(plan_empty.restored.iter().all(|r| r.is_none()));
+    assert!(plan_empty.groups.iter().all(|g| g.need_prune));
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -22,7 +22,7 @@ use ebft::model::synth::{write_synthetic, SynthConfig};
 use ebft::pretrain;
 use ebft::pruning::Pattern;
 use ebft::runtime::{BackendKind, Session};
-use ebft::tensor::Dtype;
+use ebft::tensor::{Dtype, MathTier};
 use std::path::{Path, PathBuf};
 
 fn tmpdir(tag: &str) -> PathBuf {
@@ -48,6 +48,8 @@ fn sample_record(pruner: &str, recovery: &str, recovery_label: &str,
         ft_secs: 2.25,
         eval_secs: 0.25,
         peak_resident_bytes: 0,
+        math: MathTier::Exact,
+        simd_path: String::new(),
         ebft_report: None,
     }
 }
@@ -279,6 +281,7 @@ fn sweep_env(e: &Env) -> SweepEnv<'_> {
         backend: e.session.backend_kind(),
         threads: 0,
         dtype: ebft::tensor::dtype::active_dtype(),
+        math: ebft::tensor::kernels::math_tier(),
         max_resident_blocks: 0,
     }
 }
